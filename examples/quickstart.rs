@@ -1,0 +1,75 @@
+//! Quickstart: learn a cascade on HEADLINES and answer a few live queries.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! This walks the full public API surface in ~60 lines:
+//! load artifacts → train the cascade under a budget → start the PJRT
+//! engine → answer real queries through the live cascade → compare spend
+//! against always-GPT-4.
+
+use anyhow::{Context, Result};
+
+use frugalgpt::coordinator::cascade::Cascade;
+use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
+use frugalgpt::coordinator::scorer::Scorer;
+use frugalgpt::data::Artifacts;
+use frugalgpt::eval::{best_individual, individual_points};
+use frugalgpt::runtime::Engine;
+
+fn main() -> Result<()> {
+    let art = Artifacts::load("artifacts").context("run `make artifacts` first")?;
+    let ctx = art.context("headlines")?;
+
+    // 1. What would the best single API cost?
+    let ind = individual_points(&ctx.table.test, &ctx.costs, &ctx.test_tokens);
+    let best = best_individual(&ind);
+    println!(
+        "best individual API: {} — acc {:.3}, ${:.2} per 10k queries",
+        best.model,
+        best.accuracy,
+        best.avg_cost * 1e4
+    );
+
+    // 2. Learn a cascade with one fifth of that budget.
+    let budget = best.avg_cost * 1e4 / 5.0;
+    let opt = CascadeOptimizer::new(
+        &ctx.table.train,
+        &ctx.costs,
+        ctx.train_tokens.clone(),
+        OptimizerOptions::default(),
+    )?;
+    let learned = opt.optimize(budget)?;
+    println!(
+        "learned cascade (budget ${budget:.2}/10k): {}",
+        learned.plan.describe(&ctx.costs.model_names)
+    );
+
+    // 3. Serve live queries through PJRT.
+    let engine = Engine::start(&art)?;
+    let scorer = Scorer::new(engine.handle(), ctx.meta.clone());
+    let cascade = Cascade::new(
+        learned.plan.clone(),
+        engine.handle(),
+        scorer,
+        ctx.costs.clone(),
+        ctx.meta.clone(),
+    )?;
+
+    let n = 32.min(ctx.test.len());
+    let mut correct = 0;
+    let mut spent = 0.0;
+    for i in 0..n {
+        let ans = cascade.answer(ctx.test.tokens(i))?;
+        correct += (ans.answer == ctx.test.labels[i]) as usize;
+        spent += ans.cost;
+    }
+    println!(
+        "live: {n} queries → acc {:.3}, avg ${:.2}/10k (GPT-4 would be ${:.2}/10k)",
+        correct as f64 / n as f64,
+        spent / n as f64 * 1e4,
+        ind.iter().find(|p| p.model == "gpt4").map(|p| p.avg_cost * 1e4).unwrap_or(0.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! End-to-end serving driver (the DESIGN.md "End-to-end validation" run).
+//!
+//! Loads the real AOT-compiled models, learns the cascade on the train
+//! split, then serves a concurrent stream of test queries through the full
+//! FrugalGPT service (completion cache → prompt adaptation → live LLM
+//! cascade over PJRT), with Zipf-repeated queries, multiple client
+//! threads, and a final latency/throughput/cost/accuracy report.
+//!
+//! ```sh
+//! cargo run --release --example serve_workload -- \
+//!     --dataset headlines --queries 600 --clients 4 --budget-frac 0.2 \
+//!     [--zipf] [--cache-similar] [--prompt-keep 4]
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
+use frugalgpt::data::Artifacts;
+use frugalgpt::eval::{best_individual, individual_points};
+use frugalgpt::runtime::Engine;
+use frugalgpt::server::service::{FrugalService, ServiceConfig};
+use frugalgpt::strategies::prompt::PromptPolicy;
+use frugalgpt::util::args::Args;
+use frugalgpt::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dataset = args.get_or("dataset", "headlines").to_string();
+    let n_queries = args.get_usize("queries").unwrap_or(600);
+    let n_clients = args.get_usize("clients").unwrap_or(4);
+    let budget_frac = args.get_f64("budget-frac").unwrap_or(0.2);
+    let zipf = args.has("zipf");
+
+    let art = Artifacts::load(args.get_or("artifacts", "artifacts"))
+        .context("run `make artifacts` first")?;
+    let ctx = art.context(&dataset)?;
+
+    // Learn the cascade at budget_frac of the best individual API's cost.
+    let ind = individual_points(&ctx.table.test, &ctx.costs, &ctx.test_tokens);
+    let best = best_individual(&ind);
+    let budget = best.avg_cost * 1e4 * budget_frac;
+    let opt = CascadeOptimizer::new(
+        &ctx.table.train,
+        &ctx.costs,
+        ctx.train_tokens.clone(),
+        OptimizerOptions::default(),
+    )?;
+    let plan = opt.optimize(budget)?.plan;
+    println!(
+        "[{dataset}] serving cascade {} (budget ${budget:.2}/10k = {budget_frac} x {})",
+        plan.describe(&ctx.costs.model_names),
+        best.model
+    );
+
+    // Start the engine and pre-compile everything the cascade needs.
+    let engine = Engine::start(&art)?;
+    let t0 = Instant::now();
+    let n_exe = engine.handle().preload(&dataset)?;
+    println!("preloaded {n_exe} executables in {:.2?}", t0.elapsed());
+
+    let cfg = ServiceConfig {
+        cache_enabled: !args.has("no-cache"),
+        cache_capacity: args.get_usize("cache-capacity").unwrap_or(4096),
+        cache_min_similarity: if args.has("cache-similar") { 0.8 } else { 1.0 },
+        prompt_policy: match args.get_usize("prompt-keep") {
+            Some(k) => PromptPolicy::Fixed(k),
+            None => PromptPolicy::Full,
+        },
+        budget_cap_usd: args.get_f64("budget-cap"),
+    };
+    let svc = Arc::new(FrugalService::new(
+        plan,
+        engine.handle(),
+        ctx.costs.clone(),
+        ctx.meta.clone(),
+        cfg,
+    )?);
+
+    // Build the workload: uniform over the test split, or Zipf-repeated
+    // (a search-engine-like stream where the completion cache pays off).
+    let test = Arc::new(ctx.test);
+    let mut rng = Rng::new(42);
+    let work: Vec<usize> = (0..n_queries)
+        .map(|_| {
+            if zipf {
+                rng.zipf(test.len().min(256), 1.1)
+            } else {
+                rng.usize_below(test.len())
+            }
+        })
+        .collect();
+    let work = Arc::new(work);
+
+    // Serve from n_clients threads.
+    let next = Arc::new(AtomicUsize::new(0));
+    let correct = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..n_clients {
+        let svc = svc.clone();
+        let test = test.clone();
+        let work = work.clone();
+        let next = next.clone();
+        let correct = correct.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            loop {
+                let w = next.fetch_add(1, Ordering::Relaxed);
+                if w >= work.len() {
+                    return Ok(());
+                }
+                let i = work[w];
+                let ans = svc.answer(test.tokens(i))?;
+                if ans.answer == test.labels[i] {
+                    correct.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked")?;
+    }
+    let wall = t0.elapsed();
+
+    // Report.
+    let m = svc.metrics.snapshot();
+    let acc = correct.load(Ordering::Relaxed) as f64 / n_queries as f64;
+    println!("\n=== serve_workload report ===");
+    println!(
+        "{} queries, {} clients, {:.2?} wall → {:.1} q/s",
+        n_queries,
+        n_clients,
+        wall,
+        n_queries as f64 / wall.as_secs_f64()
+    );
+    println!("accuracy: {acc:.4} (best individual {} = {:.4})", best.model, best.accuracy);
+    println!(
+        "cost: ${:.6} total, ${:.2}/10k (always-{}: ${:.2}/10k) — {:.1}% saved",
+        svc.budget.spent_usd(),
+        svc.budget.avg_cost_usd() * 1e4,
+        best.model,
+        best.avg_cost * 1e4,
+        (1.0 - svc.budget.avg_cost_usd() / best.avg_cost) * 100.0
+    );
+    println!(
+        "cache: {} hits / {} lookups; cascade stops per stage: {:?}",
+        m.cache_hits, m.queries, m.stopped_at
+    );
+    println!(
+        "latency (compute): mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms",
+        m.mean_latency_us / 1000.0,
+        m.p50_us as f64 / 1000.0,
+        m.p95_us as f64 / 1000.0,
+        m.p99_us as f64 / 1000.0,
+        m.max_us as f64 / 1000.0,
+    );
+    let stats = engine.handle().stats()?;
+    println!(
+        "engine: {} PJRT executions over {} executables",
+        stats.total_executions(),
+        stats.compiled_executables
+    );
+    Ok(())
+}

@@ -1,0 +1,280 @@
+"""AOT build orchestrator: data → training → HLO text artifacts.
+
+This is the ONLY entry point that runs Python; after `make artifacts`
+completes, the Rust binary is self-contained. For every dataset it:
+
+1. generates the synthetic dataset and writes ``artifacts/data/``,
+2. trains the 12 simulated LLM APIs (capacity/seed/noise per the roster
+   below) and the DistilBERT-analog reliability scorer,
+3. computes the full train+test *response table* (every model's prediction
+   and scorer score for every item) → ``artifacts/responses/`` — the Rust
+   cascade optimizer consumes this offline table; the Rust runtime
+   independently re-verifies a sample of it through PJRT (integration
+   test), proving HLO == python numerics,
+4. lowers each model (weights baked as constants, Pallas kernels enabled)
+   to **HLO text** at batch sizes {1, 8, 32} → ``artifacts/models/``,
+5. writes ``artifacts/manifest.json`` describing everything.
+
+HLO *text*, not ``.serialize()``: jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import train as train_mod
+
+BATCH_SIZES = (1, 8, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ApiSpec:
+    """One simulated commercial LLM API.
+
+    Pricing is the paper's Table 1, in USD: per-10M input tokens, per-10M
+    output tokens, and a fixed per-request fee. ``size_b`` is the paper's
+    reported parameter count (billions) — used only for reporting.
+    Capacity/steps/noise/seed shape the simulated model's skill profile.
+    """
+
+    name: str
+    provider: str
+    size_b: float           # billions of params per paper Table 1 (NA → 0)
+    usd_per_10m_input: float
+    usd_per_10m_output: float
+    usd_per_request: float
+    d_model: int
+    n_layers: int
+    steps: int
+    label_noise: float
+    seed: int
+    # Synthetic latency model for serving experiments (ms): per-request
+    # base + per-1k-token component, loosely scaled with model size.
+    lat_base_ms: float
+    lat_per_1k_tok_ms: float
+
+
+# The 12 APIs of paper Table 1. Capacities are chosen so accuracy roughly
+# tracks the paper's quality tiers while keeping per-model diversity
+# (GPT-J is deliberately well-trained: the paper's HEADLINES cascade leans
+# on it as the cheap first stage).
+APIS: List[ApiSpec] = [
+    ApiSpec("gpt_curie", "openai", 6.7, 2.0, 2.0, 0.0, 24, 2, 500, 0.05, 101, 35, 35),
+    ApiSpec("chatgpt", "openai", 0.0, 2.0, 2.0, 0.0, 48, 2, 1000, 0.02, 102, 40, 40),
+    ApiSpec("gpt3", "openai", 175.0, 20.0, 20.0, 0.0, 48, 3, 700, 0.02, 103, 90, 80),
+    ApiSpec("gpt4", "openai", 0.0, 30.0, 60.0, 0.0, 64, 3, 1000, 0.0, 104, 150, 120),
+    ApiSpec("j1_large", "ai21", 7.5, 0.0, 30.0, 0.0003, 24, 2, 600, 0.04, 105, 40, 40),
+    ApiSpec("j1_grande", "ai21", 17.0, 0.0, 80.0, 0.0008, 32, 2, 600, 0.04, 106, 55, 50),
+    ApiSpec("j1_jumbo", "ai21", 178.0, 0.0, 250.0, 0.005, 48, 3, 700, 0.03, 107, 100, 90),
+    ApiSpec("cohere_xlarge", "cohere", 52.0, 10.0, 10.0, 0.0, 40, 2, 600, 0.03, 108, 70, 60),
+    ApiSpec("forefront_qa", "forefrontai", 16.0, 5.8, 5.8, 0.0, 32, 2, 600, 0.04, 109, 55, 50),
+    ApiSpec("gpt_j", "textsynth", 6.0, 0.2, 5.0, 0.0, 32, 2, 1500, 0.02, 110, 30, 30),
+    ApiSpec("fairseq_gpt", "textsynth", 13.0, 0.6, 15.0, 0.0, 24, 2, 500, 0.05, 111, 45, 40),
+    ApiSpec("gpt_neox", "textsynth", 20.0, 1.4, 35.0, 0.0, 32, 2, 900, 0.03, 112, 50, 45),
+]
+
+SCORER_D, SCORER_LAYERS, SCORER_STEPS = 32, 2, 900
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered → XLA HLO text (the rust-side interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True — the baked model weights ARE the payload;
+    # the default elides them as `{...}` which the rust-side text parser
+    # cannot reconstruct.
+    return comp.as_hlo_text(True)
+
+
+def export_model(params: Dict, mcfg: model_mod.ModelConfig, seq: int,
+                 out_path: str, batch: int) -> int:
+    """Lower apply(params, ·) with baked weights + Pallas kernels to HLO
+    text for a fixed (batch, seq) int32 input. Returns file size."""
+    def fn(tokens):
+        return model_mod.apply(params, tokens, mcfg, use_pallas=True)
+
+    spec = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def mcfg_for(api: ApiSpec, n_out: int, pool_pos: int) -> model_mod.ModelConfig:
+    return model_mod.ModelConfig(
+        vocab=data_mod.VOCAB, seq=data_mod.SEQ, d_model=api.d_model,
+        n_layers=api.n_layers, n_heads=api.d_model // 8, n_out=n_out,
+        pool_pos=pool_pos)
+
+
+def build_dataset(spec: data_mod.DatasetSpec, out_dir: str, log) -> dict:
+    """Run steps 1–4 for one dataset; returns its manifest fragment."""
+    t0 = time.time()
+    ds = data_mod.generate(spec)
+    data_mod.write_dataset(ds, os.path.join(out_dir, "data"))
+    log(f"[{spec.name}] data generated ({spec.size} items) "
+        f"in {time.time() - t0:.1f}s")
+
+    model_dir = os.path.join(out_dir, "models", spec.name)
+    os.makedirs(model_dir, exist_ok=True)
+    tr_idx, te_idx = ds["train_idx"], ds["test_idx"]
+    n_tr = len(tr_idx)
+
+    manifest_models = []
+    responses = {"train": {}, "test": {}}
+    all_scorer_rows, all_scorer_targets = [], []
+    for api in APIS:
+        t0 = time.time()
+        mcfg = mcfg_for(api, spec.n_classes, spec.q_offset)
+        # Smaller models tolerate (and need) a hotter schedule.
+        lr = 8e-3 if api.d_model <= 40 else 6e-3
+        tcfg = train_mod.TrainConfig(
+            steps=api.steps, batch=48, lr=lr, label_noise=api.label_noise,
+            subsample=0.9, seed=api.seed + spec.seed * 1000)
+        params, metrics = train_mod.train_classifier(spec, ds, mcfg, tcfg)
+        preds_tr = train_mod.predict(params, ds["tokens"][tr_idx], mcfg)
+        preds_te = train_mod.predict(params, ds["tokens"][te_idx], mcfg)
+        responses["train"][api.name] = preds_tr
+        responses["test"][api.name] = preds_te
+        # Scorer training rows: (query, this model's answer) → correct?
+        all_scorer_rows.append(data_mod.scorer_input(
+            ds["tokens"][tr_idx], spec, preds_tr))
+        all_scorer_targets.append(
+            (preds_tr == ds["labels"][tr_idx]).astype(np.int32))
+
+        paths = {}
+        for b in BATCH_SIZES:
+            p = os.path.join(model_dir, f"{api.name}.b{b}.hlo.txt")
+            export_model(params, mcfg, data_mod.SEQ, p, b)
+            paths[str(b)] = os.path.relpath(p, out_dir)
+        manifest_models.append({
+            "name": api.name, "provider": api.provider, "size_b": api.size_b,
+            "pricing": {
+                "usd_per_10m_input": api.usd_per_10m_input,
+                "usd_per_10m_output": api.usd_per_10m_output,
+                "usd_per_request": api.usd_per_request,
+            },
+            "latency_ms": {"base": api.lat_base_ms,
+                           "per_1k_tokens": api.lat_per_1k_tok_ms},
+            "d_model": api.d_model, "n_layers": api.n_layers,
+            "train_acc": metrics["train_acc"], "test_acc": metrics["test_acc"],
+            "artifacts": paths,
+        })
+        log(f"[{spec.name}] {api.name:>14} trained {api.steps} steps "
+            f"({time.time() - t0:.1f}s) train_acc={metrics['train_acc']:.3f} "
+            f"test_acc={metrics['test_acc']:.3f}")
+
+    # ---- scorer ----
+    t0 = time.time()
+    scorer_tokens = np.concatenate(all_scorer_rows)
+    scorer_targets = np.concatenate(all_scorer_targets)
+    # Subsample for training speed; evaluation uses everything.
+    rng = np.random.default_rng(spec.seed)
+    sub = rng.permutation(len(scorer_tokens))[: min(60000, len(scorer_tokens))]
+    scfg = model_mod.ModelConfig(
+        vocab=data_mod.VOCAB, seq=spec.scorer_seq, d_model=SCORER_D,
+        n_layers=SCORER_LAYERS, n_heads=SCORER_D // 8, n_out=1)
+    stcfg = train_mod.TrainConfig(steps=SCORER_STEPS, batch=64, lr=6e-3,
+                                  seed=spec.seed + 7)
+    sparams, smetrics = train_mod.train_scorer(
+        spec, scorer_tokens[sub], scorer_targets[sub], scfg, stcfg)
+    log(f"[{spec.name}] scorer trained ({time.time() - t0:.1f}s) "
+        f"sep={smetrics['score_sep']:.3f} acc={smetrics['score_acc']:.3f}")
+
+    scorer_paths = {}
+    for b in BATCH_SIZES:
+        p = os.path.join(model_dir, f"scorer.b{b}.hlo.txt")
+        # Scorer logits are exported raw; rust applies the sigmoid (cheaper
+        # than baking it: keeps the HLO head shared with classifiers).
+        export_model(sparams, scfg, spec.scorer_seq, p, b)
+        scorer_paths[str(b)] = os.path.relpath(p, out_dir)
+
+    # ---- response tables (scored) ----
+    resp_dir = os.path.join(out_dir, "responses")
+    os.makedirs(resp_dir, exist_ok=True)
+    table = {"dataset": spec.name, "models": [a.name for a in APIS],
+             "splits": {}}
+    for split, idx in (("train", tr_idx), ("test", te_idx)):
+        labels = ds["labels"][idx]
+        entry = {"labels": labels.tolist(), "models": {}}
+        for api in APIS:
+            preds = responses[split][api.name]
+            srows = data_mod.scorer_input(ds["tokens"][idx], spec, preds)
+            scores = train_mod.predict_scores(sparams, srows, scfg)
+            entry["models"][api.name] = {
+                "pred": preds.tolist(),
+                "score": np.round(scores, 6).tolist(),
+                "correct": (preds == labels).astype(int).tolist(),
+            }
+        table["splits"][split] = entry
+    with open(os.path.join(resp_dir, f"{spec.name}.json"), "w") as f:
+        json.dump(table, f)
+
+    return {
+        "dataset": spec.name, "domain": spec.domain, "size": spec.size,
+        "n_classes": spec.n_classes, "n_examples": spec.n_examples,
+        "seq": data_mod.SEQ, "qlen": spec.qlen,
+        "block_len": spec.block_len, "q_offset": spec.q_offset,
+        "scorer_seq": spec.scorer_seq,
+        "answer_lens": [spec.answer_len(c) for c in range(spec.n_classes)],
+        "n_train": int(n_tr), "n_test": int(len(te_idx)),
+        "models": manifest_models,
+        "scorer": {"d_model": SCORER_D, "n_layers": SCORER_LAYERS,
+                   "artifacts": scorer_paths,
+                   "score_sep": smetrics["score_sep"],
+                   "score_acc": smetrics["score_acc"]},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--datasets", nargs="*", default=list(data_mod.SPECS),
+                    help="subset of datasets to build (default: all)")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+
+    def log(msg: str) -> None:
+        print(msg, flush=True)
+
+    t0 = time.time()
+    manifest = {"version": 1, "seq": data_mod.SEQ, "vocab": data_mod.VOCAB,
+                "batch_sizes": list(BATCH_SIZES), "datasets": []}
+    for name in args.datasets:
+        # Per-dataset fragments make the (long) build resumable: a crash in
+        # dataset N does not retrain datasets 1..N-1.
+        frag_path = os.path.join(out_dir, f"manifest.{name}.json")
+        if os.path.exists(frag_path) and not getattr(args, "force", False):
+            with open(frag_path) as f:
+                frag = json.load(f)
+            log(f"[{name}] reusing existing fragment {frag_path}")
+        else:
+            frag = build_dataset(data_mod.SPECS[name], out_dir, log)
+            with open(frag_path, "w") as f:
+                json.dump(frag, f)
+        manifest["datasets"].append(frag)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"artifacts complete in {time.time() - t0:.1f}s → {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

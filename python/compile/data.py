@@ -1,0 +1,294 @@
+"""Synthetic analogs of the FrugalGPT evaluation datasets.
+
+The paper evaluates on HEADLINES (finance, 4-way), OVERRULING (law, binary)
+and COQA (reading comprehension, adapted to direct QA). None are bundled
+here, so we generate *structural* analogs with the same sizes, class counts
+and few-shot prompt lengths (paper Table 2), built so that query difficulty
+is graded — which is the property the LLM cascade exploits.
+
+Every item is an *episode*: ``k`` in-context examples followed by a query,
+laid out at fixed token positions so the Rust side can slice segments
+without a tokenizer. Examples are compressed 3-token digests (keyword →
+label), which keeps the model sequence length at 64 so that ~40 build-time
+training runs stay fast on CPU:
+
+    [ example block ] * k  [CLS] query-body [QSEP] [PAD...]
+    block = [SEP_EX] [keyword] [label]
+
+Labels are produced by one of three rules (difficulty tiers):
+
+* tier 0 — *keyword*: a class-keyword token appears somewhere in the body.
+  A fraction of tier-0 items are **episodic**: the keyword→class mapping is
+  permuted per-item and only recoverable by reading the in-context examples
+  (real in-context learning; items carry an EPI marker token). Models that
+  never learn induction can't answer these, and *nobody* can answer them
+  when prompt adaptation drops the examples — making prompt selection a
+  genuine accuracy/cost trade-off.
+* tier 1 — *pair*: two feature tokens A_i, B_j with ``(i + j) mod C = y``;
+  requires composition.
+* tier 2 — *long-range*: a direction token early in the body, optionally
+  flipped by a NEG token near the end; requires long-range attention.
+
+Capacity-limited models learn the tiers in order, which yields the
+heterogeneous, partially-complementary error patterns of the real LLM
+marketplace (paper Fig. 4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List
+
+import numpy as np
+
+VOCAB = 160
+
+# Token map (fixed, shared across datasets; mirrored in rust/src/data).
+PAD = 0
+SEP_EX = 1
+LABEL_MARK = 2
+NEG = 3
+CLS = 4
+QSEP = 5
+LABEL_BASE = 6      # label tokens: LABEL_BASE + class, class < 12
+EPI_MARK = 19       # present in episodic queries
+KW_BASE = 20        # keyword tokens: KW_BASE + base_class * NK + variant
+NK = 4              # keyword variants per class
+A_BASE = 68         # pair-feature A tokens (NPAIR)
+B_BASE = 84         # pair-feature B tokens (NPAIR)
+NPAIR = 16          # >= max n_classes so every (i, label) pair is realizable
+DIR_BASE = 100      # long-range direction tokens (12)
+NOISE_BASE = 114    # everything >= NOISE_BASE is filler
+
+SEQ = 64            # model input length, all datasets (multiple of 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    """Static description of one synthetic dataset."""
+
+    name: str
+    domain: str
+    n_classes: int
+    size: int               # total items (paper Table 2)
+    n_examples: int         # few-shot examples in the prompt (paper Table 2)
+    qlen: int               # query body length in tokens
+    tier_probs: tuple       # P(tier 0), P(tier 1), P(tier 2)
+    episodic_frac: float    # fraction of tier-0 items that are episodic
+    train_frac: float = 0.8
+    seed: int = 0
+
+    @property
+    def block_len(self) -> int:
+        return 3  # [SEP_EX] [keyword] [label] digest
+
+    @property
+    def q_offset(self) -> int:
+        return self.n_examples * self.block_len
+
+    @property
+    def query_len(self) -> int:
+        return self.qlen + 2  # CLS + body + QSEP
+
+    @property
+    def used_len(self) -> int:
+        return self.q_offset + self.query_len
+
+    @property
+    def scorer_seq(self) -> int:
+        # [CLS] body [QSEP] [answer] padded to a multiple of 32.
+        n = self.qlen + 3
+        return ((n + 31) // 32) * 32
+
+    def answer_len(self, cls: int) -> int:
+        """Deterministic per-class completion length in tokens (for output
+        cost metering; COQA-style answers are longer)."""
+        if self.name == "coqa":
+            return 4 + (cls % 7)
+        return 1 + (cls % 2)
+
+
+SPECS: Dict[str, DatasetSpec] = {
+    "headlines": DatasetSpec(
+        name="headlines", domain="Finance", n_classes=4, size=10000,
+        n_examples=8, qlen=16, tier_probs=(0.60, 0.25, 0.15),
+        episodic_frac=0.30, seed=11),
+    "overruling": DatasetSpec(
+        name="overruling", domain="Law", n_classes=2, size=2400,
+        n_examples=5, qlen=20, tier_probs=(0.55, 0.25, 0.20),
+        episodic_frac=0.25, seed=22),
+    "coqa": DatasetSpec(
+        name="coqa", domain="Passage Reading", n_classes=12, size=7982,
+        n_examples=2, qlen=40, tier_probs=(0.55, 0.30, 0.15),
+        episodic_frac=0.08, seed=33),
+}
+
+for _s in SPECS.values():
+    assert _s.used_len <= SEQ, (_s.name, _s.used_len)
+    assert _s.n_classes <= 12
+
+
+def _fill_noise(rng: np.random.Generator, n: int) -> np.ndarray:
+    return rng.integers(NOISE_BASE, VOCAB, size=n, dtype=np.int32)
+
+
+def _make_body(rng: np.random.Generator, spec: DatasetSpec, label: int,
+               tier: int, episodic: bool, perm: np.ndarray) -> np.ndarray:
+    """Generate one query/example body of ``spec.qlen`` tokens."""
+    c = spec.n_classes
+    body = _fill_noise(rng, spec.qlen)
+    if tier == 0:
+        # effective class of keyword slot b under this episode is perm[b]
+        if episodic:
+            base = int(np.where(perm == label)[0][0])
+        else:
+            base = label
+        kw = KW_BASE + base * NK + int(rng.integers(NK))
+        pos = int(rng.integers(spec.qlen))
+        body[pos] = kw
+        if episodic:
+            epos = int(rng.integers(spec.qlen))
+            while epos == pos:
+                epos = int(rng.integers(spec.qlen))
+            body[epos] = EPI_MARK
+    elif tier == 1:
+        i = int(rng.integers(NPAIR))
+        j0 = (label - i) % c
+        choices = np.arange(j0, NPAIR, c)
+        j = int(rng.choice(choices))
+        p1, p2 = rng.choice(spec.qlen, size=2, replace=False)
+        body[p1] = A_BASE + i
+        body[p2] = B_BASE + j
+    else:
+        off = max(1, c // 2)
+        negate = bool(rng.integers(2))
+        yprime = (label - off) % c if negate else label
+        third = max(1, spec.qlen // 3)
+        p1 = int(rng.integers(third))
+        body[p1] = DIR_BASE + yprime
+        if negate:
+            p2 = spec.qlen - 1 - int(rng.integers(third))
+            body[p2] = NEG
+    return body
+
+
+def _make_item(rng: np.random.Generator, spec: DatasetSpec) -> dict:
+    c = spec.n_classes
+    tier = int(rng.choice(3, p=np.asarray(spec.tier_probs)))
+    episodic = bool(tier == 0 and rng.random() < spec.episodic_frac)
+    label = int(rng.integers(c))
+    perm = rng.permutation(c) if episodic else np.arange(c)
+
+    tokens = np.zeros(SEQ, dtype=np.int32)
+    # In-context example blocks: tier-0 items under this episode's perm.
+    # Coverage: make sure the query's keyword class appears among examples.
+    ex_classes = list(rng.permutation(c)[:spec.n_examples])
+    while len(ex_classes) < spec.n_examples:
+        ex_classes.append(int(rng.integers(c)))
+    if episodic:
+        qbase = int(np.where(perm == label)[0][0])
+        if qbase not in [int(x) for x in ex_classes]:
+            ex_classes[int(rng.integers(spec.n_examples))] = qbase
+    for j, base in enumerate(ex_classes):
+        base = int(base)
+        ex_label = int(perm[base])
+        blk = spec.block_len * j
+        tokens[blk] = SEP_EX
+        tokens[blk + 1] = KW_BASE + base * NK + int(rng.integers(NK))
+        tokens[blk + 2] = LABEL_BASE + ex_label
+
+    body = _make_body(rng, spec, label, tier, episodic, perm)
+    qo = spec.q_offset
+    tokens[qo] = CLS
+    tokens[qo + 1: qo + 1 + spec.qlen] = body
+    tokens[qo + 1 + spec.qlen] = QSEP
+    return {
+        "tokens": tokens,
+        "label": label,
+        "tier": tier,
+        "episodic": episodic,
+    }
+
+
+def generate(spec: DatasetSpec) -> dict:
+    """Generate the full dataset as dense numpy arrays + a train/test split."""
+    rng = np.random.default_rng(spec.seed)
+    items = [_make_item(rng, spec) for _ in range(spec.size)]
+    tokens = np.stack([it["tokens"] for it in items])
+    labels = np.asarray([it["label"] for it in items], dtype=np.int32)
+    tiers = np.asarray([it["tier"] for it in items], dtype=np.int32)
+    episodic = np.asarray([it["episodic"] for it in items], dtype=np.int32)
+    n_train = int(spec.size * spec.train_frac)
+    perm = rng.permutation(spec.size)
+    tr, te = perm[:n_train], perm[n_train:]
+    return {
+        "spec": spec,
+        "tokens": tokens, "labels": labels, "tiers": tiers,
+        "episodic": episodic, "train_idx": tr, "test_idx": te,
+    }
+
+
+def truncate_examples(tokens: np.ndarray, spec: DatasetSpec,
+                      keep: np.ndarray) -> np.ndarray:
+    """Zero (PAD) all example blocks with index >= keep[i] for each row.
+
+    Used for variable-k training augmentation and by tests mirroring the
+    Rust prompt-adaptation strategy.
+    """
+    out = tokens.copy()
+    for j in range(spec.n_examples):
+        blk = slice(j * spec.block_len, (j + 1) * spec.block_len)
+        mask = keep <= j
+        out[mask, blk] = PAD
+    return out
+
+
+def scorer_input(tokens: np.ndarray, spec: DatasetSpec,
+                 answers: np.ndarray) -> np.ndarray:
+    """Build scorer inputs ``[CLS] body [QSEP] [answer]`` from item tokens.
+
+    ``tokens``: (N, SEQ) item tokens; ``answers``: (N,) predicted classes.
+    Returns (N, spec.scorer_seq) int32.
+    """
+    n = tokens.shape[0]
+    out = np.zeros((n, spec.scorer_seq), dtype=np.int32)
+    qo = spec.q_offset
+    out[:, : spec.qlen + 2] = tokens[:, qo: qo + spec.qlen + 2]
+    out[:, spec.qlen + 2] = LABEL_BASE + answers
+    return out
+
+
+def dataset_to_json(ds: dict, split: str) -> dict:
+    spec: DatasetSpec = ds["spec"]
+    idx = ds["train_idx"] if split == "train" else ds["test_idx"]
+    return {
+        "dataset": spec.name,
+        "split": split,
+        "seq": SEQ,
+        "n_classes": spec.n_classes,
+        "n_examples": spec.n_examples,
+        "qlen": spec.qlen,
+        "block_len": spec.block_len,
+        "q_offset": spec.q_offset,
+        "scorer_seq": spec.scorer_seq,
+        "answer_lens": [spec.answer_len(c) for c in range(spec.n_classes)],
+        "tokens": ds["tokens"][idx].tolist(),
+        "labels": ds["labels"][idx].tolist(),
+        "tiers": ds["tiers"][idx].tolist(),
+        "episodic": ds["episodic"][idx].tolist(),
+    }
+
+
+def write_dataset(ds: dict, out_dir: str) -> List[str]:
+    spec: DatasetSpec = ds["spec"]
+    d = os.path.join(out_dir, spec.name)
+    os.makedirs(d, exist_ok=True)
+    paths = []
+    for split in ("train", "test"):
+        p = os.path.join(d, f"{split}.json")
+        with open(p, "w") as f:
+            json.dump(dataset_to_json(ds, split), f)
+        paths.append(p)
+    return paths

@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: fused flash-style multi-head attention.
+
+TPU-oriented design (see DESIGN.md §Hardware-Adaptation):
+
+* the grid iterates over ``(batch*heads, q-blocks)``; each program instance
+  holds one ``(BLOCK_Q, D)`` query tile in VMEM,
+* keys/values are streamed ``BLOCK_K`` rows at a time with an online
+  (running max / running sum) softmax, so the working set per instance is
+  ``O(BLOCK_Q * BLOCK_K + BLOCK_Q * D)`` — the TPU analog of the
+  shared-memory tiling a CUDA flash kernel would do with threadblocks,
+* the two matmuls (``q·kᵀ`` and ``p·v``) are expressed as ``jnp.dot`` with
+  ``preferred_element_type=float32`` so a real-TPU lowering would hit the
+  MXU; under ``interpret=True`` they lower to plain HLO dots the CPU PJRT
+  client executes natively.
+
+``interpret=True`` is REQUIRED here: a real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot run. The interpret path lowers
+the kernel into ordinary HLO, which is what ``aot.py`` bakes into
+``artifacts/*.hlo.txt`` for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. BLOCK_Q rows of queries are resident per program
+# instance; keys/values stream through in BLOCK_K-row chunks. 32 divides all
+# model sequence lengths used in this repo (128, 160) and keeps the VMEM
+# footprint estimate well under 1 MiB (see DESIGN.md §Perf).
+BLOCK_Q = 32
+BLOCK_K = 32
+
+_NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int):
+    """One grid step: full online-softmax attention for one query tile."""
+    q = q_ref[0].astype(jnp.float32)  # (BLOCK_Q, D)
+    seq_k = k_ref.shape[1]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+
+    block_q = q.shape[0]
+    # Online softmax carries: running max m, running sum l, accumulator acc.
+    m0 = jnp.full((block_q, 1), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    def body(i, carry):
+        m, l, acc = carry
+        start = i * block_k
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[0], start, block_k, axis=0)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[0], start, block_k, axis=0)
+        s = jnp.dot(q, k_blk.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32) * scale
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p, v_blk.astype(jnp.float32),
+                                        preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    n_blocks = seq_k // block_k
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              block_q: int = BLOCK_Q, block_k: int = BLOCK_K) -> jnp.ndarray:
+    """Fused flash-style attention via Pallas (interpret mode).
+
+    Args:
+      q, k, v: ``(BH, S, D)``. ``S`` must be divisible by both ``block_q``
+        and ``block_k`` (the model code pads sequences to multiples of 32).
+
+    Returns:
+      ``(BH, S, D)`` — numerically equal to :func:`ref.attention_ref` to
+      float32 tolerance.
+    """
+    bh, seq, d = q.shape
+    if seq % block_q or seq % block_k:
+        raise ValueError(
+            f"seq={seq} must be divisible by block_q={block_q} and block_k={block_k}")
+    grid = (bh, seq // block_q)
+    kernel = functools.partial(_attention_kernel, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # One query tile per instance ...
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            # ... with the full K/V rows for this (batch, head) mapped in;
+            # the kernel streams them block_k rows at a time.
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(q, k, v)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle to float32 tolerance on all shapes the models use
+(pytest + hypothesis sweep them). The oracles are also what the models use
+during *training* — the Pallas kernels (interpret=True) are swapped in only
+for the AOT-exported inference graphs, so training stays fast while the
+exported HLO exercises the kernel path. The swap is sound because the two
+implementations compute identical math (asserted by python/tests).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Reference scaled-dot-product attention.
+
+    Args:
+      q, k, v: ``(BH, S, D)`` — batch*heads leading dim, full (non-causal)
+        attention, no masking (PAD embeddings are trainable, models learn to
+        down-weight them).
+
+    Returns:
+      ``(BH, S, D)`` attention output, same dtype as ``q``.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=jnp.float32))
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def layernorm_ref(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+                  eps: float = 1e-5) -> jnp.ndarray:
+    """Reference layer norm over the last axis.
+
+    Args:
+      x: ``(N, D)`` rows to normalize.
+      gamma, beta: ``(D,)`` scale/shift.
+    """
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * gamma + beta).astype(x.dtype)

@@ -1,0 +1,136 @@
+"""L2: the JAX compute graphs — the simulated-LLM transformer family.
+
+Each "commercial LLM API" in the simulated marketplace is an instance of
+this tiny transformer classifier, and the FrugalGPT reliability scorer
+``g(q, a)`` is the same architecture with a 1-dim regression head. The
+attention / layernorm cores call the L1 Pallas kernels when
+``use_pallas=True`` (the AOT-export path) and the pure-jnp oracles when
+``False`` (the training path); the two are numerically equivalent
+(python/tests asserts it), so the swap is sound.
+
+Everything is pure functions over a params pytree — no framework.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import layernorm as ln_kernel
+from .kernels import ref
+
+PAD_ID = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters for one simulated LLM / scorer."""
+
+    vocab: int
+    seq: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_out: int              # classes, or 1 for the regression scorer
+    mlp_mult: int = 2
+    # Position of the query's [CLS] token (dataset q_offset). The pooled
+    # representation concatenates masked-mean and this position's hidden
+    # state — the CLS read-out speeds up learning markedly at this scale.
+    pool_pos: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Dict:
+    """Initialize a params pytree (scaled-normal inits, zero biases)."""
+    keys = jax.random.split(rng, 4 + 6 * cfg.n_layers)
+    d = cfg.d_model
+
+    def dense(key, fan_in, fan_out):
+        w = jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+        return {"w": w / math.sqrt(fan_in), "b": jnp.zeros((fan_out,), jnp.float32)}
+
+    params = {
+        "tok_emb": jax.random.normal(keys[0], (cfg.vocab, d), jnp.float32) * 0.02,
+        "pos_emb": jax.random.normal(keys[1], (cfg.seq, d), jnp.float32) * 0.02,
+        "head": dense(keys[2], 2 * d, cfg.n_out),
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "blocks": [],
+    }
+    for i in range(cfg.n_layers):
+        k = keys[4 + 6 * i: 4 + 6 * (i + 1)]
+        params["blocks"].append({
+            "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "qkv": dense(k[0], d, 3 * d),
+            "proj": dense(k[1], d, d),
+            "mlp1": dense(k[2], d, cfg.mlp_mult * d),
+            "mlp2": dense(k[3], cfg.mlp_mult * d, d),
+        })
+    return params
+
+
+def _layernorm(x: jnp.ndarray, p: Dict, use_pallas: bool) -> jnp.ndarray:
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    if use_pallas:
+        y = ln_kernel.layernorm(flat, p["g"], p["b"])
+    else:
+        y = ref.layernorm_ref(flat, p["g"], p["b"])
+    return y.reshape(b, s, d)
+
+
+def _attention(x: jnp.ndarray, blk: Dict, cfg: ModelConfig,
+               use_pallas: bool) -> jnp.ndarray:
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qkv = x @ blk["qkv"]["w"] + blk["qkv"]["b"]          # (b, s, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def split_heads(t):  # (b, s, d) -> (b*h, s, hd)
+        return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+    q, k, v = split_heads(q), split_heads(k), split_heads(v)
+    if use_pallas:
+        o = attn_kernel.attention(q, k, v)
+    else:
+        o = ref.attention_ref(q, k, v)
+    o = o.reshape(b, h, s, hd).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ blk["proj"]["w"] + blk["proj"]["b"]
+
+
+def apply(params: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
+          use_pallas: bool = False) -> jnp.ndarray:
+    """Forward pass.
+
+    Args:
+      tokens: ``(B, seq)`` int32 token ids (0 = PAD).
+
+    Returns:
+      ``(B, n_out)`` float32 logits (classifier) or score logits (scorer).
+    """
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :, :]
+    for blk in params["blocks"]:
+        x = x + _attention(_layernorm(x, blk["ln1"], use_pallas), blk, cfg, use_pallas)
+        hmid = _layernorm(x, blk["ln2"], use_pallas)
+        hmid = jax.nn.gelu(hmid @ blk["mlp1"]["w"] + blk["mlp1"]["b"])
+        x = x + (hmid @ blk["mlp2"]["w"] + blk["mlp2"]["b"])
+    x = _layernorm(x, params["ln_f"], use_pallas)
+    # Masked mean-pool over non-PAD positions, concatenated with the hidden
+    # state at the query's [CLS] position (fast-learning read-out).
+    mask = (tokens != PAD_ID).astype(jnp.float32)[:, :, None]
+    pooled = jnp.sum(x * mask, axis=1) / jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    pooled = jnp.concatenate([pooled, x[:, cfg.pool_pos, :]], axis=-1)
+    return pooled @ params["head"]["w"] + params["head"]["b"]
+
+
+def num_params(params: Dict) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,215 @@
+"""Build-time training loops for the simulated LLM APIs and the scorer.
+
+Hand-rolled Adam (no optax in this image), jitted train steps, pure-jnp
+attention (the Pallas kernel is only swapped in for the AOT export — see
+model.py). Each simulated API trains on its own bootstrap subsample with
+its own label-noise level and seed: capacity, data view and noise together
+produce the decorrelated error patterns the cascade exploits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 600
+    batch: int = 32
+    lr: float = 3e-3
+    label_noise: float = 0.0
+    subsample: float = 0.9   # bootstrap fraction of the train split
+    seed: int = 0
+    weight_decay: float = 1e-4
+
+
+def _adam_init(params):
+    return {"m": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def _adam_update(params, grads, state, lr, wd, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    sc = jnp.sqrt(1 - b2 ** tf) / (1 - b1 ** tf)
+    params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (sc * m / (jnp.sqrt(v) + eps) + wd * p),
+        params, m, v)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def _cosine_lr(base: float, step: jnp.ndarray, total: int,
+               warmup: int = 40) -> jnp.ndarray:
+    """Linear warmup then cosine decay (lets tiny models take lr ≈ 6e-3)."""
+    frac = step.astype(jnp.float32) / max(total, 1)
+    cos = base * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    wu = base * (step.astype(jnp.float32) + 1.0) / max(warmup, 1)
+    return jnp.minimum(cos, wu)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "cfg", "steps", "batch", "base_lr", "wd", "regression", "block_len",
+    "q_offset", "n_examples"))
+def _train_loop(params, tokens, targets, key, *, cfg, steps, batch, base_lr,
+                wd, regression, block_len, q_offset, n_examples):
+    """The entire training run as ONE jitted fori_loop.
+
+    Per-step python dispatch dominates wall-clock at this model scale
+    (~40 models to train at build time), so the loop lives in-graph:
+    minibatch sampling, variable-k prompt truncation, fwd/bwd and Adam all
+    happen inside the XLA program.
+    """
+    n = tokens.shape[0]
+    seq = tokens.shape[1]
+    # block id per position (positions past q_offset never truncated).
+    pos = jnp.arange(seq)
+    block_id = jnp.where(pos < q_offset, pos // max(block_len, 1), -1)
+
+    def loss_fn(p, btok, btgt):
+        logits = model_mod.apply(p, btok, cfg, use_pallas=False)
+        if regression:
+            logit = logits[:, 0]
+            y = btgt.astype(jnp.float32)
+            return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                            + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, btgt[:, None], axis=1))
+
+    def body(step, carry):
+        params, opt, key, loss_acc = carry
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        idx = jax.random.randint(k1, (batch,), 0, n)
+        btok = tokens[idx]
+        btgt = targets[idx]
+        if n_examples > 0:
+            # Variable-k truncation: with p=0.5 keep a random prefix of the
+            # in-context example blocks (graceful prompt-adaptation).
+            coin = jax.random.bernoulli(k2, 0.5, (batch,))
+            keep = jax.random.randint(k3, (batch,), 0, n_examples + 1)
+            keep = jnp.where(coin, keep, n_examples)
+            drop = block_id[None, :] >= keep[:, None]
+            btok = jnp.where(drop & (block_id[None, :] >= 0), 0, btok)
+        loss, grads = jax.value_and_grad(loss_fn)(params, btok, btgt)
+        lr = _cosine_lr(base_lr, jnp.asarray(step), steps)
+        params, opt = _adam_update(params, grads, opt, lr, wd)
+        return params, opt, key, 0.98 * loss_acc + 0.02 * loss
+
+    opt = _adam_init(params)
+    params, opt, _, loss = jax.lax.fori_loop(
+        0, steps, body, (params, opt, key, jnp.asarray(0.0)))
+    return params, loss
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _predict_logits(params, tokens, *, cfg):
+    return model_mod.apply(params, tokens, cfg, use_pallas=False)
+
+
+def predict(params, tokens: np.ndarray, cfg: model_mod.ModelConfig,
+            batch: int = 256) -> np.ndarray:
+    """Batched argmax predictions (classifier) over a numpy token array."""
+    outs = []
+    for i in range(0, tokens.shape[0], batch):
+        chunk = tokens[i: i + batch]
+        pad = (-len(chunk)) % batch
+        if pad:
+            chunk = np.concatenate([chunk, np.zeros((pad, chunk.shape[1]), chunk.dtype)])
+        logits = np.asarray(_predict_logits(params, jnp.asarray(chunk), cfg=cfg))
+        outs.append(logits[: len(tokens[i: i + batch])])
+    return np.concatenate(outs).argmax(axis=-1).astype(np.int32)
+
+
+def predict_scores(params, tokens: np.ndarray, cfg: model_mod.ModelConfig,
+                   batch: int = 256) -> np.ndarray:
+    """Batched sigmoid scores for the reliability scorer."""
+    outs = []
+    for i in range(0, tokens.shape[0], batch):
+        chunk = tokens[i: i + batch]
+        pad = (-len(chunk)) % batch
+        if pad:
+            chunk = np.concatenate([chunk, np.zeros((pad, chunk.shape[1]), chunk.dtype)])
+        logits = np.asarray(_predict_logits(params, jnp.asarray(chunk), cfg=cfg))
+        outs.append(logits[: len(tokens[i: i + batch]), 0])
+    return 1.0 / (1.0 + np.exp(-np.concatenate(outs)))
+
+
+def _variable_k_truncation(rng: np.random.Generator, tokens: np.ndarray,
+                           spec: data_mod.DatasetSpec) -> np.ndarray:
+    """With p=0.5 per row, keep only a uniform-random prefix of the example
+    blocks — trains each model to degrade gracefully under prompt
+    adaptation (smaller k) instead of falling off a cliff."""
+    n = tokens.shape[0]
+    keep = np.full(n, spec.n_examples, dtype=np.int64)
+    tr = rng.random(n) < 0.5
+    keep[tr] = rng.integers(0, spec.n_examples + 1, size=tr.sum())
+    return data_mod.truncate_examples(tokens, spec, keep)
+
+
+def train_classifier(spec: data_mod.DatasetSpec, ds: dict,
+                     mcfg: model_mod.ModelConfig, tcfg: TrainConfig,
+                     log: Optional[callable] = None) -> Tuple[Dict, dict]:
+    """Train one simulated LLM API on its bootstrap view of the train split.
+
+    Returns (params, metrics) with train/test accuracy in metrics.
+    """
+    rng = np.random.default_rng(tcfg.seed)
+    tr_idx = ds["train_idx"]
+    n_sub = max(tcfg.batch, int(len(tr_idx) * tcfg.subsample))
+    view = rng.choice(tr_idx, size=n_sub, replace=False)
+    tokens = ds["tokens"][view]
+    labels = ds["labels"][view].copy()
+    # Per-model label noise (decorrelates errors between APIs).
+    if tcfg.label_noise > 0:
+        flip = rng.random(len(labels)) < tcfg.label_noise
+        labels[flip] = rng.integers(0, spec.n_classes, size=flip.sum())
+
+    params = model_mod.init_params(jax.random.PRNGKey(tcfg.seed), mcfg)
+    params, loss = _train_loop(
+        params, jnp.asarray(tokens), jnp.asarray(labels),
+        jax.random.PRNGKey(tcfg.seed + 1000), cfg=mcfg, steps=tcfg.steps,
+        batch=tcfg.batch, base_lr=tcfg.lr, wd=tcfg.weight_decay,
+        regression=False, block_len=spec.block_len, q_offset=spec.q_offset,
+        n_examples=spec.n_examples)
+    if log:
+        log(f"    final ema loss {float(loss):.4f}")
+
+    m = {}
+    for split, idx in (("train", ds["train_idx"]), ("test", ds["test_idx"])):
+        preds = predict(params, ds["tokens"][idx], mcfg)
+        m[f"{split}_acc"] = float((preds == ds["labels"][idx]).mean())
+    return params, m
+
+
+def train_scorer(spec: data_mod.DatasetSpec, scorer_tokens: np.ndarray,
+                 correct: np.ndarray, mcfg: model_mod.ModelConfig,
+                 tcfg: TrainConfig, log: Optional[callable] = None
+                 ) -> Tuple[Dict, dict]:
+    """Train the reliability scorer g(q, a) on (scorer-input, correct) rows
+    pooled across all simulated APIs' train-split answers."""
+    params = model_mod.init_params(jax.random.PRNGKey(tcfg.seed + 1), mcfg)
+    params, loss = _train_loop(
+        params, jnp.asarray(scorer_tokens),
+        jnp.asarray(correct.astype(np.int32)),
+        jax.random.PRNGKey(tcfg.seed + 2000), cfg=mcfg, steps=tcfg.steps,
+        batch=tcfg.batch, base_lr=tcfg.lr, wd=tcfg.weight_decay,
+        regression=True, block_len=1, q_offset=0, n_examples=0)
+    if log:
+        log(f"    scorer final ema loss {float(loss):.4f}")
+    scores = predict_scores(params, scorer_tokens, mcfg)
+    # AUC-ish sanity metric: mean score on correct minus on incorrect rows.
+    sep = float(scores[correct > 0].mean() - scores[correct == 0].mean()) \
+        if 0 < correct.sum() < len(correct) else 0.0
+    acc = float(((scores > 0.5).astype(np.int32) == correct).mean())
+    return params, {"score_sep": sep, "score_acc": acc}

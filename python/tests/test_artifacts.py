@@ -1,0 +1,113 @@
+"""Validation of the built artifact tree (skipped until `make artifacts`).
+
+These mirror the rust-side integration tests from the python side: the
+manifest, datasets, response tables and HLO files must be mutually
+consistent, and a sampled model artifact must reproduce the response
+table's predictions when recompiled by JAX itself.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_datasets_and_models(manifest):
+    names = {d["dataset"] for d in manifest["datasets"]}
+    assert names == {"headlines", "overruling", "coqa"}
+    for d in manifest["datasets"]:
+        assert len(d["models"]) == 12
+        for m in d["models"]:
+            for b in map(str, manifest["batch_sizes"]):
+                path = os.path.join(ART, m["artifacts"][b])
+                assert os.path.exists(path), path
+                assert os.path.getsize(path) > 10_000
+        assert 0.3 < d["models"][0]["test_acc"] <= 1.0
+
+
+def test_quality_tiers_preserved_in_aggregate(manifest):
+    # The simulated marketplace should preserve the paper's quality tiers
+    # in aggregate: the top of the capacity ladder (gpt4/chatgpt/gpt_j,
+    # the heavily-trained models) must dominate the weak tier (gpt_curie,
+    # fairseq, cohere). Which *specific* model tops each dataset is noisy —
+    # the paper itself has GPT-3 beat GPT-4 on COQA.
+    avg = {}
+    for d in manifest["datasets"]:
+        for m in d["models"]:
+            avg.setdefault(m["name"], []).append(m["test_acc"])
+    means = {k: float(np.mean(v)) for k, v in avg.items()}
+    strong = max(means[k] for k in ("gpt4", "chatgpt", "gpt_j"))
+    weak = np.mean([means[k] for k in ("gpt_curie", "fairseq_gpt", "cohere_xlarge")])
+    assert strong > weak + 0.05, means
+    ranked = sorted(means, key=means.get, reverse=True)
+    assert {"gpt4", "chatgpt"} & set(ranked[:3]), ranked
+
+
+def test_response_tables_consistent(manifest):
+    for d in manifest["datasets"]:
+        with open(os.path.join(ART, "responses", f"{d['dataset']}.json")) as f:
+            table = json.load(f)
+        with open(os.path.join(ART, "data", d["dataset"], "test.json")) as f:
+            test = json.load(f)
+        split = table["splits"]["test"]
+        assert split["labels"] == test["labels"]
+        for m in d["models"]:
+            entry = split["models"][m["name"]]
+            preds = np.asarray(entry["pred"])
+            labels = np.asarray(split["labels"])
+            acc = float((preds == labels).mean())
+            assert abs(acc - m["test_acc"]) < 1e-6
+            assert np.asarray(entry["correct"]).tolist() == (preds == labels).astype(int).tolist()
+            scores = np.asarray(entry["score"])
+            assert ((scores >= 0) & (scores <= 1)).all()
+
+
+def test_scorer_scores_are_informative(manifest):
+    # Pooled over models, correct answers should score higher on average —
+    # the property the cascade relies on.
+    for d in manifest["datasets"]:
+        with open(os.path.join(ART, "responses", f"{d['dataset']}.json")) as f:
+            table = json.load(f)
+        split = table["splits"]["test"]
+        sc, si = [], []
+        for m in d["models"]:
+            entry = split["models"][m["name"]]
+            s = np.asarray(entry["score"])
+            c = np.asarray(entry["correct"]).astype(bool)
+            sc.append(s[c])
+            si.append(s[~c])
+        sep = np.concatenate(sc).mean() - np.concatenate(si).mean()
+        assert sep > 0.05, f"{d['dataset']}: scorer separation {sep}"
+
+
+def test_hlo_artifacts_structurally_sound(manifest):
+    """Every exported HLO declares the right entry signature and carries its
+    constants un-elided. (Numeric HLO↔python agreement is asserted through
+    the actual serving runtime by the rust integration test
+    `pjrt_execution_matches_response_table` and `frugalgpt verify`.)"""
+    for d in manifest["datasets"]:
+        for m in d["models"][:3] + [d["models"][-1]]:
+            for b in ("1", "8"):
+                path = os.path.join(ART, m["artifacts"][b])
+                text = open(path).read()
+                assert "{...}" not in text, f"{path}: elided constants"
+                assert f"s32[{b},{manifest['seq']}]" in text, path
+                assert f"f32[{b},{d['n_classes']}]" in text, path
+        sc = d["scorer"]["artifacts"]
+        text = open(os.path.join(ART, sc["1"])).read()
+        assert f"s32[1,{d['scorer_seq']}]" in text
+        assert "f32[1,1]" in text

@@ -1,0 +1,134 @@
+"""Dataset generator invariants: layout, label rules, split statistics."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+
+
+@pytest.fixture(scope="module")
+def small_specs():
+    return {
+        name: data.dataclasses.replace(spec, size=400)
+        for name, spec in data.SPECS.items()
+    }
+
+
+def test_specs_match_paper_table2():
+    assert data.SPECS["headlines"].size == 10000
+    assert data.SPECS["overruling"].size == 2400
+    assert data.SPECS["coqa"].size == 7982
+    assert data.SPECS["headlines"].n_examples == 8
+    assert data.SPECS["overruling"].n_examples == 5
+    assert data.SPECS["coqa"].n_examples == 2
+    assert data.SPECS["headlines"].n_classes == 4
+    assert data.SPECS["overruling"].n_classes == 2
+
+
+def test_layout_fixed_positions(small_specs):
+    for spec in small_specs.values():
+        ds = data.generate(spec)
+        toks = ds["tokens"]
+        assert toks.shape == (spec.size, data.SEQ)
+        # example blocks
+        for j in range(spec.n_examples):
+            assert (toks[:, j * spec.block_len] == data.SEP_EX).all()
+            labels = toks[:, j * spec.block_len + 2]
+            assert ((labels >= data.LABEL_BASE)
+                    & (labels < data.LABEL_BASE + spec.n_classes)).all()
+        # query segment
+        assert (toks[:, spec.q_offset] == data.CLS).all()
+        assert (toks[:, spec.q_offset + 1 + spec.qlen] == data.QSEP).all()
+        # padding after used_len
+        assert (toks[:, spec.used_len:] == data.PAD).all()
+
+
+def test_label_balance_and_tiers(small_specs):
+    for spec in small_specs.values():
+        ds = data.generate(spec)
+        counts = np.bincount(ds["labels"], minlength=spec.n_classes)
+        assert counts.min() > 0
+        tier_frac = np.bincount(ds["tiers"], minlength=3) / spec.size
+        for t in range(3):
+            assert abs(tier_frac[t] - spec.tier_probs[t]) < 0.12, (spec.name, t)
+
+
+def test_episodic_items_marked_and_covered(small_specs):
+    for spec in small_specs.values():
+        ds = data.generate(spec)
+        epi = ds["episodic"].astype(bool)
+        if not epi.any():
+            continue
+        toks = ds["tokens"][epi]
+        q = toks[:, spec.q_offset + 1: spec.q_offset + 1 + spec.qlen]
+        # every episodic query carries the marker
+        assert (q == data.EPI_MARK).any(axis=1).all()
+        # episodic items are tier 0
+        assert (ds["tiers"][epi] == 0).all()
+
+
+def test_split_disjoint_and_complete(small_specs):
+    spec = small_specs["headlines"]
+    ds = data.generate(spec)
+    tr, te = set(ds["train_idx"].tolist()), set(ds["test_idx"].tolist())
+    assert not (tr & te)
+    assert len(tr) + len(te) == spec.size
+    assert len(tr) == int(spec.size * spec.train_frac)
+
+
+def test_generation_is_deterministic(small_specs):
+    spec = small_specs["overruling"]
+    a = data.generate(spec)
+    b = data.generate(spec)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    assert np.array_equal(a["labels"], b["labels"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(keep=st.integers(0, 8))
+def test_truncate_examples_layout(keep):
+    spec = data.dataclasses.replace(data.SPECS["headlines"], size=50)
+    ds = data.generate(spec)
+    keep_arr = np.full(50, keep)
+    out = data.truncate_examples(ds["tokens"], spec, keep_arr)
+    k = min(keep, spec.n_examples)
+    # kept blocks identical, dropped blocks zero, query untouched
+    assert np.array_equal(out[:, : k * spec.block_len],
+                          ds["tokens"][:, : k * spec.block_len])
+    assert (out[:, k * spec.block_len: spec.q_offset] == data.PAD).all()
+    assert np.array_equal(out[:, spec.q_offset:], ds["tokens"][:, spec.q_offset:])
+
+
+def test_scorer_input_layout():
+    spec = data.dataclasses.replace(data.SPECS["coqa"], size=30)
+    ds = data.generate(spec)
+    answers = np.arange(30, dtype=np.int32) % spec.n_classes
+    s = data.scorer_input(ds["tokens"], spec, answers)
+    assert s.shape == (30, spec.scorer_seq)
+    assert (s[:, 0] == data.CLS).all()
+    assert (s[:, spec.qlen + 1] == data.QSEP).all()
+    assert np.array_equal(s[:, spec.qlen + 2], data.LABEL_BASE + answers)
+    assert (s[:, spec.qlen + 3:] == data.PAD).all()
+
+
+def test_token_map_has_no_collisions():
+    # signal token ranges must be disjoint
+    kw = range(data.KW_BASE, data.KW_BASE + 12 * data.NK)
+    a = range(data.A_BASE, data.A_BASE + data.NPAIR)
+    b = range(data.B_BASE, data.B_BASE + data.NPAIR)
+    d = range(data.DIR_BASE, data.DIR_BASE + 12)
+    n = range(data.NOISE_BASE, data.VOCAB)
+    ranges = [kw, a, b, d, n]
+    for i, r1 in enumerate(ranges):
+        for r2 in ranges[i + 1:]:
+            assert not (set(r1) & set(r2)), (r1, r2)
+    assert data.LABEL_BASE + 12 <= data.EPI_MARK
+    assert max(data.DIR_BASE + 11, data.B_BASE + data.NPAIR - 1) < data.VOCAB
+
+
+def test_tier1_all_labels_realizable():
+    # regression test for the NPAIR < n_classes crash
+    spec = data.dataclasses.replace(data.SPECS["coqa"], size=200)
+    ds = data.generate(spec)  # would raise if (i, label) unrealizable
+    assert (ds["tiers"] == 1).any()

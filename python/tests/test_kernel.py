@@ -1,0 +1,134 @@
+"""Kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+This is the CORE L1 correctness signal — hypothesis sweeps shapes and
+value distributions; assert_allclose against ref.py at float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention
+from compile.kernels.layernorm import layernorm
+from compile.kernels.ref import attention_ref, layernorm_ref
+
+ATOL = 2e-5
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 6, 8]),
+    seq=st.sampled_from([32, 64, 96, 128]),
+    d=st.sampled_from([4, 8, 16]),
+    scale=st.sampled_from([0.1, 1.0, 4.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(bh, seq, d, scale, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, bh, seq, d, scale=scale)
+    k = _rand(rng, bh, seq, d, scale=scale)
+    v = _rand(rng, bh, seq, d, scale=scale)
+    np.testing.assert_allclose(
+        np.asarray(attention(q, k, v)),
+        np.asarray(attention_ref(q, k, v)),
+        atol=ATOL, rtol=1e-4,
+    )
+
+
+def test_attention_block_sizes_equivalent():
+    rng = np.random.default_rng(0)
+    q, k, v = (_rand(rng, 4, 64, 8) for _ in range(3))
+    base = np.asarray(attention(q, k, v))
+    for bq, bk in [(16, 16), (16, 32), (32, 16), (64, 64)]:
+        out = np.asarray(attention(q, k, v, block_q=bq, block_k=bk))
+        np.testing.assert_allclose(out, base, atol=ATOL, rtol=1e-4,
+                                   err_msg=f"block_q={bq}, block_k={bk}")
+
+
+def test_attention_large_logits_stable():
+    # online-softmax must not overflow with large score magnitudes
+    rng = np.random.default_rng(1)
+    q, k, v = (_rand(rng, 2, 64, 8, scale=30.0) for _ in range(3))
+    out = np.asarray(attention(q, k, v))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, np.asarray(attention_ref(q, k, v)),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_attention_rejects_indivisible_seq():
+    rng = np.random.default_rng(2)
+    q, k, v = (_rand(rng, 1, 48, 8) for _ in range(3))
+    with pytest.raises(ValueError):
+        attention(q, k, v)  # 48 not divisible by default 32
+
+
+def test_attention_uniform_when_keys_identical():
+    # identical keys → softmax uniform → output = mean of values
+    rng = np.random.default_rng(3)
+    q = _rand(rng, 1, 32, 8)
+    k = jnp.ones((1, 32, 8), jnp.float32)
+    v = _rand(rng, 1, 32, 8)
+    out = np.asarray(attention(q, k, v))
+    expect = np.repeat(np.asarray(v).mean(axis=1, keepdims=True), 32, axis=1)
+    np.testing.assert_allclose(out, expect, atol=ATOL, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([32, 64, 256]),
+    d=st.sampled_from([8, 24, 64]),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(rows, d, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, rows, d, scale=scale)
+    g = _rand(rng, d)
+    b = _rand(rng, d)
+    np.testing.assert_allclose(
+        np.asarray(layernorm(x, g, b)),
+        np.asarray(layernorm_ref(x, g, b)),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+def test_layernorm_output_is_normalized():
+    rng = np.random.default_rng(4)
+    x = _rand(rng, 64, 32, scale=5.0)
+    out = np.asarray(layernorm(x, jnp.ones(32), jnp.zeros(32)))
+    np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(axis=-1), 1.0, atol=1e-3)
+
+
+def test_layernorm_rejects_indivisible_rows():
+    with pytest.raises(ValueError):
+        layernorm(jnp.zeros((33, 8)), jnp.ones(8), jnp.zeros(8))
+
+
+# ---------------------------------------------------------------------------
+# kernels inside jit / grad contexts (as the models use them)
+# ---------------------------------------------------------------------------
+
+def test_attention_composes_with_jit():
+    rng = np.random.default_rng(5)
+    q, k, v = (_rand(rng, 2, 32, 8) for _ in range(3))
+
+    @jax.jit
+    def f(q, k, v):
+        return attention(q, k, v).sum()
+
+    assert np.isfinite(float(f(q, k, v)))

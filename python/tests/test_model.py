@@ -1,0 +1,125 @@
+"""Model (L2) tests: shapes, pallas/ref equivalence, training smoke, and
+the AOT export round-trip (HLO text with baked constants)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data, model, train
+
+
+def _cfg(d=16, layers=1, n_out=4, seq=data.SEQ, pool_pos=0):
+    return model.ModelConfig(vocab=data.VOCAB, seq=seq, d_model=d,
+                             n_layers=layers, n_heads=d // 8, n_out=n_out,
+                             pool_pos=pool_pos)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _cfg()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, data.VOCAB, size=(4, cfg.seq), dtype=np.int32))
+    return cfg, params, toks
+
+
+def test_output_shape_and_finite(tiny):
+    cfg, params, toks = tiny
+    out = model.apply(params, toks, cfg)
+    assert out.shape == (4, cfg.n_out)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_pallas_and_ref_paths_agree(tiny):
+    cfg, params, toks = tiny
+    a = np.asarray(model.apply(params, toks, cfg, use_pallas=False))
+    b = np.asarray(model.apply(params, toks, cfg, use_pallas=True))
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=1e-4)
+
+
+def test_pad_variation_changes_little_but_batch_independent(tiny):
+    cfg, params, toks = tiny
+    # same row in different batch positions must give the same output
+    row = toks[:1]
+    batch = jnp.concatenate([row, toks[1:]], axis=0)
+    single = np.asarray(model.apply(params, row, cfg))
+    inbatch = np.asarray(model.apply(params, batch, cfg))[:1]
+    np.testing.assert_allclose(single, inbatch, atol=1e-5, rtol=1e-5)
+
+
+def test_num_params_counts():
+    cfg = _cfg(d=16, layers=2)
+    params = model.init_params(jax.random.PRNGKey(1), cfg)
+    n = model.num_params(params)
+    # embedding (160*16) + pos (64*16) dominate; sanity bounds
+    assert 5_000 < n < 100_000
+
+
+def test_training_learns_the_easy_tier():
+    spec = data.dataclasses.replace(data.SPECS["overruling"], size=600)
+    ds = data.generate(spec)
+    cfg = _cfg(d=24, layers=2, n_out=spec.n_classes, pool_pos=spec.q_offset)
+    tcfg = train.TrainConfig(steps=150, batch=48, lr=8e-3, seed=3)
+    params, metrics = train.train_classifier(spec, ds, cfg, tcfg)
+    # binary task, 150 steps: must be clearly above chance on train
+    assert metrics["train_acc"] > 0.6, metrics
+
+
+def test_scorer_training_separates():
+    spec = data.dataclasses.replace(data.SPECS["overruling"], size=400)
+    ds = data.generate(spec)
+    # synthetic scorer rows: answer == label is correct
+    rng = np.random.default_rng(0)
+    answers = np.where(rng.random(400) < 0.5, ds["labels"],
+                       (ds["labels"] + 1) % spec.n_classes).astype(np.int32)
+    rows = data.scorer_input(ds["tokens"], spec, answers)
+    correct = (answers == ds["labels"]).astype(np.int32)
+    cfg = _cfg(d=16, layers=1, n_out=1, seq=spec.scorer_seq)
+    tcfg = train.TrainConfig(steps=200, batch=48, lr=8e-3, seed=4)
+    params, m = train.train_scorer(spec, rows, correct, cfg, tcfg)
+    assert m["score_sep"] > 0.1, m  # correct answers score higher
+
+
+def test_predict_handles_ragged_tail():
+    cfg = _cfg()
+    params = model.init_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, data.VOCAB, size=(19, cfg.seq), dtype=np.int32)
+    preds = train.predict(params, toks, cfg, batch=8)
+    assert preds.shape == (19,)
+    assert (preds < cfg.n_out).all()
+
+
+def test_aot_export_roundtrip(tmp_path):
+    """Export → HLO text with baked constants, no elisions, one s32 param."""
+    cfg = _cfg(d=16, layers=1)
+    params = model.init_params(jax.random.PRNGKey(5), cfg)
+    out = os.path.join(tmp_path, "m.hlo.txt")
+    n = aot.export_model(params, cfg, cfg.seq, out, batch=2)
+    text = open(out).read()
+    assert n == len(text) > 10_000
+    assert "{...}" not in text, "constants must not be elided"
+    assert "s32[2,64]" in text, "entry must take (batch=2, seq) tokens"
+    assert "ENTRY" in text
+
+
+def test_export_batches_agree_with_apply(tmp_path):
+    """The lowered fn (pallas path) equals direct apply numerics."""
+    cfg = _cfg(d=16, layers=1)
+    params = model.init_params(jax.random.PRNGKey(6), cfg)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, data.VOCAB, size=(2, cfg.seq), dtype=np.int32))
+
+    def fn(t):
+        return model.apply(params, t, cfg, use_pallas=True)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, cfg.seq), jnp.int32))
+    compiled = lowered.compile()
+    np.testing.assert_allclose(
+        np.asarray(compiled(toks)),
+        np.asarray(model.apply(params, toks, cfg)),
+        atol=2e-5, rtol=1e-4,
+    )

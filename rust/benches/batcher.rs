@@ -1,0 +1,86 @@
+//! Bench: dynamic batcher throughput — many client threads submitting
+//! single rows vs direct single-row engine calls. Shows the batching win
+//! on the scorer (the cascade's most frequent call). Requires artifacts.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use frugalgpt::data::Artifacts;
+use frugalgpt::runtime::Engine;
+use frugalgpt::server::batcher::{Batcher, BatcherConfig};
+
+fn main() {
+    let art = match Artifacts::load("artifacts") {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("skipping batcher bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let ctx = art.context("headlines").expect("headlines context");
+    let engine = Engine::start(&art).expect("engine");
+    let h = engine.handle();
+    let row = frugalgpt::data::prompt::scorer_input(ctx.test.tokens(0), &ctx.meta, 1);
+    h.execute("headlines", "scorer", row.clone()).expect("warmup");
+    // warm all batch variants the batcher may pick
+    for b in [8usize, 32] {
+        h.execute_batch("headlines", "scorer", vec![row.clone(); b]).expect("warmup");
+    }
+
+    let n_requests = 512;
+    for clients in [1usize, 4, 16] {
+        // direct path
+        let t0 = Instant::now();
+        run_clients(clients, n_requests, {
+            let h = h.clone();
+            let row = row.clone();
+            move || {
+                h.execute("headlines", "scorer", row.clone()).unwrap();
+            }
+        });
+        let direct = t0.elapsed();
+
+        // batched path
+        let batcher = Batcher::spawn(
+            h.clone(),
+            "headlines".into(),
+            "scorer".into(),
+            BatcherConfig::default(),
+        );
+        let bh = batcher.handle();
+        let t0 = Instant::now();
+        run_clients(clients, n_requests, {
+            let bh = bh.clone();
+            let row = row.clone();
+            move || {
+                bh.submit(row.clone()).unwrap();
+            }
+        });
+        let batched = t0.elapsed();
+        println!(
+            "batcher/{clients}_clients: direct {:>8.1?} ({:>7.1} q/s)  batched {:>8.1?} ({:>7.1} q/s)  speedup {:.2}x",
+            direct,
+            n_requests as f64 / direct.as_secs_f64(),
+            batched,
+            n_requests as f64 / batched.as_secs_f64(),
+            direct.as_secs_f64() / batched.as_secs_f64(),
+        );
+    }
+}
+
+fn run_clients<F: Fn() + Send + Sync + 'static>(clients: usize, total: usize, f: F) {
+    let f = Arc::new(f);
+    let each = total / clients;
+    let mut handles = Vec::new();
+    for _ in 0..clients {
+        let f = f.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..each {
+                f();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

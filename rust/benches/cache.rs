@@ -1,0 +1,59 @@
+//! Bench: completion-cache lookup/insert paths. The cache sits in front of
+//! every query, so its hit path must be orders of magnitude cheaper than a
+//! PJRT call (≈ ms) — EXPERIMENTS.md §Perf quotes these numbers.
+
+use std::time::Duration;
+
+use frugalgpt::strategies::cache::{CachedAnswer, CompletionCache};
+use frugalgpt::util::bench::{bench, black_box};
+use frugalgpt::util::rng::Rng;
+
+fn query(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.below(160) as i32).collect()
+}
+
+fn main() {
+    let mut rng = Rng::new(5);
+    let queries: Vec<Vec<i32>> = (0..1024).map(|_| query(&mut rng, 64)).collect();
+
+    // exact-only cache, hit path
+    let mut cache = CompletionCache::new(2048, 1.0);
+    for q in &queries {
+        cache.put(q, CachedAnswer { answer: 1, score: 0.9 });
+    }
+    let mut i = 0;
+    let r = bench("cache/exact_hit", 100, Duration::from_secs(1), || {
+        i = (i + 1) % queries.len();
+        black_box(cache.get(&queries[i]));
+    });
+    println!("{}", r.report());
+
+    // exact-only, miss path
+    let mut misses: Vec<Vec<i32>> = (0..1024).map(|_| query(&mut rng, 64)).collect();
+    let r = bench("cache/exact_miss", 100, Duration::from_secs(1), || {
+        i = (i + 1) % misses.len();
+        black_box(cache.get(&misses[i]));
+    });
+    println!("{}", r.report());
+
+    // similarity tier (MinHash scan) — the expensive lookup
+    let mut sim = CompletionCache::new(512, 0.8);
+    for q in queries.iter().take(512) {
+        sim.put(q, CachedAnswer { answer: 1, score: 0.9 });
+    }
+    let r = bench("cache/similar_scan_512", 10, Duration::from_secs(1), || {
+        i = (i + 1) % misses.len();
+        black_box(sim.get(&misses[i]));
+    });
+    println!("{}", r.report());
+
+    // insert + eviction churn
+    let mut churn = CompletionCache::new(256, 1.0);
+    let r = bench("cache/insert_evict", 10, Duration::from_secs(1), || {
+        i = (i + 1) % misses.len();
+        misses[i][0] = (misses[i][0] + 1) % 160; // mutate → unique key
+        churn.put(&misses[i], CachedAnswer { answer: 0, score: 0.1 });
+        black_box(churn.len());
+    });
+    println!("{}", r.report());
+}

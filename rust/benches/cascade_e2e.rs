@@ -1,0 +1,80 @@
+//! Bench: end-to-end live cascade latency per query vs always-GPT-4
+//! (paper Table 3 / Fig. 5 in wall-clock terms: the cascade must not add
+//! meaningful coordinator overhead on top of model execution).
+//! Requires `make artifacts`.
+
+use frugalgpt::coordinator::cascade::{Cascade, CascadePlan};
+use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
+use frugalgpt::coordinator::scorer::Scorer;
+use frugalgpt::data::Artifacts;
+use frugalgpt::runtime::Engine;
+use frugalgpt::util::bench::{bench_n, black_box};
+
+fn main() {
+    let art = match Artifacts::load("artifacts") {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("skipping cascade bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let ctx = art.context("headlines").expect("headlines context");
+    let engine = Engine::start(&art).expect("engine");
+
+    let opt = CascadeOptimizer::new(
+        &ctx.table.train,
+        &ctx.costs,
+        ctx.train_tokens.clone(),
+        OptimizerOptions::default(),
+    )
+    .expect("optimizer");
+    let frontier = opt.frontier();
+    let plan = frontier.last().expect("frontier").plan.clone();
+    eprintln!("cascade: {}", plan.describe(&ctx.costs.model_names));
+
+    let mk = |plan: CascadePlan| {
+        Cascade::new(
+            plan,
+            engine.handle(),
+            Scorer::new(engine.handle(), ctx.meta.clone()),
+            ctx.costs.clone(),
+            ctx.meta.clone(),
+        )
+        .expect("cascade")
+    };
+
+    let cascade = mk(plan);
+    let gpt4 = ctx.costs.model_index("gpt4").expect("gpt4");
+    let single = mk(CascadePlan::single(gpt4));
+
+    // warm up all executables on the query path
+    for i in 0..4 {
+        cascade.answer(ctx.test.tokens(i)).unwrap();
+        single.answer(ctx.test.tokens(i)).unwrap();
+    }
+
+    let mut i = 0;
+    let r = bench_n("cascade/answer_live", 2, 60, || {
+        i = (i + 1) % 256;
+        black_box(cascade.answer(ctx.test.tokens(i)).unwrap());
+    });
+    println!("{}", r.report());
+
+    let r = bench_n("cascade/always_gpt4", 2, 60, || {
+        i = (i + 1) % 256;
+        black_box(single.answer(ctx.test.tokens(i)).unwrap());
+    });
+    println!("{}", r.report());
+
+    // offline replay (the optimizer's inner loop) for contrast
+    let r = bench_n("cascade/replay_test_split", 2, 20, || {
+        let f = frontier.last().unwrap();
+        black_box(frugalgpt::coordinator::cascade::replay::replay(
+            &f.plan,
+            &ctx.table.test,
+            &ctx.costs,
+            &ctx.test_tokens,
+        ));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,53 @@
+//! Bench: the cascade optimizer's (L, τ) search — the paper's one-time
+//! training cost ("learning the LLM cascade itself requires resources").
+//! Regenerates the numbers quoted in EXPERIMENTS.md §Perf (L3).
+
+use std::time::Duration;
+
+use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
+use frugalgpt::coordinator::responses::synthetic_table;
+use frugalgpt::marketplace::CostModel;
+use frugalgpt::util::bench::{bench_n, black_box};
+
+fn main() {
+    // Synthetic 12-API table at the HEADLINES train-split size.
+    let table = synthetic_table(12, 8000, 4, 0.9, 99);
+    let costs = CostModel::from_table1("bench", vec![1, 1, 2, 1]);
+    let tokens = vec![45u32; table.len()];
+
+    for (name, grid, max_len, sub) in [
+        ("optimizer/full_m3_grid24", 24, 3, None),
+        ("optimizer/full_m3_grid8", 8, 3, None),
+        ("optimizer/coarse2000_m3_grid24", 24, 3, Some(2000)),
+        ("optimizer/pairs_only_m2", 24, 2, None),
+    ] {
+        let r = bench_n(name, 1, 5, || {
+            let opt = CascadeOptimizer::new(
+                &table,
+                &costs,
+                tokens.clone(),
+                OptimizerOptions {
+                    grid,
+                    max_len,
+                    coarse_subsample: sub,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            black_box(opt.frontier());
+        });
+        println!("{}", r.report());
+    }
+
+    // Budget query on a prebuilt optimizer (the cheap part).
+    let opt = CascadeOptimizer::new(&table, &costs, tokens, OptimizerOptions::default()).unwrap();
+    let r = frugalgpt::util::bench::bench(
+        "optimizer/optimize_at_budget",
+        2,
+        Duration::from_secs(2),
+        || {
+            black_box(opt.optimize(5.0).ok());
+        },
+    );
+    println!("{}", r.report());
+}

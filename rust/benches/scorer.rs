@@ -1,0 +1,43 @@
+//! Bench: live reliability-scorer executions through PJRT at batch 1/8/32
+//! (L1+L2 hot path as seen from rust). Requires `make artifacts`.
+
+use frugalgpt::data::Artifacts;
+use frugalgpt::runtime::Engine;
+use frugalgpt::util::bench::{bench_n, black_box};
+
+fn main() {
+    let art = match Artifacts::load("artifacts") {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("skipping scorer bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let ctx = art.context("headlines").expect("headlines context");
+    let engine = Engine::start(&art).expect("engine");
+    let h = engine.handle();
+
+    let row = frugalgpt::data::prompt::scorer_input(ctx.test.tokens(0), &ctx.meta, 1);
+    // warm the executable cache
+    h.execute("headlines", "scorer", row.clone()).expect("warmup");
+
+    for &b in &[1usize, 8, 32] {
+        let rows: Vec<Vec<i32>> = (0..b)
+            .map(|i| frugalgpt::data::prompt::scorer_input(ctx.test.tokens(i), &ctx.meta, 1))
+            .collect();
+        let r = bench_n(&format!("scorer/pjrt_batch{b}"), 3, 30, || {
+            black_box(h.execute_batch("headlines", "scorer", rows.clone()).unwrap());
+        });
+        println!("{} ({:.1} rows/s)", r.report(), b as f64 / r.mean.as_secs_f64());
+    }
+
+    // LLM forward for contrast (cheapest vs priciest simulated API)
+    for model in ["gpt_j", "gpt4"] {
+        let rows: Vec<Vec<i32>> = (0..8).map(|i| ctx.test.tokens(i).to_vec()).collect();
+        h.execute_batch("headlines", model, rows.clone()).expect("warmup");
+        let r = bench_n(&format!("llm/{model}_batch8"), 3, 30, || {
+            black_box(h.execute_batch("headlines", model, rows.clone()).unwrap());
+        });
+        println!("{} ({:.1} rows/s)", r.report(), 8.0 / r.mean.as_secs_f64());
+    }
+}

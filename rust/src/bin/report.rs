@@ -1,0 +1,419 @@
+//! `report` — regenerates every table and figure of the paper's evaluation.
+//!
+//!   report table1                 — Table 1: the 12-API price matrix
+//!   report table2                 — Table 2: dataset summary
+//!   report table3                 — Table 3: cost to match best single LLM
+//!   report fig3   [--budget-frac 0.2]
+//!                                 — Fig. 3: HEADLINES case study
+//!   report fig4                   — Fig. 4: MPI matrices (3 datasets)
+//!   report fig5                   — Fig. 5 / Fig. 1c: accuracy–cost frontiers
+//!   report strategies             — §3 ablation: cache / prompt / concat
+//!   report all                    — everything above in order
+//!
+//! All reports run on the *test* split with a cascade learned on the
+//! *train* split (mirroring the paper), entirely from the offline response
+//! table — no PJRT needed, so they are fast and deterministic.
+
+use anyhow::{Context, Result};
+
+use frugalgpt::coordinator::cascade::replay;
+use frugalgpt::coordinator::optimizer::{CascadeOptimizer, FrontierPoint, OptimizerOptions};
+use frugalgpt::data::{Artifacts, DatasetContext};
+use frugalgpt::eval::mpi::mpi_matrix;
+use frugalgpt::eval::table::{pct, render, usd};
+use frugalgpt::eval::{best_individual, individual_points};
+use frugalgpt::marketplace::TABLE1;
+use frugalgpt::strategies::{concat, prompt::PromptPolicy};
+use frugalgpt::util::args::Args;
+
+const DATASETS: [&str; 3] = ["headlines", "overruling", "coqa"];
+
+fn main() {
+    let args = Args::from_env();
+    let what = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    if let Err(e) = run(what, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(what: &str, args: &Args) -> Result<()> {
+    let art = Artifacts::load(args.get_or("artifacts", "artifacts"))?;
+    match what {
+        "table1" => table1(&art),
+        "table2" => table2(&art),
+        "table3" => table3(&art),
+        "fig3" => fig3(&art, args),
+        "fig4" => fig4(&art),
+        "fig5" => fig5(&art),
+        "strategies" => strategies(&art),
+        "all" => {
+            for w in ["table1", "table2", "fig3", "fig4", "table3", "fig5", "strategies"] {
+                run(w, args)?;
+                println!();
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown report `{other}`"),
+    }
+}
+
+/// Paper Table 1: commercial LLM API pricing.
+fn table1(art: &Artifacts) -> Result<()> {
+    println!("== Table 1: summary of commercial LLM APIs (USD, March 2023) ==");
+    let dm = &art.manifest.datasets[0];
+    let rows: Vec<Vec<String>> = TABLE1
+        .iter()
+        .map(|(provider, api, size_b, p)| {
+            let m = dm.model(api);
+            vec![
+                provider.to_string(),
+                api.to_string(),
+                if *size_b > 0.0 { format!("{size_b}") } else { "NA".into() },
+                format!("{}", p.usd_per_10m_input),
+                format!("{}", p.usd_per_10m_output),
+                format!("{}", p.usd_per_request),
+                m.map(|m| format!("d={} L={}", m.d_model, m.n_layers)).unwrap_or_default(),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render(
+            &["provider", "api", "size/B", "10M input", "10M output", "request", "simulated-as"],
+            &rows
+        )
+    );
+    let max_in = TABLE1.iter().map(|t| t.3.usd_per_10m_input).fold(0.0, f64::max);
+    let min_in = TABLE1
+        .iter()
+        .map(|t| t.3.usd_per_10m_input)
+        .filter(|&x| x > 0.0)
+        .fold(f64::MAX, f64::min);
+    println!("input-price spread: {:.0}x (paper: 2 orders of magnitude)", max_in / min_in);
+    Ok(())
+}
+
+/// Paper Table 2: dataset summary.
+fn table2(art: &Artifacts) -> Result<()> {
+    println!("== Table 2: datasets ==");
+    let rows: Vec<Vec<String>> = art
+        .manifest
+        .datasets
+        .iter()
+        .map(|d| {
+            vec![
+                d.dataset.to_uppercase(),
+                d.domain.clone(),
+                d.size.to_string(),
+                d.n_examples.to_string(),
+                d.n_classes.to_string(),
+                format!("{}/{}", d.n_train, d.n_test),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render(
+            &["dataset", "domain", "size", "#examples in prompt", "classes", "train/test"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn make_optimizer(ctx: &DatasetContext) -> Result<CascadeOptimizer<'_>> {
+    CascadeOptimizer::new(
+        &ctx.table.train,
+        &ctx.costs,
+        ctx.train_tokens.clone(),
+        OptimizerOptions::default(),
+    )
+}
+
+/// Paper Table 3: cost savings to match the best individual LLM.
+///
+/// Two reference points per dataset: the best individual API in *our*
+/// marketplace instance (the paper's definition), and GPT-4 (the paper's
+/// actual reference on HEADLINES/OVERRULING). In our instance a cheap API
+/// sometimes *is* the best individual — the paper itself observes that
+/// "more expensive LLM APIs sometimes result in worse performance" — so
+/// both rows are reported. Matching is at 100% and at 99.5% relative
+/// accuracy (the tolerance row shows how sharply cost falls just below
+/// exact parity).
+fn table3(art: &Artifacts) -> Result<()> {
+    println!("== Table 3: cost savings by FrugalGPT to match reference APIs ==");
+    let mut rows = Vec::new();
+    for ds in DATASETS {
+        let ctx = art.context(ds)?;
+        let opt = make_optimizer(&ctx)?;
+        let frontier = opt.frontier();
+        let ind = individual_points(&ctx.table.test, &ctx.costs, &ctx.test_tokens);
+        let best = best_individual(&ind);
+        let gpt4 = ind.iter().find(|p| p.model == "gpt4").context("gpt4")?;
+
+        // Test-evaluate every frontier plan once.
+        let evals: Vec<(f64, f64, String)> = frontier
+            .iter()
+            .map(|p| {
+                let r = replay::replay(&p.plan, &ctx.table.test, &ctx.costs, &ctx.test_tokens);
+                (r.avg_cost * 1e4, r.accuracy, p.plan.describe(&ctx.costs.model_names))
+            })
+            .collect();
+        let cheapest_at = |target: f64| -> Option<&(f64, f64, String)> {
+            evals
+                .iter()
+                .filter(|(_, a, _)| *a + 1e-9 >= target)
+                .min_by(|x, y| x.0.partial_cmp(&y.0).unwrap())
+        };
+
+        let mut references = vec![(best.model.as_str(), best.accuracy, best.avg_cost * 1e4)];
+        if best.model != "gpt4" {
+            references.push(("gpt4", gpt4.accuracy, gpt4.avg_cost * 1e4));
+        }
+        for (reference, racc, rcost) in references {
+            for (tag, target) in [("", racc), ("-0.5%", racc * 0.995)] {
+                if tag == "-0.5%" && cheapest_at(racc).is_some() {
+                    continue; // exact match exists; skip the tolerance row
+                }
+                match cheapest_at(target) {
+                    Some((c10k, acc, plan)) => rows.push(vec![
+                        ds.to_uppercase(),
+                        format!("{reference}{tag}"),
+                        usd(rcost),
+                        usd(*c10k),
+                        pct(1.0 - c10k / rcost),
+                        format!("acc {:.3} vs {:.3} | {}", acc, racc, plan),
+                    ]),
+                    None => {
+                        if tag == "-0.5%" {
+                            let top = evals
+                                .iter()
+                                .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+                                .unwrap();
+                            rows.push(vec![
+                                ds.to_uppercase(),
+                                format!("{reference}{tag}"),
+                                usd(rcost),
+                                format!("unreached (top acc {:.3} at ${})", top.1, usd(top.0)),
+                                "-".into(),
+                                "-".into(),
+                            ]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    print!(
+        "{}",
+        render(
+            &["dataset", "reference", "ref $/10k", "FrugalGPT $/10k", "savings", "match detail"],
+            &rows
+        )
+    );
+    println!("(paper: 98.3% / 73.3% / 59.2% savings vs its best individual on its testbed)");
+    Ok(())
+}
+
+/// Paper Fig. 3: HEADLINES case study at budget = 1/5 of GPT-4's cost.
+fn fig3(art: &Artifacts, args: &Args) -> Result<()> {
+    let frac = args.get_f64("budget-frac").unwrap_or(0.2);
+    println!("== Fig. 3: case study on HEADLINES (budget = {frac} x GPT-4 cost) ==");
+    let ctx = art.context("headlines")?;
+    let ind = individual_points(&ctx.table.test, &ctx.costs, &ctx.test_tokens);
+    let gpt4 = ind.iter().find(|p| p.model == "gpt4").context("gpt4 missing")?;
+    let budget_10k = gpt4.avg_cost * 1e4 * frac;
+
+    let opt = make_optimizer(&ctx)?;
+    let plan = opt.optimize(budget_10k)?;
+    let r = replay::replay(&plan.plan, &ctx.table.test, &ctx.costs, &ctx.test_tokens);
+    println!("(a) learned cascade: {}", plan.plan.describe(&ctx.costs.model_names));
+    println!("    stage stop fractions: {:?}", round3(&r.stop_frac));
+    println!("(c) metric        GPT-4        FrugalGPT");
+    println!("    accuracy      {:<12} {}", pct(gpt4.accuracy), pct(r.accuracy));
+    println!(
+        "    cost $/10k    {:<12} {}   ({} saved)",
+        usd(gpt4.avg_cost * 1e4),
+        usd(r.avg_cost * 1e4),
+        pct(1.0 - r.avg_cost / gpt4.avg_cost)
+    );
+
+    // (b) example queries where the cascade corrects GPT-4.
+    let g4 = ctx.table.test.model_index("gpt4").context("gpt4 in table")?;
+    let mut shown = 0;
+    println!("(b) examples where GPT-4 errs but the cascade answers correctly:");
+    for i in 0..ctx.table.test.len() {
+        let o = replay::replay_item(&plan.plan, &ctx.table.test, &ctx.costs, &ctx.test_tokens, i);
+        if o.correct && !ctx.table.test.correct[g4][i] {
+            let stage = plan.plan.stages[o.stopped_at].model;
+            println!(
+                "    item {:>5}: label={} gpt4={} cascade={} (answered by {} at stage {}, tier {})",
+                i,
+                ctx.table.test.labels[i],
+                ctx.table.test.preds[g4][i],
+                o.answer,
+                ctx.costs.model_names[stage],
+                o.stopped_at,
+                ctx.test.tiers[i],
+            );
+            shown += 1;
+            if shown >= 5 {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Paper Fig. 4: MPI matrix per dataset.
+fn fig4(art: &Artifacts) -> Result<()> {
+    println!("== Fig. 4: maximum performance improvement (MPI) matrices ==");
+    println!("entry (row, col) = P[row wrong & col right], percent, test split");
+    for ds in DATASETS {
+        let ctx = art.context(ds)?;
+        let m = mpi_matrix(&ctx.table.test);
+        let names = &ctx.table.test.model_names;
+        println!("\n[{}]", ds.to_uppercase());
+        let mut rows = Vec::new();
+        for (r, name) in names.iter().enumerate() {
+            let mut row = vec![name.clone()];
+            for c in 0..names.len() {
+                row.push(if r == c { "-".into() } else { format!("{:.1}", m[r][c] * 100.0) });
+            }
+            rows.push(row);
+        }
+        let mut headers: Vec<&str> = vec!["wrong \\ right"];
+        headers.extend(names.iter().map(|s| s.as_str()));
+        print!("{}", render(&headers, &rows));
+        if let Some(g4) = ctx.table.test.model_index("gpt4") {
+            let best = m[g4]
+                .iter()
+                .enumerate()
+                .filter(|(c, _)| *c != g4)
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            println!(
+                "best improver of gpt4: {} ({:.1}% of queries)",
+                names[best.0],
+                best.1 * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Paper Fig. 5 (and Fig. 1c): accuracy–cost trade-offs.
+fn fig5(art: &Artifacts) -> Result<()> {
+    println!("== Fig. 5: accuracy–cost trade-offs (test split) ==");
+    for ds in DATASETS {
+        let ctx = art.context(ds)?;
+        let opt = make_optimizer(&ctx)?;
+        let frontier: Vec<FrontierPoint> = opt.frontier();
+        let ind = individual_points(&ctx.table.test, &ctx.costs, &ctx.test_tokens);
+        println!("\n[{}] individual APIs:", ds.to_uppercase());
+        let mut ind_sorted = ind.clone();
+        ind_sorted.sort_by(|a, b| a.avg_cost.partial_cmp(&b.avg_cost).unwrap());
+        let rows: Vec<Vec<String>> = ind_sorted
+            .iter()
+            .map(|p| vec![p.model.clone(), usd(p.avg_cost * 1e4), pct(p.accuracy)])
+            .collect();
+        print!("{}", render(&["api", "$/10k", "test acc"], &rows));
+
+        // FrugalGPT frontier, evaluated on test at log-spaced budgets.
+        println!("FrugalGPT frontier (train-optimized, test-evaluated):");
+        let min_c = frontier.first().map(|p| p.avg_cost).unwrap_or(1e-6);
+        let max_c = frontier.last().map(|p| p.avg_cost).unwrap_or(1e-2);
+        let mut frows: Vec<Vec<String>> = Vec::new();
+        let mut best_test_acc: f64 = 0.0;
+        let steps = 12;
+        for s in 0..=steps {
+            let b = min_c * (max_c / min_c).powf(s as f64 / steps as f64) * 1e4;
+            let pt = frontier.iter().filter(|p| p.avg_cost * 1e4 <= b + 1e-12).last();
+            if let Some(p) = pt {
+                let r = replay::replay(&p.plan, &ctx.table.test, &ctx.costs, &ctx.test_tokens);
+                best_test_acc = best_test_acc.max(r.accuracy);
+                let row = vec![
+                    usd(b),
+                    usd(r.avg_cost * 1e4),
+                    pct(r.accuracy),
+                    p.plan.describe(&ctx.costs.model_names),
+                ];
+                if frows.last().map(|l: &Vec<String>| l[3] != row[3]).unwrap_or(true) {
+                    frows.push(row);
+                }
+            }
+        }
+        print!("{}", render(&["budget $/10k", "spent $/10k", "test acc", "cascade"], &frows));
+        let best = best_individual(&ind);
+        println!(
+            "frontier {} the best individual API ({} at {})",
+            if best_test_acc > best.accuracy { "beats" } else { "matches" },
+            best.model,
+            pct(best.accuracy)
+        );
+    }
+    Ok(())
+}
+
+/// §3 strategies ablation (cache, prompt adaptation, query concatenation).
+fn strategies(art: &Artifacts) -> Result<()> {
+    println!("== §3 strategies ablation (HEADLINES, offline cost model) ==");
+    let ctx = art.context("headlines")?;
+    let opt = make_optimizer(&ctx)?;
+    let frontier = opt.frontier();
+    let base = frontier.last().context("empty frontier")?;
+    let base_r = replay::replay(&base.plan, &ctx.table.test, &ctx.costs, &ctx.test_tokens);
+    println!("base cascade: {}", base.plan.describe(&ctx.costs.model_names));
+
+    let mut rows = vec![vec![
+        "cascade only".to_string(),
+        usd(base_r.avg_cost * 1e4),
+        pct(base_r.accuracy),
+        "-".into(),
+    ]];
+
+    // Prompt adaptation: cost side from the offline table; the accuracy
+    // side needs live models (strategies_demo measures it).
+    for keep in [4usize, 2, 0] {
+        let policy = PromptPolicy::Fixed(keep);
+        let toks: Vec<u32> = (0..ctx.test.len())
+            .map(|i| policy.input_tokens(ctx.test.tokens(i), &ctx.meta))
+            .collect();
+        let r = replay::replay(&base.plan, &ctx.table.test, &ctx.costs, &toks);
+        rows.push(vec![
+            format!("+ prompt selection (keep {keep}/{})", ctx.meta.n_examples),
+            usd(r.avg_cost * 1e4),
+            "(live: strategies_demo)".into(),
+            pct(1.0 - r.avg_cost / base_r.avg_cost),
+        ]);
+    }
+
+    // Query concatenation: share the prompt across g queries.
+    let (ptoks, qtoks) = concat::split_tokens(&ctx.meta);
+    for g in [2usize, 4, 8] {
+        let eff: Vec<u32> = ctx
+            .test_tokens
+            .iter()
+            .map(|_| concat::tokens_per_query(ptoks, qtoks, g).ceil() as u32)
+            .collect();
+        let r = replay::replay(&base.plan, &ctx.table.test, &ctx.costs, &eff);
+        rows.push(vec![
+            format!("+ query concatenation (g={g})"),
+            usd(r.avg_cost * 1e4),
+            pct(base_r.accuracy),
+            pct(1.0 - r.avg_cost / base_r.avg_cost),
+        ]);
+    }
+
+    print!(
+        "{}",
+        render(&["configuration", "$/10k", "test acc", "cost saved"], &rows)
+    );
+    println!("(cache savings depend on the query stream; see strategies_demo + cache bench)");
+    Ok(())
+}
+
+fn round3(xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|x| (x * 1000.0).round() / 1000.0).collect()
+}

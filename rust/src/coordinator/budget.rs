@@ -1,0 +1,120 @@
+//! Serving-time budget tracking.
+//!
+//! The optimizer enforces the budget *in expectation* at training time; at
+//! serving time the coordinator meters actual spend so operators can watch
+//! it and (optionally) hard-stop or degrade when a cap is reached — the
+//! "budget-aware LLM API usage" problem statement of paper §2.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free accumulating budget tracker (f64 spend stored as bits).
+#[derive(Debug)]
+pub struct BudgetTracker {
+    /// Total spend in nano-dollars (u64 keeps addition atomic & exact
+    /// enough: 1 nUSD granularity, 18.4B USD range).
+    spent_nano_usd: AtomicU64,
+    queries: AtomicU64,
+    /// Optional hard cap (nano-USD); 0 = unlimited.
+    cap_nano_usd: u64,
+}
+
+/// Decision returned by [`BudgetTracker::admit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Spend is within budget.
+    Ok,
+    /// The cap is exhausted; the caller should degrade (e.g. cheapest
+    /// model only) or reject.
+    CapReached,
+}
+
+impl BudgetTracker {
+    pub fn new(cap_usd: Option<f64>) -> Self {
+        BudgetTracker {
+            spent_nano_usd: AtomicU64::new(0),
+            queries: AtomicU64::new(0),
+            cap_nano_usd: cap_usd.map(|c| (c * 1e9) as u64).unwrap_or(0),
+        }
+    }
+
+    /// Record the cost of one answered query.
+    pub fn record(&self, cost_usd: f64) {
+        let nano = (cost_usd * 1e9).round().max(0.0) as u64;
+        self.spent_nano_usd.fetch_add(nano, Ordering::Relaxed);
+        self.queries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Check whether new work should be admitted at full quality.
+    pub fn admit(&self) -> Admission {
+        if self.cap_nano_usd == 0
+            || self.spent_nano_usd.load(Ordering::Relaxed) < self.cap_nano_usd
+        {
+            Admission::Ok
+        } else {
+            Admission::CapReached
+        }
+    }
+
+    pub fn spent_usd(&self) -> f64 {
+        self.spent_nano_usd.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn queries(&self) -> u64 {
+        self.queries.load(Ordering::Relaxed)
+    }
+
+    pub fn avg_cost_usd(&self) -> f64 {
+        let q = self.queries();
+        if q == 0 {
+            0.0
+        } else {
+            self.spent_usd() / q as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_averages() {
+        let b = BudgetTracker::new(None);
+        b.record(0.001);
+        b.record(0.003);
+        assert_eq!(b.queries(), 2);
+        assert!((b.spent_usd() - 0.004).abs() < 1e-9);
+        assert!((b.avg_cost_usd() - 0.002).abs() < 1e-9);
+        assert_eq!(b.admit(), Admission::Ok);
+    }
+
+    #[test]
+    fn cap_trips() {
+        let b = BudgetTracker::new(Some(0.005));
+        assert_eq!(b.admit(), Admission::Ok);
+        b.record(0.004);
+        assert_eq!(b.admit(), Admission::Ok);
+        b.record(0.002);
+        assert_eq!(b.admit(), Admission::CapReached);
+    }
+
+    #[test]
+    fn concurrent_records_are_exact() {
+        use std::sync::Arc;
+        let b = Arc::new(BudgetTracker::new(None));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    b.record(0.000001);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(b.queries(), 8000);
+        assert!((b.spent_usd() - 0.008).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,373 @@
+//! The LLM cascade executor (paper §3, Strategy 3 / Fig. 2e).
+//!
+//! A cascade is an ordered list of APIs with per-stage acceptance
+//! thresholds. A query walks the list: each stage's answer is scored by the
+//! reliability function `g(q, a)`; if the score clears the stage threshold
+//! the answer is returned, otherwise the next (more expensive) API is
+//! invoked. The final stage always answers.
+//!
+//! Two execution modes share the same plan type:
+//! * [`replay`] — offline evaluation against a [`SplitTable`] (used by the
+//!   optimizer and all paper-figure reports; zero PJRT work), and
+//! * [`Cascade`] — live serving: every stage runs the real AOT-compiled
+//!   model + scorer through the PJRT engine, with metered cost.
+
+use anyhow::{bail, Context, Result};
+
+use super::responses::SplitTable;
+use super::scorer::Scorer;
+use crate::data::{prompt, DatasetMeta};
+use crate::marketplace::CostModel;
+use crate::runtime::EngineHandle;
+
+/// One stage of a cascade: an API index plus its acceptance threshold.
+/// The threshold of the last stage is ignored (it always answers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stage {
+    pub model: usize,
+    pub threshold: f32,
+}
+
+/// A learned cascade configuration `(L, τ)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CascadePlan {
+    pub stages: Vec<Stage>,
+}
+
+impl CascadePlan {
+    pub fn new(stages: Vec<Stage>) -> Self {
+        CascadePlan { stages }
+    }
+
+    pub fn single(model: usize) -> Self {
+        CascadePlan { stages: vec![Stage { model, threshold: 0.0 }] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Human-readable form, e.g. `gpt_j(τ=0.96) → j1_large(τ=0.37) → gpt4`.
+    pub fn describe(&self, names: &[String]) -> String {
+        let mut parts = Vec::new();
+        for (i, s) in self.stages.iter().enumerate() {
+            let name = names.get(s.model).map(|s| s.as_str()).unwrap_or("?");
+            if i + 1 == self.stages.len() {
+                parts.push(name.to_string());
+            } else {
+                parts.push(format!("{name}(τ={:.2})", s.threshold));
+            }
+        }
+        parts.join(" → ")
+    }
+}
+
+/// Offline evaluation of a plan over a response table.
+pub mod replay {
+    use super::*;
+
+    /// Outcome of replaying one item through the cascade.
+    #[derive(Debug, Clone, Copy)]
+    pub struct ItemOutcome {
+        pub answer: u32,
+        pub correct: bool,
+        /// Stage index that answered (0-based).
+        pub stopped_at: usize,
+        /// USD spent on this item (all invoked stages).
+        pub cost: f64,
+    }
+
+    /// Aggregate result of a replay.
+    #[derive(Debug, Clone)]
+    pub struct ReplaySummary {
+        pub accuracy: f64,
+        pub avg_cost: f64,
+        /// Fraction of queries answered at each stage.
+        pub stop_frac: Vec<f64>,
+        /// Fraction of queries for which each stage was *invoked*.
+        pub invoke_frac: Vec<f64>,
+    }
+
+    /// Replay item `i` of `table` through `plan`. `input_tokens[i]` is the
+    /// billable prompt size of item `i` (same for every model by layout).
+    pub fn replay_item(
+        plan: &CascadePlan,
+        table: &SplitTable,
+        costs: &CostModel,
+        input_tokens: &[u32],
+        i: usize,
+    ) -> ItemOutcome {
+        let mut cost = 0.0;
+        let last = plan.stages.len() - 1;
+        for (s, stage) in plan.stages.iter().enumerate() {
+            let m = stage.model;
+            let answer = table.preds[m][i];
+            cost += costs.call_cost(m, input_tokens[i], answer);
+            if s == last || table.scores[m][i] > stage.threshold {
+                return ItemOutcome {
+                    answer,
+                    correct: table.correct[m][i],
+                    stopped_at: s,
+                    cost,
+                };
+            }
+        }
+        unreachable!("cascade plans are non-empty");
+    }
+
+    /// Replay the whole table; the workhorse behind every offline report.
+    pub fn replay(
+        plan: &CascadePlan,
+        table: &SplitTable,
+        costs: &CostModel,
+        input_tokens: &[u32],
+    ) -> ReplaySummary {
+        assert!(!plan.is_empty(), "empty cascade plan");
+        assert_eq!(input_tokens.len(), table.len());
+        let n = table.len();
+        let mut n_correct = 0usize;
+        let mut total_cost = 0.0;
+        let mut stops = vec![0usize; plan.stages.len()];
+        for i in 0..n {
+            let o = replay_item(plan, table, costs, input_tokens, i);
+            n_correct += o.correct as usize;
+            total_cost += o.cost;
+            stops[o.stopped_at] += 1;
+        }
+        let mut invoked = vec![0usize; plan.stages.len()];
+        let mut carried = n;
+        for (s, &st) in stops.iter().enumerate() {
+            invoked[s] = carried;
+            carried -= st;
+        }
+        ReplaySummary {
+            accuracy: n_correct as f64 / n.max(1) as f64,
+            avg_cost: total_cost / n.max(1) as f64,
+            stop_frac: stops.iter().map(|&s| s as f64 / n.max(1) as f64).collect(),
+            invoke_frac: invoked.iter().map(|&s| s as f64 / n.max(1) as f64).collect(),
+        }
+    }
+}
+
+/// Result of answering one live query.
+#[derive(Debug, Clone)]
+pub struct CascadeAnswer {
+    pub answer: u32,
+    /// Stage that produced the accepted answer.
+    pub stopped_at: usize,
+    /// Reliability score of the accepted answer (1.0 if last stage).
+    pub score: f32,
+    /// Metered USD across all invoked stages.
+    pub cost: f64,
+    /// Billable input tokens of the query prompt.
+    pub input_tokens: u32,
+    /// Per-stage simulated API latency (ms), for serving reports.
+    pub simulated_latency_ms: f64,
+}
+
+/// Live cascade: executes the learned plan against real AOT artifacts.
+pub struct Cascade {
+    plan: CascadePlan,
+    engine: EngineHandle,
+    scorer: Scorer,
+    costs: CostModel,
+    meta: DatasetMeta,
+    dataset: String,
+}
+
+impl Cascade {
+    pub fn new(
+        plan: CascadePlan,
+        engine: EngineHandle,
+        scorer: Scorer,
+        costs: CostModel,
+        meta: DatasetMeta,
+    ) -> Result<Self> {
+        if plan.is_empty() {
+            bail!("cascade plan must have at least one stage");
+        }
+        for s in &plan.stages {
+            if s.model >= costs.n_models() {
+                bail!("stage model index {} out of range", s.model);
+            }
+        }
+        let dataset = meta.name.clone();
+        Ok(Cascade { plan, engine, scorer, costs, meta, dataset })
+    }
+
+    pub fn plan(&self) -> &CascadePlan {
+        &self.plan
+    }
+
+    pub fn meta(&self) -> &DatasetMeta {
+        &self.meta
+    }
+
+    pub fn engine_handle(&self) -> EngineHandle {
+        self.engine.clone()
+    }
+
+    pub fn costs(&self) -> &CostModel {
+        &self.costs
+    }
+
+    /// Answer one query (a full token row in the dataset layout).
+    ///
+    /// Every stage performs TWO PJRT executions: the stage's LLM artifact
+    /// (argmax over class logits = the "generation") and, unless it is the
+    /// final stage, the scorer artifact on `[query; answer]`.
+    pub fn answer(&self, tokens: &[i32]) -> Result<CascadeAnswer> {
+        let input_tokens = prompt::input_tokens(tokens);
+        let mut cost = 0.0;
+        let mut sim_lat = 0.0;
+        let last = self.plan.stages.len() - 1;
+        for (s, stage) in self.plan.stages.iter().enumerate() {
+            let name = &self.costs.model_names[stage.model];
+            let logits = self
+                .engine
+                .execute(&self.dataset, name, tokens.to_vec())
+                .with_context(|| format!("stage {s} ({name})"))?;
+            let answer = argmax(&logits) as u32;
+            cost += self.costs.call_cost(stage.model, input_tokens, answer);
+            let out_tokens = self.costs.answer_len(answer);
+            sim_lat += self.costs.latency[stage.model]
+                .latency_ms(input_tokens + out_tokens);
+            if s == last {
+                return Ok(CascadeAnswer {
+                    answer,
+                    stopped_at: s,
+                    score: 1.0,
+                    cost,
+                    input_tokens,
+                    simulated_latency_ms: sim_lat,
+                });
+            }
+            let score = self.scorer.score(tokens, answer)?;
+            if score > stage.threshold {
+                return Ok(CascadeAnswer {
+                    answer,
+                    stopped_at: s,
+                    score,
+                    cost,
+                    input_tokens,
+                    simulated_latency_ms: sim_lat,
+                });
+            }
+        }
+        unreachable!()
+    }
+}
+
+/// Index of the maximum logit (ties → first).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::responses::synthetic_table;
+
+    fn setup() -> (SplitTable, CostModel, Vec<u32>) {
+        let t = synthetic_table(12, 2000, 4, 0.9, 42);
+        let cm = CostModel::from_table1("synthetic", vec![1, 1, 2, 1]);
+        let toks = vec![125u32; t.len()];
+        (t, cm, toks)
+    }
+
+    #[test]
+    fn single_stage_replay_matches_model_accuracy() {
+        let (t, cm, toks) = setup();
+        for m in [0, 5, 11] {
+            let plan = CascadePlan::single(m);
+            let r = replay::replay(&plan, &t, &cm, &toks);
+            assert!((r.accuracy - t.accuracy(m)).abs() < 1e-12);
+            assert_eq!(r.stop_frac, vec![1.0]);
+        }
+    }
+
+    #[test]
+    fn threshold_zero_always_stops_at_first_stage_with_positive_scores() {
+        let (t, cm, toks) = setup();
+        let plan = CascadePlan::new(vec![
+            Stage { model: 0, threshold: 0.0 },
+            Stage { model: 11, threshold: 0.0 },
+        ]);
+        let r = replay::replay(&plan, &t, &cm, &toks);
+        // synthetic scores are in (0,1], so all stop at stage 0.
+        assert!(r.stop_frac[0] > 0.999);
+        assert!((r.accuracy - t.accuracy(0)).abs() < 0.01);
+    }
+
+    #[test]
+    fn threshold_one_always_escalates() {
+        let (t, cm, toks) = setup();
+        let plan = CascadePlan::new(vec![
+            Stage { model: 0, threshold: 1.1 },
+            Stage { model: 11, threshold: 0.0 },
+        ]);
+        let r = replay::replay(&plan, &t, &cm, &toks);
+        assert_eq!(r.stop_frac[0], 0.0);
+        assert!((r.accuracy - t.accuracy(11)).abs() < 1e-12);
+        // cost includes BOTH stages for every query.
+        let c0 = replay::replay(&CascadePlan::single(0), &t, &cm, &toks).avg_cost;
+        let c11 = replay::replay(&CascadePlan::single(11), &t, &cm, &toks).avg_cost;
+        assert!((r.avg_cost - (c0 + c11)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_is_monotone_in_threshold() {
+        let (t, cm, toks) = setup();
+        let mut prev = 0.0;
+        for th in [0.0f32, 0.3, 0.6, 0.9, 1.01] {
+            let plan = CascadePlan::new(vec![
+                Stage { model: 2, threshold: th },
+                Stage { model: 11, threshold: 0.0 },
+            ]);
+            let r = replay::replay(&plan, &t, &cm, &toks);
+            assert!(r.avg_cost >= prev - 1e-12, "cost must grow with τ");
+            prev = r.avg_cost;
+        }
+    }
+
+    #[test]
+    fn well_calibrated_cascade_beats_first_stage_accuracy() {
+        let (t, cm, toks) = setup();
+        // cheap weak model 0 gated at a high threshold, strong model 11 behind.
+        let plan = CascadePlan::new(vec![
+            Stage { model: 0, threshold: 0.75 },
+            Stage { model: 11, threshold: 0.0 },
+        ]);
+        let r = replay::replay(&plan, &t, &cm, &toks);
+        assert!(r.accuracy > t.accuracy(0) + 0.05);
+    }
+
+    #[test]
+    fn describe_is_readable() {
+        let plan = CascadePlan::new(vec![
+            Stage { model: 0, threshold: 0.96 },
+            Stage { model: 1, threshold: 0.37 },
+            Stage { model: 2, threshold: 0.0 },
+        ]);
+        let names: Vec<String> =
+            ["gpt_j", "j1_large", "gpt4"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(plan.describe(&names), "gpt_j(τ=0.96) → j1_large(τ=0.37) → gpt4");
+    }
+
+    #[test]
+    fn argmax_ties_and_order() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[2.0, 2.0]), 0);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

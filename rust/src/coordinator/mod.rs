@@ -1,0 +1,17 @@
+//! The paper's system contribution: the budget-aware LLM cascade.
+//!
+//! * [`responses`] — offline response tables (every API's answer + scorer
+//!   score for every train/test item), the substrate the optimizer works on.
+//! * [`optimizer`] — the joint search over API lists `L` and threshold
+//!   vectors `τ` under a budget constraint (paper §3, "LLM cascade").
+//! * [`cascade`] — the runtime executor: sequential API invocation with
+//!   reliability-score gating, both *offline* (replay from a table) and
+//!   *live* (PJRT model execution through [`crate::runtime`]).
+//! * [`scorer`] — the generation scoring function `g(q, a)`.
+//! * [`budget`] — serving-time spend tracking.
+
+pub mod budget;
+pub mod cascade;
+pub mod optimizer;
+pub mod responses;
+pub mod scorer;

@@ -1,0 +1,740 @@
+//! The cascade optimizer: joint search over API lists `L ∈ [K]^m` and
+//! threshold vectors `τ` under a budget constraint (paper §3).
+//!
+//! The paper formulates this as a mixed-integer program and solves it with
+//! a specialized optimizer that (i) *prunes* the list search space by
+//! ignoring lists whose members show small answer disagreement, and
+//! (ii) *approximates* the objective by interpolating it within a few
+//! samples. This module implements both ideas:
+//!
+//! * **Pruning** — a list survives only if every later stage disagrees
+//!   with the stage before it on ≥ `min_disagreement` of training queries
+//!   (no headroom → the longer list cannot beat its prefix), and only if
+//!   its non-final stages are not strictly dominated.
+//! * **Sampled objective** — the coarse sweep can run on a training
+//!   subsample (`coarse_subsample`); surviving candidates are re-scored on
+//!   the full table (the "interpolation within a few samples" analog).
+//! * **Threshold search** — thresholds are swept over *score quantiles*
+//!   with prefix-sum accumulators, so a full 1-D threshold sweep is O(N)
+//!   after one sort per model (done once, reused across all lists).
+//!
+//! The search yields the complete accuracy–cost *frontier* (paper Fig. 5)
+//! as a byproduct; `optimize(budget)` just picks the best frontier point
+//! within budget.
+
+use anyhow::{bail, Result};
+
+use super::cascade::{replay, CascadePlan, Stage};
+use super::responses::SplitTable;
+use crate::marketplace::CostModel;
+
+/// Tuning knobs for the search. Defaults reproduce the paper's setup
+/// (cascade length 3).
+#[derive(Debug, Clone)]
+pub struct OptimizerOptions {
+    /// Maximum cascade length m (paper uses 3).
+    pub max_len: usize,
+    /// Quantile grid size for the *first* stage threshold of a triple.
+    /// Second-stage thresholds always get a full O(N) sweep.
+    pub grid: usize,
+    /// Prune lists whose adjacent stages disagree on fewer than this
+    /// fraction of training queries.
+    pub min_disagreement: f64,
+    /// If set, run the coarse sweep on only this many training items and
+    /// re-score the surviving candidates on the full table.
+    pub coarse_subsample: Option<usize>,
+    /// Number of top candidates re-scored on the full table when
+    /// `coarse_subsample` is active.
+    pub rescore_top: usize,
+}
+
+impl Default for OptimizerOptions {
+    fn default() -> Self {
+        OptimizerOptions {
+            max_len: 3,
+            grid: 24,
+            min_disagreement: 0.02,
+            coarse_subsample: None,
+            rescore_top: 64,
+        }
+    }
+}
+
+/// One point of the accuracy–cost frontier.
+#[derive(Debug, Clone)]
+pub struct FrontierPoint {
+    pub plan: CascadePlan,
+    /// Training accuracy of the plan.
+    pub accuracy: f64,
+    /// Average training cost per query (USD).
+    pub avg_cost: f64,
+}
+
+/// The outcome of `optimize`: the chosen plan plus its train metrics.
+#[derive(Debug, Clone)]
+pub struct OptimizedPlan {
+    pub plan: CascadePlan,
+    pub train_accuracy: f64,
+    pub train_avg_cost: f64,
+    /// USD per 10k queries (the budget unit).
+    pub train_cost_per_10k: f64,
+}
+
+/// Precomputed per-item call costs and per-model score orderings.
+struct Workspace {
+    /// `cost[m][i]` — USD of calling model m on item i.
+    cost: Vec<Vec<f64>>,
+    /// `order[m]` — item indices sorted by model-m score, descending.
+    order: Vec<Vec<u32>>,
+    /// `quantiles[m]` — score thresholds at the option grid.
+    quantiles: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    fn build(table: &SplitTable, costs: &CostModel, input_tokens: &[u32], grid: usize) -> Self {
+        let n = table.len();
+        let k = table.n_models();
+        let mut cost = Vec::with_capacity(k);
+        let mut order = Vec::with_capacity(k);
+        let mut quantiles = Vec::with_capacity(k);
+        for m in 0..k {
+            let mut c = Vec::with_capacity(n);
+            for i in 0..n {
+                c.push(costs.call_cost(m, input_tokens[i], table.preds[m][i]));
+            }
+            cost.push(c);
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            idx.sort_by(|&a, &b| {
+                table.scores[m][b as usize]
+                    .partial_cmp(&table.scores[m][a as usize])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let mut qs = Vec::with_capacity(grid);
+            for g in 0..grid {
+                let pos = ((g + 1) * n) / (grid + 1);
+                let pos = pos.min(n.saturating_sub(1));
+                qs.push(table.scores[m][idx[pos] as usize]);
+            }
+            qs.dedup();
+            order.push(idx);
+            quantiles.push(qs);
+        }
+        Workspace { cost, order, quantiles }
+    }
+}
+
+/// The cascade optimizer. Borrows a training table + cost model and owns
+/// the precomputed workspace.
+pub struct CascadeOptimizer<'a> {
+    table: &'a SplitTable,
+    costs: &'a CostModel,
+    input_tokens: Vec<u32>,
+    pub options: OptimizerOptions,
+    ws: Workspace,
+    /// Memoized frontier — §Perf: `optimize()` used to recompute the full
+    /// sweep (~seconds at K=12, N=8000) on every budget query; the sweep
+    /// is a pure function of (table, costs, options), so cache it.
+    frontier_cache: std::sync::OnceLock<Vec<FrontierPoint>>,
+}
+
+impl<'a> CascadeOptimizer<'a> {
+    /// `input_tokens[i]`: billable prompt tokens of train item i. Use
+    /// [`uniform_tokens`] when all prompts have the same size.
+    pub fn new(
+        table: &'a SplitTable,
+        costs: &'a CostModel,
+        input_tokens: Vec<u32>,
+        options: OptimizerOptions,
+    ) -> Result<Self> {
+        if table.is_empty() {
+            bail!("empty training table");
+        }
+        if input_tokens.len() != table.len() {
+            bail!("input_tokens length mismatch");
+        }
+        if table.n_models() != costs.n_models() {
+            bail!(
+                "table has {} models but cost model has {}",
+                table.n_models(),
+                costs.n_models()
+            );
+        }
+        let ws = Workspace::build(table, costs, &input_tokens, options.grid);
+        Ok(CascadeOptimizer {
+            table,
+            costs,
+            input_tokens,
+            options,
+            ws,
+            frontier_cache: std::sync::OnceLock::new(),
+        })
+    }
+
+    /// Disagreement P[pred_a != pred_b] between two models.
+    pub fn disagreement(&self, a: usize, b: usize) -> f64 {
+        let n = self.table.len();
+        let mut d = 0usize;
+        for i in 0..n {
+            d += (self.table.preds[a][i] != self.table.preds[b][i]) as usize;
+        }
+        d as f64 / n.max(1) as f64
+    }
+
+    /// Mean cost of always calling model m (USD per query).
+    fn model_cost(&self, m: usize) -> f64 {
+        let n = self.table.len();
+        self.ws.cost[m].iter().sum::<f64>() / n.max(1) as f64
+    }
+
+    /// Enumerate candidate lists of length 1..=max_len with pruning.
+    fn candidate_lists(&self) -> Vec<Vec<usize>> {
+        let k = self.table.n_models();
+        let eps = self.options.min_disagreement;
+        let mut lists: Vec<Vec<usize>> = (0..k).map(|m| vec![m]).collect();
+        if self.options.max_len >= 2 {
+            for a in 0..k {
+                for b in 0..k {
+                    if a == b || self.disagreement(a, b) < eps {
+                        continue;
+                    }
+                    // A cheaper model behind a more expensive one can still
+                    // pay off only if the front stage is cheaper; prune
+                    // front stages that are both pricier and weaker.
+                    if self.model_cost(a) > self.model_cost(b)
+                        && self.table.accuracy(a) < self.table.accuracy(b)
+                    {
+                        continue;
+                    }
+                    lists.push(vec![a, b]);
+                }
+            }
+        }
+        if self.options.max_len >= 3 {
+            let pairs: Vec<(usize, usize)> = lists
+                .iter()
+                .filter(|l| l.len() == 2)
+                .map(|l| (l[0], l[1]))
+                .collect();
+            for &(a, b) in &pairs {
+                for c in 0..k {
+                    if c == a || c == b || self.disagreement(b, c) < eps {
+                        continue;
+                    }
+                    if self.model_cost(b) > self.model_cost(c)
+                        && self.table.accuracy(b) < self.table.accuracy(c)
+                    {
+                        continue;
+                    }
+                    lists.push(vec![a, b, c]);
+                }
+            }
+        }
+        lists
+    }
+
+    /// Sweep all thresholds of `list` and push non-dominated (cost, acc)
+    /// points to `out`. Exact for length ≤ 2 (full O(N) sweep); for
+    /// triples the first threshold runs on the quantile grid and the
+    /// second gets a full sweep conditioned on it.
+    fn sweep_list(&self, list: &[usize], out: &mut Vec<FrontierPoint>) {
+        let n = self.table.len();
+        match list.len() {
+            1 => {
+                let m = list[0];
+                out.push(FrontierPoint {
+                    plan: CascadePlan::single(m),
+                    accuracy: self.table.accuracy(m),
+                    avg_cost: self.model_cost(m),
+                });
+            }
+            2 => {
+                let (a, b) = (list[0], list[1]);
+                self.sweep_pair(a, b, None, n, out);
+            }
+            3 => {
+                let (a, b, c) = (list[0], list[1], list[2]);
+                // Grid over τ_a; for each, a full conditional sweep of τ_b.
+                for &tau_a in &self.ws.quantiles[a] {
+                    self.sweep_triple_fixed_first(a, tau_a, b, c, out);
+                }
+            }
+            _ => unreachable!("lists are length 1..=3"),
+        }
+    }
+
+    /// Exact sweep of a 2-stage cascade `[a(τ) → b]`, optionally restricted
+    /// to items where `mask[i]` (used by the triple sweep).
+    fn sweep_pair(
+        &self,
+        a: usize,
+        b: usize,
+        mask: Option<&[bool]>,
+        _n: usize,
+        out: &mut Vec<FrontierPoint>,
+    ) {
+        // Walk items in descending score_a order. Cutting after the j-th
+        // item means: top-j accepted at stage a, the rest escalate to b.
+        let order = &self.ws.order[a];
+        let scores = &self.table.scores[a];
+
+        let mut total_cost_a = 0.0;
+        let mut total_cost_b = 0.0;
+        let mut total_corr_b = 0usize;
+        let mut n_eff = 0usize;
+        for &iu in order.iter() {
+            let i = iu as usize;
+            if mask.map_or(false, |m| !m[i]) {
+                continue;
+            }
+            n_eff += 1;
+            total_cost_a += self.ws.cost[a][i];
+            total_cost_b += self.ws.cost[b][i];
+            total_corr_b += self.table.correct[b][i] as usize;
+        }
+        if n_eff == 0 {
+            return;
+        }
+
+        let mut acc_corr_a = 0usize; // correct among accepted (top-j)
+        let mut acc_corr_b = total_corr_b;
+        let mut esc_cost_b = total_cost_b;
+        let mut best_for_cut: Vec<FrontierPoint> = Vec::new();
+        let mut j = 0usize;
+        let mut prev_score = f32::INFINITY;
+        let inv_n = 1.0 / n_eff as f64;
+        for &iu in order.iter() {
+            let i = iu as usize;
+            if mask.map_or(false, |m| !m[i]) {
+                continue;
+            }
+            let s = scores[i];
+            // A valid threshold separates distinct score values; emit the
+            // point for the cut *before* item i when the score drops.
+            if s < prev_score {
+                let tau = prev_midpoint(prev_score, s);
+                let acc = (acc_corr_a + acc_corr_b) as f64 * inv_n;
+                let cost = (total_cost_a + esc_cost_b) * inv_n;
+                best_for_cut.push(FrontierPoint {
+                    plan: CascadePlan::new(vec![
+                        Stage { model: a, threshold: tau },
+                        Stage { model: b, threshold: 0.0 },
+                    ]),
+                    accuracy: acc,
+                    avg_cost: cost,
+                });
+            }
+            // accept item i at stage a:
+            acc_corr_a += self.table.correct[a][i] as usize;
+            acc_corr_b -= self.table.correct[b][i] as usize;
+            esc_cost_b -= self.ws.cost[b][i];
+            prev_score = s;
+            j += 1;
+        }
+        let _ = j;
+        // Cut after everything = stage a alone never escalates; τ below min.
+        best_for_cut.push(FrontierPoint {
+            plan: CascadePlan::new(vec![
+                Stage { model: a, threshold: -1.0 },
+                Stage { model: b, threshold: 0.0 },
+            ]),
+            accuracy: acc_corr_a as f64 * inv_n,
+            avg_cost: total_cost_a * inv_n,
+        });
+        out.extend(prune_pareto(best_for_cut));
+    }
+
+    /// Triple sweep with the first threshold fixed: items with
+    /// `score_a > tau_a` stop at `a`; the rest replay `[b(τ_b) → c]`.
+    fn sweep_triple_fixed_first(
+        &self,
+        a: usize,
+        tau_a: f32,
+        b: usize,
+        c: usize,
+        out: &mut Vec<FrontierPoint>,
+    ) {
+        let n = self.table.len();
+        // §Perf: hoist all row slices out of the hot loops — indexing
+        // `Vec<Vec<_>>[m][i]` repeatedly defeats bounds-check elimination
+        // and costs ~2x on this, the optimizer's dominant inner loop.
+        let scores_a = &self.table.scores[a][..n];
+        let scores_b = &self.table.scores[b][..n];
+        let corr_a = &self.table.correct[a][..n];
+        let corr_b = &self.table.correct[b][..n];
+        let corr_c = &self.table.correct[c][..n];
+        let cost_a = &self.ws.cost[a][..n];
+        let cost_b = &self.ws.cost[b][..n];
+        let cost_c = &self.ws.cost[c][..n];
+
+        let mut mask = vec![false; n]; // true = escalated past stage a
+        let mut acc_corr_a = 0usize;
+        let mut base_cost = 0.0; // everyone pays stage a
+        let mut n_esc = 0usize;
+        for i in 0..n {
+            base_cost += cost_a[i];
+            if scores_a[i] > tau_a {
+                acc_corr_a += corr_a[i] as usize;
+            } else {
+                mask[i] = true;
+                n_esc += 1;
+            }
+        }
+        if n_esc == 0 {
+            return; // degenerates to the single [a]; covered elsewhere.
+        }
+
+        // Conditional sweep of τ_b over escalated items, in score_b order.
+        let order_b = &self.ws.order[b];
+        let mut esc_cost_b_total = 0.0;
+        let mut esc_corr_c = 0usize;
+        let mut esc_cost_c = 0.0;
+        for i in 0..n {
+            if mask[i] {
+                esc_cost_b_total += cost_b[i];
+                esc_corr_c += corr_c[i] as usize;
+                esc_cost_c += cost_c[i];
+            }
+        }
+        let inv_n = 1.0 / n as f64;
+        let mut corr_b_acc = 0usize;
+        let mut rem_corr_c = esc_corr_c;
+        let mut rem_cost_c = esc_cost_c;
+        let mut prev_score = f32::INFINITY;
+        let mut pts = Vec::new();
+        for &iu in order_b.iter() {
+            let i = iu as usize;
+            if !mask[i] {
+                continue;
+            }
+            let s = scores_b[i];
+            if s < prev_score {
+                let tau_b = prev_midpoint(prev_score, s);
+                let acc = (acc_corr_a + corr_b_acc + rem_corr_c) as f64 * inv_n;
+                let cost = (base_cost + esc_cost_b_total + rem_cost_c) * inv_n;
+                pts.push(FrontierPoint {
+                    plan: CascadePlan::new(vec![
+                        Stage { model: a, threshold: tau_a },
+                        Stage { model: b, threshold: tau_b },
+                        Stage { model: c, threshold: 0.0 },
+                    ]),
+                    accuracy: acc,
+                    avg_cost: cost,
+                });
+            }
+            corr_b_acc += corr_b[i] as usize;
+            rem_corr_c -= corr_c[i] as usize;
+            rem_cost_c -= cost_c[i];
+            prev_score = s;
+        }
+        // τ_b below min: b answers every escalated item.
+        pts.push(FrontierPoint {
+            plan: CascadePlan::new(vec![
+                Stage { model: a, threshold: tau_a },
+                Stage { model: b, threshold: -1.0 },
+                Stage { model: c, threshold: 0.0 },
+            ]),
+            accuracy: (acc_corr_a + corr_b_acc) as f64 * inv_n,
+            avg_cost: (base_cost + esc_cost_b_total) * inv_n,
+        });
+        out.extend(prune_pareto(pts));
+    }
+
+    /// Compute the global accuracy–cost frontier over all candidate plans.
+    ///
+    /// With `options.coarse_subsample = Some(n)` the sweep runs on the
+    /// first `n` training items only (the paper's "approximate the
+    /// objective by interpolating it within a few samples"), and the
+    /// surviving `rescore_top` candidates are re-evaluated exactly on the
+    /// full table before the final Pareto prune.
+    pub fn frontier(&self) -> Vec<FrontierPoint> {
+        self.frontier_cache.get_or_init(|| self.compute_frontier()).clone()
+    }
+
+    fn compute_frontier(&self) -> Vec<FrontierPoint> {
+        match self.options.coarse_subsample {
+            Some(n) if n < self.table.len() => {
+                let sub = self.table.head(n);
+                let sub_tokens = self.input_tokens[..n].to_vec();
+                let sub_opt = CascadeOptimizer::new(
+                    &sub,
+                    self.costs,
+                    sub_tokens,
+                    OptimizerOptions {
+                        coarse_subsample: None,
+                        ..self.options.clone()
+                    },
+                )
+                .expect("subsample optimizer");
+                let mut coarse = Vec::new();
+                for list in sub_opt.candidate_lists() {
+                    sub_opt.sweep_list(&list, &mut coarse);
+                }
+                let coarse = prune_pareto(coarse);
+                // Re-score the best candidates exactly on the full table.
+                let take = self.options.rescore_top.max(1);
+                let start = coarse.len().saturating_sub(take);
+                let rescored = coarse[start..]
+                    .iter()
+                    .map(|p| {
+                        let r = replay::replay(
+                            &p.plan,
+                            self.table,
+                            self.costs,
+                            &self.input_tokens,
+                        );
+                        FrontierPoint {
+                            plan: p.plan.clone(),
+                            accuracy: r.accuracy,
+                            avg_cost: r.avg_cost,
+                        }
+                    })
+                    .collect();
+                prune_pareto(rescored)
+            }
+            _ => {
+                let mut pts = Vec::new();
+                for list in self.candidate_lists() {
+                    self.sweep_list(&list, &mut pts);
+                }
+                prune_pareto(pts)
+            }
+        }
+    }
+
+    /// Best plan whose average train cost ≤ `budget_usd_per_10k / 10_000`.
+    pub fn optimize(&self, budget_usd_per_10k: f64) -> Result<OptimizedPlan> {
+        let per_query = budget_usd_per_10k / 10_000.0;
+        let frontier = self.frontier();
+        let best = frontier
+            .iter()
+            .filter(|p| p.avg_cost <= per_query + 1e-15)
+            .max_by(|x, y| {
+                x.accuracy
+                    .partial_cmp(&y.accuracy)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(y.avg_cost.partial_cmp(&x.avg_cost).unwrap_or(std::cmp::Ordering::Equal))
+            });
+        match best {
+            Some(p) => Ok(OptimizedPlan {
+                plan: p.plan.clone(),
+                train_accuracy: p.accuracy,
+                train_avg_cost: p.avg_cost,
+                train_cost_per_10k: p.avg_cost * 10_000.0,
+            }),
+            None => bail!(
+                "no cascade fits budget ${budget_usd_per_10k:.4} per 10k queries \
+                 (cheapest frontier point: ${:.4})",
+                frontier
+                    .first()
+                    .map(|p| p.avg_cost * 10_000.0)
+                    .unwrap_or(f64::NAN)
+            ),
+        }
+    }
+
+    /// Replay a plan on an arbitrary split with this optimizer's cost model
+    /// (convenience for reports: train-optimize → test-evaluate).
+    pub fn replay_on(
+        &self,
+        plan: &CascadePlan,
+        table: &SplitTable,
+        input_tokens: &[u32],
+    ) -> replay::ReplaySummary {
+        replay::replay(plan, table, self.costs, input_tokens)
+    }
+}
+
+/// `input_tokens` helper when every item has the same billable size.
+pub fn uniform_tokens(n: usize, tokens: u32) -> Vec<u32> {
+    vec![tokens; n]
+}
+
+/// Midpoint threshold strictly between two adjacent scores.
+fn prev_midpoint(hi: f32, lo: f32) -> f32 {
+    if hi.is_infinite() {
+        // Above the max score: stage never accepts.
+        lo + 1.0
+    } else {
+        (hi + lo) * 0.5
+    }
+}
+
+/// Keep only Pareto-optimal points (no other point has ≤ cost and ≥ acc),
+/// sorted by ascending cost.
+pub fn prune_pareto(mut pts: Vec<FrontierPoint>) -> Vec<FrontierPoint> {
+    pts.sort_by(|a, b| {
+        a.avg_cost
+            .partial_cmp(&b.avg_cost)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(b.accuracy.partial_cmp(&a.accuracy).unwrap_or(std::cmp::Ordering::Equal))
+    });
+    let mut out: Vec<FrontierPoint> = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for p in pts {
+        if p.accuracy > best_acc + 1e-12 {
+            best_acc = p.accuracy;
+            out.push(p);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::responses::synthetic_table;
+
+    fn setup() -> (SplitTable, CostModel) {
+        // 8 models / 600 items keeps the exhaustive sweep fast in debug
+        // builds; the full 12-model search is exercised by the release-mode
+        // integration tests and benches.
+        let t = synthetic_table(8, 600, 4, 0.9, 7);
+        let full = CostModel::from_table1("synthetic", vec![1, 1, 2, 1]);
+        let cm = CostModel {
+            dataset: full.dataset.clone(),
+            model_names: t.model_names.clone(),
+            pricing: full.pricing[..8].to_vec(),
+            latency: full.latency[..8].to_vec(),
+            answer_lens: full.answer_lens.clone(),
+        };
+        (t, cm)
+    }
+
+    fn optimizer<'a>(t: &'a SplitTable, cm: &'a CostModel) -> CascadeOptimizer<'a> {
+        let toks = uniform_tokens(t.len(), 125);
+        CascadeOptimizer::new(t, cm, toks, OptimizerOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn frontier_is_sorted_and_pareto() {
+        let (t, cm) = setup();
+        let opt = optimizer(&t, &cm);
+        let f = opt.frontier();
+        assert!(f.len() > 3, "frontier should have multiple points");
+        for w in f.windows(2) {
+            assert!(w[0].avg_cost <= w[1].avg_cost);
+            assert!(w[0].accuracy < w[1].accuracy);
+        }
+    }
+
+    #[test]
+    fn optimize_respects_budget() {
+        let (t, cm) = setup();
+        let opt = optimizer(&t, &cm);
+        let f = opt.frontier();
+        let mid_budget = f[f.len() / 2].avg_cost * 10_000.0;
+        let plan = opt.optimize(mid_budget).unwrap();
+        assert!(plan.train_cost_per_10k <= mid_budget + 1e-9);
+        // Verify by replay: the plan's reported train metrics are real.
+        let toks = uniform_tokens(t.len(), 125);
+        let r = replay::replay(&plan.plan, &t, &cm, &toks);
+        assert!((r.accuracy - plan.train_accuracy).abs() < 1e-9);
+        assert!((r.avg_cost - plan.train_avg_cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bigger_budget_never_hurts() {
+        let (t, cm) = setup();
+        let opt = optimizer(&t, &cm);
+        let f = opt.frontier();
+        let mut prev = 0.0;
+        for mult in [0.25, 0.5, 1.0, 2.0] {
+            let b = f.last().unwrap().avg_cost * 10_000.0 * mult;
+            if let Ok(p) = opt.optimize(b) {
+                assert!(p.train_accuracy >= prev - 1e-12);
+                prev = p.train_accuracy;
+            }
+        }
+    }
+
+    #[test]
+    fn cascade_beats_best_individual_with_calibrated_scorer() {
+        let (t, cm) = setup();
+        let opt = optimizer(&t, &cm);
+        let f = opt.frontier();
+        let best_single = (0..t.n_models())
+            .map(|m| t.accuracy(m))
+            .fold(f64::MIN, f64::max);
+        let best = f.last().unwrap();
+        // With a well-calibrated synthetic scorer the cascade should match
+        // or beat the best individual API on the train split.
+        assert!(
+            best.accuracy >= best_single - 1e-9,
+            "frontier top {} vs best single {}",
+            best.accuracy,
+            best_single
+        );
+    }
+
+    #[test]
+    fn cheap_budget_selects_cheap_models() {
+        let (t, cm) = setup();
+        let opt = optimizer(&t, &cm);
+        let f = opt.frontier();
+        let cheapest = &f[0];
+        let plan = opt.optimize(cheapest.avg_cost * 10_000.0 * 1.01).unwrap();
+        // the selected plan must cost no more than the cheapest+1%.
+        assert!(plan.train_avg_cost <= cheapest.avg_cost * 1.011);
+    }
+
+    #[test]
+    fn impossible_budget_errors() {
+        let (t, cm) = setup();
+        let opt = optimizer(&t, &cm);
+        assert!(opt.optimize(0.0).is_err());
+    }
+
+    #[test]
+    fn disagreement_pruning_symmetric_sanity() {
+        let (t, cm) = setup();
+        let opt = optimizer(&t, &cm);
+        let d = opt.disagreement(0, 7);
+        assert!(d > 0.05, "weak vs strong models should disagree, d={d}");
+        assert_eq!(opt.disagreement(3, 3), 0.0);
+    }
+
+    #[test]
+    fn coarse_subsample_approximates_full_search() {
+        let (t, cm) = setup();
+        let toks = uniform_tokens(t.len(), 125);
+        let full = CascadeOptimizer::new(&t, &cm, toks.clone(), OptimizerOptions::default())
+            .unwrap()
+            .frontier();
+        let coarse = CascadeOptimizer::new(
+            &t,
+            &cm,
+            toks,
+            OptimizerOptions {
+                coarse_subsample: Some(200),
+                rescore_top: 48,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .frontier();
+        assert!(!coarse.is_empty());
+        // The coarse frontier's best accuracy should be close to exact.
+        let fa = full.last().unwrap().accuracy;
+        let ca = coarse.last().unwrap().accuracy;
+        assert!(ca > fa - 0.05, "coarse {ca} vs full {fa}");
+        // And every coarse point's metrics are exact (re-scored) values.
+        for p in &coarse {
+            assert!((0.0..=1.0).contains(&p.accuracy));
+        }
+    }
+
+    #[test]
+    fn pareto_prune_removes_dominated() {
+        let mk = |c: f64, a: f64| FrontierPoint {
+            plan: CascadePlan::single(0),
+            accuracy: a,
+            avg_cost: c,
+        };
+        let pts = vec![mk(1.0, 0.5), mk(2.0, 0.4), mk(3.0, 0.9), mk(0.5, 0.45)];
+        let f = prune_pareto(pts);
+        assert_eq!(f.len(), 3);
+        assert_eq!(f[0].avg_cost, 0.5);
+        assert_eq!(f[1].avg_cost, 1.0);
+        assert_eq!(f[2].avg_cost, 3.0);
+    }
+}

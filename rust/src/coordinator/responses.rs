@@ -1,0 +1,285 @@
+//! Offline response tables.
+//!
+//! `make artifacts` computes, for every dataset item and every simulated
+//! API, the API's answer and the reliability scorer's score, and writes
+//! them to `artifacts/responses/<dataset>.json`. The cascade optimizer is
+//! a pure function of this table plus the cost model — exactly the paper's
+//! setting, where the cascade is trained once on labelled examples.
+//!
+//! The Rust runtime independently re-verifies a sample of the table by
+//! executing the AOT artifacts through PJRT (see `rust/tests/`), proving
+//! the HLO artifacts and the python training path agree.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Responses of all APIs on one split, in model-major dense arrays.
+#[derive(Debug, Clone)]
+pub struct SplitTable {
+    pub dataset: String,
+    pub model_names: Vec<String>,
+    pub labels: Vec<u32>,
+    /// `preds[m][i]`: model m's answer class on item i.
+    pub preds: Vec<Vec<u32>>,
+    /// `scores[m][i]`: scorer reliability of (query i, model m's answer).
+    pub scores: Vec<Vec<f32>>,
+    /// `correct[m][i]`.
+    pub correct: Vec<Vec<bool>>,
+}
+
+impl SplitTable {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.model_names.len()
+    }
+
+    pub fn model_index(&self, name: &str) -> Option<usize> {
+        self.model_names.iter().position(|n| n == name)
+    }
+
+    /// Accuracy of a single model.
+    pub fn accuracy(&self, m: usize) -> f64 {
+        let n = self.len().max(1);
+        self.correct[m].iter().filter(|&&c| c).count() as f64 / n as f64
+    }
+
+    /// Restrict the table to the first `n` items (coarse optimizer pass).
+    pub fn head(&self, n: usize) -> SplitTable {
+        let n = n.min(self.len());
+        SplitTable {
+            dataset: self.dataset.clone(),
+            model_names: self.model_names.clone(),
+            labels: self.labels[..n].to_vec(),
+            preds: self.preds.iter().map(|v| v[..n].to_vec()).collect(),
+            scores: self.scores.iter().map(|v| v[..n].to_vec()).collect(),
+            correct: self.correct.iter().map(|v| v[..n].to_vec()).collect(),
+        }
+    }
+
+    fn from_value(dataset: &str, names: &[String], raw: &Value) -> Result<Self> {
+        let labels: Vec<u32> = raw
+            .get("labels")
+            .as_arr()
+            .context("labels not an array")?
+            .iter()
+            .map(|x| x.as_u32().unwrap_or(0))
+            .collect();
+        let n = labels.len();
+        let models = raw.get("models");
+        let mut preds = Vec::new();
+        let mut scores = Vec::new();
+        let mut correct = Vec::new();
+        for name in names {
+            let m = models.get(name);
+            if m.as_obj().is_none() {
+                bail!("model {name} missing from split");
+            }
+            let pred: Vec<u32> = m
+                .get("pred")
+                .as_arr()
+                .context("pred not array")?
+                .iter()
+                .map(|x| x.as_u32().unwrap_or(0))
+                .collect();
+            let score: Vec<f32> = m
+                .get("score")
+                .as_arr()
+                .context("score not array")?
+                .iter()
+                .map(|x| x.as_f64().unwrap_or(0.0) as f32)
+                .collect();
+            let corr: Vec<bool> = m
+                .get("correct")
+                .as_arr()
+                .context("correct not array")?
+                .iter()
+                .map(|x| x.as_f64().unwrap_or(0.0) != 0.0)
+                .collect();
+            if pred.len() != n || score.len() != n || corr.len() != n {
+                bail!("model {name}: ragged response arrays");
+            }
+            preds.push(pred);
+            scores.push(score);
+            correct.push(corr);
+        }
+        Ok(SplitTable {
+            dataset: dataset.to_string(),
+            model_names: names.to_vec(),
+            labels,
+            preds,
+            scores,
+            correct,
+        })
+    }
+}
+
+/// Train + test response tables for one dataset.
+#[derive(Debug, Clone)]
+pub struct ResponseTable {
+    pub dataset: String,
+    pub train: SplitTable,
+    pub test: SplitTable,
+}
+
+impl ResponseTable {
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let raw = std::fs::read_to_string(path)
+            .with_context(|| format!("reading response table {}", path.display()))?;
+        Self::from_json(&raw)
+    }
+
+    pub fn from_json(raw: &str) -> Result<Self> {
+        let v = Value::parse(raw).map_err(|e| anyhow!("{e}"))?;
+        let dataset = v
+            .get("dataset")
+            .as_str()
+            .context("missing dataset name")?
+            .to_string();
+        let names: Vec<String> = v
+            .get("models")
+            .as_arr()
+            .context("models not an array")?
+            .iter()
+            .map(|x| x.as_str().unwrap_or("").to_string())
+            .collect();
+        let splits = v.get("splits");
+        let train = splits.get("train");
+        let test = splits.get("test");
+        if train.as_obj().is_none() || test.as_obj().is_none() {
+            bail!("missing train/test split");
+        }
+        Ok(ResponseTable {
+            dataset: dataset.clone(),
+            train: SplitTable::from_value(&dataset, &names, train)?,
+            test: SplitTable::from_value(&dataset, &names, test)?,
+        })
+    }
+}
+
+/// Deterministic synthetic table for unit tests and benches (no artifacts
+/// needed): `n_models` APIs with accuracy spread and a scorer whose score
+/// correlates with correctness at strength `calibration`.
+pub fn synthetic_table(
+    n_models: usize,
+    n_items: usize,
+    n_classes: u32,
+    calibration: f64,
+    seed: u64,
+) -> SplitTable {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let labels: Vec<u32> =
+        (0..n_items).map(|_| rng.below(n_classes as u64) as u32).collect();
+    let mut preds = Vec::new();
+    let mut scores = Vec::new();
+    let mut correct = Vec::new();
+    for m in 0..n_models {
+        let acc = 0.5 + 0.45 * (m as f64 / (n_models.max(2) - 1) as f64);
+        let mut p = Vec::with_capacity(n_items);
+        let mut s = Vec::with_capacity(n_items);
+        let mut c = Vec::with_capacity(n_items);
+        for i in 0..n_items {
+            let ok = rng.bool(acc);
+            let pred = if ok {
+                labels[i]
+            } else {
+                (labels[i] + 1 + rng.below(n_classes.max(2) as u64 - 1) as u32)
+                    % n_classes
+            };
+            let base: f64 = rng.f64();
+            let score = if ok {
+                calibration * (0.5 + 0.5 * base) + (1.0 - calibration) * base
+            } else {
+                calibration * 0.5 * base + (1.0 - calibration) * base
+            };
+            p.push(pred);
+            s.push(score as f32);
+            c.push(ok);
+        }
+        preds.push(p);
+        scores.push(s);
+        correct.push(c);
+    }
+    SplitTable {
+        dataset: "synthetic".into(),
+        model_names: (0..n_models).map(|m| format!("api_{m}")).collect(),
+        labels,
+        preds,
+        scores,
+        correct,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let json = r#"{
+            "dataset": "toy", "models": ["a", "b"],
+            "splits": {
+                "train": {"labels": [0,1], "models": {
+                    "a": {"pred": [0,0], "score": [0.9,0.2], "correct": [1,0]},
+                    "b": {"pred": [0,1], "score": [0.8,0.7], "correct": [1,1]}}},
+                "test": {"labels": [1], "models": {
+                    "a": {"pred": [1], "score": [0.5], "correct": [1]},
+                    "b": {"pred": [0], "score": [0.4], "correct": [0]}}}
+            }}"#;
+        let t = ResponseTable::from_json(json).unwrap();
+        assert_eq!(t.train.len(), 2);
+        assert_eq!(t.test.len(), 1);
+        assert_eq!(t.train.accuracy(0), 0.5);
+        assert_eq!(t.train.accuracy(1), 1.0);
+        assert_eq!(t.test.model_index("b"), Some(1));
+    }
+
+    #[test]
+    fn synthetic_accuracy_is_monotone_in_model_index() {
+        let t = synthetic_table(6, 4000, 4, 0.9, 1);
+        for m in 1..6 {
+            assert!(
+                t.accuracy(m) > t.accuracy(m - 1) - 0.05,
+                "model {m} should be no worse than {}",
+                m - 1
+            );
+        }
+        assert!(t.accuracy(5) > t.accuracy(0) + 0.2);
+    }
+
+    #[test]
+    fn synthetic_scores_are_calibrated() {
+        let t = synthetic_table(3, 4000, 4, 0.9, 2);
+        for m in 0..3 {
+            let (mut sc, mut nc, mut si, mut ni) = (0.0, 0, 0.0, 0);
+            for i in 0..t.len() {
+                if t.correct[m][i] {
+                    sc += t.scores[m][i] as f64;
+                    nc += 1;
+                } else {
+                    si += t.scores[m][i] as f64;
+                    ni += 1;
+                }
+            }
+            assert!(sc / nc as f64 > si / ni.max(1) as f64 + 0.1);
+        }
+    }
+
+    #[test]
+    fn head_truncates_consistently() {
+        let t = synthetic_table(3, 100, 4, 0.9, 3);
+        let h = t.head(10);
+        assert_eq!(h.len(), 10);
+        assert_eq!(h.preds[2][9], t.preds[2][9]);
+        assert_eq!(h.n_models(), 3);
+    }
+}

@@ -1,0 +1,76 @@
+//! The generation scoring function `g(q, a) → [0, 1]` (paper §3).
+//!
+//! The paper trains a DistilBERT regression head; ours is the same idea at
+//! simulation scale: a small transformer regression model trained at build
+//! time on `(query, answer, correct?)` triples pooled over all 12 APIs'
+//! train-split answers, AOT-exported like every other model, and executed
+//! here through PJRT. The artifact outputs a raw logit; the sigmoid lives
+//! on this side (one less HLO variant to export).
+
+use anyhow::Result;
+
+use crate::data::{prompt, DatasetMeta};
+use crate::runtime::EngineHandle;
+
+/// Live reliability scorer bound to one dataset's artifact.
+pub struct Scorer {
+    engine: EngineHandle,
+    meta: DatasetMeta,
+}
+
+impl Scorer {
+    pub fn new(engine: EngineHandle, meta: DatasetMeta) -> Self {
+        Scorer { engine, meta }
+    }
+
+    pub fn meta(&self) -> &DatasetMeta {
+        &self.meta
+    }
+
+    /// Score one (query, answer) pair. `tokens` is the full item row; the
+    /// scorer sees only the query segment plus the answer token.
+    pub fn score(&self, tokens: &[i32], answer: u32) -> Result<f32> {
+        let input = prompt::scorer_input(tokens, &self.meta, answer);
+        let logits = self.engine.execute(&self.meta.name, "scorer", input)?;
+        Ok(sigmoid(logits[0]))
+    }
+
+    /// Score a batch of (query, answer) pairs in one PJRT execution.
+    pub fn score_batch(&self, items: &[(&[i32], u32)]) -> Result<Vec<f32>> {
+        let mut inputs = Vec::with_capacity(items.len());
+        for (tokens, answer) in items {
+            inputs.push(prompt::scorer_input(tokens, &self.meta, *answer));
+        }
+        let logits = self
+            .engine
+            .execute_batch(&self.meta.name, "scorer", inputs)?;
+        Ok(logits.iter().map(|row| sigmoid(row[0])).collect())
+    }
+}
+
+/// Numerically stable logistic function.
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sigmoid;
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(10.0) > 0.9999);
+        assert!(sigmoid(-10.0) < 0.0001);
+        // symmetric
+        assert!((sigmoid(1.3) + sigmoid(-1.3) - 1.0).abs() < 1e-6);
+        // extremes don't overflow
+        assert_eq!(sigmoid(1000.0), 1.0);
+        assert_eq!(sigmoid(-1000.0), 0.0);
+    }
+}

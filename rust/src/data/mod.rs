@@ -1,0 +1,537 @@
+//! Dataset + artifact loading and the fixed token layout.
+//!
+//! The Python build path (`python/compile/data.py`) writes datasets with a
+//! *fixed positional layout* so this side can slice prompt / query segments
+//! without a tokenizer:
+//!
+//! ```text
+//! [ example block ] * k   [CLS] query-body [QSEP] [PAD...]
+//! block = [SEP_EX] body(qlen) [LABEL_MARK] [label]
+//! ```
+//!
+//! The constants below mirror `data.py`'s token map exactly; an integration
+//! test cross-checks them against the manifest.
+
+pub mod layout {
+    pub const PAD: i32 = 0;
+    pub const SEP_EX: i32 = 1;
+    pub const LABEL_MARK: i32 = 2;
+    pub const NEG: i32 = 3;
+    pub const CLS: i32 = 4;
+    pub const QSEP: i32 = 5;
+    /// Label tokens: `LABEL_BASE + class`.
+    pub const LABEL_BASE: i32 = 6;
+    /// Marker present in episodic (in-context-learning) queries.
+    pub const EPI_MARK: i32 = 19;
+    pub const VOCAB: i32 = 512;
+}
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Value;
+
+fn req<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
+    match v.get(key) {
+        Value::Null => Err(anyhow!("missing key `{key}`")),
+        other => Ok(other),
+    }
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    req(v, key)?
+        .as_usize()
+        .with_context(|| format!("key `{key}` is not a number"))
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    Ok(req(v, key)?
+        .as_str()
+        .with_context(|| format!("key `{key}` is not a string"))?
+        .to_string())
+}
+
+fn u32_vec(v: &Value, key: &str) -> Result<Vec<u32>> {
+    Ok(req(v, key)?
+        .as_arr()
+        .with_context(|| format!("key `{key}` is not an array"))?
+        .iter()
+        .map(|x| x.as_u32().unwrap_or(0))
+        .collect())
+}
+
+/// Geometry of a dataset's token layout (shared by both splits).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetMeta {
+    pub name: String,
+    pub seq: usize,
+    pub n_classes: usize,
+    pub n_examples: usize,
+    pub qlen: usize,
+    pub block_len: usize,
+    pub q_offset: usize,
+    pub scorer_seq: usize,
+    /// Deterministic completion length per class (output-cost metering).
+    pub answer_lens: Vec<u32>,
+}
+
+impl DatasetMeta {
+    /// Length of the `[CLS] body [QSEP]` query segment.
+    pub fn query_len(&self) -> usize {
+        self.qlen + 2
+    }
+}
+
+/// One loaded dataset split, token rows in a dense row-major buffer.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub meta: DatasetMeta,
+    pub split: String,
+    tokens: Vec<i32>, // n * seq
+    pub labels: Vec<u32>,
+    pub tiers: Vec<u8>,
+    pub episodic: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let raw = std::fs::read_to_string(path)
+            .with_context(|| format!("reading dataset {}", path.display()))?;
+        Self::from_json(&raw).with_context(|| format!("parsing dataset {}", path.display()))
+    }
+
+    pub fn from_json(raw: &str) -> Result<Self> {
+        let v = Value::parse(raw).map_err(|e| anyhow!("{e}"))?;
+        let name = req_str(&v, "dataset")?;
+        let seq = req_usize(&v, "seq")?;
+        let rows = req(&v, "tokens")?.as_arr().context("tokens not an array")?;
+        let n = rows.len();
+        let mut tokens = Vec::with_capacity(n * seq);
+        for row in rows {
+            let row = row.as_arr().context("token row not an array")?;
+            if row.len() != seq {
+                bail!("dataset {name}: row len {} != seq {seq}", row.len());
+            }
+            for t in row {
+                tokens.push(t.as_f64().context("token not a number")? as i32);
+            }
+        }
+        let labels = u32_vec(&v, "labels")?;
+        let tiers: Vec<u8> = u32_vec(&v, "tiers")?.iter().map(|&x| x as u8).collect();
+        let episodic: Vec<u8> = u32_vec(&v, "episodic")?.iter().map(|&x| x as u8).collect();
+        if labels.len() != n || tiers.len() != n || episodic.len() != n {
+            bail!("dataset {name}: ragged arrays");
+        }
+        Ok(Dataset {
+            meta: DatasetMeta {
+                name,
+                seq,
+                n_classes: req_usize(&v, "n_classes")?,
+                n_examples: req_usize(&v, "n_examples")?,
+                qlen: req_usize(&v, "qlen")?,
+                block_len: req_usize(&v, "block_len")?,
+                q_offset: req_usize(&v, "q_offset")?,
+                scorer_seq: req_usize(&v, "scorer_seq")?,
+                answer_lens: u32_vec(&v, "answer_lens")?,
+            },
+            split: req_str(&v, "split")?,
+            tokens,
+            labels,
+            tiers,
+            episodic,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Full token row for item `i`.
+    pub fn tokens(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.meta.seq..(i + 1) * self.meta.seq]
+    }
+}
+
+/// Prompt/query manipulation over the fixed layout. These mirror
+/// `python/compile/data.py` (`truncate_examples`, `scorer_input`) and are
+/// cross-validated in integration tests.
+pub mod prompt {
+    use super::{layout, DatasetMeta};
+
+    /// Keep only the first `keep` in-context example blocks, PAD the rest.
+    /// This is the *prompt selection* cost-reduction strategy (paper Fig 2a).
+    pub fn truncate_examples(tokens: &[i32], meta: &DatasetMeta, keep: usize) -> Vec<i32> {
+        let mut out = tokens.to_vec();
+        let keep = keep.min(meta.n_examples);
+        out[keep * meta.block_len..meta.q_offset]
+            .iter_mut()
+            .for_each(|t| *t = layout::PAD);
+        out
+    }
+
+    /// Slice the `[CLS] body [QSEP]` query segment.
+    pub fn query_segment<'a>(tokens: &'a [i32], meta: &DatasetMeta) -> &'a [i32] {
+        &tokens[meta.q_offset..meta.q_offset + meta.query_len()]
+    }
+
+    /// Build the scorer input `[CLS] body [QSEP] [answer] PAD...`.
+    pub fn scorer_input(tokens: &[i32], meta: &DatasetMeta, answer: u32) -> Vec<i32> {
+        let mut out = vec![layout::PAD; meta.scorer_seq];
+        let q = query_segment(tokens, meta);
+        out[..q.len()].copy_from_slice(q);
+        out[meta.qlen + 2] = layout::LABEL_BASE + answer as i32;
+        out
+    }
+
+    /// Number of billable (non-PAD) input tokens.
+    pub fn input_tokens(tokens: &[i32]) -> u32 {
+        tokens.iter().filter(|&&t| t != layout::PAD).count() as u32
+    }
+
+    /// Whether the query is episodic (needs in-context examples to decode).
+    pub fn is_episodic(tokens: &[i32], meta: &DatasetMeta) -> bool {
+        query_segment(tokens, meta).contains(&layout::EPI_MARK)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Manifest (artifacts/manifest.json)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub seq: usize,
+    pub vocab: usize,
+    pub batch_sizes: Vec<usize>,
+    pub datasets: Vec<ManifestDataset>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestDataset {
+    pub dataset: String,
+    pub domain: String,
+    pub size: usize,
+    pub n_classes: usize,
+    pub n_examples: usize,
+    pub seq: usize,
+    pub qlen: usize,
+    pub block_len: usize,
+    pub q_offset: usize,
+    pub scorer_seq: usize,
+    pub answer_lens: Vec<u32>,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub models: Vec<ManifestModel>,
+    pub scorer: ManifestScorer,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestModel {
+    pub name: String,
+    pub provider: String,
+    pub size_b: f64,
+    pub pricing: ManifestPricing,
+    pub latency_ms: ManifestLatency,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub train_acc: f64,
+    pub test_acc: f64,
+    /// batch-size (as string key) → HLO text path relative to artifacts/.
+    pub artifacts: HashMap<String, String>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ManifestPricing {
+    pub usd_per_10m_input: f64,
+    pub usd_per_10m_output: f64,
+    pub usd_per_request: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ManifestLatency {
+    pub base: f64,
+    pub per_1k_tokens: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestScorer {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub artifacts: HashMap<String, String>,
+    pub score_sep: f64,
+    pub score_acc: f64,
+}
+
+impl Manifest {
+    pub fn from_json(raw: &str) -> Result<Self> {
+        let v = Value::parse(raw).map_err(|e| anyhow!("{e}"))?;
+        let mut datasets = Vec::new();
+        for d in req(&v, "datasets")?.as_arr().context("datasets not array")? {
+            datasets.push(ManifestDataset::from_value(d)?);
+        }
+        Ok(Manifest {
+            version: req_usize(&v, "version")? as u32,
+            seq: req_usize(&v, "seq")?,
+            vocab: req_usize(&v, "vocab")?,
+            batch_sizes: u32_vec(&v, "batch_sizes")?
+                .iter()
+                .map(|&b| b as usize)
+                .collect(),
+            datasets,
+        })
+    }
+}
+
+fn artifact_map(v: &Value) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    for (k, val) in v.as_obj().context("artifacts not an object")? {
+        out.insert(
+            k.clone(),
+            val.as_str().context("artifact path not a string")?.to_string(),
+        );
+    }
+    Ok(out)
+}
+
+impl ManifestDataset {
+    fn from_value(v: &Value) -> Result<Self> {
+        let mut models = Vec::new();
+        for m in req(v, "models")?.as_arr().context("models not array")? {
+            let pr = req(m, "pricing")?;
+            let lat = req(m, "latency_ms")?;
+            models.push(ManifestModel {
+                name: req_str(m, "name")?,
+                provider: req_str(m, "provider")?,
+                size_b: req(m, "size_b")?.as_f64().unwrap_or(0.0),
+                pricing: ManifestPricing {
+                    usd_per_10m_input: req(pr, "usd_per_10m_input")?
+                        .as_f64()
+                        .context("bad pricing")?,
+                    usd_per_10m_output: req(pr, "usd_per_10m_output")?
+                        .as_f64()
+                        .context("bad pricing")?,
+                    usd_per_request: req(pr, "usd_per_request")?
+                        .as_f64()
+                        .context("bad pricing")?,
+                },
+                latency_ms: ManifestLatency {
+                    base: req(lat, "base")?.as_f64().context("bad latency")?,
+                    per_1k_tokens: req(lat, "per_1k_tokens")?
+                        .as_f64()
+                        .context("bad latency")?,
+                },
+                d_model: req_usize(m, "d_model")?,
+                n_layers: req_usize(m, "n_layers")?,
+                train_acc: req(m, "train_acc")?.as_f64().unwrap_or(0.0),
+                test_acc: req(m, "test_acc")?.as_f64().unwrap_or(0.0),
+                artifacts: artifact_map(req(m, "artifacts")?)?,
+            });
+        }
+        let sc = req(v, "scorer")?;
+        Ok(ManifestDataset {
+            dataset: req_str(v, "dataset")?,
+            domain: req_str(v, "domain")?,
+            size: req_usize(v, "size")?,
+            n_classes: req_usize(v, "n_classes")?,
+            n_examples: req_usize(v, "n_examples")?,
+            seq: req_usize(v, "seq")?,
+            qlen: req_usize(v, "qlen")?,
+            block_len: req_usize(v, "block_len")?,
+            q_offset: req_usize(v, "q_offset")?,
+            scorer_seq: req_usize(v, "scorer_seq")?,
+            answer_lens: u32_vec(v, "answer_lens")?,
+            n_train: req_usize(v, "n_train")?,
+            n_test: req_usize(v, "n_test")?,
+            models,
+            scorer: ManifestScorer {
+                d_model: req_usize(sc, "d_model")?,
+                n_layers: req_usize(sc, "n_layers")?,
+                artifacts: artifact_map(req(sc, "artifacts")?)?,
+                score_sep: req(sc, "score_sep")?.as_f64().unwrap_or(0.0),
+                score_acc: req(sc, "score_acc")?.as_f64().unwrap_or(0.0),
+            },
+        })
+    }
+}
+
+impl ManifestDataset {
+    pub fn meta(&self) -> DatasetMeta {
+        DatasetMeta {
+            name: self.dataset.clone(),
+            seq: self.seq,
+            n_classes: self.n_classes,
+            n_examples: self.n_examples,
+            qlen: self.qlen,
+            block_len: self.block_len,
+            q_offset: self.q_offset,
+            scorer_seq: self.scorer_seq,
+            answer_lens: self.answer_lens.clone(),
+        }
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ManifestModel> {
+        self.models.iter().find(|m| m.name == name)
+    }
+}
+
+/// Root handle over the `artifacts/` directory.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub root: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Artifacts {
+    pub fn load(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let mpath = root.join("manifest.json");
+        let raw = std::fs::read_to_string(&mpath).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                mpath.display()
+            )
+        })?;
+        let manifest = Manifest::from_json(&raw)?;
+        Ok(Artifacts { root, manifest })
+    }
+
+    pub fn dataset_manifest(&self, name: &str) -> Result<&ManifestDataset> {
+        self.manifest
+            .datasets
+            .iter()
+            .find(|d| d.dataset == name)
+            .with_context(|| format!("dataset {name} not in manifest"))
+    }
+
+    pub fn dataset(&self, name: &str, split: &str) -> Result<Dataset> {
+        Dataset::from_file(&self.root.join("data").join(name).join(format!("{split}.json")))
+    }
+
+    pub fn responses(&self, name: &str) -> Result<crate::coordinator::responses::ResponseTable> {
+        crate::coordinator::responses::ResponseTable::from_file(
+            &self.root.join("responses").join(format!("{name}.json")),
+        )
+    }
+
+    /// Load everything a report/driver needs for one dataset in one call.
+    pub fn context(&self, name: &str) -> Result<DatasetContext> {
+        let table = self.responses(name)?;
+        let costs = crate::marketplace::CostModel::from_manifest(&self.manifest, name)?;
+        let train = self.dataset(name, "train")?;
+        let test = self.dataset(name, "test")?;
+        let train_tokens =
+            (0..train.len()).map(|i| prompt::input_tokens(train.tokens(i))).collect();
+        let test_tokens =
+            (0..test.len()).map(|i| prompt::input_tokens(test.tokens(i))).collect();
+        let meta = train.meta.clone();
+        Ok(DatasetContext { table, costs, train, test, train_tokens, test_tokens, meta })
+    }
+
+    pub fn model_path(&self, ds: &str, model: &str, batch: usize) -> Result<PathBuf> {
+        let dm = self.dataset_manifest(ds)?;
+        let m = if model == "scorer" {
+            &dm.scorer.artifacts
+        } else {
+            &dm.model(model)
+                .with_context(|| format!("model {model} not in manifest for {ds}"))?
+                .artifacts
+        };
+        let rel = m
+            .get(&batch.to_string())
+            .with_context(|| format!("no batch-{batch} artifact for {ds}/{model}"))?;
+        Ok(self.root.join(rel))
+    }
+}
+
+/// Everything needed to optimize/evaluate on one dataset, loaded once.
+pub struct DatasetContext {
+    pub table: crate::coordinator::responses::ResponseTable,
+    pub costs: crate::marketplace::CostModel,
+    pub train: Dataset,
+    pub test: Dataset,
+    /// Billable input tokens per train / test item.
+    pub train_tokens: Vec<u32>,
+    pub test_tokens: Vec<u32>,
+    pub meta: DatasetMeta,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> DatasetMeta {
+        DatasetMeta {
+            name: "t".into(),
+            seq: 32,
+            n_classes: 4,
+            n_examples: 2,
+            qlen: 5,
+            block_len: 8,
+            q_offset: 16,
+            scorer_seq: 32,
+            answer_lens: vec![1, 2, 1, 2],
+        }
+    }
+
+    fn row(meta: &DatasetMeta) -> Vec<i32> {
+        let mut t = vec![layout::PAD; meta.seq];
+        // two example blocks
+        for j in 0..meta.n_examples {
+            let b = j * meta.block_len;
+            t[b] = layout::SEP_EX;
+            for p in 1..=meta.qlen {
+                t[b + p] = 300 + p as i32;
+            }
+            t[b + 1 + meta.qlen] = layout::LABEL_MARK;
+            t[b + 2 + meta.qlen] = layout::LABEL_BASE + 1;
+        }
+        let qo = meta.q_offset;
+        t[qo] = layout::CLS;
+        for p in 0..meta.qlen {
+            t[qo + 1 + p] = 400 + p as i32;
+        }
+        t[qo + 1 + meta.qlen] = layout::QSEP;
+        t
+    }
+
+    #[test]
+    fn truncate_zeroes_dropped_blocks_only() {
+        let m = meta();
+        let t = row(&m);
+        let out = prompt::truncate_examples(&t, &m, 1);
+        assert_eq!(&out[..m.block_len], &t[..m.block_len]);
+        assert!(out[m.block_len..m.q_offset].iter().all(|&x| x == layout::PAD));
+        assert_eq!(&out[m.q_offset..], &t[m.q_offset..]);
+        // keep >= n_examples is a no-op
+        assert_eq!(prompt::truncate_examples(&t, &m, 5), t);
+    }
+
+    #[test]
+    fn scorer_input_layout() {
+        let m = meta();
+        let t = row(&m);
+        let s = prompt::scorer_input(&t, &m, 3);
+        assert_eq!(s.len(), m.scorer_seq);
+        assert_eq!(s[0], layout::CLS);
+        assert_eq!(s[m.qlen + 1], layout::QSEP);
+        assert_eq!(s[m.qlen + 2], layout::LABEL_BASE + 3);
+        assert!(s[m.qlen + 3..].iter().all(|&x| x == layout::PAD));
+    }
+
+    #[test]
+    fn input_tokens_counts_non_pad() {
+        let m = meta();
+        let t = row(&m);
+        let full = prompt::input_tokens(&t);
+        assert_eq!(full as usize, m.n_examples * m.block_len + m.query_len());
+        let trunc = prompt::truncate_examples(&t, &m, 0);
+        assert_eq!(prompt::input_tokens(&trunc) as usize, m.query_len());
+    }
+}

@@ -1,0 +1,113 @@
+//! Evaluation utilities behind the paper's tables and figures.
+
+pub mod mpi;
+pub mod table;
+
+use crate::coordinator::optimizer::FrontierPoint;
+use crate::coordinator::responses::SplitTable;
+
+/// Accuracy and average cost of always using one model (a Fig. 5 scatter
+/// point for an individual API).
+#[derive(Debug, Clone)]
+pub struct IndividualPoint {
+    pub model: String,
+    pub accuracy: f64,
+    pub avg_cost: f64,
+}
+
+/// Compute the individual-API scatter (accuracy, cost) for every model.
+pub fn individual_points(
+    table: &SplitTable,
+    costs: &crate::marketplace::CostModel,
+    input_tokens: &[u32],
+) -> Vec<IndividualPoint> {
+    let n = table.len();
+    (0..table.n_models())
+        .map(|m| {
+            let mut c = 0.0;
+            for i in 0..n {
+                c += costs.call_cost(m, input_tokens[i], table.preds[m][i]);
+            }
+            IndividualPoint {
+                model: table.model_names[m].clone(),
+                accuracy: table.accuracy(m),
+                avg_cost: c / n.max(1) as f64,
+            }
+        })
+        .collect()
+}
+
+/// The best individual API by accuracy (ties → cheaper).
+pub fn best_individual(points: &[IndividualPoint]) -> &IndividualPoint {
+    points
+        .iter()
+        .max_by(|a, b| {
+            a.accuracy
+                .partial_cmp(&b.accuracy)
+                .unwrap()
+                .then(b.avg_cost.partial_cmp(&a.avg_cost).unwrap())
+        })
+        .expect("non-empty marketplace")
+}
+
+/// Interpolate the max accuracy achievable on a frontier at cost ≤ c.
+pub fn frontier_accuracy_at(frontier: &[FrontierPoint], cost: f64) -> Option<f64> {
+    frontier
+        .iter()
+        .filter(|p| p.avg_cost <= cost + 1e-15)
+        .map(|p| p.accuracy)
+        .fold(None, |acc, a| Some(acc.map_or(a, |b: f64| b.max(a))))
+}
+
+/// Smallest frontier cost that reaches accuracy ≥ `target` (None if the
+/// frontier never gets there).
+pub fn frontier_cost_to_reach(frontier: &[FrontierPoint], target: f64) -> Option<f64> {
+    frontier
+        .iter()
+        .filter(|p| p.accuracy + 1e-12 >= target)
+        .map(|p| p.avg_cost)
+        .fold(None, |acc, c| Some(acc.map_or(c, |b: f64| b.min(c))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cascade::CascadePlan;
+    use crate::coordinator::responses::synthetic_table;
+    use crate::marketplace::CostModel;
+
+    #[test]
+    fn individual_points_match_table_accuracy() {
+        let t = synthetic_table(4, 500, 4, 0.9, 5);
+        let cm = CostModel::from_table1("x", vec![1; 4]);
+        let cm = CostModel {
+            model_names: t.model_names.clone(),
+            pricing: cm.pricing[..4].to_vec(),
+            latency: cm.latency[..4].to_vec(),
+            ..cm
+        };
+        let pts = individual_points(&t, &cm, &vec![100; t.len()]);
+        for (m, p) in pts.iter().enumerate() {
+            assert!((p.accuracy - t.accuracy(m)).abs() < 1e-12);
+            assert!(p.avg_cost > 0.0);
+        }
+        let best = best_individual(&pts);
+        assert!((best.accuracy - t.accuracy(3)).abs() < 0.05);
+    }
+
+    #[test]
+    fn frontier_queries() {
+        let f: Vec<FrontierPoint> = [(1.0, 0.5), (2.0, 0.7), (4.0, 0.9)]
+            .iter()
+            .map(|&(c, a)| FrontierPoint {
+                plan: CascadePlan::single(0),
+                accuracy: a,
+                avg_cost: c,
+            })
+            .collect();
+        assert_eq!(frontier_accuracy_at(&f, 0.5), None);
+        assert_eq!(frontier_accuracy_at(&f, 2.5), Some(0.7));
+        assert_eq!(frontier_cost_to_reach(&f, 0.8), Some(4.0));
+        assert_eq!(frontier_cost_to_reach(&f, 0.95), None);
+    }
+}

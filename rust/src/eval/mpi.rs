@@ -1,0 +1,102 @@
+//! Maximum Performance Improvement (paper §4, Fig. 4).
+//!
+//! `MPI[a][b] = P[model a correct ∧ model b wrong]` — the probability that
+//! invoking A *in addition to* B could fix B's mistakes; the paper's
+//! measure of marketplace diversity. Note the paper phrases the matrix as
+//! "the LLM on its row is wrong but the LLM on its column gives the right
+//! answer", i.e. entry (row=b, col=a) = MPI of a w.r.t. b; we expose both
+//! orientations.
+
+use crate::coordinator::responses::SplitTable;
+
+/// Full MPI matrix: `m[row][col] = P[row wrong ∧ col right]` (the paper's
+/// Fig. 4 orientation).
+pub fn mpi_matrix(table: &SplitTable) -> Vec<Vec<f64>> {
+    let k = table.n_models();
+    let n = table.len();
+    let mut m = vec![vec![0.0; k]; k];
+    for row in 0..k {
+        for col in 0..k {
+            if row == col {
+                continue;
+            }
+            let mut cnt = 0usize;
+            for i in 0..n {
+                cnt += (!table.correct[row][i] && table.correct[col][i]) as usize;
+            }
+            m[row][col] = cnt as f64 / n.max(1) as f64;
+        }
+    }
+    m
+}
+
+/// MPI of model `a` with respect to model `b`: P[a right ∧ b wrong].
+pub fn mpi(table: &SplitTable, a: usize, b: usize) -> f64 {
+    let n = table.len();
+    let mut cnt = 0usize;
+    for i in 0..n {
+        cnt += (table.correct[a][i] && !table.correct[b][i]) as usize;
+    }
+    cnt as f64 / n.max(1) as f64
+}
+
+/// Best improver of `b`: the model with the largest MPI w.r.t. `b`.
+pub fn best_improver(table: &SplitTable, b: usize) -> (usize, f64) {
+    let mut best = (b, 0.0);
+    for a in 0..table.n_models() {
+        if a == b {
+            continue;
+        }
+        let v = mpi(table, a, b);
+        if v > best.1 {
+            best = (a, v);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::responses::synthetic_table;
+
+    #[test]
+    fn mpi_consistency_identity_and_bounds() {
+        let t = synthetic_table(5, 2000, 4, 0.9, 11);
+        let m = mpi_matrix(&t);
+        for a in 0..5 {
+            assert_eq!(m[a][a], 0.0);
+            for b in 0..5 {
+                assert!(m[a][b] >= 0.0 && m[a][b] <= 1.0);
+                if a != b {
+                    // matrix entry (row, col) == mpi(col w.r.t. row)
+                    assert!((m[a][b] - mpi(&t, b, a)).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identity_decomposition() {
+        // P[a right] - P[b right] = MPI(a|b) - MPI(b|a).
+        let t = synthetic_table(4, 3000, 4, 0.9, 12);
+        for a in 0..4 {
+            for b in 0..4 {
+                let lhs = t.accuracy(a) - t.accuracy(b);
+                let rhs = mpi(&t, a, b) - mpi(&t, b, a);
+                assert!((lhs - rhs).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn weak_models_still_improve_strong_ones() {
+        // The marketplace-diversity effect the paper leans on: even the
+        // weakest API fixes some of the strongest API's mistakes.
+        let t = synthetic_table(6, 5000, 4, 0.9, 13);
+        let strongest = 5;
+        let (_, v) = best_improver(&t, strongest);
+        assert!(v > 0.0);
+        assert!(mpi(&t, 0, strongest) > 0.0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Plain-text table rendering for the report binaries (fixed-width,
+//! newline-terminated — easy to diff against EXPERIMENTS.md).
+
+/// Render rows as a fixed-width table with a header and separator.
+pub fn render(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for r in rows {
+        assert_eq!(r.len(), ncol, "row arity mismatch");
+        for (c, cell) in r.iter().enumerate() {
+            widths[c] = widths[c].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut s = String::new();
+        for (c, cell) in cells.iter().enumerate() {
+            if c > 0 {
+                s.push_str("  ");
+            }
+            s.push_str(&format!("{:<width$}", cell, width = widths[c]));
+        }
+        s.trim_end().to_string()
+    };
+    let hdr: Vec<String> = headers.iter().map(|h| h.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&fmt_row(r, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format a USD amount with sensible precision for tiny per-query values.
+pub fn usd(v: f64) -> String {
+    if v >= 100.0 {
+        format!("{v:.1}")
+    } else if v >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Format a probability/accuracy as a percentage.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let t = render(
+            &["api", "acc"],
+            &[
+                vec!["gpt4".into(), "0.95".into()],
+                vec!["gpt_j".into(), "0.88".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("api"));
+        assert!(lines[2].starts_with("gpt4"));
+    }
+
+    #[test]
+    fn usd_precision_scales() {
+        assert_eq!(usd(123.456), "123.5");
+        assert_eq!(usd(3.14159), "3.14");
+        assert_eq!(usd(0.00123), "0.0012");
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.983), "98.3%");
+    }
+}

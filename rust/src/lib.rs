@@ -1,0 +1,60 @@
+//! # FrugalGPT — budget-aware LLM cascade serving
+//!
+//! A production-grade reproduction of *FrugalGPT: How to Use Large Language
+//! Models While Reducing Cost and Improving Performance* (Chen, Zaharia,
+//! Zou; 2023) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the LLM
+//!   cascade router and its joint `(L, τ)` optimizer, the completion cache,
+//!   prompt adaptation, query concatenation, the marketplace cost model
+//!   (paper Table 1), and a tokio serving front end with dynamic batching.
+//! * **L2/L1 (build-time Python, never on the request path)** — tiny JAX
+//!   transformers that simulate the 12 commercial LLM APIs plus the
+//!   reliability scorer `g(q, a)`, with Pallas attention/layernorm kernels,
+//!   AOT-lowered to HLO text consumed by [`runtime`] via PJRT.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use frugalgpt::prelude::*;
+//! use frugalgpt::coordinator::scorer::Scorer;
+//!
+//! let art = Artifacts::load("artifacts")?;            // manifest + data
+//! let ctx = art.context("headlines")?;                // tables + pricing
+//!
+//! // Train the cascade for a budget (USD per 10k queries)...
+//! let opt = CascadeOptimizer::new(
+//!     &ctx.table.train, &ctx.costs, ctx.train_tokens.clone(),
+//!     Default::default())?;
+//! let plan = opt.optimize(6.5)?;
+//!
+//! // ...then serve it live through PJRT.
+//! let engine = Engine::start(&art)?;
+//! let scorer = Scorer::new(engine.handle(), ctx.meta.clone());
+//! let cascade = Cascade::new(
+//!     plan.plan, engine.handle(), scorer, ctx.costs.clone(), ctx.meta)?;
+//! let answer = cascade.answer(ctx.test.tokens(0))?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `rust/src/bin/report.rs`
+//! for the generators behind every table and figure in the paper.
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod marketplace;
+pub mod runtime;
+pub mod server;
+pub mod strategies;
+pub mod util;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::coordinator::cascade::{Cascade, CascadePlan, Stage};
+    pub use crate::coordinator::optimizer::CascadeOptimizer;
+    pub use crate::coordinator::responses::{ResponseTable, SplitTable};
+    pub use crate::data::{Artifacts, Dataset, DatasetMeta};
+    pub use crate::marketplace::{CostModel, Pricing};
+    pub use crate::runtime::{Engine, EngineHandle};
+}

@@ -1,0 +1,211 @@
+//! The simulated LLM marketplace: pricing (paper Table 1), cost metering,
+//! and per-API latency models.
+//!
+//! The cascade only ever sees each API as a black-box `query → answer`
+//! function with a price, which is exactly what the paper assumes. Prices
+//! are the real March-2023 numbers from Table 1 (USD): a component
+//! proportional to input tokens, one proportional to output tokens, and a
+//! fixed per-request fee — `c_i(p) = c̃_{i,2}·‖f_i(p)‖ + c̃_{i,1}·‖p‖ + c̃_{i,0}`.
+
+use anyhow::{Context, Result};
+
+use crate::data::{Manifest, ManifestDataset};
+
+/// Pricing of one API (paper Table 1 row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pricing {
+    pub usd_per_10m_input: f64,
+    pub usd_per_10m_output: f64,
+    pub usd_per_request: f64,
+}
+
+impl Pricing {
+    pub const fn new(input_10m: f64, output_10m: f64, request: f64) -> Self {
+        Pricing {
+            usd_per_10m_input: input_10m,
+            usd_per_10m_output: output_10m,
+            usd_per_request: request,
+        }
+    }
+
+    /// USD for one request with the given token counts.
+    pub fn cost(&self, input_tokens: u32, output_tokens: u32) -> f64 {
+        self.usd_per_10m_input * input_tokens as f64 / 1e7
+            + self.usd_per_10m_output * output_tokens as f64 / 1e7
+            + self.usd_per_request
+    }
+}
+
+/// Paper Table 1 verbatim (provider, api, size/B, input, output, request).
+/// The manifest carries the same numbers; this constant is the source of
+/// truth for the Table-1 report and a consistency test.
+pub const TABLE1: &[(&str, &str, f64, Pricing)] = &[
+    ("openai", "gpt_curie", 6.7, Pricing::new(2.0, 2.0, 0.0)),
+    ("openai", "chatgpt", 0.0, Pricing::new(2.0, 2.0, 0.0)),
+    ("openai", "gpt3", 175.0, Pricing::new(20.0, 20.0, 0.0)),
+    ("openai", "gpt4", 0.0, Pricing::new(30.0, 60.0, 0.0)),
+    ("ai21", "j1_large", 7.5, Pricing::new(0.0, 30.0, 0.0003)),
+    ("ai21", "j1_grande", 17.0, Pricing::new(0.0, 80.0, 0.0008)),
+    ("ai21", "j1_jumbo", 178.0, Pricing::new(0.0, 250.0, 0.005)),
+    ("cohere", "cohere_xlarge", 52.0, Pricing::new(10.0, 10.0, 0.0)),
+    ("forefrontai", "forefront_qa", 16.0, Pricing::new(5.8, 5.8, 0.0)),
+    ("textsynth", "gpt_j", 6.0, Pricing::new(0.2, 5.0, 0.0)),
+    ("textsynth", "fairseq_gpt", 13.0, Pricing::new(0.6, 15.0, 0.0)),
+    ("textsynth", "gpt_neox", 20.0, Pricing::new(1.4, 35.0, 0.0)),
+];
+
+/// Synthetic service latency (the paper's testbed effect we cannot measure:
+/// commercial API round-trips). Used by the serving examples when
+/// `--simulate-api-latency` is on; criterion perf benches measure pure
+/// compute instead.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyModel {
+    pub base_ms: f64,
+    pub per_1k_tokens_ms: f64,
+}
+
+impl LatencyModel {
+    pub fn latency_ms(&self, total_tokens: u32) -> f64 {
+        self.base_ms + self.per_1k_tokens_ms * total_tokens as f64 / 1000.0
+    }
+}
+
+/// Cost metering for one dataset: maps `(model, item tokens, answer)` to
+/// USD, and exposes per-class completion lengths.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub dataset: String,
+    pub model_names: Vec<String>,
+    pub pricing: Vec<Pricing>,
+    pub latency: Vec<LatencyModel>,
+    /// Completion length per answer class (tokens).
+    pub answer_lens: Vec<u32>,
+}
+
+impl CostModel {
+    pub fn from_manifest(manifest: &Manifest, dataset: &str) -> Result<Self> {
+        let dm: &ManifestDataset = manifest
+            .datasets
+            .iter()
+            .find(|d| d.dataset == dataset)
+            .with_context(|| format!("dataset {dataset} not in manifest"))?;
+        Ok(CostModel {
+            dataset: dataset.to_string(),
+            model_names: dm.models.iter().map(|m| m.name.clone()).collect(),
+            pricing: dm
+                .models
+                .iter()
+                .map(|m| Pricing {
+                    usd_per_10m_input: m.pricing.usd_per_10m_input,
+                    usd_per_10m_output: m.pricing.usd_per_10m_output,
+                    usd_per_request: m.pricing.usd_per_request,
+                })
+                .collect(),
+            latency: dm
+                .models
+                .iter()
+                .map(|m| LatencyModel {
+                    base_ms: m.latency_ms.base,
+                    per_1k_tokens_ms: m.latency_ms.per_1k_tokens,
+                })
+                .collect(),
+            answer_lens: dm.answer_lens.clone(),
+        })
+    }
+
+    /// Build directly from Table 1 (tests / no-artifact paths).
+    pub fn from_table1(dataset: &str, answer_lens: Vec<u32>) -> Self {
+        CostModel {
+            dataset: dataset.to_string(),
+            model_names: TABLE1.iter().map(|t| t.1.to_string()).collect(),
+            pricing: TABLE1.iter().map(|t| t.3).collect(),
+            latency: TABLE1
+                .iter()
+                .map(|t| LatencyModel {
+                    base_ms: 30.0 + t.2,
+                    per_1k_tokens_ms: 30.0,
+                })
+                .collect(),
+            answer_lens,
+        }
+    }
+
+    pub fn model_index(&self, name: &str) -> Option<usize> {
+        self.model_names.iter().position(|n| n == name)
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.model_names.len()
+    }
+
+    /// Completion length for a predicted class.
+    pub fn answer_len(&self, class: u32) -> u32 {
+        self.answer_lens
+            .get(class as usize)
+            .copied()
+            .unwrap_or(1)
+    }
+
+    /// USD for one call of model `m` with `input_tokens` and an answer of
+    /// class `answer`.
+    pub fn call_cost(&self, m: usize, input_tokens: u32, answer: u32) -> f64 {
+        self.pricing[m].cost(input_tokens, self.answer_len(answer))
+    }
+}
+
+/// Scale a per-query average cost to the "USD per 10k queries" unit used in
+/// all reports (the paper reports absolute dollars over its test sets of
+/// comparable size; our prompts are shorter, so we normalize explicitly).
+pub fn usd_per_10k(avg_cost_per_query: f64) -> f64 {
+    avg_cost_per_query * 10_000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pricing_components_add_up() {
+        let p = Pricing::new(30.0, 60.0, 0.0); // GPT-4
+        // 1800 input + 80 output tokens ≈ the paper's §2 example, per query:
+        let c = p.cost(1800, 80);
+        assert!((c - (30.0 * 1800.0 / 1e7 + 60.0 * 80.0 / 1e7)).abs() < 1e-12);
+        // 360k queries/month ≈ $2.1k with our shorter convention check:
+        assert!((c * 360_000.0 - 2116.8).abs() < 0.5);
+    }
+
+    #[test]
+    fn per_request_fee_dominates_for_short_answers() {
+        // J1-Jumbo: $0.005/request. For a 1-token answer and free input,
+        // the fixed fee is > the token cost — the effect that makes J1 the
+        // second-most-expensive API on HEADLINES (paper Fig. 5 discussion).
+        let j1 = Pricing::new(0.0, 250.0, 0.005);
+        assert!(j1.cost(130, 1) > 10.0 * 250.0 * 1.0 / 1e7);
+        let gpt4 = Pricing::new(30.0, 60.0, 0.0);
+        assert!(j1.cost(130, 2) > gpt4.cost(130, 2));
+    }
+
+    #[test]
+    fn table1_two_orders_of_magnitude() {
+        // GPT-J input 10M = $0.2 vs GPT-4 = $30 — factor 150.
+        let gptj = TABLE1.iter().find(|t| t.1 == "gpt_j").unwrap().3;
+        let gpt4 = TABLE1.iter().find(|t| t.1 == "gpt4").unwrap().3;
+        assert!(gpt4.usd_per_10m_input / gptj.usd_per_10m_input >= 100.0);
+    }
+
+    #[test]
+    fn cost_model_table1_roundtrip() {
+        let cm = CostModel::from_table1("headlines", vec![1, 1, 2, 1]);
+        assert_eq!(cm.n_models(), 12);
+        let g4 = cm.model_index("gpt4").unwrap();
+        assert!(cm.call_cost(g4, 125, 0) > 0.0);
+        assert_eq!(cm.answer_len(2), 2);
+        assert_eq!(cm.answer_len(99), 1); // out-of-range → 1
+    }
+
+    #[test]
+    fn latency_model_linear() {
+        let l = LatencyModel { base_ms: 30.0, per_1k_tokens_ms: 40.0 };
+        assert!((l.latency_ms(500) - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,124 @@
+//! Dynamic batcher: coalesces concurrent single-row inference requests
+//! into batched PJRT executions (vLLM-style continuous batching, adapted
+//! to a fixed-shape classifier: batch across *requests*, not tokens).
+//!
+//! One batcher per (dataset, model). Requests queue up; the worker drains
+//! up to `max_batch` of them, waiting at most `max_wait` for stragglers
+//! once the first request of a batch has arrived, then issues one
+//! `execute_batch` and fans results back out over per-request reply
+//! channels. Pure std threading (no async runtime in this environment).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::EngineHandle;
+
+struct Item {
+    row: Vec<i32>,
+    reply: mpsc::SyncSender<Result<Vec<f32>>>,
+}
+
+/// Handle for submitting rows to a batcher. Cheap to clone.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: mpsc::Sender<Item>,
+}
+
+impl BatcherHandle {
+    /// Submit one row; blocks until its batch has executed.
+    pub fn submit(&self, row: Vec<i32>) -> Result<Vec<f32>> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Item { row, reply: tx })
+            .map_err(|_| anyhow!("batcher worker is gone"))?;
+        rx.recv().map_err(|_| anyhow!("batcher dropped reply"))?
+    }
+}
+
+/// Configuration for one dynamic batcher.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        // §Perf: the PJRT engine is a single-stream actor, so waiting long
+        // for stragglers only adds latency; 300µs captures genuinely
+        // concurrent arrivals (batch-8 execs are ~1.8ms) without stalling
+        // the pipe. max_batch 8 matches the engine's preferred chunk.
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(300) }
+    }
+}
+
+/// The batcher: owns its worker thread; dropping all handles stops it.
+pub struct Batcher {
+    handle: BatcherHandle,
+    _join: std::thread::JoinHandle<()>,
+}
+
+impl Batcher {
+    pub fn spawn(
+        engine: EngineHandle,
+        dataset: String,
+        model: String,
+        cfg: BatcherConfig,
+    ) -> Batcher {
+        let (tx, rx) = mpsc::channel::<Item>();
+        let join = std::thread::Builder::new()
+            .name(format!("batcher-{dataset}-{model}"))
+            .spawn(move || worker(engine, dataset, model, cfg, rx))
+            .expect("spawning batcher thread");
+        Batcher { handle: BatcherHandle { tx }, _join: join }
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        self.handle.clone()
+    }
+}
+
+fn worker(
+    engine: EngineHandle,
+    dataset: String,
+    model: String,
+    cfg: BatcherConfig,
+    rx: mpsc::Receiver<Item>,
+) {
+    loop {
+        // Block for the first item of the next batch.
+        let first = match rx.recv() {
+            Ok(i) => i,
+            Err(_) => break, // all handles dropped
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let rows: Vec<Vec<i32>> = batch.iter().map(|i| i.row.clone()).collect();
+        match engine.execute_batch(&dataset, &model, rows) {
+            Ok(outs) => {
+                for (item, out) in batch.into_iter().zip(outs) {
+                    let _ = item.reply.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for item in batch {
+                    let _ = item.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}

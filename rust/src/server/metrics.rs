@@ -1,0 +1,149 @@
+//! Serving metrics: lock-free counters + a fixed-bucket latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency buckets in microseconds (upper bounds).
+pub const BUCKETS_US: [u64; 12] = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000,
+    u64::MAX,
+];
+
+/// Latency histogram with atomic buckets.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; 12],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn record_us(&self, us: u64) {
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(11);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return BUCKETS_US[i].min(self.max_us());
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Aggregate serving metrics for one service instance.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub queries: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cascade_invocations: AtomicU64,
+    /// Total model calls broken out by cascade depth reached (1..=3).
+    pub stopped_at: [AtomicU64; 3],
+    pub errors: AtomicU64,
+    pub latency: Histogram,
+}
+
+impl ServiceMetrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            queries: self.queries.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cascade_invocations: self.cascade_invocations.load(Ordering::Relaxed),
+            stopped_at: [
+                self.stopped_at[0].load(Ordering::Relaxed),
+                self.stopped_at[1].load(Ordering::Relaxed),
+                self.stopped_at[2].load(Ordering::Relaxed),
+            ],
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_latency_us: self.latency.mean_us(),
+            p50_us: self.latency.quantile_us(0.50),
+            p95_us: self.latency.quantile_us(0.95),
+            p99_us: self.latency.quantile_us(0.99),
+            max_us: self.latency.max_us(),
+        }
+    }
+}
+
+/// A point-in-time copy of the metrics, for reports.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub queries: u64,
+    pub cache_hits: u64,
+    pub cascade_invocations: u64,
+    pub stopped_at: [u64; 3],
+    pub errors: u64,
+    pub mean_latency_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let h = Histogram::default();
+        for us in [10u64, 80, 300, 900, 3_000, 9_000, 40_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 7);
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        assert!(p50 <= p95);
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us(), 40_000);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_copies_counters() {
+        let m = ServiceMetrics::default();
+        m.queries.fetch_add(3, Ordering::Relaxed);
+        m.stopped_at[1].fetch_add(2, Ordering::Relaxed);
+        m.latency.record_us(500);
+        let s = m.snapshot();
+        assert_eq!(s.queries, 3);
+        assert_eq!(s.stopped_at, [0, 2, 0]);
+        assert_eq!(s.p50_us, 500);
+    }
+}

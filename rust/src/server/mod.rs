@@ -1,0 +1,7 @@
+//! The tokio serving front end: request intake, dynamic batching,
+//! metrics, and the composed FrugalGPT service (cache → prompt adaptation
+//! → cascade → budget metering).
+
+pub mod batcher;
+pub mod metrics;
+pub mod service;

@@ -1,0 +1,189 @@
+//! The composed FrugalGPT service: completion cache → prompt adaptation →
+//! LLM cascade, with budget metering and metrics (paper Fig. 1b: all
+//! three cost-reduction strategies stacked in front of the marketplace).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use std::sync::Mutex;
+
+use crate::coordinator::budget::{Admission, BudgetTracker};
+use crate::coordinator::cascade::{Cascade, CascadeAnswer, CascadePlan};
+use crate::coordinator::scorer::Scorer;
+use crate::data::DatasetMeta;
+use crate::marketplace::CostModel;
+use crate::runtime::EngineHandle;
+use crate::server::metrics::ServiceMetrics;
+use crate::strategies::cache::{CachedAnswer, CompletionCache};
+use crate::strategies::prompt::PromptPolicy;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Master switch for the completion cache (Fig. 2c). Off = every query
+    /// goes through the cascade (the "cascade only" ablation).
+    pub cache_enabled: bool,
+    pub cache_capacity: usize,
+    /// Similarity threshold for the cache's MinHash tier (≥1.0 = exact only).
+    pub cache_min_similarity: f64,
+    pub prompt_policy: PromptPolicy,
+    /// Optional hard budget cap (USD); when reached the service degrades
+    /// to the first cascade stage only.
+    pub budget_cap_usd: Option<f64>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            cache_enabled: true,
+            cache_capacity: 4096,
+            cache_min_similarity: 1.0,
+            prompt_policy: PromptPolicy::Full,
+            budget_cap_usd: None,
+        }
+    }
+}
+
+/// The answer returned to a client.
+#[derive(Debug, Clone)]
+pub struct ServiceAnswer {
+    pub answer: u32,
+    pub from_cache: bool,
+    pub stopped_at: usize,
+    pub cost_usd: f64,
+    pub latency_us: u64,
+    pub simulated_api_latency_ms: f64,
+}
+
+/// A FrugalGPT serving instance for one dataset.
+pub struct FrugalService {
+    cascade: Cascade,
+    /// Degraded mode (budget cap reached): cheapest stage only.
+    degraded: Cascade,
+    cache: Mutex<CompletionCache>,
+    cfg: ServiceConfig,
+    pub budget: BudgetTracker,
+    pub metrics: Arc<ServiceMetrics>,
+    meta: DatasetMeta,
+}
+
+impl FrugalService {
+    pub fn new(
+        plan: CascadePlan,
+        engine: EngineHandle,
+        costs: CostModel,
+        meta: DatasetMeta,
+        cfg: ServiceConfig,
+    ) -> Result<Self> {
+        let scorer = Scorer::new(engine.clone(), meta.clone());
+        let degrade_plan = CascadePlan::single(plan.stages[0].model);
+        let degraded = Cascade::new(
+            degrade_plan,
+            engine.clone(),
+            Scorer::new(engine.clone(), meta.clone()),
+            costs.clone(),
+            meta.clone(),
+        )?;
+        let cascade = Cascade::new(plan, engine, scorer, costs, meta.clone())?;
+        Ok(FrugalService {
+            cascade,
+            degraded,
+            cache: Mutex::new(CompletionCache::new(
+                cfg.cache_capacity.max(1),
+                cfg.cache_min_similarity,
+            )),
+            budget: BudgetTracker::new(cfg.budget_cap_usd),
+            metrics: Arc::new(ServiceMetrics::default()),
+            cfg,
+            meta,
+        })
+    }
+
+    pub fn meta(&self) -> &DatasetMeta {
+        &self.meta
+    }
+
+    pub fn plan(&self) -> &CascadePlan {
+        self.cascade.plan()
+    }
+
+    /// Answer one query (blocking; wrap in `spawn_blocking` from tokio).
+    pub fn answer(&self, tokens: &[i32]) -> Result<ServiceAnswer> {
+        let t0 = Instant::now();
+        self.metrics
+            .queries
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+
+        // 1. Completion cache (paper Fig. 2c).
+        if self.cfg.cache_enabled {
+            if let Some(hit) = self.cache.lock().unwrap().get(tokens) {
+            self.metrics
+                .cache_hits
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let lat = t0.elapsed().as_micros() as u64;
+            self.metrics.latency.record_us(lat);
+                return Ok(ServiceAnswer {
+                    answer: hit.answer,
+                    from_cache: true,
+                    stopped_at: 0,
+                    cost_usd: 0.0,
+                    latency_us: lat,
+                    simulated_api_latency_ms: 0.0,
+                });
+            }
+        }
+
+        // 2. Prompt adaptation (paper Fig. 2a).
+        let adapted = self.cfg.prompt_policy.apply(tokens, &self.meta);
+
+        // 3. LLM cascade (paper Fig. 2e), degraded if over budget.
+        self.metrics
+            .cascade_invocations
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let out: CascadeAnswer = if self.budget.admit() == Admission::CapReached {
+            self.degraded.answer(&adapted)?
+        } else {
+            self.cascade.answer(&adapted)?
+        };
+
+        self.budget.record(out.cost_usd());
+        if out.stopped_at < 3 {
+            self.metrics.stopped_at[out.stopped_at]
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+
+        // 4. Populate the cache.
+        if self.cfg.cache_enabled {
+            self.cache.lock().unwrap().put(
+                tokens,
+                CachedAnswer { answer: out.answer, score: out.score },
+            );
+        }
+
+        let lat = t0.elapsed().as_micros() as u64;
+        self.metrics.latency.record_us(lat);
+        Ok(ServiceAnswer {
+            answer: out.answer,
+            from_cache: false,
+            stopped_at: out.stopped_at,
+            cost_usd: out.cost_usd(),
+            latency_us: lat,
+            simulated_api_latency_ms: out.simulated_latency_ms,
+        })
+    }
+
+    pub fn engine_handle(&self) -> EngineHandle {
+        self.cascade.engine_handle()
+    }
+
+    pub fn costs(&self) -> &CostModel {
+        self.cascade.costs()
+    }
+}
+
+impl CascadeAnswer {
+    fn cost_usd(&self) -> f64 {
+        self.cost
+    }
+}

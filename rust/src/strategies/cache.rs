@@ -1,0 +1,284 @@
+//! Completion cache (paper §3, LLM approximation, Fig. 2c).
+//!
+//! Stores `(query → completion)` and serves repeats without touching any
+//! LLM API. Two lookup tiers:
+//!
+//! 1. **exact** — hash of the full query token sequence;
+//! 2. **similar** — MinHash over token 3-grams; a cached entry is reused
+//!    when its estimated Jaccard similarity clears a threshold (the
+//!    paper's "if a similar query has been previously answered").
+//!
+//! Bounded LRU with O(1) eviction. Single-writer behind a mutex — the
+//! coordinator consults it before the cascade, so its hit path must be
+//! far cheaper than even the cheapest API call (see benches/cache.rs).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
+
+/// Number of MinHash permutations (signature size).
+const SIGNATURE: usize = 16;
+
+/// A cached completion.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedAnswer {
+    pub answer: u32,
+    pub score: f32,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    key: u64,
+    signature: [u64; SIGNATURE],
+    answer: CachedAnswer,
+}
+
+/// Cache statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub exact_hits: u64,
+    pub similar_hits: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            (self.exact_hits + self.similar_hits) as f64 / self.lookups as f64
+        }
+    }
+}
+
+/// The completion cache. Not internally synchronized — wrap in a mutex (the
+/// server does) or keep per-worker instances.
+pub struct CompletionCache {
+    capacity: usize,
+    /// Similarity threshold in [0,1]; ≥ 1.0 disables the similar tier.
+    min_similarity: f64,
+    by_key: HashMap<u64, usize>, // exact-hash → slot
+    slots: Vec<Option<Entry>>,
+    lru: VecDeque<usize>, // front = oldest
+    free: Vec<usize>,
+    stats: CacheStats,
+}
+
+impl CompletionCache {
+    pub fn new(capacity: usize, min_similarity: f64) -> Self {
+        assert!(capacity > 0);
+        CompletionCache {
+            capacity,
+            min_similarity,
+            by_key: HashMap::with_capacity(capacity),
+            slots: Vec::with_capacity(capacity),
+            lru: VecDeque::with_capacity(capacity),
+            free: Vec::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+
+    /// Look up a query. Exact match first, then the MinHash similar tier.
+    pub fn get(&mut self, query: &[i32]) -> Option<CachedAnswer> {
+        self.stats.lookups += 1;
+        let key = exact_key(query);
+        if let Some(&slot) = self.by_key.get(&key) {
+            self.stats.exact_hits += 1;
+            self.touch(slot);
+            return Some(self.slots[slot].as_ref().unwrap().answer.clone());
+        }
+        if self.min_similarity < 1.0 {
+            let sig = minhash(query);
+            let mut best: Option<(usize, f64)> = None;
+            for (slot, e) in self.slots.iter().enumerate() {
+                if let Some(e) = e {
+                    let sim = signature_similarity(&sig, &e.signature);
+                    if sim >= self.min_similarity
+                        && best.map_or(true, |(_, b)| sim > b)
+                    {
+                        best = Some((slot, sim));
+                    }
+                }
+            }
+            if let Some((slot, _)) = best {
+                self.stats.similar_hits += 1;
+                self.touch(slot);
+                return Some(self.slots[slot].as_ref().unwrap().answer.clone());
+            }
+        }
+        None
+    }
+
+    /// Insert (or overwrite) a completion for a query.
+    pub fn put(&mut self, query: &[i32], answer: CachedAnswer) {
+        let key = exact_key(query);
+        if let Some(&slot) = self.by_key.get(&key) {
+            self.slots[slot].as_mut().unwrap().answer = answer;
+            self.touch(slot);
+            return;
+        }
+        self.stats.insertions += 1;
+        if self.by_key.len() >= self.capacity {
+            self.evict_oldest();
+        }
+        let entry = Entry { key, signature: minhash(query), answer };
+        let slot = if let Some(s) = self.free.pop() {
+            self.slots[s] = Some(entry);
+            s
+        } else {
+            self.slots.push(Some(entry));
+            self.slots.len() - 1
+        };
+        self.by_key.insert(key, slot);
+        self.lru.push_back(slot);
+    }
+
+    fn touch(&mut self, slot: usize) {
+        if let Some(pos) = self.lru.iter().position(|&s| s == slot) {
+            self.lru.remove(pos);
+            self.lru.push_back(slot);
+        }
+    }
+
+    fn evict_oldest(&mut self) {
+        if let Some(slot) = self.lru.pop_front() {
+            if let Some(e) = self.slots[slot].take() {
+                self.by_key.remove(&e.key);
+                self.free.push(slot);
+                self.stats.evictions += 1;
+            }
+        }
+    }
+}
+
+fn exact_key(query: &[i32]) -> u64 {
+    let mut h = DefaultHasher::new();
+    query.hash(&mut h);
+    h.finish()
+}
+
+/// MinHash signature over token 3-grams (shift-mix "permutations").
+fn minhash(query: &[i32]) -> [u64; SIGNATURE] {
+    let mut sig = [u64::MAX; SIGNATURE];
+    if query.len() < 3 {
+        let mut h = DefaultHasher::new();
+        query.hash(&mut h);
+        let v = h.finish();
+        for (p, s) in sig.iter_mut().enumerate() {
+            *s = mix(v, p as u64);
+        }
+        return sig;
+    }
+    for w in query.windows(3) {
+        let mut h = DefaultHasher::new();
+        w.hash(&mut h);
+        let v = h.finish();
+        for p in 0..SIGNATURE {
+            let m = mix(v, p as u64);
+            if m < sig[p] {
+                sig[p] = m;
+            }
+        }
+    }
+    sig
+}
+
+#[inline]
+fn mix(v: u64, perm: u64) -> u64 {
+    // splitmix64 step with a per-permutation offset.
+    let mut z = v ^ (perm.wrapping_mul(0x9E3779B97F4A7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Estimated Jaccard similarity of two signatures.
+fn signature_similarity(a: &[u64; SIGNATURE], b: &[u64; SIGNATURE]) -> f64 {
+    let eq = a.iter().zip(b).filter(|(x, y)| x == y).count();
+    eq as f64 / SIGNATURE as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(seed: i32, len: usize) -> Vec<i32> {
+        (0..len as i32).map(|i| seed * 31 + i * 7 % 97).collect()
+    }
+
+    #[test]
+    fn exact_hit_roundtrip() {
+        let mut c = CompletionCache::new(4, 1.0);
+        assert!(c.get(&q(1, 16)).is_none());
+        c.put(&q(1, 16), CachedAnswer { answer: 2, score: 0.9 });
+        let hit = c.get(&q(1, 16)).unwrap();
+        assert_eq!(hit.answer, 2);
+        assert_eq!(c.stats().exact_hits, 1);
+        assert_eq!(c.stats().lookups, 2);
+    }
+
+    #[test]
+    fn similar_hit_on_small_perturbation() {
+        let mut c = CompletionCache::new(8, 0.7);
+        let base = q(3, 32);
+        c.put(&base, CachedAnswer { answer: 1, score: 0.8 });
+        let mut nearly = base.clone();
+        nearly[5] += 1; // one token differs
+        let hit = c.get(&nearly);
+        assert!(hit.is_some(), "1-token perturbation should hit similar tier");
+        assert_eq!(c.stats().similar_hits, 1);
+    }
+
+    #[test]
+    fn dissimilar_query_misses() {
+        let mut c = CompletionCache::new(8, 0.7);
+        c.put(&q(3, 32), CachedAnswer { answer: 1, score: 0.8 });
+        assert!(c.get(&q(99, 32)).is_none());
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = CompletionCache::new(2, 1.0);
+        c.put(&q(1, 8), CachedAnswer { answer: 1, score: 0.5 });
+        c.put(&q(2, 8), CachedAnswer { answer: 2, score: 0.5 });
+        c.get(&q(1, 8)); // touch 1 → 2 is now oldest
+        c.put(&q(3, 8), CachedAnswer { answer: 3, score: 0.5 });
+        assert!(c.get(&q(2, 8)).is_none(), "entry 2 should be evicted");
+        assert!(c.get(&q(1, 8)).is_some());
+        assert!(c.get(&q(3, 8)).is_some());
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn put_same_key_overwrites_without_eviction() {
+        let mut c = CompletionCache::new(2, 1.0);
+        c.put(&q(1, 8), CachedAnswer { answer: 1, score: 0.5 });
+        c.put(&q(1, 8), CachedAnswer { answer: 7, score: 0.9 });
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&q(1, 8)).unwrap().answer, 7);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn minhash_similarity_sane() {
+        let a = minhash(&q(5, 64));
+        assert_eq!(signature_similarity(&a, &a), 1.0);
+        let b = minhash(&q(6, 64));
+        assert!(signature_similarity(&a, &b) < 0.8);
+    }
+}

@@ -1,0 +1,80 @@
+//! Query concatenation (paper §3, Strategy 1 / Fig. 2b).
+//!
+//! Processing queries one-by-one re-sends the same few-shot prompt every
+//! time. Concatenation sends the prompt once for a group of `g` queries,
+//! so the per-query input cost drops from `prompt + query` to
+//! `prompt/g + query`. This module models the *billing* effect (which is
+//! what the strategy is about) and provides the grouping machinery the
+//! server's batcher uses to form concatenation groups.
+
+use crate::data::DatasetMeta;
+
+/// Billable input tokens per query when `group` queries share one prompt.
+///
+/// `prompt_tokens`: tokens of the shared few-shot prefix;
+/// `query_tokens`: tokens of one query segment.
+pub fn tokens_per_query(prompt_tokens: u32, query_tokens: u32, group: usize) -> f64 {
+    assert!(group > 0);
+    prompt_tokens as f64 / group as f64 + query_tokens as f64
+}
+
+/// Cost multiplier of concatenation vs. individual queries (< 1).
+pub fn savings_ratio(prompt_tokens: u32, query_tokens: u32, group: usize) -> f64 {
+    let single = (prompt_tokens + query_tokens) as f64;
+    tokens_per_query(prompt_tokens, query_tokens, group) / single
+}
+
+/// Split the prompt/query token budget of a dataset row layout.
+pub fn split_tokens(meta: &DatasetMeta) -> (u32, u32) {
+    let prompt = (meta.n_examples * meta.block_len) as u32;
+    let query = meta.query_len() as u32;
+    (prompt, query)
+}
+
+/// Greedy group former: batches queries into concatenation groups of at
+/// most `max_group`, returning group index ranges over the input order.
+pub fn form_groups(n: usize, max_group: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(max_group > 0);
+    let mut out = Vec::with_capacity(n.div_ceil(max_group));
+    let mut i = 0;
+    while i < n {
+        let j = (i + max_group).min(n);
+        out.push(i..j);
+        i = j;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_of_one_changes_nothing() {
+        assert_eq!(tokens_per_query(24, 18, 1), 42.0);
+        assert!((savings_ratio(24, 18, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn savings_grow_with_group_and_prompt_share() {
+        let r2 = savings_ratio(24, 18, 2);
+        let r8 = savings_ratio(24, 18, 8);
+        assert!(r8 < r2 && r2 < 1.0);
+        // with a prompt-dominated layout the savings approach prompt share
+        let r_big = savings_ratio(1000, 10, 100);
+        assert!(r_big < 0.03);
+    }
+
+    #[test]
+    fn groups_cover_everything_once() {
+        for (n, g) in [(10, 3), (9, 3), (1, 8), (0, 4)] {
+            let groups = form_groups(n, g);
+            let total: usize = groups.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n);
+            for w in groups.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            assert!(groups.iter().all(|r| r.len() <= g));
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! The paper's §3 cost-reduction strategies beyond the cascade.
+//!
+//! * [`cache`] — **completion cache** (LLM approximation, Fig. 2c): store
+//!   responses and reuse them for identical/similar queries.
+//! * [`prompt`] — **prompt adaptation** (Fig. 2a): shrink the few-shot
+//!   prompt to cut input-token cost.
+//! * [`concat`] — **query concatenation** (Fig. 2b): share one prompt
+//!   across several queries.
+//!
+//! All three compose with the cascade (paper "Compositions") — the
+//! `strategies_demo` example and the `report -- strategies` ablation
+//! evaluate each one and their stack.
+
+pub mod cache;
+pub mod concat;
+pub mod prompt;

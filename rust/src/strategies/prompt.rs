@@ -1,0 +1,123 @@
+//! Prompt adaptation (paper §3, Strategy 1 / Fig. 2a): *prompt selection*.
+//!
+//! Few-shot prompts dominate input-token cost. Prompt selection keeps only
+//! `k' ≤ k` in-context examples. The simulated models were trained with
+//! variable-k truncation, so accuracy degrades gracefully — and episodic
+//! queries genuinely need the examples, making the choice a real
+//! accuracy/cost trade-off (evaluated by `report -- strategies`).
+
+use crate::data::{prompt, DatasetMeta};
+
+/// A prompt-selection policy: how many in-context examples to keep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PromptPolicy {
+    /// Keep the full prompt (baseline).
+    Full,
+    /// Always keep exactly `k` examples.
+    Fixed(usize),
+    /// Keep `full` examples for queries that carry the episodic marker
+    /// (they need the prompt to be answerable) and `cheap` otherwise —
+    /// the "which examples to maintain for various queries" idea.
+    Adaptive { cheap: usize, full: usize },
+}
+
+impl PromptPolicy {
+    /// Number of examples to keep for this query.
+    pub fn keep(&self, tokens: &[i32], meta: &DatasetMeta) -> usize {
+        match *self {
+            PromptPolicy::Full => meta.n_examples,
+            PromptPolicy::Fixed(k) => k.min(meta.n_examples),
+            PromptPolicy::Adaptive { cheap, full } => {
+                if prompt::is_episodic(tokens, meta) {
+                    full.min(meta.n_examples)
+                } else {
+                    cheap.min(meta.n_examples)
+                }
+            }
+        }
+    }
+
+    /// Apply the policy: returns the (possibly truncated) token row.
+    pub fn apply(&self, tokens: &[i32], meta: &DatasetMeta) -> Vec<i32> {
+        let keep = self.keep(tokens, meta);
+        if keep >= meta.n_examples {
+            tokens.to_vec()
+        } else {
+            prompt::truncate_examples(tokens, meta, keep)
+        }
+    }
+
+    /// Billable input tokens after applying the policy.
+    pub fn input_tokens(&self, tokens: &[i32], meta: &DatasetMeta) -> u32 {
+        prompt::input_tokens(&self.apply(tokens, meta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::layout;
+
+    fn meta() -> DatasetMeta {
+        DatasetMeta {
+            name: "t".into(),
+            seq: 32,
+            n_classes: 4,
+            n_examples: 4,
+            qlen: 6,
+            block_len: 3,
+            q_offset: 12,
+            scorer_seq: 32,
+            answer_lens: vec![1; 4],
+        }
+    }
+
+    fn row(episodic: bool) -> Vec<i32> {
+        let m = meta();
+        let mut t = vec![layout::PAD; m.seq];
+        for j in 0..m.n_examples {
+            t[j * 3] = layout::SEP_EX;
+            t[j * 3 + 1] = 20 + j as i32;
+            t[j * 3 + 2] = layout::LABEL_BASE + (j % 4) as i32;
+        }
+        t[m.q_offset] = layout::CLS;
+        for p in 0..m.qlen {
+            t[m.q_offset + 1 + p] = 110 + p as i32;
+        }
+        if episodic {
+            t[m.q_offset + 2] = layout::EPI_MARK;
+        }
+        t[m.q_offset + 1 + m.qlen] = layout::QSEP;
+        t
+    }
+
+    #[test]
+    fn full_keeps_everything() {
+        let m = meta();
+        let t = row(false);
+        assert_eq!(PromptPolicy::Full.apply(&t, &m), t);
+    }
+
+    #[test]
+    fn fixed_truncates_and_saves_tokens() {
+        let m = meta();
+        let t = row(false);
+        let full = PromptPolicy::Full.input_tokens(&t, &m);
+        let cut = PromptPolicy::Fixed(1).input_tokens(&t, &m);
+        assert_eq!(full - cut, 3 * 3); // 3 dropped blocks × 3 tokens
+    }
+
+    #[test]
+    fn adaptive_spends_on_episodic_only() {
+        let m = meta();
+        let pol = PromptPolicy::Adaptive { cheap: 0, full: 4 };
+        assert_eq!(pol.keep(&row(false), &m), 0);
+        assert_eq!(pol.keep(&row(true), &m), 4);
+    }
+
+    #[test]
+    fn fixed_clamps_to_available_examples() {
+        let m = meta();
+        assert_eq!(PromptPolicy::Fixed(99).keep(&row(false), &m), 4);
+    }
+}

@@ -1,0 +1,115 @@
+//! Benchmark harness (criterion stand-in): warmup, timed iterations,
+//! mean / p50 / p95 / max, throughput, and a stable one-line report that
+//! the §Perf logs in EXPERIMENTS.md quote verbatim.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<32} iters={:<6} mean={:>10.3?} p50={:>10.3?} p95={:>10.3?} max={:>10.3?} ({:.1}/s)",
+            self.name,
+            self.iters,
+            self.mean,
+            self.p50,
+            self.p95,
+            self.max,
+            1.0 / self.mean.as_secs_f64().max(1e-12),
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed iterations, then timed iterations
+/// until `min_time` has elapsed (at least `min_iters`).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_time: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    let min_iters = 10;
+    while start.elapsed() < min_time || samples.len() < min_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    summarize(name, samples)
+}
+
+/// Benchmark with a fixed iteration count (for expensive bodies).
+pub fn bench_n<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
+    assert!(!samples.is_empty());
+    samples.sort_unstable();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        p50: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        max: samples[n - 1],
+    }
+}
+
+/// Prevent the optimizer from eliminating a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench_n("spin", 2, 50, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.p50 <= r.p95);
+        assert!(r.p95 <= r.max);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn timed_mode_reaches_min_iters() {
+        let r = bench("fast", 1, Duration::from_millis(5), || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 10);
+    }
+}

@@ -1,0 +1,14 @@
+//! In-tree substrates that would normally come from crates.io — this
+//! build environment is offline, so the repo carries its own:
+//!
+//! * [`json`] — a complete JSON parser/serializer (serde_json stand-in),
+//! * [`rng`] — a small deterministic PRNG (rand stand-in),
+//! * [`args`] — CLI flag parsing (clap stand-in),
+//! * [`bench`] — a measurement harness (criterion stand-in),
+//! * [`prop`] — randomized property testing (proptest stand-in).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,56 @@
+//! Randomized property testing (proptest stand-in).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded
+//! inputs; a failure panics with the case's seed so it can be replayed
+//! deterministically (`replay(seed, f)`). No shrinking — generators here
+//! are kept small and structured enough that the seed alone is debuggable.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` pseudo-random cases. Panics (with the seed) on the
+/// first failing case.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xF00D_0000_0000 + case;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property `{name}` failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F: FnMut(&mut Rng)>(seed: u64, mut f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        check("add-commutes", 50, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn reports_seed_on_failure() {
+        check("always-fails", 3, |rng| {
+            assert!(rng.below(10) > 100, "impossible");
+        });
+    }
+}

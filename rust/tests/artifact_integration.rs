@@ -1,0 +1,232 @@
+//! Integration tests over the real artifacts: the PJRT runtime, the AOT
+//! HLO models, and the python-generated tables must all agree.
+//!
+//! These tests are skipped (with a notice) when `make artifacts` has not
+//! run, so `cargo test` works on a fresh checkout.
+
+use frugalgpt::coordinator::cascade::{argmax, Cascade, CascadePlan, Stage};
+use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
+use frugalgpt::coordinator::scorer::Scorer;
+use frugalgpt::data::{layout, Artifacts};
+use frugalgpt::runtime::Engine;
+
+fn artifacts() -> Option<Artifacts> {
+    match Artifacts::load("artifacts") {
+        Ok(a) => Some(a),
+        Err(_) => {
+            eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_and_datasets_are_consistent() {
+    let Some(art) = artifacts() else { return };
+    assert_eq!(art.manifest.datasets.len(), 3);
+    for dm in &art.manifest.datasets {
+        assert_eq!(dm.models.len(), 12, "paper Table 1: 12 APIs");
+        let train = art.dataset(&dm.dataset, "train").unwrap();
+        let test = art.dataset(&dm.dataset, "test").unwrap();
+        assert_eq!(train.meta, dm.meta());
+        assert_eq!(test.meta, dm.meta());
+        assert_eq!(train.len(), dm.n_train);
+        assert_eq!(test.len(), dm.n_test);
+        assert_eq!(train.len() + test.len(), dm.size);
+        // token layout sanity on a sample of rows
+        for i in (0..train.len()).step_by(997) {
+            let t = train.tokens(i);
+            assert_eq!(t[dm.q_offset], layout::CLS);
+            assert_eq!(t[dm.q_offset + 1 + dm.qlen], layout::QSEP);
+            assert_eq!(t[0], layout::SEP_EX);
+            assert!(train.labels[i] < dm.n_classes as u32);
+        }
+    }
+}
+
+#[test]
+fn response_table_matches_dataset_and_accuracy() {
+    let Some(art) = artifacts() else { return };
+    for dm in &art.manifest.datasets {
+        let table = art.responses(&dm.dataset).unwrap();
+        let test = art.dataset(&dm.dataset, "test").unwrap();
+        assert_eq!(table.test.len(), test.len());
+        assert_eq!(table.test.labels, test.labels);
+        // manifest test_acc must equal the table's accuracy
+        for (m, mm) in dm.models.iter().enumerate() {
+            let acc = table.test.accuracy(m);
+            assert!(
+                (acc - mm.test_acc).abs() < 1e-6,
+                "{}/{}: table acc {acc} vs manifest {}",
+                dm.dataset,
+                mm.name,
+                mm.test_acc
+            );
+            // correct[] is consistent with preds vs labels
+            for i in (0..test.len()).step_by(457) {
+                assert_eq!(
+                    table.test.correct[m][i],
+                    table.test.preds[m][i] == test.labels[i]
+                );
+            }
+        }
+    }
+}
+
+/// THE key cross-layer test: rust PJRT execution of the AOT HLO artifacts
+/// reproduces the python-side predictions bit-for-bit (argmax level).
+#[test]
+fn pjrt_execution_matches_response_table() {
+    let Some(art) = artifacts() else { return };
+    let engine = Engine::start(&art).expect("engine");
+    let h = engine.handle();
+    for ds in ["headlines", "overruling", "coqa"] {
+        let table = art.responses(ds).unwrap();
+        let test = art.dataset(ds, "test").unwrap();
+        let n = 24.min(test.len());
+        for (mi, name) in table.test.model_names.iter().enumerate().step_by(3) {
+            let rows: Vec<Vec<i32>> = (0..n).map(|i| test.tokens(i).to_vec()).collect();
+            let outs = h.execute_batch(ds, name, rows).expect("execute");
+            for (i, logits) in outs.iter().enumerate() {
+                assert_eq!(
+                    argmax(logits) as u32,
+                    table.test.preds[mi][i],
+                    "{ds}/{name} item {i}: HLO and python disagree"
+                );
+            }
+        }
+    }
+}
+
+/// Scorer scores from PJRT match the table's scores numerically.
+#[test]
+fn pjrt_scorer_matches_table_scores() {
+    let Some(art) = artifacts() else { return };
+    let engine = Engine::start(&art).expect("engine");
+    let ctx = art.context("headlines").unwrap();
+    let scorer = Scorer::new(engine.handle(), ctx.meta.clone());
+    let gptj = ctx.table.test.model_index("gpt_j").unwrap();
+    for i in (0..ctx.test.len()).step_by(401) {
+        let answer = ctx.table.test.preds[gptj][i];
+        let live = scorer.score(ctx.test.tokens(i), answer).unwrap();
+        let table = ctx.table.test.scores[gptj][i];
+        assert!(
+            (live - table).abs() < 1e-4,
+            "item {i}: live score {live} vs table {table}"
+        );
+    }
+}
+
+/// Batch execution must equal per-row execution (padding correctness).
+#[test]
+fn batched_execution_equals_single() {
+    let Some(art) = artifacts() else { return };
+    let engine = Engine::start(&art).expect("engine");
+    let h = engine.handle();
+    let test = art.dataset("headlines", "test").unwrap();
+    // odd batch size 5 forces pad-to-8 handling
+    let rows: Vec<Vec<i32>> = (0..5).map(|i| test.tokens(i).to_vec()).collect();
+    let batched = h.execute_batch("headlines", "gpt_j", rows.clone()).unwrap();
+    for (i, row) in rows.into_iter().enumerate() {
+        let single = h.execute("headlines", "gpt_j", row).unwrap();
+        for (a, b) in batched[i].iter().zip(&single) {
+            assert!((a - b).abs() < 1e-4, "batch vs single logits differ");
+        }
+    }
+}
+
+/// Live cascade replays the offline replay exactly (same inputs → same
+/// answers and costs).
+#[test]
+fn live_cascade_matches_offline_replay() {
+    let Some(art) = artifacts() else { return };
+    let ctx = art.context("headlines").unwrap();
+    let engine = Engine::start(&art).expect("engine");
+    let plan = CascadePlan::new(vec![
+        Stage { model: ctx.costs.model_index("gpt_j").unwrap(), threshold: 0.7 },
+        Stage { model: ctx.costs.model_index("gpt4").unwrap(), threshold: 0.0 },
+    ]);
+    let cascade = Cascade::new(
+        plan.clone(),
+        engine.handle(),
+        Scorer::new(engine.handle(), ctx.meta.clone()),
+        ctx.costs.clone(),
+        ctx.meta.clone(),
+    )
+    .unwrap();
+    let mut n_checked = 0;
+    for i in (0..ctx.test.len()).step_by(251) {
+        let live = cascade.answer(ctx.test.tokens(i)).unwrap();
+        let off = frugalgpt::coordinator::cascade::replay::replay_item(
+            &plan,
+            &ctx.table.test,
+            &ctx.costs,
+            &ctx.test_tokens,
+            i,
+        );
+        assert_eq!(live.answer, off.answer, "item {i} answer");
+        assert_eq!(live.stopped_at, off.stopped_at, "item {i} stage");
+        assert!((live.cost - off.cost).abs() < 1e-9, "item {i} cost");
+        n_checked += 1;
+    }
+    assert!(n_checked >= 5);
+}
+
+/// Train-optimized cascade generalizes: test accuracy within budget ballpark
+/// and the Table-3 effect (cheaper than best individual at matched acc).
+#[test]
+fn optimizer_on_real_tables_reproduces_savings() {
+    let Some(art) = artifacts() else { return };
+    let ctx = art.context("headlines").unwrap();
+    let opt = CascadeOptimizer::new(
+        &ctx.table.train,
+        &ctx.costs,
+        ctx.train_tokens.clone(),
+        OptimizerOptions::default(),
+    )
+    .unwrap();
+    let frontier = opt.frontier();
+    assert!(frontier.len() > 5);
+    let ind = frugalgpt::eval::individual_points(&ctx.table.test, &ctx.costs, &ctx.test_tokens);
+    let best = frugalgpt::eval::best_individual(&ind);
+    // find a frontier plan matching best-individual accuracy on TEST
+    let mut matched_cost: Option<f64> = None;
+    for p in &frontier {
+        let r = frugalgpt::coordinator::cascade::replay::replay(
+            &p.plan,
+            &ctx.table.test,
+            &ctx.costs,
+            &ctx.test_tokens,
+        );
+        if r.accuracy + 1e-9 >= best.accuracy {
+            matched_cost = Some(matched_cost.map_or(r.avg_cost, |c: f64| c.min(r.avg_cost)));
+        }
+    }
+    let matched = matched_cost.expect("cascade should match best individual on HEADLINES");
+    assert!(
+        matched < best.avg_cost,
+        "matching the best individual must not cost more than it: {matched} vs {}",
+        best.avg_cost
+    );
+    // Paper framing (its Table 3 reference is GPT-4): matching GPT-4's
+    // accuracy must save ≥60% of GPT-4's cost.
+    let gpt4 = ind.iter().find(|p| p.model == "gpt4").expect("gpt4");
+    let mut vs_gpt4: Option<f64> = None;
+    for p in &frontier {
+        let r = frugalgpt::coordinator::cascade::replay::replay(
+            &p.plan,
+            &ctx.table.test,
+            &ctx.costs,
+            &ctx.test_tokens,
+        );
+        if r.accuracy + 1e-9 >= gpt4.accuracy {
+            vs_gpt4 = Some(vs_gpt4.map_or(r.avg_cost, |c: f64| c.min(r.avg_cost)));
+        }
+    }
+    let vs_gpt4 = vs_gpt4.expect("cascade should reach gpt4 accuracy on HEADLINES");
+    assert!(
+        vs_gpt4 < gpt4.avg_cost * 0.4,
+        "expected ≥60% savings vs GPT-4 at matched accuracy; got {vs_gpt4} vs {}",
+        gpt4.avg_cost
+    );
+}

@@ -1,0 +1,229 @@
+//! Property-based tests (in-tree `util::prop` harness) over coordinator
+//! invariants: routing, threshold monotonicity, optimizer budget
+//! feasibility, cache consistency, batching/grouping, and JSON round-trips.
+
+use frugalgpt::coordinator::cascade::{replay, CascadePlan, Stage};
+use frugalgpt::coordinator::optimizer::{prune_pareto, CascadeOptimizer, OptimizerOptions};
+use frugalgpt::coordinator::responses::synthetic_table;
+use frugalgpt::marketplace::CostModel;
+use frugalgpt::strategies::cache::{CachedAnswer, CompletionCache};
+use frugalgpt::strategies::concat;
+use frugalgpt::util::json::Value;
+use frugalgpt::util::prop::check;
+use frugalgpt::util::rng::Rng;
+
+fn cost_model(k: usize) -> CostModel {
+    let full = CostModel::from_table1("prop", vec![1, 1, 2, 1]);
+    CostModel {
+        dataset: full.dataset.clone(),
+        model_names: (0..k).map(|m| format!("api_{m}")).collect(),
+        pricing: full.pricing[..k].to_vec(),
+        latency: full.latency[..k].to_vec(),
+        answer_lens: full.answer_lens.clone(),
+    }
+}
+
+fn random_plan(rng: &mut Rng, k: usize) -> CascadePlan {
+    let len = 1 + rng.usize_below(3);
+    let mut models: Vec<usize> = (0..k).collect();
+    rng.shuffle(&mut models);
+    let stages = models[..len]
+        .iter()
+        .map(|&m| Stage { model: m, threshold: rng.f64() as f32 })
+        .collect();
+    CascadePlan::new(stages)
+}
+
+/// Replay accounting: stop fractions sum to 1; invoke fractions are
+/// decreasing; cost ≥ first-stage-alone cost; accuracy ∈ [0, 1].
+#[test]
+fn prop_replay_accounting() {
+    check("replay-accounting", 40, |rng| {
+        let k = 3 + rng.usize_below(6);
+        let n = 50 + rng.usize_below(300);
+        let table = synthetic_table(k, n, 2 + rng.below(6) as u32, rng.f64(), rng.next_u64());
+        let costs = cost_model(k);
+        let toks = vec![40 + rng.below(100) as u32; n];
+        let plan = random_plan(rng, k);
+        let r = replay::replay(&plan, &table, &costs, &toks);
+        let total: f64 = r.stop_frac.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "stop fractions must sum to 1");
+        for w in r.invoke_frac.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12, "invocations cannot increase downstream");
+        }
+        assert!((0.0..=1.0).contains(&r.accuracy));
+        // every query pays at least stage-0:
+        let stage0 = replay::replay(&CascadePlan::single(plan.stages[0].model), &table, &costs, &toks);
+        assert!(r.avg_cost >= stage0.avg_cost - 1e-12);
+    });
+}
+
+/// Raising any non-final threshold never decreases expected cost.
+#[test]
+fn prop_threshold_cost_monotone() {
+    check("threshold-cost-monotone", 30, |rng| {
+        let k = 4;
+        let n = 200;
+        let table = synthetic_table(k, n, 4, 0.9, rng.next_u64());
+        let costs = cost_model(k);
+        let toks = vec![50u32; n];
+        let t1 = rng.f64() as f32;
+        let t2 = (t1 + rng.f64() as f32 * (1.0 - t1)).min(1.0);
+        let mk = |t: f32| {
+            CascadePlan::new(vec![
+                Stage { model: 0, threshold: t },
+                Stage { model: 3, threshold: 0.0 },
+            ])
+        };
+        let lo = replay::replay(&mk(t1), &table, &costs, &toks);
+        let hi = replay::replay(&mk(t2), &table, &costs, &toks);
+        assert!(hi.avg_cost >= lo.avg_cost - 1e-12);
+    });
+}
+
+/// The optimizer's chosen plan always fits the budget, and its reported
+/// train metrics match an independent replay.
+#[test]
+fn prop_optimizer_feasible_and_consistent() {
+    check("optimizer-feasible", 12, |rng| {
+        let k = 4 + rng.usize_below(3);
+        let n = 150 + rng.usize_below(200);
+        let table = synthetic_table(k, n, 4, 0.6 + 0.4 * rng.f64(), rng.next_u64());
+        let costs = cost_model(k);
+        let toks = vec![45u32; n];
+        let opt = CascadeOptimizer::new(
+            &table,
+            &costs,
+            toks.clone(),
+            OptimizerOptions { grid: 8, ..Default::default() },
+        )
+        .unwrap();
+        let frontier = opt.frontier();
+        assert!(!frontier.is_empty());
+        // pick a random reachable budget
+        let fp = &frontier[rng.usize_below(frontier.len())];
+        let budget = fp.avg_cost * 1e4 * (1.0 + rng.f64());
+        let plan = opt.optimize(budget).expect("budget is reachable");
+        assert!(plan.train_cost_per_10k <= budget + 1e-9);
+        let r = replay::replay(&plan.plan, &table, &costs, &toks);
+        assert!((r.accuracy - plan.train_accuracy).abs() < 1e-9);
+        assert!((r.avg_cost - plan.train_avg_cost).abs() < 1e-9);
+    });
+}
+
+/// Pareto pruning: output is sorted, strictly improving, and contains the
+/// global accuracy maximum.
+#[test]
+fn prop_pareto_invariants() {
+    check("pareto-invariants", 40, |rng| {
+        let n = 1 + rng.usize_below(200);
+        let pts: Vec<_> = (0..n)
+            .map(|_| frugalgpt::coordinator::optimizer::FrontierPoint {
+                plan: CascadePlan::single(0),
+                accuracy: rng.f64(),
+                avg_cost: rng.f64(),
+            })
+            .collect();
+        let max_acc = pts.iter().map(|p| p.accuracy).fold(f64::MIN, f64::max);
+        let f = prune_pareto(pts);
+        assert!(!f.is_empty());
+        for w in f.windows(2) {
+            assert!(w[0].avg_cost <= w[1].avg_cost);
+            assert!(w[0].accuracy < w[1].accuracy);
+        }
+        assert!((f.last().unwrap().accuracy - max_acc).abs() < 1e-12);
+    });
+}
+
+/// Cache: after any sequence of puts/gets, len ≤ capacity and a just-put
+/// entry is retrievable (exact tier).
+#[test]
+fn prop_cache_bounded_and_consistent() {
+    check("cache-bounded", 30, |rng| {
+        let cap = 1 + rng.usize_below(32);
+        let mut cache = CompletionCache::new(cap, 1.0);
+        let mut last: Option<(Vec<i32>, u32)> = None;
+        for _ in 0..200 {
+            let q: Vec<i32> = (0..8).map(|_| rng.below(50) as i32).collect();
+            if rng.bool(0.6) {
+                let a = rng.below(4) as u32;
+                cache.put(&q, CachedAnswer { answer: a, score: 0.5 });
+                last = Some((q, a));
+            } else {
+                let _ = cache.get(&q);
+            }
+            assert!(cache.len() <= cap);
+            if let Some((lq, la)) = &last {
+                let hit = cache.get(lq).expect("most-recent put must be present");
+                assert_eq!(hit.answer, *la);
+            }
+        }
+    });
+}
+
+/// Query concatenation: per-query tokens shrink monotonically with group
+/// size and never below the query-only payload.
+#[test]
+fn prop_concat_monotone() {
+    check("concat-monotone", 50, |rng| {
+        let p = rng.below(500) as u32;
+        let q = 1 + rng.below(200) as u32;
+        let mut prev = f64::MAX;
+        for g in 1..=16 {
+            let t = concat::tokens_per_query(p, q, g);
+            assert!(t <= prev + 1e-12);
+            assert!(t >= q as f64 - 1e-12);
+            prev = t;
+        }
+    });
+}
+
+/// JSON: round-trip stability for random values.
+#[test]
+fn prop_json_roundtrip() {
+    check("json-roundtrip", 40, |rng| {
+        let v = random_json(rng, 0);
+        let s = v.to_json();
+        let v2 = Value::parse(&s).expect("serializer output must parse");
+        assert_eq!(v, v2);
+    });
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Value {
+    let choice = if depth > 3 { rng.usize_below(4) } else { rng.usize_below(6) };
+    match choice {
+        0 => Value::Null,
+        1 => Value::Bool(rng.bool(0.5)),
+        2 => Value::Num((rng.below(2_000_001) as f64 - 1_000_000.0) / 8.0),
+        3 => Value::Str(
+            (0..rng.usize_below(12))
+                .map(|_| char::from(b'a' + rng.below(26) as u8))
+                .collect(),
+        ),
+        4 => Value::Arr((0..rng.usize_below(5)).map(|_| random_json(rng, depth + 1)).collect()),
+        _ => {
+            let mut m = std::collections::HashMap::new();
+            for i in 0..rng.usize_below(5) {
+                m.insert(format!("k{i}"), random_json(rng, depth + 1));
+            }
+            Value::Obj(m)
+        }
+    }
+}
+
+/// MPI decomposition identity on random tables.
+#[test]
+fn prop_mpi_identity() {
+    check("mpi-identity", 20, |rng| {
+        let k = 3 + rng.usize_below(4);
+        let table = synthetic_table(k, 500, 4, rng.f64(), rng.next_u64());
+        for a in 0..k {
+            for b in 0..k {
+                let lhs = table.accuracy(a) - table.accuracy(b);
+                let rhs = frugalgpt::eval::mpi::mpi(&table, a, b)
+                    - frugalgpt::eval::mpi::mpi(&table, b, a);
+                assert!((lhs - rhs).abs() < 1e-9);
+            }
+        }
+    });
+}
