@@ -1,0 +1,25 @@
+# Convenience targets. Tier-1 gate = `make tier1` (ROADMAP.md).
+
+.PHONY: tier1 test bench bench-optimizer port-check
+
+tier1:
+	scripts/tier1.sh
+
+test:
+	cargo test -q
+
+# Full bench sweep (human-readable reports on stdout).
+bench:
+	cargo bench --bench optimizer
+	cargo bench --bench cache
+	cargo bench --bench scorer
+	cargo bench --bench batcher
+	cargo bench --bench cascade_e2e
+
+# Regenerate the committed optimizer perf trajectory (machine-readable).
+bench-optimizer:
+	cargo bench --bench optimizer -- --json BENCH_optimizer.json
+
+# Algorithm-equivalence + speedup harness (pure python; no toolchain).
+port-check:
+	python3 scripts/check_optimizer_port.py

@@ -56,4 +56,32 @@ fn main() {
         black_box(churn.len());
     });
     println!("{}", r.report());
+
+    // hit path at capacity 10k, cache full — the case the old
+    // VecDeque-scan `touch()` degraded on: every hit paid an O(capacity)
+    // position() walk; the intrusive list keeps it flat vs capacity.
+    let big: Vec<Vec<i32>> = (0..10_000).map(|_| query(&mut rng, 64)).collect();
+    let mut cache10k = CompletionCache::new(10_000, 1.0);
+    for q in &big {
+        cache10k.put(q, CachedAnswer { answer: 1, score: 0.9 });
+    }
+    let r = bench("cache/exact_hit_cap10k", 100, Duration::from_secs(1), || {
+        i = (i + 1) % big.len();
+        black_box(cache10k.get(&big[i]));
+    });
+    println!("{}", r.report());
+
+    // same capacity, churn: insert over a full 10k cache (evict + insert)
+    let mut churn10k = CompletionCache::new(10_000, 1.0);
+    for q in &big {
+        churn10k.put(q, CachedAnswer { answer: 1, score: 0.9 });
+    }
+    let mut fresh: Vec<Vec<i32>> = (0..1024).map(|_| query(&mut rng, 64)).collect();
+    let r = bench("cache/insert_evict_cap10k", 10, Duration::from_secs(1), || {
+        i = (i + 1) % fresh.len();
+        fresh[i][0] = (fresh[i][0] + 1) % 160;
+        churn10k.put(&fresh[i], CachedAnswer { answer: 0, score: 0.1 });
+        black_box(churn10k.len());
+    });
+    println!("{}", r.report());
 }

@@ -1,25 +1,37 @@
 //! Bench: the cascade optimizer's (L, τ) search — the paper's one-time
 //! training cost ("learning the LLM cascade itself requires resources").
-//! Regenerates the numbers quoted in EXPERIMENTS.md §Perf (L3).
+//! Regenerates the numbers quoted in EXPERIMENTS.md §Perf (L3) and, with
+//! `--json PATH` (e.g. via `make bench-optimizer`), writes the
+//! machine-readable suite document tracked in BENCH_optimizer.json.
 
 use std::time::Duration;
 
 use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
 use frugalgpt::coordinator::responses::synthetic_table;
 use frugalgpt::marketplace::CostModel;
-use frugalgpt::util::bench::{bench_n, black_box};
+use frugalgpt::util::args::Args;
+use frugalgpt::util::bench::{bench_n, black_box, suite_json, BenchResult};
+
+const K: usize = 12;
+const N: usize = 8000;
+const SEED: u64 = 99;
 
 fn main() {
+    let args = Args::from_env();
     // Synthetic 12-API table at the HEADLINES train-split size.
-    let table = synthetic_table(12, 8000, 4, 0.9, 99);
+    let table = synthetic_table(K, N, 4, 0.9, SEED);
     let costs = CostModel::from_table1("bench", vec![1, 1, 2, 1]);
     let tokens = vec![45u32; table.len()];
+    let mut results: Vec<BenchResult> = Vec::new();
 
-    for (name, grid, max_len, sub) in [
-        ("optimizer/full_m3_grid24", 24, 3, None),
-        ("optimizer/full_m3_grid8", 8, 3, None),
-        ("optimizer/coarse2000_m3_grid24", 24, 3, Some(2000)),
-        ("optimizer/pairs_only_m2", 24, 2, None),
+    // The headline number runs both single-threaded (algorithmic gain
+    // only) and with all cores (the shipping configuration).
+    for (name, grid, max_len, sub, threads) in [
+        ("optimizer/full_m3_grid24", 24, 3, None, None),
+        ("optimizer/full_m3_grid24_t1", 24, 3, None, Some(1)),
+        ("optimizer/full_m3_grid8", 8, 3, None, None),
+        ("optimizer/coarse2000_m3_grid24", 24, 3, Some(2000), None),
+        ("optimizer/pairs_only_m2", 24, 2, None, None),
     ] {
         let r = bench_n(name, 1, 5, || {
             let opt = CascadeOptimizer::new(
@@ -30,6 +42,7 @@ fn main() {
                     grid,
                     max_len,
                     coarse_subsample: sub,
+                    threads,
                     ..Default::default()
                 },
             )
@@ -37,10 +50,12 @@ fn main() {
             black_box(opt.frontier());
         });
         println!("{}", r.report());
+        results.push(r);
     }
 
     // Budget query on a prebuilt optimizer (the cheap part).
-    let opt = CascadeOptimizer::new(&table, &costs, tokens, OptimizerOptions::default()).unwrap();
+    let opt =
+        CascadeOptimizer::new(&table, &costs, tokens, OptimizerOptions::default()).unwrap();
     let r = frugalgpt::util::bench::bench(
         "optimizer/optimize_at_budget",
         2,
@@ -50,4 +65,55 @@ fn main() {
         },
     );
     println!("{}", r.report());
+    results.push(r);
+
+    if let Some(path) = args.get("json") {
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        // Preserve the committed file's `history` array (the cross-PR perf
+        // trajectory) across regenerations; only `meta`/`results` refresh.
+        // An existing-but-unparsable file aborts rather than silently
+        // destroying the trajectory record.
+        let history = match std::fs::read_to_string(path) {
+            Ok(raw) => match frugalgpt::util::json::Value::parse(&raw) {
+                Ok(v) => {
+                    let h = v.get("history").clone();
+                    h.as_arr().is_some().then(|| h.to_json())
+                }
+                Err(e) => {
+                    eprintln!(
+                        "refusing to overwrite {path}: existing file does not \
+                         parse ({e}); move it aside first"
+                    );
+                    std::process::exit(1);
+                }
+            },
+            Err(_) => None, // no existing file — start a fresh document
+        };
+        let raw_sections: Vec<(&str, String)> = match &history {
+            Some(h) => vec![("history", h.clone())],
+            None => vec![],
+        };
+        let doc = suite_json(
+            "optimizer",
+            &[
+                ("k", K.to_string()),
+                ("n", N.to_string()),
+                ("grid", "24 for the headline result; variants in result names".to_string()),
+                ("max_len", "3 (pairs_only_m2 sweeps max_len=2)".to_string()),
+                ("table_seed", SEED.to_string()),
+                ("host_threads", threads.to_string()),
+                ("regenerate", "make bench-optimizer (rewrites meta/results, preserves history)".to_string()),
+            ],
+            &results,
+            &raw_sections,
+        );
+        std::fs::write(path, doc).expect("writing bench json");
+        if history.is_some() {
+            eprintln!("wrote {path} (history entries preserved)");
+        } else {
+            eprintln!("wrote {path} (no prior history found)");
+        }
+    }
 }

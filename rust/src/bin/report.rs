@@ -245,13 +245,13 @@ fn fig3(art: &Artifacts, args: &Args) -> Result<()> {
     println!("(b) examples where GPT-4 errs but the cascade answers correctly:");
     for i in 0..ctx.table.test.len() {
         let o = replay::replay_item(&plan.plan, &ctx.table.test, &ctx.costs, &ctx.test_tokens, i);
-        if o.correct && !ctx.table.test.correct[g4][i] {
+        if o.correct && !ctx.table.test.is_correct(g4, i) {
             let stage = plan.plan.stages[o.stopped_at].model;
             println!(
                 "    item {:>5}: label={} gpt4={} cascade={} (answered by {} at stage {}, tier {})",
                 i,
                 ctx.table.test.labels[i],
-                ctx.table.test.preds[g4][i],
+                ctx.table.test.pred(g4, i),
                 o.answer,
                 ctx.costs.model_names[stage],
                 o.stopped_at,

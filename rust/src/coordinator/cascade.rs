@@ -105,12 +105,12 @@ pub mod replay {
         let last = plan.stages.len() - 1;
         for (s, stage) in plan.stages.iter().enumerate() {
             let m = stage.model;
-            let answer = table.preds[m][i];
+            let answer = table.pred(m, i);
             cost += costs.call_cost(m, input_tokens[i], answer);
-            if s == last || table.scores[m][i] > stage.threshold {
+            if s == last || table.score(m, i) > stage.threshold {
                 return ItemOutcome {
                     answer,
-                    correct: table.correct[m][i],
+                    correct: table.is_correct(m, i),
                     stopped_at: s,
                     cost,
                 };

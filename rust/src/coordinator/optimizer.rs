@@ -21,6 +21,33 @@
 //! The search yields the complete accuracy–cost *frontier* (paper Fig. 5)
 //! as a byproduct; `optimize(budget)` just picks the best frontier point
 //! within budget.
+//!
+//! §Perf — the frontier sweep is the repo's single most expensive
+//! computation (the paper's one-time cascade-training cost), so the hot
+//! path is organized for throughput:
+//!
+//! * the [`Workspace`] holds *flat model-major arenas* (cost, score
+//!   orderings) plus the K×K disagreement matrix, per-model cost totals
+//!   and correct counts, all computed **once** — `candidate_lists` does no
+//!   O(N) work per pair/triple;
+//! * the triple sweep is *incremental*: τ_a walks down the pre-sorted
+//!   `order[a]` while the escalated set, its cost/correct aggregates, and
+//!   a doubly-linked "escalated items in score_b order" list are updated
+//!   by O(1) deltas per accepted item — no per-grid-point O(N) mask
+//!   rebuilds or rescans;
+//! * threshold sweeps emit raw `(τ, accuracy, cost)` tuples and build
+//!   [`CascadePlan`]s only for locally Pareto-optimal survivors, removing
+//!   ~grid×N heap allocations per triple;
+//! * candidate lists are swept in parallel by `std::thread::scope` workers
+//!   (pure reads of the shared workspace) whose per-worker frontier
+//!   buffers are merged back in deterministic list order.
+//!
+//! The result is the same frontier as the straightforward implementation
+//! up to float summation order (last-ulp differences in `avg_cost`; the
+//! accuracy counts are exact) — `rust/tests/properties.rs` proves
+//! equivalence to 1e-12 against a brute-force reference via
+//! `replay::replay`. The parallel and sequential sweep paths of *this*
+//! implementation are bit-identical to each other (unit-tested).
 
 use anyhow::{bail, Result};
 
@@ -46,6 +73,10 @@ pub struct OptimizerOptions {
     /// Number of top candidates re-scored on the full table when
     /// `coarse_subsample` is active.
     pub rescore_top: usize,
+    /// Worker threads for the candidate sweep. `None` = all available
+    /// cores (`FRUGALGPT_SWEEP_THREADS` overrides); `Some(1)` forces the
+    /// sequential path. The frontier is identical either way.
+    pub threads: Option<usize>,
 }
 
 impl Default for OptimizerOptions {
@@ -56,6 +87,7 @@ impl Default for OptimizerOptions {
             min_disagreement: 0.02,
             coarse_subsample: None,
             rescore_top: 64,
+            threads: None,
         }
     }
 }
@@ -80,46 +112,120 @@ pub struct OptimizedPlan {
     pub train_cost_per_10k: f64,
 }
 
-/// Precomputed per-item call costs and per-model score orderings.
+/// Precomputed, read-only search state shared by every sweep worker. All
+/// per-(model, item) arrays are flat model-major arenas with stride `n`.
 struct Workspace {
-    /// `cost[m][i]` — USD of calling model m on item i.
-    cost: Vec<Vec<f64>>,
-    /// `order[m]` — item indices sorted by model-m score, descending.
-    order: Vec<Vec<u32>>,
-    /// `quantiles[m]` — score thresholds at the option grid.
+    n: usize,
+    k: usize,
+    /// `cost[m * n + i]` — USD of calling model m on item i.
+    cost: Vec<f64>,
+    /// `Σ_i cost[m][i]` (index order, so it matches a fresh rescan).
+    total_cost: Vec<f64>,
+    /// `order[m * n + j]` — item indices sorted by model-m score, desc.
+    order: Vec<u32>,
+    /// `quantiles[m]` — score thresholds at the option grid (deduped, so
+    /// ragged; kept per-model).
     quantiles: Vec<Vec<f32>>,
+    /// `disagree[a * k + b]` — P[pred_a != pred_b], symmetric, 0 diagonal.
+    disagree: Vec<f64>,
+    /// `n_correct[m]` — number of items model m answers correctly.
+    n_correct: Vec<usize>,
 }
 
 impl Workspace {
     fn build(table: &SplitTable, costs: &CostModel, input_tokens: &[u32], grid: usize) -> Self {
         let n = table.len();
         let k = table.n_models();
-        let mut cost = Vec::with_capacity(k);
-        let mut order = Vec::with_capacity(k);
+        let mut cost = Vec::with_capacity(k * n);
+        let mut total_cost = Vec::with_capacity(k);
+        let mut order = Vec::with_capacity(k * n);
         let mut quantiles = Vec::with_capacity(k);
+        let mut n_correct = Vec::with_capacity(k);
         for m in 0..k {
-            let mut c = Vec::with_capacity(n);
+            let preds = table.preds_row(m);
+            let scores = table.scores_row(m);
+            let mut total = 0.0;
             for i in 0..n {
-                c.push(costs.call_cost(m, input_tokens[i], table.preds[m][i]));
+                let c = costs.call_cost(m, input_tokens[i], preds[i]);
+                cost.push(c);
+                total += c;
             }
-            cost.push(c);
+            total_cost.push(total);
             let mut idx: Vec<u32> = (0..n as u32).collect();
             idx.sort_by(|&a, &b| {
-                table.scores[m][b as usize]
-                    .partial_cmp(&table.scores[m][a as usize])
+                scores[b as usize]
+                    .partial_cmp(&scores[a as usize])
                     .unwrap_or(std::cmp::Ordering::Equal)
             });
             let mut qs = Vec::with_capacity(grid);
             for g in 0..grid {
                 let pos = ((g + 1) * n) / (grid + 1);
                 let pos = pos.min(n.saturating_sub(1));
-                qs.push(table.scores[m][idx[pos] as usize]);
+                qs.push(scores[idx[pos] as usize]);
             }
             qs.dedup();
-            order.push(idx);
+            order.extend_from_slice(&idx);
             quantiles.push(qs);
+            n_correct.push(table.correct_row(m).iter().filter(|&&c| c).count());
         }
-        Workspace { cost, order, quantiles }
+        // K×K disagreement, O(K²N/2) once — the candidate enumeration used
+        // to recompute these inside its nested loops.
+        let mut disagree = vec![0.0; k * k];
+        for a in 0..k {
+            let pa = table.preds_row(a);
+            for b in (a + 1)..k {
+                let pb = table.preds_row(b);
+                let d = pa.iter().zip(pb).filter(|&(x, y)| x != y).count();
+                let frac = d as f64 / n.max(1) as f64;
+                disagree[a * k + b] = frac;
+                disagree[b * k + a] = frac;
+            }
+        }
+        Workspace { n, k, cost, total_cost, order, quantiles, disagree, n_correct }
+    }
+
+    #[inline]
+    fn cost_row(&self, m: usize) -> &[f64] {
+        &self.cost[m * self.n..(m + 1) * self.n]
+    }
+
+    #[inline]
+    fn order_row(&self, m: usize) -> &[u32] {
+        &self.order[m * self.n..(m + 1) * self.n]
+    }
+
+    #[inline]
+    fn mean_cost(&self, m: usize) -> f64 {
+        self.total_cost[m] / self.n.max(1) as f64
+    }
+
+    #[inline]
+    fn accuracy(&self, m: usize) -> f64 {
+        self.n_correct[m] as f64 / self.n.max(1) as f64
+    }
+}
+
+/// Reusable per-worker buffers for the threshold sweeps, so the hot loop
+/// never allocates proportionally to N per candidate list.
+struct SweepScratch {
+    /// `rank[i]` — position of item i in `order[b]` (rebuilt per triple).
+    rank: Vec<u32>,
+    /// Doubly-linked list over `order[b]` ranks of still-escalated items;
+    /// index `n` is the circular sentinel.
+    prev: Vec<u32>,
+    next: Vec<u32>,
+    /// Raw `(τ, accuracy, avg_cost)` candidates of one local sweep.
+    raw: Vec<(f32, f64, f64)>,
+}
+
+impl SweepScratch {
+    fn new(n: usize) -> Self {
+        SweepScratch {
+            rank: vec![0; n],
+            prev: vec![0; n + 1],
+            next: vec![0; n + 1],
+            raw: Vec::new(),
+        }
     }
 }
 
@@ -170,25 +276,21 @@ impl<'a> CascadeOptimizer<'a> {
         })
     }
 
-    /// Disagreement P[pred_a != pred_b] between two models.
+    /// Disagreement P[pred_a != pred_b] between two models (precomputed).
     pub fn disagreement(&self, a: usize, b: usize) -> f64 {
-        let n = self.table.len();
-        let mut d = 0usize;
-        for i in 0..n {
-            d += (self.table.preds[a][i] != self.table.preds[b][i]) as usize;
-        }
-        d as f64 / n.max(1) as f64
+        self.ws.disagree[a * self.ws.k + b]
     }
 
     /// Mean cost of always calling model m (USD per query).
     fn model_cost(&self, m: usize) -> f64 {
-        let n = self.table.len();
-        self.ws.cost[m].iter().sum::<f64>() / n.max(1) as f64
+        self.ws.mean_cost(m)
     }
 
-    /// Enumerate candidate lists of length 1..=max_len with pruning.
-    fn candidate_lists(&self) -> Vec<Vec<usize>> {
-        let k = self.table.n_models();
+    /// Enumerate candidate lists of length 1..=max_len with pruning. Pure
+    /// table-driven lookups against the precomputed workspace — no O(N)
+    /// work inside the nested loops.
+    pub fn candidate_lists(&self) -> Vec<Vec<usize>> {
+        let k = self.ws.k;
         let eps = self.options.min_disagreement;
         let mut lists: Vec<Vec<usize>> = (0..k).map(|m| vec![m]).collect();
         if self.options.max_len >= 2 {
@@ -201,7 +303,7 @@ impl<'a> CascadeOptimizer<'a> {
                     // pay off only if the front stage is cheaper; prune
                     // front stages that are both pricier and weaker.
                     if self.model_cost(a) > self.model_cost(b)
-                        && self.table.accuracy(a) < self.table.accuracy(b)
+                        && self.ws.accuracy(a) < self.ws.accuracy(b)
                     {
                         continue;
                     }
@@ -221,7 +323,7 @@ impl<'a> CascadeOptimizer<'a> {
                         continue;
                     }
                     if self.model_cost(b) > self.model_cost(c)
-                        && self.table.accuracy(b) < self.table.accuracy(c)
+                        && self.ws.accuracy(b) < self.ws.accuracy(c)
                     {
                         continue;
                     }
@@ -236,207 +338,251 @@ impl<'a> CascadeOptimizer<'a> {
     /// points to `out`. Exact for length ≤ 2 (full O(N) sweep); for
     /// triples the first threshold runs on the quantile grid and the
     /// second gets a full sweep conditioned on it.
-    fn sweep_list(&self, list: &[usize], out: &mut Vec<FrontierPoint>) {
-        let n = self.table.len();
+    fn sweep_list(&self, list: &[usize], scratch: &mut SweepScratch, out: &mut Vec<FrontierPoint>) {
         match list.len() {
             1 => {
                 let m = list[0];
                 out.push(FrontierPoint {
                     plan: CascadePlan::single(m),
-                    accuracy: self.table.accuracy(m),
+                    accuracy: self.ws.accuracy(m),
                     avg_cost: self.model_cost(m),
                 });
             }
-            2 => {
-                let (a, b) = (list[0], list[1]);
-                self.sweep_pair(a, b, None, n, out);
-            }
-            3 => {
-                let (a, b, c) = (list[0], list[1], list[2]);
-                // Grid over τ_a; for each, a full conditional sweep of τ_b.
-                for &tau_a in &self.ws.quantiles[a] {
-                    self.sweep_triple_fixed_first(a, tau_a, b, c, out);
-                }
-            }
+            2 => self.sweep_pair(list[0], list[1], scratch, out),
+            3 => self.sweep_triple(list[0], list[1], list[2], scratch, out),
             _ => unreachable!("lists are length 1..=3"),
         }
     }
 
-    /// Exact sweep of a 2-stage cascade `[a(τ) → b]`, optionally restricted
-    /// to items where `mask[i]` (used by the triple sweep).
+    /// Exact sweep of a 2-stage cascade `[a(τ) → b]`: walk items in
+    /// descending score_a order; cutting after the j-th item means top-j
+    /// accepted at stage a, the rest escalate to b.
     fn sweep_pair(
         &self,
         a: usize,
         b: usize,
-        mask: Option<&[bool]>,
-        _n: usize,
+        scratch: &mut SweepScratch,
         out: &mut Vec<FrontierPoint>,
     ) {
-        // Walk items in descending score_a order. Cutting after the j-th
-        // item means: top-j accepted at stage a, the rest escalate to b.
-        let order = &self.ws.order[a];
-        let scores = &self.table.scores[a];
+        let n = self.ws.n;
+        let order = self.ws.order_row(a);
+        let scores = self.table.scores_row(a);
+        let corr_a = self.table.correct_row(a);
+        let corr_b = self.table.correct_row(b);
+        let cost_b = self.ws.cost_row(b);
 
-        let mut total_cost_a = 0.0;
-        let mut total_cost_b = 0.0;
-        let mut total_corr_b = 0usize;
-        let mut n_eff = 0usize;
-        for &iu in order.iter() {
-            let i = iu as usize;
-            if mask.map_or(false, |m| !m[i]) {
-                continue;
-            }
-            n_eff += 1;
-            total_cost_a += self.ws.cost[a][i];
-            total_cost_b += self.ws.cost[b][i];
-            total_corr_b += self.table.correct[b][i] as usize;
-        }
-        if n_eff == 0 {
-            return;
-        }
-
+        let total_cost_a = self.ws.total_cost[a];
         let mut acc_corr_a = 0usize; // correct among accepted (top-j)
-        let mut acc_corr_b = total_corr_b;
-        let mut esc_cost_b = total_cost_b;
-        let mut best_for_cut: Vec<FrontierPoint> = Vec::new();
-        let mut j = 0usize;
+        let mut acc_corr_b = self.ws.n_correct[b];
+        let mut esc_cost_b = self.ws.total_cost[b];
+        let inv_n = 1.0 / n as f64;
+        let raw = &mut scratch.raw;
+        raw.clear();
         let mut prev_score = f32::INFINITY;
-        let inv_n = 1.0 / n_eff as f64;
-        for &iu in order.iter() {
+        for &iu in order {
             let i = iu as usize;
-            if mask.map_or(false, |m| !m[i]) {
-                continue;
-            }
             let s = scores[i];
             // A valid threshold separates distinct score values; emit the
             // point for the cut *before* item i when the score drops.
             if s < prev_score {
-                let tau = prev_midpoint(prev_score, s);
-                let acc = (acc_corr_a + acc_corr_b) as f64 * inv_n;
-                let cost = (total_cost_a + esc_cost_b) * inv_n;
-                best_for_cut.push(FrontierPoint {
-                    plan: CascadePlan::new(vec![
-                        Stage { model: a, threshold: tau },
-                        Stage { model: b, threshold: 0.0 },
-                    ]),
-                    accuracy: acc,
-                    avg_cost: cost,
-                });
+                raw.push((
+                    prev_midpoint(prev_score, s),
+                    (acc_corr_a + acc_corr_b) as f64 * inv_n,
+                    (total_cost_a + esc_cost_b) * inv_n,
+                ));
             }
             // accept item i at stage a:
-            acc_corr_a += self.table.correct[a][i] as usize;
-            acc_corr_b -= self.table.correct[b][i] as usize;
-            esc_cost_b -= self.ws.cost[b][i];
+            acc_corr_a += corr_a[i] as usize;
+            acc_corr_b -= corr_b[i] as usize;
+            esc_cost_b -= cost_b[i];
             prev_score = s;
-            j += 1;
         }
-        let _ = j;
         // Cut after everything = stage a alone never escalates; τ below min.
-        best_for_cut.push(FrontierPoint {
+        raw.push((-1.0, acc_corr_a as f64 * inv_n, total_cost_a * inv_n));
+        prune_pareto_raw(raw);
+        out.extend(raw.iter().map(|&(tau, accuracy, avg_cost)| FrontierPoint {
             plan: CascadePlan::new(vec![
-                Stage { model: a, threshold: -1.0 },
+                Stage { model: a, threshold: tau },
                 Stage { model: b, threshold: 0.0 },
             ]),
-            accuracy: acc_corr_a as f64 * inv_n,
-            avg_cost: total_cost_a * inv_n,
-        });
-        out.extend(prune_pareto(best_for_cut));
+            accuracy,
+            avg_cost,
+        }));
     }
 
-    /// Triple sweep with the first threshold fixed: items with
-    /// `score_a > tau_a` stop at `a`; the rest replay `[b(τ_b) → c]`.
-    fn sweep_triple_fixed_first(
+    /// Full τ_a-grid sweep of the 3-stage cascade `[a(τ_a) → b(τ_b) → c]`,
+    /// incremental in τ_a: items with `score_a > τ_a` stop at `a`; the
+    /// rest replay `[b(τ_b) → c]` with a full conditional τ_b sweep.
+    ///
+    /// τ_a only ever *decreases* along the quantile grid, so the escalated
+    /// set only shrinks: each item is accepted at stage a exactly once,
+    /// updating the escalation aggregates and unlinking itself from the
+    /// score_b-ordered list in O(1). Per grid point the conditional sweep
+    /// then costs O(|escalated|), not O(N) — and nothing is rebuilt.
+    fn sweep_triple(
         &self,
         a: usize,
-        tau_a: f32,
         b: usize,
         c: usize,
+        scratch: &mut SweepScratch,
         out: &mut Vec<FrontierPoint>,
     ) {
-        let n = self.table.len();
-        // §Perf: hoist all row slices out of the hot loops — indexing
-        // `Vec<Vec<_>>[m][i]` repeatedly defeats bounds-check elimination
-        // and costs ~2x on this, the optimizer's dominant inner loop.
-        let scores_a = &self.table.scores[a][..n];
-        let scores_b = &self.table.scores[b][..n];
-        let corr_a = &self.table.correct[a][..n];
-        let corr_b = &self.table.correct[b][..n];
-        let corr_c = &self.table.correct[c][..n];
-        let cost_a = &self.ws.cost[a][..n];
-        let cost_b = &self.ws.cost[b][..n];
-        let cost_c = &self.ws.cost[c][..n];
+        let n = self.ws.n;
+        let sentinel = n;
+        let scores_a = self.table.scores_row(a);
+        let scores_b = self.table.scores_row(b);
+        let corr_a = self.table.correct_row(a);
+        let corr_b = self.table.correct_row(b);
+        let corr_c = self.table.correct_row(c);
+        let cost_b = self.ws.cost_row(b);
+        let cost_c = self.ws.cost_row(c);
+        let order_a = self.ws.order_row(a);
+        let order_b = self.ws.order_row(b);
 
-        let mut mask = vec![false; n]; // true = escalated past stage a
-        let mut acc_corr_a = 0usize;
-        let mut base_cost = 0.0; // everyone pays stage a
-        let mut n_esc = 0usize;
-        for i in 0..n {
-            base_cost += cost_a[i];
-            if scores_a[i] > tau_a {
-                acc_corr_a += corr_a[i] as usize;
-            } else {
-                mask[i] = true;
-                n_esc += 1;
-            }
+        let SweepScratch { rank, prev, next, raw } = scratch;
+        // rank[i] = position of item i in order_b; the linked list chains
+        // all ranks (everything starts escalated under τ_a = +∞).
+        for (r, &iu) in order_b.iter().enumerate() {
+            rank[iu as usize] = r as u32;
         }
-        if n_esc == 0 {
-            return; // degenerates to the single [a]; covered elsewhere.
+        for r in 0..=n {
+            next[r] = if r == n { 0 } else { (r + 1) as u32 };
+            prev[r] = if r == 0 { sentinel as u32 } else { (r - 1) as u32 };
         }
 
-        // Conditional sweep of τ_b over escalated items, in score_b order.
-        let order_b = &self.ws.order[b];
-        let mut esc_cost_b_total = 0.0;
-        let mut esc_corr_c = 0usize;
-        let mut esc_cost_c = 0.0;
-        for i in 0..n {
-            if mask[i] {
-                esc_cost_b_total += cost_b[i];
-                esc_corr_c += corr_c[i] as usize;
-                esc_cost_c += cost_c[i];
-            }
-        }
+        let base_cost = self.ws.total_cost[a]; // everyone pays stage a
+        let mut acc_corr_a = 0usize; // correct among items accepted at a
+        let mut n_esc = n;
+        let mut esc_cost_b = self.ws.total_cost[b];
+        let mut esc_corr_c = self.ws.n_correct[c];
+        let mut esc_cost_c = self.ws.total_cost[c];
+
         let inv_n = 1.0 / n as f64;
-        let mut corr_b_acc = 0usize;
-        let mut rem_corr_c = esc_corr_c;
-        let mut rem_cost_c = esc_cost_c;
-        let mut prev_score = f32::INFINITY;
-        let mut pts = Vec::new();
-        for &iu in order_b.iter() {
-            let i = iu as usize;
-            if !mask[i] {
-                continue;
+        let mut accepted = 0usize; // prefix of order_a accepted at stage a
+        for &tau_a in &self.ws.quantiles[a] {
+            // Delta-accept every item whose score_a clears the new τ_a.
+            while accepted < n {
+                let i = order_a[accepted] as usize;
+                if scores_a[i] <= tau_a {
+                    break;
+                }
+                acc_corr_a += corr_a[i] as usize;
+                esc_cost_b -= cost_b[i];
+                esc_corr_c -= corr_c[i] as usize;
+                esc_cost_c -= cost_c[i];
+                let r = rank[i] as usize;
+                let (p, nx) = (prev[r] as usize, next[r] as usize);
+                next[p] = nx as u32;
+                prev[nx] = p as u32;
+                n_esc -= 1;
+                accepted += 1;
             }
-            let s = scores_b[i];
-            if s < prev_score {
-                let tau_b = prev_midpoint(prev_score, s);
-                let acc = (acc_corr_a + corr_b_acc + rem_corr_c) as f64 * inv_n;
-                let cost = (base_cost + esc_cost_b_total + rem_cost_c) * inv_n;
-                pts.push(FrontierPoint {
-                    plan: CascadePlan::new(vec![
-                        Stage { model: a, threshold: tau_a },
-                        Stage { model: b, threshold: tau_b },
-                        Stage { model: c, threshold: 0.0 },
-                    ]),
-                    accuracy: acc,
-                    avg_cost: cost,
-                });
+            if n_esc == 0 {
+                // Degenerates to the single [a] for this and every lower
+                // τ_a (the escalated set only shrinks); covered elsewhere.
+                break;
             }
-            corr_b_acc += corr_b[i] as usize;
-            rem_corr_c -= corr_c[i] as usize;
-            rem_cost_c -= cost_c[i];
-            prev_score = s;
+
+            // Conditional sweep of τ_b over escalated items, in score_b
+            // order (the linked list), with suffix aggregates peeled off.
+            raw.clear();
+            let mut corr_b_acc = 0usize;
+            let mut rem_corr_c = esc_corr_c;
+            let mut rem_cost_c = esc_cost_c;
+            let mut prev_score = f32::INFINITY;
+            let mut r = next[sentinel] as usize;
+            while r != sentinel {
+                let i = order_b[r] as usize;
+                let s = scores_b[i];
+                if s < prev_score {
+                    raw.push((
+                        prev_midpoint(prev_score, s),
+                        (acc_corr_a + corr_b_acc + rem_corr_c) as f64 * inv_n,
+                        (base_cost + esc_cost_b + rem_cost_c) * inv_n,
+                    ));
+                }
+                corr_b_acc += corr_b[i] as usize;
+                rem_corr_c -= corr_c[i] as usize;
+                rem_cost_c -= cost_c[i];
+                prev_score = s;
+                r = next[r] as usize;
+            }
+            // τ_b below min: b answers every escalated item.
+            raw.push((
+                -1.0,
+                (acc_corr_a + corr_b_acc) as f64 * inv_n,
+                (base_cost + esc_cost_b) * inv_n,
+            ));
+            prune_pareto_raw(raw);
+            out.extend(raw.iter().map(|&(tau_b, accuracy, avg_cost)| FrontierPoint {
+                plan: CascadePlan::new(vec![
+                    Stage { model: a, threshold: tau_a },
+                    Stage { model: b, threshold: tau_b },
+                    Stage { model: c, threshold: 0.0 },
+                ]),
+                accuracy,
+                avg_cost,
+            }));
         }
-        // τ_b below min: b answers every escalated item.
-        pts.push(FrontierPoint {
-            plan: CascadePlan::new(vec![
-                Stage { model: a, threshold: tau_a },
-                Stage { model: b, threshold: -1.0 },
-                Stage { model: c, threshold: 0.0 },
-            ]),
-            accuracy: (acc_corr_a + corr_b_acc) as f64 * inv_n,
-            avg_cost: (base_cost + esc_cost_b_total) * inv_n,
+    }
+
+    /// Sweep every candidate list, fanning the (read-only) work across
+    /// scoped worker threads. Workers take lists round-robin and their
+    /// buffers are merged back in list order, so the combined point stream
+    /// — and therefore the final pruned frontier — is identical to the
+    /// sequential sweep.
+    fn sweep_all(&self, lists: &[Vec<usize>]) -> Vec<FrontierPoint> {
+        let n_workers = self
+            .options
+            .threads
+            .or_else(|| {
+                std::env::var("FRUGALGPT_SWEEP_THREADS").ok().and_then(|v| v.parse().ok())
+            })
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+            })
+            .clamp(1, lists.len().max(1));
+        if n_workers == 1 {
+            let mut scratch = SweepScratch::new(self.ws.n);
+            let mut out = Vec::new();
+            for list in lists {
+                self.sweep_list(list, &mut scratch, &mut out);
+            }
+            return out;
+        }
+        let per_worker: Vec<Vec<(usize, Vec<FrontierPoint>)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n_workers)
+                .map(|w| {
+                    s.spawn(move || {
+                        let mut scratch = SweepScratch::new(self.ws.n);
+                        let mut done = Vec::new();
+                        let mut idx = w;
+                        while idx < lists.len() {
+                            let mut pts = Vec::new();
+                            self.sweep_list(&lists[idx], &mut scratch, &mut pts);
+                            done.push((idx, pts));
+                            idx += n_workers;
+                        }
+                        done
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("sweep worker panicked"))
+                .collect()
         });
-        out.extend(prune_pareto(pts));
+        let mut slots: Vec<Vec<FrontierPoint>> = (0..lists.len()).map(|_| Vec::new()).collect();
+        for chunk in per_worker {
+            for (idx, pts) in chunk {
+                slots[idx] = pts;
+            }
+        }
+        let mut out = Vec::new();
+        for pts in slots {
+            out.extend(pts);
+        }
+        out
     }
 
     /// Compute the global accuracy–cost frontier over all candidate plans.
@@ -465,11 +611,7 @@ impl<'a> CascadeOptimizer<'a> {
                     },
                 )
                 .expect("subsample optimizer");
-                let mut coarse = Vec::new();
-                for list in sub_opt.candidate_lists() {
-                    sub_opt.sweep_list(&list, &mut coarse);
-                }
-                let coarse = prune_pareto(coarse);
+                let coarse = prune_pareto(sub_opt.sweep_all(&sub_opt.candidate_lists()));
                 // Re-score the best candidates exactly on the full table.
                 let take = self.options.rescore_top.max(1);
                 let start = coarse.len().saturating_sub(take);
@@ -491,13 +633,7 @@ impl<'a> CascadeOptimizer<'a> {
                     .collect();
                 prune_pareto(rescored)
             }
-            _ => {
-                let mut pts = Vec::new();
-                for list in self.candidate_lists() {
-                    self.sweep_list(&list, &mut pts);
-                }
-                prune_pareto(pts)
-            }
+            _ => prune_pareto(self.sweep_all(&self.candidate_lists())),
         }
     }
 
@@ -559,6 +695,26 @@ fn prev_midpoint(hi: f32, lo: f32) -> f32 {
     }
 }
 
+/// In-place Pareto prune over raw `(τ, accuracy, cost)` sweep tuples —
+/// same ordering and tie rules as [`prune_pareto`], applied *before* any
+/// `CascadePlan` is allocated (the dominated majority never materializes).
+fn prune_pareto_raw(pts: &mut Vec<(f32, f64, f64)>) {
+    pts.sort_by(|a, b| {
+        a.2.partial_cmp(&b.2)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal))
+    });
+    let mut best_acc = f64::NEG_INFINITY;
+    pts.retain(|&(_, acc, _)| {
+        if acc > best_acc + 1e-12 {
+            best_acc = acc;
+            true
+        } else {
+            false
+        }
+    });
+}
+
 /// Keep only Pareto-optimal points (no other point has ≤ cost and ≥ acc),
 /// sorted by ascending cost.
 pub fn prune_pareto(mut pts: Vec<FrontierPoint>) -> Vec<FrontierPoint> {
@@ -614,6 +770,34 @@ mod tests {
         for w in f.windows(2) {
             assert!(w[0].avg_cost <= w[1].avg_cost);
             assert!(w[0].accuracy < w[1].accuracy);
+        }
+    }
+
+    #[test]
+    fn parallel_and_sequential_sweeps_agree() {
+        let (t, cm) = setup();
+        let toks = uniform_tokens(t.len(), 125);
+        let seq = CascadeOptimizer::new(
+            &t,
+            &cm,
+            toks.clone(),
+            OptimizerOptions { threads: Some(1), ..Default::default() },
+        )
+        .unwrap()
+        .frontier();
+        let par = CascadeOptimizer::new(
+            &t,
+            &cm,
+            toks,
+            OptimizerOptions { threads: Some(4), ..Default::default() },
+        )
+        .unwrap()
+        .frontier();
+        assert_eq!(seq.len(), par.len());
+        for (x, y) in seq.iter().zip(&par) {
+            assert_eq!(x.plan, y.plan);
+            assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits());
+            assert_eq!(x.avg_cost.to_bits(), y.avg_cost.to_bits());
         }
     }
 
@@ -691,6 +875,15 @@ mod tests {
         let d = opt.disagreement(0, 7);
         assert!(d > 0.05, "weak vs strong models should disagree, d={d}");
         assert_eq!(opt.disagreement(3, 3), 0.0);
+        // precomputed matrix must match a direct recount
+        let direct = t
+            .preds_row(0)
+            .iter()
+            .zip(t.preds_row(7))
+            .filter(|&(x, y)| x != y)
+            .count() as f64
+            / t.len() as f64;
+        assert!((d - direct).abs() < 1e-15);
     }
 
     #[test]
@@ -736,5 +929,34 @@ mod tests {
         assert_eq!(f[0].avg_cost, 0.5);
         assert_eq!(f[1].avg_cost, 1.0);
         assert_eq!(f[2].avg_cost, 3.0);
+    }
+
+    #[test]
+    fn raw_prune_matches_plan_prune() {
+        // prune_pareto_raw must select exactly the tuples whose (acc, cost)
+        // survive prune_pareto on equivalent FrontierPoints.
+        let tuples = vec![
+            (0.9f32, 0.50, 1.0),
+            (0.8, 0.40, 2.0),
+            (0.7, 0.90, 3.0),
+            (0.6, 0.45, 0.5),
+            (0.5, 0.50, 1.0), // exact duplicate of #0 in (acc, cost)
+        ];
+        let pts: Vec<FrontierPoint> = tuples
+            .iter()
+            .map(|&(_, a, c)| FrontierPoint {
+                plan: CascadePlan::single(0),
+                accuracy: a,
+                avg_cost: c,
+            })
+            .collect();
+        let via_plans = prune_pareto(pts);
+        let mut raw = tuples.clone();
+        prune_pareto_raw(&mut raw);
+        assert_eq!(via_plans.len(), raw.len());
+        for (p, &(_, a, c)) in via_plans.iter().zip(&raw) {
+            assert_eq!(p.accuracy.to_bits(), a.to_bits());
+            assert_eq!(p.avg_cost.to_bits(), c.to_bits());
+        }
     }
 }

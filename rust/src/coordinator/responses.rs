@@ -9,6 +9,14 @@
 //! The Rust runtime independently re-verifies a sample of the table by
 //! executing the AOT artifacts through PJRT (see `rust/tests/`), proving
 //! the HLO artifacts and the python training path agree.
+//!
+//! §Perf: all per-(model, item) data lives in *flat model-major arenas*
+//! (one contiguous allocation per field, stride = `len()`), not
+//! `Vec<Vec<_>>`. The optimizer's inner loops run over `*_row(m)` slices,
+//! which the compiler can bounds-check once per loop instead of once per
+//! element, and adjacent items share cache lines. Field access goes
+//! through accessors so the layout can keep evolving (a packed correctness
+//! bitset is the planned next step — see ROADMAP.md).
 
 use std::path::Path;
 
@@ -16,27 +24,56 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Value;
 
-/// Responses of all APIs on one split, in model-major dense arrays.
+/// Responses of all APIs on one split, in flat model-major dense arenas.
 #[derive(Debug, Clone)]
 pub struct SplitTable {
     pub dataset: String,
     pub model_names: Vec<String>,
     pub labels: Vec<u32>,
-    /// `preds[m][i]`: model m's answer class on item i.
-    pub preds: Vec<Vec<u32>>,
-    /// `scores[m][i]`: scorer reliability of (query i, model m's answer).
-    pub scores: Vec<Vec<f32>>,
-    /// `correct[m][i]`.
-    pub correct: Vec<Vec<bool>>,
+    /// Items per model (row stride of the arenas below).
+    n: usize,
+    /// `preds[m * n + i]`: model m's answer class on item i.
+    preds: Vec<u32>,
+    /// `scores[m * n + i]`: scorer reliability of (query i, model m's answer).
+    scores: Vec<f32>,
+    /// `correct[m * n + i]`.
+    correct: Vec<bool>,
 }
 
 impl SplitTable {
+    /// Build from per-model rows (validates that all rows have the same
+    /// length as `labels`).
+    pub fn from_rows(
+        dataset: String,
+        model_names: Vec<String>,
+        labels: Vec<u32>,
+        rows: Vec<ModelRow>,
+    ) -> Result<Self> {
+        let n = labels.len();
+        if rows.len() != model_names.len() {
+            bail!("{} model rows for {} model names", rows.len(), model_names.len());
+        }
+        let k = rows.len();
+        let mut preds = Vec::with_capacity(k * n);
+        let mut scores = Vec::with_capacity(k * n);
+        let mut correct = Vec::with_capacity(k * n);
+        for (row, name) in rows.into_iter().zip(&model_names) {
+            if row.pred.len() != n || row.score.len() != n || row.correct.len() != n {
+                bail!("model {name}: ragged response arrays");
+            }
+            preds.extend_from_slice(&row.pred);
+            scores.extend_from_slice(&row.score);
+            correct.extend_from_slice(&row.correct);
+        }
+        Ok(SplitTable { dataset, model_names, labels, n, preds, scores, correct })
+    }
+
     pub fn len(&self) -> usize {
-        self.labels.len()
+        self.n
     }
 
     pub fn is_empty(&self) -> bool {
-        self.labels.is_empty()
+        self.n == 0
     }
 
     pub fn n_models(&self) -> usize {
@@ -47,22 +84,68 @@ impl SplitTable {
         self.model_names.iter().position(|n| n == name)
     }
 
+    /// Model m's answer class on item i.
+    #[inline(always)]
+    pub fn pred(&self, m: usize, i: usize) -> u32 {
+        self.preds[m * self.n + i]
+    }
+
+    /// Reliability score of (query i, model m's answer).
+    #[inline(always)]
+    pub fn score(&self, m: usize, i: usize) -> f32 {
+        self.scores[m * self.n + i]
+    }
+
+    /// Whether model m answers item i correctly.
+    #[inline(always)]
+    pub fn is_correct(&self, m: usize, i: usize) -> bool {
+        self.correct[m * self.n + i]
+    }
+
+    /// All of model m's answer classes (len = `len()`).
+    #[inline]
+    pub fn preds_row(&self, m: usize) -> &[u32] {
+        &self.preds[m * self.n..(m + 1) * self.n]
+    }
+
+    /// All of model m's reliability scores (len = `len()`).
+    #[inline]
+    pub fn scores_row(&self, m: usize) -> &[f32] {
+        &self.scores[m * self.n..(m + 1) * self.n]
+    }
+
+    /// Model m's per-item correctness (len = `len()`).
+    #[inline]
+    pub fn correct_row(&self, m: usize) -> &[bool] {
+        &self.correct[m * self.n..(m + 1) * self.n]
+    }
+
     /// Accuracy of a single model.
     pub fn accuracy(&self, m: usize) -> f64 {
-        let n = self.len().max(1);
-        self.correct[m].iter().filter(|&&c| c).count() as f64 / n as f64
+        let n = self.n.max(1);
+        self.correct_row(m).iter().filter(|&&c| c).count() as f64 / n as f64
     }
 
     /// Restrict the table to the first `n` items (coarse optimizer pass).
     pub fn head(&self, n: usize) -> SplitTable {
-        let n = n.min(self.len());
+        let n = n.min(self.n);
+        let k = self.n_models();
+        let mut preds = Vec::with_capacity(k * n);
+        let mut scores = Vec::with_capacity(k * n);
+        let mut correct = Vec::with_capacity(k * n);
+        for m in 0..k {
+            preds.extend_from_slice(&self.preds_row(m)[..n]);
+            scores.extend_from_slice(&self.scores_row(m)[..n]);
+            correct.extend_from_slice(&self.correct_row(m)[..n]);
+        }
         SplitTable {
             dataset: self.dataset.clone(),
             model_names: self.model_names.clone(),
             labels: self.labels[..n].to_vec(),
-            preds: self.preds.iter().map(|v| v[..n].to_vec()).collect(),
-            scores: self.scores.iter().map(|v| v[..n].to_vec()).collect(),
-            correct: self.correct.iter().map(|v| v[..n].to_vec()).collect(),
+            n,
+            preds,
+            scores,
+            correct,
         }
     }
 
@@ -74,11 +157,8 @@ impl SplitTable {
             .iter()
             .map(|x| x.as_u32().unwrap_or(0))
             .collect();
-        let n = labels.len();
         let models = raw.get("models");
-        let mut preds = Vec::new();
-        let mut scores = Vec::new();
-        let mut correct = Vec::new();
+        let mut rows = Vec::with_capacity(names.len());
         for name in names {
             let m = models.get(name);
             if m.as_obj().is_none() {
@@ -98,29 +178,25 @@ impl SplitTable {
                 .iter()
                 .map(|x| x.as_f64().unwrap_or(0.0) as f32)
                 .collect();
-            let corr: Vec<bool> = m
+            let correct: Vec<bool> = m
                 .get("correct")
                 .as_arr()
                 .context("correct not array")?
                 .iter()
                 .map(|x| x.as_f64().unwrap_or(0.0) != 0.0)
                 .collect();
-            if pred.len() != n || score.len() != n || corr.len() != n {
-                bail!("model {name}: ragged response arrays");
-            }
-            preds.push(pred);
-            scores.push(score);
-            correct.push(corr);
+            rows.push(ModelRow { pred, score, correct });
         }
-        Ok(SplitTable {
-            dataset: dataset.to_string(),
-            model_names: names.to_vec(),
-            labels,
-            preds,
-            scores,
-            correct,
-        })
+        SplitTable::from_rows(dataset.to_string(), names.to_vec(), labels, rows)
     }
+}
+
+/// One model's responses over a split, used to assemble a [`SplitTable`].
+#[derive(Debug, Clone, Default)]
+pub struct ModelRow {
+    pub pred: Vec<u32>,
+    pub score: Vec<f32>,
+    pub correct: Vec<bool>,
 }
 
 /// Train + test response tables for one dataset.
@@ -179,14 +255,10 @@ pub fn synthetic_table(
     let mut rng = crate::util::rng::Rng::new(seed);
     let labels: Vec<u32> =
         (0..n_items).map(|_| rng.below(n_classes as u64) as u32).collect();
-    let mut preds = Vec::new();
-    let mut scores = Vec::new();
-    let mut correct = Vec::new();
+    let mut rows = Vec::with_capacity(n_models);
     for m in 0..n_models {
         let acc = 0.5 + 0.45 * (m as f64 / (n_models.max(2) - 1) as f64);
-        let mut p = Vec::with_capacity(n_items);
-        let mut s = Vec::with_capacity(n_items);
-        let mut c = Vec::with_capacity(n_items);
+        let mut row = ModelRow::default();
         for i in 0..n_items {
             let ok = rng.bool(acc);
             let pred = if ok {
@@ -201,22 +273,19 @@ pub fn synthetic_table(
             } else {
                 calibration * 0.5 * base + (1.0 - calibration) * base
             };
-            p.push(pred);
-            s.push(score as f32);
-            c.push(ok);
+            row.pred.push(pred);
+            row.score.push(score as f32);
+            row.correct.push(ok);
         }
-        preds.push(p);
-        scores.push(s);
-        correct.push(c);
+        rows.push(row);
     }
-    SplitTable {
-        dataset: "synthetic".into(),
-        model_names: (0..n_models).map(|m| format!("api_{m}")).collect(),
+    SplitTable::from_rows(
+        "synthetic".into(),
+        (0..n_models).map(|m| format!("api_{m}")).collect(),
         labels,
-        preds,
-        scores,
-        correct,
-    }
+        rows,
+    )
+    .expect("synthetic rows are rectangular")
 }
 
 #[cfg(test)]
@@ -241,6 +310,33 @@ mod tests {
         assert_eq!(t.train.accuracy(0), 0.5);
         assert_eq!(t.train.accuracy(1), 1.0);
         assert_eq!(t.test.model_index("b"), Some(1));
+        assert_eq!(t.train.pred(1, 1), 1);
+        assert!((t.train.score(0, 0) - 0.9).abs() < 1e-6);
+        assert!(t.train.is_correct(1, 0));
+    }
+
+    #[test]
+    fn rows_and_scalars_agree() {
+        let t = synthetic_table(4, 64, 4, 0.9, 9);
+        for m in 0..4 {
+            assert_eq!(t.preds_row(m).len(), 64);
+            for i in (0..64).step_by(7) {
+                assert_eq!(t.preds_row(m)[i], t.pred(m, i));
+                assert_eq!(t.scores_row(m)[i], t.score(m, i));
+                assert_eq!(t.correct_row(m)[i], t.is_correct(m, i));
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        let r = SplitTable::from_rows(
+            "x".into(),
+            vec!["a".into()],
+            vec![0, 1],
+            vec![ModelRow { pred: vec![0], score: vec![0.5], correct: vec![true] }],
+        );
+        assert!(r.is_err());
     }
 
     #[test]
@@ -262,11 +358,11 @@ mod tests {
         for m in 0..3 {
             let (mut sc, mut nc, mut si, mut ni) = (0.0, 0, 0.0, 0);
             for i in 0..t.len() {
-                if t.correct[m][i] {
-                    sc += t.scores[m][i] as f64;
+                if t.is_correct(m, i) {
+                    sc += t.score(m, i) as f64;
                     nc += 1;
                 } else {
-                    si += t.scores[m][i] as f64;
+                    si += t.score(m, i) as f64;
                     ni += 1;
                 }
             }
@@ -279,7 +375,8 @@ mod tests {
         let t = synthetic_table(3, 100, 4, 0.9, 3);
         let h = t.head(10);
         assert_eq!(h.len(), 10);
-        assert_eq!(h.preds[2][9], t.preds[2][9]);
+        assert_eq!(h.pred(2, 9), t.pred(2, 9));
+        assert_eq!(h.scores_row(1), &t.scores_row(1)[..10]);
         assert_eq!(h.n_models(), 3);
     }
 }

@@ -26,7 +26,7 @@ pub fn individual_points(
         .map(|m| {
             let mut c = 0.0;
             for i in 0..n {
-                c += costs.call_cost(m, input_tokens[i], table.preds[m][i]);
+                c += costs.call_cost(m, input_tokens[i], table.pred(m, i));
             }
             IndividualPoint {
                 model: table.model_names[m].clone(),

@@ -16,14 +16,17 @@ pub fn mpi_matrix(table: &SplitTable) -> Vec<Vec<f64>> {
     let n = table.len();
     let mut m = vec![vec![0.0; k]; k];
     for row in 0..k {
+        let row_correct = table.correct_row(row);
         for col in 0..k {
             if row == col {
                 continue;
             }
-            let mut cnt = 0usize;
-            for i in 0..n {
-                cnt += (!table.correct[row][i] && table.correct[col][i]) as usize;
-            }
+            let col_correct = table.correct_row(col);
+            let cnt = row_correct
+                .iter()
+                .zip(col_correct)
+                .filter(|&(&rc, &cc)| !rc && cc)
+                .count();
             m[row][col] = cnt as f64 / n.max(1) as f64;
         }
     }
@@ -33,10 +36,12 @@ pub fn mpi_matrix(table: &SplitTable) -> Vec<Vec<f64>> {
 /// MPI of model `a` with respect to model `b`: P[a right ∧ b wrong].
 pub fn mpi(table: &SplitTable, a: usize, b: usize) -> f64 {
     let n = table.len();
-    let mut cnt = 0usize;
-    for i in 0..n {
-        cnt += (table.correct[a][i] && !table.correct[b][i]) as usize;
-    }
+    let cnt = table
+        .correct_row(a)
+        .iter()
+        .zip(table.correct_row(b))
+        .filter(|&(&ca, &cb)| ca && !cb)
+        .count();
     cnt as f64 / n.max(1) as f64
 }
 

@@ -93,30 +93,39 @@ fn worker(
             Ok(i) => i,
             Err(_) => break, // all handles dropped
         };
-        let mut batch = vec![first];
+        // Rows are *moved* into the engine call and replies are kept in a
+        // parallel, index-aligned vec — the worker never copies a token
+        // row (they were cloned per request before PR 1).
+        let mut rows: Vec<Vec<i32>> = Vec::with_capacity(cfg.max_batch);
+        let mut replies: Vec<mpsc::SyncSender<Result<Vec<f32>>>> =
+            Vec::with_capacity(cfg.max_batch);
+        rows.push(first.row);
+        replies.push(first.reply);
         let deadline = Instant::now() + cfg.max_wait;
-        while batch.len() < cfg.max_batch {
+        while rows.len() < cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(item) => batch.push(item),
+                Ok(item) => {
+                    rows.push(item.row);
+                    replies.push(item.reply);
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        let rows: Vec<Vec<i32>> = batch.iter().map(|i| i.row.clone()).collect();
         match engine.execute_batch(&dataset, &model, rows) {
             Ok(outs) => {
-                for (item, out) in batch.into_iter().zip(outs) {
-                    let _ = item.reply.send(Ok(out));
+                for (reply, out) in replies.into_iter().zip(outs) {
+                    let _ = reply.send(Ok(out));
                 }
             }
             Err(e) => {
                 let msg = format!("{e:#}");
-                for item in batch {
-                    let _ = item.reply.send(Err(anyhow!("{msg}")));
+                for reply in replies {
+                    let _ = reply.send(Err(anyhow!("{msg}")));
                 }
             }
         }

@@ -8,16 +8,23 @@
 //!    when its estimated Jaccard similarity clears a threshold (the
 //!    paper's "if a similar query has been previously answered").
 //!
-//! Bounded LRU with O(1) eviction. Single-writer behind a mutex — the
+//! Bounded LRU with O(1) touch *and* eviction: recency is an intrusive
+//! doubly-linked list threaded through the slot arena (`lru_prev` /
+//! `lru_next` indices), so promoting an entry on hit is three pointer
+//! swaps — no positional scan. Single-writer behind a mutex — the
 //! coordinator consults it before the cascade, so its hit path must be
-//! far cheaper than even the cheapest API call (see benches/cache.rs).
+//! far cheaper than even the cheapest API call (see benches/cache.rs; the
+//! similar tier remains an O(len) signature scan by design).
 
 use std::collections::hash_map::DefaultHasher;
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 
 /// Number of MinHash permutations (signature size).
 const SIGNATURE: usize = 16;
+
+/// Null slot index for the intrusive LRU list.
+const NIL: usize = usize::MAX;
 
 /// A cached completion.
 #[derive(Debug, Clone, PartialEq)]
@@ -61,7 +68,12 @@ pub struct CompletionCache {
     min_similarity: f64,
     by_key: HashMap<u64, usize>, // exact-hash → slot
     slots: Vec<Option<Entry>>,
-    lru: VecDeque<usize>, // front = oldest
+    /// Intrusive LRU list over slots: `lru_head` = oldest, `lru_tail` =
+    /// most recent; `NIL` terminates both ends. Free slots are not linked.
+    lru_prev: Vec<usize>,
+    lru_next: Vec<usize>,
+    lru_head: usize,
+    lru_tail: usize,
     free: Vec<usize>,
     stats: CacheStats,
 }
@@ -74,7 +86,10 @@ impl CompletionCache {
             min_similarity,
             by_key: HashMap::with_capacity(capacity),
             slots: Vec::with_capacity(capacity),
-            lru: VecDeque::with_capacity(capacity),
+            lru_prev: Vec::with_capacity(capacity),
+            lru_next: Vec::with_capacity(capacity),
+            lru_head: NIL,
+            lru_tail: NIL,
             free: Vec::new(),
             stats: CacheStats::default(),
         }
@@ -141,26 +156,59 @@ impl CompletionCache {
             s
         } else {
             self.slots.push(Some(entry));
+            self.lru_prev.push(NIL);
+            self.lru_next.push(NIL);
             self.slots.len() - 1
         };
         self.by_key.insert(key, slot);
-        self.lru.push_back(slot);
+        self.attach_tail(slot);
     }
 
+    /// Unlink `slot` from the recency list. O(1).
+    fn detach(&mut self, slot: usize) {
+        let (p, n) = (self.lru_prev[slot], self.lru_next[slot]);
+        if p == NIL {
+            self.lru_head = n;
+        } else {
+            self.lru_next[p] = n;
+        }
+        if n == NIL {
+            self.lru_tail = p;
+        } else {
+            self.lru_prev[n] = p;
+        }
+    }
+
+    /// Link `slot` as the most recently used. O(1).
+    fn attach_tail(&mut self, slot: usize) {
+        self.lru_prev[slot] = self.lru_tail;
+        self.lru_next[slot] = NIL;
+        if self.lru_tail == NIL {
+            self.lru_head = slot;
+        } else {
+            self.lru_next[self.lru_tail] = slot;
+        }
+        self.lru_tail = slot;
+    }
+
+    /// Promote `slot` to most recently used. O(1).
     fn touch(&mut self, slot: usize) {
-        if let Some(pos) = self.lru.iter().position(|&s| s == slot) {
-            self.lru.remove(pos);
-            self.lru.push_back(slot);
+        if self.lru_tail != slot {
+            self.detach(slot);
+            self.attach_tail(slot);
         }
     }
 
     fn evict_oldest(&mut self) {
-        if let Some(slot) = self.lru.pop_front() {
-            if let Some(e) = self.slots[slot].take() {
-                self.by_key.remove(&e.key);
-                self.free.push(slot);
-                self.stats.evictions += 1;
-            }
+        let slot = self.lru_head;
+        if slot == NIL {
+            return;
+        }
+        self.detach(slot);
+        if let Some(e) = self.slots[slot].take() {
+            self.by_key.remove(&e.key);
+            self.free.push(slot);
+            self.stats.evictions += 1;
         }
     }
 }
@@ -272,6 +320,60 @@ mod tests {
         assert_eq!(c.len(), 1);
         assert_eq!(c.get(&q(1, 8)).unwrap().answer, 7);
         assert_eq!(c.stats().evictions, 0);
+    }
+
+    /// The intrusive list must evict in exactly the same order as a naive
+    /// recency queue across an arbitrary op mix (model-based check).
+    #[test]
+    fn lru_order_matches_naive_model() {
+        use crate::util::rng::Rng;
+        let cap = 9;
+        let mut c = CompletionCache::new(cap, 1.0);
+        // Naive model: VecDeque-of-keys recency (front = oldest), the
+        // data structure the pre-PR-1 implementation scanned linearly.
+        let mut model: std::collections::VecDeque<i32> = Default::default();
+        let mut rng = Rng::new(0xCAFE);
+        for step in 0..5000 {
+            let id = rng.below(40) as i32;
+            if rng.bool(0.55) {
+                c.put(&q(id, 8), CachedAnswer { answer: id as u32, score: 0.5 });
+                if let Some(pos) = model.iter().position(|&k| k == id) {
+                    model.remove(pos);
+                } else if model.len() == cap {
+                    model.pop_front();
+                }
+                model.push_back(id);
+            } else {
+                let hit = c.get(&q(id, 8)).is_some();
+                let model_hit = model.contains(&id);
+                assert_eq!(hit, model_hit, "step {step}: hit mismatch for {id}");
+                if let Some(pos) = model.iter().position(|&k| k == id) {
+                    model.remove(pos);
+                    model.push_back(id);
+                }
+            }
+            assert_eq!(c.len(), model.len(), "step {step}: size drifted");
+        }
+        // After the run, residency must agree element-for-element.
+        let resident = model.clone();
+        for &id in &resident {
+            assert!(c.get(&q(id, 8)).is_some(), "model key {id} missing from cache");
+        }
+    }
+
+    #[test]
+    fn touch_most_recent_is_noop() {
+        let mut c = CompletionCache::new(3, 1.0);
+        for id in 0..3 {
+            c.put(&q(id, 8), CachedAnswer { answer: id as u32, score: 0.5 });
+        }
+        // Touch the tail repeatedly; order must stay 0 (oldest), 1, 2.
+        for _ in 0..5 {
+            assert!(c.get(&q(2, 8)).is_some());
+        }
+        c.put(&q(3, 8), CachedAnswer { answer: 3, score: 0.5 });
+        assert!(c.get(&q(0, 8)).is_none(), "0 was oldest and must evict");
+        assert_eq!(c.len(), 3);
     }
 
     #[test]

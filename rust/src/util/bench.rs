@@ -1,6 +1,8 @@
 //! Benchmark harness (criterion stand-in): warmup, timed iterations,
-//! mean / p50 / p95 / max, throughput, and a stable one-line report that
-//! the §Perf logs in EXPERIMENTS.md quote verbatim.
+//! mean / p50 / p95 / max, throughput, a stable one-line report that the
+//! §Perf logs in EXPERIMENTS.md quote verbatim, and a machine-readable
+//! JSON emitter so bench binaries can append to the committed perf
+//! trajectory (`BENCH_optimizer.json` et al. — see `make bench`).
 
 use std::time::{Duration, Instant};
 
@@ -28,6 +30,73 @@ impl BenchResult {
             1.0 / self.mean.as_secs_f64().max(1e-12),
         )
     }
+
+    /// One result as a JSON object (stable key order, ns-resolution).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":{},\"iters\":{},\"mean_ns\":{},\"p50_ns\":{},\"p95_ns\":{},\"max_ns\":{},\"per_sec\":{:.3}}}",
+            json_string(&self.name),
+            self.iters,
+            self.mean.as_nanos(),
+            self.p50.as_nanos(),
+            self.p95.as_nanos(),
+            self.max.as_nanos(),
+            1.0 / self.mean.as_secs_f64().max(1e-12),
+        )
+    }
+}
+
+/// A whole suite as one JSON document: `{"suite": ..., "meta": {...},
+/// "results": [...]}`. `meta` entries land as string values.
+/// `raw_sections` are appended as additional top-level keys whose values
+/// are spliced in verbatim (already-serialized JSON) — used to carry a
+/// preserved `history` array across regenerations of a committed file.
+pub fn suite_json(
+    suite: &str,
+    meta: &[(&str, String)],
+    results: &[BenchResult],
+    raw_sections: &[(&str, String)],
+) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"suite\": {},\n", json_string(suite)));
+    out.push_str("  \"meta\": {");
+    for (j, (k, v)) in meta.iter().enumerate() {
+        if j > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("{}: {}", json_string(k), json_string(v)));
+    }
+    out.push_str("},\n  \"results\": [\n");
+    for (j, r) in results.iter().enumerate() {
+        out.push_str("    ");
+        out.push_str(&r.to_json());
+        if j + 1 < results.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("  ]");
+    for (k, raw) in raw_sections {
+        out.push_str(&format!(",\n  {}: {}", json_string(k), raw));
+    }
+    out.push_str("\n}\n");
+    out
+}
+
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 /// Run `f` repeatedly: `warmup` untimed iterations, then timed iterations
@@ -103,6 +172,34 @@ mod tests {
         assert!(r.p95 <= r.max);
         assert!(r.mean.as_nanos() > 0);
         assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn json_emitters_produce_valid_json() {
+        let r = bench_n("opt/\"tricky\" name", 0, 3, || {
+            black_box(1 + 1);
+        });
+        let doc = suite_json(
+            "optimizer",
+            &[("k", "12".to_string()), ("n", "8000".to_string())],
+            &[r.clone(), r],
+            &[("history", "[{\"pr\": 1}]".to_string())],
+        );
+        let v = crate::util::json::Value::parse(&doc).expect("suite_json must parse");
+        assert_eq!(v.get("suite").as_str(), Some("optimizer"));
+        assert_eq!(v.get("meta").get("k").as_str(), Some("12"));
+        let results = v.get("results").as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            v.get("history").as_arr().unwrap()[0].get("pr").as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(
+            results[0].get("name").as_str(),
+            Some("opt/\"tricky\" name")
+        );
+        assert!(results[0].get("iters").as_f64().unwrap() == 3.0);
+        assert!(results[0].get("mean_ns").as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -65,8 +65,8 @@ fn response_table_matches_dataset_and_accuracy() {
             // correct[] is consistent with preds vs labels
             for i in (0..test.len()).step_by(457) {
                 assert_eq!(
-                    table.test.correct[m][i],
-                    table.test.preds[m][i] == test.labels[i]
+                    table.test.is_correct(m, i),
+                    table.test.pred(m, i) == test.labels[i]
                 );
             }
         }
@@ -90,7 +90,7 @@ fn pjrt_execution_matches_response_table() {
             for (i, logits) in outs.iter().enumerate() {
                 assert_eq!(
                     argmax(logits) as u32,
-                    table.test.preds[mi][i],
+                    table.test.pred(mi, i),
                     "{ds}/{name} item {i}: HLO and python disagree"
                 );
             }
@@ -107,9 +107,9 @@ fn pjrt_scorer_matches_table_scores() {
     let scorer = Scorer::new(engine.handle(), ctx.meta.clone());
     let gptj = ctx.table.test.model_index("gpt_j").unwrap();
     for i in (0..ctx.test.len()).step_by(401) {
-        let answer = ctx.table.test.preds[gptj][i];
+        let answer = ctx.table.test.pred(gptj, i);
         let live = scorer.score(ctx.test.tokens(i), answer).unwrap();
-        let table = ctx.table.test.scores[gptj][i];
+        let table = ctx.table.test.score(gptj, i);
         assert!(
             (live - table).abs() < 1e-4,
             "item {i}: live score {live} vs table {table}"

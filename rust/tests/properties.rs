@@ -111,6 +111,203 @@ fn prop_optimizer_feasible_and_consistent() {
     });
 }
 
+/// The frontier search with all its §Perf machinery (flat arenas,
+/// precomputed disagreement, incremental triple sweep, parallel workers)
+/// must equal a naive brute force: enumerate every candidate (list, τ)
+/// combination the sweeps can reach, score each plan from scratch with
+/// `replay::replay`, and Pareto-prune. Point-for-point, accuracy and
+/// avg_cost within 1e-12.
+#[test]
+fn prop_optimizer_matches_bruteforce_reference() {
+    check("optimizer-vs-bruteforce", 8, |rng| {
+        let k = 3 + rng.usize_below(2);
+        let n = 40 + rng.usize_below(160);
+        let grid = 4 + rng.usize_below(3);
+        let table = synthetic_table(k, n, 2 + rng.below(4) as u32, 0.5 + 0.5 * rng.f64(), rng.next_u64());
+        let costs = cost_model(k);
+        let toks = vec![40 + rng.below(100) as u32; n];
+        let opts = OptimizerOptions { grid, ..Default::default() };
+        let opt = CascadeOptimizer::new(&table, &costs, toks.clone(), opts.clone()).unwrap();
+        let frontier = opt.frontier();
+
+        // Every frontier point's reported train metrics are real.
+        for p in &frontier {
+            let r = replay::replay(&p.plan, &table, &costs, &toks);
+            assert!(
+                (r.accuracy - p.accuracy).abs() < 1e-12
+                    && (r.avg_cost - p.avg_cost).abs() < 1e-12,
+                "frontier point reports ({}, {}) but replays to ({}, {})",
+                p.accuracy,
+                p.avg_cost,
+                r.accuracy,
+                r.avg_cost
+            );
+        }
+
+        let reference = reference_frontier(&table, &costs, &toks, &opts);
+        assert_eq!(
+            frontier.len(),
+            reference.len(),
+            "frontier has {} points, brute force {}",
+            frontier.len(),
+            reference.len()
+        );
+        for (j, (p, q)) in frontier.iter().zip(&reference).enumerate() {
+            assert!(
+                (p.accuracy - q.accuracy).abs() < 1e-12,
+                "point {j}: accuracy {} vs reference {}",
+                p.accuracy,
+                q.accuracy
+            );
+            assert!(
+                (p.avg_cost - q.avg_cost).abs() < 1e-12,
+                "point {j}: cost {} vs reference {}",
+                p.avg_cost,
+                q.avg_cost
+            );
+        }
+    });
+}
+
+/// Brute-force frontier: enumerate the candidate space independently of
+/// the optimizer's sweeps (same pruning rules, naively recomputed) and
+/// score every plan via replay. O(lists · grid · N²) — toy sizes only.
+fn reference_frontier(
+    table: &frugalgpt::coordinator::responses::SplitTable,
+    costs: &CostModel,
+    toks: &[u32],
+    opts: &OptimizerOptions,
+) -> Vec<frugalgpt::coordinator::optimizer::FrontierPoint> {
+    use frugalgpt::coordinator::optimizer::FrontierPoint;
+    let n = table.len();
+    let k = table.n_models();
+    let disagreement = |a: usize, b: usize| -> f64 {
+        table
+            .preds_row(a)
+            .iter()
+            .zip(table.preds_row(b))
+            .filter(|&(x, y)| x != y)
+            .count() as f64
+            / n.max(1) as f64
+    };
+    let model_cost = |m: usize| -> f64 {
+        let mut t = 0.0;
+        for i in 0..n {
+            t += costs.call_cost(m, toks[i], table.pred(m, i));
+        }
+        t / n.max(1) as f64
+    };
+    // Thresholds an exact sweep over `items` (by model m's score) can
+    // emit: one above the max, midpoints of adjacent distinct scores, -1.
+    let cut_taus = |m: usize, items: &[usize]| -> Vec<f32> {
+        let mut ss: Vec<f32> = items.iter().map(|&i| table.score(m, i)).collect();
+        ss.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        ss.dedup();
+        let mut taus = vec![ss[0] + 1.0];
+        for w in ss.windows(2) {
+            taus.push((w[0] + w[1]) * 0.5);
+        }
+        taus.push(-1.0);
+        taus
+    };
+    let quantile_taus = |m: usize| -> Vec<f32> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| table.score(m, b).partial_cmp(&table.score(m, a)).unwrap());
+        let mut qs = Vec::new();
+        for g in 0..opts.grid {
+            let pos = (((g + 1) * n) / (opts.grid + 1)).min(n - 1);
+            qs.push(table.score(m, idx[pos]));
+        }
+        qs.dedup();
+        qs
+    };
+
+    let eps = opts.min_disagreement;
+    let mut plans: Vec<CascadePlan> = (0..k).map(CascadePlan::single).collect();
+    let mut pairs = Vec::new();
+    for a in 0..k {
+        for b in 0..k {
+            if a == b || disagreement(a, b) < eps {
+                continue;
+            }
+            if model_cost(a) > model_cost(b) && table.accuracy(a) < table.accuracy(b) {
+                continue;
+            }
+            pairs.push((a, b));
+            for tau in cut_taus(a, &(0..n).collect::<Vec<_>>()) {
+                plans.push(CascadePlan::new(vec![
+                    Stage { model: a, threshold: tau },
+                    Stage { model: b, threshold: 0.0 },
+                ]));
+            }
+        }
+    }
+    for &(a, b) in &pairs {
+        for c in 0..k {
+            if c == a || c == b || disagreement(b, c) < eps {
+                continue;
+            }
+            if model_cost(b) > model_cost(c) && table.accuracy(b) < table.accuracy(c) {
+                continue;
+            }
+            for tau_a in quantile_taus(a) {
+                let esc: Vec<usize> =
+                    (0..n).filter(|&i| table.score(a, i) <= tau_a).collect();
+                if esc.is_empty() {
+                    continue;
+                }
+                for tau_b in cut_taus(b, &esc) {
+                    plans.push(CascadePlan::new(vec![
+                        Stage { model: a, threshold: tau_a },
+                        Stage { model: b, threshold: tau_b },
+                        Stage { model: c, threshold: 0.0 },
+                    ]));
+                }
+            }
+        }
+    }
+    prune_pareto(
+        plans
+            .into_iter()
+            .map(|plan| {
+                let r = replay::replay(&plan, table, costs, toks);
+                FrontierPoint { plan, accuracy: r.accuracy, avg_cost: r.avg_cost }
+            })
+            .collect(),
+    )
+}
+
+/// Pareto tie handling: equal-cost points keep only the most accurate,
+/// equal-accuracy points keep only the cheapest, exact duplicates keep
+/// one, and accuracy gains below the 1e-12 epsilon don't justify a more
+/// expensive point.
+#[test]
+fn pareto_tie_handling() {
+    let mk = |c: f64, a: f64| frugalgpt::coordinator::optimizer::FrontierPoint {
+        plan: CascadePlan::single(0),
+        accuracy: a,
+        avg_cost: c,
+    };
+    // Two points at identical cost: only the higher accuracy survives.
+    let f = prune_pareto(vec![mk(1.0, 0.6), mk(1.0, 0.8)]);
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].accuracy, 0.8);
+    // Two points at identical accuracy: only the cheaper survives.
+    let f = prune_pareto(vec![mk(2.0, 0.7), mk(1.0, 0.7)]);
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].avg_cost, 1.0);
+    // Exact duplicates collapse to one.
+    let f = prune_pareto(vec![mk(1.0, 0.5), mk(1.0, 0.5), mk(1.0, 0.5)]);
+    assert_eq!(f.len(), 1);
+    // A sub-epsilon accuracy gain at higher cost is not kept.
+    let f = prune_pareto(vec![mk(1.0, 0.5), mk(2.0, 0.5 + 5e-13)]);
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].avg_cost, 1.0);
+    // ... but a gain above epsilon is.
+    let f = prune_pareto(vec![mk(1.0, 0.5), mk(2.0, 0.5 + 1e-9)]);
+    assert_eq!(f.len(), 2);
+}
+
 /// Pareto pruning: output is sorted, strictly improving, and contains the
 /// global accuracy maximum.
 #[test]

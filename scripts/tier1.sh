@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): release build + full test suite,
+# plus clippy -D warnings on the workspace crates when clippy is
+# installed (the hermetic build container may not ship it).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --workspace --all-targets -- -D warnings
+else
+    echo "NOTE: cargo-clippy not installed; skipping lint gate" >&2
+fi

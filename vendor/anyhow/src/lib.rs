@@ -1,0 +1,243 @@
+//! Minimal in-tree stand-in for the `anyhow` crate.
+//!
+//! The build environment for this repo is hermetic (no crates.io
+//! network), and `anyhow` is the only external dependency the workspace
+//! ever had — so this vendored micro-implementation provides exactly the
+//! API surface the codebase uses:
+//!
+//! * [`Error`] — a message + optional boxed cause chain,
+//! * [`Result<T>`] — alias with `Error` as the default error type,
+//! * `anyhow!` / `bail!` / `ensure!` macros,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`,
+//! * blanket `From<E: std::error::Error>` so `?` converts std errors,
+//! * `{e}` prints the outermost message, `{e:#}` the full `a: b: c`
+//!   chain, `{e:?}` an anyhow-style "Caused by:" block.
+//!
+//! Semantics intentionally mirror the real crate for these paths; code
+//! written against this stub keeps working if the real `anyhow` is ever
+//! swapped back in. Not implemented (unused in this repo): downcasting,
+//! backtraces, `Error::new` adoption of non-`Display` payloads.
+
+use std::fmt;
+
+/// Error type: an outermost message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut stack = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            stack.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        stack.into_iter()
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(s) = cur.source.as_deref() {
+            cur = s;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(first) = self.source.as_deref() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = Some(first);
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes the blanket `From` below
+// coherent next to core's reflexive `impl From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // Flatten the std source chain into ours.
+        fn build(e: &(dyn std::error::Error + 'static)) -> Error {
+            Error {
+                msg: e.to_string(),
+                source: e.source().map(|s| Box::new(build(s))),
+            }
+        }
+        build(&e)
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T>: Sized {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a formatted message, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_chain() {
+        let e = Error::msg("inner").context("middle").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: inner");
+        assert!(format!("{e:?}").contains("Caused by:"));
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "middle", "inner"]);
+        assert_eq!(e.root_cause(), "inner");
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(format!("{e}"), "missing file");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading table").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading table: missing file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "gpt4")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing gpt4");
+        assert_eq!(Some(7).context("x").unwrap(), 7);
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("base {}", 42));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: base 42");
+    }
+
+    #[test]
+    fn macros() {
+        let x = 3;
+        let e = anyhow!("got {x} of {}", 5);
+        assert_eq!(format!("{e}"), "got 3 of 5");
+        fn b() -> Result<()> {
+            bail!("nope: {}", 9)
+        }
+        assert_eq!(format!("{}", b().unwrap_err()), "nope: 9");
+        fn en(v: u32) -> Result<u32> {
+            ensure!(v < 10, "v too big: {v}");
+            Ok(v)
+        }
+        assert!(en(3).is_ok());
+        assert_eq!(format!("{}", en(30).unwrap_err()), "v too big: 30");
+    }
+}
