@@ -1,9 +1,13 @@
 # Convenience targets. Tier-1 gate = `make tier1` (ROADMAP.md).
 
-.PHONY: tier1 test bench bench-optimizer port-check
+.PHONY: tier1 ci test bench bench-optimizer port-check
 
 tier1:
 	scripts/tier1.sh
+
+# What GitHub Actions runs (tier1 + optimizer bench smoke on a tiny grid).
+ci:
+	scripts/ci.sh
 
 test:
 	cargo test -q

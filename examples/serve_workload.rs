@@ -71,6 +71,7 @@ fn main() -> Result<()> {
             None => PromptPolicy::Full,
         },
         budget_cap_usd: args.get_f64("budget-cap"),
+        ..ServiceConfig::default()
     };
     let svc = Arc::new(FrugalService::new(
         plan,

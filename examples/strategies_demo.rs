@@ -99,6 +99,7 @@ fn main() -> Result<()> {
                 cache_min_similarity: cache_sim,
                 prompt_policy: policy,
                 budget_cap_usd: None,
+                ..ServiceConfig::default()
             },
         )?;
         let mut rng = Rng::new(7);

@@ -18,9 +18,15 @@ const SEED: u64 = 99;
 
 fn main() {
     let args = Args::from_env();
-    // Synthetic 12-API table at the HEADLINES train-split size.
-    let table = synthetic_table(K, N, 4, 0.9, SEED);
-    let costs = CostModel::from_table1("bench", vec![1, 1, 2, 1]);
+    // `--smoke` (CI): a tiny grid that exercises the full sweep + JSON
+    // pipeline in seconds instead of the committed-trajectory workload.
+    let smoke = args.has("smoke");
+    let (k, n, iters) = if smoke { (6, 600, 1) } else { (K, N, 5) };
+    // Synthetic K-API table at the HEADLINES train-split size (full mode).
+    let table = synthetic_table(k, n, 4, 0.9, SEED);
+    let full = CostModel::from_table1("bench", vec![1, 1, 2, 1]);
+    let costs =
+        if k == full.n_models() { full } else { full.truncated(table.model_names.clone()) };
     let tokens = vec![45u32; table.len()];
     let mut results: Vec<BenchResult> = Vec::new();
 
@@ -33,7 +39,7 @@ fn main() {
         ("optimizer/coarse2000_m3_grid24", 24, 3, Some(2000), None),
         ("optimizer/pairs_only_m2", 24, 2, None, None),
     ] {
-        let r = bench_n(name, 1, 5, || {
+        let r = bench_n(name, if smoke { 0 } else { 1 }, iters, || {
             let opt = CascadeOptimizer::new(
                 &table,
                 &costs,
@@ -59,7 +65,7 @@ fn main() {
     let r = frugalgpt::util::bench::bench(
         "optimizer/optimize_at_budget",
         2,
-        Duration::from_secs(2),
+        if smoke { Duration::from_millis(50) } else { Duration::from_secs(2) },
         || {
             black_box(opt.optimize(5.0).ok());
         },
@@ -98,8 +104,9 @@ fn main() {
         let doc = suite_json(
             "optimizer",
             &[
-                ("k", K.to_string()),
-                ("n", N.to_string()),
+                ("k", k.to_string()),
+                ("n", n.to_string()),
+                ("mode", if smoke { "smoke (CI grid — NOT the committed trajectory workload)" } else { "full" }.to_string()),
                 ("grid", "24 for the headline result; variants in result names".to_string()),
                 ("max_len", "3 (pairs_only_m2 sweeps max_len=2)".to_string()),
                 ("table_seed", SEED.to_string()),

@@ -8,23 +8,35 @@
 //!   report fig4                   — Fig. 4: MPI matrices (3 datasets)
 //!   report fig5                   — Fig. 5 / Fig. 1c: accuracy–cost frontiers
 //!   report strategies             — §3 ablation: cache / prompt / concat
-//!   report all                    — everything above in order
+//!   report frontier  --dataset D [--path P]
+//!                                 — render a saved frontier
+//!                                   (artifacts/frontiers/<D>.json)
+//!   report swaps     --log PATH   — render a serve run's plan-swap history
+//!                                   (`serve --swap-log PATH`)
+//!   report all                    — everything above in order (frontier /
+//!                                   swaps excluded: they read extra files)
 //!
 //! All reports run on the *test* split with a cascade learned on the
 //! *train* split (mirroring the paper), entirely from the offline response
-//! table — no PJRT needed, so they are fast and deterministic.
+//! table — no PJRT needed, so they are fast and deterministic. `frontier`
+//! and `swaps` need no artifacts at all: they render their input file.
 
-use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
 
 use frugalgpt::coordinator::cascade::replay;
+use frugalgpt::coordinator::frontier::SavedFrontier;
 use frugalgpt::coordinator::optimizer::{CascadeOptimizer, FrontierPoint, OptimizerOptions};
 use frugalgpt::data::{Artifacts, DatasetContext};
 use frugalgpt::eval::mpi::mpi_matrix;
 use frugalgpt::eval::table::{pct, render, usd};
 use frugalgpt::eval::{best_individual, individual_points};
 use frugalgpt::marketplace::TABLE1;
+use frugalgpt::server::service::SwapEvent;
 use frugalgpt::strategies::{concat, prompt::PromptPolicy};
 use frugalgpt::util::args::Args;
+use frugalgpt::util::json::Value;
 
 const DATASETS: [&str; 3] = ["headlines", "overruling", "coqa"];
 
@@ -38,6 +50,12 @@ fn main() {
 }
 
 fn run(what: &str, args: &Args) -> Result<()> {
+    // File-driven reports first: no artifacts required.
+    match what {
+        "frontier" => return frontier_report(args),
+        "swaps" => return swaps_report(args),
+        _ => {}
+    }
     let art = Artifacts::load(args.get_or("artifacts", "artifacts"))?;
     match what {
         "table1" => table1(&art),
@@ -56,6 +74,91 @@ fn run(what: &str, args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown report `{other}`"),
     }
+}
+
+/// Render a persisted frontier: every Pareto point with its plan.
+fn frontier_report(args: &Args) -> Result<()> {
+    let path = match args.get("path") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let ds = args
+                .get("dataset")
+                .context("report frontier needs --path or --dataset")?;
+            SavedFrontier::default_path(Path::new(args.get_or("artifacts", "artifacts")), ds)
+        }
+    };
+    let sf = SavedFrontier::load(&path)?;
+    println!(
+        "== saved frontier: {} ({} points, {} APIs) ==",
+        sf.dataset,
+        sf.points.len(),
+        sf.model_names.len()
+    );
+    let rows: Vec<Vec<String>> = sf
+        .points
+        .iter()
+        .map(|p| {
+            vec![
+                usd(p.avg_cost * 1e4),
+                pct(p.accuracy),
+                format!("{}", p.plan.len()),
+                p.plan.describe(&sf.model_names),
+            ]
+        })
+        .collect();
+    print!("{}", render(&["$/10k", "train acc", "stages", "cascade"], &rows));
+    println!("(restored by `frugalgpt serve --frontier {}`)", path.display());
+    Ok(())
+}
+
+/// Render the plan-swap history a serve run wrote with `--swap-log`.
+fn swaps_report(args: &Args) -> Result<()> {
+    let log = args.get("log").context("report swaps needs --log PATH")?;
+    let raw = std::fs::read_to_string(log)
+        .with_context(|| format!("reading swap log {log}"))?;
+    let v = Value::parse(&raw).map_err(|e| anyhow!("{e}"))?;
+    let dataset = v.get("dataset").as_str().unwrap_or("?");
+    let models: Vec<String> = v
+        .get("models")
+        .as_arr()
+        .context("swap log missing `models`")?
+        .iter()
+        .map(|x| x.as_str().unwrap_or("?").to_string())
+        .collect();
+    let swaps: Vec<SwapEvent> = v
+        .get("swaps")
+        .as_arr()
+        .context("swap log missing `swaps`")?
+        .iter()
+        .map(SwapEvent::from_value)
+        .collect::<Result<_>>()?;
+    println!("== plan-swap history: {dataset} ({} swaps) ==", swaps.len());
+    if swaps.is_empty() {
+        println!("(the served plan was never displaced — no drift, or all \
+                  re-learns stayed within hysteresis)");
+        return Ok(());
+    }
+    let rows: Vec<Vec<String>> = swaps
+        .iter()
+        .map(|e| {
+            vec![
+                format!("v{}", e.version),
+                e.at_query.to_string(),
+                e.window_accuracy.map(pct).unwrap_or_else(|| "-".into()),
+                e.window_avg_cost.map(|c| usd(c * 1e4)).unwrap_or_else(|| "-".into()),
+                e.plan.describe(&models),
+                e.reason.clone(),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render(
+            &["version", "at query", "window acc", "window $/10k", "new cascade", "trigger"],
+            &rows
+        )
+    );
+    Ok(())
 }
 
 /// Paper Table 1: commercial LLM API pricing.

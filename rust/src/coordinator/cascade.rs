@@ -19,6 +19,7 @@ use super::scorer::Scorer;
 use crate::data::{prompt, DatasetMeta};
 use crate::marketplace::CostModel;
 use crate::runtime::EngineHandle;
+use crate::util::json::Value;
 
 /// One stage of a cascade: an API index plus its acceptance threshold.
 /// The threshold of the last stage is ignored (it always answers).
@@ -26,6 +27,24 @@ use crate::runtime::EngineHandle;
 pub struct Stage {
     pub model: usize,
     pub threshold: f32,
+}
+
+impl Stage {
+    /// JSON form via `util::json`. The f32 threshold is stored as its
+    /// exact f64 widening, so `from_value(to_value())` is bit-lossless.
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("model".to_string(), Value::Num(self.model as f64));
+        m.insert("threshold".to_string(), Value::Num(f64::from(self.threshold)));
+        Value::Obj(m)
+    }
+
+    pub fn from_value(v: &Value) -> Result<Stage> {
+        let model = v.get("model").as_usize().context("stage missing `model`")?;
+        let threshold =
+            v.get("threshold").as_f64().context("stage missing `threshold`")? as f32;
+        Ok(Stage { model, threshold })
+    }
 }
 
 /// A learned cascade configuration `(L, τ)`.
@@ -49,6 +68,32 @@ impl CascadePlan {
 
     pub fn is_empty(&self) -> bool {
         self.stages.is_empty()
+    }
+
+    /// JSON form via `util::json` (frontier persistence, swap logs).
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert(
+            "stages".to_string(),
+            Value::Arr(self.stages.iter().map(Stage::to_value).collect()),
+        );
+        Value::Obj(m)
+    }
+
+    /// Parse a plan serialized by [`CascadePlan::to_value`]. Rejects empty
+    /// stage lists (every constructor path upholds non-emptiness).
+    pub fn from_value(v: &Value) -> Result<CascadePlan> {
+        let stages: Vec<Stage> = v
+            .get("stages")
+            .as_arr()
+            .context("plan missing `stages`")?
+            .iter()
+            .map(Stage::from_value)
+            .collect::<Result<_>>()?;
+        if stages.is_empty() {
+            bail!("serialized cascade plan has no stages");
+        }
+        Ok(CascadePlan { stages })
     }
 
     /// Human-readable form, e.g. `gpt_j(τ=0.96) → j1_large(τ=0.37) → gpt4`.
@@ -163,6 +208,10 @@ pub struct CascadeAnswer {
     pub score: f32,
     /// Metered USD across all invoked stages.
     pub cost: f64,
+    /// USD per invoked stage (`stage_costs[s]` = stage s alone;
+    /// `stage_costs.iter().sum() == cost`). Lets the serving metrics
+    /// attribute spend to each model window exactly.
+    pub stage_costs: Vec<f64>,
     /// Billable input tokens of the query prompt.
     pub input_tokens: u32,
     /// Per-stage simulated API latency (ms), for serving reports.
@@ -223,6 +272,7 @@ impl Cascade {
     pub fn answer(&self, tokens: &[i32]) -> Result<CascadeAnswer> {
         let input_tokens = prompt::input_tokens(tokens);
         let mut cost = 0.0;
+        let mut stage_costs = Vec::with_capacity(self.plan.stages.len());
         let mut sim_lat = 0.0;
         let last = self.plan.stages.len() - 1;
         for (s, stage) in self.plan.stages.iter().enumerate() {
@@ -232,7 +282,9 @@ impl Cascade {
                 .execute(&self.dataset, name, tokens.to_vec())
                 .with_context(|| format!("stage {s} ({name})"))?;
             let answer = argmax(&logits) as u32;
-            cost += self.costs.call_cost(stage.model, input_tokens, answer);
+            let stage_cost = self.costs.call_cost(stage.model, input_tokens, answer);
+            cost += stage_cost;
+            stage_costs.push(stage_cost);
             let out_tokens = self.costs.answer_len(answer);
             sim_lat += self.costs.latency[stage.model]
                 .latency_ms(input_tokens + out_tokens);
@@ -242,6 +294,7 @@ impl Cascade {
                     stopped_at: s,
                     score: 1.0,
                     cost,
+                    stage_costs,
                     input_tokens,
                     simulated_latency_ms: sim_lat,
                 });
@@ -253,6 +306,7 @@ impl Cascade {
                     stopped_at: s,
                     score,
                     cost,
+                    stage_costs,
                     input_tokens,
                     simulated_latency_ms: sim_lat,
                 });
@@ -362,6 +416,35 @@ mod tests {
         let names: Vec<String> =
             ["gpt_j", "j1_large", "gpt4"].iter().map(|s| s.to_string()).collect();
         assert_eq!(plan.describe(&names), "gpt_j(τ=0.96) → j1_large(τ=0.37) → gpt4");
+    }
+
+    #[test]
+    fn plan_json_roundtrip_is_bit_exact() {
+        let plan = CascadePlan::new(vec![
+            Stage { model: 9, threshold: 0.1 + 0.2 }, // not exactly representable
+            Stage { model: 0, threshold: -1.0 },      // "never accepts" sentinel
+            Stage { model: 11, threshold: 0.0 },
+        ]);
+        let json = plan.to_value().to_json();
+        let back = CascadePlan::from_value(&Value::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.stages.len(), plan.stages.len());
+        for (a, b) in plan.stages.iter().zip(&back.stages) {
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.threshold.to_bits(), b.threshold.to_bits());
+        }
+    }
+
+    #[test]
+    fn plan_from_value_rejects_garbage() {
+        for bad in [
+            r#"{}"#,
+            r#"{"stages": []}"#,
+            r#"{"stages": [{"model": 1}]}"#,
+            r#"{"stages": [{"threshold": 0.5}]}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(CascadePlan::from_value(&v).is_err(), "should reject {bad}");
+        }
     }
 
     #[test]

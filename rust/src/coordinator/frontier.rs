@@ -1,0 +1,227 @@
+//! Frontier persistence: save a learned accuracy–cost frontier next to the
+//! response tables and restore it without re-running the train-time sweep.
+//!
+//! The frontier is a pure function of (train table, cost model, optimizer
+//! options), and the sweep that produces it is the repo's single most
+//! expensive computation — so `optimize --save-frontier` writes the result
+//! to `artifacts/frontiers/<dataset>.json` and `serve --frontier <path>`
+//! boots straight from it. The file stores every Pareto point with its
+//! full `(L, τ)` plan and exact train metrics; floats round-trip
+//! bit-losslessly through `util::json` (Rust's shortest-roundtrip float
+//! formatting), which `rust/tests/properties.rs::prop_frontier_json_roundtrip`
+//! asserts point-for-point.
+//!
+//! A saved frontier names the dataset and the marketplace model list it
+//! was learned against; [`SavedFrontier::validate_for`] rejects a
+//! plan/marketplace mismatch before any stage index is dereferenced.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::optimizer::{best_within, FrontierPoint, OptimizedPlan};
+use crate::util::json::Value;
+
+/// Format tag written into every frontier file (bump on layout changes).
+pub const FORMAT: &str = "frugalgpt-frontier/v1";
+
+/// A persisted accuracy–cost frontier for one dataset.
+#[derive(Debug, Clone)]
+pub struct SavedFrontier {
+    pub dataset: String,
+    /// Marketplace model list the plans' stage indices refer to.
+    pub model_names: Vec<String>,
+    /// Pareto points, ascending cost / ascending accuracy (as produced by
+    /// `CascadeOptimizer::frontier`).
+    pub points: Vec<FrontierPoint>,
+}
+
+impl SavedFrontier {
+    pub fn new(
+        dataset: impl Into<String>,
+        model_names: Vec<String>,
+        points: Vec<FrontierPoint>,
+    ) -> Self {
+        SavedFrontier { dataset: dataset.into(), model_names, points }
+    }
+
+    /// Canonical on-disk location: `<artifacts>/frontiers/<dataset>.json`.
+    pub fn default_path(artifacts_root: &Path, dataset: &str) -> PathBuf {
+        artifacts_root.join("frontiers").join(format!("{dataset}.json"))
+    }
+
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("format".to_string(), Value::Str(FORMAT.to_string()));
+        m.insert("dataset".to_string(), Value::Str(self.dataset.clone()));
+        m.insert(
+            "models".to_string(),
+            Value::Arr(self.model_names.iter().map(|n| Value::Str(n.clone())).collect()),
+        );
+        m.insert(
+            "points".to_string(),
+            Value::Arr(self.points.iter().map(FrontierPoint::to_value).collect()),
+        );
+        Value::Obj(m)
+    }
+
+    pub fn from_value(v: &Value) -> Result<SavedFrontier> {
+        match v.get("format").as_str() {
+            Some(FORMAT) => {}
+            Some(other) => bail!("unsupported frontier format `{other}` (want {FORMAT})"),
+            None => bail!("not a frontier file (missing `format`)"),
+        }
+        let dataset = v.get("dataset").as_str().context("missing `dataset`")?.to_string();
+        let model_names: Vec<String> = v
+            .get("models")
+            .as_arr()
+            .context("missing `models`")?
+            .iter()
+            .map(|x| x.as_str().map(str::to_string).context("model name not a string"))
+            .collect::<Result<_>>()?;
+        let points: Vec<FrontierPoint> = v
+            .get("points")
+            .as_arr()
+            .context("missing `points`")?
+            .iter()
+            .map(FrontierPoint::from_value)
+            .collect::<Result<_>>()?;
+        for (j, p) in points.iter().enumerate() {
+            for s in &p.plan.stages {
+                if s.model >= model_names.len() {
+                    bail!(
+                        "frontier point {j}: stage model index {} out of range \
+                         (file lists {} models)",
+                        s.model,
+                        model_names.len()
+                    );
+                }
+            }
+        }
+        Ok(SavedFrontier { dataset, model_names, points })
+    }
+
+    pub fn to_json(&self) -> String {
+        self.to_value().to_json()
+    }
+
+    pub fn from_json(raw: &str) -> Result<SavedFrontier> {
+        Self::from_value(&Value::parse(raw).map_err(|e| anyhow!("{e}"))?)
+    }
+
+    /// Write to `path`, creating parent directories as needed.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing frontier {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<SavedFrontier> {
+        let raw = std::fs::read_to_string(path)
+            .with_context(|| format!("reading frontier {}", path.display()))?;
+        Self::from_json(&raw)
+            .with_context(|| format!("parsing frontier {}", path.display()))
+    }
+
+    /// Reject serving this frontier against a mismatched dataset or
+    /// marketplace (stage indices would silently point at wrong models).
+    pub fn validate_for(&self, dataset: &str, model_names: &[String]) -> Result<()> {
+        if self.dataset != dataset {
+            bail!("frontier was learned on `{}`, not `{dataset}`", self.dataset);
+        }
+        if self.model_names != model_names {
+            bail!(
+                "frontier model list {:?} does not match the marketplace {:?}",
+                self.model_names,
+                model_names
+            );
+        }
+        Ok(())
+    }
+
+    /// Budget query over the restored points — identical semantics to
+    /// `CascadeOptimizer::optimize`.
+    pub fn best_within(&self, budget_usd_per_10k: f64) -> Result<OptimizedPlan> {
+        best_within(&self.points, budget_usd_per_10k)
+    }
+
+    /// The highest-accuracy plan (unbounded budget).
+    pub fn top(&self) -> Result<OptimizedPlan> {
+        self.best_within(f64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimizer::{uniform_tokens, CascadeOptimizer, OptimizerOptions};
+    use crate::coordinator::responses::synthetic_table;
+    use crate::marketplace::CostModel;
+
+    fn learned() -> (SavedFrontier, Vec<FrontierPoint>) {
+        let t = synthetic_table(6, 400, 4, 0.9, 11);
+        let cm = CostModel::from_table1("synthetic", vec![1, 1, 2, 1])
+            .truncated(t.model_names.clone());
+        let toks = uniform_tokens(t.len(), 125);
+        let opt =
+            CascadeOptimizer::new(&t, &cm, toks, OptimizerOptions::default()).unwrap();
+        let points = opt.frontier();
+        (
+            SavedFrontier::new("synthetic", t.model_names.clone(), points.clone()),
+            points,
+        )
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let (sf, points) = learned();
+        let back = SavedFrontier::from_json(&sf.to_json()).unwrap();
+        assert_eq!(back.dataset, "synthetic");
+        assert_eq!(back.model_names, sf.model_names);
+        assert_eq!(back.points.len(), points.len());
+        for (a, b) in points.iter().zip(&back.points) {
+            assert_eq!(a.plan, b.plan);
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            assert_eq!(a.avg_cost.to_bits(), b.avg_cost.to_bits());
+        }
+    }
+
+    #[test]
+    fn save_load_and_budget_query_agree_with_live_optimizer() {
+        let (sf, points) = learned();
+        let dir = std::env::temp_dir().join("frugalgpt_frontier_test");
+        let path = SavedFrontier::default_path(&dir, "synthetic");
+        sf.save(&path).unwrap();
+        let loaded = SavedFrontier::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        let budget = points[points.len() / 2].avg_cost * 1e4;
+        let from_file = loaded.best_within(budget).unwrap();
+        let live = best_within(&points, budget).unwrap();
+        assert_eq!(from_file.plan, live.plan);
+        assert_eq!(from_file.train_accuracy.to_bits(), live.train_accuracy.to_bits());
+        let top = loaded.top().unwrap();
+        assert_eq!(top.plan, points.last().unwrap().plan);
+    }
+
+    #[test]
+    fn rejects_mismatch_and_bad_files() {
+        let (sf, _) = learned();
+        assert!(sf.validate_for("synthetic", &sf.model_names).is_ok());
+        assert!(sf.validate_for("other", &sf.model_names).is_err());
+        let short = sf.model_names[..3].to_vec();
+        assert!(sf.validate_for("synthetic", &short).is_err());
+
+        assert!(SavedFrontier::from_json("{}").is_err());
+        assert!(SavedFrontier::from_json("not json").is_err());
+        // stage index out of range for the declared model list
+        let mut doc = sf.to_value();
+        if let Value::Obj(m) = &mut doc {
+            m.insert("models".into(), Value::Arr(vec![Value::Str("only_one".into())]));
+        }
+        assert!(SavedFrontier::from_value(&doc).is_err());
+    }
+}

@@ -7,11 +7,15 @@
 //! * [`cascade`] — the runtime executor: sequential API invocation with
 //!   reliability-score gating, both *offline* (replay from a table) and
 //!   *live* (PJRT model execution through [`crate::runtime`]).
+//! * [`frontier`] — persistence for learned frontiers
+//!   (`artifacts/frontiers/<dataset>.json`), so serving can skip the
+//!   train-time sweep entirely.
 //! * [`scorer`] — the generation scoring function `g(q, a)`.
 //! * [`budget`] — serving-time spend tracking.
 
 pub mod budget;
 pub mod cascade;
+pub mod frontier;
 pub mod optimizer;
 pub mod responses;
 pub mod scorer;

@@ -49,11 +49,12 @@
 //! `replay::replay`. The parallel and sequential sweep paths of *this*
 //! implementation are bit-identical to each other (unit-tested).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::cascade::{replay, CascadePlan, Stage};
 use super::responses::SplitTable;
 use crate::marketplace::CostModel;
+use crate::util::json::Value;
 
 /// Tuning knobs for the search. Defaults reproduce the paper's setup
 /// (cascade length 3).
@@ -102,6 +103,27 @@ pub struct FrontierPoint {
     pub avg_cost: f64,
 }
 
+impl FrontierPoint {
+    /// JSON form via `util::json`. f64 metrics serialize through Rust's
+    /// shortest-roundtrip float formatting, so the trip is bit-lossless.
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("plan".to_string(), self.plan.to_value());
+        m.insert("accuracy".to_string(), Value::Num(self.accuracy));
+        m.insert("avg_cost".to_string(), Value::Num(self.avg_cost));
+        Value::Obj(m)
+    }
+
+    pub fn from_value(v: &Value) -> Result<FrontierPoint> {
+        Ok(FrontierPoint {
+            plan: CascadePlan::from_value(v.get("plan"))
+                .context("frontier point plan")?,
+            accuracy: v.get("accuracy").as_f64().context("point missing `accuracy`")?,
+            avg_cost: v.get("avg_cost").as_f64().context("point missing `avg_cost`")?,
+        })
+    }
+}
+
 /// The outcome of `optimize`: the chosen plan plus its train metrics.
 #[derive(Debug, Clone)]
 pub struct OptimizedPlan {
@@ -110,6 +132,38 @@ pub struct OptimizedPlan {
     pub train_avg_cost: f64,
     /// USD per 10k queries (the budget unit).
     pub train_cost_per_10k: f64,
+}
+
+impl OptimizedPlan {
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("plan".to_string(), self.plan.to_value());
+        m.insert("train_accuracy".to_string(), Value::Num(self.train_accuracy));
+        m.insert("train_avg_cost".to_string(), Value::Num(self.train_avg_cost));
+        m.insert(
+            "train_cost_per_10k".to_string(),
+            Value::Num(self.train_cost_per_10k),
+        );
+        Value::Obj(m)
+    }
+
+    pub fn from_value(v: &Value) -> Result<OptimizedPlan> {
+        Ok(OptimizedPlan {
+            plan: CascadePlan::from_value(v.get("plan")).context("optimized plan")?,
+            train_accuracy: v
+                .get("train_accuracy")
+                .as_f64()
+                .context("missing `train_accuracy`")?,
+            train_avg_cost: v
+                .get("train_avg_cost")
+                .as_f64()
+                .context("missing `train_avg_cost`")?,
+            train_cost_per_10k: v
+                .get("train_cost_per_10k")
+                .as_f64()
+                .context("missing `train_cost_per_10k`")?,
+        })
+    }
 }
 
 /// Precomputed, read-only search state shared by every sweep worker. All
@@ -639,33 +693,7 @@ impl<'a> CascadeOptimizer<'a> {
 
     /// Best plan whose average train cost ≤ `budget_usd_per_10k / 10_000`.
     pub fn optimize(&self, budget_usd_per_10k: f64) -> Result<OptimizedPlan> {
-        let per_query = budget_usd_per_10k / 10_000.0;
-        let frontier = self.frontier();
-        let best = frontier
-            .iter()
-            .filter(|p| p.avg_cost <= per_query + 1e-15)
-            .max_by(|x, y| {
-                x.accuracy
-                    .partial_cmp(&y.accuracy)
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(y.avg_cost.partial_cmp(&x.avg_cost).unwrap_or(std::cmp::Ordering::Equal))
-            });
-        match best {
-            Some(p) => Ok(OptimizedPlan {
-                plan: p.plan.clone(),
-                train_accuracy: p.accuracy,
-                train_avg_cost: p.avg_cost,
-                train_cost_per_10k: p.avg_cost * 10_000.0,
-            }),
-            None => bail!(
-                "no cascade fits budget ${budget_usd_per_10k:.4} per 10k queries \
-                 (cheapest frontier point: ${:.4})",
-                frontier
-                    .first()
-                    .map(|p| p.avg_cost * 10_000.0)
-                    .unwrap_or(f64::NAN)
-            ),
-        }
+        best_within(&self.frontier(), budget_usd_per_10k)
     }
 
     /// Replay a plan on an arbitrary split with this optimizer's cost model
@@ -683,6 +711,43 @@ impl<'a> CascadeOptimizer<'a> {
 /// `input_tokens` helper when every item has the same billable size.
 pub fn uniform_tokens(n: usize, tokens: u32) -> Vec<u32> {
     vec![tokens; n]
+}
+
+/// Best plan on a frontier whose average cost fits
+/// `budget_usd_per_10k / 10_000` — the budget query of paper §3, factored
+/// out of [`CascadeOptimizer::optimize`] so frontiers restored from disk
+/// ([`super::frontier::SavedFrontier`]) and the online reoptimizer answer
+/// it identically. Ties on accuracy prefer the cheaper plan.
+pub fn best_within(
+    frontier: &[FrontierPoint],
+    budget_usd_per_10k: f64,
+) -> Result<OptimizedPlan> {
+    let per_query = budget_usd_per_10k / 10_000.0;
+    let best = frontier
+        .iter()
+        .filter(|p| p.avg_cost <= per_query + 1e-15)
+        .max_by(|x, y| {
+            x.accuracy
+                .partial_cmp(&y.accuracy)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(y.avg_cost.partial_cmp(&x.avg_cost).unwrap_or(std::cmp::Ordering::Equal))
+        });
+    match best {
+        Some(p) => Ok(OptimizedPlan {
+            plan: p.plan.clone(),
+            train_accuracy: p.accuracy,
+            train_avg_cost: p.avg_cost,
+            train_cost_per_10k: p.avg_cost * 10_000.0,
+        }),
+        None => bail!(
+            "no cascade fits budget ${budget_usd_per_10k:.4} per 10k queries \
+             (cheapest frontier point: ${:.4})",
+            frontier
+                .first()
+                .map(|p| p.avg_cost * 10_000.0)
+                .unwrap_or(f64::NAN)
+        ),
+    }
 }
 
 /// Midpoint threshold strictly between two adjacent scores.
@@ -745,14 +810,8 @@ mod tests {
         // builds; the full 12-model search is exercised by the release-mode
         // integration tests and benches.
         let t = synthetic_table(8, 600, 4, 0.9, 7);
-        let full = CostModel::from_table1("synthetic", vec![1, 1, 2, 1]);
-        let cm = CostModel {
-            dataset: full.dataset.clone(),
-            model_names: t.model_names.clone(),
-            pricing: full.pricing[..8].to_vec(),
-            latency: full.latency[..8].to_vec(),
-            answer_lens: full.answer_lens.clone(),
-        };
+        let cm = CostModel::from_table1("synthetic", vec![1, 1, 2, 1])
+            .truncated(t.model_names.clone());
         (t, cm)
     }
 
@@ -914,6 +973,30 @@ mod tests {
         for p in &coarse {
             assert!((0.0..=1.0).contains(&p.accuracy));
         }
+    }
+
+    #[test]
+    fn optimized_plan_json_roundtrip_is_bit_exact() {
+        let (t, cm) = setup();
+        let opt = optimizer(&t, &cm);
+        let f = opt.frontier();
+        let plan = opt.optimize(f[f.len() / 2].avg_cost * 10_000.0).unwrap();
+        let json = plan.to_value().to_json();
+        let back = OptimizedPlan::from_value(&Value::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.plan, plan.plan);
+        assert_eq!(back.train_accuracy.to_bits(), plan.train_accuracy.to_bits());
+        assert_eq!(back.train_avg_cost.to_bits(), plan.train_avg_cost.to_bits());
+        assert_eq!(
+            back.train_cost_per_10k.to_bits(),
+            plan.train_cost_per_10k.to_bits()
+        );
+        // and the point round-trip used by SavedFrontier
+        let p = &f[0];
+        let pb = FrontierPoint::from_value(&Value::parse(&p.to_value().to_json()).unwrap())
+            .unwrap();
+        assert_eq!(pb.plan, p.plan);
+        assert_eq!(pb.accuracy.to_bits(), p.accuracy.to_bits());
+        assert_eq!(pb.avg_cost.to_bits(), p.avg_cost.to_bits());
     }
 
     #[test]

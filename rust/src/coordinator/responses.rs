@@ -199,6 +199,74 @@ pub struct ModelRow {
     pub correct: Vec<bool>,
 }
 
+/// Incremental *item-major* table builder: push one labelled item at a
+/// time with every model's (pred, score, correct) triple, then `finish()`.
+///
+/// This is the write path of the serving-time observation window
+/// (`server::metrics::ObservationWindow`): traffic arrives item by item,
+/// but the optimizer consumes model-major arenas — the builder does the
+/// transpose so the reoptimizer can hand a fresh window slice straight to
+/// `CascadeOptimizer::new`.
+#[derive(Debug, Clone)]
+pub struct TableBuilder {
+    dataset: String,
+    model_names: Vec<String>,
+    labels: Vec<u32>,
+    rows: Vec<ModelRow>,
+}
+
+impl TableBuilder {
+    pub fn new(dataset: impl Into<String>, model_names: Vec<String>) -> Self {
+        let k = model_names.len();
+        TableBuilder {
+            dataset: dataset.into(),
+            model_names,
+            labels: Vec::new(),
+            rows: vec![ModelRow::default(); k],
+        }
+    }
+
+    /// Append one item: `preds[m]`/`scores[m]`/`correct[m]` are model m's
+    /// response on it. All three slices must cover every model.
+    pub fn push_item(
+        &mut self,
+        label: u32,
+        preds: &[u32],
+        scores: &[f32],
+        correct: &[bool],
+    ) -> Result<()> {
+        let k = self.rows.len();
+        if preds.len() != k || scores.len() != k || correct.len() != k {
+            bail!(
+                "observation covers {}/{}/{} models, table has {k}",
+                preds.len(),
+                scores.len(),
+                correct.len()
+            );
+        }
+        self.labels.push(label);
+        for (m, row) in self.rows.iter_mut().enumerate() {
+            row.pred.push(preds[m]);
+            row.score.push(scores[m]);
+            row.correct.push(correct[m]);
+        }
+        Ok(())
+    }
+
+    /// Items pushed so far.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn finish(self) -> Result<SplitTable> {
+        SplitTable::from_rows(self.dataset, self.model_names, self.labels, self.rows)
+    }
+}
+
 /// Train + test response tables for one dataset.
 #[derive(Debug, Clone)]
 pub struct ResponseTable {
@@ -368,6 +436,33 @@ mod tests {
             }
             assert!(sc / nc as f64 > si / ni.max(1) as f64 + 0.1);
         }
+    }
+
+    #[test]
+    fn table_builder_transposes_item_major_pushes() {
+        let t = synthetic_table(3, 20, 4, 0.9, 5);
+        let mut b = TableBuilder::new("synthetic", t.model_names.clone());
+        for i in 0..t.len() {
+            let preds: Vec<u32> = (0..3).map(|m| t.pred(m, i)).collect();
+            let scores: Vec<f32> = (0..3).map(|m| t.score(m, i)).collect();
+            let correct: Vec<bool> = (0..3).map(|m| t.is_correct(m, i)).collect();
+            b.push_item(t.labels[i], &preds, &scores, &correct).unwrap();
+        }
+        assert_eq!(b.len(), t.len());
+        let built = b.finish().unwrap();
+        for m in 0..3 {
+            assert_eq!(built.preds_row(m), t.preds_row(m));
+            assert_eq!(built.scores_row(m), t.scores_row(m));
+            assert_eq!(built.correct_row(m), t.correct_row(m));
+        }
+        assert_eq!(built.labels, t.labels);
+    }
+
+    #[test]
+    fn table_builder_rejects_short_observations() {
+        let mut b = TableBuilder::new("x", vec!["a".into(), "b".into()]);
+        assert!(b.push_item(0, &[1], &[0.5, 0.5], &[true, false]).is_err());
+        assert!(b.is_empty());
     }
 
     #[test]

@@ -7,7 +7,12 @@
 //! * **L3 (this crate)** — the paper's coordination contribution: the LLM
 //!   cascade router and its joint `(L, τ)` optimizer, the completion cache,
 //!   prompt adaptation, query concatenation, the marketplace cost model
-//!   (paper Table 1), and a tokio serving front end with dynamic batching.
+//!   (paper Table 1), and a serving front end with dynamic batching,
+//!   hot-swappable cascade plans (`server::service::PlanHandle`), and an
+//!   online re-optimization loop (`server::reoptimizer`) that re-learns
+//!   the cascade from live labelled traffic. Learned frontiers persist to
+//!   `artifacts/frontiers/<dataset>.json` (`coordinator::frontier`), so
+//!   serving can boot without the train-time sweep.
 //! * **L2/L1 (build-time Python, never on the request path)** — tiny JAX
 //!   transformers that simulate the 12 commercial LLM APIs plus the
 //!   reliability scorer `g(q, a)`, with Pallas attention/layernorm kernels,

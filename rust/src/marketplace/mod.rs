@@ -130,6 +130,21 @@ impl CostModel {
         }
     }
 
+    /// A copy restricted to the first `model_names.len()` APIs, renamed
+    /// to `model_names` — for synthetic-table tests/benches that pair a
+    /// K-model table with Table-1 pricing.
+    pub fn truncated(&self, mut model_names: Vec<String>) -> CostModel {
+        let k = model_names.len().min(self.n_models());
+        model_names.truncate(k);
+        CostModel {
+            dataset: self.dataset.clone(),
+            model_names,
+            pricing: self.pricing[..k].to_vec(),
+            latency: self.latency[..k].to_vec(),
+            answer_lens: self.answer_lens.clone(),
+        }
+    }
+
     pub fn model_index(&self, name: &str) -> Option<usize> {
         self.model_names.iter().position(|n| n == name)
     }

@@ -11,6 +11,14 @@
 //! a channel and wait on a oneshot reply. This is also the right serving
 //! shape — it serializes PJRT access (the CPU client is effectively
 //! single-stream anyway) while the serving front end stays concurrent.
+//!
+//! In the hermetic workspace the `xla` crate itself is replaced by
+//! [`xla_stub`] (same API, no backend): `Engine::start` fails with a clear
+//! message instead of executing artifacts, and everything engine-shaped in
+//! tests/benches goes through [`EngineHandle::simulated`].
+
+pub mod xla_stub;
+use xla_stub as xla;
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -106,6 +114,52 @@ impl EngineHandle {
             .send(Request::Stats { reply: tx })
             .map_err(|_| anyhow!("engine thread is gone"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped reply"))
+    }
+
+    /// Spawn a **simulated** engine actor backed by `f` and return its
+    /// handle: every `execute`/`execute_batch` maps the submitted rows
+    /// through the closure on a dedicated thread, with the same
+    /// channel-and-reply protocol (and therefore the same concurrency
+    /// semantics) as the real PJRT actor. `preload` reports 0 compiled
+    /// executables; `stats` counts executions like the real actor.
+    ///
+    /// This is the hermetic substitute for `Engine::start` in tests and
+    /// benches that need an engine but no artifacts — e.g. the batcher's
+    /// reply-routing tests and the plan hot-swap race tests. The thread
+    /// exits when every handle clone has been dropped.
+    pub fn simulated<F>(mut f: F) -> EngineHandle
+    where
+        F: FnMut(&str, &str, &[Vec<i32>]) -> Result<Vec<Vec<f32>>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        std::thread::Builder::new()
+            .name("sim-engine".into())
+            .spawn(move || {
+                let mut stats = EngineStats::default();
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Execute { dataset, model, rows, reply } => {
+                            let t0 = std::time::Instant::now();
+                            let n = rows.len() as u64;
+                            let r = f(&dataset, &model, &rows);
+                            let e = stats.per_model.entry((dataset, model)).or_default();
+                            e.0 += 1;
+                            e.1 += n;
+                            e.2 += t0.elapsed().as_micros() as u64;
+                            let _ = reply.send(r);
+                        }
+                        Request::Preload { reply, .. } => {
+                            let _ = reply.send(Ok(0));
+                        }
+                        Request::Stats { reply } => {
+                            let _ = reply.send(stats.clone());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawning simulated engine thread");
+        EngineHandle { tx }
     }
 }
 
@@ -318,5 +372,38 @@ impl Actor {
             .to_tuple1()
             .map_err(|e| anyhow!("untuple result: {e}"))?;
         out.to_vec::<f32>().map_err(|e| anyhow!("result to_vec: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_engine_round_trips_and_counts() {
+        let h = EngineHandle::simulated(|ds, model, rows| {
+            assert_eq!(ds, "toy");
+            let bias = if model == "m1" { 100.0 } else { 0.0 };
+            Ok(rows.iter().map(|r| vec![r[0] as f32 + bias]).collect())
+        });
+        assert_eq!(h.execute("toy", "m0", vec![7, 8]).unwrap(), vec![7.0]);
+        assert_eq!(
+            h.execute_batch("toy", "m1", vec![vec![1], vec![2]]).unwrap(),
+            vec![vec![101.0], vec![102.0]]
+        );
+        assert_eq!(h.preload("toy").unwrap(), 0);
+        let stats = h.stats().unwrap();
+        assert_eq!(stats.total_executions(), 2);
+        assert_eq!(
+            stats.per_model[&("toy".to_string(), "m1".to_string())].1,
+            2
+        );
+    }
+
+    #[test]
+    fn simulated_engine_error_propagates() {
+        let h = EngineHandle::simulated(|_, _, _| anyhow::bail!("boom"));
+        let err = h.execute("d", "m", vec![1]).unwrap_err();
+        assert!(format!("{err}").contains("boom"));
     }
 }

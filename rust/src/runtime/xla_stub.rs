@@ -1,0 +1,103 @@
+//! Hermetic stand-in for the `xla` PJRT bindings.
+//!
+//! The real `xla` crate (PJRT CPU client + HLO loading) cannot be vendored
+//! into this offline workspace, so the engine's actor compiles against this
+//! API-compatible stub instead: every type and method signature the actor
+//! uses exists here, and [`PjRtClient::cpu`] fails with a clear message, so
+//! `Engine::start` degrades into an explicit "no PJRT backend" error while
+//! everything that doesn't need live model execution (optimizer, replay,
+//! reports, the simulated engine) keeps working. To wire the real backend,
+//! add the `xla` dependency to `rust/Cargo.toml` and replace the
+//! `use xla_stub as xla;` import in `runtime/mod.rs` — no other code
+//! changes; the actor was written against the real crate's surface.
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error` (only `Display` is consumed by
+/// the actor, which wraps everything in `anyhow`).
+#[derive(Debug)]
+pub struct Error(pub &'static str);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+const NO_BACKEND: &str = "PJRT backend not available in this build \
+     (the hermetic workspace carries only an xla API stub; vendor the real \
+     `xla` crate to run AOT artifacts)";
+
+/// Stub of `xla::PjRtClient`. Construction always fails — there is no
+/// PJRT runtime in the hermetic build.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error(NO_BACKEND))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(NO_BACKEND))
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error(NO_BACKEND))
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_xs: &[i32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(Error(NO_BACKEND))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(Error(NO_BACKEND))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error(NO_BACKEND))
+    }
+}
+
+/// Stub of `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error(NO_BACKEND))
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Mirrors the real crate's generic `execute::<Literal>` call shape.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error(NO_BACKEND))
+    }
+}

@@ -131,3 +131,130 @@ fn worker(
         }
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// Echo engine: each output row is `[first_token, batch_marker]`, so a
+    /// reply identifies both the request it belongs to and the batch it
+    /// rode in.
+    fn echo_engine() -> EngineHandle {
+        let mut batch_no = 0.0f32;
+        EngineHandle::simulated(move |_, _, rows| {
+            batch_no += 1.0;
+            Ok(rows.iter().map(|r| vec![r[0] as f32, batch_no]).collect())
+        })
+    }
+
+    /// The PR-1 rewrite keys replies by index instead of cloning rows —
+    /// prove every concurrent submitter gets the reply for *its own* row.
+    #[test]
+    fn concurrent_submitters_get_their_own_replies() {
+        let batcher = Batcher::spawn(
+            echo_engine(),
+            "toy".into(),
+            "m".into(),
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
+        );
+        let h = batcher.handle();
+        let mut clients = Vec::new();
+        for c in 0..8i32 {
+            let h = h.clone();
+            clients.push(std::thread::spawn(move || {
+                for j in 0..64i32 {
+                    let token = c * 1000 + j;
+                    let out = h.submit(vec![token, 7, 7]).expect("submit");
+                    assert_eq!(
+                        out[0] as i32, token,
+                        "client {c} got a reply for someone else's row"
+                    );
+                }
+            }));
+        }
+        for c in clients {
+            c.join().expect("client thread");
+        }
+    }
+
+    /// A lone request must flush on the wait timeout, not hang waiting
+    /// for a full batch.
+    #[test]
+    fn flush_on_timeout_single_request() {
+        let batcher = Batcher::spawn(
+            echo_engine(),
+            "toy".into(),
+            "m".into(),
+            BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(5) },
+        );
+        let t0 = Instant::now();
+        let out = batcher.handle().submit(vec![42]).expect("submit");
+        assert_eq!(out[0] as i32, 42);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "single request must flush promptly on max_wait"
+        );
+    }
+
+    /// Concurrent same-instant submissions actually coalesce: with a
+    /// generous window, all stragglers ride one engine call.
+    #[test]
+    fn concurrent_submissions_share_batches() {
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let calls_in = calls.clone();
+        let engine = EngineHandle::simulated(move |_, _, rows| {
+            calls_in.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            // hold the batch open so stragglers can queue behind it
+            std::thread::sleep(Duration::from_millis(10));
+            Ok(rows.iter().map(|r| vec![r[0] as f32]).collect())
+        });
+        let batcher = Batcher::spawn(
+            engine,
+            "toy".into(),
+            "m".into(),
+            BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(50) },
+        );
+        let h = batcher.handle();
+        let mut clients = Vec::new();
+        for c in 0..16i32 {
+            let h = h.clone();
+            clients.push(std::thread::spawn(move || {
+                h.submit(vec![c]).expect("submit")
+            }));
+        }
+        for (c, t) in clients.into_iter().enumerate() {
+            let out = t.join().expect("client");
+            assert_eq!(out[0] as usize, c);
+        }
+        let n_calls = calls.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(
+            n_calls < 16,
+            "16 concurrent submissions should coalesce, saw {n_calls} engine calls"
+        );
+    }
+
+    /// An engine failure fans the error out to every submitter in the
+    /// batch instead of wedging them.
+    #[test]
+    fn engine_error_reaches_every_submitter() {
+        let engine = EngineHandle::simulated(|_, _, _| anyhow::bail!("engine exploded"));
+        let batcher = Batcher::spawn(
+            engine,
+            "toy".into(),
+            "m".into(),
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(20) },
+        );
+        let h = batcher.handle();
+        let mut clients = Vec::new();
+        for c in 0..4i32 {
+            let h = h.clone();
+            clients.push(std::thread::spawn(move || h.submit(vec![c])));
+        }
+        for t in clients {
+            let res = t.join().expect("client");
+            let err = res.expect_err("engine failure must propagate");
+            assert!(format!("{err}").contains("engine exploded"));
+        }
+    }
+}

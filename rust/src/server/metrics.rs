@@ -1,12 +1,26 @@
-//! Serving metrics: lock-free counters + a fixed-bucket latency histogram.
+//! Serving metrics: lock-free counters, a fixed-bucket latency histogram,
+//! per-model observed cost/score/correctness windows, and the bounded
+//! observation ring the online reoptimizer drains
+//! (see `server::reoptimizer`).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::responses::{SplitTable, TableBuilder};
 
 /// Log-spaced latency buckets in microseconds (upper bounds).
 pub const BUCKETS_US: [u64; 12] = [
     50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000,
     u64::MAX,
 ];
+
+/// Cascade depths tracked exactly by `stopped_at`; deeper stops land in a
+/// single overflow bucket instead of being silently dropped (plans can now
+/// hot-swap to arbitrary lengths, so no fixed plan bound exists up front).
+pub const MAX_STOP_DEPTH: usize = 8;
 
 /// Latency histogram with atomic buckets.
 #[derive(Debug, Default)]
@@ -62,30 +76,276 @@ impl Histogram {
     }
 }
 
-/// Aggregate serving metrics for one service instance.
+/// Per-model serving window: everything the service observes about one
+/// marketplace API while answering traffic. Costs are exact nano-USD
+/// sums (same representation as `BudgetTracker`); scores accumulate in
+/// 1e-6 units so a mean is recoverable without floats in the hot path.
 #[derive(Debug, Default)]
+pub struct ModelWindow {
+    /// Times this model's stage was invoked.
+    pub invocations: AtomicU64,
+    /// Times this model's answer was accepted (it answered the query).
+    pub accepted: AtomicU64,
+    /// Metered spend attributed to this model (nano-USD).
+    pub cost_nano_usd: AtomicU64,
+    /// Accepted answers that carried a *measured* reliability score (a
+    /// final cascade stage accepts with a sentinel 1.0, which would skew
+    /// the mean — those count in `accepted` but not here).
+    pub scored: AtomicU64,
+    /// Sum of those measured scores (1e-6 units).
+    pub score_micro_sum: AtomicU64,
+    /// Accepted answers with ground truth reported back.
+    pub labeled: AtomicU64,
+    /// ... of which were correct.
+    pub labeled_correct: AtomicU64,
+}
+
+impl ModelWindow {
+    pub fn record_invocation(&self, cost_usd: f64) {
+        self.invocations.fetch_add(1, Ordering::Relaxed);
+        let nano = (cost_usd * 1e9).round().max(0.0) as u64;
+        self.cost_nano_usd.fetch_add(nano, Ordering::Relaxed);
+    }
+
+    /// Count an accepted answer. `score` is `None` when the stage was the
+    /// cascade's last (its 1.0 is a "always answers" sentinel, not a
+    /// scorer output).
+    pub fn record_accepted(&self, score: Option<f32>) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = score {
+            self.scored.fetch_add(1, Ordering::Relaxed);
+            let micro = (f64::from(s) * 1e6).round().max(0.0) as u64;
+            self.score_micro_sum.fetch_add(micro, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_outcome(&self, correct: bool) {
+        self.labeled.fetch_add(1, Ordering::Relaxed);
+        self.labeled_correct.fetch_add(correct as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ModelWindowSnapshot {
+        let invocations = self.invocations.load(Ordering::Relaxed);
+        let accepted = self.accepted.load(Ordering::Relaxed);
+        let scored = self.scored.load(Ordering::Relaxed);
+        let labeled = self.labeled.load(Ordering::Relaxed);
+        ModelWindowSnapshot {
+            invocations,
+            accepted,
+            cost_usd: self.cost_nano_usd.load(Ordering::Relaxed) as f64 / 1e9,
+            mean_accepted_score: if scored == 0 {
+                0.0
+            } else {
+                self.score_micro_sum.load(Ordering::Relaxed) as f64 / 1e6
+                    / scored as f64
+            },
+            labeled,
+            observed_accuracy: if labeled == 0 {
+                0.0
+            } else {
+                self.labeled_correct.load(Ordering::Relaxed) as f64 / labeled as f64
+            },
+        }
+    }
+}
+
+/// Point-in-time copy of one model's window.
+#[derive(Debug, Clone, Default)]
+pub struct ModelWindowSnapshot {
+    pub invocations: u64,
+    pub accepted: u64,
+    pub cost_usd: f64,
+    pub mean_accepted_score: f64,
+    pub labeled: u64,
+    pub observed_accuracy: f64,
+}
+
+/// One fully-labelled observation: every marketplace model's response on
+/// one served item. This is the unit the reoptimizer learns from — the
+/// paper's cascade training needs *all* APIs' answers per item, so these
+/// rows come from a labelled feedback stream (in the serving driver: the
+/// offline response table row of each served test item), not from the
+/// cascade's own partial executions.
+#[derive(Debug, Clone)]
+pub struct Observation {
+    pub label: u32,
+    pub input_tokens: u32,
+    /// `preds[m]` / `scores[m]` / `correct[m]`: model m's response.
+    pub preds: Vec<u32>,
+    pub scores: Vec<f32>,
+    pub correct: Vec<bool>,
+}
+
+/// Bounded ring of the most recent [`Observation`]s — the sliding window
+/// of traffic the reoptimizer re-learns the cascade from. Old rows fall
+/// off the back, so the window tracks the *current* query mix. Rows are
+/// `Arc`ed so a snapshot clones pointers, not data — the serving path's
+/// `push` never waits behind a deep copy of the whole window.
+#[derive(Debug)]
+pub struct ObservationWindow {
+    /// Number of models every observation must cover.
+    n_models: usize,
+    cap: usize,
+    rows: Mutex<VecDeque<Arc<Observation>>>,
+    total: AtomicU64,
+}
+
+impl ObservationWindow {
+    pub fn new(n_models: usize, cap: usize) -> Self {
+        ObservationWindow {
+            n_models,
+            cap: cap.max(1),
+            rows: Mutex::new(VecDeque::new()),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Observations ever pushed (including ones that fell off the ring).
+    pub fn total_observed(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn push(&self, obs: Observation) -> Result<()> {
+        if obs.preds.len() != self.n_models
+            || obs.scores.len() != self.n_models
+            || obs.correct.len() != self.n_models
+        {
+            anyhow::bail!(
+                "observation covers {} models, window expects {}",
+                obs.preds.len(),
+                self.n_models
+            );
+        }
+        let obs = Arc::new(obs);
+        let mut rows = self.rows.lock().unwrap();
+        if rows.len() == self.cap {
+            rows.pop_front();
+        }
+        rows.push_back(obs);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Materialize the current window as a fresh training slice for
+    /// `CascadeOptimizer::new`: a model-major [`SplitTable`] plus the
+    /// per-item billable token counts. `None` while the window is empty.
+    pub fn snapshot_table(
+        &self,
+        dataset: &str,
+        model_names: &[String],
+    ) -> Option<(SplitTable, Vec<u32>)> {
+        // Arc clones only — the lock is held for a pointer-copy loop, so
+        // concurrent `push` (the serving hot path) never stalls on the
+        // O(window · K) table build below.
+        let rows: Vec<Arc<Observation>> = {
+            let guard = self.rows.lock().unwrap();
+            guard.iter().cloned().collect()
+        };
+        if rows.is_empty() {
+            return None;
+        }
+        let mut b = TableBuilder::new(dataset, model_names.to_vec());
+        let mut tokens = Vec::with_capacity(rows.len());
+        for o in &rows {
+            b.push_item(o.label, &o.preds, &o.scores, &o.correct)
+                .expect("window rows validated at push");
+            tokens.push(o.input_tokens);
+        }
+        let table = b.finish().expect("window rows are rectangular");
+        Some((table, tokens))
+    }
+}
+
+/// Aggregate serving metrics for one service instance.
+#[derive(Debug)]
 pub struct ServiceMetrics {
     pub queries: AtomicU64,
     pub cache_hits: AtomicU64,
     pub cascade_invocations: AtomicU64,
-    /// Total model calls broken out by cascade depth reached (1..=3).
-    pub stopped_at: [AtomicU64; 3],
+    /// Queries answered at each cascade depth (0..MAX_STOP_DEPTH exact).
+    stopped_at: [AtomicU64; MAX_STOP_DEPTH],
+    /// Queries answered at depth ≥ MAX_STOP_DEPTH (counted, not dropped).
+    stopped_at_overflow: AtomicU64,
     pub errors: AtomicU64,
     pub latency: Histogram,
+    /// Plans published over this service's lifetime (initial plan = 0).
+    pub plan_swaps: AtomicU64,
+    /// One window per marketplace model (index-aligned with the cost
+    /// model), empty when built via `Default`.
+    per_model: Vec<ModelWindow>,
+    /// Labelled full-row observations for the reoptimizer.
+    pub window: ObservationWindow,
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        ServiceMetrics::with_models(0, 4096)
+    }
 }
 
 impl ServiceMetrics {
+    /// Metrics for a marketplace of `n_models` APIs with an observation
+    /// ring of `window_cap` rows.
+    pub fn with_models(n_models: usize, window_cap: usize) -> Self {
+        ServiceMetrics {
+            queries: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cascade_invocations: AtomicU64::new(0),
+            stopped_at: Default::default(),
+            stopped_at_overflow: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            latency: Histogram::default(),
+            plan_swaps: AtomicU64::new(0),
+            per_model: (0..n_models).map(|_| ModelWindow::default()).collect(),
+            window: ObservationWindow::new(n_models, window_cap),
+        }
+    }
+
+    /// Count a query answered at cascade depth `depth` (0-based). Depths
+    /// beyond [`MAX_STOP_DEPTH`] go to the overflow bucket.
+    pub fn record_stop(&self, depth: usize) {
+        match self.stopped_at.get(depth) {
+            Some(b) => b.fetch_add(1, Ordering::Relaxed),
+            None => self.stopped_at_overflow.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+
+    pub fn model(&self, m: usize) -> Option<&ModelWindow> {
+        self.per_model.get(m)
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.per_model.len()
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             queries: self.queries.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cascade_invocations: self.cascade_invocations.load(Ordering::Relaxed),
-            stopped_at: [
-                self.stopped_at[0].load(Ordering::Relaxed),
-                self.stopped_at[1].load(Ordering::Relaxed),
-                self.stopped_at[2].load(Ordering::Relaxed),
-            ],
+            stopped_at: self
+                .stopped_at
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            stopped_at_overflow: self.stopped_at_overflow.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            plan_swaps: self.plan_swaps.load(Ordering::Relaxed),
+            per_model: self.per_model.iter().map(ModelWindow::snapshot).collect(),
+            window_len: self.window.len(),
+            window_total: self.window.total_observed(),
             mean_latency_us: self.latency.mean_us(),
             p50_us: self.latency.quantile_us(0.50),
             p95_us: self.latency.quantile_us(0.95),
@@ -101,8 +361,15 @@ pub struct MetricsSnapshot {
     pub queries: u64,
     pub cache_hits: u64,
     pub cascade_invocations: u64,
-    pub stopped_at: [u64; 3],
+    /// Exact counts for depths 0..MAX_STOP_DEPTH.
+    pub stopped_at: Vec<u64>,
+    /// Queries stopping at depth ≥ MAX_STOP_DEPTH.
+    pub stopped_at_overflow: u64,
     pub errors: u64,
+    pub plan_swaps: u64,
+    pub per_model: Vec<ModelWindowSnapshot>,
+    pub window_len: usize,
+    pub window_total: u64,
     pub mean_latency_us: f64,
     pub p50_us: u64,
     pub p95_us: u64,
@@ -137,13 +404,82 @@ mod tests {
 
     #[test]
     fn snapshot_copies_counters() {
-        let m = ServiceMetrics::default();
+        let m = ServiceMetrics::with_models(2, 16);
         m.queries.fetch_add(3, Ordering::Relaxed);
-        m.stopped_at[1].fetch_add(2, Ordering::Relaxed);
+        m.record_stop(1);
+        m.record_stop(1);
         m.latency.record_us(500);
+        m.model(0).unwrap().record_invocation(0.001);
+        m.model(0).unwrap().record_accepted(Some(0.75));
+        m.model(0).unwrap().record_accepted(None); // last-stage sentinel
+        m.model(0).unwrap().record_outcome(true);
         let s = m.snapshot();
         assert_eq!(s.queries, 3);
-        assert_eq!(s.stopped_at, [0, 2, 0]);
+        assert_eq!(s.stopped_at[1], 2);
+        assert_eq!(s.stopped_at.iter().sum::<u64>(), 2);
         assert_eq!(s.p50_us, 500);
+        assert_eq!(s.per_model[0].invocations, 1);
+        assert!((s.per_model[0].cost_usd - 0.001).abs() < 1e-9);
+        assert_eq!(s.per_model[0].accepted, 2);
+        // the sentinel acceptance must not drag the mean toward 1.0
+        assert!((s.per_model[0].mean_accepted_score - 0.75).abs() < 1e-6);
+        assert_eq!(s.per_model[0].labeled, 1);
+        assert_eq!(s.per_model[1].invocations, 0);
+    }
+
+    #[test]
+    fn deep_stops_overflow_instead_of_vanishing() {
+        let m = ServiceMetrics::with_models(1, 4);
+        m.record_stop(0);
+        m.record_stop(MAX_STOP_DEPTH - 1);
+        m.record_stop(MAX_STOP_DEPTH); // would have been dropped before
+        m.record_stop(MAX_STOP_DEPTH + 5);
+        let s = m.snapshot();
+        assert_eq!(s.stopped_at[0], 1);
+        assert_eq!(s.stopped_at[MAX_STOP_DEPTH - 1], 1);
+        assert_eq!(s.stopped_at_overflow, 2);
+        let total: u64 = s.stopped_at.iter().sum::<u64>() + s.stopped_at_overflow;
+        assert_eq!(total, 4, "every stop is accounted for");
+    }
+
+    #[test]
+    fn observation_window_is_bounded_and_rebuilds_tables() {
+        let w = ObservationWindow::new(2, 3);
+        let names = vec!["a".to_string(), "b".to_string()];
+        for i in 0..5u32 {
+            w.push(Observation {
+                label: i % 2,
+                input_tokens: 40 + i,
+                preds: vec![i % 2, 1 - i % 2],
+                scores: vec![0.9, 0.1],
+                correct: vec![true, false],
+            })
+            .unwrap();
+        }
+        assert_eq!(w.len(), 3, "ring keeps only the newest cap rows");
+        assert_eq!(w.total_observed(), 5);
+        let (table, tokens) = w.snapshot_table("toy", &names).unwrap();
+        assert_eq!(table.len(), 3);
+        assert_eq!(table.n_models(), 2);
+        // newest three observations are items 2, 3, 4
+        assert_eq!(tokens, vec![42, 43, 44]);
+        assert_eq!(table.accuracy(0), 1.0);
+        assert_eq!(table.accuracy(1), 0.0);
+        // mis-sized observations are rejected
+        assert!(w
+            .push(Observation {
+                label: 0,
+                input_tokens: 1,
+                preds: vec![0],
+                scores: vec![0.5],
+                correct: vec![true],
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn empty_window_has_no_table() {
+        let w = ObservationWindow::new(3, 8);
+        assert!(w.snapshot_table("toy", &["a".into(), "b".into(), "c".into()]).is_none());
     }
 }

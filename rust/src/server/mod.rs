@@ -1,7 +1,9 @@
-//! The tokio serving front end: request intake, dynamic batching,
-//! metrics, and the composed FrugalGPT service (cache → prompt adaptation
-//! → cascade → budget metering).
+//! The serving front end: request intake, dynamic batching, metrics, the
+//! composed FrugalGPT service (cache → prompt adaptation → cascade →
+//! budget metering), and the online re-optimization loop that re-learns
+//! and hot-swaps the served cascade as traffic drifts.
 
 pub mod batcher;
 pub mod metrics;
+pub mod reoptimizer;
 pub mod service;

@@ -1,0 +1,275 @@
+//! Online re-optimization: re-learn the served cascade from live traffic
+//! and hot-swap it atomically.
+//!
+//! The paper trains `(L, τ)` once on a labelled train split; this module
+//! closes the loop at serving time (cf. SMART, Jo et al. 2024, and
+//! budget-constrained contextual cascade policies, Zhang et al. 2024):
+//!
+//! 1. the service accumulates a sliding [`ObservationWindow`] of
+//!    fully-labelled rows — every marketplace model's (pred, score,
+//!    correct) on recently served items (`server::metrics`);
+//! 2. each [`Reoptimizer::step`] drains that window into a fresh
+//!    `SplitTable` slice and re-runs the full `CascadeOptimizer` sweep
+//!    against the configured budget — PR 1 made that sweep cheap enough
+//!    (incremental + parallel) to run *during* serving;
+//! 3. if the candidate plan beats the currently served plan on the same
+//!    window by more than the **hysteresis** margin, it is published
+//!    through the service's `PlanHandle` — a single atomic pointer swap
+//!    that in-flight `answer()` calls never observe mid-query.
+//!
+//! Hysteresis is what keeps sampling noise from thrashing plans: a
+//! candidate must improve window accuracy by `hysteresis` (absolute), or
+//! match accuracy and cut window cost by a `hysteresis` fraction, before
+//! a swap is published. An identical plan is always kept.
+//!
+//! Two driving modes share [`Reoptimizer::step`]:
+//! * **synchronous** — the serving driver calls `step()` every N queries
+//!   (`frugalgpt serve --reoptimize-every N`), deterministic and easy to
+//!   test;
+//! * **background** — [`Reoptimizer::spawn`] runs the same step on its own
+//!   thread every `interval` until the handle is stopped/dropped.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::cascade::replay;
+use crate::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
+use crate::server::metrics::ObservationWindow;
+use crate::server::service::FrugalService;
+
+/// Tuning for the re-optimization loop.
+#[derive(Debug, Clone)]
+pub struct ReoptimizerConfig {
+    /// Budget the re-learned plan must fit (USD per 10k queries).
+    /// `f64::MAX` = unconstrained (chase the top of the frontier).
+    pub budget_usd_per_10k: f64,
+    /// Minimum observation-window rows before a step will act.
+    pub min_window: usize,
+    /// Swap margin: required absolute window-accuracy improvement, or (at
+    /// matched accuracy) required fractional window-cost reduction.
+    pub hysteresis: f64,
+    /// Poll period of the background mode ([`Reoptimizer::spawn`]).
+    pub interval: Duration,
+    /// Search options for the window sweeps. The default grid is finer
+    /// than windows need; callers typically shrink `grid` for latency.
+    pub optimizer: OptimizerOptions,
+}
+
+impl Default for ReoptimizerConfig {
+    fn default() -> Self {
+        ReoptimizerConfig {
+            budget_usd_per_10k: f64::MAX,
+            min_window: 128,
+            hysteresis: 0.005,
+            interval: Duration::from_secs(2),
+            optimizer: OptimizerOptions::default(),
+        }
+    }
+}
+
+/// What one [`Reoptimizer::step`] did.
+#[derive(Debug, Clone)]
+pub enum ReoptOutcome {
+    /// Not enough labelled observations yet.
+    WindowTooSmall { have: usize, need: usize },
+    /// The current plan survives (identical re-learn, inside hysteresis,
+    /// or no plan fits the budget on this window — `reason` says which).
+    Kept { reason: String },
+    /// A new plan was published.
+    Swapped {
+        version: u64,
+        window_accuracy: f64,
+        window_avg_cost: f64,
+    },
+}
+
+/// Decide whether a candidate plan's window metrics justify replacing the
+/// current plan's. Pure so the hysteresis band is unit-testable:
+/// accuracy must improve by more than `hysteresis` (absolute), or hold
+/// (within 1e-12) while cost drops by more than a `hysteresis` fraction.
+pub fn swap_worthy(
+    current: (f64, f64),
+    candidate: (f64, f64),
+    hysteresis: f64,
+) -> bool {
+    let (cur_acc, cur_cost) = current;
+    let (cand_acc, cand_cost) = candidate;
+    if cand_acc > cur_acc + hysteresis {
+        return true;
+    }
+    cand_acc >= cur_acc - 1e-12 && cand_cost < cur_cost * (1.0 - hysteresis)
+}
+
+/// The re-optimization driver for one service.
+pub struct Reoptimizer {
+    svc: Arc<FrugalService>,
+    cfg: ReoptimizerConfig,
+    steps: AtomicU64,
+    swaps: AtomicU64,
+}
+
+impl Reoptimizer {
+    pub fn new(svc: Arc<FrugalService>, cfg: ReoptimizerConfig) -> Reoptimizer {
+        Reoptimizer { svc, cfg, steps: AtomicU64::new(0), swaps: AtomicU64::new(0) }
+    }
+
+    pub fn config(&self) -> &ReoptimizerConfig {
+        &self.cfg
+    }
+
+    /// Steps run so far (both modes).
+    pub fn steps(&self) -> u64 {
+        self.steps.load(Ordering::Relaxed)
+    }
+
+    /// Swaps published so far by this reoptimizer.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// One full re-optimization pass: window → table slice → sweep →
+    /// hysteresis gate → (maybe) publish.
+    pub fn step(&self) -> Result<ReoptOutcome> {
+        self.steps.fetch_add(1, Ordering::Relaxed);
+        let window: &ObservationWindow = &self.svc.metrics.window;
+        let have = window.len();
+        if have < self.cfg.min_window {
+            return Ok(ReoptOutcome::WindowTooSmall { have, need: self.cfg.min_window });
+        }
+        let costs = self.svc.costs().clone();
+        let (table, tokens) = window
+            .snapshot_table(&costs.dataset, &costs.model_names)
+            .context("window emptied between len() and snapshot")?;
+
+        let opt = CascadeOptimizer::new(&table, &costs, tokens.clone(), self.cfg.optimizer.clone())
+            .context("building window optimizer")?;
+        let candidate = match opt.optimize(self.cfg.budget_usd_per_10k) {
+            Ok(c) => c,
+            Err(e) => {
+                return Ok(ReoptOutcome::Kept {
+                    reason: format!("no plan fits budget on current window: {e}"),
+                })
+            }
+        };
+
+        let current_plan = self.svc.plan();
+        if candidate.plan == current_plan {
+            return Ok(ReoptOutcome::Kept { reason: "re-learned plan is identical".into() });
+        }
+
+        // Score BOTH plans on the same window so the comparison is
+        // apples-to-apples under the live traffic mix.
+        let cur = replay::replay(&current_plan, &table, &costs, &tokens);
+        if !swap_worthy(
+            (cur.accuracy, cur.avg_cost),
+            (candidate.train_accuracy, candidate.train_avg_cost),
+            self.cfg.hysteresis,
+        ) {
+            return Ok(ReoptOutcome::Kept {
+                reason: format!(
+                    "within hysteresis: window acc {:.4}→{:.4}, cost ${:.4}→${:.4}/10k",
+                    cur.accuracy,
+                    candidate.train_accuracy,
+                    cur.avg_cost * 1e4,
+                    candidate.train_avg_cost * 1e4
+                ),
+            });
+        }
+
+        let reason = format!(
+            "window of {} obs: acc {:.4}→{:.4}, cost ${:.4}→${:.4}/10k",
+            table.len(),
+            cur.accuracy,
+            candidate.train_accuracy,
+            cur.avg_cost * 1e4,
+            candidate.train_avg_cost * 1e4
+        );
+        let version = self.svc.publish_plan(
+            candidate.plan,
+            &reason,
+            Some((candidate.train_accuracy, candidate.train_avg_cost)),
+        )?;
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(ReoptOutcome::Swapped {
+            version,
+            window_accuracy: candidate.train_accuracy,
+            window_avg_cost: candidate.train_avg_cost,
+        })
+    }
+
+    /// Run `step()` every `cfg.interval` on a background thread until the
+    /// returned handle is stopped (or dropped). Step errors are counted on
+    /// the service's error metric, never fatal to the loop.
+    pub fn spawn(self) -> ReoptimizerHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_in = stop.clone();
+        let interval = self.cfg.interval;
+        let join = std::thread::Builder::new()
+            .name("reoptimizer".into())
+            .spawn(move || {
+                while !stop_in.load(Ordering::Relaxed) {
+                    std::thread::park_timeout(interval);
+                    if stop_in.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if self.step().is_err() {
+                        self.svc.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            })
+            .expect("spawning reoptimizer thread");
+        ReoptimizerHandle { stop, join: Some(join) }
+    }
+}
+
+/// Owns the background re-optimization thread; stopping (or dropping)
+/// shuts it down promptly.
+pub struct ReoptimizerHandle {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ReoptimizerHandle {
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            j.thread().unpark();
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ReoptimizerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hysteresis_band_blocks_noise_and_passes_real_gains() {
+        let h = 0.01;
+        // clear accuracy win
+        assert!(swap_worthy((0.80, 1.0), (0.83, 1.2), h));
+        // inside the accuracy band, same cost → no swap
+        assert!(!swap_worthy((0.80, 1.0), (0.805, 1.0), h));
+        // matched accuracy, real cost cut → swap
+        assert!(swap_worthy((0.80, 1.0), (0.80, 0.7), h));
+        // matched accuracy, cost cut inside the band → no swap
+        assert!(!swap_worthy((0.80, 1.0), (0.80, 0.995), h));
+        // worse accuracy never swaps, however cheap
+        assert!(!swap_worthy((0.80, 1.0), (0.60, 0.01), h));
+        // exact tie (same acc, same cost) → no swap
+        assert!(!swap_worthy((0.80, 1.0), (0.80, 1.0), h));
+    }
+}

@@ -1,12 +1,25 @@
 //! The composed FrugalGPT service: completion cache → prompt adaptation →
 //! LLM cascade, with budget metering and metrics (paper Fig. 1b: all
 //! three cost-reduction strategies stacked in front of the marketplace).
+//!
+//! §Plan lifecycle — the served cascade is no longer a constructor-frozen
+//! pair: the service routes every query through a [`PlanHandle`], an
+//! atomically swappable `Arc` over an immutable [`PlanBundle`]
+//! (plan + live cascade + degraded cascade, all built together).
+//! `answer()` grabs one snapshot up front and uses only that bundle for
+//! the whole query, so a concurrent swap can never mix stages, costs, or
+//! models from two plans inside one answer. Publishers
+//! (`swap_plan` / the `server::reoptimizer` loop) build the new bundle
+//! *outside* the lock and swap a single pointer under a write lock held
+//! for nanoseconds; readers clone the `Arc` under the read lock, so they
+//! never wait on plan construction. Every publish is recorded as a
+//! [`SwapEvent`] for the swap-history report.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use anyhow::Result;
-use std::sync::Mutex;
 
 use crate::coordinator::budget::{Admission, BudgetTracker};
 use crate::coordinator::cascade::{Cascade, CascadeAnswer, CascadePlan};
@@ -14,9 +27,10 @@ use crate::coordinator::scorer::Scorer;
 use crate::data::DatasetMeta;
 use crate::marketplace::CostModel;
 use crate::runtime::EngineHandle;
-use crate::server::metrics::ServiceMetrics;
+use crate::server::metrics::{Observation, ServiceMetrics};
 use crate::strategies::cache::{CachedAnswer, CompletionCache};
 use crate::strategies::prompt::PromptPolicy;
+use crate::util::json::Value;
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -31,6 +45,9 @@ pub struct ServiceConfig {
     /// Optional hard budget cap (USD); when reached the service degrades
     /// to the first cascade stage only.
     pub budget_cap_usd: Option<f64>,
+    /// Rows kept in the labelled observation window the reoptimizer
+    /// re-learns from.
+    pub window_capacity: usize,
 }
 
 impl Default for ServiceConfig {
@@ -41,26 +58,186 @@ impl Default for ServiceConfig {
             cache_min_similarity: 1.0,
             prompt_policy: PromptPolicy::Full,
             budget_cap_usd: None,
+            window_capacity: 4096,
         }
     }
 }
 
-/// The answer returned to a client.
+/// The answer returned to a client. `stopped_at`, `model`, `cost_usd` and
+/// `plan_version` all come from the *same* plan snapshot.
 #[derive(Debug, Clone)]
 pub struct ServiceAnswer {
     pub answer: u32,
     pub from_cache: bool,
     pub stopped_at: usize,
+    /// Marketplace index of the model whose answer was accepted
+    /// (meaningless for cache hits, which skip the cascade).
+    pub model: usize,
     pub cost_usd: f64,
+    /// Version of the plan bundle that served this query.
+    pub plan_version: u64,
     pub latency_us: u64,
     pub simulated_api_latency_ms: f64,
 }
 
+/// One immutable served-plan generation: the learned plan plus the live
+/// and degraded cascades compiled from it. Never mutated after build —
+/// swaps replace the whole bundle.
+pub struct PlanBundle {
+    plan: CascadePlan,
+    version: u64,
+    cascade: Cascade,
+    /// Budget-cap fallback: cheapest stage of `plan` only.
+    degraded: Cascade,
+}
+
+impl PlanBundle {
+    fn build(
+        plan: CascadePlan,
+        version: u64,
+        engine: &EngineHandle,
+        costs: &CostModel,
+        meta: &DatasetMeta,
+    ) -> Result<PlanBundle> {
+        if plan.is_empty() {
+            anyhow::bail!("cannot build a plan bundle from an empty cascade plan");
+        }
+        let degrade_plan = CascadePlan::single(plan.stages[0].model);
+        let degraded = Cascade::new(
+            degrade_plan,
+            engine.clone(),
+            Scorer::new(engine.clone(), meta.clone()),
+            costs.clone(),
+            meta.clone(),
+        )?;
+        let cascade = Cascade::new(
+            plan.clone(),
+            engine.clone(),
+            Scorer::new(engine.clone(), meta.clone()),
+            costs.clone(),
+            meta.clone(),
+        )?;
+        Ok(PlanBundle { plan, version, cascade, degraded })
+    }
+
+    pub fn plan(&self) -> &CascadePlan {
+        &self.plan
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+}
+
+/// One published plan swap, kept for the `report swaps` history.
+#[derive(Debug, Clone)]
+pub struct SwapEvent {
+    pub version: u64,
+    /// `metrics.queries` at publish time.
+    pub at_query: u64,
+    pub reason: String,
+    pub plan: CascadePlan,
+    /// Window metrics of the new plan at publish time (reoptimizer swaps).
+    pub window_accuracy: Option<f64>,
+    pub window_avg_cost: Option<f64>,
+}
+
+impl SwapEvent {
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("version".to_string(), Value::Num(self.version as f64));
+        m.insert("at_query".to_string(), Value::Num(self.at_query as f64));
+        m.insert("reason".to_string(), Value::Str(self.reason.clone()));
+        m.insert("plan".to_string(), self.plan.to_value());
+        m.insert(
+            "window_accuracy".to_string(),
+            self.window_accuracy.map(Value::Num).unwrap_or(Value::Null),
+        );
+        m.insert(
+            "window_avg_cost".to_string(),
+            self.window_avg_cost.map(Value::Num).unwrap_or(Value::Null),
+        );
+        Value::Obj(m)
+    }
+
+    pub fn from_value(v: &Value) -> Result<SwapEvent> {
+        use anyhow::Context;
+        Ok(SwapEvent {
+            version: v.get("version").as_f64().context("swap missing `version`")? as u64,
+            at_query: v.get("at_query").as_f64().context("swap missing `at_query`")? as u64,
+            reason: v
+                .get("reason")
+                .as_str()
+                .context("swap missing `reason`")?
+                .to_string(),
+            plan: CascadePlan::from_value(v.get("plan")).context("swap plan")?,
+            window_accuracy: v.get("window_accuracy").as_f64(),
+            window_avg_cost: v.get("window_avg_cost").as_f64(),
+        })
+    }
+}
+
+/// Shared, atomically swappable handle to the current [`PlanBundle`].
+pub struct PlanHandle {
+    current: RwLock<Arc<PlanBundle>>,
+    next_version: AtomicU64,
+    history: Mutex<Vec<SwapEvent>>,
+}
+
+impl PlanHandle {
+    fn new(initial: PlanBundle) -> PlanHandle {
+        let v0 = initial.version;
+        PlanHandle {
+            current: RwLock::new(Arc::new(initial)),
+            next_version: AtomicU64::new(v0 + 1),
+            history: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The current bundle. Read-lock held only to clone the `Arc` — a
+    /// concurrent publish never blocks answering for longer than that
+    /// pointer copy.
+    pub fn snapshot(&self) -> Arc<PlanBundle> {
+        self.current.read().unwrap().clone()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.snapshot().version
+    }
+
+    /// Reserve the version number for a bundle about to be built.
+    fn reserve_version(&self) -> u64 {
+        self.next_version.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Install `bundle` if its version is still the newest. Returns
+    /// whether it was installed; a publish that lost the version race is
+    /// dropped entirely (no history entry — it never served traffic).
+    /// The history push happens under the same write lock, so the
+    /// recorded events are strictly version-ordered.
+    fn publish(&self, bundle: PlanBundle, event: SwapEvent) -> bool {
+        let bundle = Arc::new(bundle);
+        let mut cur = self.current.write().unwrap();
+        if cur.version >= bundle.version {
+            return false;
+        }
+        *cur = bundle;
+        self.history.lock().unwrap().push(event);
+        true
+    }
+
+    /// All swaps published so far (oldest first; the initial plan is not
+    /// an event).
+    pub fn history(&self) -> Vec<SwapEvent> {
+        self.history.lock().unwrap().clone()
+    }
+}
+
 /// A FrugalGPT serving instance for one dataset.
 pub struct FrugalService {
-    cascade: Cascade,
-    /// Degraded mode (budget cap reached): cheapest stage only.
-    degraded: Cascade,
+    plans: PlanHandle,
+    engine: EngineHandle,
+    costs: CostModel,
     cache: Mutex<CompletionCache>,
     cfg: ServiceConfig,
     pub budget: BudgetTracker,
@@ -76,26 +253,20 @@ impl FrugalService {
         meta: DatasetMeta,
         cfg: ServiceConfig,
     ) -> Result<Self> {
-        let scorer = Scorer::new(engine.clone(), meta.clone());
-        let degrade_plan = CascadePlan::single(plan.stages[0].model);
-        let degraded = Cascade::new(
-            degrade_plan,
-            engine.clone(),
-            Scorer::new(engine.clone(), meta.clone()),
-            costs.clone(),
-            meta.clone(),
-        )?;
-        let cascade = Cascade::new(plan, engine, scorer, costs, meta.clone())?;
+        let initial = PlanBundle::build(plan, 0, &engine, &costs, &meta)?;
+        let metrics =
+            Arc::new(ServiceMetrics::with_models(costs.n_models(), cfg.window_capacity));
         Ok(FrugalService {
-            cascade,
-            degraded,
+            plans: PlanHandle::new(initial),
+            engine,
             cache: Mutex::new(CompletionCache::new(
                 cfg.cache_capacity.max(1),
                 cfg.cache_min_similarity,
             )),
             budget: BudgetTracker::new(cfg.budget_cap_usd),
-            metrics: Arc::new(ServiceMetrics::default()),
+            metrics,
             cfg,
+            costs,
             meta,
         })
     }
@@ -104,30 +275,92 @@ impl FrugalService {
         &self.meta
     }
 
-    pub fn plan(&self) -> &CascadePlan {
-        self.cascade.plan()
+    /// The currently served plan (a snapshot copy — the live plan may be
+    /// swapped at any time).
+    pub fn plan(&self) -> CascadePlan {
+        self.plans.snapshot().plan.clone()
+    }
+
+    /// The current plan bundle (plan + version, immutably).
+    pub fn plan_snapshot(&self) -> Arc<PlanBundle> {
+        self.plans.snapshot()
+    }
+
+    pub fn plan_version(&self) -> u64 {
+        self.plans.version()
+    }
+
+    /// Plan swaps published so far.
+    pub fn swap_history(&self) -> Vec<SwapEvent> {
+        self.plans.history()
+    }
+
+    /// Build and atomically publish a new plan. The bundle (cascade
+    /// validation included) is constructed before the swap, so in-flight
+    /// `answer()` calls keep running on their snapshots and the handover
+    /// is a single pointer store. Returns the new plan version.
+    pub fn swap_plan(&self, plan: CascadePlan, reason: &str) -> Result<u64> {
+        self.publish_plan(plan, reason, None)
+    }
+
+    /// [`FrugalService::swap_plan`] with the window metrics that justified
+    /// the swap (recorded in the swap history by the reoptimizer).
+    pub fn publish_plan(
+        &self,
+        plan: CascadePlan,
+        reason: &str,
+        window_stats: Option<(f64, f64)>,
+    ) -> Result<u64> {
+        let version = self.plans.reserve_version();
+        let bundle = PlanBundle::build(plan.clone(), version, &self.engine, &self.costs, &self.meta)?;
+        let event = SwapEvent {
+            version,
+            at_query: self.metrics.queries.load(Ordering::Relaxed),
+            reason: reason.to_string(),
+            plan,
+            window_accuracy: window_stats.map(|(a, _)| a),
+            window_avg_cost: window_stats.map(|(_, c)| c),
+        };
+        if !self.plans.publish(bundle, event) {
+            anyhow::bail!(
+                "plan v{version} was superseded by a newer publish before \
+                 it could be installed"
+            );
+        }
+        self.metrics.plan_swaps.fetch_add(1, Ordering::Relaxed);
+        // Flush completions produced by the superseded plan — under the
+        // drift that just triggered this swap, its cached answers are
+        // exactly the ones not to keep serving. (Finer-grained: stamp
+        // entries with plan_version and decay — see ROADMAP.)
+        if self.cfg.cache_enabled {
+            self.cache.lock().unwrap().clear();
+        }
+        Ok(version)
     }
 
     /// Answer one query (blocking; wrap in `spawn_blocking` from tokio).
     pub fn answer(&self, tokens: &[i32]) -> Result<ServiceAnswer> {
         let t0 = Instant::now();
-        self.metrics
-            .queries
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.queries.fetch_add(1, Ordering::Relaxed);
+
+        // Snapshot the served plan ONCE; everything below — stage walk,
+        // cost metering, per-model attribution, the returned answer —
+        // comes from this one bundle even if a swap lands mid-query.
+        let bundle = self.plans.snapshot();
 
         // 1. Completion cache (paper Fig. 2c).
         if self.cfg.cache_enabled {
             if let Some(hit) = self.cache.lock().unwrap().get(tokens) {
-            self.metrics
-                .cache_hits
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            let lat = t0.elapsed().as_micros() as u64;
-            self.metrics.latency.record_us(lat);
+                self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                let lat = t0.elapsed().as_micros() as u64;
+                self.metrics.latency.record_us(lat);
                 return Ok(ServiceAnswer {
                     answer: hit.answer,
                     from_cache: true,
                     stopped_at: 0,
+                    model: 0,
                     cost_usd: 0.0,
+                    plan_version: bundle.version,
                     latency_us: lat,
                     simulated_api_latency_ms: 0.0,
                 });
@@ -138,27 +371,44 @@ impl FrugalService {
         let adapted = self.cfg.prompt_policy.apply(tokens, &self.meta);
 
         // 3. LLM cascade (paper Fig. 2e), degraded if over budget.
-        self.metrics
-            .cascade_invocations
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let out: CascadeAnswer = if self.budget.admit() == Admission::CapReached {
-            self.degraded.answer(&adapted)?
+        self.metrics.cascade_invocations.fetch_add(1, Ordering::Relaxed);
+        let degraded = self.budget.admit() == Admission::CapReached;
+        let (executed, out): (&CascadePlan, CascadeAnswer) = if degraded {
+            (bundle.degraded.plan(), bundle.degraded.answer(&adapted)?)
         } else {
-            self.cascade.answer(&adapted)?
+            (&bundle.plan, bundle.cascade.answer(&adapted)?)
         };
 
-        self.budget.record(out.cost_usd());
-        if out.stopped_at < 3 {
-            self.metrics.stopped_at[out.stopped_at]
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.budget.record(out.cost);
+        self.metrics.record_stop(out.stopped_at);
+        for (s, &stage_cost) in out.stage_costs.iter().enumerate() {
+            if let Some(w) = self.metrics.model(executed.stages[s].model) {
+                w.record_invocation(stage_cost);
+            }
+        }
+        let model = executed.stages[out.stopped_at].model;
+        if let Some(w) = self.metrics.model(model) {
+            // A last-stage stop carries the cascade's sentinel score 1.0,
+            // not a scorer measurement — don't let it skew the window.
+            let measured = out.stopped_at + 1 < executed.stages.len();
+            w.record_accepted(measured.then_some(out.score));
         }
 
-        // 4. Populate the cache.
+        // 4. Populate the cache — but only if our snapshot is still the
+        // served plan. A swap flushes the cache after installing the new
+        // bundle; an in-flight answer from the superseded plan must not
+        // repopulate it past that flush. The check runs under the cache
+        // lock the publisher flushes under, and the flush is ordered
+        // after the install, so every interleaving either skips the put
+        // (version moved on) or has its entry covered by the flush.
         if self.cfg.cache_enabled {
-            self.cache.lock().unwrap().put(
-                tokens,
-                CachedAnswer { answer: out.answer, score: out.score },
-            );
+            let mut cache = self.cache.lock().unwrap();
+            if self.plans.version() == bundle.version {
+                cache.put(
+                    tokens,
+                    CachedAnswer { answer: out.answer, score: out.score },
+                );
+            }
         }
 
         let lat = t0.elapsed().as_micros() as u64;
@@ -167,23 +417,81 @@ impl FrugalService {
             answer: out.answer,
             from_cache: false,
             stopped_at: out.stopped_at,
-            cost_usd: out.cost_usd(),
+            model,
+            cost_usd: out.cost,
+            plan_version: bundle.version,
             latency_us: lat,
             simulated_api_latency_ms: out.simulated_latency_ms,
         })
     }
 
+    /// Report ground truth for an answered query: updates the accepting
+    /// model's observed-accuracy window.
+    pub fn record_ground_truth(&self, ans: &ServiceAnswer, label: u32) {
+        if ans.from_cache {
+            return;
+        }
+        if let Some(w) = self.metrics.model(ans.model) {
+            w.record_outcome(ans.answer == label);
+        }
+    }
+
+    /// Feed one fully-labelled observation (every model's response on one
+    /// item) into the reoptimizer's window.
+    pub fn observe(&self, obs: Observation) -> Result<()> {
+        self.metrics.window.push(obs)
+    }
+
     pub fn engine_handle(&self) -> EngineHandle {
-        self.cascade.engine_handle()
+        self.engine.clone()
     }
 
     pub fn costs(&self) -> &CostModel {
-        self.cascade.costs()
+        &self.costs
     }
 }
 
-impl CascadeAnswer {
-    fn cost_usd(&self) -> f64 {
-        self.cost
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cascade::Stage;
+
+    #[test]
+    fn swap_event_json_roundtrip() {
+        let ev = SwapEvent {
+            version: 3,
+            at_query: 1200,
+            reason: "window of 256 obs: acc 0.71→0.94".into(),
+            plan: CascadePlan::new(vec![
+                Stage { model: 1, threshold: 0.62 },
+                Stage { model: 11, threshold: 0.0 },
+            ]),
+            window_accuracy: Some(0.9375),
+            window_avg_cost: Some(0.00042),
+        };
+        let json = ev.to_value().to_json();
+        let back = SwapEvent::from_value(&Value::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.version, 3);
+        assert_eq!(back.at_query, 1200);
+        assert_eq!(back.reason, ev.reason);
+        assert_eq!(back.plan, ev.plan);
+        assert_eq!(back.window_accuracy, ev.window_accuracy);
+        assert_eq!(back.window_avg_cost, ev.window_avg_cost);
+    }
+
+    #[test]
+    fn swap_event_without_window_stats() {
+        let ev = SwapEvent {
+            version: 1,
+            at_query: 0,
+            reason: "manual".into(),
+            plan: CascadePlan::single(2),
+            window_accuracy: None,
+            window_avg_cost: None,
+        };
+        let back =
+            SwapEvent::from_value(&Value::parse(&ev.to_value().to_json()).unwrap()).unwrap();
+        assert_eq!(back.window_accuracy, None);
+        assert_eq!(back.window_avg_cost, None);
     }
 }

@@ -107,6 +107,19 @@ impl CompletionCache {
         self.by_key.is_empty()
     }
 
+    /// Drop every entry (the server flushes on a plan swap so completions
+    /// produced by a superseded plan stop being served). Counters in
+    /// `stats` survive; capacity and tiers are unchanged.
+    pub fn clear(&mut self) {
+        self.by_key.clear();
+        self.slots.clear();
+        self.lru_prev.clear();
+        self.lru_next.clear();
+        self.lru_head = NIL;
+        self.lru_tail = NIL;
+        self.free.clear();
+    }
+
     /// Look up a query. Exact match first, then the MinHash similar tier.
     pub fn get(&mut self, query: &[i32]) -> Option<CachedAnswer> {
         self.stats.lookups += 1;
@@ -266,6 +279,24 @@ mod tests {
 
     fn q(seed: i32, len: usize) -> Vec<i32> {
         (0..len as i32).map(|i| seed * 31 + i * 7 % 97).collect()
+    }
+
+    #[test]
+    fn clear_empties_and_cache_stays_usable() {
+        let mut c = CompletionCache::new(4, 1.0);
+        for s in 0..6 {
+            c.put(&q(s, 8), CachedAnswer { answer: s as u32, score: 0.5 });
+        }
+        assert_eq!(c.len(), 4);
+        c.clear();
+        assert!(c.is_empty());
+        assert!(c.get(&q(5, 8)).is_none());
+        // reusable after clear: inserts, hits, and eviction still work
+        for s in 10..16 {
+            c.put(&q(s, 8), CachedAnswer { answer: s as u32, score: 0.5 });
+        }
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.get(&q(15, 8)).unwrap().answer, 15);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! feasibility, cache consistency, batching/grouping, and JSON round-trips.
 
 use frugalgpt::coordinator::cascade::{replay, CascadePlan, Stage};
+use frugalgpt::coordinator::frontier::SavedFrontier;
 use frugalgpt::coordinator::optimizer::{prune_pareto, CascadeOptimizer, OptimizerOptions};
 use frugalgpt::coordinator::responses::synthetic_table;
 use frugalgpt::marketplace::CostModel;
@@ -13,14 +14,8 @@ use frugalgpt::util::prop::check;
 use frugalgpt::util::rng::Rng;
 
 fn cost_model(k: usize) -> CostModel {
-    let full = CostModel::from_table1("prop", vec![1, 1, 2, 1]);
-    CostModel {
-        dataset: full.dataset.clone(),
-        model_names: (0..k).map(|m| format!("api_{m}")).collect(),
-        pricing: full.pricing[..k].to_vec(),
-        latency: full.latency[..k].to_vec(),
-        answer_lens: full.answer_lens.clone(),
-    }
+    CostModel::from_table1("prop", vec![1, 1, 2, 1])
+        .truncated((0..k).map(|m| format!("api_{m}")).collect())
 }
 
 fn random_plan(rng: &mut Rng, k: usize) -> CascadePlan {
@@ -372,6 +367,45 @@ fn prop_concat_monotone() {
             assert!(t >= q as f64 - 1e-12);
             prev = t;
         }
+    });
+}
+
+/// Frontier persistence: serialize → parse is lossless — plans equal
+/// point-for-point and accuracy/cost within 1e-12 (in fact bit-exact,
+/// which is also asserted: `util::json` writes shortest-roundtrip floats).
+#[test]
+fn prop_frontier_json_roundtrip() {
+    check("frontier-json-roundtrip", 10, |rng| {
+        let k = 3 + rng.usize_below(4);
+        let n = 60 + rng.usize_below(200);
+        let table = synthetic_table(k, n, 4, 0.5 + 0.5 * rng.f64(), rng.next_u64());
+        let costs = cost_model(k);
+        let toks = vec![45u32; n];
+        let opt = CascadeOptimizer::new(
+            &table,
+            &costs,
+            toks,
+            OptimizerOptions { grid: 6, ..Default::default() },
+        )
+        .unwrap();
+        let points = opt.frontier();
+        assert!(!points.is_empty());
+        let sf = SavedFrontier::new("prop", table.model_names.clone(), points.clone());
+        let back = SavedFrontier::from_json(&sf.to_json()).expect("roundtrip parse");
+        assert_eq!(back.points.len(), points.len());
+        for (a, b) in points.iter().zip(&back.points) {
+            assert_eq!(a.plan, b.plan);
+            assert!((a.accuracy - b.accuracy).abs() < 1e-12);
+            assert!((a.avg_cost - b.avg_cost).abs() < 1e-12);
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            assert_eq!(a.avg_cost.to_bits(), b.avg_cost.to_bits());
+        }
+        // the restored frontier answers budget queries identically
+        let budget = points[rng.usize_below(points.len())].avg_cost * 1e4;
+        let live = opt.optimize(budget).unwrap();
+        let restored = back.best_within(budget).unwrap();
+        assert_eq!(live.plan, restored.plan);
+        assert_eq!(live.train_accuracy.to_bits(), restored.train_accuracy.to_bits());
     });
 }
 

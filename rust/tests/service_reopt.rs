@@ -1,0 +1,330 @@
+//! Hermetic serving-stack tests: plan hot-swap consistency under
+//! concurrent traffic, and the online reoptimizer following a shift in
+//! the observation window. No artifacts needed — the PJRT engine is
+//! replaced by `EngineHandle::simulated`, whose per-model outputs encode
+//! the model's identity so any cross-plan mixing inside one answer is
+//! detectable from the answer alone.
+
+use std::sync::Arc;
+
+use frugalgpt::coordinator::cascade::{CascadePlan, Stage};
+use frugalgpt::coordinator::optimizer::OptimizerOptions;
+use frugalgpt::data::{layout, DatasetMeta};
+use frugalgpt::marketplace::{CostModel, LatencyModel, Pricing};
+use frugalgpt::runtime::EngineHandle;
+use frugalgpt::server::metrics::Observation;
+use frugalgpt::server::reoptimizer::{Reoptimizer, ReoptimizerConfig, ReoptOutcome};
+use frugalgpt::server::service::{FrugalService, ServiceConfig};
+use frugalgpt::util::rng::Rng;
+
+const K: usize = 3;
+
+fn sim_meta() -> DatasetMeta {
+    DatasetMeta {
+        name: "sim".into(),
+        seq: 8,
+        n_classes: 4,
+        n_examples: 0,
+        qlen: 4,
+        block_len: 1,
+        q_offset: 0,
+        scorer_seq: 8,
+        answer_lens: vec![1, 1, 1, 1],
+    }
+}
+
+/// Distinct per-model prices: 0 cheap, 1 mid, 2 expensive.
+fn sim_costs() -> CostModel {
+    CostModel {
+        dataset: "sim".into(),
+        model_names: (0..K).map(|m| format!("api_{m}")).collect(),
+        pricing: vec![
+            Pricing::new(2.0, 2.0, 0.0),
+            Pricing::new(10.0, 10.0, 0.0),
+            Pricing::new(30.0, 60.0, 0.0),
+        ],
+        latency: vec![LatencyModel { base_ms: 1.0, per_1k_tokens_ms: 1.0 }; K],
+        answer_lens: vec![1, 1, 1, 1],
+    }
+}
+
+/// A valid query row in the sim layout: `[CLS] body(4) [QSEP] PAD PAD`.
+fn query_row() -> Vec<i32> {
+    vec![layout::CLS, 10, 11, 12, 13, layout::QSEP, layout::PAD, layout::PAD]
+}
+
+/// Simulated engine: model `api_m` answers class `m` (one-hot logits), so
+/// every answer names the model that produced it; the scorer's logit is
+/// `scorer_logit`, fixed per engine.
+fn sim_engine(costs: &CostModel, scorer_logit: f32) -> EngineHandle {
+    let names = costs.model_names.clone();
+    EngineHandle::simulated(move |_ds, model, rows| {
+        let out_row = if model == "scorer" {
+            vec![scorer_logit]
+        } else {
+            let m = names
+                .iter()
+                .position(|n| n == model)
+                .unwrap_or_else(|| panic!("unknown sim model {model}"));
+            let mut logits = vec![0.0f32; K];
+            logits[m] = 1.0;
+            logits
+        };
+        Ok(rows.iter().map(|_| out_row.clone()).collect())
+    })
+}
+
+fn sim_service(initial: CascadePlan, scorer_logit: f32) -> Arc<FrugalService> {
+    let costs = sim_costs();
+    let engine = sim_engine(&costs, scorer_logit);
+    let cfg = ServiceConfig {
+        // Off so every answer exercises the cascade path (cache hits
+        // would short-circuit the per-stage consistency assertions).
+        cache_enabled: false,
+        window_capacity: 256,
+        ..Default::default()
+    };
+    Arc::new(FrugalService::new(initial, engine, costs, sim_meta(), cfg).unwrap())
+}
+
+/// Acceptance: concurrent `answer()` calls during a stream of plan swaps
+/// stay internally consistent — stage index, accepted model, answer, and
+/// metered cost all come from ONE plan snapshot, never a mix of two.
+#[test]
+fn hot_swap_is_race_free_and_internally_consistent() {
+    // Version v is published by the v-th swap (single publisher), so the
+    // full version → plan map is known up front.
+    let plans: Vec<CascadePlan> = vec![
+        CascadePlan::single(0), // version 0 (initial)
+        CascadePlan::single(1),
+        CascadePlan::single(2),
+        // τ=2.0 can never be cleared → always escalates to stage 1.
+        CascadePlan::new(vec![
+            Stage { model: 0, threshold: 2.0 },
+            Stage { model: 2, threshold: 0.0 },
+        ]),
+        // τ=-1.0 is always cleared → always accepted at stage 0.
+        CascadePlan::new(vec![
+            Stage { model: 1, threshold: -1.0 },
+            Stage { model: 0, threshold: 0.0 },
+        ]),
+        CascadePlan::single(0),
+    ];
+    // scorer logit 5.0 → score ≈ 0.993: above -1.0, below 2.0.
+    let svc = sim_service(plans[0].clone(), 5.0);
+    let costs = sim_costs();
+    let row = query_row();
+    let input_tokens = 6u32; // non-PAD tokens of query_row()
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for _ in 0..4 {
+        let svc = svc.clone();
+        let plans = plans.clone();
+        let costs = costs.clone();
+        let row = row.clone();
+        let stop = stop.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut served = 0u64;
+            let mut last_version = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) || served < 50 {
+                let ans = svc.answer(&row).expect("answer");
+                let v = ans.plan_version as usize;
+                assert!(v < plans.len(), "unknown plan version {v}");
+                let plan = &plans[v];
+                // stage index / model / answer / cost must all agree with
+                // THIS version's plan:
+                assert!(ans.stopped_at < plan.stages.len());
+                assert_eq!(ans.model, plan.stages[ans.stopped_at].model);
+                assert_eq!(ans.answer, ans.model as u32, "answer encodes the model");
+                let expect_cost: f64 = plan.stages[..=ans.stopped_at]
+                    .iter()
+                    .map(|s| costs.call_cost(s.model, input_tokens, s.model as u32))
+                    .sum();
+                assert!(
+                    (ans.cost_usd - expect_cost).abs() < 1e-12,
+                    "v{v}: cost {} != expected {expect_cost} (stopped_at {})",
+                    ans.cost_usd,
+                    ans.stopped_at
+                );
+                // two-stage plans stop exactly where their τ dictates
+                if plan.stages.len() == 2 {
+                    let expect_stop = if plan.stages[0].threshold > 1.0 { 1 } else { 0 };
+                    assert_eq!(ans.stopped_at, expect_stop);
+                }
+                assert!(
+                    ans.plan_version >= last_version,
+                    "served plan version went backwards"
+                );
+                last_version = ans.plan_version;
+                served += 1;
+            }
+            served
+        }));
+    }
+
+    // Publish the swap stream while clients hammer answer().
+    for (i, plan) in plans.iter().enumerate().skip(1) {
+        let v = svc.swap_plan(plan.clone(), "test swap").expect("swap");
+        assert_eq!(v as usize, i, "single publisher → sequential versions");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let total: u64 = clients.into_iter().map(|c| c.join().expect("client")).sum();
+    assert!(total >= 200);
+
+    let history = svc.swap_history();
+    assert_eq!(history.len(), plans.len() - 1);
+    for (i, ev) in history.iter().enumerate() {
+        assert_eq!(ev.version as usize, i + 1);
+        assert_eq!(ev.plan, plans[i + 1]);
+        assert_eq!(ev.reason, "test swap");
+    }
+    assert_eq!(svc.plan_version() as usize, plans.len() - 1);
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.plan_swaps as usize, plans.len() - 1);
+    assert_eq!(snap.queries, total);
+}
+
+/// Feed `n` labelled full-row observations where `correct_model` answers
+/// correctly (high score) and every other model is wrong (low score).
+fn feed_window(svc: &FrugalService, correct_model: usize, n: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        let label = rng.below(4) as u32;
+        let mut preds = vec![0u32; K];
+        let mut scores = vec![0.0f32; K];
+        let mut correct = vec![false; K];
+        for m in 0..K {
+            if m == correct_model {
+                preds[m] = label;
+                scores[m] = 0.85 + 0.1 * rng.f64() as f32;
+                correct[m] = true;
+            } else {
+                preds[m] = (label + 1) % 4;
+                scores[m] = 0.1 + 0.2 * rng.f64() as f32;
+            }
+        }
+        svc.observe(Observation { label, input_tokens: 6, preds, scores, correct })
+            .unwrap();
+    }
+}
+
+/// Acceptance: re-optimization demonstrably changes the served plan when
+/// the observation window's accuracy/cost mix shifts — and hysteresis
+/// keeps an unshifted window from thrashing it.
+#[test]
+fn reoptimizer_follows_window_shift_with_hysteresis() {
+    let svc = sim_service(CascadePlan::single(0), 5.0);
+    let reopt = Reoptimizer::new(
+        svc.clone(),
+        ReoptimizerConfig {
+            min_window: 128,
+            hysteresis: 0.01,
+            optimizer: OptimizerOptions { grid: 8, threads: Some(1), ..Default::default() },
+            ..Default::default()
+        },
+    );
+
+    // Empty window → too small, nothing swaps.
+    match reopt.step().unwrap() {
+        ReoptOutcome::WindowTooSmall { have: 0, need: 128 } => {}
+        other => panic!("expected WindowTooSmall, got {other:?}"),
+    }
+
+    // Phase 1: traffic where the served cheap model 0 is always right.
+    feed_window(&svc, 0, 256, 1);
+    match reopt.step().unwrap() {
+        ReoptOutcome::Kept { .. } => {}
+        other => panic!("optimal plan must be kept, got {other:?}"),
+    }
+    assert_eq!(svc.plan_version(), 0, "no swap while the plan is optimal");
+
+    // Phase 2: drift — model 0 goes bad, expensive model 2 is now the
+    // only correct one. The window (cap 256) fully turns over.
+    feed_window(&svc, 2, 256, 2);
+    let outcome = reopt.step().unwrap();
+    match outcome {
+        ReoptOutcome::Swapped { version, window_accuracy, .. } => {
+            assert_eq!(version, 1);
+            assert!(window_accuracy > 0.95, "new plan near-perfect on window");
+        }
+        other => panic!("drifted window must swap the plan, got {other:?}"),
+    }
+    let plan = svc.plan();
+    assert_eq!(
+        plan.stages.last().unwrap().model,
+        2,
+        "served plan now ends at the newly-correct model: {plan:?}"
+    );
+    // served traffic actually uses the new plan
+    let ans = svc.answer(&query_row()).unwrap();
+    assert_eq!(ans.plan_version, 1);
+    assert_eq!(ans.model, plan.stages[ans.stopped_at].model);
+
+    // Phase 3: same distribution again → re-learn is identical or within
+    // hysteresis; the plan must NOT thrash.
+    match reopt.step().unwrap() {
+        ReoptOutcome::Kept { .. } => {}
+        other => panic!("stable window must not thrash, got {other:?}"),
+    }
+    assert_eq!(svc.plan_version(), 1);
+    assert_eq!(reopt.steps(), 4);
+    assert_eq!(reopt.swaps(), 1);
+
+    let history = svc.swap_history();
+    assert_eq!(history.len(), 1);
+    assert!(history[0].window_accuracy.unwrap() > 0.95);
+    assert!(history[0].reason.contains("window"));
+}
+
+/// A plan swap flushes the completion cache: post-swap traffic is
+/// re-answered by the new plan instead of replaying completions the
+/// superseded plan produced.
+#[test]
+fn plan_swap_flushes_stale_cached_answers() {
+    let costs = sim_costs();
+    let engine = sim_engine(&costs, 5.0);
+    let cfg = ServiceConfig { window_capacity: 64, ..Default::default() };
+    assert!(cfg.cache_enabled, "default config caches");
+    let svc =
+        FrugalService::new(CascadePlan::single(0), engine, costs, sim_meta(), cfg).unwrap();
+    let row = query_row();
+    let a1 = svc.answer(&row).unwrap();
+    assert!(!a1.from_cache);
+    assert_eq!(a1.answer, 0);
+    let a2 = svc.answer(&row).unwrap();
+    assert!(a2.from_cache, "repeat query is served from cache");
+    assert_eq!(a2.answer, 0);
+
+    svc.swap_plan(CascadePlan::single(2), "drift").unwrap();
+    let a3 = svc.answer(&row).unwrap();
+    assert!(!a3.from_cache, "swap must flush completions of the old plan");
+    assert_eq!(a3.answer, 2, "post-swap traffic is answered by the new plan");
+    assert_eq!(a3.plan_version, 1);
+}
+
+/// The background thread drives the same step loop: a drifted window gets
+/// picked up and swapped without any synchronous step() calls.
+#[test]
+fn background_reoptimizer_swaps_on_its_own() {
+    let svc = sim_service(CascadePlan::single(0), 5.0);
+    feed_window(&svc, 2, 256, 3);
+    let handle = Reoptimizer::new(
+        svc.clone(),
+        ReoptimizerConfig {
+            min_window: 128,
+            interval: std::time::Duration::from_millis(10),
+            optimizer: OptimizerOptions { grid: 8, threads: Some(1), ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .spawn();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while svc.plan_version() == 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    handle.stop();
+    assert!(svc.plan_version() > 0, "background loop never swapped");
+    assert_eq!(svc.plan().stages.last().unwrap().model, 2);
+}

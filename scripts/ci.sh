@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI entry point: the tier-1 gate (release build + tests + clippy -D
+# warnings when available) followed by a bench smoke on a tiny grid, so
+# no PR can ship rust that does not compile, pass tests, or run the
+# optimizer sweep end-to-end (PR 1 shipped uncompiled — never again).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+scripts/tier1.sh
+
+# Bench smoke: exercises the full frontier sweep + the JSON suite writer
+# on a small synthetic table. Writes to a scratch path — the committed
+# BENCH_optimizer.json trajectory is only ever refreshed by a deliberate
+# `make bench-optimizer` on a benchmarking host.
+SMOKE_JSON="$(mktemp -t bench_smoke_XXXXXX.json)"
+trap 'rm -f "$SMOKE_JSON"' EXIT
+cargo bench --bench optimizer -- --smoke --json "$SMOKE_JSON"
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$SMOKE_JSON" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["suite"] == "optimizer" and doc["results"], "smoke bench wrote no results"
+print(f"bench smoke OK: {len(doc['results'])} results")
+EOF
+else
+    echo "NOTE: python3 not installed; skipping smoke JSON validation" >&2
+fi
+
+echo "ci.sh: all gates passed"
