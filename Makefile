@@ -5,7 +5,10 @@
 tier1:
 	scripts/tier1.sh
 
-# What GitHub Actions runs (tier1 + optimizer bench smoke on a tiny grid).
+# What GitHub Actions runs on every push/PR (optimizer-parity harness +
+# tier1 + bench smoke on a tiny grid). The nightly `bench` workflow
+# additionally runs the full `make bench-optimizer` and commits the
+# refreshed BENCH_optimizer.json.
 ci:
 	scripts/ci.sh
 
@@ -21,9 +24,13 @@ bench:
 	cargo bench --bench cascade_e2e
 
 # Regenerate the committed optimizer perf trajectory (machine-readable).
+# Absolute path: cargo runs bench binaries with cwd = the package root
+# (rust/), so a relative path would silently write rust/BENCH_optimizer.json
+# and orphan the committed file (and its history) at the repo root.
 bench-optimizer:
-	cargo bench --bench optimizer -- --json BENCH_optimizer.json
+	cargo bench --bench optimizer -- --json $(CURDIR)/BENCH_optimizer.json
 
 # Algorithm-equivalence + speedup harness (pure python; no toolchain).
+# CI runs it with --quick (all correctness gates, no wall-clock timing).
 port-check:
 	python3 scripts/check_optimizer_port.py

@@ -133,6 +133,27 @@ fn swaps_report(args: &Args) -> Result<()> {
         .map(SwapEvent::from_value)
         .collect::<Result<_>>()?;
     println!("== plan-swap history: {dataset} ({} swaps) ==", swaps.len());
+    // Shadow accounting (present when the run sampled live traffic with
+    // `serve --shadow-rate`): how the window rows were paid for.
+    let shadow = v.get("shadow");
+    if shadow.as_obj().is_some() {
+        let g = |k: &str| shadow.get(k).as_f64().unwrap_or(0.0);
+        println!(
+            "shadow-scored traffic: sampled={} completed={} dropped={} \
+             skipped_budget={} errors={} spend=${:.6}{}",
+            g("sampled"),
+            g("completed"),
+            g("dropped_queue_full"),
+            g("skipped_budget"),
+            g("errors"),
+            g("spend_usd"),
+            if shadow.get("budget_exhausted").as_bool().unwrap_or(false) {
+                " (budget exhausted)"
+            } else {
+                ""
+            }
+        );
+    }
     if swaps.is_empty() {
         println!("(the served plan was never displaced — no drift, or all \
                   re-learns stayed within hysteresis)");

@@ -126,7 +126,11 @@ pub mod replay {
         pub cost: f64,
     }
 
-    /// Aggregate result of a replay.
+    /// Aggregate result of a replay. For a weighted table (decay windows,
+    /// `responses.rs` §Weights) `accuracy` and `avg_cost` are the weighted
+    /// means `Σ wᵢ·xᵢ / Σ wᵢ` — the same aggregates the optimizer's sweeps
+    /// report — while `stop_frac`/`invoke_frac` stay raw query fractions
+    /// (they describe traffic routing, not the learning objective).
     #[derive(Debug, Clone)]
     pub struct ReplaySummary {
         pub accuracy: f64,
@@ -174,13 +178,16 @@ pub mod replay {
         assert!(!plan.is_empty(), "empty cascade plan");
         assert_eq!(input_tokens.len(), table.len());
         let n = table.len();
-        let mut n_correct = 0usize;
-        let mut total_cost = 0.0;
+        let mut w_correct = 0.0f64;
+        let mut total_cost = 0.0f64;
         let mut stops = vec![0usize; plan.stages.len()];
         for i in 0..n {
             let o = replay_item(plan, table, costs, input_tokens, i);
-            n_correct += o.correct as usize;
-            total_cost += o.cost;
+            let w = table.weight(i);
+            if o.correct {
+                w_correct += w;
+            }
+            total_cost += w * o.cost;
             stops[o.stopped_at] += 1;
         }
         let mut invoked = vec![0usize; plan.stages.len()];
@@ -189,9 +196,12 @@ pub mod replay {
             invoked[s] = carried;
             carried -= st;
         }
+        // total_weight() is n for unweighted tables and > 0 whenever the
+        // table is non-empty (weights are validated strictly positive).
+        let denom = if n == 0 { 1.0 } else { table.total_weight() };
         ReplaySummary {
-            accuracy: n_correct as f64 / n.max(1) as f64,
-            avg_cost: total_cost / n.max(1) as f64,
+            accuracy: w_correct / denom,
+            avg_cost: total_cost / denom,
             stop_frac: stops.iter().map(|&s| s as f64 / n.max(1) as f64).collect(),
             invoke_frac: invoked.iter().map(|&s| s as f64 / n.max(1) as f64).collect(),
         }

@@ -48,6 +48,20 @@
 //! equivalence to 1e-12 against a brute-force reference via
 //! `replay::replay`. The parallel and sequential sweep paths of *this*
 //! implementation are bit-identical to each other (unit-tested).
+//!
+//! §Weights — when the training table carries per-item observation
+//! weights (decay-weighted serving windows, see `responses.rs` §Weights),
+//! every aggregate becomes weighted: the workspace stores *weight-scaled*
+//! per-item costs (`wᵢ·cᵢ`) and a weighted-correctness arena (`wᵢ` where
+//! correct, else 0), disagreement fractions and accuracies divide by
+//! `Σ wᵢ`, and the incremental sweeps add/subtract the scaled entries with
+//! the exact same update structure as the unweighted search. For an
+//! unweighted table the arithmetic degenerates to multiplications by 1.0
+//! and sums of exact small integers, so the frontier is bit-identical to
+//! the pre-weights implementation — and uniform power-of-two weights
+//! reproduce it bit-for-bit too (property-tested; scaling every term and
+//! the denominator by the same power of two commutes with every f64
+//! rounding step).
 
 use anyhow::{bail, Context, Result};
 
@@ -168,10 +182,12 @@ impl OptimizedPlan {
 
 /// Precomputed, read-only search state shared by every sweep worker. All
 /// per-(model, item) arrays are flat model-major arenas with stride `n`.
+/// Per-item entries are *weight-scaled* (§Weights): for an unweighted
+/// table every weight is 1.0 and the arenas hold the plain values.
 struct Workspace {
     n: usize,
     k: usize,
-    /// `cost[m * n + i]` — USD of calling model m on item i.
+    /// `cost[m * n + i]` — `wᵢ ·` USD of calling model m on item i.
     cost: Vec<f64>,
     /// `Σ_i cost[m][i]` (index order, so it matches a fresh rescan).
     total_cost: Vec<f64>,
@@ -180,31 +196,47 @@ struct Workspace {
     /// `quantiles[m]` — score thresholds at the option grid (deduped, so
     /// ragged; kept per-model).
     quantiles: Vec<Vec<f32>>,
-    /// `disagree[a * k + b]` — P[pred_a != pred_b], symmetric, 0 diagonal.
+    /// `disagree[a * k + b]` — weighted P[pred_a != pred_b], symmetric,
+    /// 0 diagonal.
     disagree: Vec<f64>,
-    /// `n_correct[m]` — number of items model m answers correctly.
-    n_correct: Vec<usize>,
+    /// `wcorr[m * n + i]` — `wᵢ` if model m answers item i correctly,
+    /// else 0.0 (the sweeps' incremental accuracy deltas).
+    wcorr: Vec<f64>,
+    /// `Σ_i wcorr[m][i]` (index order).
+    total_corr: Vec<f64>,
+    /// `Σ_i wᵢ` (`n` as f64 for unweighted tables).
+    total_weight: f64,
 }
 
 impl Workspace {
     fn build(table: &SplitTable, costs: &CostModel, input_tokens: &[u32], grid: usize) -> Self {
         let n = table.len();
         let k = table.n_models();
+        let weights = table.weights();
+        let total_weight = table.total_weight();
         let mut cost = Vec::with_capacity(k * n);
         let mut total_cost = Vec::with_capacity(k);
         let mut order = Vec::with_capacity(k * n);
         let mut quantiles = Vec::with_capacity(k);
-        let mut n_correct = Vec::with_capacity(k);
+        let mut wcorr = Vec::with_capacity(k * n);
+        let mut total_corr = Vec::with_capacity(k);
         for m in 0..k {
             let preds = table.preds_row(m);
             let scores = table.scores_row(m);
+            let corr = table.correct_row(m);
             let mut total = 0.0;
+            let mut tcorr = 0.0;
             for i in 0..n {
-                let c = costs.call_cost(m, input_tokens[i], preds[i]);
+                let w = weights.map_or(1.0, |w| w[i]);
+                let c = costs.call_cost(m, input_tokens[i], preds[i]) * w;
                 cost.push(c);
                 total += c;
+                let wc = if corr[i] { w } else { 0.0 };
+                wcorr.push(wc);
+                tcorr += wc;
             }
             total_cost.push(total);
+            total_corr.push(tcorr);
             let mut idx: Vec<u32> = (0..n as u32).collect();
             idx.sort_by(|&a, &b| {
                 scores[b as usize]
@@ -220,7 +252,6 @@ impl Workspace {
             qs.dedup();
             order.extend_from_slice(&idx);
             quantiles.push(qs);
-            n_correct.push(table.correct_row(m).iter().filter(|&&c| c).count());
         }
         // K×K disagreement, O(K²N/2) once — the candidate enumeration used
         // to recompute these inside its nested loops.
@@ -229,18 +260,50 @@ impl Workspace {
             let pa = table.preds_row(a);
             for b in (a + 1)..k {
                 let pb = table.preds_row(b);
-                let d = pa.iter().zip(pb).filter(|&(x, y)| x != y).count();
-                let frac = d as f64 / n.max(1) as f64;
+                let d = match weights {
+                    None => {
+                        pa.iter().zip(pb).filter(|&(x, y)| x != y).count() as f64
+                    }
+                    Some(w) => {
+                        let mut s = 0.0;
+                        for i in 0..n {
+                            if pa[i] != pb[i] {
+                                s += w[i];
+                            }
+                        }
+                        s
+                    }
+                };
+                // `total_weight` > 0: the optimizer rejects empty tables
+                // before building a workspace, and weights are validated
+                // strictly positive.
+                let frac = d / total_weight;
                 disagree[a * k + b] = frac;
                 disagree[b * k + a] = frac;
             }
         }
-        Workspace { n, k, cost, total_cost, order, quantiles, disagree, n_correct }
+        Workspace {
+            n,
+            k,
+            cost,
+            total_cost,
+            order,
+            quantiles,
+            disagree,
+            wcorr,
+            total_corr,
+            total_weight,
+        }
     }
 
     #[inline]
     fn cost_row(&self, m: usize) -> &[f64] {
         &self.cost[m * self.n..(m + 1) * self.n]
+    }
+
+    #[inline]
+    fn wcorr_row(&self, m: usize) -> &[f64] {
+        &self.wcorr[m * self.n..(m + 1) * self.n]
     }
 
     #[inline]
@@ -250,12 +313,12 @@ impl Workspace {
 
     #[inline]
     fn mean_cost(&self, m: usize) -> f64 {
-        self.total_cost[m] / self.n.max(1) as f64
+        self.total_cost[m] / self.total_weight
     }
 
     #[inline]
     fn accuracy(&self, m: usize) -> f64 {
-        self.n_correct[m] as f64 / self.n.max(1) as f64
+        self.total_corr[m] / self.total_weight
     }
 }
 
@@ -418,18 +481,17 @@ impl<'a> CascadeOptimizer<'a> {
         scratch: &mut SweepScratch,
         out: &mut Vec<FrontierPoint>,
     ) {
-        let n = self.ws.n;
         let order = self.ws.order_row(a);
         let scores = self.table.scores_row(a);
-        let corr_a = self.table.correct_row(a);
-        let corr_b = self.table.correct_row(b);
+        let wcorr_a = self.ws.wcorr_row(a);
+        let wcorr_b = self.ws.wcorr_row(b);
         let cost_b = self.ws.cost_row(b);
 
         let total_cost_a = self.ws.total_cost[a];
-        let mut acc_corr_a = 0usize; // correct among accepted (top-j)
-        let mut acc_corr_b = self.ws.n_correct[b];
+        let mut acc_corr_a = 0.0f64; // weighted correct among accepted (top-j)
+        let mut acc_corr_b = self.ws.total_corr[b];
         let mut esc_cost_b = self.ws.total_cost[b];
-        let inv_n = 1.0 / n as f64;
+        let inv_n = 1.0 / self.ws.total_weight;
         let raw = &mut scratch.raw;
         raw.clear();
         let mut prev_score = f32::INFINITY;
@@ -441,18 +503,18 @@ impl<'a> CascadeOptimizer<'a> {
             if s < prev_score {
                 raw.push((
                     prev_midpoint(prev_score, s),
-                    (acc_corr_a + acc_corr_b) as f64 * inv_n,
+                    (acc_corr_a + acc_corr_b) * inv_n,
                     (total_cost_a + esc_cost_b) * inv_n,
                 ));
             }
             // accept item i at stage a:
-            acc_corr_a += corr_a[i] as usize;
-            acc_corr_b -= corr_b[i] as usize;
+            acc_corr_a += wcorr_a[i];
+            acc_corr_b -= wcorr_b[i];
             esc_cost_b -= cost_b[i];
             prev_score = s;
         }
         // Cut after everything = stage a alone never escalates; τ below min.
-        raw.push((-1.0, acc_corr_a as f64 * inv_n, total_cost_a * inv_n));
+        raw.push((-1.0, acc_corr_a * inv_n, total_cost_a * inv_n));
         prune_pareto_raw(raw);
         out.extend(raw.iter().map(|&(tau, accuracy, avg_cost)| FrontierPoint {
             plan: CascadePlan::new(vec![
@@ -485,9 +547,9 @@ impl<'a> CascadeOptimizer<'a> {
         let sentinel = n;
         let scores_a = self.table.scores_row(a);
         let scores_b = self.table.scores_row(b);
-        let corr_a = self.table.correct_row(a);
-        let corr_b = self.table.correct_row(b);
-        let corr_c = self.table.correct_row(c);
+        let wcorr_a = self.ws.wcorr_row(a);
+        let wcorr_b = self.ws.wcorr_row(b);
+        let wcorr_c = self.ws.wcorr_row(c);
         let cost_b = self.ws.cost_row(b);
         let cost_c = self.ws.cost_row(c);
         let order_a = self.ws.order_row(a);
@@ -505,13 +567,13 @@ impl<'a> CascadeOptimizer<'a> {
         }
 
         let base_cost = self.ws.total_cost[a]; // everyone pays stage a
-        let mut acc_corr_a = 0usize; // correct among items accepted at a
+        let mut acc_corr_a = 0.0f64; // weighted correct among items accepted at a
         let mut n_esc = n;
         let mut esc_cost_b = self.ws.total_cost[b];
-        let mut esc_corr_c = self.ws.n_correct[c];
+        let mut esc_corr_c = self.ws.total_corr[c];
         let mut esc_cost_c = self.ws.total_cost[c];
 
-        let inv_n = 1.0 / n as f64;
+        let inv_n = 1.0 / self.ws.total_weight;
         let mut accepted = 0usize; // prefix of order_a accepted at stage a
         for &tau_a in &self.ws.quantiles[a] {
             // Delta-accept every item whose score_a clears the new τ_a.
@@ -520,9 +582,9 @@ impl<'a> CascadeOptimizer<'a> {
                 if scores_a[i] <= tau_a {
                     break;
                 }
-                acc_corr_a += corr_a[i] as usize;
+                acc_corr_a += wcorr_a[i];
                 esc_cost_b -= cost_b[i];
-                esc_corr_c -= corr_c[i] as usize;
+                esc_corr_c -= wcorr_c[i];
                 esc_cost_c -= cost_c[i];
                 let r = rank[i] as usize;
                 let (p, nx) = (prev[r] as usize, next[r] as usize);
@@ -540,7 +602,7 @@ impl<'a> CascadeOptimizer<'a> {
             // Conditional sweep of τ_b over escalated items, in score_b
             // order (the linked list), with suffix aggregates peeled off.
             raw.clear();
-            let mut corr_b_acc = 0usize;
+            let mut corr_b_acc = 0.0f64;
             let mut rem_corr_c = esc_corr_c;
             let mut rem_cost_c = esc_cost_c;
             let mut prev_score = f32::INFINITY;
@@ -551,12 +613,12 @@ impl<'a> CascadeOptimizer<'a> {
                 if s < prev_score {
                     raw.push((
                         prev_midpoint(prev_score, s),
-                        (acc_corr_a + corr_b_acc + rem_corr_c) as f64 * inv_n,
+                        (acc_corr_a + corr_b_acc + rem_corr_c) * inv_n,
                         (base_cost + esc_cost_b + rem_cost_c) * inv_n,
                     ));
                 }
-                corr_b_acc += corr_b[i] as usize;
-                rem_corr_c -= corr_c[i] as usize;
+                corr_b_acc += wcorr_b[i];
+                rem_corr_c -= wcorr_c[i];
                 rem_cost_c -= cost_c[i];
                 prev_score = s;
                 r = next[r] as usize;
@@ -564,7 +626,7 @@ impl<'a> CascadeOptimizer<'a> {
             // τ_b below min: b answers every escalated item.
             raw.push((
                 -1.0,
-                (acc_corr_a + corr_b_acc) as f64 * inv_n,
+                (acc_corr_a + corr_b_acc) * inv_n,
                 (base_cost + esc_cost_b) * inv_n,
             ));
             prune_pareto_raw(raw);
@@ -653,8 +715,15 @@ impl<'a> CascadeOptimizer<'a> {
     fn compute_frontier(&self) -> Vec<FrontierPoint> {
         match self.options.coarse_subsample {
             Some(n) if n < self.table.len() => {
-                let sub = self.table.head(n);
-                let sub_tokens = self.input_tokens[..n].to_vec();
+                // Weighted tables (decay windows) are ordered oldest →
+                // newest: coarse-sample the newest suffix, not the stale
+                // near-zero-weight head the decay exists to de-emphasize.
+                let (sub, sub_tokens) = if self.table.is_weighted() {
+                    let start = self.table.len() - n;
+                    (self.table.tail(n), self.input_tokens[start..].to_vec())
+                } else {
+                    (self.table.head(n), self.input_tokens[..n].to_vec())
+                };
                 let sub_opt = CascadeOptimizer::new(
                     &sub,
                     self.costs,

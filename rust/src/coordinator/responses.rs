@@ -17,6 +17,16 @@
 //! element, and adjacent items share cache lines. Field access goes
 //! through accessors so the layout can keep evolving (a packed correctness
 //! bitset is the planned next step — see ROADMAP.md).
+//!
+//! §Weights: a table may carry optional *per-item observation weights*
+//! ([`SplitTable::with_weights`] / [`TableBuilder::push_item_weighted`]).
+//! The serving-time observation window uses them for exponential decay
+//! (recent traffic counts more — cf. budget-constrained cascade policy
+//! learning, Zhang et al. 2024); the optimizer and `replay` then compute
+//! *weighted* accuracy `Σ wᵢ·correctᵢ / Σ wᵢ` and cost `Σ wᵢ·costᵢ / Σ wᵢ`.
+//! An unweighted table behaves exactly as weight 1.0 per item: every
+//! aggregate is accumulated so that uniform power-of-two weights reproduce
+//! the unweighted numbers **bit-for-bit** (property-tested).
 
 use std::path::Path;
 
@@ -38,6 +48,11 @@ pub struct SplitTable {
     scores: Vec<f32>,
     /// `correct[m * n + i]`.
     correct: Vec<bool>,
+    /// Optional per-item observation weights (`None` = uniform 1.0).
+    weights: Option<Vec<f64>>,
+    /// `Σᵢ weightᵢ` in index order (`n` as f64 when uniform), cached so
+    /// weighted denominators are O(1) and deterministic.
+    total_weight: f64,
 }
 
 impl SplitTable {
@@ -65,7 +80,62 @@ impl SplitTable {
             scores.extend_from_slice(&row.score);
             correct.extend_from_slice(&row.correct);
         }
-        Ok(SplitTable { dataset, model_names, labels, n, preds, scores, correct })
+        Ok(SplitTable {
+            dataset,
+            model_names,
+            labels,
+            n,
+            preds,
+            scores,
+            correct,
+            weights: None,
+            total_weight: n as f64,
+        })
+    }
+
+    /// Attach per-item observation weights (decay windows). Every weight
+    /// must be finite and strictly positive — a zero weight would make an
+    /// item invisible to the optimizer while still occupying a row, and
+    /// negative weights break the Pareto accounting outright.
+    pub fn with_weights(mut self, weights: Vec<f64>) -> Result<Self> {
+        if weights.len() != self.n {
+            bail!("{} weights for {} items", weights.len(), self.n);
+        }
+        let mut total = 0.0;
+        for (i, &w) in weights.iter().enumerate() {
+            if !w.is_finite() || w <= 0.0 {
+                bail!("item {i}: weight {w} is not finite and positive");
+            }
+            total += w;
+        }
+        self.total_weight = total;
+        self.weights = Some(weights);
+        Ok(self)
+    }
+
+    /// Observation weight of item i (1.0 when the table is unweighted).
+    #[inline(always)]
+    pub fn weight(&self, i: usize) -> f64 {
+        match &self.weights {
+            Some(w) => w[i],
+            None => 1.0,
+        }
+    }
+
+    /// The weight row, if this table is weighted.
+    #[inline]
+    pub fn weights(&self) -> Option<&[f64]> {
+        self.weights.as_deref()
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        self.weights.is_some()
+    }
+
+    /// `Σᵢ weightᵢ` (= `len()` for unweighted tables).
+    #[inline]
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
     }
 
     pub fn len(&self) -> usize {
@@ -120,32 +190,70 @@ impl SplitTable {
         &self.correct[m * self.n..(m + 1) * self.n]
     }
 
-    /// Accuracy of a single model.
+    /// (Weighted) accuracy of a single model: `Σᵢ wᵢ·correctᵢ / Σᵢ wᵢ`.
     pub fn accuracy(&self, m: usize) -> f64 {
-        let n = self.n.max(1);
-        self.correct_row(m).iter().filter(|&&c| c).count() as f64 / n as f64
+        match &self.weights {
+            None => {
+                let n = self.n.max(1);
+                self.correct_row(m).iter().filter(|&&c| c).count() as f64 / n as f64
+            }
+            Some(w) => {
+                let mut s = 0.0;
+                for (i, &c) in self.correct_row(m).iter().enumerate() {
+                    if c {
+                        s += w[i];
+                    }
+                }
+                s / self.total_weight
+            }
+        }
     }
 
     /// Restrict the table to the first `n` items (coarse optimizer pass).
     pub fn head(&self, n: usize) -> SplitTable {
         let n = n.min(self.n);
+        self.slice(0, n)
+    }
+
+    /// Restrict the table to the *last* `n` items. Decay-weighted window
+    /// snapshots are ordered oldest → newest, so the suffix is the
+    /// highest-weight (most recent) slice — the right subsample for a
+    /// coarse pass over such a table, where `head` would pick exactly the
+    /// stale rows the decay de-emphasizes.
+    pub fn tail(&self, n: usize) -> SplitTable {
+        let n = n.min(self.n);
+        self.slice(self.n - n, n)
+    }
+
+    /// Rebuild a table from the item range `start..start + n` of every
+    /// arena (the one place the per-field layout is copied — keep any
+    /// future layout change here).
+    fn slice(&self, start: usize, n: usize) -> SplitTable {
+        let end = start + n;
         let k = self.n_models();
         let mut preds = Vec::with_capacity(k * n);
         let mut scores = Vec::with_capacity(k * n);
         let mut correct = Vec::with_capacity(k * n);
         for m in 0..k {
-            preds.extend_from_slice(&self.preds_row(m)[..n]);
-            scores.extend_from_slice(&self.scores_row(m)[..n]);
-            correct.extend_from_slice(&self.correct_row(m)[..n]);
+            preds.extend_from_slice(&self.preds_row(m)[start..end]);
+            scores.extend_from_slice(&self.scores_row(m)[start..end]);
+            correct.extend_from_slice(&self.correct_row(m)[start..end]);
         }
+        let weights = self.weights.as_ref().map(|w| w[start..end].to_vec());
+        let total_weight = match &weights {
+            Some(w) => w.iter().sum(),
+            None => n as f64,
+        };
         SplitTable {
             dataset: self.dataset.clone(),
             model_names: self.model_names.clone(),
-            labels: self.labels[..n].to_vec(),
+            labels: self.labels[start..end].to_vec(),
             n,
             preds,
             scores,
             correct,
+            weights,
+            total_weight,
         }
     }
 
@@ -213,6 +321,13 @@ pub struct TableBuilder {
     model_names: Vec<String>,
     labels: Vec<u32>,
     rows: Vec<ModelRow>,
+    weights: Vec<f64>,
+    /// Whether any push supplied an explicit weight; a builder fed only
+    /// through [`TableBuilder::push_item`] finishes into an unweighted
+    /// table (uniform explicit weights would behave identically anyway —
+    /// that equivalence is property-tested — but `None` keeps the common
+    /// path allocation-free).
+    weighted: bool,
 }
 
 impl TableBuilder {
@@ -223,6 +338,8 @@ impl TableBuilder {
             model_names,
             labels: Vec::new(),
             rows: vec![ModelRow::default(); k],
+            weights: Vec::new(),
+            weighted: false,
         }
     }
 
@@ -235,6 +352,36 @@ impl TableBuilder {
         scores: &[f32],
         correct: &[bool],
     ) -> Result<()> {
+        self.push_row(label, preds, scores, correct, 1.0)
+    }
+
+    /// [`TableBuilder::push_item`] with an explicit observation weight
+    /// (finite, > 0). The finished table carries the weights and the
+    /// optimizer computes weighted accuracy/cost aggregates from them.
+    pub fn push_item_weighted(
+        &mut self,
+        label: u32,
+        preds: &[u32],
+        scores: &[f32],
+        correct: &[bool],
+        weight: f64,
+    ) -> Result<()> {
+        if !weight.is_finite() || weight <= 0.0 {
+            bail!("observation weight {weight} is not finite and positive");
+        }
+        self.push_row(label, preds, scores, correct, weight)?;
+        self.weighted = true;
+        Ok(())
+    }
+
+    fn push_row(
+        &mut self,
+        label: u32,
+        preds: &[u32],
+        scores: &[f32],
+        correct: &[bool],
+        weight: f64,
+    ) -> Result<()> {
         let k = self.rows.len();
         if preds.len() != k || scores.len() != k || correct.len() != k {
             bail!(
@@ -245,6 +392,7 @@ impl TableBuilder {
             );
         }
         self.labels.push(label);
+        self.weights.push(weight);
         for (m, row) in self.rows.iter_mut().enumerate() {
             row.pred.push(preds[m]);
             row.score.push(scores[m]);
@@ -263,7 +411,13 @@ impl TableBuilder {
     }
 
     pub fn finish(self) -> Result<SplitTable> {
-        SplitTable::from_rows(self.dataset, self.model_names, self.labels, self.rows)
+        let table =
+            SplitTable::from_rows(self.dataset, self.model_names, self.labels, self.rows)?;
+        if self.weighted {
+            table.with_weights(self.weights)
+        } else {
+            Ok(table)
+        }
     }
 }
 
@@ -466,6 +620,58 @@ mod tests {
     }
 
     #[test]
+    fn weighted_accuracy_and_totals() {
+        let t = synthetic_table(2, 4, 2, 0.9, 1);
+        // Make model 0 correct on exactly items 0 and 2.
+        let mut b = TableBuilder::new("w", t.model_names.clone());
+        for i in 0..4 {
+            let correct = [i % 2 == 0, true];
+            b.push_item_weighted(
+                0,
+                &[0, 0],
+                &[0.5, 0.5],
+                &correct,
+                [4.0, 1.0, 2.0, 1.0][i],
+            )
+            .unwrap();
+        }
+        let w = b.finish().unwrap();
+        assert!(w.is_weighted());
+        assert_eq!(w.total_weight(), 8.0);
+        assert_eq!(w.weight(0), 4.0);
+        // model 0: weights of correct items = 4 + 2 = 6, of 8 total.
+        assert!((w.accuracy(0) - 6.0 / 8.0).abs() < 1e-15);
+        assert_eq!(w.accuracy(1), 1.0);
+        // head keeps the weight prefix and recomputes the total
+        let h = w.head(2);
+        assert_eq!(h.total_weight(), 5.0);
+        assert_eq!(h.weights().unwrap(), &[4.0, 1.0]);
+    }
+
+    #[test]
+    fn unweighted_builder_stays_unweighted() {
+        let mut b = TableBuilder::new("x", vec!["a".into()]);
+        b.push_item(0, &[0], &[0.5], &[true]).unwrap();
+        let t = b.finish().unwrap();
+        assert!(!t.is_weighted());
+        assert_eq!(t.weight(0), 1.0);
+        assert_eq!(t.total_weight(), 1.0);
+        assert!(t.weights().is_none());
+    }
+
+    #[test]
+    fn bad_weights_rejected() {
+        let t = synthetic_table(2, 3, 2, 0.9, 1);
+        assert!(t.clone().with_weights(vec![1.0, 2.0]).is_err(), "length mismatch");
+        assert!(t.clone().with_weights(vec![1.0, 0.0, 1.0]).is_err(), "zero weight");
+        assert!(t.clone().with_weights(vec![1.0, -1.0, 1.0]).is_err(), "negative");
+        assert!(t.clone().with_weights(vec![1.0, f64::NAN, 1.0]).is_err(), "nan");
+        let mut b = TableBuilder::new("x", vec!["a".into()]);
+        assert!(b.push_item_weighted(0, &[0], &[0.5], &[true], 0.0).is_err());
+        assert!(b.is_empty(), "rejected weight must not partially push");
+    }
+
+    #[test]
     fn head_truncates_consistently() {
         let t = synthetic_table(3, 100, 4, 0.9, 3);
         let h = t.head(10);
@@ -473,5 +679,24 @@ mod tests {
         assert_eq!(h.pred(2, 9), t.pred(2, 9));
         assert_eq!(h.scores_row(1), &t.scores_row(1)[..10]);
         assert_eq!(h.n_models(), 3);
+    }
+
+    #[test]
+    fn tail_keeps_newest_suffix_and_weights() {
+        let t = synthetic_table(3, 100, 4, 0.9, 3);
+        let weights: Vec<f64> = (0..100).map(|i| 1.0 + i as f64).collect();
+        let w = t.clone().with_weights(weights.clone()).unwrap();
+        let s = w.tail(10);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.pred(2, 0), t.pred(2, 90));
+        assert_eq!(s.scores_row(1), &t.scores_row(1)[90..]);
+        assert_eq!(s.labels, &t.labels[90..]);
+        assert_eq!(s.weights().unwrap(), &weights[90..]);
+        assert_eq!(s.total_weight(), weights[90..].iter().sum::<f64>());
+        // unweighted tail stays unweighted
+        let u = t.tail(10);
+        assert!(!u.is_weighted());
+        assert_eq!(u.total_weight(), 10.0);
+        assert_eq!(u.correct_row(0), &t.correct_row(0)[90..]);
     }
 }

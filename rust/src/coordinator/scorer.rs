@@ -30,9 +30,19 @@ impl Scorer {
     /// Score one (query, answer) pair. `tokens` is the full item row; the
     /// scorer sees only the query segment plus the answer token.
     pub fn score(&self, tokens: &[i32], answer: u32) -> Result<f32> {
-        let input = prompt::scorer_input(tokens, &self.meta, answer);
-        let logits = self.engine.execute(&self.meta.name, "scorer", input)?;
+        let logits =
+            self.engine
+                .execute(&self.meta.name, "scorer", self.input(tokens, answer))?;
         Ok(sigmoid(logits[0]))
+    }
+
+    /// The scorer-artifact input row for one (query, answer) pair —
+    /// exposed so callers that route scorer executions through their own
+    /// channel (e.g. `server::shadow`'s batched fan-out) build exactly the
+    /// row `score`/`score_batch` would; apply [`sigmoid`] to the returned
+    /// logit to recover the score.
+    pub fn input(&self, tokens: &[i32], answer: u32) -> Vec<i32> {
+        prompt::scorer_input(tokens, &self.meta, answer)
     }
 
     /// Score a batch of (query, answer) pairs in one PJRT execution.

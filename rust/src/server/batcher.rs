@@ -29,11 +29,25 @@ pub struct BatcherHandle {
 impl BatcherHandle {
     /// Submit one row; blocks until its batch has executed.
     pub fn submit(&self, row: Vec<i32>) -> Result<Vec<f32>> {
+        self.submit_async(row)?
+            .recv()
+            .map_err(|_| anyhow!("batcher dropped reply"))?
+    }
+
+    /// Submit one row without waiting: the returned receiver yields the
+    /// row's result once its batch has executed. Lets one caller fan a
+    /// set of rows out to several batchers (e.g. `server::shadow` hitting
+    /// every marketplace model) and only then collect — the submissions
+    /// coalesce into batches instead of serializing on each reply.
+    pub fn submit_async(
+        &self,
+        row: Vec<i32>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
         let (tx, rx) = mpsc::sync_channel(1);
         self.tx
             .send(Item { row, reply: tx })
             .map_err(|_| anyhow!("batcher worker is gone"))?;
-        rx.recv().map_err(|_| anyhow!("batcher dropped reply"))?
+        Ok(rx)
     }
 }
 
@@ -232,6 +246,35 @@ mod tests {
             n_calls < 16,
             "16 concurrent submissions should coalesce, saw {n_calls} engine calls"
         );
+    }
+
+    /// `submit_async` lets one thread keep many rows in flight; the
+    /// replies arrive on the right receivers and the rows coalesce into
+    /// shared engine calls.
+    #[test]
+    fn async_submissions_fan_out_and_coalesce() {
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let calls_in = calls.clone();
+        let engine = EngineHandle::simulated(move |_, _, rows| {
+            calls_in.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Ok(rows.iter().map(|r| vec![r[0] as f32]).collect())
+        });
+        let batcher = Batcher::spawn(
+            engine,
+            "toy".into(),
+            "m".into(),
+            BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(20) },
+        );
+        let h = batcher.handle();
+        let pending: Vec<_> = (0..12i32)
+            .map(|i| h.submit_async(vec![i]).expect("submit_async"))
+            .collect();
+        for (i, rx) in pending.into_iter().enumerate() {
+            let out = rx.recv().expect("reply arrives").expect("row result");
+            assert_eq!(out[0] as usize, i, "reply routed to the wrong receiver");
+        }
+        let n_calls = calls.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(n_calls < 12, "12 in-flight rows should coalesce, saw {n_calls} calls");
     }
 
     /// An engine failure fans the error out to every submitter in the

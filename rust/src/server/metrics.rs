@@ -181,20 +181,36 @@ pub struct Observation {
 /// off the back, so the window tracks the *current* query mix. Rows are
 /// `Arc`ed so a snapshot clones pointers, not data — the serving path's
 /// `push` never waits behind a deep copy of the whole window.
+///
+/// With a `half_life` the window is additionally *decay-weighted*:
+/// [`ObservationWindow::snapshot_table`] assigns row weights
+/// `2^(-age / half_life)` (age in observations, newest = 0), so the
+/// optimizer tracks fast drifts without shrinking the effective sample —
+/// old rows fade smoothly instead of being either fully counted or gone.
 #[derive(Debug)]
 pub struct ObservationWindow {
     /// Number of models every observation must cover.
     n_models: usize,
     cap: usize,
+    /// Exponential-decay half-life in observations; `None` = hard ring
+    /// (every retained row weighs 1.0).
+    half_life: Option<f64>,
     rows: Mutex<VecDeque<Arc<Observation>>>,
     total: AtomicU64,
 }
 
 impl ObservationWindow {
     pub fn new(n_models: usize, cap: usize) -> Self {
+        Self::with_half_life(n_models, cap, None)
+    }
+
+    /// A window whose snapshots decay-weight rows by age. A non-finite or
+    /// non-positive half-life means "no decay" (hard ring).
+    pub fn with_half_life(n_models: usize, cap: usize, half_life: Option<f64>) -> Self {
         ObservationWindow {
             n_models,
             cap: cap.max(1),
+            half_life: half_life.filter(|h| h.is_finite() && *h > 0.0),
             rows: Mutex::new(VecDeque::new()),
             total: AtomicU64::new(0),
         }
@@ -202,6 +218,10 @@ impl ObservationWindow {
 
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+
+    pub fn half_life(&self) -> Option<f64> {
+        self.half_life
     }
 
     pub fn len(&self) -> usize {
@@ -240,7 +260,9 @@ impl ObservationWindow {
 
     /// Materialize the current window as a fresh training slice for
     /// `CascadeOptimizer::new`: a model-major [`SplitTable`] plus the
-    /// per-item billable token counts. `None` while the window is empty.
+    /// per-item billable token counts. With a half-life configured the
+    /// table is decay-weighted (`2^(-age / half_life)`, newest row age 0).
+    /// `None` while the window is empty.
     pub fn snapshot_table(
         &self,
         dataset: &str,
@@ -258,9 +280,22 @@ impl ObservationWindow {
         }
         let mut b = TableBuilder::new(dataset, model_names.to_vec());
         let mut tokens = Vec::with_capacity(rows.len());
-        for o in &rows {
-            b.push_item(o.label, &o.preds, &o.scores, &o.correct)
-                .expect("window rows validated at push");
+        let newest = rows.len() - 1;
+        for (idx, o) in rows.iter().enumerate() {
+            match self.half_life {
+                None => b
+                    .push_item(o.label, &o.preds, &o.scores, &o.correct)
+                    .expect("window rows validated at push"),
+                Some(hl) => {
+                    let age = (newest - idx) as f64;
+                    // Clamp away the f64 underflow floor: 2^(-age/hl)
+                    // rounds to 0.0 past age ≈ 1074·hl, and the table
+                    // rejects non-positive weights.
+                    let w = (-age / hl).exp2().max(1e-300);
+                    b.push_item_weighted(o.label, &o.preds, &o.scores, &o.correct, w)
+                        .expect("window rows validated at push")
+                }
+            }
             tokens.push(o.input_tokens);
         }
         let table = b.finish().expect("window rows are rectangular");
@@ -299,6 +334,16 @@ impl ServiceMetrics {
     /// Metrics for a marketplace of `n_models` APIs with an observation
     /// ring of `window_cap` rows.
     pub fn with_models(n_models: usize, window_cap: usize) -> Self {
+        Self::with_window(n_models, window_cap, None)
+    }
+
+    /// [`ServiceMetrics::with_models`] with a decay half-life on the
+    /// observation window (see [`ObservationWindow::with_half_life`]).
+    pub fn with_window(
+        n_models: usize,
+        window_cap: usize,
+        half_life: Option<f64>,
+    ) -> Self {
         ServiceMetrics {
             queries: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
@@ -309,7 +354,7 @@ impl ServiceMetrics {
             latency: Histogram::default(),
             plan_swaps: AtomicU64::new(0),
             per_model: (0..n_models).map(|_| ModelWindow::default()).collect(),
-            window: ObservationWindow::new(n_models, window_cap),
+            window: ObservationWindow::with_half_life(n_models, window_cap, half_life),
         }
     }
 
@@ -475,6 +520,41 @@ mod tests {
                 correct: vec![true],
             })
             .is_err());
+    }
+
+    #[test]
+    fn half_life_window_emits_decayed_weights() {
+        let w = ObservationWindow::with_half_life(1, 8, Some(2.0));
+        assert_eq!(w.half_life(), Some(2.0));
+        for i in 0..5u32 {
+            w.push(Observation {
+                label: 0,
+                input_tokens: i,
+                preds: vec![0],
+                scores: vec![0.5],
+                correct: vec![true],
+            })
+            .unwrap();
+        }
+        let (table, tokens) = w.snapshot_table("toy", &["a".to_string()]).unwrap();
+        assert_eq!(tokens, vec![0, 1, 2, 3, 4]);
+        assert!(table.is_weighted());
+        let ws = table.weights().unwrap();
+        // ages 4..0 at half-life 2 → 2^-2, 2^-1.5, 2^-1, 2^-0.5, 2^0
+        assert_eq!(ws.len(), 5);
+        assert!((ws[4] - 1.0).abs() < 1e-15, "newest row weighs 1.0");
+        assert!((ws[0] - 0.25).abs() < 1e-15, "age 4 at half-life 2 → 1/4");
+        for pair in ws.windows(2) {
+            assert!(pair[0] < pair[1], "weights increase toward the newest row");
+        }
+        assert!(table.total_weight() < 5.0);
+
+        // degenerate half-lives fall back to the hard ring
+        assert_eq!(ObservationWindow::with_half_life(1, 8, Some(0.0)).half_life(), None);
+        assert_eq!(
+            ObservationWindow::with_half_life(1, 8, Some(f64::NAN)).half_life(),
+            None
+        );
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! The serving front end: request intake, dynamic batching, metrics, the
 //! composed FrugalGPT service (cache → prompt adaptation → cascade →
-//! budget metering), and the online re-optimization loop that re-learns
-//! and hot-swaps the served cascade as traffic drifts.
+//! budget metering), shadow scoring of sampled live traffic, and the
+//! online re-optimization loop that re-learns and hot-swaps the served
+//! cascade as traffic drifts — with shadow + decay windows the loop is
+//! self-contained: no offline labels enter it.
 
 pub mod batcher;
 pub mod metrics;
 pub mod reoptimizer;
 pub mod service;
+pub mod shadow;

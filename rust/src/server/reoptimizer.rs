@@ -7,11 +7,18 @@
 //!
 //! 1. the service accumulates a sliding [`ObservationWindow`] of
 //!    fully-labelled rows — every marketplace model's (pred, score,
-//!    correct) on recently served items (`server::metrics`);
+//!    correct) on recently served items. The rows come either from an
+//!    external labelled feedback stream or, with `server::shadow`
+//!    enabled, from the service's *own* sampled traffic (pseudo-labelled
+//!    against a reference model) — in which case the loop needs zero
+//!    offline labels;
 //! 2. each [`Reoptimizer::step`] drains that window into a fresh
-//!    `SplitTable` slice and re-runs the full `CascadeOptimizer` sweep
-//!    against the configured budget — PR 1 made that sweep cheap enough
-//!    (incremental + parallel) to run *during* serving;
+//!    `SplitTable` slice — decay-*weighted* when the window has a
+//!    half-life, so recent traffic dominates the re-learn without
+//!    shrinking the sample — and re-runs the full `CascadeOptimizer`
+//!    sweep against the configured budget (both the candidate metrics and
+//!    the current plan's replay below use the same weights, so the
+//!    comparison stays apples-to-apples);
 //! 3. if the candidate plan beats the currently served plan on the same
 //!    window by more than the **hysteresis** margin, it is published
 //!    through the service's `PlanHandle` — a single atomic pointer swap
@@ -179,9 +186,15 @@ impl Reoptimizer {
             });
         }
 
+        let weight_note = if table.is_weighted() {
+            format!(" (decay weight {:.1})", table.total_weight())
+        } else {
+            String::new()
+        };
         let reason = format!(
-            "window of {} obs: acc {:.4}→{:.4}, cost ${:.4}→${:.4}/10k",
+            "window of {} obs{}: acc {:.4}→{:.4}, cost ${:.4}→${:.4}/10k",
             table.len(),
+            weight_note,
             cur.accuracy,
             candidate.train_accuracy,
             cur.avg_cost * 1e4,

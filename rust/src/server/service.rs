@@ -28,6 +28,7 @@ use crate::data::DatasetMeta;
 use crate::marketplace::CostModel;
 use crate::runtime::EngineHandle;
 use crate::server::metrics::{Observation, ServiceMetrics};
+use crate::server::shadow::{Shadow, ShadowConfig, ShadowSnapshot};
 use crate::strategies::cache::{CachedAnswer, CompletionCache};
 use crate::strategies::prompt::PromptPolicy;
 use crate::util::json::Value;
@@ -48,6 +49,13 @@ pub struct ServiceConfig {
     /// Rows kept in the labelled observation window the reoptimizer
     /// re-learns from.
     pub window_capacity: usize,
+    /// Exponential-decay half-life of the observation window, in
+    /// observations (`None` = hard ring). See
+    /// [`crate::server::metrics::ObservationWindow::with_half_life`].
+    pub window_half_life: Option<f64>,
+    /// Shadow-score a sampled fraction of live traffic into the
+    /// observation window (`None` = off). See [`crate::server::shadow`].
+    pub shadow: Option<ShadowConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -59,6 +67,8 @@ impl Default for ServiceConfig {
             prompt_policy: PromptPolicy::Full,
             budget_cap_usd: None,
             window_capacity: 4096,
+            window_half_life: None,
+            shadow: None,
         }
     }
 }
@@ -243,6 +253,9 @@ pub struct FrugalService {
     pub budget: BudgetTracker,
     pub metrics: Arc<ServiceMetrics>,
     meta: DatasetMeta,
+    /// Shadow-scoring tap + worker (`cfg.shadow`): samples live queries
+    /// into the observation window, off the answer path.
+    shadow: Option<Shadow>,
 }
 
 impl FrugalService {
@@ -254,8 +267,21 @@ impl FrugalService {
         cfg: ServiceConfig,
     ) -> Result<Self> {
         let initial = PlanBundle::build(plan, 0, &engine, &costs, &meta)?;
-        let metrics =
-            Arc::new(ServiceMetrics::with_models(costs.n_models(), cfg.window_capacity));
+        let metrics = Arc::new(ServiceMetrics::with_window(
+            costs.n_models(),
+            cfg.window_capacity,
+            cfg.window_half_life,
+        ));
+        let shadow = match &cfg.shadow {
+            Some(sc) => Some(Shadow::spawn(
+                engine.clone(),
+                costs.clone(),
+                meta.clone(),
+                metrics.clone(),
+                sc.clone(),
+            )?),
+            None => None,
+        };
         Ok(FrugalService {
             plans: PlanHandle::new(initial),
             engine,
@@ -268,6 +294,7 @@ impl FrugalService {
             cfg,
             costs,
             meta,
+            shadow,
         })
     }
 
@@ -367,6 +394,17 @@ impl FrugalService {
             }
         }
 
+        // Shadow tap: maybe sample this query for all-K evaluation. It
+        // sits *after* the cache so only cascade-bound traffic is sampled
+        // — the plan never serves cache hits, so learning from them would
+        // bias the window toward the hit mix while spending shadow budget
+        // on queries the cascade will not see. The tap itself only steps
+        // an atomic sampler and enqueues; the fan-out happens on the
+        // shadow worker, never on this path.
+        if let Some(sh) = &self.shadow {
+            sh.offer(tokens);
+        }
+
         // 2. Prompt adaptation (paper Fig. 2a).
         let adapted = self.cfg.prompt_policy.apply(tokens, &self.meta);
 
@@ -440,6 +478,11 @@ impl FrugalService {
     /// item) into the reoptimizer's window.
     pub fn observe(&self, obs: Observation) -> Result<()> {
         self.metrics.window.push(obs)
+    }
+
+    /// Shadow-scoring accounting, when shadow mode is on.
+    pub fn shadow_stats(&self) -> Option<ShadowSnapshot> {
+        self.shadow.as_ref().map(|s| s.snapshot())
     }
 
     pub fn engine_handle(&self) -> EngineHandle {

@@ -1,0 +1,696 @@
+//! Shadow scoring: learn the cascade from the service's *own* traffic.
+//!
+//! The reoptimizer (`server::reoptimizer`) needs fully-labelled
+//! observation rows — every marketplace model's (pred, score, correct) on
+//! one item — but a served query only executes the stages its cascade
+//! reached. Until now those rows came from a pre-labelled feedback stream
+//! replayed by the serve driver; this module closes the loop instead
+//! (cf. SMART, Jo et al. 2024: accuracy guarantees can be maintained by
+//! evaluating stronger models on a *sampled* subset of live queries):
+//!
+//! 1. a cheap tap on the answer path ([`Shadow::offer`]) samples a
+//!    configurable fraction of live *cascade-bound* queries (the service
+//!    places it after the completion cache: the plan never serves cache
+//!    hits, so sampling them would bias the window and waste budget) and
+//!    enqueues them on a bounded queue — the answer path never blocks on
+//!    shadow work, and a full queue drops (and counts) rather than
+//!    backing up serving;
+//! 2. a background worker drains the queue in small chunks and fans each
+//!    chunk out to **all K models** through per-model [`Batcher`]s
+//!    (`submit_async`, so the rows coalesce into batched engine calls
+//!    instead of serializing K × chunk round-trips);
+//! 3. every answer is scored by the coordinator scorer artifact (again
+//!    through a batcher), and the configured **reference model**'s answer
+//!    becomes the row's pseudo-label: `correct[m] = preds[m] == label`.
+//!    With no ground truth in live traffic, "as good as the reference"
+//!    is exactly the guarantee the cascade can chase — the paper's own
+//!    evaluation measures cascades against their strongest API;
+//! 4. the completed row is pushed into the service's
+//!    [`ObservationWindow`](crate::server::metrics::ObservationWindow),
+//!    where the reoptimizer re-learns the plan from it.
+//!
+//! Shadow execution costs real (metered) money — the K marketplace model
+//! calls per sampled query; the K scorer executions are local compute,
+//! not marketplace spend (`CostModel` has no scorer pricing), so they are
+//! not metered — and it is **budget-capped**: once the metered shadow
+//! spend reaches `budget_usd`, sampling stops (the spend may overshoot by
+//! at most one in-flight chunk). All accounting is exposed via
+//! [`ShadowStats`] and lands in the serve report / swap log.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::cascade::argmax;
+use crate::coordinator::scorer::{sigmoid, Scorer};
+use crate::data::{prompt, DatasetMeta};
+use crate::marketplace::CostModel;
+use crate::runtime::EngineHandle;
+use crate::server::batcher::{Batcher, BatcherConfig, BatcherHandle};
+use crate::server::metrics::{Observation, ServiceMetrics};
+use crate::util::json::Value;
+use crate::util::rng::{splitmix64_mix, SPLITMIX64_GOLDEN};
+
+/// Tuning for the shadow-scoring loop.
+#[derive(Debug, Clone)]
+pub struct ShadowConfig {
+    /// Fraction of live queries sampled into the shadow path, in (0, 1].
+    pub rate: f64,
+    /// Hard cap on metered shadow spend (USD); `None` = uncapped.
+    pub budget_usd: Option<f64>,
+    /// Marketplace index of the pseudo-label reference model. `None`
+    /// picks the most expensive API by pricing (the paper's testbed
+    /// reference, GPT-4, is its priciest).
+    pub reference: Option<usize>,
+    /// Bounded depth of the sampled-query queue; a full queue drops new
+    /// samples (counted in `dropped_queue_full`) instead of blocking the
+    /// answer path.
+    pub queue_capacity: usize,
+    /// Queued rows drained per fan-out round — they ride one batched
+    /// engine call per model.
+    pub chunk: usize,
+    /// Sampler seed (deterministic tests).
+    pub seed: u64,
+    /// Config of the per-model and scorer batchers.
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ShadowConfig {
+    fn default() -> Self {
+        ShadowConfig {
+            rate: 0.05,
+            budget_usd: None,
+            reference: None,
+            queue_capacity: 256,
+            chunk: 8,
+            seed: 0x5AD0,
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// Lock-free shadow accounting. Spend is an exact nano-USD sum (same
+/// representation as `BudgetTracker`/`ModelWindow`).
+#[derive(Debug, Default)]
+pub struct ShadowStats {
+    /// Queries the sampler picked.
+    pub sampled: AtomicU64,
+    /// ... of which were enqueued for the worker.
+    pub enqueued: AtomicU64,
+    /// ... of which were dropped because the queue was full.
+    pub dropped_queue_full: AtomicU64,
+    /// Queries dropped after sampling because the budget ran out.
+    pub skipped_budget: AtomicU64,
+    /// Observation rows completed and pushed into the window.
+    pub completed: AtomicU64,
+    /// Rows lost to engine/batcher/window errors.
+    pub errors: AtomicU64,
+    /// Metered shadow spend (nano-USD; all K model calls of each row).
+    pub spend_nano_usd: AtomicU64,
+    budget_exhausted: AtomicBool,
+}
+
+impl ShadowStats {
+    pub fn spend_usd(&self) -> f64 {
+        self.spend_nano_usd.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn budget_exhausted(&self) -> bool {
+        self.budget_exhausted.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> ShadowSnapshot {
+        ShadowSnapshot {
+            sampled: self.sampled.load(Ordering::Relaxed),
+            enqueued: self.enqueued.load(Ordering::Relaxed),
+            dropped_queue_full: self.dropped_queue_full.load(Ordering::Relaxed),
+            skipped_budget: self.skipped_budget.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            spend_usd: self.spend_usd(),
+            budget_exhausted: self.budget_exhausted(),
+        }
+    }
+}
+
+/// Point-in-time copy of the shadow accounting (serve report, swap log).
+#[derive(Debug, Clone, Default)]
+pub struct ShadowSnapshot {
+    pub sampled: u64,
+    pub enqueued: u64,
+    pub dropped_queue_full: u64,
+    pub skipped_budget: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub spend_usd: f64,
+    pub budget_exhausted: bool,
+}
+
+impl ShadowSnapshot {
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("sampled".to_string(), Value::Num(self.sampled as f64));
+        m.insert("enqueued".to_string(), Value::Num(self.enqueued as f64));
+        m.insert(
+            "dropped_queue_full".to_string(),
+            Value::Num(self.dropped_queue_full as f64),
+        );
+        m.insert("skipped_budget".to_string(), Value::Num(self.skipped_budget as f64));
+        m.insert("completed".to_string(), Value::Num(self.completed as f64));
+        m.insert("errors".to_string(), Value::Num(self.errors as f64));
+        m.insert("spend_usd".to_string(), Value::Num(self.spend_usd));
+        m.insert(
+            "budget_exhausted".to_string(),
+            Value::Bool(self.budget_exhausted),
+        );
+        Value::Obj(m)
+    }
+}
+
+/// Default pseudo-label reference: the priciest API at a nominal request
+/// shape — 256 input tokens and a flat 2-token completion. The nominal
+/// completion is NOT answer-length aware (lengths are per-class, and no
+/// class is known here); pass `ShadowConfig::reference` explicitly for a
+/// marketplace where long completions would reorder the price ranking.
+pub fn default_reference(costs: &CostModel) -> usize {
+    let mut best = 0;
+    let mut best_cost = f64::MIN;
+    for (m, p) in costs.pricing.iter().enumerate() {
+        let c = p.cost(256, 2);
+        if c > best_cost {
+            best_cost = c;
+            best = m;
+        }
+    }
+    best
+}
+
+/// Lock-free Bernoulli sampler for the answer-path tap: one relaxed
+/// `fetch_add` advances a splitmix64 counter, and the mixed output is
+/// compared against a precomputed 64-bit threshold. No mutex — concurrent
+/// `answer()` callers never serialize on the sampler, and a fixed seed
+/// keeps single-threaded tests deterministic.
+struct Sampler {
+    state: AtomicU64,
+    /// Accept when `mix(counter) < threshold`; `u64::MAX` = accept all
+    /// (rate 1.0 — the `as u64` cast of `rate * 2^64` would saturate to
+    /// MAX anyway, but losing the single top value matters for tests that
+    /// expect *every* query sampled).
+    threshold: u64,
+    accept_all: bool,
+}
+
+impl Sampler {
+    fn new(rate: f64, seed: u64) -> Sampler {
+        Sampler {
+            state: AtomicU64::new(seed),
+            threshold: (rate * (u64::MAX as f64 + 1.0)) as u64,
+            accept_all: rate >= 1.0,
+        }
+    }
+
+    fn pick(&self) -> bool {
+        if self.accept_all {
+            return true;
+        }
+        let s = self
+            .state
+            .fetch_add(SPLITMIX64_GOLDEN, Ordering::Relaxed)
+            .wrapping_add(SPLITMIX64_GOLDEN);
+        splitmix64_mix(s) < self.threshold
+    }
+}
+
+/// The shadow-scoring subsystem for one service: sampling tap + worker
+/// thread + per-model/scorer batchers. Dropping it shuts the worker (and
+/// its batchers) down; already-queued rows are abandoned.
+pub struct Shadow {
+    tx: Option<mpsc::SyncSender<Vec<i32>>>,
+    sampler: Sampler,
+    stats: Arc<ShadowStats>,
+    /// Shutdown flag: mpsc receivers keep yielding *buffered* rows after
+    /// every sender is dropped, so closing the queue alone would make
+    /// `Drop` block while the worker executes (and pays for) the whole
+    /// backlog. The worker checks this before each chunk instead.
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Shadow {
+    /// Spawn the worker and its batchers. `metrics` is the service's —
+    /// completed rows land in `metrics.window`.
+    pub fn spawn(
+        engine: EngineHandle,
+        costs: CostModel,
+        meta: DatasetMeta,
+        metrics: Arc<ServiceMetrics>,
+        cfg: ShadowConfig,
+    ) -> Result<Shadow> {
+        if !(cfg.rate > 0.0 && cfg.rate <= 1.0) {
+            bail!("shadow rate {} outside (0, 1]", cfg.rate);
+        }
+        let k = costs.n_models();
+        let reference = cfg.reference.unwrap_or_else(|| default_reference(&costs));
+        if reference >= k {
+            bail!("shadow reference model {reference} out of range (marketplace has {k})");
+        }
+        if let Some(b) = cfg.budget_usd {
+            if !(b.is_finite() && b > 0.0) {
+                bail!("shadow budget {b} is not finite and positive");
+            }
+        }
+        let stats = Arc::new(ShadowStats::default());
+        let (tx, rx) = mpsc::sync_channel::<Vec<i32>>(cfg.queue_capacity.max(1));
+
+        // The batchers are created here but owned by the worker thread, so
+        // they live exactly as long as the fan-out loop that uses them.
+        let mut batchers = Vec::with_capacity(k + 1);
+        let mut model_handles = Vec::with_capacity(k);
+        for name in &costs.model_names {
+            let b = Batcher::spawn(engine.clone(), meta.name.clone(), name.clone(), cfg.batcher);
+            model_handles.push(b.handle());
+            batchers.push(b);
+        }
+        let scorer_batcher =
+            Batcher::spawn(engine.clone(), meta.name.clone(), "scorer".into(), cfg.batcher);
+        let scorer_handle = scorer_batcher.handle();
+        batchers.push(scorer_batcher);
+        let scorer = Scorer::new(engine, meta);
+
+        let stats_in = stats.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_in = stop.clone();
+        let chunk = cfg.chunk.max(1);
+        let budget = cfg.budget_usd;
+        let join = std::thread::Builder::new()
+            .name("shadow-scorer".into())
+            .spawn(move || {
+                let _own = batchers; // keep the batcher threads alive
+                while let Ok(first) = rx.recv() {
+                    if stop_in.load(Ordering::Relaxed) {
+                        break; // shutdown: abandon the queued backlog
+                    }
+                    let mut rows = vec![first];
+                    while rows.len() < chunk {
+                        match rx.try_recv() {
+                            Ok(r) => rows.push(r),
+                            Err(_) => break,
+                        }
+                    }
+                    if let Some(cap) = budget {
+                        if stats_in.spend_usd() >= cap {
+                            stats_in.budget_exhausted.store(true, Ordering::Relaxed);
+                            stats_in
+                                .skipped_budget
+                                .fetch_add(rows.len() as u64, Ordering::Relaxed);
+                            continue;
+                        }
+                    }
+                    shadow_chunk(
+                        &rows,
+                        &model_handles,
+                        &scorer_handle,
+                        &scorer,
+                        &costs,
+                        reference,
+                        &metrics,
+                        &stats_in,
+                    );
+                    if let Some(cap) = budget {
+                        if stats_in.spend_usd() >= cap {
+                            stats_in.budget_exhausted.store(true, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+            .expect("spawning shadow worker thread");
+
+        Ok(Shadow {
+            tx: Some(tx),
+            sampler: Sampler::new(cfg.rate, cfg.seed),
+            stats,
+            stop,
+            join: Some(join),
+        })
+    }
+
+    /// The per-query tap on the answer path: decide sampling and enqueue.
+    /// Never blocks and never locks — the sampler is one relaxed atomic
+    /// op, a full queue drops the sample, and an exhausted budget stops
+    /// sampling entirely.
+    pub fn offer(&self, tokens: &[i32]) {
+        if self.stats.budget_exhausted() {
+            return;
+        }
+        if !self.sampler.pick() {
+            return;
+        }
+        self.stats.sampled.fetch_add(1, Ordering::Relaxed);
+        let Some(tx) = &self.tx else { return };
+        match tx.try_send(tokens.to_vec()) {
+            Ok(()) => {
+                self.stats.enqueued.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.stats.dropped_queue_full.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> &ShadowStats {
+        &self.stats
+    }
+
+    pub fn snapshot(&self) -> ShadowSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+impl Drop for Shadow {
+    fn drop(&mut self) {
+        // Raise the stop flag BEFORE closing the queue: buffered rows
+        // keep arriving on `recv()` after the sender drops, and without
+        // the flag the worker would execute (and pay for) the whole
+        // backlog before exiting. With it, at most the in-flight chunk
+        // completes; then join so the batchers (and their engine handles)
+        // are released deterministically.
+        self.stop.store(true, Ordering::Relaxed);
+        self.tx.take();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Execute one chunk: all rows × all models (+ scorer), then push the
+/// completed observation rows. A row any model or scorer call fails on is
+/// counted as an error and skipped — partial rows would corrupt the
+/// window's "every model answered" invariant.
+#[allow(clippy::too_many_arguments)]
+fn shadow_chunk(
+    rows: &[Vec<i32>],
+    models: &[BatcherHandle],
+    scorer_batcher: &BatcherHandle,
+    scorer: &Scorer,
+    costs: &CostModel,
+    reference: usize,
+    metrics: &ServiceMetrics,
+    stats: &ShadowStats,
+) {
+    let k = models.len();
+    let n = rows.len();
+
+    // Fan out: submit every row to every model before collecting anything,
+    // so the per-model batchers see the whole chunk at once.
+    let mut pending = Vec::with_capacity(k);
+    for h in models {
+        let per: Vec<_> = rows.iter().map(|row| h.submit_async(row.clone()).ok()).collect();
+        pending.push(per);
+    }
+    let mut preds: Vec<Vec<Option<u32>>> = vec![vec![None; n]; k];
+    for (m, per) in pending.into_iter().enumerate() {
+        for (r, rx) in per.into_iter().enumerate() {
+            preds[m][r] = rx
+                .and_then(|rx| rx.recv().ok())
+                .and_then(|res| res.ok())
+                .map(|logits| argmax(&logits) as u32);
+        }
+    }
+    let valid: Vec<bool> = (0..n).map(|r| (0..k).all(|m| preds[m][r].is_some())).collect();
+
+    // Meter the spend of every model call that produced an answer.
+    let toks: Vec<u32> = rows.iter().map(|r| prompt::input_tokens(r)).collect();
+    let mut chunk_spend = 0.0;
+    for r in 0..n {
+        for (m, p) in preds.iter().enumerate() {
+            if let Some(pred) = p[r] {
+                chunk_spend += costs.call_cost(m, toks[r], pred);
+            }
+        }
+    }
+    let nano = (chunk_spend * 1e9).round().max(0.0) as u64;
+    stats.spend_nano_usd.fetch_add(nano, Ordering::Relaxed);
+
+    // Score every (row, answer) pair through the scorer batcher.
+    let mut score_rx = Vec::with_capacity(k);
+    for p in &preds {
+        let per: Vec<_> = (0..n)
+            .map(|r| {
+                if !valid[r] {
+                    return None;
+                }
+                scorer_batcher.submit_async(scorer.input(&rows[r], p[r].unwrap())).ok()
+            })
+            .collect();
+        score_rx.push(per);
+    }
+    let mut scores: Vec<Vec<Option<f32>>> = vec![vec![None; n]; k];
+    for (m, per) in score_rx.into_iter().enumerate() {
+        for (r, rx) in per.into_iter().enumerate() {
+            scores[m][r] = rx
+                .and_then(|rx| rx.recv().ok())
+                .and_then(|res| res.ok())
+                .and_then(|logits| logits.first().copied())
+                .map(sigmoid);
+        }
+    }
+
+    // Assemble pseudo-labelled observation rows.
+    for r in 0..n {
+        let complete = valid[r] && (0..k).all(|m| scores[m][r].is_some());
+        if !complete {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        let label = preds[reference][r].unwrap();
+        let row_preds: Vec<u32> = (0..k).map(|m| preds[m][r].unwrap()).collect();
+        let row_scores: Vec<f32> = (0..k).map(|m| scores[m][r].unwrap()).collect();
+        let row_correct: Vec<bool> = row_preds.iter().map(|&p| p == label).collect();
+        let obs = Observation {
+            label,
+            input_tokens: toks[r],
+            preds: row_preds,
+            scores: row_scores,
+            correct: row_correct,
+        };
+        match metrics.window.push(obs) {
+            Ok(()) => {
+                stats.completed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::marketplace::{LatencyModel, Pricing};
+    use std::time::{Duration, Instant};
+
+    const K: usize = 3;
+
+    fn sim_meta() -> DatasetMeta {
+        DatasetMeta {
+            name: "sim".into(),
+            seq: 8,
+            n_classes: 4,
+            n_examples: 0,
+            qlen: 4,
+            block_len: 1,
+            q_offset: 0,
+            scorer_seq: 8,
+            answer_lens: vec![1, 1, 1, 1],
+        }
+    }
+
+    fn sim_costs() -> CostModel {
+        CostModel {
+            dataset: "sim".into(),
+            model_names: (0..K).map(|m| format!("api_{m}")).collect(),
+            pricing: vec![
+                Pricing::new(2.0, 2.0, 0.0),
+                Pricing::new(10.0, 10.0, 0.0),
+                Pricing::new(30.0, 60.0, 0.0),
+            ],
+            latency: vec![LatencyModel { base_ms: 1.0, per_1k_tokens_ms: 1.0 }; K],
+            answer_lens: vec![1, 1, 1, 1],
+        }
+    }
+
+    /// Truth = first body token mod classes. Model 2 always right, model 1
+    /// always wrong, model 0 right; scorer logit +4 when the scored answer
+    /// matches the truth, -4 otherwise.
+    fn sim_engine() -> EngineHandle {
+        EngineHandle::simulated(move |_ds, model, rows| {
+            Ok(rows
+                .iter()
+                .map(|r| {
+                    let truth = r[1].rem_euclid(4) as u32;
+                    if model == "scorer" {
+                        let ans = (r[6] - crate::data::layout::LABEL_BASE) as u32;
+                        vec![if ans == truth { 4.0 } else { -4.0 }]
+                    } else {
+                        let answer = match model {
+                            "api_0" => truth,
+                            "api_1" => (truth + 2) % 4,
+                            _ => truth,
+                        };
+                        let mut logits = vec![0.0f32; 4];
+                        logits[answer as usize] = 1.0;
+                        logits
+                    }
+                })
+                .collect())
+        })
+    }
+
+    fn query_row(j: i32) -> Vec<i32> {
+        use crate::data::layout;
+        vec![layout::CLS, 10 + j, 11, 12, 13, layout::QSEP, layout::PAD, layout::PAD]
+    }
+
+    fn wait_until(deadline_ms: u64, mut done: impl FnMut() -> bool) -> bool {
+        let deadline = Instant::now() + Duration::from_millis(deadline_ms);
+        while Instant::now() < deadline {
+            if done() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        done()
+    }
+
+    #[test]
+    fn sampler_rate_is_respected() {
+        let all = Sampler::new(1.0, 1);
+        assert!((0..1000).all(|_| all.pick()), "rate 1.0 samples every query");
+        let quarter = Sampler::new(0.25, 42);
+        let hits = (0..10_000).filter(|_| quarter.pick()).count();
+        assert!(
+            (1_800..3_200).contains(&hits),
+            "rate 0.25 sampled {hits}/10000"
+        );
+        let never = Sampler::new(1e-12, 7);
+        assert_eq!((0..10_000).filter(|_| never.pick()).count(), 0);
+    }
+
+    #[test]
+    fn default_reference_is_priciest_api() {
+        assert_eq!(default_reference(&sim_costs()), 2);
+        let full = CostModel::from_table1("t1", vec![1, 1, 2, 1]);
+        // j1_jumbo's $0.005 per-request fee dominates every per-token
+        // price at a 256-token request — it is Table 1's priciest call.
+        assert_eq!(full.model_names[default_reference(&full)], "j1_jumbo");
+    }
+
+    #[test]
+    fn sampled_queries_become_pseudo_labelled_window_rows() {
+        let costs = sim_costs();
+        let metrics = Arc::new(ServiceMetrics::with_models(K, 64));
+        let shadow = Shadow::spawn(
+            sim_engine(),
+            costs,
+            sim_meta(),
+            metrics.clone(),
+            ShadowConfig { rate: 1.0, reference: Some(2), ..Default::default() },
+        )
+        .unwrap();
+        for j in 0..16 {
+            shadow.offer(&query_row(j));
+        }
+        assert!(
+            wait_until(5_000, || metrics.window.len() >= 16),
+            "window never filled: {:?}",
+            shadow.snapshot()
+        );
+        let snap = shadow.snapshot();
+        assert_eq!(snap.sampled, 16);
+        assert_eq!(snap.completed, 16);
+        assert_eq!(snap.errors, 0);
+        assert!(snap.spend_usd > 0.0);
+        let (table, toks) = metrics
+            .window
+            .snapshot_table("sim", &["api_0".into(), "api_1".into(), "api_2".into()])
+            .unwrap();
+        assert_eq!(table.len(), 16);
+        assert_eq!(toks, vec![6u32; 16]);
+        // pseudo-labels: models 0 and 2 agree with the reference, 1 never
+        assert_eq!(table.accuracy(0), 1.0);
+        assert_eq!(table.accuracy(1), 0.0);
+        assert_eq!(table.accuracy(2), 1.0);
+        // calibrated scores: right answers near sigmoid(4), wrong near sigmoid(-4)
+        for i in 0..table.len() {
+            assert!(table.score(0, i) > 0.9);
+            assert!(table.score(1, i) < 0.1);
+        }
+    }
+
+    #[test]
+    fn shadow_budget_caps_spend_and_stops_sampling() {
+        let costs = sim_costs();
+        // One full row costs Σ_m call_cost(m, 6, ans) ≈ 3.2e-5 USD; cap
+        // after roughly two rows.
+        let metrics = Arc::new(ServiceMetrics::with_models(K, 64));
+        let shadow = Shadow::spawn(
+            sim_engine(),
+            costs.clone(),
+            sim_meta(),
+            metrics.clone(),
+            ShadowConfig {
+                rate: 1.0,
+                reference: Some(2),
+                budget_usd: Some(5.0e-5),
+                chunk: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for j in 0..64 {
+            shadow.offer(&query_row(j));
+            // give the single-row chunks time to meter spend
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(
+            wait_until(5_000, || shadow.stats().budget_exhausted()),
+            "budget never tripped: {:?}",
+            shadow.snapshot()
+        );
+        let before = shadow.snapshot();
+        for j in 0..32 {
+            shadow.offer(&query_row(j));
+        }
+        let after = shadow.snapshot();
+        assert_eq!(before.sampled, after.sampled, "exhausted budget stops sampling");
+        // Overshoot is bounded by one chunk (chunk = 1 row here).
+        let per_row: f64 = (0..K).map(|m| costs.call_cost(m, 6, 0)).sum();
+        assert!(after.spend_usd <= 5.0e-5 + per_row + 1e-12);
+        assert!(after.completed < 64);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mk = |cfg: ShadowConfig| {
+            Shadow::spawn(
+                sim_engine(),
+                sim_costs(),
+                sim_meta(),
+                Arc::new(ServiceMetrics::with_models(K, 8)),
+                cfg,
+            )
+        };
+        assert!(mk(ShadowConfig { rate: 0.0, ..Default::default() }).is_err());
+        assert!(mk(ShadowConfig { rate: 1.5, ..Default::default() }).is_err());
+        assert!(mk(ShadowConfig { reference: Some(9), ..Default::default() }).is_err());
+        assert!(
+            mk(ShadowConfig { budget_usd: Some(0.0), ..Default::default() }).is_err()
+        );
+        assert!(mk(ShadowConfig { rate: 1.0, ..Default::default() }).is_ok());
+    }
+}

@@ -261,10 +261,9 @@ fn minhash(query: &[i32]) -> [u64; SIGNATURE] {
 #[inline]
 fn mix(v: u64, perm: u64) -> u64 {
     // splitmix64 step with a per-permutation offset.
-    let mut z = v ^ (perm.wrapping_mul(0x9E3779B97F4A7C15));
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-    z ^ (z >> 31)
+    crate::util::rng::splitmix64_mix(
+        v ^ perm.wrapping_mul(crate::util::rng::SPLITMIX64_GOLDEN),
+    )
 }
 
 /// Estimated Jaccard similarity of two signatures.

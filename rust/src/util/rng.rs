@@ -2,6 +2,19 @@
 //! synthetic workload generators, property tests and benches. Not for
 //! cryptography.
 
+/// The splitmix64 increment (golden-ratio constant).
+pub const SPLITMIX64_GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The splitmix64 output-mixing finalizer — the one canonical copy of
+/// these magic constants (also used by the cache's MinHash permutations
+/// and the shadow sampler; keep callers on this function).
+#[inline]
+pub fn splitmix64_mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256** seeded via splitmix64.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -12,11 +25,8 @@ impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let mut next = || {
-            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-            z ^ (z >> 31)
+            sm = sm.wrapping_add(SPLITMIX64_GOLDEN);
+            splitmix64_mix(sm)
         };
         Rng { s: [next(), next(), next(), next()] }
     }

@@ -1,0 +1,47 @@
+//! Shared simulated-marketplace fixture for the hermetic serving tests
+//! (`service_reopt.rs`, `shadow_loop.rs`): one 3-API marketplace with
+//! distinct price tiers and one dataset layout, so the sim contract (row
+//! shape, scorer-input layout, pricing) lives in exactly one place. The
+//! engine closures stay per-test — each test simulates a *different*
+//! model behavior on purpose.
+#![allow(dead_code)]
+
+use frugalgpt::data::{layout, DatasetMeta};
+use frugalgpt::marketplace::{CostModel, LatencyModel, Pricing};
+
+pub const K: usize = 3;
+
+pub fn sim_meta() -> DatasetMeta {
+    DatasetMeta {
+        name: "sim".into(),
+        seq: 8,
+        n_classes: 4,
+        n_examples: 0,
+        qlen: 4,
+        block_len: 1,
+        q_offset: 0,
+        scorer_seq: 8,
+        answer_lens: vec![1, 1, 1, 1],
+    }
+}
+
+/// Distinct per-model prices: 0 cheap, 1 mid, 2 expensive.
+pub fn sim_costs() -> CostModel {
+    CostModel {
+        dataset: "sim".into(),
+        model_names: (0..K).map(|m| format!("api_{m}")).collect(),
+        pricing: vec![
+            Pricing::new(2.0, 2.0, 0.0),
+            Pricing::new(10.0, 10.0, 0.0),
+            Pricing::new(30.0, 60.0, 0.0),
+        ],
+        latency: vec![LatencyModel { base_ms: 1.0, per_1k_tokens_ms: 1.0 }; K],
+        answer_lens: vec![1, 1, 1, 1],
+    }
+}
+
+/// A valid query row in the sim layout, `[CLS] body(4) [QSEP] PAD PAD`,
+/// with `j` as the leading body token (6 billable tokens when `j != 0`).
+pub fn query_row(j: i32) -> Vec<i32> {
+    vec![layout::CLS, j, 11, 12, 13, layout::QSEP, layout::PAD, layout::PAD]
+}

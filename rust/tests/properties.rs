@@ -272,6 +272,124 @@ fn reference_frontier(
     )
 }
 
+/// §Weights acceptance: a decay-weighted `SplitTable` with *uniform*
+/// weights reproduces the unweighted frontier **bit-for-bit** — plans
+/// identical, accuracy and avg_cost identical to the last ulp. Checked at
+/// weight 1.0 (the degenerate case) and at a uniform power-of-two weight
+/// (0.5), where scaling every accumulator term and the denominator by the
+/// same power of two commutes with f64 rounding.
+#[test]
+fn prop_uniform_weights_reproduce_unweighted_frontier_bitwise() {
+    check("uniform-weights-bitwise", 8, |rng| {
+        let k = 3 + rng.usize_below(3);
+        let n = 50 + rng.usize_below(200);
+        let grid = 4 + rng.usize_below(5);
+        let table =
+            synthetic_table(k, n, 2 + rng.below(4) as u32, 0.5 + 0.5 * rng.f64(), rng.next_u64());
+        let costs = cost_model(k);
+        let toks = vec![40 + rng.below(100) as u32; n];
+        let opts = OptimizerOptions { grid, threads: Some(1), ..Default::default() };
+        let base = CascadeOptimizer::new(&table, &costs, toks.clone(), opts.clone())
+            .unwrap()
+            .frontier();
+        for uniform in [1.0f64, 0.5] {
+            let weighted = table.clone().with_weights(vec![uniform; n]).unwrap();
+            assert!(weighted.is_weighted());
+            let f = CascadeOptimizer::new(&weighted, &costs, toks.clone(), opts.clone())
+                .unwrap()
+                .frontier();
+            assert_eq!(
+                base.len(),
+                f.len(),
+                "uniform weight {uniform}: frontier size {} vs {}",
+                base.len(),
+                f.len()
+            );
+            for (j, (p, q)) in base.iter().zip(&f).enumerate() {
+                assert_eq!(p.plan, q.plan, "point {j} plan differs at weight {uniform}");
+                assert_eq!(
+                    p.accuracy.to_bits(),
+                    q.accuracy.to_bits(),
+                    "point {j}: accuracy {} vs {} at weight {uniform}",
+                    p.accuracy,
+                    q.accuracy
+                );
+                assert_eq!(
+                    p.avg_cost.to_bits(),
+                    q.avg_cost.to_bits(),
+                    "point {j}: cost {} vs {} at weight {uniform}",
+                    p.avg_cost,
+                    q.avg_cost
+                );
+            }
+        }
+    });
+}
+
+/// Non-uniform weights: the weighted frontier is internally consistent —
+/// sorted and strictly improving, every point's reported metrics are
+/// reproduced by an independent *weighted* replay, the budget query stays
+/// feasible, and up-weighting the items a model gets right raises its
+/// weighted accuracy.
+#[test]
+fn prop_weighted_optimizer_consistent() {
+    check("weighted-optimizer", 10, |rng| {
+        let k = 3 + rng.usize_below(3);
+        let n = 50 + rng.usize_below(200);
+        let table =
+            synthetic_table(k, n, 4, 0.6 + 0.4 * rng.f64(), rng.next_u64());
+        let weights: Vec<f64> = (0..n).map(|_| 0.25 + 3.75 * rng.f64()).collect();
+        let weighted = table.clone().with_weights(weights.clone()).unwrap();
+        let costs = cost_model(k);
+        let toks = vec![45u32; n];
+        let opt = CascadeOptimizer::new(
+            &weighted,
+            &costs,
+            toks.clone(),
+            OptimizerOptions { grid: 6, ..Default::default() },
+        )
+        .unwrap();
+        let f = opt.frontier();
+        assert!(!f.is_empty());
+        for w in f.windows(2) {
+            assert!(w[0].avg_cost <= w[1].avg_cost);
+            assert!(w[0].accuracy < w[1].accuracy);
+        }
+        // Reported metrics replay-match under the same weights. The sweep
+        // accumulates in score order, replay in index order, so allow
+        // summation-order noise (but nothing more).
+        for p in &f {
+            let r = replay::replay(&p.plan, &weighted, &costs, &toks);
+            assert!(
+                (r.accuracy - p.accuracy).abs() < 1e-9,
+                "weighted point reports acc {} but replays to {}",
+                p.accuracy,
+                r.accuracy
+            );
+            assert!(
+                (r.avg_cost - p.avg_cost).abs() < 1e-9,
+                "weighted point reports cost {} but replays to {}",
+                p.avg_cost,
+                r.avg_cost
+            );
+        }
+        let fp = &f[rng.usize_below(f.len())];
+        let plan = opt.optimize(fp.avg_cost * 1e4 * (1.0 + rng.f64())).unwrap();
+        assert!(plan.train_avg_cost <= fp.avg_cost * (2.0 + 1e-9));
+        // Weighted single-model accuracy moves with the weights: put 4x
+        // weight on exactly the items model 0 answers correctly.
+        let boost: Vec<f64> =
+            (0..n).map(|i| if table.is_correct(0, i) { 4.0 } else { 1.0 }).collect();
+        let boosted = table.clone().with_weights(boost).unwrap();
+        if table.accuracy(0) > 0.05 && table.accuracy(0) < 0.95 {
+            assert!(
+                boosted.accuracy(0) > table.accuracy(0) + 1e-6,
+                "up-weighting correct items must raise weighted accuracy"
+            );
+        }
+    });
+}
+
 /// Pareto tie handling: equal-cost points keep only the most accurate,
 /// equal-accuracy points keep only the cheapest, exact duplicates keep
 /// one, and accuracy gains below the 1e-12 epsilon don't justify a more

@@ -9,49 +9,15 @@ use std::sync::Arc;
 
 use frugalgpt::coordinator::cascade::{CascadePlan, Stage};
 use frugalgpt::coordinator::optimizer::OptimizerOptions;
-use frugalgpt::data::{layout, DatasetMeta};
-use frugalgpt::marketplace::{CostModel, LatencyModel, Pricing};
+use frugalgpt::marketplace::CostModel;
 use frugalgpt::runtime::EngineHandle;
 use frugalgpt::server::metrics::Observation;
 use frugalgpt::server::reoptimizer::{Reoptimizer, ReoptimizerConfig, ReoptOutcome};
 use frugalgpt::server::service::{FrugalService, ServiceConfig};
 use frugalgpt::util::rng::Rng;
 
-const K: usize = 3;
-
-fn sim_meta() -> DatasetMeta {
-    DatasetMeta {
-        name: "sim".into(),
-        seq: 8,
-        n_classes: 4,
-        n_examples: 0,
-        qlen: 4,
-        block_len: 1,
-        q_offset: 0,
-        scorer_seq: 8,
-        answer_lens: vec![1, 1, 1, 1],
-    }
-}
-
-/// Distinct per-model prices: 0 cheap, 1 mid, 2 expensive.
-fn sim_costs() -> CostModel {
-    CostModel {
-        dataset: "sim".into(),
-        model_names: (0..K).map(|m| format!("api_{m}")).collect(),
-        pricing: vec![
-            Pricing::new(2.0, 2.0, 0.0),
-            Pricing::new(10.0, 10.0, 0.0),
-            Pricing::new(30.0, 60.0, 0.0),
-        ],
-        latency: vec![LatencyModel { base_ms: 1.0, per_1k_tokens_ms: 1.0 }; K],
-        answer_lens: vec![1, 1, 1, 1],
-    }
-}
-
-/// A valid query row in the sim layout: `[CLS] body(4) [QSEP] PAD PAD`.
-fn query_row() -> Vec<i32> {
-    vec![layout::CLS, 10, 11, 12, 13, layout::QSEP, layout::PAD, layout::PAD]
-}
+mod common;
+use common::{query_row, sim_costs, sim_meta, K};
 
 /// Simulated engine: model `api_m` answers class `m` (one-hot logits), so
 /// every answer names the model that produced it; the scorer's logit is
@@ -113,8 +79,8 @@ fn hot_swap_is_race_free_and_internally_consistent() {
     // scorer logit 5.0 → score ≈ 0.993: above -1.0, below 2.0.
     let svc = sim_service(plans[0].clone(), 5.0);
     let costs = sim_costs();
-    let row = query_row();
-    let input_tokens = 6u32; // non-PAD tokens of query_row()
+    let row = query_row(10);
+    let input_tokens = 6u32; // non-PAD tokens of query_row(10)
 
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
     let mut clients = Vec::new();
@@ -258,7 +224,7 @@ fn reoptimizer_follows_window_shift_with_hysteresis() {
         "served plan now ends at the newly-correct model: {plan:?}"
     );
     // served traffic actually uses the new plan
-    let ans = svc.answer(&query_row()).unwrap();
+    let ans = svc.answer(&query_row(10)).unwrap();
     assert_eq!(ans.plan_version, 1);
     assert_eq!(ans.model, plan.stages[ans.stopped_at].model);
 
@@ -278,6 +244,72 @@ fn reoptimizer_follows_window_shift_with_hysteresis() {
     assert!(history[0].reason.contains("window"));
 }
 
+/// Serve phase-1 traffic (cheap model 0 perfect) until the window is
+/// full, then drift to phase-2 traffic (only expensive model 2 correct)
+/// in small batches, stepping the reoptimizer after each batch. Returns
+/// how many drifted observations were needed before the served plan
+/// swapped.
+fn drifted_obs_until_swap(window_half_life: Option<f64>) -> usize {
+    let costs = sim_costs();
+    let engine = sim_engine(&costs, 5.0);
+    let cfg = ServiceConfig {
+        cache_enabled: false,
+        window_capacity: 256,
+        window_half_life,
+        ..Default::default()
+    };
+    let svc =
+        Arc::new(FrugalService::new(CascadePlan::single(0), engine, costs, sim_meta(), cfg).unwrap());
+    let reopt = Reoptimizer::new(
+        svc.clone(),
+        ReoptimizerConfig {
+            min_window: 64,
+            hysteresis: 0.05,
+            optimizer: OptimizerOptions { grid: 8, threads: Some(1), ..Default::default() },
+            ..Default::default()
+        },
+    );
+    feed_window(&svc, 0, 256, 7);
+    match reopt.step().unwrap() {
+        ReoptOutcome::Kept { .. } => {}
+        other => panic!("pre-drift window must keep the optimal plan, got {other:?}"),
+    }
+    let mut drifted = 0usize;
+    for round in 0..64u64 {
+        feed_window(&svc, 2, 4, 100 + round);
+        drifted += 4;
+        if let ReoptOutcome::Swapped { .. } = reopt.step().unwrap() {
+            let plan = svc.plan();
+            assert_eq!(
+                plan.stages.last().unwrap().model,
+                2,
+                "swap must route drifted traffic to the newly-correct model: {plan:?}"
+            );
+            return drifted;
+        }
+    }
+    panic!("plan never swapped under drift (half_life {window_half_life:?})");
+}
+
+/// Acceptance: on the SAME drifting traffic, a decay-weighted window
+/// swaps the served plan after strictly fewer drifted observations than
+/// the hard ring — recent rows dominate the weighted re-learn while the
+/// ring still averages them against 250+ stale ones.
+#[test]
+fn half_life_window_swaps_faster_than_hard_ring() {
+    let ring = drifted_obs_until_swap(None);
+    let decayed = drifted_obs_until_swap(Some(32.0));
+    assert!(
+        decayed < ring,
+        "half-life window needed {decayed} drifted obs, ring {ring} — decay must react faster"
+    );
+    // And the gap is structural, not a one-observation fluke.
+    assert!(
+        ring >= decayed + 4,
+        "expected a clear margin, got ring {ring} vs decayed {decayed}"
+    );
+}
+
 /// A plan swap flushes the completion cache: post-swap traffic is
 /// re-answered by the new plan instead of replaying completions the
 /// superseded plan produced.
@@ -289,7 +321,7 @@ fn plan_swap_flushes_stale_cached_answers() {
     assert!(cfg.cache_enabled, "default config caches");
     let svc =
         FrugalService::new(CascadePlan::single(0), engine, costs, sim_meta(), cfg).unwrap();
-    let row = query_row();
+    let row = query_row(10);
     let a1 = svc.answer(&row).unwrap();
     assert!(!a1.from_cache);
     assert_eq!(a1.answer, 0);

@@ -1,0 +1,189 @@
+//! Acceptance test for the self-contained re-optimization loop: a served
+//! cascade under drifted synthetic traffic swaps to a better plan with
+//! **zero pre-labelled feedback** — the observation window is fed
+//! exclusively by `server::shadow` sampling the service's own queries,
+//! fanning them through the batchers to every model, scoring them with
+//! the scorer artifact, and pseudo-labelling against the reference model.
+//! Entirely hermetic: the engine is `EngineHandle::simulated`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use frugalgpt::coordinator::cascade::CascadePlan;
+use frugalgpt::coordinator::optimizer::OptimizerOptions;
+use frugalgpt::data::layout;
+use frugalgpt::runtime::EngineHandle;
+use frugalgpt::server::reoptimizer::{ReoptOutcome, Reoptimizer, ReoptimizerConfig};
+use frugalgpt::server::service::{FrugalService, ServiceConfig};
+use frugalgpt::server::shadow::ShadowConfig;
+
+mod common;
+use common::{query_row, sim_costs, sim_meta};
+
+const CLASSES: i32 = 4;
+
+/// Ground truth of `query_row(j)`: its first body token mod CLASSES.
+fn truth_of(j: i32) -> u32 {
+    j.rem_euclid(CLASSES) as u32
+}
+
+/// Simulated marketplace with a drift switch:
+/// * `api_2` (expensive, the shadow reference) always answers the truth;
+/// * `api_1` (mid) is always wrong;
+/// * `api_0` (cheap) answers the truth until `drift` flips, then is
+///   always wrong — the drift the loop must detect on its own.
+///
+/// The scorer artifact is calibrated: logit +4 for a scored answer that
+/// matches the truth, -4 otherwise. Model rows and scorer rows both carry
+/// the query body at index 1, so one closure serves both artifact kinds.
+fn sim_engine(drift: Arc<AtomicBool>) -> EngineHandle {
+    EngineHandle::simulated(move |_ds, model, rows| {
+        Ok(rows
+            .iter()
+            .map(|r| {
+                let truth = truth_of(r[1]);
+                if model == "scorer" {
+                    let ans = (r[6] - layout::LABEL_BASE) as u32;
+                    vec![if ans == truth { 4.0 } else { -4.0 }]
+                } else {
+                    let answer = match model {
+                        "api_0" => {
+                            if drift.load(Ordering::Relaxed) {
+                                (truth + 1) % CLASSES as u32
+                            } else {
+                                truth
+                            }
+                        }
+                        "api_1" => (truth + 2) % CLASSES as u32,
+                        "api_2" => truth,
+                        other => panic!("unknown sim model {other}"),
+                    };
+                    let mut logits = vec![0.0f32; CLASSES as usize];
+                    logits[answer as usize] = 1.0;
+                    logits
+                }
+            })
+            .collect())
+    })
+}
+
+/// Serve `n` queries and return how many answered with the ground truth.
+fn serve_batch(svc: &FrugalService, start: i32, n: i32) -> usize {
+    let mut right = 0;
+    for j in start..start + n {
+        let ans = svc.answer(&query_row(j)).expect("answer");
+        right += (ans.answer == truth_of(j)) as usize;
+    }
+    right
+}
+
+/// Wait for the shadow worker to drain into the observation window.
+fn wait_for_window(svc: &FrugalService, at_least: usize) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.metrics.window.len() < at_least && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        svc.metrics.window.len() >= at_least,
+        "shadow never filled the window: len {} < {at_least}, stats {:?}",
+        svc.metrics.window.len(),
+        svc.shadow_stats()
+    );
+}
+
+/// `serve --shadow-rate 1.0` equivalent, hermetically: the service learns
+/// a drift from its own sampled traffic and swaps to a plan that routes
+/// around the degraded cheap model.
+#[test]
+fn shadow_fed_reoptimizer_swaps_under_drift_with_zero_offline_labels() {
+    let drift = Arc::new(AtomicBool::new(false));
+    let costs = sim_costs();
+    let engine = sim_engine(drift.clone());
+    let cfg = ServiceConfig {
+        cache_enabled: false, // every query must exercise the cascade
+        window_capacity: 128,
+        window_half_life: Some(24.0),
+        shadow: Some(ShadowConfig {
+            rate: 1.0,
+            reference: Some(2),
+            queue_capacity: 1024,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let svc = Arc::new(
+        FrugalService::new(CascadePlan::single(0), engine, costs, sim_meta(), cfg).unwrap(),
+    );
+    let reopt = Reoptimizer::new(
+        svc.clone(),
+        ReoptimizerConfig {
+            min_window: 48,
+            hysteresis: 0.05,
+            optimizer: OptimizerOptions { grid: 8, threads: Some(1), ..Default::default() },
+            ..Default::default()
+        },
+    );
+
+    // Phase 1: healthy traffic. The cheap served plan is (pseudo-)optimal
+    // — shadow rows show api_0 agreeing with the reference — so the
+    // re-learn must keep it.
+    let right = serve_batch(&svc, 0, 96);
+    assert_eq!(right, 96, "api_0 answers the truth before the drift");
+    wait_for_window(&svc, 48);
+    match reopt.step().unwrap() {
+        ReoptOutcome::Kept { .. } => {}
+        other => panic!("healthy traffic must keep the cheap plan, got {other:?}"),
+    }
+    assert_eq!(svc.plan_version(), 0);
+
+    // Phase 2: the cheap model degrades. Nothing tells the service except
+    // its own shadow samples: keep serving, let the window turn over, and
+    // step the reoptimizer until it publishes a better plan.
+    drift.store(true, Ordering::Relaxed);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut j = 1_000;
+    let mut swapped = false;
+    while Instant::now() < deadline {
+        serve_batch(&svc, j, 16);
+        j += 16;
+        std::thread::sleep(Duration::from_millis(10)); // let shadow drain
+        match reopt.step().unwrap() {
+            ReoptOutcome::Swapped { version, window_accuracy, .. } => {
+                assert!(version >= 1);
+                assert!(
+                    window_accuracy > 0.9,
+                    "new plan must be near-perfect on the shadow window"
+                );
+                swapped = true;
+                break;
+            }
+            ReoptOutcome::Kept { .. } | ReoptOutcome::WindowTooSmall { .. } => {}
+        }
+    }
+    let shadow = svc.shadow_stats().expect("shadow is on");
+    assert!(
+        swapped,
+        "reoptimizer never swapped under drift; shadow stats {shadow:?}, window {}",
+        svc.metrics.window.len()
+    );
+    let plan = svc.plan();
+    assert_eq!(
+        plan.stages.last().unwrap().model,
+        2,
+        "swapped plan must end at the still-correct reference model: {plan:?}"
+    );
+
+    // The swap is visible in served traffic: answers are right again.
+    let right = serve_batch(&svc, 50_000, 32);
+    assert_eq!(right, 32, "post-swap traffic routes around the degraded model");
+
+    // Accounting: the loop ran on sampled traffic alone, and paid for it.
+    assert!(shadow.sampled > 0);
+    assert!(shadow.completed > 0);
+    assert!(shadow.spend_usd > 0.0, "shadow execution is metered");
+    assert!(
+        svc.swap_history().iter().all(|ev| ev.reason.contains("window")),
+        "swaps were justified by window metrics"
+    );
+}

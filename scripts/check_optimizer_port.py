@@ -10,20 +10,30 @@ cascade search (joint (L, tau) optimization over the response table):
   * ``FlatOptimizer`` — the PR-1 algorithm: precomputed disagreement
     matrix + per-model aggregates, incremental tau_a walk with a
     doubly-linked "escalated items in score_b order" list, raw-tuple local
-    Pareto pruning.
+    Pareto pruning. Since PR 3 it also ports the *weighted* search
+    (``weights=`` — decay-weighted serving windows): weight-scaled cost and
+    correctness arenas, weighted disagreement, and f64 accumulator updates
+    with the identical incremental structure.
   * ``reference_frontier`` — naive brute force: enumerate every candidate
     (plan, thresholds) combination and score each one with an independent
-    replay; the ground truth both optimizers must reproduce.
+    (weighted) replay; the ground truth both optimizers must reproduce.
 
-Running it (``python3 scripts/check_optimizer_port.py``):
+Running it (``python3 scripts/check_optimizer_port.py [--quick]``):
 
   1. proves SeedOptimizer == FlatOptimizer == reference on a batch of
      random tables (the same property rust/tests/properties.rs asserts
-     in-tree), and
-  2. measures the seed-vs-flat single-thread speedup — wall clock at a
+     in-tree),
+  2. proves the weighted search is sound: uniform power-of-two weights
+     reproduce the unweighted frontier BIT-FOR-BIT (plans included), and
+     under random non-uniform weights the flat frontier's metrics
+     replay-match and its budget queries agree with the brute-force
+     reference (tolerance 1e-9 — summation order differs), and
+  3. measures the seed-vs-flat single-thread speedup — wall clock at a
      reduced workload plus an exact inner-loop-operation model at the
      benches/optimizer.rs workload (K=12, N=8000, grid=24) — feeding the
-     numbers recorded in BENCH_optimizer.json.
+     numbers recorded in BENCH_optimizer.json. (``--quick``, used by CI,
+     skips the slow wall-clock measurement but keeps every correctness
+     gate.)
 
 It exists because correctness of the Rust rewrite must be checkable even
 where no Rust toolchain is installed; keep it in sync with
@@ -32,6 +42,7 @@ rust/src/coordinator/optimizer.rs when the algorithm changes.
 
 import bisect
 import json
+import sys
 import time
 
 MASK = (1 << 64) - 1
@@ -134,19 +145,28 @@ def call_cost(m, input_tokens, answer):
     return inp * input_tokens / 1e7 + out * out_tokens / 1e7 + req
 
 
-def replay(plan, table, toks):
-    """Port of cascade::replay::replay — ground-truth plan metrics."""
+def replay(plan, table, toks, weights=None):
+    """Port of cascade::replay::replay — ground-truth (weighted) plan
+    metrics: acc = sum(w_i * correct_i) / W, cost = sum(w_i * cost_i) / W,
+    accumulated per item exactly like the rust replay."""
     n = table["n"]
-    n_correct = 0
+    w_correct = 0.0
     total_cost = 0.0
+    total_w = 0.0
     last = len(plan) - 1
     for i in range(n):
+        w = 1.0 if weights is None else weights[i]
+        total_w += w
+        item_cost = 0.0
         for s, (m, tau) in enumerate(plan):
-            total_cost += call_cost(m, toks[i], table["preds"][m][i])
+            item_cost += call_cost(m, toks[i], table["preds"][m][i])
             if s == last or table["scores"][m][i] > tau:
-                n_correct += table["correct"][m][i]
+                if table["correct"][m][i]:
+                    w_correct += w
                 break
-    return n_correct / n, total_cost / n
+        total_cost += w * item_cost
+    denom = float(n) if weights is None else total_w
+    return w_correct / denom, total_cost / denom
 
 
 def prev_midpoint(hi, lo):
@@ -354,25 +374,55 @@ class SeedOptimizer:
 
 
 class FlatOptimizer:
-    """The PR-1 search: precomputed aggregates + incremental triple sweep."""
+    """The PR-1 search: precomputed aggregates + incremental triple sweep.
+    With ``weights`` it is the PR-3 *weighted* search (a line-for-line port
+    of the rust Workspace §Weights layout): per-item costs are
+    weight-scaled, correctness becomes a weighted arena (w_i where correct,
+    else 0.0), disagreement and every mean divide by sum(w), and the sweep
+    accumulators add/subtract the scaled entries in the same order."""
 
-    def __init__(self, table, toks, grid=24, max_len=3, min_disagreement=0.02):
+    def __init__(self, table, toks, grid=24, max_len=3, min_disagreement=0.02,
+                 weights=None):
         self.t = table
         self.toks = toks
         self.grid = grid
         self.max_len = max_len
         self.eps = min_disagreement
         n, k = table["n"], table["k"]
+        if weights is None:
+            self.total_weight = float(n)
+        else:
+            assert len(weights) == n
+            total = 0.0
+            for w in weights:
+                assert w > 0.0
+                total += w
+            self.total_weight = total
         self.cost = []
         self.total_cost = []
         self.order = []
         self.quantiles = []
-        self.n_correct = []
+        self.wcorr = []
+        self.total_corr = []
         for m in range(k):
             OPS["n"] += n
-            row = [call_cost(m, toks[i], table["preds"][m][i]) for i in range(n)]
+            row = []
+            wc_row = []
+            total = 0.0
+            tcorr = 0.0
+            corr = table["correct"][m]
+            for i in range(n):
+                w = 1.0 if weights is None else weights[i]
+                c = call_cost(m, toks[i], table["preds"][m][i]) * w
+                row.append(c)
+                total += c
+                wc = w if corr[i] else 0.0
+                wc_row.append(wc)
+                tcorr += wc
             self.cost.append(row)
-            self.total_cost.append(sum(row))
+            self.total_cost.append(total)
+            self.wcorr.append(wc_row)
+            self.total_corr.append(tcorr)
             sc = table["scores"][m]
             idx = sorted(range(n), key=lambda i: -sc[i])
             qs = []
@@ -382,21 +432,27 @@ class FlatOptimizer:
             dq = [q for j, q in enumerate(qs) if j == 0 or q != qs[j - 1]]
             self.order.append(idx)
             self.quantiles.append(dq)
-            self.n_correct.append(sum(table["correct"][m]))
         self.disagree = [[0.0] * k for _ in range(k)]
         for a in range(k):
             for b in range(a + 1, k):
                 OPS["n"] += n
                 pa, pb = table["preds"][a], table["preds"][b]
-                d = sum(pa[i] != pb[i] for i in range(n)) / max(n, 1)
-                self.disagree[a][b] = d
-                self.disagree[b][a] = d
+                if weights is None:
+                    d = float(sum(pa[i] != pb[i] for i in range(n)))
+                else:
+                    d = 0.0
+                    for i in range(n):
+                        if pa[i] != pb[i]:
+                            d += weights[i]
+                frac = d / self.total_weight
+                self.disagree[a][b] = frac
+                self.disagree[b][a] = frac
 
     def model_cost(self, m):
-        return self.total_cost[m] / max(self.t["n"], 1)
+        return self.total_cost[m] / self.total_weight
 
     def accuracy(self, m):
-        return self.n_correct[m] / max(self.t["n"], 1)
+        return self.total_corr[m] / self.total_weight
 
     def candidate_lists(self):
         k = self.t["k"]
@@ -429,13 +485,13 @@ class FlatOptimizer:
         n = t["n"]
         order = self.order[a]
         scores = t["scores"][a]
-        corr_a, corr_b = t["correct"][a], t["correct"][b]
+        wcorr_a, wcorr_b = self.wcorr[a], self.wcorr[b]
         cost_b = self.cost[b]
         total_cost_a = self.total_cost[a]
-        acc_corr_a = 0
-        acc_corr_b = self.n_correct[b]
+        acc_corr_a = 0.0
+        acc_corr_b = self.total_corr[b]
         esc_cost_b = self.total_cost[b]
-        inv_n = 1.0 / n
+        inv_n = 1.0 / self.total_weight
         raw = []
         prev = float("inf")
         OPS["n"] += n
@@ -449,8 +505,8 @@ class FlatOptimizer:
                         (total_cost_a + esc_cost_b) * inv_n,
                     )
                 )
-            acc_corr_a += corr_a[i]
-            acc_corr_b -= corr_b[i]
+            acc_corr_a += wcorr_a[i]
+            acc_corr_b -= wcorr_b[i]
             esc_cost_b -= cost_b[i]
             prev = s
         raw.append((-1.0, acc_corr_a * inv_n, total_cost_a * inv_n))
@@ -464,7 +520,7 @@ class FlatOptimizer:
         n = t["n"]
         sent = n
         scores_a, scores_b = t["scores"][a], t["scores"][b]
-        corr_a, corr_b, corr_c = t["correct"][a], t["correct"][b], t["correct"][c]
+        wcorr_a, wcorr_b, wcorr_c = self.wcorr[a], self.wcorr[b], self.wcorr[c]
         cost_b, cost_c = self.cost[b], self.cost[c]
         order_a, order_b = self.order[a], self.order[b]
 
@@ -477,13 +533,13 @@ class FlatOptimizer:
         prv = [sent] + list(range(n))
 
         base_cost = self.total_cost[a]
-        acc_corr_a = 0
+        acc_corr_a = 0.0
         n_esc = n
         esc_cost_b = self.total_cost[b]
-        esc_corr_c = self.n_correct[c]
+        esc_corr_c = self.total_corr[c]
         esc_cost_c = self.total_cost[c]
 
-        inv_n = 1.0 / n
+        inv_n = 1.0 / self.total_weight
         accepted = 0
         for tau_a in self.quantiles[a]:
             while accepted < n:
@@ -491,9 +547,9 @@ class FlatOptimizer:
                 if scores_a[i] <= tau_a:
                     break
                 OPS["n"] += 1
-                acc_corr_a += corr_a[i]
+                acc_corr_a += wcorr_a[i]
                 esc_cost_b -= cost_b[i]
-                esc_corr_c -= corr_c[i]
+                esc_corr_c -= wcorr_c[i]
                 esc_cost_c -= cost_c[i]
                 r = rank[i]
                 p, nx = prv[r], nxt[r]
@@ -505,7 +561,7 @@ class FlatOptimizer:
                 break
 
             raw = []
-            corr_b_acc = 0
+            corr_b_acc = 0.0
             rem_corr_c = esc_corr_c
             rem_cost_c = esc_cost_c
             prev = float("inf")
@@ -522,8 +578,8 @@ class FlatOptimizer:
                             (base_cost + esc_cost_b + rem_cost_c) * inv_n,
                         )
                     )
-                corr_b_acc += corr_b[i]
-                rem_corr_c -= corr_c[i]
+                corr_b_acc += wcorr_b[i]
+                rem_corr_c -= wcorr_c[i]
                 rem_cost_c -= cost_c[i]
                 prev = s
                 r = nxt[r]
@@ -564,22 +620,29 @@ def prune_pareto_raw(raw):
     return out
 
 
-def reference_frontier(table, toks, grid=24, max_len=3, min_disagreement=0.02):
+def reference_frontier(table, toks, grid=24, max_len=3, min_disagreement=0.02,
+                       weights=None):
     """Brute force: enumerate candidate (plan, tau) combos independently of
-    either optimizer and score each with replay()."""
+    either optimizer and score each with (weighted) replay()."""
     n, k = table["n"], table["k"]
+
+    def wt(i):
+        return 1.0 if weights is None else weights[i]
+
+    total_w = float(n) if weights is None else sum(weights)
 
     def disagreement(a, b):
         pa, pb = table["preds"][a], table["preds"][b]
-        return sum(pa[i] != pb[i] for i in range(n)) / max(n, 1)
+        return sum(wt(i) for i in range(n) if pa[i] != pb[i]) / total_w
 
     def model_cost(m):
-        return sum(call_cost(m, toks[i], table["preds"][m][i]) for i in range(n)) / max(
-            n, 1
+        return (
+            sum(wt(i) * call_cost(m, toks[i], table["preds"][m][i]) for i in range(n))
+            / total_w
         )
 
     def accuracy(m):
-        return sum(table["correct"][m]) / max(n, 1)
+        return sum(wt(i) for i in range(n) if table["correct"][m][i]) / total_w
 
     def cut_taus(scores, items):
         """Thresholds the exact sweeps can emit over `items`: one above the
@@ -628,7 +691,7 @@ def reference_frontier(table, toks, grid=24, max_len=3, min_disagreement=0.02):
                         plans.append(((a, tau_a), (b, tau_b), (c, 0.0)))
     pts = []
     for plan in plans:
-        acc, cost = replay(plan, table, toks)
+        acc, cost = replay(plan, table, toks, weights=weights)
         pts.append((plan, acc, cost))
     return prune_pareto(pts)
 
@@ -646,8 +709,88 @@ def frontiers_match(fa, fb, tol=1e-12, plans_too=False):
     return True, ""
 
 
+def best_within(frontier, budget_per_query):
+    """Port of optimizer::best_within (per-query budget form)."""
+    fits = [p for p in frontier if p[2] <= budget_per_query + 1e-15]
+    if not fits:
+        return None
+    return max(fits, key=lambda p: (p[1], -p[2]))
+
+
+def check_weighted(cases=10):
+    """PR-3 weighted-search gates:
+    (a) uniform power-of-two weights reproduce the unweighted frontier
+        bit-for-bit, plans included (the rust property test's claim);
+    (b) under random non-uniform weights every flat frontier point
+        replay-matches to 1e-9 (summation order is the only difference),
+        the frontier is sorted/strictly-improving, and
+    (c) budget queries against the weighted brute-force reference agree
+        to 1e-9 (exact frontier-set comparison would be brittle at Pareto
+        near-ties, so equivalence is checked at the query interface the
+        serving stack actually uses)."""
+    print(f"[2/4] weighted search on {cases} random tables ...")
+    rng = Rng(0xBEEF)
+    for case in range(cases):
+        k = 3 + rng.below(3)
+        n = 30 + rng.below(170)
+        classes = 2 + rng.below(4)
+        grid = 4 + rng.below(4)
+        table = synthetic_table(k, n, classes, 0.5 + 0.5 * rng.f64(), rng.next_u64())
+        toks = [40 + rng.below(100)] * n
+
+        # (a) uniform power-of-two weights: bit-for-bit identical.
+        f_plain = FlatOptimizer(table, toks, grid=grid).frontier()
+        for u in (1.0, 0.5, 2.0):
+            f_u = FlatOptimizer(table, toks, grid=grid, weights=[u] * n).frontier()
+            assert len(f_u) == len(f_plain), (
+                f"case {case} w={u}: {len(f_u)} pts vs {len(f_plain)}"
+            )
+            for j, (p, q) in enumerate(zip(f_plain, f_u)):
+                assert p[0] == q[0], f"case {case} w={u} pt {j}: plan {p[0]} vs {q[0]}"
+                assert p[1] == q[1], f"case {case} w={u} pt {j}: acc {p[1]} vs {q[1]}"
+                assert p[2] == q[2], f"case {case} w={u} pt {j}: cost {p[2]} vs {q[2]}"
+
+        # (b) non-uniform weights: internal consistency via weighted replay.
+        weights = [0.25 + 3.75 * rng.f64() for _ in range(n)]
+        f_w = FlatOptimizer(table, toks, grid=grid, weights=weights).frontier()
+        assert f_w, "weighted frontier must not be empty"
+        for j in range(1, len(f_w)):
+            assert f_w[j - 1][2] <= f_w[j][2] and f_w[j - 1][1] < f_w[j][1]
+        for plan, acc, cost in f_w:
+            racc, rcost = replay(plan, table, toks, weights=weights)
+            assert abs(racc - acc) < 1e-9 and abs(rcost - cost) < 1e-9, (
+                f"case {case}: weighted plan {plan} reports ({acc}, {cost}) "
+                f"but replays to ({racc}, {rcost})"
+            )
+
+        # (c) budget-query equivalence against the weighted brute force.
+        f_ref = reference_frontier(table, toks, grid=grid, weights=weights)
+        assert abs(f_w[-1][1] - f_ref[-1][1]) < 1e-9, (
+            f"case {case}: top weighted accuracy {f_w[-1][1]} vs reference "
+            f"{f_ref[-1][1]}"
+        )
+        lo = min(f_ref[0][2], f_w[0][2])
+        hi = max(f_ref[-1][2], f_w[-1][2])
+        for frac in (0.0, 0.1, 0.3, 0.6, 1.0):
+            budget = lo + frac * (hi - lo)
+            got = best_within(f_w, budget)
+            want = best_within(f_ref, budget)
+            assert (got is None) == (want is None), (
+                f"case {case} budget {budget}: feasibility disagrees"
+            )
+            if got is not None:
+                assert abs(got[1] - want[1]) < 1e-9, (
+                    f"case {case} budget {budget}: acc {got[1]} vs {want[1]}"
+                )
+        print(
+            f"  case {case:2d}: k={k} n={n:3d} grid={grid} "
+            f"weighted={len(f_w):2d} pts ... uniform-bitwise + replay + budget OK"
+        )
+    print("  weighted search PASSED")
+
+
 def check_equivalence(cases=25):
-    print(f"[1/3] equivalence on {cases} random tables ...")
+    print(f"[1/4] equivalence on {cases} random tables ...")
     rng = Rng(0xF00D)
     for case in range(cases):
         k = 3 + rng.below(3)
@@ -685,7 +828,7 @@ def check_equivalence(cases=25):
 
 
 def measure_wall(k=12, n=1200, grid=24, seed=99):
-    print(f"[2/3] wall-clock at reduced workload (K={k}, N={n}, grid={grid}) ...")
+    print(f"[3/4] wall-clock at reduced workload (K={k}, N={n}, grid={grid}) ...")
     table = synthetic_table(k, n, 4, 0.9, seed)
     toks = [45] * n
     t0 = time.perf_counter()
@@ -708,7 +851,7 @@ def count_ops(k=12, n=8000, grid=24, seed=99):
     benches/optimizer.rs workload, without running the seed sweep (the
     counts follow from the candidate structure + per-grid escalation
     sizes, which bisecting each model's sorted scores gives directly)."""
-    print(f"[3/3] op-count model at bench workload (K={k}, N={n}, grid={grid}) ...")
+    print(f"[4/4] op-count model at bench workload (K={k}, N={n}, grid={grid}) ...")
     table = synthetic_table(k, n, 4, 0.9, seed)
     toks = [45] * n
     flat = FlatOptimizer(table, toks, grid=grid)
@@ -793,7 +936,26 @@ def count_ops(k=12, n=8000, grid=24, seed=99):
 
 
 if __name__ == "__main__":
+    quick = "--quick" in sys.argv[1:]
     check_equivalence()
+    check_weighted()
+    if quick:
+        # CI mode: every correctness gate above ran; skip only the slow
+        # seed-vs-flat wall-clock measurement (minutes of pure python).
+        ops_seed, ops_flat, n_lists, n_pairs, n_triples = count_ops()
+        print(
+            json.dumps(
+                {
+                    "mode": "quick (wall-clock measurement skipped)",
+                    "ops_full_workload": {"seed": ops_seed, "flat": ops_flat,
+                                          "speedup": round(ops_seed / ops_flat, 2)},
+                    "lists": {"total": n_lists, "pairs": n_pairs,
+                              "triples": n_triples},
+                },
+                indent=2,
+            )
+        )
+        sys.exit(0)
     t_seed, t_flat = measure_wall()
     ops_seed, ops_flat, n_lists, n_pairs, n_triples = count_ops()
     print(

@@ -1,29 +1,41 @@
 #!/usr/bin/env bash
-# CI entry point: the tier-1 gate (release build + tests + clippy -D
-# warnings when available) followed by a bench smoke on a tiny grid, so
-# no PR can ship rust that does not compile, pass tests, or run the
-# optimizer sweep end-to-end (PR 1 shipped uncompiled — never again).
+# CI entry point: the optimizer-parity harness, the tier-1 gate (release
+# build + tests + clippy -D warnings when available) and a bench smoke on
+# a tiny grid — so no PR can ship rust that does not compile, pass tests,
+# run the sweep end-to-end, or silently drift from the python reference
+# algorithm (PR 1 shipped uncompiled — never again).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# python3 is REQUIRED: the parity harness is the only executable spec of
+# the optimizer algorithms (weighted included), and skipping it would let
+# the rust and its reference drift apart unnoticed.
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "error: python3 is required for scripts/check_optimizer_port.py" >&2
+    echo "       (the optimizer-parity gate must not be skipped)" >&2
+    exit 1
+fi
+
+# Optimizer parity: seed == flat == brute-force reference, weighted search
+# uniform-bitwise + replay-consistent + budget-query-equivalent. --quick
+# skips only the slow pure-python wall-clock measurement.
+python3 scripts/check_optimizer_port.py --quick
 
 scripts/tier1.sh
 
 # Bench smoke: exercises the full frontier sweep + the JSON suite writer
 # on a small synthetic table. Writes to a scratch path — the committed
-# BENCH_optimizer.json trajectory is only ever refreshed by a deliberate
-# `make bench-optimizer` on a benchmarking host.
+# BENCH_optimizer.json trajectory is only ever refreshed by the nightly
+# bench workflow (or a deliberate `make bench-optimizer` on a
+# benchmarking host).
 SMOKE_JSON="$(mktemp -t bench_smoke_XXXXXX.json)"
 trap 'rm -f "$SMOKE_JSON"' EXIT
 cargo bench --bench optimizer -- --smoke --json "$SMOKE_JSON"
-if command -v python3 >/dev/null 2>&1; then
-    python3 - "$SMOKE_JSON" <<'EOF'
+python3 - "$SMOKE_JSON" <<'EOF'
 import json, sys
 doc = json.load(open(sys.argv[1]))
 assert doc["suite"] == "optimizer" and doc["results"], "smoke bench wrote no results"
 print(f"bench smoke OK: {len(doc['results'])} results")
 EOF
-else
-    echo "NOTE: python3 not installed; skipping smoke JSON validation" >&2
-fi
 
 echo "ci.sh: all gates passed"
