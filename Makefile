@@ -1,6 +1,12 @@
 # Convenience targets. Tier-1 gate = `make tier1` (ROADMAP.md).
 
-.PHONY: tier1 ci test bench bench-optimizer port-check
+.PHONY: tier1 ci test bench bench-optimizer port-check doc
+
+# API docs (rustdoc). The crate sets #![warn(missing_docs)] and tier1's
+# clippy -D warnings promotes that to an error, so public items cannot
+# ship undocumented. CI uploads target/doc as a per-PR artifact.
+doc:
+	cargo doc --no-deps
 
 tier1:
 	scripts/tier1.sh

@@ -20,10 +20,20 @@ fn main() {
     let args = Args::from_env();
     // `--smoke` (CI): a tiny grid that exercises the full sweep + JSON
     // pipeline in seconds instead of the committed-trajectory workload.
+    // Smoke MUST still emit one schema-valid result per variant —
+    // scripts/ci.sh hard-fails on an empty or malformed results array.
     let smoke = args.has("smoke");
     let (k, n, iters) = if smoke { (6, 600, 1) } else { (K, N, 5) };
     // Synthetic K-API table at the HEADLINES train-split size (full mode).
     let table = synthetic_table(k, n, 4, 0.9, SEED);
+    // The same table carrying explicit uniform weights: forces the f64
+    // wcorr-arena path (the frontier is bit-identical — property-tested),
+    // so `full_m3_grid24_t1` vs `full_m3_grid24_wcorr_t1` is exactly the
+    // packed-bitset-vs-byte-arena delta on real hardware.
+    let wtable = table
+        .clone()
+        .with_weights(vec![1.0; table.len()])
+        .expect("uniform weights are valid");
     let full = CostModel::from_table1("bench", vec![1, 1, 2, 1]);
     let costs =
         if k == full.n_models() { full } else { full.truncated(table.model_names.clone()) };
@@ -32,16 +42,18 @@ fn main() {
 
     // The headline number runs both single-threaded (algorithmic gain
     // only) and with all cores (the shipping configuration).
-    for (name, grid, max_len, sub, threads) in [
-        ("optimizer/full_m3_grid24", 24, 3, None, None),
-        ("optimizer/full_m3_grid24_t1", 24, 3, None, Some(1)),
-        ("optimizer/full_m3_grid8", 8, 3, None, None),
-        ("optimizer/coarse2000_m3_grid24", 24, 3, Some(2000), None),
-        ("optimizer/pairs_only_m2", 24, 2, None, None),
+    for (name, grid, max_len, sub, threads, wcorr_arena) in [
+        ("optimizer/full_m3_grid24", 24, 3, None, None, false),
+        ("optimizer/full_m3_grid24_t1", 24, 3, None, Some(1), false),
+        ("optimizer/full_m3_grid24_wcorr_t1", 24, 3, None, Some(1), true),
+        ("optimizer/full_m3_grid8", 8, 3, None, None, false),
+        ("optimizer/coarse2000_m3_grid24", 24, 3, Some(2000), None, false),
+        ("optimizer/pairs_only_m2", 24, 2, None, None, false),
     ] {
+        let bench_table = if wcorr_arena { &wtable } else { &table };
         let r = bench_n(name, if smoke { 0 } else { 1 }, iters, || {
             let opt = CascadeOptimizer::new(
-                &table,
+                bench_table,
                 &costs,
                 tokens.clone(),
                 OptimizerOptions {
@@ -109,6 +121,7 @@ fn main() {
                 ("mode", if smoke { "smoke (CI grid — NOT the committed trajectory workload)" } else { "full" }.to_string()),
                 ("grid", "24 for the headline result; variants in result names".to_string()),
                 ("max_len", "3 (pairs_only_m2 sweeps max_len=2)".to_string()),
+                ("packed_vs_byte", "full_m3_grid24_t1 (packed u64 bitset fast path) vs full_m3_grid24_wcorr_t1 (f64 wcorr arena forced via uniform weight 1.0; bit-identical frontier) isolates the correctness-store delta".to_string()),
                 ("table_seed", SEED.to_string()),
                 ("host_threads", threads.to_string()),
                 ("regenerate", "make bench-optimizer (rewrites meta/results, preserves history)".to_string()),

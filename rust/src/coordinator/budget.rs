@@ -29,6 +29,7 @@ pub enum Admission {
 }
 
 impl BudgetTracker {
+    /// A tracker with an optional hard spend cap (USD).
     pub fn new(cap_usd: Option<f64>) -> Self {
         BudgetTracker {
             spent_nano_usd: AtomicU64::new(0),
@@ -55,14 +56,17 @@ impl BudgetTracker {
         }
     }
 
+    /// Total metered spend so far (USD).
     pub fn spent_usd(&self) -> f64 {
         self.spent_nano_usd.load(Ordering::Relaxed) as f64 / 1e9
     }
 
+    /// Queries recorded so far.
     pub fn queries(&self) -> u64 {
         self.queries.load(Ordering::Relaxed)
     }
 
+    /// Mean spend per recorded query (0.0 before the first record).
     pub fn avg_cost_usd(&self) -> f64 {
         let q = self.queries();
         if q == 0 {

@@ -25,7 +25,9 @@ use crate::util::json::Value;
 /// The threshold of the last stage is ignored (it always answers).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Stage {
+    /// Marketplace index of the API this stage invokes.
     pub model: usize,
+    /// Acceptance threshold on the reliability score g(q, a).
     pub threshold: f32,
 }
 
@@ -39,6 +41,7 @@ impl Stage {
         Value::Obj(m)
     }
 
+    /// Parse a stage serialized by [`Stage::to_value`].
     pub fn from_value(v: &Value) -> Result<Stage> {
         let model = v.get("model").as_usize().context("stage missing `model`")?;
         let threshold =
@@ -47,25 +50,147 @@ impl Stage {
     }
 }
 
+/// Inline capacity of [`StageVec`]: one more than the paper's cascade
+/// length 3, so every plan the optimizer can emit lives on the stack.
+const STAGE_INLINE: usize = 4;
+
+/// Padding value for unused inline slots (never observable through the
+/// slice view).
+const PAD_STAGE: Stage = Stage { model: 0, threshold: 0.0 };
+
+/// Small-vec stage storage for [`CascadePlan`]: up to `STAGE_INLINE` (4)
+/// stages inline (zero heap allocations — §Perf: the frontier sweeps
+/// construct a plan for every surviving Pareto point, and with inline
+/// storage those survivors stop allocating per list), spilling to a `Vec`
+/// only for longer plans (reachable via deserialization). Dereferences to
+/// `&[Stage]`, so all slice-style reads (`iter`, indexing, `last`, `len`)
+/// work unchanged.
+#[derive(Clone)]
+pub struct StageVec {
+    /// Stages used in `inline` (meaningful only when `spill` is empty).
+    len: u8,
+    inline: [Stage; STAGE_INLINE],
+    /// Non-empty iff the plan has more than [`STAGE_INLINE`] stages; then
+    /// it holds *all* stages and `inline` is ignored.
+    spill: Vec<Stage>,
+}
+
+impl StageVec {
+    /// Build from a slice: inline when it fits, heap spill otherwise.
+    pub fn from_slice(stages: &[Stage]) -> StageVec {
+        if stages.len() <= STAGE_INLINE {
+            let mut inline = [PAD_STAGE; STAGE_INLINE];
+            inline[..stages.len()].copy_from_slice(stages);
+            StageVec { len: stages.len() as u8, inline, spill: Vec::new() }
+        } else {
+            StageVec { len: 0, inline: [PAD_STAGE; STAGE_INLINE], spill: stages.to_vec() }
+        }
+    }
+
+    /// The stages as a slice (the only read path; hides the inline/spill
+    /// split).
+    #[inline]
+    pub fn as_slice(&self) -> &[Stage] {
+        if self.spill.is_empty() {
+            &self.inline[..self.len as usize]
+        } else {
+            &self.spill
+        }
+    }
+}
+
+impl std::ops::Deref for StageVec {
+    type Target = [Stage];
+    #[inline]
+    fn deref(&self) -> &[Stage] {
+        self.as_slice()
+    }
+}
+
+impl PartialEq for StageVec {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for StageVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}", self.as_slice())
+    }
+}
+
+impl From<Vec<Stage>> for StageVec {
+    fn from(stages: Vec<Stage>) -> StageVec {
+        StageVec::from_slice(&stages)
+    }
+}
+
+impl FromIterator<Stage> for StageVec {
+    fn from_iter<I: IntoIterator<Item = Stage>>(iter: I) -> StageVec {
+        StageVec::from_slice(&iter.into_iter().collect::<Vec<_>>())
+    }
+}
+
+impl<'a> IntoIterator for &'a StageVec {
+    type Item = &'a Stage;
+    type IntoIter = std::slice::Iter<'a, Stage>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
 /// A learned cascade configuration `(L, τ)`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CascadePlan {
-    pub stages: Vec<Stage>,
+    /// The ordered stages; executes front to back, last stage always
+    /// answers.
+    pub stages: StageVec,
 }
 
 impl CascadePlan {
+    /// Plan from an explicit stage list (converted to inline storage when
+    /// it fits; the dedicated [`CascadePlan::single`] /
+    /// [`CascadePlan::pair`] / [`CascadePlan::triple`] constructors never
+    /// touch the heap at all).
     pub fn new(stages: Vec<Stage>) -> Self {
-        CascadePlan { stages }
+        CascadePlan { stages: StageVec::from(stages) }
     }
 
+    /// The one-stage plan `[model]`.
     pub fn single(model: usize) -> Self {
-        CascadePlan { stages: vec![Stage { model, threshold: 0.0 }] }
+        CascadePlan {
+            stages: StageVec::from_slice(&[Stage { model, threshold: 0.0 }]),
+        }
     }
 
+    /// The two-stage plan `[a(τ) → b]` (allocation-free).
+    pub fn pair(a: usize, tau: f32, b: usize) -> Self {
+        CascadePlan {
+            stages: StageVec::from_slice(&[
+                Stage { model: a, threshold: tau },
+                Stage { model: b, threshold: 0.0 },
+            ]),
+        }
+    }
+
+    /// The three-stage plan `[a(τ_a) → b(τ_b) → c]` (allocation-free).
+    pub fn triple(a: usize, tau_a: f32, b: usize, tau_b: f32, c: usize) -> Self {
+        CascadePlan {
+            stages: StageVec::from_slice(&[
+                Stage { model: a, threshold: tau_a },
+                Stage { model: b, threshold: tau_b },
+                Stage { model: c, threshold: 0.0 },
+            ]),
+        }
+    }
+
+    /// Number of stages.
     pub fn len(&self) -> usize {
         self.stages.len()
     }
 
+    /// Whether the plan has no stages (constructors uphold non-emptiness;
+    /// only a hand-built plan can be empty).
     pub fn is_empty(&self) -> bool {
         self.stages.is_empty()
     }
@@ -93,7 +218,7 @@ impl CascadePlan {
         if stages.is_empty() {
             bail!("serialized cascade plan has no stages");
         }
-        Ok(CascadePlan { stages })
+        Ok(CascadePlan::new(stages))
     }
 
     /// Human-readable form, e.g. `gpt_j(τ=0.96) → j1_large(τ=0.37) → gpt4`.
@@ -118,7 +243,9 @@ pub mod replay {
     /// Outcome of replaying one item through the cascade.
     #[derive(Debug, Clone, Copy)]
     pub struct ItemOutcome {
+        /// The accepted answer class.
         pub answer: u32,
+        /// Whether the accepted answer matches the item's label.
         pub correct: bool,
         /// Stage index that answered (0-based).
         pub stopped_at: usize,
@@ -133,7 +260,9 @@ pub mod replay {
     /// (they describe traffic routing, not the learning objective).
     #[derive(Debug, Clone)]
     pub struct ReplaySummary {
+        /// (Weighted) fraction of items answered correctly.
         pub accuracy: f64,
+        /// (Weighted) average USD per query.
         pub avg_cost: f64,
         /// Fraction of queries answered at each stage.
         pub stop_frac: Vec<f64>,
@@ -211,6 +340,7 @@ pub mod replay {
 /// Result of answering one live query.
 #[derive(Debug, Clone)]
 pub struct CascadeAnswer {
+    /// The accepted answer class.
     pub answer: u32,
     /// Stage that produced the accepted answer.
     pub stopped_at: usize,
@@ -239,6 +369,8 @@ pub struct Cascade {
 }
 
 impl Cascade {
+    /// Bind a plan to an engine + scorer + cost model (validates every
+    /// stage's model index against the marketplace).
     pub fn new(
         plan: CascadePlan,
         engine: EngineHandle,
@@ -258,18 +390,22 @@ impl Cascade {
         Ok(Cascade { plan, engine, scorer, costs, meta, dataset })
     }
 
+    /// The plan this cascade executes.
     pub fn plan(&self) -> &CascadePlan {
         &self.plan
     }
 
+    /// Dataset geometry of the queries this cascade answers.
     pub fn meta(&self) -> &DatasetMeta {
         &self.meta
     }
 
+    /// Handle to the engine actor the stages execute on.
     pub fn engine_handle(&self) -> EngineHandle {
         self.engine.clone()
     }
 
+    /// The cost model metering each stage invocation.
     pub fn costs(&self) -> &CostModel {
         &self.costs
     }
@@ -455,6 +591,46 @@ mod tests {
             let v = Value::parse(bad).unwrap();
             assert!(CascadePlan::from_value(&v).is_err(), "should reject {bad}");
         }
+    }
+
+    #[test]
+    fn stage_vec_inline_and_spill_behave_like_a_slice() {
+        let mk = |m: usize| Stage { model: m, threshold: m as f32 * 0.1 };
+        for n in [1usize, 2, 3, 4, 5, 7] {
+            let stages: Vec<Stage> = (0..n).map(mk).collect();
+            let sv = StageVec::from(stages.clone());
+            assert_eq!(sv.len(), n);
+            assert_eq!(&sv[..], &stages[..]);
+            assert_eq!(sv.last(), stages.last());
+            assert_eq!(sv.iter().count(), n);
+            assert_eq!((&sv).into_iter().count(), n);
+            // collected and converted forms agree
+            let collected: StageVec = stages.iter().copied().collect();
+            assert_eq!(collected, sv);
+            // plans longer than the inline capacity round-trip through
+            // JSON (the spill path)
+            let plan = CascadePlan::new(stages.clone());
+            let back =
+                CascadePlan::from_value(&Value::parse(&plan.to_value().to_json()).unwrap())
+                    .unwrap();
+            assert_eq!(back, plan);
+        }
+        // the dedicated constructors match the Vec-built equivalents
+        assert_eq!(
+            CascadePlan::pair(1, 0.5, 2),
+            CascadePlan::new(vec![
+                Stage { model: 1, threshold: 0.5 },
+                Stage { model: 2, threshold: 0.0 },
+            ])
+        );
+        assert_eq!(
+            CascadePlan::triple(0, 0.9, 1, 0.4, 2),
+            CascadePlan::new(vec![
+                Stage { model: 0, threshold: 0.9 },
+                Stage { model: 1, threshold: 0.4 },
+                Stage { model: 2, threshold: 0.0 },
+            ])
+        );
     }
 
     #[test]

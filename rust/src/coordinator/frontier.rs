@@ -28,6 +28,7 @@ pub const FORMAT: &str = "frugalgpt-frontier/v1";
 /// A persisted accuracy–cost frontier for one dataset.
 #[derive(Debug, Clone)]
 pub struct SavedFrontier {
+    /// Dataset the frontier was learned on.
     pub dataset: String,
     /// Marketplace model list the plans' stage indices refer to.
     pub model_names: Vec<String>,
@@ -37,6 +38,7 @@ pub struct SavedFrontier {
 }
 
 impl SavedFrontier {
+    /// Wrap learned points for persistence.
     pub fn new(
         dataset: impl Into<String>,
         model_names: Vec<String>,
@@ -50,6 +52,7 @@ impl SavedFrontier {
         artifacts_root.join("frontiers").join(format!("{dataset}.json"))
     }
 
+    /// JSON document form (format-tagged, see [`FORMAT`]).
     pub fn to_value(&self) -> Value {
         let mut m = std::collections::HashMap::new();
         m.insert("format".to_string(), Value::Str(FORMAT.to_string()));
@@ -65,6 +68,8 @@ impl SavedFrontier {
         Value::Obj(m)
     }
 
+    /// Parse + validate a document written by [`SavedFrontier::to_value`]
+    /// (format tag, stage indices in range).
     pub fn from_value(v: &Value) -> Result<SavedFrontier> {
         match v.get("format").as_str() {
             Some(FORMAT) => {}
@@ -101,10 +106,12 @@ impl SavedFrontier {
         Ok(SavedFrontier { dataset, model_names, points })
     }
 
+    /// Serialized document (bit-lossless floats).
     pub fn to_json(&self) -> String {
         self.to_value().to_json()
     }
 
+    /// Parse a serialized frontier document.
     pub fn from_json(raw: &str) -> Result<SavedFrontier> {
         Self::from_value(&Value::parse(raw).map_err(|e| anyhow!("{e}"))?)
     }
@@ -119,6 +126,7 @@ impl SavedFrontier {
             .with_context(|| format!("writing frontier {}", path.display()))
     }
 
+    /// Read + parse a frontier file.
     pub fn load(path: &Path) -> Result<SavedFrontier> {
         let raw = std::fs::read_to_string(path)
             .with_context(|| format!("reading frontier {}", path.display()))?;

@@ -30,6 +30,15 @@
 //!   orderings) plus the K×K disagreement matrix, per-model cost totals
 //!   and correct counts, all computed **once** — `candidate_lists` does no
 //!   O(N) work per pair/triple;
+//! * on the **unweighted fast path** correctness never materializes as
+//!   bytes or floats: the workspace reuses the table's *word-packed
+//!   bitset* (`responses.rs` §Bitset), per-model correct totals are row
+//!   popcounts, the K×K disagreement matrix is computed word-at-a-time
+//!   over *bit-sliced prediction planes* (one XOR/OR/popcount per 64
+//!   items per plane instead of 64 `u32` compares), and the sweep
+//!   accumulators are exact `u64` counts fed by single-bit reads — an
+//!   ~8x smaller working set than one byte per (model, item) and 64x
+//!   smaller than the weighted path's f64 arena;
 //! * the triple sweep is *incremental*: τ_a walks down the pre-sorted
 //!   `order[a]` while the escalated set, its cost/correct aggregates, and
 //!   a doubly-linked "escalated items in score_b order" list are updated
@@ -55,17 +64,25 @@
 //! per-item costs (`wᵢ·cᵢ`) and a weighted-correctness arena (`wᵢ` where
 //! correct, else 0), disagreement fractions and accuracies divide by
 //! `Σ wᵢ`, and the incremental sweeps add/subtract the scaled entries with
-//! the exact same update structure as the unweighted search. For an
-//! unweighted table the arithmetic degenerates to multiplications by 1.0
-//! and sums of exact small integers, so the frontier is bit-identical to
-//! the pre-weights implementation — and uniform power-of-two weights
-//! reproduce it bit-for-bit too (property-tested; scaling every term and
+//! the exact same update structure as the unweighted search.
+//!
+//! The two correctness representations live behind one dispatch
+//! (`CorrStore` selects the packed-`u64` fast path when weights are
+//! uniform-absent, the f64 `wcorr` arena otherwise) and the sweeps are
+//! generic over the `CorrRead` view, so both paths share the identical update
+//! structure. Bit-for-bit equivalence holds in both directions: the
+//! packed path's integer counts convert to the exact same f64 values the
+//! old per-item 1.0-sums produced (sums of small integers are exact in
+//! f64), and uniform power-of-two weights reproduce the packed frontier
+//! bit-for-bit too (property-tested in
+//! `rust/tests/properties.rs::prop_packed_bitset_matches_byte_arena` and
+//! executed in `scripts/check_optimizer_port.py`; scaling every term and
 //! the denominator by the same power of two commutes with every f64
 //! rounding step).
 
 use anyhow::{bail, Context, Result};
 
-use super::cascade::{replay, CascadePlan, Stage};
+use super::cascade::{replay, CascadePlan};
 use super::responses::SplitTable;
 use crate::marketplace::CostModel;
 use crate::util::json::Value;
@@ -110,6 +127,7 @@ impl Default for OptimizerOptions {
 /// One point of the accuracy–cost frontier.
 #[derive(Debug, Clone)]
 pub struct FrontierPoint {
+    /// The cascade achieving this (accuracy, cost) trade-off.
     pub plan: CascadePlan,
     /// Training accuracy of the plan.
     pub accuracy: f64,
@@ -128,6 +146,7 @@ impl FrontierPoint {
         Value::Obj(m)
     }
 
+    /// Parse a point serialized by [`FrontierPoint::to_value`].
     pub fn from_value(v: &Value) -> Result<FrontierPoint> {
         Ok(FrontierPoint {
             plan: CascadePlan::from_value(v.get("plan"))
@@ -141,14 +160,18 @@ impl FrontierPoint {
 /// The outcome of `optimize`: the chosen plan plus its train metrics.
 #[derive(Debug, Clone)]
 pub struct OptimizedPlan {
+    /// The selected cascade.
     pub plan: CascadePlan,
+    /// Its (weighted) training accuracy.
     pub train_accuracy: f64,
+    /// Its (weighted) average training cost per query (USD).
     pub train_avg_cost: f64,
     /// USD per 10k queries (the budget unit).
     pub train_cost_per_10k: f64,
 }
 
 impl OptimizedPlan {
+    /// JSON form (bit-lossless floats, like [`FrontierPoint::to_value`]).
     pub fn to_value(&self) -> Value {
         let mut m = std::collections::HashMap::new();
         m.insert("plan".to_string(), self.plan.to_value());
@@ -161,6 +184,7 @@ impl OptimizedPlan {
         Value::Obj(m)
     }
 
+    /// Parse a plan serialized by [`OptimizedPlan::to_value`].
     pub fn from_value(v: &Value) -> Result<OptimizedPlan> {
         Ok(OptimizedPlan {
             plan: CascadePlan::from_value(v.get("plan")).context("optimized plan")?,
@@ -180,10 +204,139 @@ impl OptimizedPlan {
     }
 }
 
+/// The workspace's correctness representation — the §Weights dispatch.
+/// Built once per search; the sweeps pick their [`CorrRead`] view (and
+/// with it their accumulator type) from this.
+enum CorrStore {
+    /// Unweighted fast path: the table's word-packed bitset (stride
+    /// `words` `u64`s per model, tail bits zero) plus per-model popcount
+    /// totals. All sweep accumulators are exact `u64` counts.
+    Packed {
+        words: usize,
+        bits: Vec<u64>,
+        totals: Vec<u64>,
+    },
+    /// Weighted path: `wcorr[m * n + i]` = `wᵢ` if model m answers item i
+    /// correctly, else 0.0, plus per-model totals in index order.
+    Weighted {
+        wcorr: Vec<f64>,
+        totals: Vec<f64>,
+    },
+}
+
+/// Accumulator of the sweeps' correctness aggregates: exact `u64` counts
+/// on the packed fast path, f64 weighted mass on the weighted path. Both
+/// use the same add/sub update structure; `to_f64` happens only at point
+/// emission, after the full sum — for counts < 2^53 that conversion is
+/// exact, which is what makes the two paths bit-identical on unweighted
+/// tables.
+trait CorrAcc: Copy {
+    /// The additive identity.
+    fn zero() -> Self;
+    /// Exact conversion of an accumulated sum for point emission.
+    fn to_f64(self) -> f64;
+    /// `self + o`.
+    fn add(self, o: Self) -> Self;
+    /// `self - o` (never called below zero: every subtracted item was
+    /// previously part of the total).
+    fn sub(self, o: Self) -> Self;
+}
+
+impl CorrAcc for u64 {
+    #[inline(always)]
+    fn zero() -> Self {
+        0
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        self - o
+    }
+}
+
+impl CorrAcc for f64 {
+    #[inline(always)]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        self - o
+    }
+}
+
+/// Read-only view of one [`CorrStore`] variant, `Copy` so the generic
+/// sweeps can pass it around freely.
+trait CorrRead: Copy {
+    /// The matching accumulator type.
+    type Acc: CorrAcc;
+    /// Correctness contribution of item `i` under model `m` (1/0 on the
+    /// packed path, `wᵢ`/0.0 on the weighted path).
+    fn at(self, m: usize, i: usize) -> Self::Acc;
+    /// `Σᵢ at(m, i)`, precomputed at workspace build.
+    fn total(self, m: usize) -> Self::Acc;
+}
+
+/// [`CorrRead`] over the packed bitset: one shift + mask per item read.
+#[derive(Clone, Copy)]
+struct PackedCorr<'a> {
+    bits: &'a [u64],
+    words: usize,
+    totals: &'a [u64],
+}
+
+impl CorrRead for PackedCorr<'_> {
+    type Acc = u64;
+    #[inline(always)]
+    fn at(self, m: usize, i: usize) -> u64 {
+        (self.bits[m * self.words + (i >> 6)] >> (i & 63)) & 1
+    }
+    #[inline(always)]
+    fn total(self, m: usize) -> u64 {
+        self.totals[m]
+    }
+}
+
+/// [`CorrRead`] over the weighted f64 arena.
+#[derive(Clone, Copy)]
+struct WeightedCorr<'a> {
+    wcorr: &'a [f64],
+    n: usize,
+    totals: &'a [f64],
+}
+
+impl CorrRead for WeightedCorr<'_> {
+    type Acc = f64;
+    #[inline(always)]
+    fn at(self, m: usize, i: usize) -> f64 {
+        self.wcorr[m * self.n + i]
+    }
+    #[inline(always)]
+    fn total(self, m: usize) -> f64 {
+        self.totals[m]
+    }
+}
+
 /// Precomputed, read-only search state shared by every sweep worker. All
-/// per-(model, item) arrays are flat model-major arenas with stride `n`.
-/// Per-item entries are *weight-scaled* (§Weights): for an unweighted
-/// table every weight is 1.0 and the arenas hold the plain values.
+/// per-(model, item) arrays are flat model-major arenas with stride `n`
+/// (the packed correctness store uses stride `words = n.div_ceil(64)`).
+/// Per-item cost entries are *weight-scaled* (§Weights): for an
+/// unweighted table every weight is 1.0 and the arena holds plain USD.
 struct Workspace {
     n: usize,
     k: usize,
@@ -199,11 +352,8 @@ struct Workspace {
     /// `disagree[a * k + b]` — weighted P[pred_a != pred_b], symmetric,
     /// 0 diagonal.
     disagree: Vec<f64>,
-    /// `wcorr[m * n + i]` — `wᵢ` if model m answers item i correctly,
-    /// else 0.0 (the sweeps' incremental accuracy deltas).
-    wcorr: Vec<f64>,
-    /// `Σ_i wcorr[m][i]` (index order).
-    total_corr: Vec<f64>,
+    /// Correctness store: packed bitset (unweighted) or f64 arena.
+    corr: CorrStore,
     /// `Σ_i wᵢ` (`n` as f64 for unweighted tables).
     total_weight: f64,
 }
@@ -218,25 +368,17 @@ impl Workspace {
         let mut total_cost = Vec::with_capacity(k);
         let mut order = Vec::with_capacity(k * n);
         let mut quantiles = Vec::with_capacity(k);
-        let mut wcorr = Vec::with_capacity(k * n);
-        let mut total_corr = Vec::with_capacity(k);
         for m in 0..k {
             let preds = table.preds_row(m);
             let scores = table.scores_row(m);
-            let corr = table.correct_row(m);
             let mut total = 0.0;
-            let mut tcorr = 0.0;
             for i in 0..n {
                 let w = weights.map_or(1.0, |w| w[i]);
                 let c = costs.call_cost(m, input_tokens[i], preds[i]) * w;
                 cost.push(c);
                 total += c;
-                let wc = if corr[i] { w } else { 0.0 };
-                wcorr.push(wc);
-                tcorr += wc;
             }
             total_cost.push(total);
-            total_corr.push(tcorr);
             let mut idx: Vec<u32> = (0..n as u32).collect();
             idx.sort_by(|&a, &b| {
                 scores[b as usize]
@@ -253,33 +395,102 @@ impl Workspace {
             order.extend_from_slice(&idx);
             quantiles.push(qs);
         }
-        // K×K disagreement, O(K²N/2) once — the candidate enumeration used
-        // to recompute these inside its nested loops.
-        let mut disagree = vec![0.0; k * k];
-        for a in 0..k {
-            let pa = table.preds_row(a);
-            for b in (a + 1)..k {
-                let pb = table.preds_row(b);
-                let d = match weights {
-                    None => {
-                        pa.iter().zip(pb).filter(|&(x, y)| x != y).count() as f64
+
+        // Correctness store: borrow the table's packed rows (one memcpy
+        // per model + a popcount pass) on the unweighted fast path, or
+        // scale weights into the f64 arena otherwise. The weighted totals
+        // accumulate in index order, exactly like a fresh rescan.
+        let corr = match weights {
+            None => {
+                let words = table.words_per_row();
+                let mut bits = Vec::with_capacity(k * words);
+                let mut totals = Vec::with_capacity(k);
+                for m in 0..k {
+                    let row = table.correct_words_row(m);
+                    bits.extend_from_slice(row);
+                    totals.push(row.iter().map(|w| u64::from(w.count_ones())).sum());
+                }
+                CorrStore::Packed { words, bits, totals }
+            }
+            Some(w) => {
+                let mut wcorr = Vec::with_capacity(k * n);
+                let mut totals = Vec::with_capacity(k);
+                for m in 0..k {
+                    let mut tcorr = 0.0;
+                    for (i, &wi) in w.iter().enumerate() {
+                        let wc = if table.is_correct(m, i) { wi } else { 0.0 };
+                        wcorr.push(wc);
+                        tcorr += wc;
                     }
-                    Some(w) => {
+                    totals.push(tcorr);
+                }
+                CorrStore::Weighted { wcorr, totals }
+            }
+        };
+
+        // K×K disagreement, once — the candidate enumeration used to
+        // recompute these inside its nested loops. Unweighted tables run
+        // word-at-a-time over bit-sliced prediction planes: plane p of
+        // model m packs bit p of every prediction, so `pa[i] != pb[i]`
+        // reduces to "any plane XOR has bit i set" and each 64-item word
+        // costs `planes` XOR/ORs + one popcount instead of 64 compares.
+        let mut disagree = vec![0.0; k * k];
+        match weights {
+            None => {
+                let words = table.words_per_row();
+                let max_pred = (0..k)
+                    .flat_map(|m| table.preds_row(m).iter().copied())
+                    .max()
+                    .unwrap_or(0);
+                let n_planes = (32 - max_pred.leading_zeros()).max(1) as usize;
+                let mut planes = vec![0u64; k * n_planes * words];
+                for m in 0..k {
+                    for (i, &p) in table.preds_row(m).iter().enumerate() {
+                        let (wi, bi) = (i >> 6, i & 63);
+                        for pl in 0..n_planes {
+                            if (p >> pl) & 1 == 1 {
+                                planes[(m * n_planes + pl) * words + wi] |= 1u64 << bi;
+                            }
+                        }
+                    }
+                }
+                for a in 0..k {
+                    for b in (a + 1)..k {
+                        let mut d = 0u64;
+                        for wi in 0..words {
+                            let mut diff = 0u64;
+                            for pl in 0..n_planes {
+                                diff |= planes[(a * n_planes + pl) * words + wi]
+                                    ^ planes[(b * n_planes + pl) * words + wi];
+                            }
+                            d += u64::from(diff.count_ones());
+                        }
+                        // `total_weight` > 0: the optimizer rejects empty
+                        // tables before building a workspace.
+                        let frac = d as f64 / total_weight;
+                        disagree[a * k + b] = frac;
+                        disagree[b * k + a] = frac;
+                    }
+                }
+            }
+            Some(w) => {
+                for a in 0..k {
+                    let pa = table.preds_row(a);
+                    for b in (a + 1)..k {
+                        let pb = table.preds_row(b);
                         let mut s = 0.0;
                         for i in 0..n {
                             if pa[i] != pb[i] {
                                 s += w[i];
                             }
                         }
-                        s
+                        // Weights are validated strictly positive, so
+                        // `total_weight` > 0 here too.
+                        let frac = s / total_weight;
+                        disagree[a * k + b] = frac;
+                        disagree[b * k + a] = frac;
                     }
-                };
-                // `total_weight` > 0: the optimizer rejects empty tables
-                // before building a workspace, and weights are validated
-                // strictly positive.
-                let frac = d / total_weight;
-                disagree[a * k + b] = frac;
-                disagree[b * k + a] = frac;
+                }
             }
         }
         Workspace {
@@ -290,8 +501,7 @@ impl Workspace {
             order,
             quantiles,
             disagree,
-            wcorr,
-            total_corr,
+            corr,
             total_weight,
         }
     }
@@ -299,11 +509,6 @@ impl Workspace {
     #[inline]
     fn cost_row(&self, m: usize) -> &[f64] {
         &self.cost[m * self.n..(m + 1) * self.n]
-    }
-
-    #[inline]
-    fn wcorr_row(&self, m: usize) -> &[f64] {
-        &self.wcorr[m * self.n..(m + 1) * self.n]
     }
 
     #[inline]
@@ -318,7 +523,10 @@ impl Workspace {
 
     #[inline]
     fn accuracy(&self, m: usize) -> f64 {
-        self.total_corr[m] / self.total_weight
+        match &self.corr {
+            CorrStore::Packed { totals, .. } => totals[m] as f64 / self.total_weight,
+            CorrStore::Weighted { totals, .. } => totals[m] / self.total_weight,
+        }
     }
 }
 
@@ -352,6 +560,7 @@ pub struct CascadeOptimizer<'a> {
     table: &'a SplitTable,
     costs: &'a CostModel,
     input_tokens: Vec<u32>,
+    /// The search knobs this optimizer was built with.
     pub options: OptimizerOptions,
     ws: Workspace,
     /// Memoized frontier — §Perf: `optimize()` used to recompute the full
@@ -454,7 +663,10 @@ impl<'a> CascadeOptimizer<'a> {
     /// Sweep all thresholds of `list` and push non-dominated (cost, acc)
     /// points to `out`. Exact for length ≤ 2 (full O(N) sweep); for
     /// triples the first threshold runs on the quantile grid and the
-    /// second gets a full sweep conditioned on it.
+    /// second gets a full sweep conditioned on it. This is the one
+    /// §Weights dispatch point: the generic pair/triple sweeps run with
+    /// `u64` popcount-backed accumulators on the packed store and f64
+    /// accumulators on the weighted arena.
     fn sweep_list(&self, list: &[usize], scratch: &mut SweepScratch, out: &mut Vec<FrontierPoint>) {
         match list.len() {
             1 => {
@@ -465,17 +677,52 @@ impl<'a> CascadeOptimizer<'a> {
                     avg_cost: self.model_cost(m),
                 });
             }
-            2 => self.sweep_pair(list[0], list[1], scratch, out),
-            3 => self.sweep_triple(list[0], list[1], list[2], scratch, out),
+            2 => match &self.ws.corr {
+                CorrStore::Packed { words, bits, totals } => self.sweep_pair(
+                    PackedCorr { bits, words: *words, totals },
+                    list[0],
+                    list[1],
+                    scratch,
+                    out,
+                ),
+                CorrStore::Weighted { wcorr, totals } => self.sweep_pair(
+                    WeightedCorr { wcorr, n: self.ws.n, totals },
+                    list[0],
+                    list[1],
+                    scratch,
+                    out,
+                ),
+            },
+            3 => match &self.ws.corr {
+                CorrStore::Packed { words, bits, totals } => self.sweep_triple(
+                    PackedCorr { bits, words: *words, totals },
+                    list[0],
+                    list[1],
+                    list[2],
+                    scratch,
+                    out,
+                ),
+                CorrStore::Weighted { wcorr, totals } => self.sweep_triple(
+                    WeightedCorr { wcorr, n: self.ws.n, totals },
+                    list[0],
+                    list[1],
+                    list[2],
+                    scratch,
+                    out,
+                ),
+            },
             _ => unreachable!("lists are length 1..=3"),
         }
     }
 
     /// Exact sweep of a 2-stage cascade `[a(τ) → b]`: walk items in
     /// descending score_a order; cutting after the j-th item means top-j
-    /// accepted at stage a, the rest escalate to b.
-    fn sweep_pair(
+    /// accepted at stage a, the rest escalate to b. Generic over the
+    /// correctness view (§Weights): both instantiations share this exact
+    /// update structure.
+    fn sweep_pair<C: CorrRead>(
         &self,
+        corr: C,
         a: usize,
         b: usize,
         scratch: &mut SweepScratch,
@@ -483,13 +730,11 @@ impl<'a> CascadeOptimizer<'a> {
     ) {
         let order = self.ws.order_row(a);
         let scores = self.table.scores_row(a);
-        let wcorr_a = self.ws.wcorr_row(a);
-        let wcorr_b = self.ws.wcorr_row(b);
         let cost_b = self.ws.cost_row(b);
 
         let total_cost_a = self.ws.total_cost[a];
-        let mut acc_corr_a = 0.0f64; // weighted correct among accepted (top-j)
-        let mut acc_corr_b = self.ws.total_corr[b];
+        let mut acc_corr_a = C::Acc::zero(); // correct mass among accepted (top-j)
+        let mut acc_corr_b = corr.total(b);
         let mut esc_cost_b = self.ws.total_cost[b];
         let inv_n = 1.0 / self.ws.total_weight;
         let raw = &mut scratch.raw;
@@ -503,24 +748,21 @@ impl<'a> CascadeOptimizer<'a> {
             if s < prev_score {
                 raw.push((
                     prev_midpoint(prev_score, s),
-                    (acc_corr_a + acc_corr_b) * inv_n,
+                    acc_corr_a.add(acc_corr_b).to_f64() * inv_n,
                     (total_cost_a + esc_cost_b) * inv_n,
                 ));
             }
             // accept item i at stage a:
-            acc_corr_a += wcorr_a[i];
-            acc_corr_b -= wcorr_b[i];
+            acc_corr_a = acc_corr_a.add(corr.at(a, i));
+            acc_corr_b = acc_corr_b.sub(corr.at(b, i));
             esc_cost_b -= cost_b[i];
             prev_score = s;
         }
         // Cut after everything = stage a alone never escalates; τ below min.
-        raw.push((-1.0, acc_corr_a * inv_n, total_cost_a * inv_n));
+        raw.push((-1.0, acc_corr_a.to_f64() * inv_n, total_cost_a * inv_n));
         prune_pareto_raw(raw);
         out.extend(raw.iter().map(|&(tau, accuracy, avg_cost)| FrontierPoint {
-            plan: CascadePlan::new(vec![
-                Stage { model: a, threshold: tau },
-                Stage { model: b, threshold: 0.0 },
-            ]),
+            plan: CascadePlan::pair(a, tau, b),
             accuracy,
             avg_cost,
         }));
@@ -535,8 +777,9 @@ impl<'a> CascadeOptimizer<'a> {
     /// updating the escalation aggregates and unlinking itself from the
     /// score_b-ordered list in O(1). Per grid point the conditional sweep
     /// then costs O(|escalated|), not O(N) — and nothing is rebuilt.
-    fn sweep_triple(
+    fn sweep_triple<C: CorrRead>(
         &self,
+        corr: C,
         a: usize,
         b: usize,
         c: usize,
@@ -547,9 +790,6 @@ impl<'a> CascadeOptimizer<'a> {
         let sentinel = n;
         let scores_a = self.table.scores_row(a);
         let scores_b = self.table.scores_row(b);
-        let wcorr_a = self.ws.wcorr_row(a);
-        let wcorr_b = self.ws.wcorr_row(b);
-        let wcorr_c = self.ws.wcorr_row(c);
         let cost_b = self.ws.cost_row(b);
         let cost_c = self.ws.cost_row(c);
         let order_a = self.ws.order_row(a);
@@ -567,10 +807,10 @@ impl<'a> CascadeOptimizer<'a> {
         }
 
         let base_cost = self.ws.total_cost[a]; // everyone pays stage a
-        let mut acc_corr_a = 0.0f64; // weighted correct among items accepted at a
+        let mut acc_corr_a = C::Acc::zero(); // correct mass among items accepted at a
         let mut n_esc = n;
         let mut esc_cost_b = self.ws.total_cost[b];
-        let mut esc_corr_c = self.ws.total_corr[c];
+        let mut esc_corr_c = corr.total(c);
         let mut esc_cost_c = self.ws.total_cost[c];
 
         let inv_n = 1.0 / self.ws.total_weight;
@@ -582,9 +822,9 @@ impl<'a> CascadeOptimizer<'a> {
                 if scores_a[i] <= tau_a {
                     break;
                 }
-                acc_corr_a += wcorr_a[i];
+                acc_corr_a = acc_corr_a.add(corr.at(a, i));
                 esc_cost_b -= cost_b[i];
-                esc_corr_c -= wcorr_c[i];
+                esc_corr_c = esc_corr_c.sub(corr.at(c, i));
                 esc_cost_c -= cost_c[i];
                 let r = rank[i] as usize;
                 let (p, nx) = (prev[r] as usize, next[r] as usize);
@@ -602,7 +842,7 @@ impl<'a> CascadeOptimizer<'a> {
             // Conditional sweep of τ_b over escalated items, in score_b
             // order (the linked list), with suffix aggregates peeled off.
             raw.clear();
-            let mut corr_b_acc = 0.0f64;
+            let mut corr_b_acc = C::Acc::zero();
             let mut rem_corr_c = esc_corr_c;
             let mut rem_cost_c = esc_cost_c;
             let mut prev_score = f32::INFINITY;
@@ -613,12 +853,12 @@ impl<'a> CascadeOptimizer<'a> {
                 if s < prev_score {
                     raw.push((
                         prev_midpoint(prev_score, s),
-                        (acc_corr_a + corr_b_acc + rem_corr_c) * inv_n,
+                        acc_corr_a.add(corr_b_acc).add(rem_corr_c).to_f64() * inv_n,
                         (base_cost + esc_cost_b + rem_cost_c) * inv_n,
                     ));
                 }
-                corr_b_acc += wcorr_b[i];
-                rem_corr_c -= wcorr_c[i];
+                corr_b_acc = corr_b_acc.add(corr.at(b, i));
+                rem_corr_c = rem_corr_c.sub(corr.at(c, i));
                 rem_cost_c -= cost_c[i];
                 prev_score = s;
                 r = next[r] as usize;
@@ -626,16 +866,12 @@ impl<'a> CascadeOptimizer<'a> {
             // τ_b below min: b answers every escalated item.
             raw.push((
                 -1.0,
-                (acc_corr_a + corr_b_acc) * inv_n,
+                acc_corr_a.add(corr_b_acc).to_f64() * inv_n,
                 (base_cost + esc_cost_b) * inv_n,
             ));
             prune_pareto_raw(raw);
             out.extend(raw.iter().map(|&(tau_b, accuracy, avg_cost)| FrontierPoint {
-                plan: CascadePlan::new(vec![
-                    Stage { model: a, threshold: tau_a },
-                    Stage { model: b, threshold: tau_b },
-                    Stage { model: c, threshold: 0.0 },
-                ]),
+                plan: CascadePlan::triple(a, tau_a, b, tau_b, c),
                 accuracy,
                 avg_cost,
             }));

@@ -15,8 +15,19 @@
 //! `Vec<Vec<_>>`. The optimizer's inner loops run over `*_row(m)` slices,
 //! which the compiler can bounds-check once per loop instead of once per
 //! element, and adjacent items share cache lines. Field access goes
-//! through accessors so the layout can keep evolving (a packed correctness
-//! bitset is the planned next step — see ROADMAP.md).
+//! through accessors so the layout can keep evolving.
+//!
+//! §Bitset: correctness is stored *word-packed* — 64 items per `u64`,
+//! stride [`SplitTable::words_per_row`] words per model, tail bits of the
+//! last word always zero. Point reads go through [`SplitTable::is_correct`]
+//! (a shift + mask); whole-row consumers ([`SplitTable::accuracy`], the
+//! optimizer's disagreement matrix and sweep totals, `eval::mpi`) read
+//! [`SplitTable::correct_words_row`] and run word-at-a-time with
+//! popcounts. At the K=12 × N=8000 bench workload this shrinks the
+//! correctness arena 8x vs one byte per (model, item) — and 64x vs the
+//! f64 arena the weighted path needs — so the sweep's working set stays
+//! cache-resident. Packing is an implementation detail of this module:
+//! ingest ([`ModelRow`], [`TableBuilder`]) still speaks `bool`s.
 //!
 //! §Weights: a table may carry optional *per-item observation weights*
 //! ([`SplitTable::with_weights`] / [`TableBuilder::push_item_weighted`]).
@@ -37,17 +48,26 @@ use crate::util::json::Value;
 /// Responses of all APIs on one split, in flat model-major dense arenas.
 #[derive(Debug, Clone)]
 pub struct SplitTable {
+    /// Dataset the responses were computed on.
     pub dataset: String,
+    /// Marketplace model names (row order of every arena).
     pub model_names: Vec<String>,
+    /// Ground-truth answer class per item.
     pub labels: Vec<u32>,
-    /// Items per model (row stride of the arenas below).
+    /// Items per model (row stride of the flat arenas below).
     n: usize,
+    /// `u64` words per model row of the packed `correct` arena
+    /// (`n.div_ceil(64)`).
+    words: usize,
     /// `preds[m * n + i]`: model m's answer class on item i.
     preds: Vec<u32>,
     /// `scores[m * n + i]`: scorer reliability of (query i, model m's answer).
     scores: Vec<f32>,
-    /// `correct[m * n + i]`.
-    correct: Vec<bool>,
+    /// Word-packed correctness: bit `i % 64` of word `m * words + i / 64`
+    /// is set iff model m answers item i correctly. Tail bits (≥ `n` in
+    /// the last word of each row) are always zero, so popcounts over rows
+    /// need no masking.
+    correct: Vec<u64>,
     /// Optional per-item observation weights (`None` = uniform 1.0).
     weights: Option<Vec<f64>>,
     /// `Σᵢ weightᵢ` in index order (`n` as f64 when uniform), cached so
@@ -69,22 +89,24 @@ impl SplitTable {
             bail!("{} model rows for {} model names", rows.len(), model_names.len());
         }
         let k = rows.len();
+        let words = n.div_ceil(64);
         let mut preds = Vec::with_capacity(k * n);
         let mut scores = Vec::with_capacity(k * n);
-        let mut correct = Vec::with_capacity(k * n);
-        for (row, name) in rows.into_iter().zip(&model_names) {
+        let mut correct = vec![0u64; k * words];
+        for (m, (row, name)) in rows.into_iter().zip(&model_names).enumerate() {
             if row.pred.len() != n || row.score.len() != n || row.correct.len() != n {
                 bail!("model {name}: ragged response arrays");
             }
             preds.extend_from_slice(&row.pred);
             scores.extend_from_slice(&row.score);
-            correct.extend_from_slice(&row.correct);
+            pack_bools(&row.correct, &mut correct[m * words..(m + 1) * words]);
         }
         Ok(SplitTable {
             dataset,
             model_names,
             labels,
             n,
+            words,
             preds,
             scores,
             correct,
@@ -128,6 +150,7 @@ impl SplitTable {
         self.weights.as_deref()
     }
 
+    /// Whether the table carries per-item observation weights.
     pub fn is_weighted(&self) -> bool {
         self.weights.is_some()
     }
@@ -138,18 +161,22 @@ impl SplitTable {
         self.total_weight
     }
 
+    /// Items per model.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// Whether the table holds no items.
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }
 
+    /// Number of marketplace models covered.
     pub fn n_models(&self) -> usize {
         self.model_names.len()
     }
 
+    /// Row index of a model by name.
     pub fn model_index(&self, name: &str) -> Option<usize> {
         self.model_names.iter().position(|n| n == name)
     }
@@ -166,10 +193,12 @@ impl SplitTable {
         self.scores[m * self.n + i]
     }
 
-    /// Whether model m answers item i correctly.
+    /// Whether model m answers item i correctly (one shift + mask into the
+    /// packed bitset).
     #[inline(always)]
     pub fn is_correct(&self, m: usize, i: usize) -> bool {
-        self.correct[m * self.n + i]
+        debug_assert!(i < self.n);
+        (self.correct[m * self.words + (i >> 6)] >> (i & 63)) & 1 == 1
     }
 
     /// All of model m's answer classes (len = `len()`).
@@ -184,24 +213,47 @@ impl SplitTable {
         &self.scores[m * self.n..(m + 1) * self.n]
     }
 
-    /// Model m's per-item correctness (len = `len()`).
+    /// Model m's packed correctness row: [`SplitTable::words_per_row`]
+    /// `u64` words, bit `i % 64` of word `i / 64` = item i, tail bits
+    /// zero. The substrate for every popcount fast path (optimizer
+    /// sweeps, `eval::mpi`).
     #[inline]
-    pub fn correct_row(&self, m: usize) -> &[bool] {
-        &self.correct[m * self.n..(m + 1) * self.n]
+    pub fn correct_words_row(&self, m: usize) -> &[u64] {
+        &self.correct[m * self.words..(m + 1) * self.words]
+    }
+
+    /// `u64` words per packed correctness row (`len().div_ceil(64)`).
+    #[inline]
+    pub fn words_per_row(&self) -> usize {
+        self.words
+    }
+
+    /// Model m's correctness as a materialized `Vec<bool>` (tests and
+    /// cold paths; hot paths use [`SplitTable::correct_words_row`]).
+    pub fn correct_row_vec(&self, m: usize) -> Vec<bool> {
+        (0..self.n).map(|i| self.is_correct(m, i)).collect()
     }
 
     /// (Weighted) accuracy of a single model: `Σᵢ wᵢ·correctᵢ / Σᵢ wᵢ`.
+    /// Unweighted tables popcount the packed row (word-at-a-time); the
+    /// count is an exact small integer, so the result is bit-identical to
+    /// a per-item scan.
     pub fn accuracy(&self, m: usize) -> f64 {
         match &self.weights {
             None => {
                 let n = self.n.max(1);
-                self.correct_row(m).iter().filter(|&&c| c).count() as f64 / n as f64
+                let ones: u64 = self
+                    .correct_words_row(m)
+                    .iter()
+                    .map(|w| u64::from(w.count_ones()))
+                    .sum();
+                ones as f64 / n as f64
             }
             Some(w) => {
                 let mut s = 0.0;
-                for (i, &c) in self.correct_row(m).iter().enumerate() {
-                    if c {
-                        s += w[i];
+                for (i, &wi) in w.iter().enumerate() {
+                    if self.is_correct(m, i) {
+                        s += wi;
                     }
                 }
                 s / self.total_weight
@@ -227,17 +279,25 @@ impl SplitTable {
 
     /// Rebuild a table from the item range `start..start + n` of every
     /// arena (the one place the per-field layout is copied — keep any
-    /// future layout change here).
+    /// future layout change here). The packed correctness rows are
+    /// re-based with [`extract_bit_range`], so an unaligned `start`
+    /// shifts bits across word boundaries rather than re-packing per item.
     fn slice(&self, start: usize, n: usize) -> SplitTable {
         let end = start + n;
         let k = self.n_models();
+        let words = n.div_ceil(64);
         let mut preds = Vec::with_capacity(k * n);
         let mut scores = Vec::with_capacity(k * n);
-        let mut correct = Vec::with_capacity(k * n);
+        let mut correct = vec![0u64; k * words];
         for m in 0..k {
             preds.extend_from_slice(&self.preds_row(m)[start..end]);
             scores.extend_from_slice(&self.scores_row(m)[start..end]);
-            correct.extend_from_slice(&self.correct_row(m)[start..end]);
+            extract_bit_range(
+                self.correct_words_row(m),
+                start,
+                n,
+                &mut correct[m * words..(m + 1) * words],
+            );
         }
         let weights = self.weights.as_ref().map(|w| w[start..end].to_vec());
         let total_weight = match &weights {
@@ -249,6 +309,7 @@ impl SplitTable {
             model_names: self.model_names.clone(),
             labels: self.labels[start..end].to_vec(),
             n,
+            words,
             preds,
             scores,
             correct,
@@ -299,11 +360,52 @@ impl SplitTable {
     }
 }
 
+/// Pack a bool row into `u64` words (bit `i % 64` of word `i / 64`).
+/// `out` must hold exactly `bools.len().div_ceil(64)` zeroed words; tail
+/// bits stay zero by construction.
+fn pack_bools(bools: &[bool], out: &mut [u64]) {
+    debug_assert_eq!(out.len(), bools.len().div_ceil(64));
+    for (i, &b) in bools.iter().enumerate() {
+        if b {
+            out[i >> 6] |= 1u64 << (i & 63);
+        }
+    }
+}
+
+/// Copy the bit range `start..start + len` of a packed row into `dst`
+/// (re-based to bit 0, `len.div_ceil(64)` words, tail bits cleared).
+/// Handles unaligned `start` by stitching each destination word from two
+/// adjacent source words.
+fn extract_bit_range(src: &[u64], start: usize, len: usize, dst: &mut [u64]) {
+    let out_words = len.div_ceil(64);
+    debug_assert_eq!(dst.len(), out_words);
+    let w0 = start >> 6;
+    let shift = start & 63;
+    for (dw, d) in dst.iter_mut().enumerate() {
+        let lo = src.get(w0 + dw).copied().unwrap_or(0) >> shift;
+        let hi = if shift == 0 {
+            0
+        } else {
+            // The complementary top bits of the next source word; shift is
+            // in 1..=63 here, so `64 - shift` never overflows.
+            src.get(w0 + dw + 1).copied().unwrap_or(0) << (64 - shift)
+        };
+        *d = lo | hi;
+    }
+    let tail = len & 63;
+    if tail != 0 {
+        dst[out_words - 1] &= (1u64 << tail) - 1;
+    }
+}
+
 /// One model's responses over a split, used to assemble a [`SplitTable`].
 #[derive(Debug, Clone, Default)]
 pub struct ModelRow {
+    /// Answer class per item.
     pub pred: Vec<u32>,
+    /// Reliability score per item.
     pub score: Vec<f32>,
+    /// Whether the answer was correct, per item.
     pub correct: Vec<bool>,
 }
 
@@ -331,6 +433,7 @@ pub struct TableBuilder {
 }
 
 impl TableBuilder {
+    /// An empty builder covering `model_names`.
     pub fn new(dataset: impl Into<String>, model_names: Vec<String>) -> Self {
         let k = model_names.len();
         TableBuilder {
@@ -406,10 +509,13 @@ impl TableBuilder {
         self.labels.len()
     }
 
+    /// Whether nothing has been pushed yet.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// Transpose the pushed items into a model-major [`SplitTable`]
+    /// (weighted iff any push carried an explicit weight).
     pub fn finish(self) -> Result<SplitTable> {
         let table =
             SplitTable::from_rows(self.dataset, self.model_names, self.labels, self.rows)?;
@@ -424,18 +530,23 @@ impl TableBuilder {
 /// Train + test response tables for one dataset.
 #[derive(Debug, Clone)]
 pub struct ResponseTable {
+    /// Dataset name (matches both splits).
     pub dataset: String,
+    /// The training split (what the optimizer learns on).
     pub train: SplitTable,
+    /// The held-out test split (what reports evaluate on).
     pub test: SplitTable,
 }
 
 impl ResponseTable {
+    /// Read + parse `artifacts/responses/<dataset>.json`.
     pub fn from_file(path: &Path) -> Result<Self> {
         let raw = std::fs::read_to_string(path)
             .with_context(|| format!("reading response table {}", path.display()))?;
         Self::from_json(&raw)
     }
 
+    /// Parse the response-table JSON document.
     pub fn from_json(raw: &str) -> Result<Self> {
         let v = Value::parse(raw).map_err(|e| anyhow!("{e}"))?;
         let dataset = v
@@ -542,10 +653,66 @@ mod tests {
         let t = synthetic_table(4, 64, 4, 0.9, 9);
         for m in 0..4 {
             assert_eq!(t.preds_row(m).len(), 64);
+            assert_eq!(t.correct_words_row(m).len(), 1);
             for i in (0..64).step_by(7) {
                 assert_eq!(t.preds_row(m)[i], t.pred(m, i));
                 assert_eq!(t.scores_row(m)[i], t.score(m, i));
-                assert_eq!(t.correct_row(m)[i], t.is_correct(m, i));
+                assert_eq!(t.correct_row_vec(m)[i], t.is_correct(m, i));
+            }
+        }
+    }
+
+    #[test]
+    fn packed_bits_match_pushed_bools_including_tail_words() {
+        // 100 items: the second word of each row has 36 tail bits that
+        // must stay zero so popcount paths need no masking.
+        for n in [1usize, 63, 64, 65, 100, 128, 129] {
+            let t = synthetic_table(3, n, 4, 0.9, 17);
+            assert_eq!(t.words_per_row(), n.div_ceil(64));
+            for m in 0..3 {
+                let row = t.correct_words_row(m);
+                let naive = t.correct_row_vec(m);
+                assert_eq!(naive.len(), n);
+                // every bit round-trips
+                for (i, &c) in naive.iter().enumerate() {
+                    assert_eq!((row[i >> 6] >> (i & 63)) & 1 == 1, c);
+                }
+                // tail bits beyond n are zero
+                let tail = n & 63;
+                if tail != 0 {
+                    assert_eq!(row[row.len() - 1] >> tail, 0, "n={n} m={m}");
+                }
+                // popcount accuracy == naive count
+                let ones: u64 =
+                    row.iter().map(|w| u64::from(w.count_ones())).sum();
+                assert_eq!(ones as usize, naive.iter().filter(|&&c| c).count());
+                assert_eq!(t.accuracy(m), ones as f64 / n as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn slice_extracts_unaligned_bit_ranges() {
+        // start=90 crosses a word boundary with shift 26; every bit of the
+        // sliced table must match the source, and tails must be masked.
+        let t = synthetic_table(3, 200, 4, 0.9, 23);
+        for (start, n) in [(90usize, 70usize), (0, 64), (64, 64), (1, 199), (190, 10)] {
+            let s = t.slice(start, n);
+            assert_eq!(s.len(), n);
+            assert_eq!(s.words_per_row(), n.div_ceil(64));
+            for m in 0..3 {
+                for i in 0..n {
+                    assert_eq!(
+                        s.is_correct(m, i),
+                        t.is_correct(m, start + i),
+                        "start={start} n={n} m={m} i={i}"
+                    );
+                }
+                let tail = n & 63;
+                if tail != 0 {
+                    let row = s.correct_words_row(m);
+                    assert_eq!(row[row.len() - 1] >> tail, 0);
+                }
             }
         }
     }
@@ -607,7 +774,7 @@ mod tests {
         for m in 0..3 {
             assert_eq!(built.preds_row(m), t.preds_row(m));
             assert_eq!(built.scores_row(m), t.scores_row(m));
-            assert_eq!(built.correct_row(m), t.correct_row(m));
+            assert_eq!(built.correct_words_row(m), t.correct_words_row(m));
         }
         assert_eq!(built.labels, t.labels);
     }
@@ -697,6 +864,6 @@ mod tests {
         let u = t.tail(10);
         assert!(!u.is_weighted());
         assert_eq!(u.total_weight(), 10.0);
-        assert_eq!(u.correct_row(0), &t.correct_row(0)[90..]);
+        assert_eq!(u.correct_row_vec(0), &t.correct_row_vec(0)[90..]);
     }
 }

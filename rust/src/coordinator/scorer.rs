@@ -19,10 +19,12 @@ pub struct Scorer {
 }
 
 impl Scorer {
+    /// Bind the scorer artifact of `meta`'s dataset to an engine.
     pub fn new(engine: EngineHandle, meta: DatasetMeta) -> Self {
         Scorer { engine, meta }
     }
 
+    /// Dataset geometry the scorer input rows are built for.
     pub fn meta(&self) -> &DatasetMeta {
         &self.meta
     }

@@ -12,17 +12,25 @@
 //! The constants below mirror `data.py`'s token map exactly; an integration
 //! test cross-checks them against the manifest.
 
+/// The fixed token map shared with `python/compile/data.py`.
 pub mod layout {
+    /// Padding token (never billable).
     pub const PAD: i32 = 0;
+    /// Separator opening an in-context example block.
     pub const SEP_EX: i32 = 1;
+    /// Marker before an example block's label token.
     pub const LABEL_MARK: i32 = 2;
+    /// Negation marker token.
     pub const NEG: i32 = 3;
+    /// Start-of-query marker.
     pub const CLS: i32 = 4;
+    /// End-of-query separator.
     pub const QSEP: i32 = 5;
     /// Label tokens: `LABEL_BASE + class`.
     pub const LABEL_BASE: i32 = 6;
     /// Marker present in episodic (in-context-learning) queries.
     pub const EPI_MARK: i32 = 19;
+    /// Vocabulary size every simulated model shares.
     pub const VOCAB: i32 = 512;
 }
 
@@ -65,13 +73,21 @@ fn u32_vec(v: &Value, key: &str) -> Result<Vec<u32>> {
 /// Geometry of a dataset's token layout (shared by both splits).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DatasetMeta {
+    /// Dataset name.
     pub name: String,
+    /// Full token-row length.
     pub seq: usize,
+    /// Number of answer classes.
     pub n_classes: usize,
+    /// In-context example blocks per prompt.
     pub n_examples: usize,
+    /// Query body length (tokens).
     pub qlen: usize,
+    /// Length of one example block (tokens).
     pub block_len: usize,
+    /// Offset of the query segment in the row.
     pub q_offset: usize,
+    /// Scorer-artifact input row length.
     pub scorer_seq: usize,
     /// Deterministic completion length per class (output-cost metering).
     pub answer_lens: Vec<u32>,
@@ -87,21 +103,28 @@ impl DatasetMeta {
 /// One loaded dataset split, token rows in a dense row-major buffer.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Shared geometry of every row.
     pub meta: DatasetMeta,
+    /// Which split this is ("train" / "test").
     pub split: String,
     tokens: Vec<i32>, // n * seq
+    /// Ground-truth class per item.
     pub labels: Vec<u32>,
+    /// Difficulty tier per item (workload generators).
     pub tiers: Vec<u8>,
+    /// Whether each item is episodic (needs in-context examples).
     pub episodic: Vec<u8>,
 }
 
 impl Dataset {
+    /// Read + parse one split file (`artifacts/data/<ds>/<split>.json`).
     pub fn from_file(path: &Path) -> Result<Self> {
         let raw = std::fs::read_to_string(path)
             .with_context(|| format!("reading dataset {}", path.display()))?;
         Self::from_json(&raw).with_context(|| format!("parsing dataset {}", path.display()))
     }
 
+    /// Parse a split document.
     pub fn from_json(raw: &str) -> Result<Self> {
         let v = Value::parse(raw).map_err(|e| anyhow!("{e}"))?;
         let name = req_str(&v, "dataset")?;
@@ -144,10 +167,12 @@ impl Dataset {
         })
     }
 
+    /// Items in the split.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// Whether the split holds no items.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
@@ -204,72 +229,119 @@ pub mod prompt {
 // Manifest (artifacts/manifest.json)
 // ---------------------------------------------------------------------------
 
+/// The parsed `artifacts/manifest.json`: everything the build path
+/// exported, per dataset.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest format version.
     pub version: u32,
+    /// Token-row length shared by all model artifacts.
     pub seq: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Batch sizes the artifacts were AOT-compiled for.
     pub batch_sizes: Vec<usize>,
+    /// One entry per exported dataset.
     pub datasets: Vec<ManifestDataset>,
 }
 
+/// One dataset's manifest entry: geometry, splits, models, scorer.
 #[derive(Debug, Clone)]
 pub struct ManifestDataset {
+    /// Dataset name.
     pub dataset: String,
+    /// Task domain label (reports).
     pub domain: String,
+    /// Total items across splits.
     pub size: usize,
+    /// Number of answer classes.
     pub n_classes: usize,
+    /// In-context example blocks per prompt.
     pub n_examples: usize,
+    /// Token-row length.
     pub seq: usize,
+    /// Query body length (tokens).
     pub qlen: usize,
+    /// Example-block length (tokens).
     pub block_len: usize,
+    /// Offset of the query segment.
     pub q_offset: usize,
+    /// Scorer input row length.
     pub scorer_seq: usize,
+    /// Completion length per answer class.
     pub answer_lens: Vec<u32>,
+    /// Train-split size.
     pub n_train: usize,
+    /// Test-split size.
     pub n_test: usize,
+    /// The simulated marketplace models.
     pub models: Vec<ManifestModel>,
+    /// The reliability scorer's entry.
     pub scorer: ManifestScorer,
 }
 
+/// One simulated API's manifest entry.
 #[derive(Debug, Clone)]
 pub struct ManifestModel {
+    /// API name (Table 1).
     pub name: String,
+    /// Provider name (Table 1).
     pub provider: String,
+    /// Nominal parameter count (billions; 0 = undisclosed).
     pub size_b: f64,
+    /// Table-1 pricing components.
     pub pricing: ManifestPricing,
+    /// Simulated API latency parameters.
     pub latency_ms: ManifestLatency,
+    /// Simulator transformer width.
     pub d_model: usize,
+    /// Simulator transformer depth.
     pub n_layers: usize,
+    /// Train-split accuracy measured at build time.
     pub train_acc: f64,
+    /// Test-split accuracy measured at build time.
     pub test_acc: f64,
     /// batch-size (as string key) → HLO text path relative to artifacts/.
     pub artifacts: HashMap<String, String>,
 }
 
+/// Raw pricing components from the manifest (mirrors `marketplace::Pricing`).
 #[derive(Debug, Clone, Copy)]
 pub struct ManifestPricing {
+    /// USD per 10M input tokens.
     pub usd_per_10m_input: f64,
+    /// USD per 10M output tokens.
     pub usd_per_10m_output: f64,
+    /// Fixed USD per request.
     pub usd_per_request: f64,
 }
 
+/// Raw latency parameters from the manifest.
 #[derive(Debug, Clone, Copy)]
 pub struct ManifestLatency {
+    /// Fixed round-trip floor (ms).
     pub base: f64,
+    /// Additional ms per 1k tokens.
     pub per_1k_tokens: f64,
 }
 
+/// The reliability scorer's manifest entry.
 #[derive(Debug, Clone)]
 pub struct ManifestScorer {
+    /// Scorer transformer width.
     pub d_model: usize,
+    /// Scorer transformer depth.
     pub n_layers: usize,
+    /// batch-size (string key) → HLO text path relative to artifacts/.
     pub artifacts: HashMap<String, String>,
+    /// Mean score separation (correct vs wrong) at build time.
     pub score_sep: f64,
+    /// Scorer classification accuracy at build time.
     pub score_acc: f64,
 }
 
 impl Manifest {
+    /// Parse `manifest.json`.
     pub fn from_json(raw: &str) -> Result<Self> {
         let v = Value::parse(raw).map_err(|e| anyhow!("{e}"))?;
         let mut datasets = Vec::new();
@@ -362,6 +434,7 @@ impl ManifestDataset {
 }
 
 impl ManifestDataset {
+    /// The geometry view shared with loaded splits.
     pub fn meta(&self) -> DatasetMeta {
         DatasetMeta {
             name: self.dataset.clone(),
@@ -376,6 +449,7 @@ impl ManifestDataset {
         }
     }
 
+    /// A model's entry by name.
     pub fn model(&self, name: &str) -> Option<&ManifestModel> {
         self.models.iter().find(|m| m.name == name)
     }
@@ -384,11 +458,14 @@ impl ManifestDataset {
 /// Root handle over the `artifacts/` directory.
 #[derive(Debug, Clone)]
 pub struct Artifacts {
+    /// The artifacts directory.
     pub root: PathBuf,
+    /// Its parsed manifest.
     pub manifest: Manifest,
 }
 
 impl Artifacts {
+    /// Open an artifacts directory (reads + parses its manifest).
     pub fn load(root: impl AsRef<Path>) -> Result<Self> {
         let root = root.as_ref().to_path_buf();
         let mpath = root.join("manifest.json");
@@ -402,6 +479,7 @@ impl Artifacts {
         Ok(Artifacts { root, manifest })
     }
 
+    /// The manifest entry of one dataset.
     pub fn dataset_manifest(&self, name: &str) -> Result<&ManifestDataset> {
         self.manifest
             .datasets
@@ -410,10 +488,12 @@ impl Artifacts {
             .with_context(|| format!("dataset {name} not in manifest"))
     }
 
+    /// Load one token split of a dataset.
     pub fn dataset(&self, name: &str, split: &str) -> Result<Dataset> {
         Dataset::from_file(&self.root.join("data").join(name).join(format!("{split}.json")))
     }
 
+    /// Load a dataset's offline response table.
     pub fn responses(&self, name: &str) -> Result<crate::coordinator::responses::ResponseTable> {
         crate::coordinator::responses::ResponseTable::from_file(
             &self.root.join("responses").join(format!("{name}.json")),
@@ -434,6 +514,7 @@ impl Artifacts {
         Ok(DatasetContext { table, costs, train, test, train_tokens, test_tokens, meta })
     }
 
+    /// Path of one AOT artifact (`model` may be `"scorer"`).
     pub fn model_path(&self, ds: &str, model: &str, batch: usize) -> Result<PathBuf> {
         let dm = self.dataset_manifest(ds)?;
         let m = if model == "scorer" {
@@ -452,13 +533,19 @@ impl Artifacts {
 
 /// Everything needed to optimize/evaluate on one dataset, loaded once.
 pub struct DatasetContext {
+    /// The offline response tables (train + test).
     pub table: crate::coordinator::responses::ResponseTable,
+    /// The marketplace cost model.
     pub costs: crate::marketplace::CostModel,
+    /// The train token split.
     pub train: Dataset,
+    /// The test token split.
     pub test: Dataset,
-    /// Billable input tokens per train / test item.
+    /// Billable input tokens per train item.
     pub train_tokens: Vec<u32>,
+    /// Billable input tokens per test item.
     pub test_tokens: Vec<u32>,
+    /// The dataset geometry.
     pub meta: DatasetMeta,
 }
 

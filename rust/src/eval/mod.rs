@@ -10,8 +10,11 @@ use crate::coordinator::responses::SplitTable;
 /// point for an individual API).
 #[derive(Debug, Clone)]
 pub struct IndividualPoint {
+    /// Marketplace model name.
     pub model: String,
+    /// Split accuracy of always answering with this model.
     pub accuracy: f64,
+    /// Average USD per query of always calling it.
     pub avg_cost: f64,
 }
 

@@ -9,24 +9,31 @@
 
 use crate::coordinator::responses::SplitTable;
 
+/// Popcount of `correct_a ∧ ¬correct_b` over two packed rows — the count
+/// of items a gets right and b gets wrong, word-at-a-time. The table's
+/// tail bits are zero, so `a & !b` is tail-safe without masking (`a`'s
+/// tail contributes zeros through the AND).
+fn count_right_wrong(a_words: &[u64], b_words: &[u64]) -> u64 {
+    a_words
+        .iter()
+        .zip(b_words)
+        .map(|(&a, &b)| u64::from((a & !b).count_ones()))
+        .sum()
+}
+
 /// Full MPI matrix: `m[row][col] = P[row wrong ∧ col right]` (the paper's
-/// Fig. 4 orientation).
+/// Fig. 4 orientation). Word-at-a-time over the packed correctness rows.
 pub fn mpi_matrix(table: &SplitTable) -> Vec<Vec<f64>> {
     let k = table.n_models();
     let n = table.len();
     let mut m = vec![vec![0.0; k]; k];
     for row in 0..k {
-        let row_correct = table.correct_row(row);
+        let row_correct = table.correct_words_row(row);
         for col in 0..k {
             if row == col {
                 continue;
             }
-            let col_correct = table.correct_row(col);
-            let cnt = row_correct
-                .iter()
-                .zip(col_correct)
-                .filter(|&(&rc, &cc)| !rc && cc)
-                .count();
+            let cnt = count_right_wrong(table.correct_words_row(col), row_correct);
             m[row][col] = cnt as f64 / n.max(1) as f64;
         }
     }
@@ -35,14 +42,9 @@ pub fn mpi_matrix(table: &SplitTable) -> Vec<Vec<f64>> {
 
 /// MPI of model `a` with respect to model `b`: P[a right ∧ b wrong].
 pub fn mpi(table: &SplitTable, a: usize, b: usize) -> f64 {
-    let n = table.len();
-    let cnt = table
-        .correct_row(a)
-        .iter()
-        .zip(table.correct_row(b))
-        .filter(|&(&ca, &cb)| ca && !cb)
-        .count();
-    cnt as f64 / n.max(1) as f64
+    let cnt =
+        count_right_wrong(table.correct_words_row(a), table.correct_words_row(b));
+    cnt as f64 / table.len().max(1) as f64
 }
 
 /// Best improver of `b`: the model with the largest MPI w.r.t. `b`.
@@ -90,6 +92,26 @@ mod tests {
                 let lhs = t.accuracy(a) - t.accuracy(b);
                 let rhs = mpi(&t, a, b) - mpi(&t, b, a);
                 assert!((lhs - rhs).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn word_at_a_time_counts_match_scalar_recount() {
+        // n = 100 leaves 28 tail bits in the second word of each packed
+        // row — the case the tail-safety argument in count_right_wrong
+        // must cover.
+        let t = synthetic_table(4, 100, 4, 0.9, 21);
+        for a in 0..4 {
+            for b in 0..4 {
+                if a == b {
+                    continue;
+                }
+                let scalar = (0..t.len())
+                    .filter(|&i| t.is_correct(a, i) && !t.is_correct(b, i))
+                    .count() as f64
+                    / t.len() as f64;
+                assert_eq!(mpi(&t, a, b), scalar, "a={a} b={b}");
             }
         }
     }

@@ -42,8 +42,14 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 //!
-//! See `examples/` for runnable end-to-end drivers and `rust/src/bin/report.rs`
-//! for the generators behind every table and figure in the paper.
+//! See `examples/` for runnable end-to-end drivers, `rust/src/bin/report.rs`
+//! for the generators behind every table and figure in the paper, and
+//! `docs/ARCHITECTURE.md` for the layer map + serving data flow.
+
+// Every public item must be documented: tier1's `clippy -D warnings`
+// promotes this to a hard error, and CI uploads the rendered rustdoc as
+// a per-PR artifact.
+#![warn(missing_docs)]
 
 pub mod coordinator;
 pub mod data;

@@ -14,12 +14,16 @@ use crate::data::{Manifest, ManifestDataset};
 /// Pricing of one API (paper Table 1 row).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Pricing {
+    /// USD per 10M input tokens.
     pub usd_per_10m_input: f64,
+    /// USD per 10M output tokens.
     pub usd_per_10m_output: f64,
+    /// Fixed USD fee per request.
     pub usd_per_request: f64,
 }
 
 impl Pricing {
+    /// Pricing from (input/10M, output/10M, per-request) USD components.
     pub const fn new(input_10m: f64, output_10m: f64, request: f64) -> Self {
         Pricing {
             usd_per_10m_input: input_10m,
@@ -60,11 +64,14 @@ pub const TABLE1: &[(&str, &str, f64, Pricing)] = &[
 /// compute instead.
 #[derive(Debug, Clone, Copy)]
 pub struct LatencyModel {
+    /// Fixed round-trip floor (ms).
     pub base_ms: f64,
+    /// Additional latency per 1k total tokens (ms).
     pub per_1k_tokens_ms: f64,
 }
 
 impl LatencyModel {
+    /// Simulated round-trip latency for a request of `total_tokens`.
     pub fn latency_ms(&self, total_tokens: u32) -> f64 {
         self.base_ms + self.per_1k_tokens_ms * total_tokens as f64 / 1000.0
     }
@@ -74,15 +81,20 @@ impl LatencyModel {
 /// USD, and exposes per-class completion lengths.
 #[derive(Debug, Clone)]
 pub struct CostModel {
+    /// Dataset this cost model prices.
     pub dataset: String,
+    /// Marketplace model names (index order of `pricing`/`latency`).
     pub model_names: Vec<String>,
+    /// Per-model Table-1 pricing.
     pub pricing: Vec<Pricing>,
+    /// Per-model simulated API latency.
     pub latency: Vec<LatencyModel>,
     /// Completion length per answer class (tokens).
     pub answer_lens: Vec<u32>,
 }
 
 impl CostModel {
+    /// Pricing + latency for one dataset from the artifacts manifest.
     pub fn from_manifest(manifest: &Manifest, dataset: &str) -> Result<Self> {
         let dm: &ManifestDataset = manifest
             .datasets
@@ -145,10 +157,12 @@ impl CostModel {
         }
     }
 
+    /// Marketplace index of a model by name.
     pub fn model_index(&self, name: &str) -> Option<usize> {
         self.model_names.iter().position(|n| n == name)
     }
 
+    /// Number of marketplace models.
     pub fn n_models(&self) -> usize {
         self.model_names.len()
     }

@@ -55,10 +55,12 @@ enum Request {
 pub struct EngineStats {
     /// (dataset, model) → (executions, rows, total µs).
     pub per_model: HashMap<(String, String), (u64, u64, u64)>,
+    /// Executables currently compiled and cached by the actor.
     pub compiled_executables: usize,
 }
 
 impl EngineStats {
+    /// Total `execute` calls across all (dataset, model) pairs.
     pub fn total_executions(&self) -> u64 {
         self.per_model.values().map(|v| v.0).sum()
     }
@@ -108,6 +110,7 @@ impl EngineHandle {
         rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
     }
 
+    /// Snapshot of the actor's cumulative execution counters.
     pub fn stats(&self) -> Result<EngineStats> {
         let (tx, rx) = mpsc::sync_channel(1);
         self.tx
@@ -188,6 +191,7 @@ impl Engine {
         Ok(Engine { handle: EngineHandle { tx: tx.clone() }, join: Some(join), tx })
     }
 
+    /// A cheap, cloneable handle for submitting work to the actor.
     pub fn handle(&self) -> EngineHandle {
         self.handle.clone()
     }

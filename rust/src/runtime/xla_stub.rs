@@ -35,10 +35,12 @@ const NO_BACKEND: &str = "PJRT backend not available in this build \
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Mirrors `xla::PjRtClient::cpu`; always fails in the stub.
     pub fn cpu() -> Result<PjRtClient, Error> {
         Err(Error(NO_BACKEND))
     }
 
+    /// Mirrors `xla::PjRtClient::compile`; always fails in the stub.
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
         Err(Error(NO_BACKEND))
     }
@@ -48,6 +50,7 @@ impl PjRtClient {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Mirrors `xla::HloModuleProto::from_text_file`; always fails.
     pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
         Err(Error(NO_BACKEND))
     }
@@ -57,6 +60,8 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Mirrors `xla::XlaComputation::from_proto` (constructible — the
+    /// failure happens at compile time).
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }
@@ -66,18 +71,22 @@ impl XlaComputation {
 pub struct Literal;
 
 impl Literal {
+    /// Mirrors `xla::Literal::vec1` (constructible).
     pub fn vec1(_xs: &[i32]) -> Literal {
         Literal
     }
 
+    /// Mirrors `xla::Literal::reshape`; always fails in the stub.
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
         Err(Error(NO_BACKEND))
     }
 
+    /// Mirrors `xla::Literal::to_tuple1`; always fails in the stub.
     pub fn to_tuple1(&self) -> Result<Literal, Error> {
         Err(Error(NO_BACKEND))
     }
 
+    /// Mirrors `xla::Literal::to_vec`; always fails in the stub.
     pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
         Err(Error(NO_BACKEND))
     }
@@ -87,6 +96,7 @@ impl Literal {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Mirrors `xla::PjRtBuffer::to_literal_sync`; always fails.
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         Err(Error(NO_BACKEND))
     }

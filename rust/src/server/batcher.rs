@@ -54,7 +54,9 @@ impl BatcherHandle {
 /// Configuration for one dynamic batcher.
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherConfig {
+    /// Largest batch drained into one `execute_batch` call.
     pub max_batch: usize,
+    /// How long to wait for stragglers after the first queued row.
     pub max_wait: Duration,
 }
 
@@ -75,6 +77,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Start the worker thread for one (dataset, model) batcher.
     pub fn spawn(
         engine: EngineHandle,
         dataset: String,
@@ -89,6 +92,7 @@ impl Batcher {
         Batcher { handle: BatcherHandle { tx }, _join: join }
     }
 
+    /// A cheap, cloneable submission handle.
     pub fn handle(&self) -> BatcherHandle {
         self.handle.clone()
     }

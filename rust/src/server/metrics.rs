@@ -32,6 +32,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Record one latency sample (microseconds).
     pub fn record_us(&self, us: u64) {
         let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(11);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
@@ -40,10 +41,12 @@ impl Histogram {
         self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
+    /// Samples recorded so far.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean latency in microseconds (0.0 when empty).
     pub fn mean_us(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -53,6 +56,7 @@ impl Histogram {
         }
     }
 
+    /// Largest recorded sample (microseconds).
     pub fn max_us(&self) -> u64 {
         self.max_us.load(Ordering::Relaxed)
     }
@@ -101,6 +105,7 @@ pub struct ModelWindow {
 }
 
 impl ModelWindow {
+    /// Count one invocation of this model's stage and meter its cost.
     pub fn record_invocation(&self, cost_usd: f64) {
         self.invocations.fetch_add(1, Ordering::Relaxed);
         let nano = (cost_usd * 1e9).round().max(0.0) as u64;
@@ -119,11 +124,13 @@ impl ModelWindow {
         }
     }
 
+    /// Record ground truth for an answer this model produced.
     pub fn record_outcome(&self, correct: bool) {
         self.labeled.fetch_add(1, Ordering::Relaxed);
         self.labeled_correct.fetch_add(correct as u64, Ordering::Relaxed);
     }
 
+    /// Point-in-time copy of the window's counters.
     pub fn snapshot(&self) -> ModelWindowSnapshot {
         let invocations = self.invocations.load(Ordering::Relaxed);
         let accepted = self.accepted.load(Ordering::Relaxed);
@@ -152,11 +159,18 @@ impl ModelWindow {
 /// Point-in-time copy of one model's window.
 #[derive(Debug, Clone, Default)]
 pub struct ModelWindowSnapshot {
+    /// Times this model's stage was invoked.
     pub invocations: u64,
+    /// Times its answer was accepted.
     pub accepted: u64,
+    /// Metered spend attributed to it (USD).
     pub cost_usd: f64,
+    /// Mean of the *measured* acceptance scores (final-stage sentinel
+    /// acceptances excluded).
     pub mean_accepted_score: f64,
+    /// Accepted answers with ground truth reported back.
     pub labeled: u64,
+    /// Fraction of labeled answers that were correct.
     pub observed_accuracy: f64,
 }
 
@@ -168,11 +182,15 @@ pub struct ModelWindowSnapshot {
 /// cascade's own partial executions.
 #[derive(Debug, Clone)]
 pub struct Observation {
+    /// Ground-truth (or pseudo-label) answer class of the item.
     pub label: u32,
+    /// Billable prompt tokens of the item.
     pub input_tokens: u32,
-    /// `preds[m]` / `scores[m]` / `correct[m]`: model m's response.
+    /// `preds[m]`: model m's answer class.
     pub preds: Vec<u32>,
+    /// `scores[m]`: the reliability score of model m's answer.
     pub scores: Vec<f32>,
+    /// `correct[m]`: whether model m's answer matches `label`.
     pub correct: Vec<bool>,
 }
 
@@ -200,6 +218,7 @@ pub struct ObservationWindow {
 }
 
 impl ObservationWindow {
+    /// A hard ring (no decay) over `cap` rows covering `n_models` APIs.
     pub fn new(n_models: usize, cap: usize) -> Self {
         Self::with_half_life(n_models, cap, None)
     }
@@ -216,18 +235,22 @@ impl ObservationWindow {
         }
     }
 
+    /// Maximum rows retained.
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
+    /// The decay half-life in observations, if decay is configured.
     pub fn half_life(&self) -> Option<f64> {
         self.half_life
     }
 
+    /// Rows currently retained.
     pub fn len(&self) -> usize {
         self.rows.lock().unwrap().len()
     }
 
+    /// Whether the window holds no rows.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -237,6 +260,8 @@ impl ObservationWindow {
         self.total.load(Ordering::Relaxed)
     }
 
+    /// Append one fully-labelled observation (validates that it covers
+    /// every model); the oldest row falls off a full ring.
     pub fn push(&self, obs: Observation) -> Result<()> {
         if obs.preds.len() != self.n_models
             || obs.scores.len() != self.n_models
@@ -306,14 +331,19 @@ impl ObservationWindow {
 /// Aggregate serving metrics for one service instance.
 #[derive(Debug)]
 pub struct ServiceMetrics {
+    /// Queries answered (cache hits included).
     pub queries: AtomicU64,
+    /// Queries served from the completion cache.
     pub cache_hits: AtomicU64,
+    /// Queries that reached the cascade.
     pub cascade_invocations: AtomicU64,
     /// Queries answered at each cascade depth (0..MAX_STOP_DEPTH exact).
     stopped_at: [AtomicU64; MAX_STOP_DEPTH],
     /// Queries answered at depth ≥ MAX_STOP_DEPTH (counted, not dropped).
     stopped_at_overflow: AtomicU64,
+    /// Failed answers (engine or scorer errors).
     pub errors: AtomicU64,
+    /// End-to-end answer latency histogram.
     pub latency: Histogram,
     /// Plans published over this service's lifetime (initial plan = 0).
     pub plan_swaps: AtomicU64,
@@ -367,14 +397,17 @@ impl ServiceMetrics {
         };
     }
 
+    /// The per-model window of marketplace model `m`, if tracked.
     pub fn model(&self, m: usize) -> Option<&ModelWindow> {
         self.per_model.get(m)
     }
 
+    /// Number of per-model windows (0 for `Default`-built metrics).
     pub fn n_models(&self) -> usize {
         self.per_model.len()
     }
 
+    /// Point-in-time copy of every counter, for reports.
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             queries: self.queries.load(Ordering::Relaxed),
@@ -403,22 +436,35 @@ impl ServiceMetrics {
 /// A point-in-time copy of the metrics, for reports.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Queries answered (cache hits included).
     pub queries: u64,
+    /// Queries served from the completion cache.
     pub cache_hits: u64,
+    /// Queries that reached the cascade.
     pub cascade_invocations: u64,
     /// Exact counts for depths 0..MAX_STOP_DEPTH.
     pub stopped_at: Vec<u64>,
     /// Queries stopping at depth ≥ MAX_STOP_DEPTH.
     pub stopped_at_overflow: u64,
+    /// Failed answers.
     pub errors: u64,
+    /// Plans published over the service lifetime.
     pub plan_swaps: u64,
+    /// One snapshot per marketplace model.
     pub per_model: Vec<ModelWindowSnapshot>,
+    /// Rows currently in the observation window.
     pub window_len: usize,
+    /// Observations ever pushed (including evicted ones).
     pub window_total: u64,
+    /// Mean answer latency (µs).
     pub mean_latency_us: f64,
+    /// Median answer latency (µs, bucket upper bound).
     pub p50_us: u64,
+    /// 95th-percentile answer latency (µs, bucket upper bound).
     pub p95_us: u64,
+    /// 99th-percentile answer latency (µs, bucket upper bound).
     pub p99_us: u64,
+    /// Largest recorded answer latency (µs).
     pub max_us: u64,
 }
 

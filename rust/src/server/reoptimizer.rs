@@ -81,14 +81,22 @@ impl Default for ReoptimizerConfig {
 #[derive(Debug, Clone)]
 pub enum ReoptOutcome {
     /// Not enough labelled observations yet.
-    WindowTooSmall { have: usize, need: usize },
+    WindowTooSmall {
+        /// Rows currently in the window.
+        have: usize,
+        /// Configured `min_window`.
+        need: usize,
+    },
     /// The current plan survives (identical re-learn, inside hysteresis,
     /// or no plan fits the budget on this window — `reason` says which).
     Kept { reason: String },
     /// A new plan was published.
     Swapped {
+        /// Version of the published bundle.
         version: u64,
+        /// Window accuracy of the new plan.
         window_accuracy: f64,
+        /// Window average cost per query (USD) of the new plan.
         window_avg_cost: f64,
     },
 }
@@ -119,10 +127,13 @@ pub struct Reoptimizer {
 }
 
 impl Reoptimizer {
+    /// A driver for `svc` with the given tuning (no thread yet — use
+    /// [`Reoptimizer::step`] directly or [`Reoptimizer::spawn`]).
     pub fn new(svc: Arc<FrugalService>, cfg: ReoptimizerConfig) -> Reoptimizer {
         Reoptimizer { svc, cfg, steps: AtomicU64::new(0), swaps: AtomicU64::new(0) }
     }
 
+    /// The tuning this driver runs with.
     pub fn config(&self) -> &ReoptimizerConfig {
         &self.cfg
     }
@@ -246,6 +257,7 @@ pub struct ReoptimizerHandle {
 }
 
 impl ReoptimizerHandle {
+    /// Stop the background thread and join it.
     pub fn stop(mut self) {
         self.shutdown();
     }

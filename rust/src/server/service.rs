@@ -39,9 +39,11 @@ pub struct ServiceConfig {
     /// Master switch for the completion cache (Fig. 2c). Off = every query
     /// goes through the cascade (the "cascade only" ablation).
     pub cache_enabled: bool,
+    /// Entries the completion cache retains (LRU beyond this).
     pub cache_capacity: usize,
     /// Similarity threshold for the cache's MinHash tier (≥1.0 = exact only).
     pub cache_min_similarity: f64,
+    /// Prompt-adaptation policy applied before the cascade (Fig. 2a).
     pub prompt_policy: PromptPolicy,
     /// Optional hard budget cap (USD); when reached the service degrades
     /// to the first cascade stage only.
@@ -77,16 +79,22 @@ impl Default for ServiceConfig {
 /// `plan_version` all come from the *same* plan snapshot.
 #[derive(Debug, Clone)]
 pub struct ServiceAnswer {
+    /// The answer class returned to the client.
     pub answer: u32,
+    /// Whether the completion cache served it (no API was invoked).
     pub from_cache: bool,
+    /// Cascade stage that answered (0 for cache hits).
     pub stopped_at: usize,
     /// Marketplace index of the model whose answer was accepted
     /// (meaningless for cache hits, which skip the cascade).
     pub model: usize,
+    /// Metered marketplace spend of this answer (USD).
     pub cost_usd: f64,
     /// Version of the plan bundle that served this query.
     pub plan_version: u64,
+    /// Wall-clock service latency of this answer (µs).
     pub latency_us: u64,
+    /// Simulated commercial-API round-trip latency (ms).
     pub simulated_api_latency_ms: f64,
 }
 
@@ -130,10 +138,12 @@ impl PlanBundle {
         Ok(PlanBundle { plan, version, cascade, degraded })
     }
 
+    /// The learned plan this bundle serves.
     pub fn plan(&self) -> &CascadePlan {
         &self.plan
     }
 
+    /// Monotone version assigned at publish time.
     pub fn version(&self) -> u64 {
         self.version
     }
@@ -142,17 +152,22 @@ impl PlanBundle {
 /// One published plan swap, kept for the `report swaps` history.
 #[derive(Debug, Clone)]
 pub struct SwapEvent {
+    /// Version of the bundle this publish installed.
     pub version: u64,
     /// `metrics.queries` at publish time.
     pub at_query: u64,
+    /// Human-readable cause (manual swap, reoptimizer window stats, ...).
     pub reason: String,
+    /// The plan that was installed.
     pub plan: CascadePlan,
-    /// Window metrics of the new plan at publish time (reoptimizer swaps).
+    /// Window accuracy of the new plan at publish time (reoptimizer swaps).
     pub window_accuracy: Option<f64>,
+    /// Window avg cost of the new plan at publish time (reoptimizer swaps).
     pub window_avg_cost: Option<f64>,
 }
 
 impl SwapEvent {
+    /// JSON form for the swap log.
     pub fn to_value(&self) -> Value {
         let mut m = std::collections::HashMap::new();
         m.insert("version".to_string(), Value::Num(self.version as f64));
@@ -170,6 +185,7 @@ impl SwapEvent {
         Value::Obj(m)
     }
 
+    /// Parse an event serialized by [`SwapEvent::to_value`].
     pub fn from_value(v: &Value) -> Result<SwapEvent> {
         use anyhow::Context;
         Ok(SwapEvent {
@@ -211,6 +227,7 @@ impl PlanHandle {
         self.current.read().unwrap().clone()
     }
 
+    /// Version of the currently served bundle.
     pub fn version(&self) -> u64 {
         self.snapshot().version
     }
@@ -250,7 +267,9 @@ pub struct FrugalService {
     costs: CostModel,
     cache: Mutex<CompletionCache>,
     cfg: ServiceConfig,
+    /// Serving-time spend meter (drives the budget-cap degrade).
     pub budget: BudgetTracker,
+    /// All serving counters, including the observation window.
     pub metrics: Arc<ServiceMetrics>,
     meta: DatasetMeta,
     /// Shadow-scoring tap + worker (`cfg.shadow`): samples live queries
@@ -259,6 +278,8 @@ pub struct FrugalService {
 }
 
 impl FrugalService {
+    /// Build a service around an initial plan (spawning the shadow
+    /// worker when configured).
     pub fn new(
         plan: CascadePlan,
         engine: EngineHandle,
@@ -298,6 +319,7 @@ impl FrugalService {
         })
     }
 
+    /// Dataset geometry this service answers for.
     pub fn meta(&self) -> &DatasetMeta {
         &self.meta
     }
@@ -313,6 +335,7 @@ impl FrugalService {
         self.plans.snapshot()
     }
 
+    /// Version of the currently served plan.
     pub fn plan_version(&self) -> u64 {
         self.plans.version()
     }
@@ -485,10 +508,12 @@ impl FrugalService {
         self.shadow.as_ref().map(|s| s.snapshot())
     }
 
+    /// Handle to the engine actor this service executes on.
     pub fn engine_handle(&self) -> EngineHandle {
         self.engine.clone()
     }
 
+    /// The marketplace cost model this service meters with.
     pub fn costs(&self) -> &CostModel {
         &self.costs
     }

@@ -112,14 +112,17 @@ pub struct ShadowStats {
 }
 
 impl ShadowStats {
+    /// Metered shadow spend so far (USD).
     pub fn spend_usd(&self) -> f64 {
         self.spend_nano_usd.load(Ordering::Relaxed) as f64 / 1e9
     }
 
+    /// Whether the spend cap has been reached (sampling stopped).
     pub fn budget_exhausted(&self) -> bool {
         self.budget_exhausted.load(Ordering::Relaxed)
     }
 
+    /// Point-in-time copy of the counters.
     pub fn snapshot(&self) -> ShadowSnapshot {
         ShadowSnapshot {
             sampled: self.sampled.load(Ordering::Relaxed),
@@ -137,17 +140,26 @@ impl ShadowStats {
 /// Point-in-time copy of the shadow accounting (serve report, swap log).
 #[derive(Debug, Clone, Default)]
 pub struct ShadowSnapshot {
+    /// Queries the sampler picked.
     pub sampled: u64,
+    /// ... of which were enqueued for the worker.
     pub enqueued: u64,
+    /// ... of which were dropped because the queue was full.
     pub dropped_queue_full: u64,
+    /// Queries dropped after sampling because the budget ran out.
     pub skipped_budget: u64,
+    /// Observation rows completed and pushed into the window.
     pub completed: u64,
+    /// Rows lost to engine/batcher/window errors.
     pub errors: u64,
+    /// Metered shadow spend (USD).
     pub spend_usd: f64,
+    /// Whether the spend cap has been reached.
     pub budget_exhausted: bool,
 }
 
 impl ShadowSnapshot {
+    /// JSON form for the serve report and swap log.
     pub fn to_value(&self) -> Value {
         let mut m = std::collections::HashMap::new();
         m.insert("sampled".to_string(), Value::Num(self.sampled as f64));
@@ -361,10 +373,12 @@ impl Shadow {
         }
     }
 
+    /// Live (lock-free) accounting counters.
     pub fn stats(&self) -> &ShadowStats {
         &self.stats
     }
 
+    /// Point-in-time copy of the accounting.
     pub fn snapshot(&self) -> ShadowSnapshot {
         self.stats.snapshot()
     }

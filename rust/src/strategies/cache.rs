@@ -29,7 +29,9 @@ const NIL: usize = usize::MAX;
 /// A cached completion.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CachedAnswer {
+    /// The completion's answer class.
     pub answer: u32,
+    /// Reliability score the answer carried when cached.
     pub score: f32,
 }
 
@@ -43,14 +45,20 @@ struct Entry {
 /// Cache statistics.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
+    /// Total `get` calls.
     pub lookups: u64,
+    /// Hits on the exact-hash tier.
     pub exact_hits: u64,
+    /// Hits on the MinHash similar tier.
     pub similar_hits: u64,
+    /// New entries inserted.
     pub insertions: u64,
+    /// Entries evicted by the LRU bound.
     pub evictions: u64,
 }
 
 impl CacheStats {
+    /// Fraction of lookups served from either tier.
     pub fn hit_rate(&self) -> f64 {
         if self.lookups == 0 {
             0.0
@@ -79,6 +87,8 @@ pub struct CompletionCache {
 }
 
 impl CompletionCache {
+    /// A cache bounded to `capacity` entries; `min_similarity` ≥ 1.0
+    /// disables the MinHash similar tier.
     pub fn new(capacity: usize, min_similarity: f64) -> Self {
         assert!(capacity > 0);
         CompletionCache {
@@ -95,14 +105,17 @@ impl CompletionCache {
         }
     }
 
+    /// Counter snapshot (survives `clear`).
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
 
+    /// Entries currently cached.
     pub fn len(&self) -> usize {
         self.by_key.len()
     }
 
+    /// Whether the cache holds no entries.
     pub fn is_empty(&self) -> bool {
         self.by_key.is_empty()
     }

@@ -5,6 +5,7 @@ use std::collections::HashMap;
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Arguments that were not `--flag`s or their values, in order.
     pub positional: Vec<String>,
     flags: HashMap<String, String>,
     switches: Vec<String>,
@@ -35,26 +36,32 @@ impl Args {
         out
     }
 
+    /// Parse the process command line (skipping argv[0]).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Value of `--name value` / `--name=value`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// [`Args::get`] with a default.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// [`Args::get`] parsed as f64 (None if absent or unparsable).
     pub fn get_f64(&self, name: &str) -> Option<f64> {
         self.get(name).and_then(|s| s.parse().ok())
     }
 
+    /// [`Args::get`] parsed as usize (None if absent or unparsable).
     pub fn get_usize(&self, name: &str) -> Option<usize> {
         self.get(name).and_then(|s| s.parse().ok())
     }
 
+    /// Whether `--name` appeared (as a switch or with a value).
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
     }

@@ -9,15 +9,22 @@ use std::time::{Duration, Instant};
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name (suite/variant).
     pub name: String,
+    /// Timed iterations measured.
     pub iters: usize,
+    /// Mean iteration time.
     pub mean: Duration,
+    /// Median iteration time.
     pub p50: Duration,
+    /// 95th-percentile iteration time.
     pub p95: Duration,
+    /// Slowest iteration.
     pub max: Duration,
 }
 
 impl BenchResult {
+    /// The stable one-line human-readable report.
     pub fn report(&self) -> String {
         format!(
             "{:<32} iters={:<6} mean={:>10.3?} p50={:>10.3?} p95={:>10.3?} max={:>10.3?} ({:.1}/s)",

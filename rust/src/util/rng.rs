@@ -22,6 +22,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed the generator (any seed is fine, including 0).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let mut next = || {
@@ -31,6 +32,7 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]
             .wrapping_mul(5)
@@ -53,6 +55,7 @@ impl Rng {
         ((self.next_u64() as u128 * n as u128) >> 64) as u64
     }
 
+    /// Uniform in `[0, n)` as usize.
     pub fn usize_below(&mut self, n: usize) -> usize {
         self.below(n as u64) as usize
     }
@@ -62,6 +65,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }

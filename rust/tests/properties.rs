@@ -326,6 +326,100 @@ fn prop_uniform_weights_reproduce_unweighted_frontier_bitwise() {
     });
 }
 
+/// §Bitset acceptance: the packed-`u64` unweighted fast path and the f64
+/// `wcorr`-arena path (what the weighted search degenerates to at uniform
+/// weight 1.0 — the old byte-per-item semantics) produce **identical**
+/// results: frontier plans equal, accuracy and avg_cost bit-equal, and
+/// per-model accuracy / pairwise disagreement equal to a scalar byte-wise
+/// recount. Sizes are chosen to cover N ≡ 0 (mod 64) and tail words
+/// (N not a multiple of 64), so word packing and tail masking are both
+/// exercised.
+#[test]
+fn prop_packed_bitset_matches_byte_arena() {
+    check("packed-bitset-vs-byte-arena", 8, |rng| {
+        let k = 3 + rng.usize_below(3);
+        // Alternate exact word multiples and ragged tails.
+        let n = match rng.usize_below(4) {
+            0 => 64,
+            1 => 128,
+            2 => 64 + 1 + rng.usize_below(62), // 65..=126: one tail word
+            _ => 20 + rng.usize_below(230),
+        };
+        let grid = 4 + rng.usize_below(5);
+        let table = synthetic_table(
+            k,
+            n,
+            2 + rng.below(4) as u32,
+            0.5 + 0.5 * rng.f64(),
+            rng.next_u64(),
+        );
+        let costs = cost_model(k);
+        let toks = vec![40 + rng.below(100) as u32; n];
+        let opts = OptimizerOptions { grid, threads: Some(1), ..Default::default() };
+
+        // Packed fast path (unweighted table) ...
+        let packed_opt =
+            CascadeOptimizer::new(&table, &costs, toks.clone(), opts.clone()).unwrap();
+        // ... vs the f64 wcorr-arena path, forced via uniform weight 1.0
+        // (arithmetic there multiplies every term by exactly 1.0).
+        let byte_table = table.clone().with_weights(vec![1.0; n]).unwrap();
+        let byte_opt =
+            CascadeOptimizer::new(&byte_table, &costs, toks.clone(), opts.clone()).unwrap();
+
+        // Per-model accuracy: popcount == scalar recount, both paths.
+        for m in 0..k {
+            let scalar = (0..n).filter(|&i| table.is_correct(m, i)).count() as f64
+                / n as f64;
+            assert_eq!(table.accuracy(m).to_bits(), scalar.to_bits(), "model {m}");
+            assert_eq!(byte_table.accuracy(m).to_bits(), scalar.to_bits());
+        }
+        // Pairwise disagreement: bit-sliced planes == scalar recount.
+        for a in 0..k {
+            for b in 0..k {
+                let scalar = (0..n)
+                    .filter(|&i| table.pred(a, i) != table.pred(b, i))
+                    .count() as f64
+                    / n as f64;
+                assert_eq!(
+                    packed_opt.disagreement(a, b).to_bits(),
+                    scalar.to_bits(),
+                    "disagree({a},{b})"
+                );
+                assert_eq!(byte_opt.disagreement(a, b).to_bits(), scalar.to_bits());
+            }
+        }
+
+        // Identical frontiers: same plans, bit-equal metrics.
+        let packed = packed_opt.frontier();
+        let byte = byte_opt.frontier();
+        assert_eq!(packed.len(), byte.len(), "frontier sizes (n={n})");
+        for (j, (p, q)) in packed.iter().zip(&byte).enumerate() {
+            assert_eq!(p.plan, q.plan, "point {j} plan (n={n})");
+            assert_eq!(
+                p.accuracy.to_bits(),
+                q.accuracy.to_bits(),
+                "point {j}: packed acc {} vs byte {}",
+                p.accuracy,
+                q.accuracy
+            );
+            assert_eq!(
+                p.avg_cost.to_bits(),
+                q.avg_cost.to_bits(),
+                "point {j}: packed cost {} vs byte {}",
+                p.avg_cost,
+                q.avg_cost
+            );
+        }
+        // And the packed metrics are real: an independent replay from the
+        // packed table reproduces every point to 1e-12.
+        for p in &packed {
+            let r = replay::replay(&p.plan, &table, &costs, &toks);
+            assert!((r.accuracy - p.accuracy).abs() < 1e-12);
+            assert!((r.avg_cost - p.avg_cost).abs() < 1e-12);
+        }
+    });
+}
+
 /// Non-uniform weights: the weighted frontier is internally consistent —
 /// sorted and strictly improving, every point's reported metrics are
 /// reproduced by an independent *weighted* replay, the budget query stays

@@ -16,9 +16,11 @@ if ! command -v python3 >/dev/null 2>&1; then
     exit 1
 fi
 
-# Optimizer parity: seed == flat == brute-force reference, weighted search
-# uniform-bitwise + replay-consistent + budget-query-equivalent. --quick
-# skips only the slow pure-python wall-clock measurement.
+# Optimizer parity: seed == flat == packed == brute-force reference,
+# packed bitset exactly equal to the byte/f64 arena (tail words included),
+# weighted search uniform-bitwise + replay-consistent +
+# budget-query-equivalent. --quick skips only the slow pure-python
+# wall-clock measurement.
 python3 scripts/check_optimizer_port.py --quick
 
 scripts/tier1.sh
@@ -27,15 +29,37 @@ scripts/tier1.sh
 # on a small synthetic table. Writes to a scratch path — the committed
 # BENCH_optimizer.json trajectory is only ever refreshed by the nightly
 # bench workflow (or a deliberate `make bench-optimizer` on a
-# benchmarking host).
+# benchmarking host). The gate is strict: an empty results array or a
+# result missing name/iters/mean_ns fails the build (an empty `[]`
+# shipped unnoticed for three PRs).
 SMOKE_JSON="$(mktemp -t bench_smoke_XXXXXX.json)"
 trap 'rm -f "$SMOKE_JSON"' EXIT
 cargo bench --bench optimizer -- --smoke --json "$SMOKE_JSON"
 python3 - "$SMOKE_JSON" <<'EOF'
 import json, sys
 doc = json.load(open(sys.argv[1]))
-assert doc["suite"] == "optimizer" and doc["results"], "smoke bench wrote no results"
-print(f"bench smoke OK: {len(doc['results'])} results")
+assert doc.get("suite") == "optimizer", f"wrong suite: {doc.get('suite')!r}"
+results = doc.get("results")
+assert isinstance(results, list) and results, \
+    "smoke bench wrote an empty results array"
+for r in results:
+    assert isinstance(r.get("name"), str) and r["name"], f"result missing name: {r}"
+    assert isinstance(r.get("iters"), int) and r["iters"] > 0, f"bad iters: {r}"
+    assert isinstance(r.get("mean_ns"), (int, float)) and r["mean_ns"] > 0, \
+        f"bad mean_ns: {r}"
+print(f"bench smoke OK: {len(results)} schema-valid results")
+EOF
+
+# The committed perf trajectory must stay populated: results non-empty
+# (real measurements — the nightly workflow refreshes them) and the
+# cross-PR history preserved.
+python3 - BENCH_optimizer.json <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc.get("results"), "committed BENCH_optimizer.json has an empty results array"
+assert doc.get("history"), "committed BENCH_optimizer.json lost its history"
+print(f"committed BENCH_optimizer.json OK: {len(doc['results'])} results, "
+      f"{len(doc['history'])} history entries")
 EOF
 
 echo "ci.sh: all gates passed"
