@@ -1,13 +1,15 @@
-//! Quickstart: learn a cascade on HEADLINES and answer a few live queries.
+//! Quickstart: learn a cascade and answer a few live queries.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart -- --sim   # no artifacts
 //! ```
 //!
 //! This walks the full public API surface in ~60 lines:
-//! load artifacts → train the cascade under a budget → start the PJRT
-//! engine → answer real queries through the live cascade → compare spend
-//! against always-GPT-4.
+//! load artifacts (or build a hermetic `SimWorld` with `--sim`) → train
+//! the cascade under a budget → start the engine → answer real queries
+//! through the live cascade → compare spend against always-the-priciest
+//! API.
 
 use anyhow::{Context, Result};
 
@@ -15,11 +17,18 @@ use frugalgpt::coordinator::cascade::Cascade;
 use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
 use frugalgpt::coordinator::scorer::Scorer;
 use frugalgpt::data::Artifacts;
+use frugalgpt::eval::simulate::SimWorld;
 use frugalgpt::eval::{best_individual, individual_points};
 use frugalgpt::runtime::Engine;
+use frugalgpt::util::args::Args;
 
 fn main() -> Result<()> {
-    let art = Artifacts::load("artifacts").context("run `make artifacts` first")?;
+    let args = Args::from_env();
+    if args.has("sim") {
+        return run_sim();
+    }
+    let art = Artifacts::load(args.get_or("artifacts", "artifacts"))
+        .context("run `make artifacts` first (or pass --sim)")?;
     let ctx = art.context("headlines")?;
 
     // 1. What would the best single API cost?
@@ -70,6 +79,60 @@ fn main() -> Result<()> {
         correct as f64 / n as f64,
         spent / n as f64 * 1e4,
         ind.iter().find(|p| p.model == "gpt4").map(|p| p.avg_cost * 1e4).unwrap_or(0.0)
+    );
+    Ok(())
+}
+
+/// The same walk, hermetically: a synthetic marketplace + table-backed
+/// engine (`eval::simulate`) stand in for the artifacts. CI smoke-runs
+/// this path so the documented API surface cannot silently break.
+fn run_sim() -> Result<()> {
+    let world = SimWorld::new(4, 200, 7);
+    let toks = world.input_tokens();
+
+    let ind = individual_points(&world.table, &world.costs, &toks);
+    let best = best_individual(&ind);
+    println!(
+        "best individual API: {} — acc {:.3}, ${:.2} per 10k queries",
+        best.model,
+        best.accuracy,
+        best.avg_cost * 1e4
+    );
+
+    let budget = best.avg_cost * 1e4 / 5.0;
+    let opt = CascadeOptimizer::new(
+        &world.table,
+        &world.costs,
+        toks,
+        OptimizerOptions::default(),
+    )?;
+    let learned = opt.optimize(budget)?;
+    println!(
+        "learned cascade (budget ${budget:.2}/10k): {}",
+        learned.plan.describe(&world.costs.model_names)
+    );
+
+    let engine = world.engine()?;
+    let cascade = Cascade::new(
+        learned.plan.clone(),
+        engine.clone(),
+        Scorer::new(engine, world.meta.clone()),
+        world.costs.clone(),
+        world.meta.clone(),
+    )?;
+    let n = 32.min(world.len());
+    let mut correct = 0;
+    let mut spent = 0.0;
+    for i in 0..n {
+        let ans = cascade.answer(world.row(i))?;
+        correct += (ans.answer == world.labels()[i]) as usize;
+        spent += ans.cost;
+    }
+    println!(
+        "sim: {n} queries → acc {:.3}, avg ${:.2}/10k (priciest API: ${:.2}/10k)",
+        correct as f64 / n as f64,
+        spent / n as f64 * 1e4,
+        ind.last().map(|p| p.avg_cost * 1e4).unwrap_or(0.0)
     );
     Ok(())
 }

@@ -1,16 +1,21 @@
 //! End-to-end serving driver (the DESIGN.md "End-to-end validation" run).
 //!
-//! Loads the real AOT-compiled models, learns the cascade on the train
-//! split, then serves a concurrent stream of test queries through the full
-//! FrugalGPT service (completion cache → prompt adaptation → live LLM
-//! cascade over PJRT), with Zipf-repeated queries, multiple client
-//! threads, and a final latency/throughput/cost/accuracy report.
+//! Learns the cascade on the train split, then serves a concurrent stream
+//! of queries through the full FrugalGPT service — the strategy pipeline
+//! (completion cache → prompt adaptation → live LLM cascade), Zipf
+//! repeats, multiple client threads, and a final
+//! latency/throughput/cost/accuracy report with per-stage pipeline
+//! counters.
 //!
 //! ```sh
 //! cargo run --release --example serve_workload -- \
 //!     --dataset headlines --queries 600 --clients 4 --budget-frac 0.2 \
-//!     [--zipf] [--cache-similar] [--prompt-keep 4]
+//!     [--zipf] [--cache-similar] [--prompt-keep 4] [--sim]
 //! ```
+//!
+//! `--sim` swaps the PJRT artifacts for a hermetic synthetic marketplace
+//! (`eval::simulate::SimWorld`) — same serving stack, zero artifacts
+//! (CI smoke-runs this mode).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -20,7 +25,8 @@ use anyhow::{Context, Result};
 
 use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
 use frugalgpt::data::Artifacts;
-use frugalgpt::eval::{best_individual, individual_points};
+use frugalgpt::eval::simulate::SimWorld;
+use frugalgpt::eval::{best_individual, individual_points, IndividualPoint};
 use frugalgpt::runtime::Engine;
 use frugalgpt::server::service::{FrugalService, ServiceConfig};
 use frugalgpt::strategies::prompt::PromptPolicy;
@@ -34,33 +40,74 @@ fn main() -> Result<()> {
     let n_clients = args.get_usize("clients").unwrap_or(4);
     let budget_frac = args.get_f64("budget-frac").unwrap_or(0.2);
     let zipf = args.has("zipf");
+    let sim = args.has("sim");
 
-    let art = Artifacts::load(args.get_or("artifacts", "artifacts"))
-        .context("run `make artifacts` first")?;
-    let ctx = art.context(&dataset)?;
+    // Load the world: PJRT artifacts by default, the hermetic synthetic
+    // marketplace with --sim. Everything after this block is one code
+    // path.
+    struct World {
+        rows: Vec<Vec<i32>>,
+        labels: Vec<u32>,
+        meta: frugalgpt::data::DatasetMeta,
+        costs: frugalgpt::marketplace::CostModel,
+        train: frugalgpt::coordinator::responses::SplitTable,
+        train_tokens: Vec<u32>,
+        ind: Vec<IndividualPoint>,
+        engine: frugalgpt::runtime::EngineHandle,
+        _engine_owner: Option<Engine>,
+    }
+    let world = if sim {
+        let w = SimWorld::new(6, 512, 42);
+        let toks = w.input_tokens();
+        let ind = individual_points(&w.table, &w.costs, &toks);
+        World {
+            rows: w.rows().to_vec(),
+            labels: w.labels().to_vec(),
+            meta: w.meta.clone(),
+            costs: w.costs.clone(),
+            train: w.table.clone(),
+            train_tokens: toks,
+            ind,
+            engine: w.engine()?,
+            _engine_owner: None,
+        }
+    } else {
+        let art = Artifacts::load(args.get_or("artifacts", "artifacts"))
+            .context("run `make artifacts` first (or pass --sim)")?;
+        let ctx = art.context(&dataset)?;
+        let engine = Engine::start(&art)?;
+        let t0 = Instant::now();
+        let n_exe = engine.handle().preload(&dataset)?;
+        println!("preloaded {n_exe} executables in {:.2?}", t0.elapsed());
+        World {
+            rows: (0..ctx.test.len()).map(|i| ctx.test.tokens(i).to_vec()).collect(),
+            labels: ctx.test.labels.clone(),
+            meta: ctx.meta.clone(),
+            costs: ctx.costs.clone(),
+            train: ctx.table.train.clone(),
+            train_tokens: ctx.train_tokens.clone(),
+            ind: individual_points(&ctx.table.test, &ctx.costs, &ctx.test_tokens),
+            engine: engine.handle(),
+            _engine_owner: Some(engine),
+        }
+    };
 
     // Learn the cascade at budget_frac of the best individual API's cost.
-    let ind = individual_points(&ctx.table.test, &ctx.costs, &ctx.test_tokens);
-    let best = best_individual(&ind);
+    let best = best_individual(&world.ind);
     let budget = best.avg_cost * 1e4 * budget_frac;
     let opt = CascadeOptimizer::new(
-        &ctx.table.train,
-        &ctx.costs,
-        ctx.train_tokens.clone(),
+        &world.train,
+        &world.costs,
+        world.train_tokens.clone(),
         OptimizerOptions::default(),
     )?;
     let plan = opt.optimize(budget)?.plan;
     println!(
-        "[{dataset}] serving cascade {} (budget ${budget:.2}/10k = {budget_frac} x {})",
-        plan.describe(&ctx.costs.model_names),
+        "[{}] serving cascade {} (budget ${budget:.2}/10k = {budget_frac} x {})",
+        if sim { "sim" } else { dataset.as_str() },
+        plan.describe(&world.costs.model_names),
         best.model
     );
-
-    // Start the engine and pre-compile everything the cascade needs.
-    let engine = Engine::start(&art)?;
-    let t0 = Instant::now();
-    let n_exe = engine.handle().preload(&dataset)?;
-    println!("preloaded {n_exe} executables in {:.2?}", t0.elapsed());
 
     let cfg = ServiceConfig {
         cache_enabled: !args.has("no-cache"),
@@ -75,22 +122,23 @@ fn main() -> Result<()> {
     };
     let svc = Arc::new(FrugalService::new(
         plan,
-        engine.handle(),
-        ctx.costs.clone(),
-        ctx.meta.clone(),
+        world.engine.clone(),
+        world.costs.clone(),
+        world.meta.clone(),
         cfg,
     )?);
 
-    // Build the workload: uniform over the test split, or Zipf-repeated
-    // (a search-engine-like stream where the completion cache pays off).
-    let test = Arc::new(ctx.test);
+    // Build the workload: uniform over the items, or Zipf-repeated (a
+    // search-engine-like stream where the completion cache pays off).
+    let rows = Arc::new(world.rows);
+    let labels = Arc::new(world.labels);
     let mut rng = Rng::new(42);
     let work: Vec<usize> = (0..n_queries)
         .map(|_| {
             if zipf {
-                rng.zipf(test.len().min(256), 1.1)
+                rng.zipf(rows.len().min(256), 1.1)
             } else {
-                rng.usize_below(test.len())
+                rng.usize_below(rows.len())
             }
         })
         .collect();
@@ -103,7 +151,8 @@ fn main() -> Result<()> {
     let mut handles = Vec::new();
     for _ in 0..n_clients {
         let svc = svc.clone();
-        let test = test.clone();
+        let rows = rows.clone();
+        let labels = labels.clone();
         let work = work.clone();
         let next = next.clone();
         let correct = correct.clone();
@@ -114,8 +163,8 @@ fn main() -> Result<()> {
                     return Ok(());
                 }
                 let i = work[w];
-                let ans = svc.answer(test.tokens(i))?;
-                if ans.answer == test.labels[i] {
+                let ans = svc.answer(&rows[i])?;
+                if ans.answer == labels[i] {
                     correct.fetch_add(1, Ordering::Relaxed);
                 }
             }
@@ -158,9 +207,16 @@ fn main() -> Result<()> {
         m.p99_us as f64 / 1000.0,
         m.max_us as f64 / 1000.0,
     );
-    let stats = engine.handle().stats()?;
+    println!("per-stage pipeline counters:");
+    for s in svc.pipeline_metrics() {
+        println!(
+            "  {:>8}: {:>7} in  {:>7} answered  {:>7} transformed  {:>7} passed",
+            s.stage, s.queries, s.answered, s.transformed, s.passed
+        );
+    }
+    let stats = svc.engine_handle().stats()?;
     println!(
-        "engine: {} PJRT executions over {} executables",
+        "engine: {} executions over {} executables",
         stats.total_executions(),
         stats.compiled_executables
     );

@@ -1,124 +1,193 @@
-//! Live demonstration of the paper's §3 cost-reduction strategies and
-//! their composition, with REAL accuracy measurements (models executed
-//! through PJRT, not replayed from the offline table):
+//! The paper's §3 cost-reduction strategies as *pipeline ablations*:
+//! every configuration is a [`PipelineSpec`] driving the same
+//! `FrugalService` production serves (`strategies::pipeline`), so what
+//! this demo measures is exactly what `serve --pipeline ...` runs.
 //!
-//!  1. prompt adaptation — keep k ∈ {all, 4, 2, 0} in-context examples and
-//!     measure the real accuracy/cost trade-off (episodic queries need the
-//!     prompt; the models were trained to degrade gracefully),
-//!  2. completion cache — exact + similar tiers under a Zipf stream,
-//!  3. the composed stack (cache + prompt adaptation + cascade).
+//!  1. stack ablation — `cascade` → `cache,cascade` →
+//!     `cache,prompt,cascade` → the full stack, under a Zipf-repeated
+//!     stream (accuracy, $/10k, cache hit rate per stack);
+//!  2. query concatenation — `answer_batch` groups of g ∈ {1, 2, 8}
+//!     share one few-shot prompt and meter amortized input cost
+//!     (Fig. 2b);
+//!  3. per-stage pipeline counters of the full stack.
+//!
+//! Two engines, one code path:
+//! * default — the real AOT artifacts through PJRT (`make artifacts`
+//!   first); prompt adaptation then shows its REAL accuracy/cost
+//!   trade-off (the models degrade gracefully with fewer examples);
+//! * `--sim` — a hermetic synthetic marketplace
+//!   (`eval::simulate::SimWorld`, no artifacts, table-backed engine);
+//!   accuracy is held constant under truncation, so this mode shows the
+//!   billing side only. CI smoke-runs this mode.
 //!
 //! ```sh
-//! cargo run --release --example strategies_demo -- --queries 300
+//! cargo run --release --example strategies_demo -- --queries 300 [--sim]
 //! ```
 
 use anyhow::{Context, Result};
 
-use frugalgpt::coordinator::cascade::Cascade;
+use frugalgpt::coordinator::cascade::CascadePlan;
 use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
-use frugalgpt::coordinator::scorer::Scorer;
-use frugalgpt::data::Artifacts;
+use frugalgpt::data::{Artifacts, DatasetMeta};
+use frugalgpt::eval::simulate::SimWorld;
 use frugalgpt::eval::table::{pct, render, usd};
-use frugalgpt::runtime::Engine;
+use frugalgpt::marketplace::CostModel;
+use frugalgpt::runtime::{Engine, EngineHandle};
 use frugalgpt::server::service::{FrugalService, ServiceConfig};
+use frugalgpt::strategies::pipeline::PipelineSpec;
 use frugalgpt::strategies::prompt::PromptPolicy;
 use frugalgpt::util::args::Args;
 use frugalgpt::util::rng::Rng;
 
-fn main() -> Result<()> {
-    let args = Args::from_env();
-    let n = args.get_usize("queries").unwrap_or(300);
-    let art = Artifacts::load(args.get_or("artifacts", "artifacts"))
-        .context("run `make artifacts` first")?;
-    let ctx = art.context("headlines")?;
+/// Everything the demo needs, from either engine backing.
+struct Bench {
+    engine: EngineHandle,
+    meta: DatasetMeta,
+    costs: CostModel,
+    plan: CascadePlan,
+    rows: Vec<Vec<i32>>,
+    labels: Vec<u32>,
+    /// Keeps the PJRT actor alive in artifact mode.
+    _engine_owner: Option<Engine>,
+}
 
+fn sim_bench() -> Result<Bench> {
+    let world = SimWorld::new(6, 256, 42);
+    let opt = CascadeOptimizer::new(
+        &world.table,
+        &world.costs,
+        world.input_tokens(),
+        OptimizerOptions::default(),
+    )?;
+    let plan = opt.frontier().last().context("empty frontier")?.plan.clone();
+    Ok(Bench {
+        engine: world.engine()?,
+        meta: world.meta.clone(),
+        costs: world.costs.clone(),
+        plan,
+        rows: world.rows().to_vec(),
+        labels: world.labels().to_vec(),
+        _engine_owner: None,
+    })
+}
+
+fn artifact_bench(args: &Args) -> Result<Bench> {
+    let art = Artifacts::load(args.get_or("artifacts", "artifacts"))
+        .context("run `make artifacts` first (or pass --sim)")?;
+    let ctx = art.context("headlines")?;
     let opt = CascadeOptimizer::new(
         &ctx.table.train,
         &ctx.costs,
         ctx.train_tokens.clone(),
         OptimizerOptions::default(),
     )?;
-    let frontier = opt.frontier();
-    let plan = frontier.last().context("empty frontier")?.plan.clone();
-    println!("cascade: {}", plan.describe(&ctx.costs.model_names));
-
+    let plan = opt.frontier().last().context("empty frontier")?.plan.clone();
     let engine = Engine::start(&art)?;
     engine.handle().preload("headlines")?;
-    let n = n.min(ctx.test.len());
+    Ok(Bench {
+        engine: engine.handle(),
+        meta: ctx.meta.clone(),
+        costs: ctx.costs.clone(),
+        plan,
+        rows: (0..ctx.test.len()).map(|i| ctx.test.tokens(i).to_vec()).collect(),
+        labels: ctx.test.labels.clone(),
+        _engine_owner: Some(engine),
+    })
+}
 
-    // --- 1. prompt adaptation, measured live ---------------------------
-    println!("\n[1] prompt selection (live accuracy, {n} queries):");
-    let mut rows = Vec::new();
-    for policy in [
-        PromptPolicy::Full,
-        PromptPolicy::Fixed(4),
-        PromptPolicy::Fixed(2),
-        PromptPolicy::Fixed(0),
-        PromptPolicy::Adaptive { cheap: 0, full: 8 },
-    ] {
-        let cascade = Cascade::new(
-            plan.clone(),
-            engine.handle(),
-            Scorer::new(engine.handle(), ctx.meta.clone()),
-            ctx.costs.clone(),
-            ctx.meta.clone(),
-        )?;
-        let mut correct = 0usize;
-        let mut cost = 0.0;
-        for i in 0..n {
-            let adapted = policy.apply(ctx.test.tokens(i), &ctx.meta);
-            let ans = cascade.answer(&adapted)?;
-            correct += (ans.answer == ctx.test.labels[i]) as usize;
-            cost += ans.cost;
-        }
-        rows.push(vec![
-            format!("{policy:?}"),
-            pct(correct as f64 / n as f64),
-            usd(cost / n as f64 * 1e4),
-        ]);
-    }
-    print!("{}", render(&["policy", "live acc", "$/10k"], &rows));
+fn service(b: &Bench, spec: &str, policy: PromptPolicy, similar: f64) -> Result<FrugalService> {
+    FrugalService::new(
+        b.plan.clone(),
+        b.engine.clone(),
+        b.costs.clone(),
+        b.meta.clone(),
+        ServiceConfig {
+            cache_capacity: 1024,
+            cache_min_similarity: similar,
+            prompt_policy: policy,
+            pipeline: PipelineSpec::parse(spec)?,
+            ..ServiceConfig::default()
+        },
+    )
+}
 
-    // --- 2 + 3. completion cache & the composed stack ------------------
-    println!("\n[2] completion cache + composition (Zipf stream, {} queries):", n * 2);
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("queries").unwrap_or(300);
+    let b = if args.has("sim") { sim_bench()? } else { artifact_bench(&args)? };
+    let n = n.min(b.rows.len());
+    println!("cascade: {}", b.plan.describe(&b.costs.model_names));
+
+    // --- 1. stack ablation under a Zipf stream ------------------------
+    let stream_len = n * 2;
+    println!("\n[1] pipeline stack ablation (Zipf stream, {stream_len} queries):");
+    let cases: [(&str, &str, PromptPolicy, f64); 5] = [
+        ("cascade only", "cascade", PromptPolicy::Full, 1.0),
+        ("+ exact cache", "cache,cascade", PromptPolicy::Full, 1.0),
+        ("+ similar cache", "cache,cascade", PromptPolicy::Full, 0.8),
+        ("+ cache + prompt(2)", "cache,prompt,cascade", PromptPolicy::Fixed(2), 0.8),
+        ("full stack", "cache,shadow,prompt,budget,cascade", PromptPolicy::Fixed(2), 0.8),
+    ];
     let mut rows = Vec::new();
-    for (name, enabled, cache_sim, policy) in [
-        ("cascade only", false, 1.0_f64, PromptPolicy::Full),
-        ("+ exact cache", true, 1.0, PromptPolicy::Full),
-        ("+ similar cache", true, 0.8, PromptPolicy::Full),
-        ("+ cache + prompt(2)", true, 0.8, PromptPolicy::Fixed(2)),
-    ] {
-        let svc = FrugalService::new(
-            plan.clone(),
-            engine.handle(),
-            ctx.costs.clone(),
-            ctx.meta.clone(),
-            ServiceConfig {
-                cache_enabled: enabled,
-                cache_capacity: 1024,
-                cache_min_similarity: cache_sim,
-                prompt_policy: policy,
-                budget_cap_usd: None,
-                ..ServiceConfig::default()
-            },
-        )?;
+    let mut full_stack_svc = None;
+    for (name, spec, policy, similar) in cases {
+        let svc = service(&b, spec, policy, similar)?;
         let mut rng = Rng::new(7);
         let mut correct = 0usize;
-        let stream = n * 2;
-        for _ in 0..stream {
-            let i = rng.zipf(64.min(ctx.test.len()), 1.1);
-            let ans = svc.answer(ctx.test.tokens(i))?;
-            correct += (ans.answer == ctx.test.labels[i]) as usize;
+        for _ in 0..stream_len {
+            let i = rng.zipf(64.min(b.rows.len()), 1.1);
+            let ans = svc.answer(&b.rows[i])?;
+            correct += (ans.answer == b.labels[i]) as usize;
         }
         let m = svc.metrics.snapshot();
         rows.push(vec![
             name.to_string(),
-            pct(correct as f64 / stream as f64),
-            usd(svc.budget.avg_cost_usd() * 1e4),
+            format!("{spec}"),
+            pct(correct as f64 / stream_len as f64),
+            usd(svc.budget.spent_usd() / stream_len as f64 * 1e4),
             format!("{:.1}%", m.cache_hits as f64 / m.queries as f64 * 100.0),
         ]);
+        full_stack_svc = Some(svc);
     }
-    print!("{}", render(&["configuration", "live acc", "$/10k", "cache hit"], &rows));
-    println!("\n(cache hits answer repeats for $0; similar tier also catches near-duplicates)");
+    print!(
+        "{}",
+        render(&["configuration", "--pipeline", "acc", "$/10k", "cache hit"], &rows)
+    );
+
+    // --- 2. query concatenation via answer_batch ----------------------
+    println!("\n[2] query concatenation (answer_batch over {n} distinct queries):");
+    let mut rows = Vec::new();
+    for g in [1usize, 2, 8] {
+        // Cache off so every member exercises the cascade's amortized
+        // billing (a cache hit would cost $0 and mask the effect).
+        let svc = service(&b, "cascade", PromptPolicy::Full, 1.0)?;
+        let qrows: Vec<&[i32]> = b.rows[..n].iter().map(|r| r.as_slice()).collect();
+        let answers = svc.answer_batch(&qrows, g)?;
+        let correct = answers
+            .iter()
+            .zip(b.labels[..n].iter())
+            .filter(|(a, l)| a.answer == **l)
+            .count();
+        let m = svc.metrics.snapshot();
+        rows.push(vec![
+            format!("g={g}"),
+            format!("{}", m.concat_groups),
+            pct(correct as f64 / n as f64),
+            usd(svc.budget.spent_usd() / n as f64 * 1e4),
+        ]);
+    }
+    print!("{}", render(&["group", "groups formed", "acc", "$/10k"], &rows));
+    println!("(the shared few-shot prompt is billed once per group — paper Fig. 2b)");
+
+    // --- 3. per-stage counters of the full stack ----------------------
+    println!("\n[3] per-stage pipeline counters (full stack above):");
+    if let Some(svc) = full_stack_svc {
+        for s in svc.pipeline_metrics() {
+            println!(
+                "  {:>8}: {:>6} in  {:>6} answered  {:>6} transformed  {:>6} passed",
+                s.stage, s.queries, s.answered, s.transformed, s.passed
+            );
+        }
+    }
     Ok(())
 }

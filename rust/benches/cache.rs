@@ -19,12 +19,12 @@ fn main() {
     // exact-only cache, hit path
     let mut cache = CompletionCache::new(2048, 1.0);
     for q in &queries {
-        cache.put(q, CachedAnswer { answer: 1, score: 0.9 });
+        cache.put(q, CachedAnswer::fresh(1, 0.9));
     }
     let mut i = 0;
     let r = bench("cache/exact_hit", 100, Duration::from_secs(1), || {
         i = (i + 1) % queries.len();
-        black_box(cache.get(&queries[i]));
+        black_box(cache.get(&queries[i], 0));
     });
     println!("{}", r.report());
 
@@ -32,18 +32,18 @@ fn main() {
     let mut misses: Vec<Vec<i32>> = (0..1024).map(|_| query(&mut rng, 64)).collect();
     let r = bench("cache/exact_miss", 100, Duration::from_secs(1), || {
         i = (i + 1) % misses.len();
-        black_box(cache.get(&misses[i]));
+        black_box(cache.get(&misses[i], 0));
     });
     println!("{}", r.report());
 
     // similarity tier (MinHash scan) — the expensive lookup
     let mut sim = CompletionCache::new(512, 0.8);
     for q in queries.iter().take(512) {
-        sim.put(q, CachedAnswer { answer: 1, score: 0.9 });
+        sim.put(q, CachedAnswer::fresh(1, 0.9));
     }
     let r = bench("cache/similar_scan_512", 10, Duration::from_secs(1), || {
         i = (i + 1) % misses.len();
-        black_box(sim.get(&misses[i]));
+        black_box(sim.get(&misses[i], 0));
     });
     println!("{}", r.report());
 
@@ -52,7 +52,7 @@ fn main() {
     let r = bench("cache/insert_evict", 10, Duration::from_secs(1), || {
         i = (i + 1) % misses.len();
         misses[i][0] = (misses[i][0] + 1) % 160; // mutate → unique key
-        churn.put(&misses[i], CachedAnswer { answer: 0, score: 0.1 });
+        churn.put(&misses[i], CachedAnswer::fresh(0, 0.1));
         black_box(churn.len());
     });
     println!("{}", r.report());
@@ -63,24 +63,24 @@ fn main() {
     let big: Vec<Vec<i32>> = (0..10_000).map(|_| query(&mut rng, 64)).collect();
     let mut cache10k = CompletionCache::new(10_000, 1.0);
     for q in &big {
-        cache10k.put(q, CachedAnswer { answer: 1, score: 0.9 });
+        cache10k.put(q, CachedAnswer::fresh(1, 0.9));
     }
     let r = bench("cache/exact_hit_cap10k", 100, Duration::from_secs(1), || {
         i = (i + 1) % big.len();
-        black_box(cache10k.get(&big[i]));
+        black_box(cache10k.get(&big[i], 0));
     });
     println!("{}", r.report());
 
     // same capacity, churn: insert over a full 10k cache (evict + insert)
     let mut churn10k = CompletionCache::new(10_000, 1.0);
     for q in &big {
-        churn10k.put(q, CachedAnswer { answer: 1, score: 0.9 });
+        churn10k.put(q, CachedAnswer::fresh(1, 0.9));
     }
     let mut fresh: Vec<Vec<i32>> = (0..1024).map(|_| query(&mut rng, 64)).collect();
     let r = bench("cache/insert_evict_cap10k", 10, Duration::from_secs(1), || {
         i = (i + 1) % fresh.len();
         fresh[i][0] = (fresh[i][0] + 1) % 160;
-        churn10k.put(&fresh[i], CachedAnswer { answer: 0, score: 0.1 });
+        churn10k.put(&fresh[i], CachedAnswer::fresh(0, 0.1));
         black_box(churn10k.len());
     });
     println!("{}", r.report());

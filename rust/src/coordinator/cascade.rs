@@ -416,7 +416,16 @@ impl Cascade {
     /// (argmax over class logits = the "generation") and, unless it is the
     /// final stage, the scorer artifact on `[query; answer]`.
     pub fn answer(&self, tokens: &[i32]) -> Result<CascadeAnswer> {
-        let input_tokens = prompt::input_tokens(tokens);
+        self.answer_billed(tokens, prompt::input_tokens(tokens))
+    }
+
+    /// [`Cascade::answer`] with an explicit billable input-token count.
+    /// Execution is identical; only cost metering (and the simulated API
+    /// latency model) uses `input_tokens`. This is the hook for
+    /// concatenation-amortized billing (`strategies::concat`): a query
+    /// that shares its few-shot prompt with a group is billed
+    /// `prompt/g + query` tokens instead of the full row.
+    pub fn answer_billed(&self, tokens: &[i32], input_tokens: u32) -> Result<CascadeAnswer> {
         let mut cost = 0.0;
         let mut stage_costs = Vec::with_capacity(self.plan.stages.len());
         let mut sim_lat = 0.0;

@@ -63,8 +63,10 @@
 //! every aggregate becomes weighted: the workspace stores *weight-scaled*
 //! per-item costs (`wᵢ·cᵢ`) and a weighted-correctness arena (`wᵢ` where
 //! correct, else 0), disagreement fractions and accuracies divide by
-//! `Σ wᵢ`, and the incremental sweeps add/subtract the scaled entries with
-//! the exact same update structure as the unweighted search.
+//! `Σ wᵢ`, the τ_a grid places its points at *weighted* score quantiles
+//! (see [`quantile_grid`] — uniform weights reproduce the positional grid
+//! bit-for-bit), and the incremental sweeps add/subtract the scaled
+//! entries with the exact same update structure as the unweighted search.
 //!
 //! The two correctness representations live behind one dispatch
 //! (`CorrStore` selects the packed-`u64` fast path when weights are
@@ -385,15 +387,8 @@ impl Workspace {
                     .partial_cmp(&scores[a as usize])
                     .unwrap_or(std::cmp::Ordering::Equal)
             });
-            let mut qs = Vec::with_capacity(grid);
-            for g in 0..grid {
-                let pos = ((g + 1) * n) / (grid + 1);
-                let pos = pos.min(n.saturating_sub(1));
-                qs.push(scores[idx[pos] as usize]);
-            }
-            qs.dedup();
+            quantiles.push(quantile_grid(scores, &idx, weights, total_weight, grid));
             order.extend_from_slice(&idx);
-            quantiles.push(qs);
         }
 
         // Correctness store: borrow the table's packed rows (one memcpy
@@ -1018,6 +1013,62 @@ pub fn uniform_tokens(n: usize, tokens: u32) -> Vec<u32> {
     vec![tokens; n]
 }
 
+/// The τ_a grid of one model: `grid` score thresholds over the
+/// score-descending `order`, consecutive duplicates deduped.
+///
+/// Unweighted tables get *positional* quantiles (grid point g sits at
+/// order index `⌊(g+1)·n/(grid+1)⌋`). With per-item observation weights
+/// (decay windows) the grid is *weight-aware*: point g sits at the first
+/// order position whose cumulative observation mass exceeds
+/// `(g+1)/(grid+1)` of the total, so under heavy decay the grid
+/// concentrates where the mass actually is instead of spending most
+/// points on near-zero-weight stale rows.
+///
+/// For uniform weights the cumulative walk reproduces the positional grid
+/// **bit-for-bit**: with w ≡ c the stop condition `cum + c <= target`
+/// compares exact multiples of c against `(g+1)·n·c/(grid+1)`, which
+/// floors to exactly the positional index (the same power-of-two-scaling
+/// argument as the §Weights frontier bit-parity property; pinned by
+/// `weighted_grid_uniform_matches_positional_bitwise` and executed by
+/// `scripts/check_optimizer_port.py` gate \[3/5\](d)).
+pub fn quantile_grid(
+    scores: &[f32],
+    order: &[u32],
+    weights: Option<&[f64]>,
+    total_weight: f64,
+    grid: usize,
+) -> Vec<f32> {
+    let n = order.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut qs = Vec::with_capacity(grid);
+    match weights {
+        None => {
+            for g in 0..grid {
+                let pos = (((g + 1) * n) / (grid + 1)).min(n - 1);
+                qs.push(scores[order[pos] as usize]);
+            }
+        }
+        Some(w) => {
+            // One monotone walk: targets increase with g, so `pos` only
+            // ever advances — O(n + grid) total, like the positional path.
+            let mut cum = 0.0f64;
+            let mut pos = 0usize;
+            for g in 0..grid {
+                let target = (g + 1) as f64 * total_weight / (grid + 1) as f64;
+                while pos + 1 < n && cum + w[order[pos] as usize] <= target {
+                    cum += w[order[pos] as usize];
+                    pos += 1;
+                }
+                qs.push(scores[order[pos] as usize]);
+            }
+        }
+    }
+    qs.dedup();
+    qs
+}
+
 /// Best plan on a frontier whose average cost fits
 /// `budget_usd_per_10k / 10_000` — the budget query of paper §3, factored
 /// out of [`CascadeOptimizer::optimize`] so frontiers restored from disk
@@ -1302,6 +1353,105 @@ mod tests {
         assert_eq!(pb.plan, p.plan);
         assert_eq!(pb.accuracy.to_bits(), p.accuracy.to_bits());
         assert_eq!(pb.avg_cost.to_bits(), p.avg_cost.to_bits());
+    }
+
+    /// Score-descending order + the positional grid, computed naively —
+    /// the independent reference for the quantile-grid tests.
+    fn sorted_order(scores: &[f32]) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b as usize]
+                .partial_cmp(&scores[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx
+    }
+
+    #[test]
+    fn weighted_grid_uniform_matches_positional_bitwise() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x9A1D);
+        for n in [1usize, 7, 64, 201] {
+            let scores: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+            let order = sorted_order(&scores);
+            for grid in [4usize, 8, 24] {
+                let positional = quantile_grid(&scores, &order, None, n as f64, grid);
+                for c in [1.0f64, 0.5, 2.0, 0.25] {
+                    let w = vec![c; n];
+                    let mut total = 0.0;
+                    for &wi in &w {
+                        total += wi;
+                    }
+                    let weighted = quantile_grid(&scores, &order, Some(&w), total, grid);
+                    assert_eq!(positional.len(), weighted.len(), "n={n} grid={grid} c={c}");
+                    for (p, q) in positional.iter().zip(&weighted) {
+                        assert_eq!(p.to_bits(), q.to_bits(), "n={n} grid={grid} c={c}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_grid_matches_prefix_sum_reference() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xF00D);
+        for _ in 0..20 {
+            let n = 2 + rng.below(120) as usize;
+            let grid = 3 + rng.below(8) as usize;
+            let scores: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+            let w: Vec<f64> = (0..n).map(|_| 0.25 + 3.75 * rng.f64()).collect();
+            let order = sorted_order(&scores);
+            let mut total = 0.0;
+            for &wi in &w {
+                total += wi;
+            }
+            // Independent definition: grid point g = score of the first
+            // order position whose cumulative mass exceeds the target.
+            let mut prefix = vec![0.0f64; n + 1];
+            for (p, &iu) in order.iter().enumerate() {
+                prefix[p + 1] = prefix[p] + w[iu as usize];
+            }
+            let mut want = Vec::new();
+            for g in 0..grid {
+                let target = (g + 1) as f64 * total / (grid + 1) as f64;
+                let pos =
+                    (0..n).find(|&p| prefix[p + 1] > target).unwrap_or(n - 1);
+                want.push(scores[order[pos] as usize]);
+            }
+            want.dedup();
+            let got = quantile_grid(&scores, &order, Some(&w), total, grid);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn decayed_weights_pull_grid_into_the_mass() {
+        // All observation mass on the 4 highest-scoring items: every grid
+        // point must come from that top slice, while the positional grid
+        // still spreads across the stale tail.
+        let n = 64usize;
+        let scores: Vec<f32> = (0..n).map(|i| 1.0 - i as f32 / n as f32).collect();
+        let order = sorted_order(&scores);
+        let mut w = vec![1e-9f64; n];
+        for &iu in order.iter().take(4) {
+            w[iu as usize] = 1.0;
+        }
+        let mut total = 0.0;
+        for &wi in &w {
+            total += wi;
+        }
+        let weighted = quantile_grid(&scores, &order, Some(&w), total, 8);
+        let top: Vec<f32> =
+            order.iter().take(4).map(|&i| scores[i as usize]).collect();
+        for q in &weighted {
+            assert!(top.contains(q), "grid point {q} outside the mass-carrying top slice");
+        }
+        let positional = quantile_grid(&scores, &order, None, n as f64, 8);
+        assert!(
+            positional.iter().any(|q| !top.contains(q)),
+            "positional grid should spread into the zero-mass tail"
+        );
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Table-backed serving simulation: drive the *real* serving stack
+//! (`FrugalService`, the strategy pipeline, the live `Cascade`) from an
+//! offline [`SplitTable`] instead of PJRT artifacts.
+//!
+//! [`table_backed_engine`] wraps a response table as an
+//! [`EngineHandle::simulated`] actor: executing model `m` on an item's
+//! token row returns one-hot logits at `table.pred(m, i)`, and executing
+//! the scorer on a `[query; answer]` row returns the logit whose sigmoid
+//! is the table's score for that (item, answer). Rows are recognized by
+//! their *query segment*, which is invariant under prompt adaptation —
+//! so a truncated prompt still resolves to its item, exactly like the
+//! real artifacts (whose simulated models degrade gracefully instead; the
+//! table-backed engine holds accuracy constant under truncation, making
+//! it the *billing-side* simulation).
+//!
+//! Two users:
+//! * `report strategies` — ablates pipeline stacks over the real
+//!   response-table artifacts, deterministically and PJRT-free;
+//! * [`SimWorld`] — a fully synthetic marketplace (table, prices, token
+//!   layout, engine) for the examples' `--sim` mode and hermetic CI
+//!   smoke runs: the whole serving stack end-to-end with zero artifacts.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::responses::{synthetic_table, SplitTable};
+use crate::data::{layout, prompt, DatasetMeta};
+use crate::marketplace::{CostModel, LatencyModel, Pricing};
+use crate::runtime::EngineHandle;
+
+/// Wrap `table` as a simulated engine actor. `rows[i]` must be item i's
+/// full token row in `meta`'s layout; models are resolved by name against
+/// `table.model_names`, plus the reliability `"scorer"`.
+pub fn table_backed_engine(
+    table: SplitTable,
+    rows: &[Vec<i32>],
+    meta: DatasetMeta,
+) -> Result<EngineHandle> {
+    if rows.len() != table.len() {
+        bail!("{} rows for a table of {} items", rows.len(), table.len());
+    }
+    let qlen = meta.query_len();
+    let mut by_segment: HashMap<Vec<i32>, usize> = HashMap::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        if row.len() < meta.q_offset + qlen {
+            bail!("row {i} shorter than the query segment");
+        }
+        by_segment.insert(prompt::query_segment(row, &meta).to_vec(), i);
+    }
+    Ok(EngineHandle::simulated(move |_ds, model, batch| {
+        let mut out = Vec::with_capacity(batch.len());
+        for r in batch {
+            if model == "scorer" {
+                // Scorer rows carry the query segment (qlen = meta.qlen+2
+                // tokens) at the front and the answer token right after
+                // it, at index meta.qlen + 2 == qlen (see
+                // prompt::scorer_input) — so the row must be at least
+                // qlen + 1 long for both reads below.
+                if r.len() < qlen + 1 {
+                    bail!("scorer row shorter than query segment + answer token");
+                }
+                let Some(&item) = by_segment.get(&r[..qlen]) else {
+                    bail!("scorer row does not match any item's query segment");
+                };
+                let answer = (r[meta.qlen + 2] - layout::LABEL_BASE) as u32;
+                // g(q, a) depends only on the (query, answer) pair, so any
+                // model that gave this answer carries its table score.
+                let score = (0..table.n_models())
+                    .find(|&m| table.pred(m, item) == answer)
+                    .map(|m| f64::from(table.score(m, item)))
+                    .unwrap_or(0.05)
+                    .clamp(1e-6, 1.0 - 1e-6);
+                out.push(vec![(score / (1.0 - score)).ln() as f32]);
+            } else {
+                let Some(m) = table.model_names.iter().position(|n| n == model) else {
+                    bail!("unknown table-backed model {model}");
+                };
+                if r.len() < meta.q_offset + qlen {
+                    bail!("model row shorter than the query segment");
+                }
+                let Some(&item) = by_segment.get(prompt::query_segment(r, &meta)) else {
+                    bail!("model row does not match any item's query segment");
+                };
+                let mut logits = vec![0.0f32; meta.n_classes];
+                logits[table.pred(m, item) as usize] = 1.0;
+                out.push(logits);
+            }
+        }
+        Ok(out)
+    }))
+}
+
+/// A self-consistent synthetic marketplace: K APIs with rising accuracy
+/// ([`synthetic_table`]) and rising Table-1-style prices (two orders of
+/// magnitude input-price spread, like the paper's testbed), one token
+/// layout with a real few-shot prompt segment (so prompt adaptation and
+/// concatenation have something to save), and a [`table_backed_engine`]
+/// that answers exactly per the table. Everything the serving stack
+/// needs, no artifacts.
+pub struct SimWorld {
+    /// Dataset geometry of the generated rows.
+    pub meta: DatasetMeta,
+    /// Marketplace pricing aligned with the table's model order.
+    pub costs: CostModel,
+    /// The response table the engine answers from (labels included).
+    pub table: SplitTable,
+    rows: Vec<Vec<i32>>,
+}
+
+/// Answer classes of the sim world (fixed small, like the paper's tasks).
+const SIM_CLASSES: u32 = 4;
+
+impl SimWorld {
+    /// A world of `k` APIs over `n` items, deterministic in `seed`.
+    pub fn new(k: usize, n: usize, seed: u64) -> SimWorld {
+        let meta = DatasetMeta {
+            name: "sim".into(),
+            seq: 20,
+            n_classes: SIM_CLASSES as usize,
+            n_examples: 4,
+            qlen: 6,
+            block_len: 3,
+            q_offset: 12,
+            scorer_seq: 20,
+            answer_lens: vec![1; SIM_CLASSES as usize],
+        };
+        let table = synthetic_table(k, n, SIM_CLASSES, 0.9, seed);
+        let span = (k.max(2) - 1) as f64;
+        let costs = CostModel {
+            dataset: "sim".into(),
+            model_names: table.model_names.clone(),
+            // Smooth two-orders-of-magnitude price ladder: api_0 at $2 /
+            // 10M tokens up to $200 for the priciest, mirroring Table 1's
+            // spread.
+            pricing: (0..k)
+                .map(|m| {
+                    let usd = 2.0 * 100f64.powf(m as f64 / span);
+                    Pricing::new(usd, usd, 0.0)
+                })
+                .collect(),
+            latency: (0..k)
+                .map(|m| LatencyModel {
+                    base_ms: 30.0 + m as f64,
+                    per_1k_tokens_ms: 30.0,
+                })
+                .collect(),
+            answer_lens: vec![1; SIM_CLASSES as usize],
+        };
+        let rows = (0..n).map(|i| sim_row(&meta, i)).collect();
+        SimWorld { meta, costs, table, rows }
+    }
+
+    /// Items in the world.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether the world holds no items.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Item i's full token row.
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.rows[i]
+    }
+
+    /// All token rows (item order).
+    pub fn rows(&self) -> &[Vec<i32>] {
+        &self.rows
+    }
+
+    /// Ground-truth labels (item order).
+    pub fn labels(&self) -> &[u32] {
+        &self.table.labels
+    }
+
+    /// Billable input tokens per item (uniform layout).
+    pub fn input_tokens(&self) -> Vec<u32> {
+        self.rows.iter().map(|r| prompt::input_tokens(r)).collect()
+    }
+
+    /// Spawn a [`table_backed_engine`] actor for this world.
+    pub fn engine(&self) -> Result<EngineHandle> {
+        table_backed_engine(self.table.clone(), &self.rows, self.meta.clone())
+    }
+}
+
+/// Item i's token row: 4 dense example blocks, then `[CLS] body [QSEP]`
+/// with the item id in the body (each item's query segment is unique, so
+/// the table-backed engine can resolve it).
+fn sim_row(meta: &DatasetMeta, i: usize) -> Vec<i32> {
+    let mut row = vec![layout::PAD; meta.seq];
+    for j in 0..meta.n_examples {
+        row[j * meta.block_len] = layout::SEP_EX;
+        row[j * meta.block_len + 1] = 20 + j as i32;
+        row[j * meta.block_len + 2] = layout::LABEL_BASE + (j % meta.n_classes) as i32;
+    }
+    row[meta.q_offset] = layout::CLS;
+    row[meta.q_offset + 1] = 100 + i as i32;
+    for p in 1..meta.qlen {
+        row[meta.q_offset + 1 + p] = 30 + p as i32;
+    }
+    row[meta.q_offset + 1 + meta.qlen] = layout::QSEP;
+    row
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cascade::argmax;
+    use crate::coordinator::scorer::sigmoid;
+
+    #[test]
+    fn engine_answers_exactly_per_table() {
+        let w = SimWorld::new(3, 24, 11);
+        let h = w.engine().unwrap();
+        for i in [0usize, 7, 23] {
+            for m in 0..3 {
+                let logits = h
+                    .execute("sim", &w.table.model_names[m], w.row(i).to_vec())
+                    .unwrap();
+                assert_eq!(argmax(&logits) as u32, w.table.pred(m, i), "item {i} model {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn prompt_truncated_rows_still_resolve() {
+        let w = SimWorld::new(3, 8, 5);
+        let h = w.engine().unwrap();
+        let cut = prompt::truncate_examples(w.row(3), &w.meta, 1);
+        let logits = h.execute("sim", &w.table.model_names[2], cut).unwrap();
+        assert_eq!(argmax(&logits) as u32, w.table.pred(2, 3));
+    }
+
+    #[test]
+    fn scorer_logit_recovers_table_score() {
+        let w = SimWorld::new(3, 16, 9);
+        let h = w.engine().unwrap();
+        let (i, m) = (5usize, 1usize);
+        let answer = w.table.pred(m, i);
+        let row = prompt::scorer_input(w.row(i), &w.meta, answer);
+        let logits = h.execute("sim", "scorer", row).unwrap();
+        let got = sigmoid(logits[0]);
+        assert!(
+            (f64::from(got) - f64::from(w.table.score(m, i))).abs() < 1e-3,
+            "score {} vs table {}",
+            got,
+            w.table.score(m, i)
+        );
+    }
+
+    #[test]
+    fn unknown_rows_error_instead_of_misattributing() {
+        let w = SimWorld::new(2, 4, 3);
+        let h = w.engine().unwrap();
+        let mut bogus = w.row(0).to_vec();
+        bogus[w.meta.q_offset + 1] = 9999; // unknown query segment
+        assert!(h.execute("sim", &w.table.model_names[0], bogus).is_err());
+        assert!(h
+            .execute("sim", "nonexistent_model", w.row(0).to_vec())
+            .is_err());
+    }
+
+    #[test]
+    fn world_is_deterministic_in_seed() {
+        let a = SimWorld::new(4, 32, 42);
+        let b = SimWorld::new(4, 32, 42);
+        assert_eq!(a.labels(), b.labels());
+        assert_eq!(a.rows(), b.rows());
+        assert_eq!(a.table.pred(2, 9), b.table.pred(2, 9));
+        assert_eq!(a.input_tokens(), b.input_tokens());
+        assert_eq!(a.input_tokens()[0], 20, "12 prompt + 8 query tokens");
+    }
+}

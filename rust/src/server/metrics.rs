@@ -337,6 +337,9 @@ pub struct ServiceMetrics {
     pub cache_hits: AtomicU64,
     /// Queries that reached the cascade.
     pub cascade_invocations: AtomicU64,
+    /// Concatenation groups formed by `answer_batch` (paper Fig. 2b);
+    /// each group bills its shared prompt once.
+    pub concat_groups: AtomicU64,
     /// Queries answered at each cascade depth (0..MAX_STOP_DEPTH exact).
     stopped_at: [AtomicU64; MAX_STOP_DEPTH],
     /// Queries answered at depth ≥ MAX_STOP_DEPTH (counted, not dropped).
@@ -378,6 +381,7 @@ impl ServiceMetrics {
             queries: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cascade_invocations: AtomicU64::new(0),
+            concat_groups: AtomicU64::new(0),
             stopped_at: Default::default(),
             stopped_at_overflow: AtomicU64::new(0),
             errors: AtomicU64::new(0),
@@ -413,6 +417,7 @@ impl ServiceMetrics {
             queries: self.queries.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cascade_invocations: self.cascade_invocations.load(Ordering::Relaxed),
+            concat_groups: self.concat_groups.load(Ordering::Relaxed),
             stopped_at: self
                 .stopped_at
                 .iter()
@@ -442,6 +447,8 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     /// Queries that reached the cascade.
     pub cascade_invocations: u64,
+    /// Concatenation groups formed by `answer_batch`.
+    pub concat_groups: u64,
     /// Exact counts for depths 0..MAX_STOP_DEPTH.
     pub stopped_at: Vec<u64>,
     /// Queries stopping at depth ≥ MAX_STOP_DEPTH.

@@ -1,9 +1,10 @@
 //! The serving front end: request intake, dynamic batching, metrics, the
-//! composed FrugalGPT service (cache → prompt adaptation → cascade →
-//! budget metering), shadow scoring of sampled live traffic, and the
-//! online re-optimization loop that re-learns and hot-swaps the served
-//! cascade as traffic drifts — with shadow + decay windows the loop is
-//! self-contained: no offline labels enter it.
+//! composed FrugalGPT service (a `strategies::pipeline` stack — by
+//! default cache → shadow tap → prompt adaptation → budget degrade →
+//! cascade — with composition as data), shadow scoring of sampled live
+//! traffic, and the online re-optimization loop that re-learns and
+//! hot-swaps the served cascade as traffic drifts — with shadow + decay
+//! windows the loop is self-contained: no offline labels enter it.
 
 pub mod batcher;
 pub mod metrics;

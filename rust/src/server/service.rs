@@ -1,19 +1,37 @@
-//! The composed FrugalGPT service: completion cache → prompt adaptation →
-//! LLM cascade, with budget metering and metrics (paper Fig. 1b: all
-//! three cost-reduction strategies stacked in front of the marketplace).
+//! The composed FrugalGPT service: a [`Pipeline`] of first-class strategy
+//! stages (paper Fig. 1b — completion cache, shadow tap, prompt
+//! adaptation, budget degrade) terminating in the LLM cascade executor.
+//! The stack is data ([`ServiceConfig::pipeline`], `serve --pipeline
+//! cache,prompt,cascade`), so ablations and production serve the same
+//! code path; [`FrugalService::answer_batch`] additionally forms query
+//! concatenation groups (Fig. 2b) and meters prompt-amortized input cost
+//! — all three paper strategy families behind one API.
 //!
 //! §Plan lifecycle — the served cascade is no longer a constructor-frozen
 //! pair: the service routes every query through a [`PlanHandle`], an
 //! atomically swappable `Arc` over an immutable [`PlanBundle`]
 //! (plan + live cascade + degraded cascade, all built together).
-//! `answer()` grabs one snapshot up front and uses only that bundle for
-//! the whole query, so a concurrent swap can never mix stages, costs, or
-//! models from two plans inside one answer. Publishers
-//! (`swap_plan` / the `server::reoptimizer` loop) build the new bundle
-//! *outside* the lock and swap a single pointer under a write lock held
-//! for nanoseconds; readers clone the `Arc` under the read lock, so they
-//! never wait on plan construction. Every publish is recorded as a
-//! [`SwapEvent`] for the swap-history report.
+//! `answer()` grabs one snapshot up front, every pipeline stage reads the
+//! plan through the [`QueryCtx`] built around that snapshot, so a
+//! concurrent swap can never mix stages, costs, or models from two plans
+//! inside one answer. Publishers (`swap_plan` / the `server::reoptimizer`
+//! loop) build the new bundle *outside* the lock and swap a single
+//! pointer under a write lock held for nanoseconds; readers clone the
+//! `Arc` under the read lock, so they never wait on plan construction.
+//! Every publish is recorded as a [`SwapEvent`] for the swap-history
+//! report.
+//!
+//! §Cache generations — a publish no longer wipes the completion cache.
+//! Entries are stamped with the plan version that produced them; the
+//! publisher sweeps the cache with
+//! [`plan_accepts_cached`](crate::strategies::pipeline::plan_accepts_cached)
+//! — completions the *new* plan would still accept survive (re-stamped to
+//! the new generation), the rest are invalidated. Lookups serve only the
+//! snapshot's generation, so an in-flight answer racing a swap can at
+//! worst insert an entry stamped with the superseded version — inert to
+//! every later lookup and lazily reclaimed. Concurrent publishers may
+//! sweep out of version order; the result is only ever *extra* conservative
+//! misses, never a wrong-generation hit.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -21,32 +39,37 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::budget::{Admission, BudgetTracker};
-use crate::coordinator::cascade::{Cascade, CascadeAnswer, CascadePlan};
+use crate::coordinator::budget::BudgetTracker;
+use crate::coordinator::cascade::{Cascade, CascadePlan};
 use crate::coordinator::scorer::Scorer;
 use crate::data::DatasetMeta;
 use crate::marketplace::CostModel;
 use crate::runtime::EngineHandle;
 use crate::server::metrics::{Observation, ServiceMetrics};
 use crate::server::shadow::{Shadow, ShadowConfig, ShadowSnapshot};
-use crate::strategies::cache::{CachedAnswer, CompletionCache};
+use crate::strategies::cache::{CacheStats, CompletionCache};
+use crate::strategies::concat;
+use crate::strategies::pipeline::{
+    build_pipeline, plan_accepts_cached, Pipeline, PipelineSpec, QueryCtx, StageDeps,
+    StageKind, StageMetricsSnapshot,
+};
 use crate::strategies::prompt::PromptPolicy;
 use crate::util::json::Value;
 
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    /// Master switch for the completion cache (Fig. 2c). Off = every query
-    /// goes through the cascade (the "cascade only" ablation).
+    /// Master switch for the completion cache (Fig. 2c). Off = the
+    /// `cache` pipeline stage is skipped (the "cascade only" ablation).
     pub cache_enabled: bool,
     /// Entries the completion cache retains (LRU beyond this).
     pub cache_capacity: usize,
     /// Similarity threshold for the cache's MinHash tier (≥1.0 = exact only).
     pub cache_min_similarity: f64,
-    /// Prompt-adaptation policy applied before the cascade (Fig. 2a).
+    /// Prompt-adaptation policy of the `prompt` stage (Fig. 2a).
     pub prompt_policy: PromptPolicy,
-    /// Optional hard budget cap (USD); when reached the service degrades
-    /// to the first cascade stage only.
+    /// Optional hard budget cap (USD); when reached the `budget` stage
+    /// degrades the cascade to its first stage only.
     pub budget_cap_usd: Option<f64>,
     /// Rows kept in the labelled observation window the reoptimizer
     /// re-learns from.
@@ -58,6 +81,12 @@ pub struct ServiceConfig {
     /// Shadow-score a sampled fraction of live traffic into the
     /// observation window (`None` = off). See [`crate::server::shadow`].
     pub shadow: Option<ShadowConfig>,
+    /// The serving stage stack (composition as data — see
+    /// [`crate::strategies::pipeline`]). Stages whose backing object is
+    /// disabled (`cache` with `cache_enabled: false`, `shadow` with no
+    /// shadow config) are skipped, so the default full stack adapts to
+    /// the flags above.
+    pub pipeline: PipelineSpec,
 }
 
 impl Default for ServiceConfig {
@@ -71,6 +100,7 @@ impl Default for ServiceConfig {
             window_capacity: 4096,
             window_half_life: None,
             shadow: None,
+            pipeline: PipelineSpec::full(),
         }
     }
 }
@@ -83,11 +113,12 @@ pub struct ServiceAnswer {
     pub answer: u32,
     /// Whether the completion cache served it (no API was invoked).
     pub from_cache: bool,
-    /// Cascade stage that answered (0 for cache hits).
-    pub stopped_at: usize,
-    /// Marketplace index of the model whose answer was accepted
-    /// (meaningless for cache hits, which skip the cascade).
-    pub model: usize,
+    /// Cascade stage that answered; `None` when the cascade never ran
+    /// (cache hits — no stage-0 alias in metrics consumers anymore).
+    pub stopped_at: Option<usize>,
+    /// Marketplace index of the model whose answer was accepted; `None`
+    /// when no API was invoked (cache hits).
+    pub model: Option<usize>,
     /// Metered marketplace spend of this answer (USD).
     pub cost_usd: f64,
     /// Version of the plan bundle that served this query.
@@ -146,6 +177,16 @@ impl PlanBundle {
     /// Monotone version assigned at publish time.
     pub fn version(&self) -> u64 {
         self.version
+    }
+
+    /// The live cascade compiled from [`PlanBundle::plan`].
+    pub fn cascade(&self) -> &Cascade {
+        &self.cascade
+    }
+
+    /// The budget-cap fallback cascade (first stage of the plan only).
+    pub fn degraded(&self) -> &Cascade {
+        &self.degraded
     }
 }
 
@@ -265,21 +306,26 @@ pub struct FrugalService {
     plans: PlanHandle,
     engine: EngineHandle,
     costs: CostModel,
-    cache: Mutex<CompletionCache>,
+    /// The completion cache behind the `cache` stage (`None` = disabled).
+    cache: Option<Arc<Mutex<CompletionCache>>>,
+    /// The composed strategy stack every answer walks.
+    pipeline: Pipeline,
     cfg: ServiceConfig,
-    /// Serving-time spend meter (drives the budget-cap degrade).
-    pub budget: BudgetTracker,
+    /// Serving-time spend meter (drives the `budget` stage's degrade).
+    pub budget: Arc<BudgetTracker>,
     /// All serving counters, including the observation window.
     pub metrics: Arc<ServiceMetrics>,
     meta: DatasetMeta,
-    /// Shadow-scoring tap + worker (`cfg.shadow`): samples live queries
-    /// into the observation window, off the answer path.
-    shadow: Option<Shadow>,
+    /// Shadow-scoring tap + worker behind the `shadow` stage
+    /// (`cfg.shadow`): samples live queries into the observation window,
+    /// off the answer path.
+    shadow: Option<Arc<Shadow>>,
 }
 
 impl FrugalService {
-    /// Build a service around an initial plan (spawning the shadow
-    /// worker when configured).
+    /// Build a service around an initial plan, composing the pipeline
+    /// from `cfg.pipeline` (and spawning the shadow worker when
+    /// configured).
     pub fn new(
         plan: CascadePlan,
         engine: EngineHandle,
@@ -287,6 +333,15 @@ impl FrugalService {
         meta: DatasetMeta,
         cfg: ServiceConfig,
     ) -> Result<Self> {
+        cfg.pipeline.validate()?;
+        if cfg.shadow.is_some() && !cfg.pipeline.stages.contains(&StageKind::Shadow) {
+            anyhow::bail!(
+                "shadow scoring is configured but the pipeline spec `{}` has no \
+                 `shadow` stage — the worker would spawn and never be fed \
+                 (add `shadow` to the spec or drop the shadow config)",
+                cfg.pipeline.describe()
+            );
+        }
         let initial = PlanBundle::build(plan, 0, &engine, &costs, &meta)?;
         let metrics = Arc::new(ServiceMetrics::with_window(
             costs.n_models(),
@@ -294,23 +349,38 @@ impl FrugalService {
             cfg.window_half_life,
         ));
         let shadow = match &cfg.shadow {
-            Some(sc) => Some(Shadow::spawn(
+            Some(sc) => Some(Arc::new(Shadow::spawn(
                 engine.clone(),
                 costs.clone(),
                 meta.clone(),
                 metrics.clone(),
                 sc.clone(),
-            )?),
+            )?)),
             None => None,
         };
+        let cache = cfg.cache_enabled.then(|| {
+            Arc::new(Mutex::new(CompletionCache::new(
+                cfg.cache_capacity.max(1),
+                cfg.cache_min_similarity,
+            )))
+        });
+        let budget = Arc::new(BudgetTracker::new(cfg.budget_cap_usd));
+        let pipeline = build_pipeline(
+            &cfg.pipeline,
+            &StageDeps {
+                cache: cache.clone(),
+                shadow: shadow.clone(),
+                prompt_policy: cfg.prompt_policy,
+                budget: budget.clone(),
+                metrics: metrics.clone(),
+            },
+        )?;
         Ok(FrugalService {
             plans: PlanHandle::new(initial),
             engine,
-            cache: Mutex::new(CompletionCache::new(
-                cfg.cache_capacity.max(1),
-                cfg.cache_min_similarity,
-            )),
-            budget: BudgetTracker::new(cfg.budget_cap_usd),
+            cache,
+            pipeline,
+            budget,
             metrics,
             cfg,
             costs,
@@ -322,6 +392,12 @@ impl FrugalService {
     /// Dataset geometry this service answers for.
     pub fn meta(&self) -> &DatasetMeta {
         &self.meta
+    }
+
+    /// The configuration this service was built with (pipeline spec
+    /// included).
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
     }
 
     /// The currently served plan (a snapshot copy — the live plan may be
@@ -343,6 +419,16 @@ impl FrugalService {
     /// Plan swaps published so far.
     pub fn swap_history(&self) -> Vec<SwapEvent> {
         self.plans.history()
+    }
+
+    /// Per-stage counters of the composed pipeline, in stack order.
+    pub fn pipeline_metrics(&self) -> Vec<StageMetricsSnapshot> {
+        self.pipeline.metrics_snapshot()
+    }
+
+    /// Completion-cache counters, when the cache stage is enabled.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.lock().unwrap().stats())
     }
 
     /// Build and atomically publish a new plan. The bundle (cascade
@@ -367,7 +453,7 @@ impl FrugalService {
             version,
             at_query: self.metrics.queries.load(Ordering::Relaxed),
             reason: reason.to_string(),
-            plan,
+            plan: plan.clone(),
             window_accuracy: window_stats.map(|(a, _)| a),
             window_avg_cost: window_stats.map(|(_, c)| c),
         };
@@ -378,121 +464,97 @@ impl FrugalService {
             );
         }
         self.metrics.plan_swaps.fetch_add(1, Ordering::Relaxed);
-        // Flush completions produced by the superseded plan — under the
-        // drift that just triggered this swap, its cached answers are
-        // exactly the ones not to keep serving. (Finer-grained: stamp
-        // entries with plan_version and decay — see ROADMAP.)
-        if self.cfg.cache_enabled {
-            self.cache.lock().unwrap().clear();
+        // Plan-aware cache sweep (ordered after the install): completions
+        // the new plan would still accept survive, re-stamped to this
+        // generation; the rest are invalidated. Entries an in-flight
+        // answer from the superseded bundle inserts after this sweep stay
+        // stamped with the OLD version, so the generation-filtered lookup
+        // never serves them — no blanket flush, no recheck dance.
+        if let Some(cache) = &self.cache {
+            cache
+                .lock()
+                .unwrap()
+                .retain_and_restamp(version, |ans| plan_accepts_cached(&plan, ans));
         }
         Ok(version)
     }
 
-    /// Answer one query (blocking; wrap in `spawn_blocking` from tokio).
+    /// Answer one query through the strategy pipeline (blocking; wrap in
+    /// `spawn_blocking` from tokio).
     pub fn answer(&self, tokens: &[i32]) -> Result<ServiceAnswer> {
+        self.answer_inner(tokens, 1)
+    }
+
+    /// Answer a batch through the same pipeline, with **query
+    /// concatenation** (paper Fig. 2b): the batch is split into
+    /// [`concat::form_groups`] groups of at most `max_group`, and every
+    /// group member's billable input is metered as
+    /// `prompt/|group| + query` tokens ([`concat::tokens_per_query`]) —
+    /// the shared few-shot prompt is paid once per group instead of once
+    /// per query. Answers come back in input order, each still served
+    /// under its own plan snapshot. Members a stage answers without
+    /// reaching the cascade (cache hits) cost $0 as usual; billing for
+    /// the rest amortizes over the *formed* group size.
+    pub fn answer_batch(
+        &self,
+        queries: &[&[i32]],
+        max_group: usize,
+    ) -> Result<Vec<ServiceAnswer>> {
+        let mut out = Vec::with_capacity(queries.len());
+        for range in concat::form_groups(queries.len(), max_group.max(1)) {
+            let group = range.len();
+            self.metrics.concat_groups.fetch_add(1, Ordering::Relaxed);
+            for i in range {
+                out.push(self.answer_inner(queries[i], group)?);
+            }
+        }
+        Ok(out)
+    }
+
+    fn answer_inner(&self, tokens: &[i32], concat_group: usize) -> Result<ServiceAnswer> {
         let t0 = Instant::now();
         self.metrics.queries.fetch_add(1, Ordering::Relaxed);
 
-        // Snapshot the served plan ONCE; everything below — stage walk,
-        // cost metering, per-model attribution, the returned answer —
-        // comes from this one bundle even if a swap lands mid-query.
+        // Snapshot the served plan ONCE; every pipeline stage below reads
+        // the plan, its version, and its compiled cascades from this one
+        // bundle even if a swap lands mid-query.
         let bundle = self.plans.snapshot();
-
-        // 1. Completion cache (paper Fig. 2c).
-        if self.cfg.cache_enabled {
-            if let Some(hit) = self.cache.lock().unwrap().get(tokens) {
-                self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
-                let lat = t0.elapsed().as_micros() as u64;
-                self.metrics.latency.record_us(lat);
-                return Ok(ServiceAnswer {
-                    answer: hit.answer,
-                    from_cache: true,
-                    stopped_at: 0,
-                    model: 0,
-                    cost_usd: 0.0,
-                    plan_version: bundle.version,
-                    latency_us: lat,
-                    simulated_api_latency_ms: 0.0,
-                });
-            }
-        }
-
-        // Shadow tap: maybe sample this query for all-K evaluation. It
-        // sits *after* the cache so only cascade-bound traffic is sampled
-        // — the plan never serves cache hits, so learning from them would
-        // bias the window toward the hit mix while spending shadow budget
-        // on queries the cascade will not see. The tap itself only steps
-        // an atomic sampler and enqueues; the fan-out happens on the
-        // shadow worker, never on this path.
-        if let Some(sh) = &self.shadow {
-            sh.offer(tokens);
-        }
-
-        // 2. Prompt adaptation (paper Fig. 2a).
-        let adapted = self.cfg.prompt_policy.apply(tokens, &self.meta);
-
-        // 3. LLM cascade (paper Fig. 2e), degraded if over budget.
-        self.metrics.cascade_invocations.fetch_add(1, Ordering::Relaxed);
-        let degraded = self.budget.admit() == Admission::CapReached;
-        let (executed, out): (&CascadePlan, CascadeAnswer) = if degraded {
-            (bundle.degraded.plan(), bundle.degraded.answer(&adapted)?)
-        } else {
-            (&bundle.plan, bundle.cascade.answer(&adapted)?)
-        };
-
-        self.budget.record(out.cost);
-        self.metrics.record_stop(out.stopped_at);
-        for (s, &stage_cost) in out.stage_costs.iter().enumerate() {
-            if let Some(w) = self.metrics.model(executed.stages[s].model) {
-                w.record_invocation(stage_cost);
-            }
-        }
-        let model = executed.stages[out.stopped_at].model;
-        if let Some(w) = self.metrics.model(model) {
-            // A last-stage stop carries the cascade's sentinel score 1.0,
-            // not a scorer measurement — don't let it skew the window.
-            let measured = out.stopped_at + 1 < executed.stages.len();
-            w.record_accepted(measured.then_some(out.score));
-        }
-
-        // 4. Populate the cache — but only if our snapshot is still the
-        // served plan. A swap flushes the cache after installing the new
-        // bundle; an in-flight answer from the superseded plan must not
-        // repopulate it past that flush. The check runs under the cache
-        // lock the publisher flushes under, and the flush is ordered
-        // after the install, so every interleaving either skips the put
-        // (version moved on) or has its entry covered by the flush.
-        if self.cfg.cache_enabled {
-            let mut cache = self.cache.lock().unwrap();
-            if self.plans.version() == bundle.version {
-                cache.put(
-                    tokens,
-                    CachedAnswer { answer: out.answer, score: out.score },
-                );
-            }
-        }
+        let outcome = self.pipeline.answer(QueryCtx {
+            original: tokens,
+            tokens: std::borrow::Cow::Borrowed(tokens),
+            bundle: &bundle,
+            meta: &self.meta,
+            degraded: false,
+            concat_group,
+        })?;
 
         let lat = t0.elapsed().as_micros() as u64;
         self.metrics.latency.record_us(lat);
+        let a = outcome.answer;
+        // Spend metering is unconditional — every cascade-produced answer
+        // is recorded whether or not the spec includes the `budget` stage
+        // (that stage only opts into the cap-degrade behavior).
+        if a.model.is_some() {
+            self.budget.record(a.cost_usd);
+        }
         Ok(ServiceAnswer {
-            answer: out.answer,
-            from_cache: false,
-            stopped_at: out.stopped_at,
-            model,
-            cost_usd: out.cost,
-            plan_version: bundle.version,
+            answer: a.answer,
+            from_cache: outcome.stage == "cache",
+            stopped_at: a.stopped_at,
+            model: a.model,
+            cost_usd: a.cost_usd,
+            plan_version: bundle.version(),
             latency_us: lat,
-            simulated_api_latency_ms: out.simulated_latency_ms,
+            simulated_api_latency_ms: a.simulated_api_latency_ms,
         })
     }
 
     /// Report ground truth for an answered query: updates the accepting
-    /// model's observed-accuracy window.
+    /// model's observed-accuracy window (cache hits carry no model and
+    /// are skipped).
     pub fn record_ground_truth(&self, ans: &ServiceAnswer, label: u32) {
-        if ans.from_cache {
-            return;
-        }
-        if let Some(w) = self.metrics.model(ans.model) {
+        let Some(model) = ans.model else { return };
+        if let Some(w) = self.metrics.model(model) {
             w.record_outcome(ans.answer == label);
         }
     }

@@ -9,8 +9,9 @@
 //! evaluating stronger models on a *sampled* subset of live queries):
 //!
 //! 1. a cheap tap on the answer path ([`Shadow::offer`]) samples a
-//!    configurable fraction of live *cascade-bound* queries (the service
-//!    places it after the completion cache: the plan never serves cache
+//!    configurable fraction of live *cascade-bound* queries (the tap runs
+//!    as the `shadow` stage of `strategies::pipeline`, which the default
+//!    spec places after the completion cache: the plan never serves cache
 //!    hits, so sampling them would bias the window and waste budget) and
 //!    enqueues them on a bounded queue — the answer path never blocks on
 //!    shadow work, and a full queue drops (and counts) rather than

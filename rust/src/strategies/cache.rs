@@ -15,6 +15,18 @@
 //! coordinator consults it before the cascade, so its hit path must be
 //! far cheaper than even the cheapest API call (see benches/cache.rs; the
 //! similar tier remains an O(len) signature scan by design).
+//!
+//! §Generations — entries are *plan-aware*: every [`CachedAnswer`] is
+//! stamped with the `plan_version` it was produced under, and lookups
+//! ([`CompletionCache::get`]) serve only the caller's current generation
+//! (a stale entry found under the key is lazily invalidated instead of
+//! served). On a plan swap the publisher calls
+//! [`CompletionCache::retain_and_restamp`] with a survival predicate
+//! (typically "would the new plan still accept this completion?" — see
+//! `strategies::pipeline::plan_accepts_cached`): surviving entries are
+//! re-stamped to the new generation so the warm set carries across the
+//! swap, everything else is invalidated. This replaces the old blanket
+//! `clear()`-on-swap, whose hit rate restarted from zero on every swap.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -26,13 +38,27 @@ const SIGNATURE: usize = 16;
 /// Null slot index for the intrusive LRU list.
 const NIL: usize = usize::MAX;
 
-/// A cached completion.
+/// A cached completion, stamped with the plan generation that produced it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CachedAnswer {
     /// The completion's answer class.
     pub answer: u32,
     /// Reliability score the answer carried when cached.
     pub score: f32,
+    /// Marketplace index of the model whose answer was cached (`None` for
+    /// entries that did not come from a cascade stage).
+    pub model: Option<usize>,
+    /// Version of the plan bundle that served the cached answer; lookups
+    /// only ever serve the caller's current generation.
+    pub plan_version: u64,
+}
+
+impl CachedAnswer {
+    /// A generation-0 entry with no producing model (tests / benches; the
+    /// serving path stamps real versions via struct literals).
+    pub fn fresh(answer: u32, score: f32) -> Self {
+        CachedAnswer { answer, score, model: None, plan_version: 0 }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -55,6 +81,10 @@ pub struct CacheStats {
     pub insertions: u64,
     /// Entries evicted by the LRU bound.
     pub evictions: u64,
+    /// Entries invalidated by generation churn: dropped by a swap's
+    /// [`CompletionCache::retain_and_restamp`] predicate or lazily on a
+    /// stale-generation lookup.
+    pub invalidations: u64,
 }
 
 impl CacheStats {
@@ -120,8 +150,9 @@ impl CompletionCache {
         self.by_key.is_empty()
     }
 
-    /// Drop every entry (the server flushes on a plan swap so completions
-    /// produced by a superseded plan stop being served). Counters in
+    /// Drop every entry. (Plan swaps no longer use this — the publisher
+    /// sweeps with [`CompletionCache::retain_and_restamp`] so the warm
+    /// set survives; `clear` remains for operational resets.) Counters in
     /// `stats` survive; capacity and tiers are unchanged.
     pub fn clear(&mut self) {
         self.by_key.clear();
@@ -133,20 +164,40 @@ impl CompletionCache {
         self.free.clear();
     }
 
-    /// Look up a query. Exact match first, then the MinHash similar tier.
-    pub fn get(&mut self, query: &[i32]) -> Option<CachedAnswer> {
+    /// Look up a query for the caller's current plan `generation`. Exact
+    /// match first, then the MinHash similar tier. An entry stamped with a
+    /// different generation is never served — a stale exact match is
+    /// lazily invalidated on the spot, and the similar scan skips stale
+    /// entries entirely.
+    pub fn get(&mut self, query: &[i32], generation: u64) -> Option<CachedAnswer> {
         self.stats.lookups += 1;
         let key = exact_key(query);
         if let Some(&slot) = self.by_key.get(&key) {
-            self.stats.exact_hits += 1;
-            self.touch(slot);
-            return Some(self.slots[slot].as_ref().unwrap().answer.clone());
+            let stamped = self.slots[slot].as_ref().unwrap().answer.plan_version;
+            if stamped == generation {
+                self.stats.exact_hits += 1;
+                self.touch(slot);
+                return Some(self.slots[slot].as_ref().unwrap().answer.clone());
+            }
+            if stamped < generation {
+                // Stale generation under the exact key: it can never be
+                // served again (swaps only move the generation forward),
+                // so reclaim the slot now.
+                self.invalidate(slot);
+            }
+            // stamped > generation: an in-flight reader still holding a
+            // pre-swap snapshot found an entry the swap just re-stamped
+            // (or a post-swap answer inserted). Miss for THIS caller, but
+            // the entry is valid for the current generation — leave it.
         }
         if self.min_similarity < 1.0 {
             let sig = minhash(query);
             let mut best: Option<(usize, f64)> = None;
             for (slot, e) in self.slots.iter().enumerate() {
                 if let Some(e) = e {
+                    if e.answer.plan_version != generation {
+                        continue;
+                    }
                     let sim = signature_similarity(&sig, &e.signature);
                     if sim >= self.min_similarity
                         && best.map_or(true, |(_, b)| sim > b)
@@ -162,6 +213,41 @@ impl CompletionCache {
             }
         }
         None
+    }
+
+    /// The plan-swap sweep: keep (and re-stamp to `generation`) every
+    /// entry the predicate approves, invalidate the rest. Returns how many
+    /// entries survived. The predicate typically asks whether the *new*
+    /// plan would still accept the cached completion
+    /// (`strategies::pipeline::plan_accepts_cached`), so the warm set
+    /// carries across a swap instead of restarting from zero.
+    pub fn retain_and_restamp(
+        &mut self,
+        generation: u64,
+        mut keep: impl FnMut(&CachedAnswer) -> bool,
+    ) -> usize {
+        let mut retained = 0usize;
+        for slot in 0..self.slots.len() {
+            let Some(e) = self.slots[slot].as_mut() else { continue };
+            if keep(&e.answer) {
+                e.answer.plan_version = generation;
+                retained += 1;
+            } else {
+                self.invalidate(slot);
+            }
+        }
+        retained
+    }
+
+    /// Drop one occupied slot outside the LRU-bound path (generation
+    /// churn). O(1).
+    fn invalidate(&mut self, slot: usize) {
+        self.detach(slot);
+        if let Some(e) = self.slots[slot].take() {
+            self.by_key.remove(&e.key);
+            self.free.push(slot);
+            self.stats.invalidations += 1;
+        }
     }
 
     /// Insert (or overwrite) a completion for a query.
@@ -297,26 +383,26 @@ mod tests {
     fn clear_empties_and_cache_stays_usable() {
         let mut c = CompletionCache::new(4, 1.0);
         for s in 0..6 {
-            c.put(&q(s, 8), CachedAnswer { answer: s as u32, score: 0.5 });
+            c.put(&q(s, 8), CachedAnswer::fresh(s as u32, 0.5));
         }
         assert_eq!(c.len(), 4);
         c.clear();
         assert!(c.is_empty());
-        assert!(c.get(&q(5, 8)).is_none());
+        assert!(c.get(&q(5, 8), 0).is_none());
         // reusable after clear: inserts, hits, and eviction still work
         for s in 10..16 {
-            c.put(&q(s, 8), CachedAnswer { answer: s as u32, score: 0.5 });
+            c.put(&q(s, 8), CachedAnswer::fresh(s as u32, 0.5));
         }
         assert_eq!(c.len(), 4);
-        assert_eq!(c.get(&q(15, 8)).unwrap().answer, 15);
+        assert_eq!(c.get(&q(15, 8), 0).unwrap().answer, 15);
     }
 
     #[test]
     fn exact_hit_roundtrip() {
         let mut c = CompletionCache::new(4, 1.0);
-        assert!(c.get(&q(1, 16)).is_none());
-        c.put(&q(1, 16), CachedAnswer { answer: 2, score: 0.9 });
-        let hit = c.get(&q(1, 16)).unwrap();
+        assert!(c.get(&q(1, 16), 0).is_none());
+        c.put(&q(1, 16), CachedAnswer::fresh(2, 0.9));
+        let hit = c.get(&q(1, 16), 0).unwrap();
         assert_eq!(hit.answer, 2);
         assert_eq!(c.stats().exact_hits, 1);
         assert_eq!(c.stats().lookups, 2);
@@ -326,10 +412,10 @@ mod tests {
     fn similar_hit_on_small_perturbation() {
         let mut c = CompletionCache::new(8, 0.7);
         let base = q(3, 32);
-        c.put(&base, CachedAnswer { answer: 1, score: 0.8 });
+        c.put(&base, CachedAnswer::fresh(1, 0.8));
         let mut nearly = base.clone();
         nearly[5] += 1; // one token differs
-        let hit = c.get(&nearly);
+        let hit = c.get(&nearly, 0);
         assert!(hit.is_some(), "1-token perturbation should hit similar tier");
         assert_eq!(c.stats().similar_hits, 1);
     }
@@ -337,20 +423,20 @@ mod tests {
     #[test]
     fn dissimilar_query_misses() {
         let mut c = CompletionCache::new(8, 0.7);
-        c.put(&q(3, 32), CachedAnswer { answer: 1, score: 0.8 });
-        assert!(c.get(&q(99, 32)).is_none());
+        c.put(&q(3, 32), CachedAnswer::fresh(1, 0.8));
+        assert!(c.get(&q(99, 32), 0).is_none());
     }
 
     #[test]
     fn lru_evicts_oldest() {
         let mut c = CompletionCache::new(2, 1.0);
-        c.put(&q(1, 8), CachedAnswer { answer: 1, score: 0.5 });
-        c.put(&q(2, 8), CachedAnswer { answer: 2, score: 0.5 });
-        c.get(&q(1, 8)); // touch 1 → 2 is now oldest
-        c.put(&q(3, 8), CachedAnswer { answer: 3, score: 0.5 });
-        assert!(c.get(&q(2, 8)).is_none(), "entry 2 should be evicted");
-        assert!(c.get(&q(1, 8)).is_some());
-        assert!(c.get(&q(3, 8)).is_some());
+        c.put(&q(1, 8), CachedAnswer::fresh(1, 0.5));
+        c.put(&q(2, 8), CachedAnswer::fresh(2, 0.5));
+        c.get(&q(1, 8), 0); // touch 1 → 2 is now oldest
+        c.put(&q(3, 8), CachedAnswer::fresh(3, 0.5));
+        assert!(c.get(&q(2, 8), 0).is_none(), "entry 2 should be evicted");
+        assert!(c.get(&q(1, 8), 0).is_some());
+        assert!(c.get(&q(3, 8), 0).is_some());
         assert_eq!(c.stats().evictions, 1);
         assert_eq!(c.len(), 2);
     }
@@ -358,10 +444,10 @@ mod tests {
     #[test]
     fn put_same_key_overwrites_without_eviction() {
         let mut c = CompletionCache::new(2, 1.0);
-        c.put(&q(1, 8), CachedAnswer { answer: 1, score: 0.5 });
-        c.put(&q(1, 8), CachedAnswer { answer: 7, score: 0.9 });
+        c.put(&q(1, 8), CachedAnswer::fresh(1, 0.5));
+        c.put(&q(1, 8), CachedAnswer::fresh(7, 0.9));
         assert_eq!(c.len(), 1);
-        assert_eq!(c.get(&q(1, 8)).unwrap().answer, 7);
+        assert_eq!(c.get(&q(1, 8), 0).unwrap().answer, 7);
         assert_eq!(c.stats().evictions, 0);
     }
 
@@ -379,7 +465,7 @@ mod tests {
         for step in 0..5000 {
             let id = rng.below(40) as i32;
             if rng.bool(0.55) {
-                c.put(&q(id, 8), CachedAnswer { answer: id as u32, score: 0.5 });
+                c.put(&q(id, 8), CachedAnswer::fresh(id as u32, 0.5));
                 if let Some(pos) = model.iter().position(|&k| k == id) {
                     model.remove(pos);
                 } else if model.len() == cap {
@@ -387,7 +473,7 @@ mod tests {
                 }
                 model.push_back(id);
             } else {
-                let hit = c.get(&q(id, 8)).is_some();
+                let hit = c.get(&q(id, 8), 0).is_some();
                 let model_hit = model.contains(&id);
                 assert_eq!(hit, model_hit, "step {step}: hit mismatch for {id}");
                 if let Some(pos) = model.iter().position(|&k| k == id) {
@@ -400,7 +486,7 @@ mod tests {
         // After the run, residency must agree element-for-element.
         let resident = model.clone();
         for &id in &resident {
-            assert!(c.get(&q(id, 8)).is_some(), "model key {id} missing from cache");
+            assert!(c.get(&q(id, 8), 0).is_some(), "model key {id} missing from cache");
         }
     }
 
@@ -408,15 +494,80 @@ mod tests {
     fn touch_most_recent_is_noop() {
         let mut c = CompletionCache::new(3, 1.0);
         for id in 0..3 {
-            c.put(&q(id, 8), CachedAnswer { answer: id as u32, score: 0.5 });
+            c.put(&q(id, 8), CachedAnswer::fresh(id as u32, 0.5));
         }
         // Touch the tail repeatedly; order must stay 0 (oldest), 1, 2.
         for _ in 0..5 {
-            assert!(c.get(&q(2, 8)).is_some());
+            assert!(c.get(&q(2, 8), 0).is_some());
         }
-        c.put(&q(3, 8), CachedAnswer { answer: 3, score: 0.5 });
-        assert!(c.get(&q(0, 8)).is_none(), "0 was oldest and must evict");
+        c.put(&q(3, 8), CachedAnswer::fresh(3, 0.5));
+        assert!(c.get(&q(0, 8), 0).is_none(), "0 was oldest and must evict");
         assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn stale_generation_is_missed_and_lazily_invalidated() {
+        let mut c = CompletionCache::new(4, 1.0);
+        c.put(&q(1, 8), CachedAnswer { answer: 3, score: 0.9, model: Some(2), plan_version: 0 });
+        assert_eq!(c.get(&q(1, 8), 0).unwrap().answer, 3, "same generation hits");
+        assert!(c.get(&q(1, 8), 1).is_none(), "newer generation must miss");
+        assert_eq!(c.stats().invalidations, 1, "stale entry reclaimed on lookup");
+        assert!(c.is_empty());
+        // and the slot is reusable
+        c.put(&q(1, 8), CachedAnswer { answer: 5, score: 0.9, model: Some(1), plan_version: 1 });
+        assert_eq!(c.get(&q(1, 8), 1).unwrap().answer, 5);
+        // A reader still holding an OLDER generation must miss but NOT
+        // destroy the newer entry (in-flight answer racing a swap).
+        assert!(c.get(&q(1, 8), 0).is_none(), "pre-swap reader misses");
+        assert_eq!(c.stats().invalidations, 1, "newer entry is left intact");
+        assert_eq!(
+            c.get(&q(1, 8), 1).unwrap().answer,
+            5,
+            "current-generation traffic still hits after the stale read"
+        );
+    }
+
+    #[test]
+    fn similar_tier_never_serves_stale_generations() {
+        let mut c = CompletionCache::new(8, 0.7);
+        let base = q(3, 32);
+        c.put(&base, CachedAnswer { answer: 1, score: 0.8, model: Some(0), plan_version: 0 });
+        let mut nearly = base.clone();
+        nearly[5] += 1;
+        assert!(c.get(&nearly, 0).is_some(), "current generation: similar hit");
+        assert!(c.get(&nearly, 7).is_none(), "stale generation: no similar hit");
+    }
+
+    #[test]
+    fn retain_and_restamp_keeps_and_promotes_survivors() {
+        let mut c = CompletionCache::new(8, 1.0);
+        for id in 0..6 {
+            c.put(
+                &q(id, 8),
+                CachedAnswer {
+                    answer: id as u32,
+                    score: 0.5,
+                    model: Some(id as usize % 3),
+                    plan_version: 0,
+                },
+            );
+        }
+        // Keep only entries produced by model 1; re-stamp them to gen 1.
+        let kept = c.retain_and_restamp(1, |a| a.model == Some(1));
+        assert_eq!(kept, 2, "ids 1 and 4 carry model 1");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().invalidations, 4);
+        for id in [1i32, 4] {
+            let hit = c.get(&q(id, 8), 1).expect("survivor serves the new generation");
+            assert_eq!(hit.plan_version, 1, "survivors are re-stamped");
+        }
+        assert!(c.get(&q(0, 8), 1).is_none());
+        // LRU structure stays sound after the sweep: fill to capacity and
+        // evict in order.
+        for id in 10..18 {
+            c.put(&q(id, 8), CachedAnswer::fresh(id as u32, 0.5));
+        }
+        assert_eq!(c.len(), 8);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! what the strategy is about) and provides the grouping machinery the
 //! server's batcher uses to form concatenation groups.
 
-use crate::data::DatasetMeta;
+use crate::data::{prompt, DatasetMeta};
 
 /// Billable input tokens per query when `group` queries share one prompt.
 ///
@@ -29,6 +29,28 @@ pub fn split_tokens(meta: &DatasetMeta) -> (u32, u32) {
     let prompt = (meta.n_examples * meta.block_len) as u32;
     let query = meta.query_len() as u32;
     (prompt, query)
+}
+
+/// Integer billable input tokens for one member of a concatenation group
+/// (the metering unit `FrugalService::answer_batch` charges): exactly
+/// [`tokens_per_query`], rounded up to whole tokens. A group of one bills
+/// the full prompt unchanged.
+pub fn amortized_input(prompt_tokens: u32, query_tokens: u32, group: usize) -> u32 {
+    tokens_per_query(prompt_tokens, query_tokens, group).ceil() as u32
+}
+
+/// Split a concrete (possibly prompt-adapted) token row into its billable
+/// `(prompt, query)` token counts: non-PAD tokens before the query offset
+/// are the shareable prompt, the rest is the per-query segment. Unlike
+/// [`split_tokens`] this reflects *this row's actual content* — prompt
+/// adaptation may have truncated examples, and concatenation then
+/// amortizes only the prompt that is still there (the two strategies
+/// compose without double-counting).
+pub fn split_row_tokens(tokens: &[i32], meta: &DatasetMeta) -> (u32, u32) {
+    let boundary = meta.q_offset.min(tokens.len());
+    let prompt = prompt::input_tokens(&tokens[..boundary]);
+    let total = prompt::input_tokens(tokens);
+    (prompt, total - prompt)
 }
 
 /// Greedy group former: batches queries into concatenation groups of at
@@ -63,6 +85,48 @@ mod tests {
         // with a prompt-dominated layout the savings approach prompt share
         let r_big = savings_ratio(1000, 10, 100);
         assert!(r_big < 0.03);
+    }
+
+    #[test]
+    fn amortized_input_rounds_up_and_caps_at_single() {
+        assert_eq!(amortized_input(24, 18, 1), 42);
+        assert_eq!(amortized_input(24, 18, 8), 21); // 3 + 18
+        assert_eq!(amortized_input(25, 18, 8), 22); // ceil(3.125) + 18
+        assert!(amortized_input(1000, 10, 100) < amortized_input(1000, 10, 2));
+    }
+
+    #[test]
+    fn split_row_tokens_counts_actual_content() {
+        use crate::data::layout;
+        let meta = DatasetMeta {
+            name: "t".into(),
+            seq: 20,
+            n_classes: 4,
+            n_examples: 4,
+            qlen: 6,
+            block_len: 3,
+            q_offset: 12,
+            scorer_seq: 20,
+            answer_lens: vec![1; 4],
+        };
+        let mut row = vec![layout::PAD; meta.seq];
+        for j in 0..meta.n_examples {
+            row[j * 3] = layout::SEP_EX;
+            row[j * 3 + 1] = 20 + j as i32;
+            row[j * 3 + 2] = layout::LABEL_BASE + (j % 4) as i32;
+        }
+        row[meta.q_offset] = layout::CLS;
+        for p in 0..meta.qlen {
+            row[meta.q_offset + 1 + p] = 100 + p as i32;
+        }
+        row[meta.q_offset + 1 + meta.qlen] = layout::QSEP;
+        let (p, q) = split_row_tokens(&row, &meta);
+        assert_eq!(p, 12, "4 dense example blocks of 3 tokens");
+        assert_eq!(q, 8, "CLS + 6 body + QSEP");
+        // prompt adaptation shrinks the shareable prompt, not the query
+        let truncated = crate::data::prompt::truncate_examples(&row, &meta, 1);
+        let (tp, tq) = split_row_tokens(&truncated, &meta);
+        assert_eq!((tp, tq), (3, 8));
     }
 
     #[test]

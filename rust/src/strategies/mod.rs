@@ -7,10 +7,14 @@
 //! * [`concat`] — **query concatenation** (Fig. 2b): share one prompt
 //!   across several queries.
 //!
-//! All three compose with the cascade (paper "Compositions") — the
-//! `strategies_demo` example and the `report -- strategies` ablation
-//! evaluate each one and their stack.
+//! All three compose with the cascade (paper "Compositions") through the
+//! [`pipeline`] module: each strategy is a first-class [`pipeline::Strategy`]
+//! stage, and [`pipeline::PipelineSpec`] makes the composition *data*
+//! (`serve --pipeline cache,prompt,cascade`). The `strategies_demo`
+//! example and the `report -- strategies` ablation drive the exact stack
+//! production serves.
 
 pub mod cache;
 pub mod concat;
+pub mod pipeline;
 pub mod prompt;

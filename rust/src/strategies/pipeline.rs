@@ -1,0 +1,720 @@
+//! The strategy pipeline: the paper's three cost-reduction strategy
+//! families (§3, Fig. 2) as first-class, composable serving stages.
+//!
+//! `FrugalService::answer()` used to hard-code one fixed sequence inline
+//! (cache → shadow tap → prompt adaptation → budget degrade → cascade).
+//! This module turns each step into a [`Strategy`] — a stage that looks
+//! at a [`QueryCtx`] and either **answers** the query, **transforms** it,
+//! or **passes** — and a [`Pipeline`] that composes an ordered stack of
+//! them terminating in the cascade executor. Composition is *data*
+//! ([`PipelineSpec`]: `"cache,prompt,cascade"` on the CLI, a JSON array
+//! in a config file), so the `report strategies` ablation, the
+//! `strategies_demo` example, and production serving all drive the same
+//! code path with different stage stacks.
+//!
+//! Every stage sees the same [`QueryCtx`], which carries the
+//! [`PlanBundle`] snapshot the service took for this query — stages are
+//! plan-version-aware *by construction* (the completion cache stamps
+//! entries with the bundle version; the cascade executes the bundle's
+//! compiled cascades), so a concurrent plan swap can never mix two plans
+//! inside one answer, stage by stage. Each stage also owns a lock-free
+//! [`StageMetrics`] sink, surfaced per stage in the serve report.
+//!
+//! Layering: this module is the *composition* layer — it may depend on
+//! both the pure `coordinator` types and the `server` runtime objects
+//! (bundle, metrics, shadow). Nothing in `coordinator` depends on it.
+
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::budget::{Admission, BudgetTracker};
+use crate::coordinator::cascade::CascadePlan;
+use crate::data::{prompt, DatasetMeta};
+use crate::server::metrics::ServiceMetrics;
+use crate::server::service::PlanBundle;
+use crate::server::shadow::Shadow;
+use crate::strategies::cache::{CachedAnswer, CompletionCache};
+use crate::strategies::concat;
+use crate::strategies::prompt::PromptPolicy;
+use crate::util::json::Value;
+
+/// Everything a stage may read (and the two fields it may flag) about the
+/// query currently walking the pipeline. One `QueryCtx` is built per
+/// answer around ONE plan-bundle snapshot.
+pub struct QueryCtx<'a> {
+    /// The client's token row, untouched — cache keys hash this so a
+    /// transformed query still hits its original entry.
+    pub original: &'a [i32],
+    /// The current (possibly transformed) token row later stages consume.
+    /// Borrowed until the first `Decision::Transform` takes ownership.
+    pub tokens: Cow<'a, [i32]>,
+    /// The plan-bundle snapshot this query is served under; every stage
+    /// reads plan, version, and compiled cascades from here and nowhere
+    /// else (the one-snapshot-per-answer invariant).
+    pub bundle: &'a PlanBundle,
+    /// Dataset geometry of the token layout.
+    pub meta: &'a DatasetMeta,
+    /// Set by the budget stage when the spend cap is exhausted: the
+    /// cascade executor then runs the bundle's degraded (first-stage-only)
+    /// cascade.
+    pub degraded: bool,
+    /// Size of the concatenation group this query rides in (1 = solo).
+    /// The cascade executor bills `prompt/group + query` input tokens
+    /// (paper Fig. 2b) when > 1.
+    pub concat_group: usize,
+}
+
+/// The answer a stage produced for the query.
+#[derive(Debug, Clone)]
+pub struct StageAnswer {
+    /// The answer class.
+    pub answer: u32,
+    /// Reliability score attached to the answer.
+    pub score: f32,
+    /// Marketplace spend of producing it (0 for cache hits).
+    pub cost_usd: f64,
+    /// Marketplace index of the producing model; `None` when no API was
+    /// invoked (completion-cache hits).
+    pub model: Option<usize>,
+    /// Cascade stage that answered; `None` when the cascade never ran.
+    pub stopped_at: Option<usize>,
+    /// Simulated commercial-API round-trip latency (ms).
+    pub simulated_api_latency_ms: f64,
+}
+
+/// What a stage decided about the query.
+pub enum Decision {
+    /// The stage produced the final answer; no later stage runs.
+    Answer(StageAnswer),
+    /// The stage rewrote the query tokens (e.g. prompt adaptation); later
+    /// stages see the new row.
+    Transform(Vec<i32>),
+    /// Nothing to do for this query.
+    Pass,
+}
+
+/// One composable serving stage. Implementations must be cheap to call
+/// and thread-safe — the service drives one pipeline from many client
+/// threads.
+pub trait Strategy: Send + Sync {
+    /// Stable stage name (the [`PipelineSpec`] vocabulary).
+    fn name(&self) -> &'static str;
+
+    /// Inspect the query and decide: answer it, transform it, or pass.
+    fn on_query(&self, ctx: &mut QueryCtx) -> Result<Decision>;
+
+    /// Called (in reverse stack order) on every stage *above* the one
+    /// that answered, once the final answer is known — the population /
+    /// metering hook (cache fill, budget metering).
+    fn on_answer(&self, _ctx: &QueryCtx, _answer: &StageAnswer) {}
+
+    /// Whether this stage answers every query it sees (the pipeline must
+    /// terminate in exactly one such stage).
+    fn is_terminal(&self) -> bool {
+        false
+    }
+}
+
+/// Lock-free per-stage counters (one per pipeline stage).
+#[derive(Debug, Default)]
+pub struct StageMetrics {
+    /// Queries that reached this stage.
+    pub queries: AtomicU64,
+    /// ... it answered.
+    pub answered: AtomicU64,
+    /// ... it transformed.
+    pub transformed: AtomicU64,
+    /// ... it passed through untouched.
+    pub passed: AtomicU64,
+}
+
+/// Point-in-time copy of one stage's counters, tagged with the stage name.
+#[derive(Debug, Clone)]
+pub struct StageMetricsSnapshot {
+    /// Stage name (the [`PipelineSpec`] vocabulary).
+    pub stage: &'static str,
+    /// Queries that reached the stage.
+    pub queries: u64,
+    /// ... it answered.
+    pub answered: u64,
+    /// ... it transformed.
+    pub transformed: u64,
+    /// ... it passed through.
+    pub passed: u64,
+}
+
+struct PipelineStage {
+    strategy: Box<dyn Strategy>,
+    metrics: StageMetrics,
+}
+
+/// An ordered stack of [`Strategy`] stages terminating in the cascade
+/// executor. Built once per service; driven concurrently.
+pub struct Pipeline {
+    stages: Vec<PipelineStage>,
+}
+
+/// What the pipeline produced for one query.
+pub struct PipelineOutcome {
+    /// The final answer.
+    pub answer: StageAnswer,
+    /// Index (in the composed stack) of the answering stage.
+    pub answered_by: usize,
+    /// Name of the answering stage.
+    pub stage: &'static str,
+}
+
+impl Pipeline {
+    /// Compose a stack. Exactly one terminal stage is required and it
+    /// must be last — every query must reach an answer.
+    pub fn new(stages: Vec<Box<dyn Strategy>>) -> Result<Pipeline> {
+        if stages.is_empty() {
+            bail!("a pipeline needs at least the cascade executor");
+        }
+        for (i, s) in stages.iter().enumerate() {
+            if s.is_terminal() && i + 1 != stages.len() {
+                bail!(
+                    "terminal stage `{}` must be last in the pipeline",
+                    s.name()
+                );
+            }
+        }
+        if !stages.last().unwrap().is_terminal() {
+            bail!(
+                "pipeline must terminate in an answering stage (got `{}`)",
+                stages.last().unwrap().name()
+            );
+        }
+        Ok(Pipeline {
+            stages: stages
+                .into_iter()
+                .map(|strategy| PipelineStage { strategy, metrics: StageMetrics::default() })
+                .collect(),
+        })
+    }
+
+    /// Stage names in stack order.
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.stages.iter().map(|s| s.strategy.name()).collect()
+    }
+
+    /// Walk the stack: each stage answers, transforms, or passes; the
+    /// first answer wins and the stages above it get their `on_answer`
+    /// hook (reverse order), so e.g. the cache populates from cascade
+    /// answers and the budget meters their spend.
+    pub fn answer(&self, mut ctx: QueryCtx) -> Result<PipelineOutcome> {
+        for (idx, stage) in self.stages.iter().enumerate() {
+            stage.metrics.queries.fetch_add(1, Ordering::Relaxed);
+            match stage.strategy.on_query(&mut ctx)? {
+                Decision::Answer(answer) => {
+                    stage.metrics.answered.fetch_add(1, Ordering::Relaxed);
+                    for prior in self.stages[..idx].iter().rev() {
+                        prior.strategy.on_answer(&ctx, &answer);
+                    }
+                    return Ok(PipelineOutcome {
+                        answer,
+                        answered_by: idx,
+                        stage: stage.strategy.name(),
+                    });
+                }
+                Decision::Transform(tokens) => {
+                    stage.metrics.transformed.fetch_add(1, Ordering::Relaxed);
+                    ctx.tokens = Cow::Owned(tokens);
+                }
+                Decision::Pass => {
+                    stage.metrics.passed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        // Unreachable for well-behaved stages (`Pipeline::new` enforces a
+        // terminal last stage); a custom terminal stage that passed
+        // anyway is a bug we surface as an error, not a panic.
+        bail!("pipeline exhausted without an answer — the terminal stage did not answer")
+    }
+
+    /// Point-in-time copy of every stage's counters, in stack order.
+    pub fn metrics_snapshot(&self) -> Vec<StageMetricsSnapshot> {
+        self.stages
+            .iter()
+            .map(|s| StageMetricsSnapshot {
+                stage: s.strategy.name(),
+                queries: s.metrics.queries.load(Ordering::Relaxed),
+                answered: s.metrics.answered.load(Ordering::Relaxed),
+                transformed: s.metrics.transformed.load(Ordering::Relaxed),
+                passed: s.metrics.passed.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline composition as data
+// ---------------------------------------------------------------------------
+
+/// The stage vocabulary of [`PipelineSpec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Completion cache (Fig. 2c) — answers repeats for $0.
+    Cache,
+    /// Shadow-scoring tap — samples cascade-bound traffic for learning.
+    Shadow,
+    /// Prompt adaptation (Fig. 2a) — shrinks the few-shot prompt.
+    Prompt,
+    /// Budget-cap degrade — flags cap exhaustion for the cascade.
+    Budget,
+    /// The LLM cascade executor (Fig. 2e) — the terminal stage.
+    Cascade,
+}
+
+impl StageKind {
+    /// The spec name of this stage.
+    pub fn name(self) -> &'static str {
+        match self {
+            StageKind::Cache => "cache",
+            StageKind::Shadow => "shadow",
+            StageKind::Prompt => "prompt",
+            StageKind::Budget => "budget",
+            StageKind::Cascade => "cascade",
+        }
+    }
+
+    /// Parse one spec name.
+    pub fn parse(s: &str) -> Result<StageKind> {
+        Ok(match s.trim() {
+            "cache" => StageKind::Cache,
+            "shadow" => StageKind::Shadow,
+            "prompt" => StageKind::Prompt,
+            "budget" => StageKind::Budget,
+            "cascade" => StageKind::Cascade,
+            other => bail!(
+                "unknown pipeline stage `{other}` \
+                 (expected cache|shadow|prompt|budget|cascade)"
+            ),
+        })
+    }
+}
+
+/// Pipeline composition as data: an ordered stage list, e.g.
+/// `serve --pipeline cache,prompt,cascade` or the JSON array form in a
+/// service-config file. Validation enforces the one structural rule —
+/// `cascade` present exactly once, last — plus no duplicate stages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipelineSpec {
+    /// The ordered stages.
+    pub stages: Vec<StageKind>,
+}
+
+impl Default for PipelineSpec {
+    fn default() -> Self {
+        PipelineSpec::full()
+    }
+}
+
+impl PipelineSpec {
+    /// The full production stack: cache → shadow → prompt → budget →
+    /// cascade (the pre-pipeline hard-coded order).
+    pub fn full() -> PipelineSpec {
+        PipelineSpec {
+            stages: vec![
+                StageKind::Cache,
+                StageKind::Shadow,
+                StageKind::Prompt,
+                StageKind::Budget,
+                StageKind::Cascade,
+            ],
+        }
+    }
+
+    /// Parse a comma-separated stage list (`"cache,prompt,cascade"`).
+    pub fn parse(s: &str) -> Result<PipelineSpec> {
+        let spec = PipelineSpec {
+            stages: s
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .map(StageKind::parse)
+                .collect::<Result<_>>()?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Check the structural rules (cascade exactly once and last, no
+    /// duplicates).
+    pub fn validate(&self) -> Result<()> {
+        if self.stages.last() != Some(&StageKind::Cascade) {
+            bail!(
+                "pipeline spec must end in `cascade` (got `{}`)",
+                self.describe()
+            );
+        }
+        for (i, a) in self.stages.iter().enumerate() {
+            if self.stages[..i].contains(a) {
+                bail!("duplicate pipeline stage `{}`", a.name());
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable form, e.g. `cache,prompt,cascade`.
+    pub fn describe(&self) -> String {
+        self.stages
+            .iter()
+            .map(|s| s.name().to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// JSON form: an array of stage names.
+    pub fn to_value(&self) -> Value {
+        Value::Arr(
+            self.stages
+                .iter()
+                .map(|s| Value::Str(s.name().to_string()))
+                .collect(),
+        )
+    }
+
+    /// Parse the [`PipelineSpec::to_value`] form (validated).
+    pub fn from_value(v: &Value) -> Result<PipelineSpec> {
+        let arr = match v.as_arr() {
+            Some(a) => a,
+            None => bail!("pipeline spec must be a JSON array of stage names"),
+        };
+        let spec = PipelineSpec {
+            stages: arr
+                .iter()
+                .map(|x| match x.as_str() {
+                    Some(s) => StageKind::parse(s),
+                    None => bail!("pipeline stage names must be strings"),
+                })
+                .collect::<Result<_>>()?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Shared service state the stage constructors borrow from.
+pub struct StageDeps {
+    /// The completion cache (`None` = cache disabled; the stage is then
+    /// skipped even if the spec names it).
+    pub cache: Option<Arc<Mutex<CompletionCache>>>,
+    /// The shadow tap (`None` = shadow off; the stage is then skipped).
+    pub shadow: Option<Arc<Shadow>>,
+    /// Prompt-adaptation policy for the `prompt` stage.
+    pub prompt_policy: PromptPolicy,
+    /// Serving spend meter for the `budget` stage.
+    pub budget: Arc<BudgetTracker>,
+    /// Service-level counters (cache hits, cascade stops, per-model
+    /// windows).
+    pub metrics: Arc<ServiceMetrics>,
+}
+
+/// Build the composed stack a [`PipelineSpec`] describes. Stages whose
+/// backing object is disabled (`cache` without a cache, `shadow` without
+/// a tap) are skipped, so one spec serves every config ablation.
+pub fn build_pipeline(spec: &PipelineSpec, deps: &StageDeps) -> Result<Pipeline> {
+    spec.validate()?;
+    let mut stages: Vec<Box<dyn Strategy>> = Vec::with_capacity(spec.stages.len());
+    for kind in &spec.stages {
+        match kind {
+            StageKind::Cache => {
+                if let Some(cache) = &deps.cache {
+                    stages.push(Box::new(CacheStage {
+                        cache: cache.clone(),
+                        metrics: deps.metrics.clone(),
+                    }));
+                }
+            }
+            StageKind::Shadow => {
+                if let Some(shadow) = &deps.shadow {
+                    stages.push(Box::new(ShadowStage { shadow: shadow.clone() }));
+                }
+            }
+            StageKind::Prompt => {
+                stages.push(Box::new(PromptStage { policy: deps.prompt_policy }));
+            }
+            StageKind::Budget => {
+                stages.push(Box::new(BudgetStage { budget: deps.budget.clone() }));
+            }
+            StageKind::Cascade => {
+                stages.push(Box::new(CascadeStage { metrics: deps.metrics.clone() }));
+            }
+        }
+    }
+    Pipeline::new(stages)
+}
+
+/// Would `plan` still accept a cached completion? True when the model
+/// that produced the answer is a stage of the plan and the cached
+/// reliability score clears that stage's threshold (the final stage
+/// accepts unconditionally). This is the survival predicate of the
+/// plan-swap cache sweep (`CompletionCache::retain_and_restamp`): it
+/// keeps exactly the completions the new plan could have served itself
+/// had it reached that stage.
+pub fn plan_accepts_cached(plan: &CascadePlan, ans: &CachedAnswer) -> bool {
+    let Some(model) = ans.model else { return false };
+    if plan.is_empty() {
+        return false;
+    }
+    let last = plan.stages.len() - 1;
+    plan.stages
+        .iter()
+        .enumerate()
+        .any(|(s, st)| st.model == model && (s == last || ans.score > st.threshold))
+}
+
+// ---------------------------------------------------------------------------
+// The stage implementations
+// ---------------------------------------------------------------------------
+
+/// Completion cache (paper Fig. 2c) as a stage: answers repeats for $0,
+/// populates from later stages' answers. Keys on the *original* tokens
+/// and serves only entries of the snapshot's plan generation.
+struct CacheStage {
+    cache: Arc<Mutex<CompletionCache>>,
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl Strategy for CacheStage {
+    fn name(&self) -> &'static str {
+        "cache"
+    }
+
+    fn on_query(&self, ctx: &mut QueryCtx) -> Result<Decision> {
+        let hit = self
+            .cache
+            .lock()
+            .unwrap()
+            .get(ctx.original, ctx.bundle.version());
+        match hit {
+            Some(hit) => {
+                self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                Ok(Decision::Answer(StageAnswer {
+                    answer: hit.answer,
+                    score: hit.score,
+                    cost_usd: 0.0,
+                    model: None,
+                    stopped_at: None,
+                    simulated_api_latency_ms: 0.0,
+                }))
+            }
+            None => Ok(Decision::Pass),
+        }
+    }
+
+    /// Populate from a cascade answer, stamped with the snapshot's plan
+    /// version. No install-race recheck is needed anymore: an entry
+    /// stamped by a superseded bundle simply never matches a newer
+    /// generation's lookups (and is lazily reclaimed), so the old
+    /// "re-check the version under the cache lock" dance is gone.
+    fn on_answer(&self, ctx: &QueryCtx, answer: &StageAnswer) {
+        if answer.model.is_none() {
+            return;
+        }
+        self.cache.lock().unwrap().put(
+            ctx.original,
+            CachedAnswer {
+                answer: answer.answer,
+                score: answer.score,
+                model: answer.model,
+                plan_version: ctx.bundle.version(),
+            },
+        );
+    }
+}
+
+/// The shadow-scoring tap as a stage: one relaxed-atomic sample decision
+/// plus a `try_send` — never blocks, never answers. Place it after
+/// `cache` so only cascade-bound traffic is sampled (the cache-before-tap
+/// invariant is now spelled by the spec order).
+struct ShadowStage {
+    shadow: Arc<Shadow>,
+}
+
+impl Strategy for ShadowStage {
+    fn name(&self) -> &'static str {
+        "shadow"
+    }
+
+    fn on_query(&self, ctx: &mut QueryCtx) -> Result<Decision> {
+        self.shadow.offer(&ctx.tokens);
+        Ok(Decision::Pass)
+    }
+}
+
+/// Prompt adaptation (paper Fig. 2a) as a stage: truncates the few-shot
+/// prompt per the policy, transforming the row later stages consume.
+struct PromptStage {
+    policy: PromptPolicy,
+}
+
+impl Strategy for PromptStage {
+    fn name(&self) -> &'static str {
+        "prompt"
+    }
+
+    fn on_query(&self, ctx: &mut QueryCtx) -> Result<Decision> {
+        let keep = self.policy.keep(&ctx.tokens, ctx.meta);
+        if keep >= ctx.meta.n_examples {
+            Ok(Decision::Pass)
+        } else {
+            Ok(Decision::Transform(prompt::truncate_examples(
+                &ctx.tokens,
+                ctx.meta,
+                keep,
+            )))
+        }
+    }
+}
+
+/// Budget-cap degrade as a stage: flags the context when the cap is
+/// exhausted, so the cascade executor runs the degraded single-stage
+/// cascade. Spend *metering* is NOT this stage's job — the service
+/// records every cascade answer's cost unconditionally (a spec without
+/// `budget` still meters spend; it only opts out of the degrade).
+struct BudgetStage {
+    budget: Arc<BudgetTracker>,
+}
+
+impl Strategy for BudgetStage {
+    fn name(&self) -> &'static str {
+        "budget"
+    }
+
+    fn on_query(&self, ctx: &mut QueryCtx) -> Result<Decision> {
+        if self.budget.admit() == Admission::CapReached {
+            ctx.degraded = true;
+        }
+        Ok(Decision::Pass)
+    }
+}
+
+/// The LLM cascade executor (paper Fig. 2e): the terminal stage. Executes
+/// the snapshot bundle's live cascade (or its degraded fallback when the
+/// budget stage flagged the context), meters amortized input cost for
+/// concatenation groups, and feeds the service-level cascade metrics.
+struct CascadeStage {
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl Strategy for CascadeStage {
+    fn name(&self) -> &'static str {
+        "cascade"
+    }
+
+    fn is_terminal(&self) -> bool {
+        true
+    }
+
+    fn on_query(&self, ctx: &mut QueryCtx) -> Result<Decision> {
+        self.metrics.cascade_invocations.fetch_add(1, Ordering::Relaxed);
+        // Billable input: the row's actual (possibly prompt-adapted)
+        // tokens, with the shareable prompt amortized across the
+        // concatenation group (paper Fig. 2b; a solo query bills in full).
+        let (prompt_toks, query_toks) = concat::split_row_tokens(&ctx.tokens, ctx.meta);
+        let billed = concat::amortized_input(prompt_toks, query_toks, ctx.concat_group);
+        let cascade = if ctx.degraded {
+            ctx.bundle.degraded()
+        } else {
+            ctx.bundle.cascade()
+        };
+        let executed = cascade.plan();
+        let out = cascade.answer_billed(&ctx.tokens, billed)?;
+
+        self.metrics.record_stop(out.stopped_at);
+        for (s, &stage_cost) in out.stage_costs.iter().enumerate() {
+            if let Some(w) = self.metrics.model(executed.stages[s].model) {
+                w.record_invocation(stage_cost);
+            }
+        }
+        let model = executed.stages[out.stopped_at].model;
+        if let Some(w) = self.metrics.model(model) {
+            // A last-stage stop carries the cascade's sentinel score 1.0,
+            // not a scorer measurement — don't let it skew the window.
+            let measured = out.stopped_at + 1 < executed.stages.len();
+            w.record_accepted(measured.then_some(out.score));
+        }
+        Ok(Decision::Answer(StageAnswer {
+            answer: out.answer,
+            score: out.score,
+            cost_usd: out.cost,
+            model: Some(model),
+            stopped_at: Some(out.stopped_at),
+            simulated_api_latency_ms: out.simulated_latency_ms,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cascade::Stage;
+
+    #[test]
+    fn spec_parse_validate_and_describe() {
+        let spec = PipelineSpec::parse("cache,prompt,cascade").unwrap();
+        assert_eq!(
+            spec.stages,
+            vec![StageKind::Cache, StageKind::Prompt, StageKind::Cascade]
+        );
+        assert_eq!(spec.describe(), "cache,prompt,cascade");
+        assert_eq!(PipelineSpec::parse("cascade").unwrap().stages.len(), 1);
+        assert!(PipelineSpec::full().validate().is_ok());
+        // whitespace tolerated
+        assert_eq!(
+            PipelineSpec::parse(" cache , cascade ").unwrap().describe(),
+            "cache,cascade"
+        );
+    }
+
+    #[test]
+    fn spec_rejects_malformed_stacks() {
+        for bad in [
+            "cache,prompt",          // no terminal cascade
+            "cascade,cache",         // cascade not last
+            "cache,cache,cascade",   // duplicate
+            "teleport,cascade",      // unknown stage
+            "",                      // empty
+        ] {
+            assert!(PipelineSpec::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let spec = PipelineSpec::full();
+        let json = spec.to_value().to_json();
+        let back = PipelineSpec::from_value(&Value::parse(&json).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        assert!(PipelineSpec::from_value(&Value::parse("[\"cache\"]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn plan_acceptance_predicate_truth_table() {
+        let plan = CascadePlan::new(vec![
+            Stage { model: 0, threshold: 0.8 },
+            Stage { model: 2, threshold: 0.0 },
+        ]);
+        let mk = |model: Option<usize>, score: f32| CachedAnswer {
+            answer: 1,
+            score,
+            model,
+            plan_version: 0,
+        };
+        // front-stage model, score clears its threshold → kept
+        assert!(plan_accepts_cached(&plan, &mk(Some(0), 0.9)));
+        // front-stage model, score under its threshold → dropped
+        assert!(!plan_accepts_cached(&plan, &mk(Some(0), 0.5)));
+        // last-stage model accepts unconditionally (sentinel 1.0 included)
+        assert!(plan_accepts_cached(&plan, &mk(Some(2), 1.0)));
+        assert!(plan_accepts_cached(&plan, &mk(Some(2), 0.01)));
+        // model not in the plan → dropped
+        assert!(!plan_accepts_cached(&plan, &mk(Some(1), 0.99)));
+        // no producing model → dropped
+        assert!(!plan_accepts_cached(&plan, &mk(None, 0.99)));
+    }
+}

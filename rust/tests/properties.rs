@@ -551,15 +551,48 @@ fn prop_cache_bounded_and_consistent() {
             let q: Vec<i32> = (0..8).map(|_| rng.below(50) as i32).collect();
             if rng.bool(0.6) {
                 let a = rng.below(4) as u32;
-                cache.put(&q, CachedAnswer { answer: a, score: 0.5 });
+                cache.put(&q, CachedAnswer::fresh(a, 0.5));
                 last = Some((q, a));
             } else {
-                let _ = cache.get(&q);
+                let _ = cache.get(&q, 0);
             }
             assert!(cache.len() <= cap);
             if let Some((lq, la)) = &last {
-                let hit = cache.get(lq).expect("most-recent put must be present");
+                let hit = cache.get(lq, 0).expect("most-recent put must be present");
                 assert_eq!(hit.answer, *la);
+            }
+        }
+    });
+}
+
+/// Weighted τ-grid: uniform (power-of-two) weights reproduce the
+/// positional quantile grid bit-for-bit — decay weights change grid
+/// *placement*, never the unweighted semantics (the §Weights bit-parity
+/// convention, extended to the grid).
+#[test]
+fn prop_uniform_weight_quantile_grid_is_positional_bitwise() {
+    use frugalgpt::coordinator::optimizer::quantile_grid;
+    check("weighted-grid-uniform", 40, |rng| {
+        let n = 1 + rng.usize_below(200);
+        let grid = 3 + rng.usize_below(22);
+        let scores: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_by(|&a, &b| {
+            scores[b as usize]
+                .partial_cmp(&scores[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let positional = quantile_grid(&scores, &order, None, n as f64, grid);
+        for c in [1.0f64, 0.5, 2.0, 0.125] {
+            let w = vec![c; n];
+            let mut total = 0.0;
+            for &wi in &w {
+                total += wi;
+            }
+            let weighted = quantile_grid(&scores, &order, Some(&w), total, grid);
+            assert_eq!(positional.len(), weighted.len(), "n={n} grid={grid} c={c}");
+            for (p, q) in positional.iter().zip(&weighted) {
+                assert_eq!(p.to_bits(), q.to_bits(), "n={n} grid={grid} c={c}");
             }
         }
     });

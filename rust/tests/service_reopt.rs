@@ -99,24 +99,26 @@ fn hot_swap_is_race_free_and_internally_consistent() {
                 assert!(v < plans.len(), "unknown plan version {v}");
                 let plan = &plans[v];
                 // stage index / model / answer / cost must all agree with
-                // THIS version's plan:
-                assert!(ans.stopped_at < plan.stages.len());
-                assert_eq!(ans.model, plan.stages[ans.stopped_at].model);
-                assert_eq!(ans.answer, ans.model as u32, "answer encodes the model");
-                let expect_cost: f64 = plan.stages[..=ans.stopped_at]
+                // THIS version's plan (the cache is off, so every answer
+                // ran the cascade and carries a stage + model):
+                let stopped = ans.stopped_at.expect("cascade answers carry a stage");
+                let model = ans.model.expect("cascade answers carry a model");
+                assert!(stopped < plan.stages.len());
+                assert_eq!(model, plan.stages[stopped].model);
+                assert_eq!(ans.answer, model as u32, "answer encodes the model");
+                let expect_cost: f64 = plan.stages[..=stopped]
                     .iter()
                     .map(|s| costs.call_cost(s.model, input_tokens, s.model as u32))
                     .sum();
                 assert!(
                     (ans.cost_usd - expect_cost).abs() < 1e-12,
-                    "v{v}: cost {} != expected {expect_cost} (stopped_at {})",
+                    "v{v}: cost {} != expected {expect_cost} (stopped_at {stopped})",
                     ans.cost_usd,
-                    ans.stopped_at
                 );
                 // two-stage plans stop exactly where their τ dictates
                 if plan.stages.len() == 2 {
                     let expect_stop = if plan.stages[0].threshold > 1.0 { 1 } else { 0 };
-                    assert_eq!(ans.stopped_at, expect_stop);
+                    assert_eq!(stopped, expect_stop);
                 }
                 assert!(
                     ans.plan_version >= last_version,
@@ -226,7 +228,10 @@ fn reoptimizer_follows_window_shift_with_hysteresis() {
     // served traffic actually uses the new plan
     let ans = svc.answer(&query_row(10)).unwrap();
     assert_eq!(ans.plan_version, 1);
-    assert_eq!(ans.model, plan.stages[ans.stopped_at].model);
+    assert_eq!(
+        ans.model.expect("cascade answer"),
+        plan.stages[ans.stopped_at.expect("cascade answer")].model
+    );
 
     // Phase 3: same distribution again → re-learn is identical or within
     // hysteresis; the plan must NOT thrash.
@@ -310,11 +315,13 @@ fn half_life_window_swaps_faster_than_hard_ring() {
     );
 }
 
-/// A plan swap flushes the completion cache: post-swap traffic is
-/// re-answered by the new plan instead of replaying completions the
-/// superseded plan produced.
+/// A plan swap invalidates completions the new plan would not accept:
+/// post-swap traffic is re-answered by the new plan instead of replaying
+/// a superseded plan's completions. (Completions the new plan *would*
+/// still accept survive the swap — see
+/// `service_pipeline.rs::plan_swap_keeps_surviving_generation_cache_entries`.)
 #[test]
-fn plan_swap_flushes_stale_cached_answers() {
+fn plan_swap_invalidates_completions_the_new_plan_rejects() {
     let costs = sim_costs();
     let engine = sim_engine(&costs, 5.0);
     let cfg = ServiceConfig { window_capacity: 64, ..Default::default() };
@@ -329,9 +336,11 @@ fn plan_swap_flushes_stale_cached_answers() {
     assert!(a2.from_cache, "repeat query is served from cache");
     assert_eq!(a2.answer, 0);
 
+    // model 0 is not a stage of the new plan, so its completion must not
+    // survive the sweep.
     svc.swap_plan(CascadePlan::single(2), "drift").unwrap();
     let a3 = svc.answer(&row).unwrap();
-    assert!(!a3.from_cache, "swap must flush completions of the old plan");
+    assert!(!a3.from_cache, "swap must drop completions the new plan rejects");
     assert_eq!(a3.answer, 2, "post-swap traffic is answered by the new plan");
     assert_eq!(a3.plan_version, 1);
 }

@@ -387,15 +387,53 @@ class SeedOptimizer:
         return prune_pareto(out)
 
 
+def quantile_grid(scores, idx, grid, weights=None, total_weight=None):
+    """The τ_a grid of one model (rust ``optimizer::quantile_grid``):
+    positional quantiles over the score-descending ``idx`` order for
+    unweighted tables, *weighted* quantiles (grid point g sits where the
+    cumulative observation mass first exceeds ``(g+1)/(grid+1)`` of the
+    total) when per-item weights are present — so under heavy decay the
+    grid concentrates where the mass actually is. For uniform weights the
+    walk reproduces the positional grid exactly: with w ≡ c the stop
+    condition ``cum + c <= target`` compares exact multiples of c against
+    ``(g+1)·n·c/(grid+1)``, which floors to the positional index (the
+    power-of-two-scaling argument of the §Weights bit-parity property).
+    Consecutive duplicates are deduped, exactly like the rust."""
+    n = len(idx)
+    qs = []
+    if weights is None:
+        for g in range(grid):
+            pos = min(((g + 1) * n) // (grid + 1), n - 1)
+            qs.append(scores[idx[pos]])
+    else:
+        cum = 0.0
+        pos = 0
+        for g in range(grid):
+            target = (g + 1) * total_weight / (grid + 1)
+            while pos + 1 < n and cum + weights[idx[pos]] <= target:
+                cum += weights[idx[pos]]
+                pos += 1
+            qs.append(scores[idx[pos]])
+    return [q for j, q in enumerate(qs) if j == 0 or q != qs[j - 1]]
+
+
 def build_cost_order_quantiles(table, toks, grid, weights=None):
     """The workspace build both optimizer ports share (rust
     Workspace::build's cost/order/quantile section): the (weight-scaled)
     per-item cost arena + index-order totals, the score-descending item
-    order, and the consecutive-deduped quantile grid per model. Kept in
-    ONE place so the packed and flat executable specs cannot silently
-    diverge on it. For ``weights=None`` every cost is multiplied by
-    exactly 1.0 — bit-identical to no multiply, matching the rust."""
+    order, and the consecutive-deduped quantile grid per model (weight-
+    aware via ``quantile_grid``). Kept in ONE place so the packed and
+    flat executable specs cannot silently diverge on it. For
+    ``weights=None`` every cost is multiplied by exactly 1.0 —
+    bit-identical to no multiply, matching the rust."""
     n, k = table["n"], table["k"]
+    if weights is None:
+        total_weight = float(n)
+    else:
+        # Index-order accumulation, matching SplitTable::with_weights.
+        total_weight = 0.0
+        for w in weights:
+            total_weight += w
     cost, total_cost, order, quantiles = [], [], [], []
     for m in range(k):
         OPS["n"] += n  # cost arena build (f64 per item, both paths)
@@ -410,13 +448,8 @@ def build_cost_order_quantiles(table, toks, grid, weights=None):
         total_cost.append(total)
         sc = table["scores"][m]
         idx = sorted(range(n), key=lambda i: -sc[i])
-        qs = []
-        for g in range(grid):
-            pos = min(((g + 1) * n) // (grid + 1), n - 1)
-            qs.append(sc[idx[pos]])
-        dq = [q for j, q in enumerate(qs) if j == 0 or q != qs[j - 1]]
         order.append(idx)
-        quantiles.append(dq)
+        quantiles.append(quantile_grid(sc, idx, grid, weights, total_weight))
     return cost, total_cost, order, quantiles
 
 
@@ -882,13 +915,12 @@ def reference_frontier(table, toks, grid=24, max_len=3, min_disagreement=0.02,
         return taus
 
     def quantile_taus(m):
+        # Same weight-aware grid as the searches under test: the τ_a grid
+        # determines WHICH triples exist, so the reference must place its
+        # grid points identically or the frontier sets diverge by design.
         sc = table["scores"][m]
         idx = sorted(range(n), key=lambda i: -sc[i])
-        qs = []
-        for g in range(grid):
-            pos = min(((g + 1) * n) // (grid + 1), n - 1)
-            qs.append(sc[idx[pos]])
-        return [q for j, q in enumerate(qs) if j == 0 or q != qs[j - 1]]
+        return quantile_grid(sc, idx, grid, weights, total_w)
 
     eps = min_disagreement
     plans = [((m, 0.0),) for m in range(k)]
@@ -1020,7 +1052,12 @@ def check_weighted(cases=10):
     (c) budget queries against the weighted brute-force reference agree
         to 1e-9 (exact frontier-set comparison would be brittle at Pareto
         near-ties, so equivalence is checked at the query interface the
-        serving stack actually uses)."""
+        serving stack actually uses), and
+    (d) the weight-aware τ_a grid: uniform power-of-two weights reproduce
+        the positional grid bit-for-bit, and under arbitrary weights the
+        incremental walk matches an independent prefix-sum definition
+        (grid point g = score of the first order position whose cumulative
+        mass exceeds (g+1)/(grid+1) of the total)."""
     print(f"[3/5] weighted search on {cases} random tables ...")
     rng = Rng(0xBEEF)
     for case in range(cases):
@@ -1042,6 +1079,45 @@ def check_weighted(cases=10):
                 assert p[0] == q[0], f"case {case} w={u} pt {j}: plan {p[0]} vs {q[0]}"
                 assert p[1] == q[1], f"case {case} w={u} pt {j}: acc {p[1]} vs {q[1]}"
                 assert p[2] == q[2], f"case {case} w={u} pt {j}: cost {p[2]} vs {q[2]}"
+
+        # (d) the weight-aware grid itself, independent of the sweeps.
+        grid_weights = [0.25 + 3.75 * rng.f64() for _ in range(n)]
+        gw_total = 0.0
+        for w in grid_weights:
+            gw_total += w
+        for m in range(k):
+            sc = table["scores"][m]
+            idx = sorted(range(n), key=lambda i: -sc[i])
+            pos_grid = quantile_grid(sc, idx, grid)
+            for u in (1.0, 0.5, 2.0):
+                ut = 0.0
+                for _ in range(n):
+                    ut += u
+                wg = quantile_grid(sc, idx, grid, [u] * n, ut)
+                assert wg == pos_grid, (
+                    f"case {case} m={m} w={u}: uniform grid {wg} != "
+                    f"positional {pos_grid}"
+                )
+            # prefix-sum reference: first position whose cumulative mass
+            # exceeds the target, capped at the last item.
+            prefix = [0.0]
+            for p in range(n):
+                prefix.append(prefix[-1] + grid_weights[idx[p]])
+            want = []
+            for g in range(grid):
+                target = (g + 1) * gw_total / (grid + 1)
+                pos = n - 1
+                for p in range(n):
+                    if prefix[p + 1] > target:
+                        pos = p
+                        break
+                want.append(sc[idx[pos]])
+            want = [q for j, q in enumerate(want) if j == 0 or q != want[j - 1]]
+            got = quantile_grid(sc, idx, grid, grid_weights, gw_total)
+            assert got == want, (
+                f"case {case} m={m}: weighted grid {got} != prefix-sum "
+                f"reference {want}"
+            )
 
         # (b) non-uniform weights: internal consistency via weighted replay.
         weights = [0.25 + 3.75 * rng.f64() for _ in range(n)]

@@ -25,6 +25,16 @@ python3 scripts/check_optimizer_port.py --quick
 
 scripts/tier1.sh
 
+# The documented entry points must build AND run: each example's --sim
+# mode drives the public API (optimizer → plan → pipeline service /
+# live cascade) over the hermetic synthetic marketplace, so an API
+# redesign that breaks `examples/` fails here instead of on a user's
+# machine.
+cargo build --release --examples
+cargo run --release --example quickstart -- --sim
+cargo run --release --example strategies_demo -- --sim --queries 120
+cargo run --release --example serve_workload -- --sim --queries 200 --clients 2 --zipf
+
 # Bench smoke: exercises the full frontier sweep + the JSON suite writer
 # on a small synthetic table. Writes to a scratch path — the committed
 # BENCH_optimizer.json trajectory is only ever refreshed by the nightly
