@@ -10,12 +10,20 @@
 //! ```sh
 //! cargo run --release --example serve_workload -- \
 //!     --dataset headlines --queries 600 --clients 4 --budget-frac 0.2 \
-//!     [--zipf] [--cache-similar] [--prompt-keep 4] [--sim]
+//!     [--zipf] [--cache-similar] [--prompt-keep 4] [--sim] \
+//!     [--scenario storm|PATH] [--breaker]
 //! ```
 //!
 //! `--sim` swaps the PJRT artifacts for a hermetic synthetic marketplace
 //! (`eval::simulate::SimWorld`) — same serving stack, zero artifacts
 //! (CI smoke-runs this mode).
+//!
+//! `--scenario` replays a scripted fault timeline (builtin `storm`, or a
+//! scenario JSON) against the serving engine and turns the per-model
+//! health layer on: 429 storms and outages degrade the cascade (answers
+//! still flow, from healthier stages) instead of erroring the clients —
+//! every client thread propagates `Err`s, so one surfaced fault fails
+//! the whole run (CI smoke-runs `--sim --scenario storm`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -23,12 +31,15 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use frugalgpt::coordinator::cascade::CascadePlan;
 use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
 use frugalgpt::data::Artifacts;
-use frugalgpt::eval::simulate::SimWorld;
+use frugalgpt::eval::simulate::{fault_injected_engine, ScenarioTimeline, SimWorld};
 use frugalgpt::eval::{best_individual, individual_points, IndividualPoint};
 use frugalgpt::runtime::Engine;
+use frugalgpt::server::health::HealthConfig;
 use frugalgpt::server::service::{FrugalService, ServiceConfig};
+use frugalgpt::server::shadow::default_reference;
 use frugalgpt::strategies::prompt::PromptPolicy;
 use frugalgpt::util::args::Args;
 use frugalgpt::util::rng::Rng;
@@ -41,6 +52,13 @@ fn main() -> Result<()> {
     let budget_frac = args.get_f64("budget-frac").unwrap_or(0.2);
     let zipf = args.has("zipf");
     let sim = args.has("sim");
+    let scenario = match args.get("scenario") {
+        Some(s) => Some(match ScenarioTimeline::builtin(s) {
+            Some(t) => t,
+            None => ScenarioTimeline::load(std::path::Path::new(s))?,
+        }),
+        None => None,
+    };
 
     // Load the world: PJRT artifacts by default, the hermetic synthetic
     // marketplace with --sim. Everything after this block is one code
@@ -101,7 +119,20 @@ fn main() -> Result<()> {
         world.train_tokens.clone(),
         OptimizerOptions::default(),
     )?;
-    let plan = opt.optimize(budget)?.plan;
+    let mut plan = opt.optimize(budget)?.plan;
+    if let Some(_t) = &scenario {
+        // A one-stage plan has no healthy terminal to absorb a storm on
+        // its only model: extend it with the strongest API so the cascade
+        // degrades (answers from the terminal) instead of dying.
+        let strongest = default_reference(&world.costs);
+        if plan.stages.len() == 1 && plan.stages[0].model != strongest {
+            plan = CascadePlan::pair(plan.stages[0].model, 0.95, strongest);
+            println!(
+                "scenario active: extended single-stage plan with terminal {}",
+                world.costs.model_names[strongest]
+            );
+        }
+    }
     println!(
         "[{}] serving cascade {} (budget ${budget:.2}/10k = {budget_frac} x {})",
         if sim { "sim" } else { dataset.as_str() },
@@ -118,11 +149,19 @@ fn main() -> Result<()> {
             None => PromptPolicy::Full,
         },
         budget_cap_usd: args.get_f64("budget-cap"),
+        health: (scenario.is_some() || args.has("breaker")).then(HealthConfig::default),
         ..ServiceConfig::default()
+    };
+    let engine = match &scenario {
+        Some(t) => {
+            println!("scenario: {} scripted fault events on the serve path", t.events().len());
+            fault_injected_engine(world.engine.clone(), &world.costs.model_names, t.clone())
+        }
+        None => world.engine.clone(),
     };
     let svc = Arc::new(FrugalService::new(
         plan,
-        world.engine.clone(),
+        engine,
         world.costs.clone(),
         world.meta.clone(),
         cfg,
@@ -147,6 +186,7 @@ fn main() -> Result<()> {
     // Serve from n_clients threads.
     let next = Arc::new(AtomicUsize::new(0));
     let correct = Arc::new(AtomicUsize::new(0));
+    let degraded = Arc::new(AtomicUsize::new(0));
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for _ in 0..n_clients {
@@ -156,16 +196,33 @@ fn main() -> Result<()> {
         let work = work.clone();
         let next = next.clone();
         let correct = correct.clone();
+        let degraded = degraded.clone();
+        let scenario = scenario.clone();
         handles.push(std::thread::spawn(move || -> Result<()> {
             loop {
                 let w = next.fetch_add(1, Ordering::Relaxed);
                 if w >= work.len() {
                     return Ok(());
                 }
+                if let Some(t) = &scenario {
+                    // The fault clock is query-indexed. With several
+                    // clients the stores race by a query or two at event
+                    // boundaries — fine for a workload driver; the
+                    // hermetic single-threaded tests pin it exactly.
+                    t.set_now(w as u64);
+                    for (model, mult) in t.price_steps_at(w as u64) {
+                        // `w` is claimed by exactly one client, so a
+                        // scripted price step is applied exactly once.
+                        svc.reprice(model, mult, &format!("price step @q{w}"))?;
+                    }
+                }
                 let i = work[w];
                 let ans = svc.answer(&rows[i])?;
                 if ans.answer == labels[i] {
                     correct.fetch_add(1, Ordering::Relaxed);
+                }
+                if !ans.skipped_stages.is_empty() {
+                    degraded.fetch_add(1, Ordering::Relaxed);
                 }
             }
         }));
@@ -213,6 +270,26 @@ fn main() -> Result<()> {
             "  {:>8}: {:>7} in  {:>7} answered  {:>7} transformed  {:>7} passed",
             s.stage, s.queries, s.answered, s.transformed, s.passed
         );
+    }
+    if let Some(h) = svc.health() {
+        println!(
+            "health: {} degraded answers (breaker-skipped stages, zero surfaced errors)",
+            degraded.load(Ordering::Relaxed)
+        );
+        for (m, s) in h.snapshot().iter().enumerate() {
+            println!(
+                "  {:>14}: {:<9} calls={} failures={} trips={} recoveries={} \
+                 skips={} retries={}",
+                world.costs.model_names[m],
+                s.state.name(),
+                s.calls,
+                s.failures,
+                s.trips,
+                s.recoveries,
+                s.skips,
+                s.retries
+            );
+        }
     }
     let stats = svc.engine_handle().stats()?;
     println!(

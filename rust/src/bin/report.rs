@@ -13,13 +13,18 @@
 //!                                   (artifacts/frontiers/<D>.json)
 //!   report swaps     --log PATH   — render a serve run's plan-swap history
 //!                                   (`serve --swap-log PATH`)
+//!   report health    --log PATH   — render a serve run's per-model breaker
+//!                                   state (written into the same swap log
+//!                                   when `serve --breaker`/`--scenario` is on)
 //!   report all                    — everything above in order (frontier /
-//!                                   swaps excluded: they read extra files)
+//!                                   swaps / health excluded: they read
+//!                                   extra files)
 //!
 //! All reports run on the *test* split with a cascade learned on the
 //! *train* split (mirroring the paper), entirely from the offline response
-//! table — no PJRT needed, so they are fast and deterministic. `frontier`
-//! and `swaps` need no artifacts at all: they render their input file.
+//! table — no PJRT needed, so they are fast and deterministic. `frontier`,
+//! `swaps` and `health` need no artifacts at all: they render their input
+//! file.
 
 use std::path::{Path, PathBuf};
 
@@ -57,6 +62,7 @@ fn run(what: &str, args: &Args) -> Result<()> {
     match what {
         "frontier" => return frontier_report(args),
         "swaps" => return swaps_report(args),
+        "health" => return health_report(args),
         _ => {}
     }
     let art = Artifacts::load(args.get_or("artifacts", "artifacts"))?;
@@ -143,10 +149,11 @@ fn swaps_report(args: &Args) -> Result<()> {
         let g = |k: &str| shadow.get(k).as_f64().unwrap_or(0.0);
         println!(
             "shadow-scored traffic: sampled={} completed={} dropped={} \
-             skipped_budget={} errors={} spend=${:.6}{}",
+             dropped_rows={} skipped_budget={} errors={} spend=${:.6}{}",
             g("sampled"),
             g("completed"),
             g("dropped_queue_full"),
+            g("dropped_rows"),
             g("skipped_budget"),
             g("errors"),
             g("spend_usd"),
@@ -182,6 +189,66 @@ fn swaps_report(args: &Args) -> Result<()> {
             &rows
         )
     );
+    Ok(())
+}
+
+/// Render the per-model breaker state a serve run wrote into its swap log
+/// (`serve --breaker`/`--scenario` + `--swap-log PATH`): one row per
+/// marketplace model, with trip/recovery/skip/retry accounting.
+fn health_report(args: &Args) -> Result<()> {
+    let log = args.get("log").context("report health needs --log PATH")?;
+    let raw = std::fs::read_to_string(log)
+        .with_context(|| format!("reading swap log {log}"))?;
+    let v = Value::parse(&raw).map_err(|e| anyhow!("{e}"))?;
+    let dataset = v.get("dataset").as_str().unwrap_or("?");
+    let models: Vec<String> = v
+        .get("models")
+        .as_arr()
+        .context("swap log missing `models`")?
+        .iter()
+        .map(|x| x.as_str().unwrap_or("?").to_string())
+        .collect();
+    let health = v.get("health").as_arr().context(
+        "swap log has no `health` section — the serve run did not enable \
+         breakers (pass --breaker or --scenario)",
+    )?;
+    println!("== per-model health: {dataset} ({} breakers) ==", health.len());
+    let g = |h: &Value, k: &str| h.get(k).as_f64().unwrap_or(0.0);
+    let rows: Vec<Vec<String>> = health
+        .iter()
+        .enumerate()
+        .map(|(m, h)| {
+            vec![
+                models.get(m).cloned().unwrap_or_else(|| format!("model {m}")),
+                h.get("state").as_str().unwrap_or("?").to_string(),
+                format!("{}", g(h, "calls")),
+                format!("{}", g(h, "failures")),
+                format!("{:.2}", g(h, "failure_rate")),
+                format!("{}", g(h, "trips")),
+                format!("{}", g(h, "recoveries")),
+                format!("{}", g(h, "skips")),
+                format!("{}", g(h, "retries")),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render(
+            &["model", "state", "calls", "failures", "rate", "trips", "recoveries", "skips", "retries"],
+            &rows
+        )
+    );
+    let open: Vec<&str> = health
+        .iter()
+        .enumerate()
+        .filter(|(_, h)| h.get("state").as_str() != Some("closed"))
+        .filter_map(|(m, _)| models.get(m).map(String::as_str))
+        .collect();
+    if open.is_empty() {
+        println!("(all breakers closed at end of run)");
+    } else {
+        println!("still degraded at end of run: {}", open.join(", "));
+    }
     Ok(())
 }
 

@@ -12,6 +12,8 @@
 //! * [`Cascade`] — live serving: every stage runs the real AOT-compiled
 //!   model + scorer through the PJRT engine, with metered cost.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use super::responses::SplitTable;
@@ -20,6 +22,36 @@ use crate::data::{prompt, DatasetMeta};
 use crate::marketplace::CostModel;
 use crate::runtime::EngineHandle;
 use crate::util::json::Value;
+
+/// What the health layer says about one prospective model call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gate {
+    /// The model is healthy — call it.
+    Allow,
+    /// The breaker is half-open and this call is the recovery probe.
+    Probe,
+    /// The breaker is open — skip the stage, route around the model.
+    Skip,
+}
+
+/// Per-model availability consulted by the live cascade. Implemented by
+/// `server::health::ModelHealth`; defined here as a trait so the pure
+/// `coordinator` layer never depends on the `server` runtime modules
+/// (the layering rule `strategies/pipeline.rs` documents).
+///
+/// Decisions must be **local** to the queried model: `admit(m)` /
+/// `record(m, ..)` may not read or move any other model's state.
+pub trait HealthView: Send + Sync {
+    /// May model `m` be called right now?
+    fn admit(&self, m: usize) -> Gate;
+    /// Report one call outcome against model `m`.
+    fn record(&self, m: usize, ok: bool);
+    /// Bounded retries allowed per engine call.
+    fn max_retries(&self) -> u32;
+    /// Count one retry against model `m` and return the deterministic
+    /// jittered backoff to sleep before it (µs; 0 = no sleep).
+    fn retry_backoff_us(&self, m: usize, attempt: u32) -> u64;
+}
 
 /// One stage of a cascade: an API index plus its acceptance threshold.
 /// The threshold of the last stage is ignored (it always answers).
@@ -346,12 +378,26 @@ pub struct CascadeAnswer {
     pub stopped_at: usize,
     /// Reliability score of the accepted answer (1.0 if last stage).
     pub score: f32,
+    /// Whether `score` is the always-answers sentinel 1.0 rather than a
+    /// scorer measurement. Depth alone can no longer tell the two apart:
+    /// a degraded fallback answers terminally from a non-final stage, and
+    /// raw scorer logits may legitimately exceed 1.0.
+    pub sentinel_score: bool,
     /// Metered USD across all invoked stages.
     pub cost: f64,
     /// USD per invoked stage (`stage_costs[s]` = stage s alone;
     /// `stage_costs.iter().sum() == cost`). Lets the serving metrics
     /// attribute spend to each model window exactly.
     pub stage_costs: Vec<f64>,
+    /// Marketplace model behind each entry of `stage_costs` (same length,
+    /// same order). With health-aware skipping the invoked stages are no
+    /// longer a plan prefix, so metrics must attribute spend through this
+    /// list instead of indexing the plan by position.
+    pub invoked_models: Vec<usize>,
+    /// Plan stage indices that did NOT contribute to this answer: their
+    /// breaker was open, or the call failed after bounded retries. Empty
+    /// on the healthy path.
+    pub skipped_stages: Vec<usize>,
     /// Billable input tokens of the query prompt.
     pub input_tokens: u32,
     /// Per-stage simulated API latency (ms), for serving reports.
@@ -366,6 +412,9 @@ pub struct Cascade {
     costs: CostModel,
     meta: DatasetMeta,
     dataset: String,
+    /// Optional per-model availability layer; `None` = strict mode (an
+    /// engine error bubbles out, the pre-health behavior).
+    health: Option<Arc<dyn HealthView>>,
 }
 
 impl Cascade {
@@ -387,7 +436,16 @@ impl Cascade {
             }
         }
         let dataset = meta.name.clone();
-        Ok(Cascade { plan, engine, scorer, costs, meta, dataset })
+        Ok(Cascade { plan, engine, scorer, costs, meta, dataset, health: None })
+    }
+
+    /// Attach (or detach) a per-model health layer. With health on, the
+    /// cascade *skips* stages whose breaker is open, retries transient
+    /// failures with the layer's bounded backoff, and degrades to the
+    /// strongest answer it can produce instead of erroring.
+    pub fn with_health(mut self, health: Option<Arc<dyn HealthView>>) -> Self {
+        self.health = health;
+        self
     }
 
     /// The plan this cascade executes.
@@ -426,8 +484,17 @@ impl Cascade {
     /// that shares its few-shot prompt with a group is billed
     /// `prompt/g + query` tokens instead of the full row.
     pub fn answer_billed(&self, tokens: &[i32], input_tokens: u32) -> Result<CascadeAnswer> {
+        match &self.health {
+            None => self.answer_strict(tokens, input_tokens),
+            Some(h) => self.answer_resilient(h.as_ref(), tokens, input_tokens),
+        }
+    }
+
+    /// The pre-health execution loop: any engine error bubbles out.
+    fn answer_strict(&self, tokens: &[i32], input_tokens: u32) -> Result<CascadeAnswer> {
         let mut cost = 0.0;
         let mut stage_costs = Vec::with_capacity(self.plan.stages.len());
+        let mut invoked_models = Vec::with_capacity(self.plan.stages.len());
         let mut sim_lat = 0.0;
         let last = self.plan.stages.len() - 1;
         for (s, stage) in self.plan.stages.iter().enumerate() {
@@ -440,6 +507,7 @@ impl Cascade {
             let stage_cost = self.costs.call_cost(stage.model, input_tokens, answer);
             cost += stage_cost;
             stage_costs.push(stage_cost);
+            invoked_models.push(stage.model);
             let out_tokens = self.costs.answer_len(answer);
             sim_lat += self.costs.latency[stage.model]
                 .latency_ms(input_tokens + out_tokens);
@@ -448,8 +516,11 @@ impl Cascade {
                     answer,
                     stopped_at: s,
                     score: 1.0,
+                    sentinel_score: true,
                     cost,
                     stage_costs,
+                    invoked_models,
+                    skipped_stages: Vec::new(),
                     input_tokens,
                     simulated_latency_ms: sim_lat,
                 });
@@ -460,14 +531,211 @@ impl Cascade {
                     answer,
                     stopped_at: s,
                     score,
+                    sentinel_score: false,
                     cost,
                     stage_costs,
+                    invoked_models,
+                    skipped_stages: Vec::new(),
                     input_tokens,
                     simulated_latency_ms: sim_lat,
                 });
             }
         }
         unreachable!()
+    }
+
+    /// Health-aware execution: open-breaker stages are skipped, engine
+    /// failures are retried (bounded) and then skipped, and when the
+    /// terminal stage cannot answer the cascade degrades — strongest
+    /// skipped stage that has recovered, else the best sub-threshold
+    /// answer already in hand, else one breaker-bypassing attempt at the
+    /// strongest stage. An `Err` escapes only when *no* stage can produce
+    /// an answer at all (skip-never-error).
+    fn answer_resilient(
+        &self,
+        health: &dyn HealthView,
+        tokens: &[i32],
+        input_tokens: u32,
+    ) -> Result<CascadeAnswer> {
+        let mut cost = 0.0;
+        let mut stage_costs = Vec::with_capacity(self.plan.stages.len());
+        let mut invoked_models = Vec::with_capacity(self.plan.stages.len());
+        let mut skipped: Vec<usize> = Vec::new();
+        let mut gate_skipped: Vec<usize> = Vec::new();
+        let mut sim_lat = 0.0;
+        // Strongest successful sub-threshold (answer, score, stage): the
+        // degraded fallback when nothing downstream can answer.
+        let mut best_effort: Option<(u32, f32, usize)> = None;
+        let mut attempted_any = false;
+        let last = self.plan.stages.len() - 1;
+
+        for (s, stage) in self.plan.stages.iter().enumerate() {
+            if health.admit(stage.model) == Gate::Skip {
+                skipped.push(s);
+                gate_skipped.push(s);
+                continue;
+            }
+            attempted_any = true;
+            let Some(logits) = self.try_stage(health, stage.model, tokens) else {
+                // failed after bounded retries — degrade to the next stage
+                skipped.push(s);
+                continue;
+            };
+            let answer = argmax(&logits) as u32;
+            let stage_cost = self.costs.call_cost(stage.model, input_tokens, answer);
+            cost += stage_cost;
+            stage_costs.push(stage_cost);
+            invoked_models.push(stage.model);
+            let out_tokens = self.costs.answer_len(answer);
+            sim_lat += self.costs.latency[stage.model]
+                .latency_ms(input_tokens + out_tokens);
+            if s == last {
+                return Ok(CascadeAnswer {
+                    answer,
+                    stopped_at: s,
+                    score: 1.0,
+                    sentinel_score: true,
+                    cost,
+                    stage_costs,
+                    invoked_models,
+                    skipped_stages: skipped,
+                    input_tokens,
+                    simulated_latency_ms: sim_lat,
+                });
+            }
+            let score = self.scorer.score(tokens, answer)?;
+            if score > stage.threshold {
+                return Ok(CascadeAnswer {
+                    answer,
+                    stopped_at: s,
+                    score,
+                    sentinel_score: false,
+                    cost,
+                    stage_costs,
+                    invoked_models,
+                    skipped_stages: skipped,
+                    input_tokens,
+                    simulated_latency_ms: sim_lat,
+                });
+            }
+            best_effort = Some((answer, score, s));
+        }
+
+        // The terminal stage was skipped or failed. Fall back to the
+        // strongest breaker-skipped stage the health layer lets through
+        // now (a half-open probe, typically); it answers terminally.
+        for &s in gate_skipped.iter().rev() {
+            let stage = &self.plan.stages[s];
+            if health.admit(stage.model) == Gate::Skip {
+                continue;
+            }
+            if let Some(logits) = self.try_stage(health, stage.model, tokens) {
+                let answer = argmax(&logits) as u32;
+                let stage_cost = self.costs.call_cost(stage.model, input_tokens, answer);
+                cost += stage_cost;
+                stage_costs.push(stage_cost);
+                invoked_models.push(stage.model);
+                let out_tokens = self.costs.answer_len(answer);
+                sim_lat += self.costs.latency[stage.model]
+                    .latency_ms(input_tokens + out_tokens);
+                skipped.retain(|&x| x != s);
+                return Ok(CascadeAnswer {
+                    answer,
+                    stopped_at: s,
+                    score: 1.0,
+                    sentinel_score: true,
+                    cost,
+                    stage_costs,
+                    invoked_models,
+                    skipped_stages: skipped,
+                    input_tokens,
+                    simulated_latency_ms: sim_lat,
+                });
+            }
+        }
+
+        // Serve the best sub-threshold answer we already paid for.
+        if let Some((answer, score, s)) = best_effort {
+            return Ok(CascadeAnswer {
+                answer,
+                stopped_at: s,
+                score,
+                sentinel_score: false,
+                cost,
+                stage_costs,
+                invoked_models,
+                skipped_stages: skipped,
+                input_tokens,
+                simulated_latency_ms: sim_lat,
+            });
+        }
+
+        // Every stage was breaker-skipped and nothing was even attempted:
+        // one last-resort attempt at the strongest stage, bypassing the
+        // breaker — a skip decision alone must never surface as an error.
+        if !attempted_any {
+            let stage = &self.plan.stages[last];
+            if let Some(logits) = self.try_stage(health, stage.model, tokens) {
+                let answer = argmax(&logits) as u32;
+                let stage_cost = self.costs.call_cost(stage.model, input_tokens, answer);
+                cost += stage_cost;
+                stage_costs.push(stage_cost);
+                invoked_models.push(stage.model);
+                let out_tokens = self.costs.answer_len(answer);
+                sim_lat += self.costs.latency[stage.model]
+                    .latency_ms(input_tokens + out_tokens);
+                skipped.retain(|&x| x != last);
+                return Ok(CascadeAnswer {
+                    answer,
+                    stopped_at: last,
+                    score: 1.0,
+                    sentinel_score: true,
+                    cost,
+                    stage_costs,
+                    invoked_models,
+                    skipped_stages: skipped,
+                    input_tokens,
+                    simulated_latency_ms: sim_lat,
+                });
+            }
+        }
+
+        bail!(
+            "cascade unavailable: all {} stages failed or are circuit-open",
+            self.plan.stages.len()
+        )
+    }
+
+    /// One health-gated engine call with bounded, deterministically
+    /// jittered retry. Outcomes feed the breaker; a definitive failure
+    /// returns `None` (the caller skips the stage) instead of erroring.
+    fn try_stage(
+        &self,
+        health: &dyn HealthView,
+        model: usize,
+        tokens: &[i32],
+    ) -> Option<Vec<f32>> {
+        let name = &self.costs.model_names[model];
+        let mut attempt = 0u32;
+        loop {
+            match self.engine.execute(&self.dataset, name, tokens.to_vec()) {
+                Ok(logits) => {
+                    health.record(model, true);
+                    return Some(logits);
+                }
+                Err(_) => {
+                    health.record(model, false);
+                    if attempt >= health.max_retries() {
+                        return None;
+                    }
+                    attempt += 1;
+                    let backoff_us = health.retry_backoff_us(model, attempt);
+                    if backoff_us > 0 {
+                        std::thread::sleep(std::time::Duration::from_micros(backoff_us));
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -647,5 +915,165 @@ mod tests {
         assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
         assert_eq!(argmax(&[2.0, 2.0]), 0);
         assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    mod resilient {
+        use super::*;
+        use crate::data::layout;
+        use crate::marketplace::{LatencyModel, Pricing};
+        use crate::runtime::EngineHandle;
+        use crate::server::health::{HealthConfig, ModelHealth};
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        fn meta() -> DatasetMeta {
+            DatasetMeta {
+                name: "sim".into(),
+                seq: 8,
+                n_classes: 4,
+                n_examples: 0,
+                qlen: 4,
+                block_len: 1,
+                q_offset: 0,
+                scorer_seq: 8,
+                answer_lens: vec![1, 1, 1, 1],
+            }
+        }
+
+        fn costs() -> CostModel {
+            CostModel {
+                dataset: "sim".into(),
+                model_names: vec!["m0".into(), "m1".into()],
+                pricing: vec![Pricing::new(2.0, 2.0, 0.0), Pricing::new(30.0, 30.0, 0.0)],
+                latency: vec![LatencyModel { base_ms: 1.0, per_1k_tokens_ms: 1.0 }; 2],
+                answer_lens: vec![1, 1, 1, 1],
+            }
+        }
+
+        fn row() -> Vec<i32> {
+            vec![layout::CLS, 5, 11, 12, 13, layout::QSEP, layout::PAD, layout::PAD]
+        }
+
+        /// m0 answers class 0, m1 answers class 1 unless `down`; the
+        /// scorer logit is low, so every stage-0 answer stays below any
+        /// positive threshold and the cascade must escalate.
+        fn engine(down_m1: Arc<AtomicBool>) -> EngineHandle {
+            EngineHandle::simulated(move |_ds, model, rows| {
+                rows.iter()
+                    .map(|_| match model {
+                        "scorer" => Ok(vec![-4.0f32]),
+                        "m0" => Ok(vec![1.0, 0.0, 0.0, 0.0]),
+                        "m1" => {
+                            if down_m1.load(Ordering::Relaxed) {
+                                anyhow::bail!("simulated outage: m1 is down")
+                            }
+                            Ok(vec![0.0, 1.0, 0.0, 0.0])
+                        }
+                        other => anyhow::bail!("unknown model {other}"),
+                    })
+                    .collect()
+            })
+        }
+
+        fn health() -> Arc<ModelHealth> {
+            Arc::new(ModelHealth::new(
+                2,
+                HealthConfig {
+                    trip_consecutive: 2,
+                    cooldown: 3,
+                    max_retries: 1,
+                    backoff_base_us: 0, // hermetic: no sleeping
+                    ..Default::default()
+                },
+            ))
+        }
+
+        fn cascade(down_m1: Arc<AtomicBool>, h: Option<Arc<ModelHealth>>) -> Cascade {
+            let e = engine(down_m1);
+            Cascade::new(
+                CascadePlan::pair(0, 2.0, 1), // τ=2.0: stage 0 never accepts
+                e.clone(),
+                Scorer::new(e, meta()),
+                costs(),
+                meta(),
+            )
+            .unwrap()
+            .with_health(h.map(|h| h as Arc<dyn HealthView>))
+        }
+
+        #[test]
+        fn strict_mode_errors_when_the_terminal_stage_is_down() {
+            let c = cascade(Arc::new(AtomicBool::new(true)), None);
+            let err = c.answer(&row()).unwrap_err();
+            assert!(format!("{err:#}").contains("m1"), "{err:#}");
+        }
+
+        #[test]
+        fn terminal_outage_degrades_to_best_effort_instead_of_erroring() {
+            let c = cascade(Arc::new(AtomicBool::new(true)), Some(health()));
+            let a = c.answer(&row()).expect("skip-never-error");
+            // the degraded answer is stage 0's sub-threshold answer
+            assert_eq!(a.answer, 0);
+            assert_eq!(a.stopped_at, 0);
+            assert!(a.score < 1.0, "a best-effort answer keeps its measured score");
+            assert!(!a.sentinel_score, "a best-effort score is a real measurement");
+            assert_eq!(a.skipped_stages, vec![1]);
+            assert_eq!(a.invoked_models, vec![0]);
+            assert_eq!(a.stage_costs.len(), 1);
+            assert!((a.stage_costs.iter().sum::<f64>() - a.cost).abs() < 1e-12);
+        }
+
+        #[test]
+        fn breaker_opens_under_outage_and_recloses_after_recovery() {
+            let down = Arc::new(AtomicBool::new(true));
+            let h = health();
+            let c = cascade(down.clone(), Some(h.clone()));
+            // Outage: every answer degrades, never errors; the m1 breaker
+            // trips after trip_consecutive failures.
+            for _ in 0..8 {
+                let a = c.answer(&row()).expect("skip-never-error");
+                assert_eq!(a.answer, 0);
+                assert!(!a.skipped_stages.is_empty());
+            }
+            let snap = &h.snapshot()[1];
+            assert!(snap.trips >= 1, "m1 breaker never tripped: {snap:?}");
+            assert!(snap.skips >= 1);
+            // Recovery: the next half-open probe succeeds, the breaker
+            // closes, and terminal answers flow again.
+            down.store(false, Ordering::Relaxed);
+            let mut terminal_again = false;
+            for _ in 0..16 {
+                let a = c.answer(&row()).expect("answer");
+                if a.stopped_at == 1 && a.skipped_stages.is_empty() {
+                    terminal_again = true;
+                    break;
+                }
+            }
+            assert!(terminal_again, "cascade never returned to the terminal stage");
+            assert!(h.snapshot()[1].recoveries >= 1);
+            // healthy steady state: no more skips
+            let a = c.answer(&row()).unwrap();
+            assert_eq!(a.stopped_at, 1);
+            assert_eq!(a.invoked_models, vec![0, 1]);
+            assert!(a.skipped_stages.is_empty());
+            assert!(a.sentinel_score, "terminal answers carry the sentinel 1.0");
+        }
+
+        #[test]
+        fn all_breakers_open_still_attempts_the_strongest_stage() {
+            let h = health();
+            // trip BOTH breakers by hand
+            for _ in 0..4 {
+                use crate::coordinator::cascade::HealthView;
+                h.record(0, false);
+                h.record(1, false);
+            }
+            let c = cascade(Arc::new(AtomicBool::new(false)), Some(h));
+            // both stages gate-skip, but the last-resort bypass still
+            // produces the strongest stage's answer
+            let a = c.answer(&row()).expect("skip-never-error");
+            assert_eq!(a.answer, 1);
+            assert_eq!(a.stopped_at, 1);
+        }
     }
 }

@@ -232,4 +232,41 @@ mod tests {
         }
         assert!(SavedFrontier::from_value(&doc).is_err());
     }
+
+    /// Each way a frontier file can be broken on disk must surface as a
+    /// distinct, situating error — the serve path prints these verbatim,
+    /// so "something failed somewhere" is not acceptable.
+    #[test]
+    fn corrupt_files_fail_with_situating_errors() {
+        let dir = std::env::temp_dir().join("frugalgpt_frontier_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // 1. Missing file: the error names the path and the read phase.
+        let missing = SavedFrontier::default_path(&dir, "no_such_dataset");
+        let err = format!("{:#}", SavedFrontier::load(&missing).unwrap_err());
+        assert!(err.contains("reading frontier"), "got: {err}");
+        assert!(err.contains("no_such_dataset"), "got: {err}");
+
+        // 2. Truncated JSON (a write that died mid-file): parse phase.
+        let (sf, _) = learned();
+        let truncated_path = dir.join("truncated.json");
+        let mut raw = sf.to_json();
+        raw.truncate(raw.len() / 2);
+        std::fs::write(&truncated_path, raw).unwrap();
+        let err = format!("{:#}", SavedFrontier::load(&truncated_path).unwrap_err());
+        assert!(err.contains("parsing frontier"), "got: {err}");
+        std::fs::remove_file(&truncated_path).ok();
+
+        // 3. Wrong schema version: valid JSON, wrong format tag.
+        let stale_path = dir.join("stale.json");
+        let mut doc = sf.to_value();
+        if let Value::Obj(m) = &mut doc {
+            m.insert("format".into(), Value::Str("frugalgpt-frontier/v0".into()));
+        }
+        std::fs::write(&stale_path, doc.to_json()).unwrap();
+        let err = format!("{:#}", SavedFrontier::load(&stale_path).unwrap_err());
+        assert!(err.contains("unsupported frontier format"), "got: {err}");
+        assert!(err.contains(FORMAT), "error should name the wanted format: {err}");
+        std::fs::remove_file(&stale_path).ok();
+    }
 }

@@ -21,13 +21,17 @@
 //!   smoke runs: the whole serving stack end-to-end with zero artifacts.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::responses::{synthetic_table, SplitTable};
 use crate::data::{layout, prompt, DatasetMeta};
 use crate::marketplace::{CostModel, LatencyModel, Pricing};
 use crate::runtime::EngineHandle;
+use crate::util::json::Value;
+use crate::util::rng::splitmix64_mix;
 
 /// Wrap `table` as a simulated engine actor. `rows[i]` must be item i's
 /// full token row in `meta`'s layout; models are resolved by name against
@@ -185,6 +189,18 @@ impl SimWorld {
     pub fn engine(&self) -> Result<EngineHandle> {
         table_backed_engine(self.table.clone(), &self.rows, self.meta.clone())
     }
+
+    /// Spawn this world's engine behind a [`fault_injected_engine`]
+    /// wrapper scripted by `timeline`. The returned handle is the SAME
+    /// production `EngineHandle` type the service executes on — injected
+    /// faults surface as real `Err`s/latencies on the serving code path.
+    pub fn engine_with(&self, timeline: ScenarioTimeline) -> Result<EngineHandle> {
+        Ok(fault_injected_engine(
+            self.engine()?,
+            &self.costs.model_names,
+            timeline,
+        ))
+    }
 }
 
 /// Item i's token row: 4 dense example blocks, then `[CLS] body [QSEP]`
@@ -204,6 +220,393 @@ fn sim_row(meta: &DatasetMeta, i: usize) -> Vec<i32> {
     }
     row[meta.q_offset + 1 + meta.qlen] = layout::QSEP;
     row
+}
+
+// ---------------------------------------------------------------------------
+// Scripted fault timelines
+// ---------------------------------------------------------------------------
+
+/// JSON schema tag of a persisted scenario file.
+pub const SCENARIO_FORMAT: &str = "frugalgpt-scenario/v1";
+
+/// Sentinel duration meaning "until the end of the run".
+pub const FOREVER: u64 = u64::MAX;
+
+/// One marketplace fault, pure data. Timing lives in [`TimedEvent`];
+/// durations are in *queries* (the timeline clock is query-indexed, never
+/// wall-clock — hermetic tests advance it explicitly).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScenarioEvent {
+    /// Model `model` answers a deterministic fraction `rate` of calls
+    /// with a 429-style error for `dur` queries.
+    RateLimitStorm {
+        /// Marketplace model index.
+        model: usize,
+        /// Fraction of calls rejected (1.0 = every call).
+        rate: f64,
+        /// Storm length in queries.
+        dur: u64,
+    },
+    /// Model `model`'s calls take `factor`× longer for `dur` queries.
+    LatencySpike {
+        /// Marketplace model index.
+        model: usize,
+        /// Multiplier on the injected per-call delay (1.0 = none).
+        factor: f64,
+        /// Spike length in queries.
+        dur: u64,
+    },
+    /// Model `model`'s pricing is scaled by `mult`, once, at the event's
+    /// time. Billing lives in the driver's `CostModel`, not the engine —
+    /// drivers apply these via `ScenarioTimeline::price_steps_at` +
+    /// `FrugalService::reprice`.
+    PriceStep {
+        /// Marketplace model index.
+        model: usize,
+        /// Price multiplier (0.5 = half price, 3.0 = tripled).
+        mult: f64,
+    },
+    /// From the event's time on, a deterministic fraction `|acc_delta|`
+    /// of model `model`'s answers are silently rotated to a wrong class —
+    /// the un-announced model-version bump that only shadow scoring can
+    /// catch.
+    SilentDrift {
+        /// Marketplace model index.
+        model: usize,
+        /// Fraction of answers corrupted (sign ignored; 1.0 = all).
+        acc_delta: f64,
+    },
+    /// Model `model` errors on every call for `dur` queries
+    /// ([`FOREVER`] = the rest of the run).
+    Outage {
+        /// Marketplace model index.
+        model: usize,
+        /// Outage length in queries.
+        dur: u64,
+    },
+}
+
+/// A [`ScenarioEvent`] armed at query-index `at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimedEvent {
+    /// Query index the event fires at (timeline clock value).
+    pub at: u64,
+    /// The fault.
+    pub event: ScenarioEvent,
+}
+
+impl TimedEvent {
+    /// JSON form: `{"at": t, "kind": ..., "model": m, ...}`.
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("at".to_string(), Value::Num(self.at as f64));
+        let (kind, model) = match self.event {
+            ScenarioEvent::RateLimitStorm { model, rate, dur } => {
+                m.insert("rate".to_string(), Value::Num(rate));
+                m.insert("dur".to_string(), Value::Num(dur as f64));
+                ("rate_limit_storm", model)
+            }
+            ScenarioEvent::LatencySpike { model, factor, dur } => {
+                m.insert("factor".to_string(), Value::Num(factor));
+                m.insert("dur".to_string(), Value::Num(dur as f64));
+                ("latency_spike", model)
+            }
+            ScenarioEvent::PriceStep { model, mult } => {
+                m.insert("mult".to_string(), Value::Num(mult));
+                ("price_step", model)
+            }
+            ScenarioEvent::SilentDrift { model, acc_delta } => {
+                m.insert("acc_delta".to_string(), Value::Num(acc_delta));
+                ("silent_drift", model)
+            }
+            ScenarioEvent::Outage { model, dur } => {
+                if dur != FOREVER {
+                    m.insert("dur".to_string(), Value::Num(dur as f64));
+                }
+                ("outage", model)
+            }
+        };
+        m.insert("kind".to_string(), Value::Str(kind.to_string()));
+        m.insert("model".to_string(), Value::Num(model as f64));
+        Value::Obj(m)
+    }
+
+    /// Parse an event serialized by [`TimedEvent::to_value`].
+    pub fn from_value(v: &Value) -> Result<TimedEvent> {
+        let at = v.get("at").as_f64().context("event missing `at`")? as u64;
+        let kind = v.get("kind").as_str().context("event missing `kind`")?;
+        let model = v.get("model").as_usize().context("event missing `model`")?;
+        let num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .as_f64()
+                .with_context(|| format!("`{kind}` event missing `{key}`"))
+        };
+        let event = match kind {
+            "rate_limit_storm" => ScenarioEvent::RateLimitStorm {
+                model,
+                rate: num("rate")?,
+                dur: num("dur")? as u64,
+            },
+            "latency_spike" => ScenarioEvent::LatencySpike {
+                model,
+                factor: num("factor")?,
+                dur: num("dur")? as u64,
+            },
+            "price_step" => ScenarioEvent::PriceStep { model, mult: num("mult")? },
+            "silent_drift" => {
+                ScenarioEvent::SilentDrift { model, acc_delta: num("acc_delta")? }
+            }
+            "outage" => ScenarioEvent::Outage {
+                model,
+                dur: v.get("dur").as_f64().map(|d| d as u64).unwrap_or(FOREVER),
+            },
+            other => bail!(
+                "unknown scenario event kind `{other}` (want rate_limit_storm|\
+                 latency_spike|price_step|silent_drift|outage)"
+            ),
+        };
+        Ok(TimedEvent { at, event })
+    }
+}
+
+/// A scripted marketplace timeline: pure-literal [`TimedEvent`]s indexed
+/// by a shared query-count clock. The driver owns the clock
+/// ([`ScenarioTimeline::set_now`] / [`ScenarioTimeline::advance`] once
+/// per query); the [`fault_injected_engine`] closure only reads it — so a
+/// scenario replays bit-identically regardless of wall-clock, thread
+/// scheduling, or retry counts. `Clone` shares the clock (engine wrapper
+/// and driver see the same time).
+#[derive(Debug, Clone)]
+pub struct ScenarioTimeline {
+    events: Arc<Vec<TimedEvent>>,
+    clock: Arc<AtomicU64>,
+}
+
+impl ScenarioTimeline {
+    /// Timeline over a literal event list, clock at 0.
+    pub fn new(events: Vec<TimedEvent>) -> ScenarioTimeline {
+        ScenarioTimeline { events: Arc::new(events), clock: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// The scripted events (time order not required; queries scan all).
+    pub fn events(&self) -> &[TimedEvent] {
+        &self.events
+    }
+
+    /// Current clock value (the query index faults are judged against).
+    pub fn now(&self) -> u64 {
+        self.clock.load(Ordering::Relaxed)
+    }
+
+    /// Pin the clock to query index `t` (hermetic tests; serve drivers).
+    pub fn set_now(&self, t: u64) {
+        self.clock.store(t, Ordering::Relaxed);
+    }
+
+    /// Tick the clock by one query; returns the *previous* value (the
+    /// index of the query about to be served).
+    pub fn advance(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Whether model `m` is in a scripted outage at time `t`.
+    pub fn outage(&self, m: usize, t: u64) -> bool {
+        self.events.iter().any(|e| match e.event {
+            ScenarioEvent::Outage { model, dur } => {
+                model == m && t >= e.at && t - e.at < dur
+            }
+            _ => false,
+        })
+    }
+
+    /// Combined 429 rejection rate for model `m` at time `t` (max over
+    /// active storms; 0.0 = calm).
+    pub fn storm_rate(&self, m: usize, t: u64) -> f64 {
+        self.events
+            .iter()
+            .filter_map(|e| match e.event {
+                ScenarioEvent::RateLimitStorm { model, rate, dur }
+                    if model == m && t >= e.at && t - e.at < dur =>
+                {
+                    Some(rate)
+                }
+                _ => None,
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Latency multiplier for model `m` at time `t` (max over active
+    /// spikes; 1.0 = no spike).
+    pub fn latency_factor(&self, m: usize, t: u64) -> f64 {
+        self.events
+            .iter()
+            .filter_map(|e| match e.event {
+                ScenarioEvent::LatencySpike { model, factor, dur }
+                    if model == m && t >= e.at && t - e.at < dur =>
+                {
+                    Some(factor)
+                }
+                _ => None,
+            })
+            .fold(1.0, f64::max)
+    }
+
+    /// Fraction of model `m`'s answers silently corrupted at time `t`
+    /// (max over active drifts; drift is persistent from `at` on).
+    pub fn drift_rate(&self, m: usize, t: u64) -> f64 {
+        self.events
+            .iter()
+            .filter_map(|e| match e.event {
+                ScenarioEvent::SilentDrift { model, acc_delta }
+                    if model == m && t >= e.at =>
+                {
+                    Some(acc_delta.abs())
+                }
+                _ => None,
+            })
+            .fold(0.0, f64::max)
+            .min(1.0)
+    }
+
+    /// The price steps that fire exactly at time `t`, as
+    /// `(model, multiplier)` pairs — the driver applies each ONCE (e.g.
+    /// via `FrugalService::reprice`) when its query index comes up.
+    pub fn price_steps_at(&self, t: u64) -> Vec<(usize, f64)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.event {
+                ScenarioEvent::PriceStep { model, mult } if e.at == t => {
+                    Some((model, mult))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// JSON form (`{"format": "frugalgpt-scenario/v1", "events": [...]}`).
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("format".to_string(), Value::Str(SCENARIO_FORMAT.to_string()));
+        m.insert(
+            "events".to_string(),
+            Value::Arr(self.events.iter().map(TimedEvent::to_value).collect()),
+        );
+        Value::Obj(m)
+    }
+
+    /// Parse the [`ScenarioTimeline::to_value`] form (fresh clock at 0).
+    pub fn from_value(v: &Value) -> Result<ScenarioTimeline> {
+        match v.get("format").as_str() {
+            Some(SCENARIO_FORMAT) => {}
+            Some(other) => bail!(
+                "unsupported scenario format `{other}` (want {SCENARIO_FORMAT})"
+            ),
+            None => bail!("not a scenario file (missing `format`)"),
+        }
+        let events = v
+            .get("events")
+            .as_arr()
+            .context("scenario missing `events`")?
+            .iter()
+            .map(TimedEvent::from_value)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ScenarioTimeline::new(events))
+    }
+
+    /// Load a scenario file written in the [`ScenarioTimeline::to_value`]
+    /// JSON form.
+    pub fn load(path: &std::path::Path) -> Result<ScenarioTimeline> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {}", path.display()))?;
+        let v = Value::parse(&text)
+            .with_context(|| format!("parsing scenario {}", path.display()))?;
+        ScenarioTimeline::from_value(&v)
+    }
+
+    /// Named built-in scenarios (`serve --scenario storm` without a
+    /// file): `storm` = a full 429 storm on the cheapest model for
+    /// queries 40..120. `None` for unknown names.
+    pub fn builtin(name: &str) -> Option<ScenarioTimeline> {
+        match name {
+            "storm" => Some(ScenarioTimeline::new(vec![TimedEvent {
+                at: 40,
+                event: ScenarioEvent::RateLimitStorm { model: 0, rate: 1.0, dur: 80 },
+            }])),
+            _ => None,
+        }
+    }
+}
+
+/// Deterministic per-call coin in `[0, 1)`: a pure function of
+/// `(time, model, row contents)`, so storms reject the *same* calls on
+/// every run — and a retry of the same row in the same query window hits
+/// the same verdict (retries cannot wish a scripted storm away).
+fn fault_coin(t: u64, m: usize, row: &[i32]) -> f64 {
+    let mut h = t
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(m as u64)
+        .wrapping_add(1);
+    for &tok in row.iter().take(8) {
+        h = splitmix64_mix(h ^ (tok as u64));
+    }
+    (splitmix64_mix(h) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Wrap `inner` so calls to the named marketplace models pass through the
+/// scripted faults of `timeline` first: outages and 429 storms surface as
+/// real `Err`s, latency spikes as real added latency, silent drift as
+/// deterministically corrupted answers. The `"scorer"` artifact and any
+/// name outside `model_names` pass through untouched. Composable over
+/// any engine — `SimWorld::engine_with` for the synthetic marketplace,
+/// or a real table-backed engine in `report`/serve drivers.
+pub fn fault_injected_engine(
+    inner: EngineHandle,
+    model_names: &[String],
+    timeline: ScenarioTimeline,
+) -> EngineHandle {
+    let names = model_names.to_vec();
+    EngineHandle::simulated(move |ds, model, batch| {
+        let Some(m) = names.iter().position(|n| n == model) else {
+            return inner.execute_batch(ds, model, batch.to_vec());
+        };
+        let t = timeline.now();
+        if timeline.outage(m, t) {
+            bail!("injected outage: {model} is down (t={t})");
+        }
+        let rate = timeline.storm_rate(m, t);
+        if rate > 0.0 {
+            // Reject the whole batch if ANY member draws a 429 — real
+            // batched API calls fail together, and per-row partial
+            // failure would silently shrink batches instead of surfacing
+            // the storm.
+            if batch.iter().any(|r| fault_coin(t, m, r) < rate) {
+                bail!("429 rate limited: {model} is storming (t={t})");
+            }
+        }
+        let factor = timeline.latency_factor(m, t);
+        if factor > 1.0 {
+            // Injected real latency: 1ms of extra queueing per spike
+            // factor unit. Kept small so CI smoke runs stay fast.
+            let extra_us = ((factor - 1.0) * 1_000.0).min(50_000.0) as u64;
+            std::thread::sleep(std::time::Duration::from_micros(extra_us));
+        }
+        let mut out = inner.execute_batch(ds, model, batch.to_vec())?;
+        let drift = timeline.drift_rate(m, t);
+        if drift > 0.0 {
+            for (r, logits) in out.iter_mut().enumerate() {
+                // Key the coin off the row, salted per-effect so a storm
+                // and a drift at the same (t, m) draw independently.
+                if fault_coin(t.wrapping_add(0xD1F7), m, &batch[r]) < drift
+                    && logits.len() > 1
+                {
+                    // Rotate the logits one class: the answer silently
+                    // moves to a wrong class, scores stay plausible.
+                    logits.rotate_right(1);
+                }
+            }
+        }
+        Ok(out)
+    })
 }
 
 #[cfg(test)]
@@ -273,5 +676,145 @@ mod tests {
         assert_eq!(a.table.pred(2, 9), b.table.pred(2, 9));
         assert_eq!(a.input_tokens(), b.input_tokens());
         assert_eq!(a.input_tokens()[0], 20, "12 prompt + 8 query tokens");
+    }
+
+    #[test]
+    fn storm_rejects_exactly_in_its_window_and_only_its_model() {
+        let w = SimWorld::new(3, 16, 7);
+        let tl = ScenarioTimeline::new(vec![TimedEvent {
+            at: 5,
+            event: ScenarioEvent::RateLimitStorm { model: 0, rate: 1.0, dur: 10 },
+        }]);
+        let h = w.engine_with(tl.clone()).unwrap();
+        let call = |m: usize| h.execute("sim", &w.table.model_names[m], w.row(2).to_vec());
+
+        assert!(call(0).is_ok(), "before the storm");
+        tl.set_now(5);
+        let err = call(0).unwrap_err();
+        assert!(format!("{err:#}").contains("429"), "{err:#}");
+        assert!(call(1).is_ok(), "other models are untouched by the storm");
+        // scorer passes through untouched
+        let srow = prompt::scorer_input(w.row(2), &w.meta, w.table.pred(1, 2));
+        assert!(h.execute("sim", "scorer", srow).is_ok());
+        tl.set_now(14);
+        assert!(call(0).is_err(), "last storm query");
+        tl.set_now(15);
+        assert!(call(0).is_ok(), "storm is over");
+    }
+
+    #[test]
+    fn outage_and_drift_inject_on_the_real_call_path() {
+        let w = SimWorld::new(3, 12, 21);
+        let tl = ScenarioTimeline::new(vec![
+            TimedEvent { at: 2, event: ScenarioEvent::Outage { model: 1, dur: 3 } },
+            TimedEvent {
+                at: 4,
+                event: ScenarioEvent::SilentDrift { model: 2, acc_delta: -1.0 },
+            },
+        ]);
+        let h = w.engine_with(tl.clone()).unwrap();
+        tl.set_now(2);
+        let err = h
+            .execute("sim", &w.table.model_names[1], w.row(0).to_vec())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("down"), "{err:#}");
+        tl.set_now(5); // outage over (2..5), drift on
+        assert!(h.execute("sim", &w.table.model_names[1], w.row(0).to_vec()).is_ok());
+        for i in 0..4 {
+            let logits = h
+                .execute("sim", &w.table.model_names[2], w.row(i).to_vec())
+                .unwrap();
+            let honest = w.table.pred(2, i);
+            assert_eq!(
+                argmax(&logits) as u32,
+                (honest + 1) % SIM_CLASSES,
+                "full drift rotates every answer one class"
+            );
+        }
+    }
+
+    #[test]
+    fn storm_verdicts_are_deterministic_per_call() {
+        let w = SimWorld::new(2, 8, 3);
+        let mk = || {
+            ScenarioTimeline::new(vec![TimedEvent {
+                at: 0,
+                event: ScenarioEvent::RateLimitStorm { model: 0, rate: 0.5, dur: 100 },
+            }])
+        };
+        let (ta, tb) = (mk(), mk());
+        let ha = w.engine_with(ta.clone()).unwrap();
+        let hb = w.engine_with(tb.clone()).unwrap();
+        for t in 0..20u64 {
+            ta.set_now(t);
+            tb.set_now(t);
+            let a = ha.execute("sim", &w.table.model_names[0], w.row(1).to_vec());
+            let b = hb.execute("sim", &w.table.model_names[0], w.row(1).to_vec());
+            assert_eq!(a.is_ok(), b.is_ok(), "verdict must replay at t={t}");
+        }
+    }
+
+    #[test]
+    fn timeline_json_roundtrip_and_corrupt_files() {
+        let tl = ScenarioTimeline::new(vec![
+            TimedEvent {
+                at: 10,
+                event: ScenarioEvent::RateLimitStorm { model: 0, rate: 0.9, dur: 40 },
+            },
+            TimedEvent {
+                at: 15,
+                event: ScenarioEvent::LatencySpike { model: 1, factor: 4.0, dur: 5 },
+            },
+            TimedEvent { at: 20, event: ScenarioEvent::PriceStep { model: 2, mult: 0.25 } },
+            TimedEvent {
+                at: 25,
+                event: ScenarioEvent::SilentDrift { model: 0, acc_delta: -0.3 },
+            },
+            TimedEvent { at: 30, event: ScenarioEvent::Outage { model: 3, dur: FOREVER } },
+        ]);
+        let json = tl.to_value().to_json();
+        let back = ScenarioTimeline::from_value(&Value::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.events(), tl.events());
+
+        for (bad, msg) in [
+            (r#"{"events": []}"#, "missing `format`"),
+            (r#"{"format": "frugalgpt-scenario/v0", "events": []}"#, "unsupported"),
+            (r#"{"format": "frugalgpt-scenario/v1"}"#, "missing `events`"),
+            (
+                r#"{"format": "frugalgpt-scenario/v1",
+                    "events": [{"at": 1, "kind": "teleport", "model": 0}]}"#,
+                "unknown scenario event kind",
+            ),
+        ] {
+            let err = ScenarioTimeline::from_value(&Value::parse(bad).unwrap()).unwrap_err();
+            assert!(format!("{err:#}").contains(msg), "{bad} → {err:#}");
+        }
+    }
+
+    #[test]
+    fn price_steps_fire_exactly_once_at_their_index() {
+        let tl = ScenarioTimeline::new(vec![
+            TimedEvent { at: 8, event: ScenarioEvent::PriceStep { model: 1, mult: 3.0 } },
+            TimedEvent { at: 8, event: ScenarioEvent::PriceStep { model: 0, mult: 0.5 } },
+        ]);
+        assert!(tl.price_steps_at(7).is_empty());
+        assert_eq!(tl.price_steps_at(8), vec![(1, 3.0), (0, 0.5)]);
+        assert!(tl.price_steps_at(9).is_empty());
+    }
+
+    #[test]
+    fn builtin_storm_targets_the_cheap_model() {
+        let tl = ScenarioTimeline::builtin("storm").expect("storm is built in");
+        assert!(tl.storm_rate(0, 40) >= 1.0);
+        assert!(tl.storm_rate(0, 119) >= 1.0);
+        assert_eq!(tl.storm_rate(0, 120), 0.0);
+        assert_eq!(tl.storm_rate(1, 60), 0.0, "only the cheap model storms");
+        assert!(ScenarioTimeline::builtin("nope").is_none());
+        // the clock is shared across clones (engine wrapper + driver)
+        let c = tl.clone();
+        c.set_now(99);
+        assert_eq!(tl.now(), 99);
+        assert_eq!(tl.advance(), 99);
+        assert_eq!(c.now(), 100);
     }
 }

@@ -180,6 +180,27 @@ impl CostModel {
     pub fn call_cost(&self, m: usize, input_tokens: u32, answer: u32) -> f64 {
         self.pricing[m].cost(input_tokens, self.answer_len(answer))
     }
+
+    /// Apply a marketplace price step: scale ALL of model `m`'s pricing
+    /// components (input, output, per-request) by `mult`. Rejects unknown
+    /// model indices and non-finite or non-positive multipliers — a price
+    /// can step up or down, but never to zero, negative, NaN, or ∞.
+    pub fn scale_pricing(&mut self, m: usize, mult: f64) -> Result<()> {
+        if m >= self.n_models() {
+            anyhow::bail!(
+                "price step for model index {m}, marketplace has {}",
+                self.n_models()
+            );
+        }
+        if !mult.is_finite() || mult <= 0.0 {
+            anyhow::bail!("price multiplier must be finite and positive, got {mult}");
+        }
+        let p = &mut self.pricing[m];
+        p.usd_per_10m_input *= mult;
+        p.usd_per_10m_output *= mult;
+        p.usd_per_request *= mult;
+        Ok(())
+    }
 }
 
 /// Scale a per-query average cost to the "USD per 10k queries" unit used in
@@ -236,5 +257,27 @@ mod tests {
     fn latency_model_linear() {
         let l = LatencyModel { base_ms: 30.0, per_1k_tokens_ms: 40.0 };
         assert!((l.latency_ms(500) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_pricing_steps_one_model_and_rejects_garbage() {
+        let mut cm = CostModel::from_table1("headlines", vec![1, 1, 2, 1]);
+        let g4 = cm.model_index("gpt4").unwrap();
+        let before = cm.call_cost(g4, 125, 0);
+        let other_before = cm.call_cost(0, 125, 0);
+        cm.scale_pricing(g4, 3.0).unwrap();
+        assert!((cm.call_cost(g4, 125, 0) - 3.0 * before).abs() < 1e-12);
+        assert_eq!(cm.call_cost(0, 125, 0), other_before, "steps are per-model");
+        cm.scale_pricing(g4, 1.0 / 3.0).unwrap();
+        assert!((cm.call_cost(g4, 125, 0) - before).abs() < 1e-12);
+        // the per-request component scales too (J1's fixed fee)
+        let j1 = cm.model_index("j1_jumbo").unwrap();
+        cm.scale_pricing(j1, 2.0).unwrap();
+        assert!((cm.pricing[j1].usd_per_request - 0.01).abs() < 1e-12);
+
+        assert!(cm.scale_pricing(99, 2.0).is_err());
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(cm.scale_pricing(0, bad).is_err(), "must reject {bad}");
+        }
     }
 }

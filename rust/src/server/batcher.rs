@@ -141,10 +141,16 @@ fn worker(
                 }
             }
             Err(e) => {
+                // A failed batch poisons nothing: fan the error out to the
+                // submitters it affected and keep serving. Under injected
+                // faults (429 storms, outages) this loop sees errors on
+                // every batch for a while — the worker must outlive them
+                // so the breaker's half-open probes have a path to run on.
                 let msg = format!("{e:#}");
                 for reply in replies {
                     let _ = reply.send(Err(anyhow!("{msg}")));
                 }
+                continue;
             }
         }
     }
@@ -303,5 +309,34 @@ mod tests {
             let err = res.expect_err("engine failure must propagate");
             assert!(format!("{err}").contains("engine exploded"));
         }
+    }
+
+    /// After a batch fails, the worker keeps serving: the next batch on
+    /// the same batcher succeeds. This is the substrate the circuit
+    /// breaker's recovery probes stand on — a transient fault must not
+    /// retire the worker thread.
+    #[test]
+    fn batcher_serves_after_engine_failure() {
+        let fail_once = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let fail_in = fail_once.clone();
+        let engine = EngineHandle::simulated(move |_, _, rows| {
+            if fail_in.swap(false, std::sync::atomic::Ordering::Relaxed) {
+                anyhow::bail!("429 rate limited: transient");
+            }
+            Ok(rows.iter().map(|r| vec![r[0] as f32]).collect())
+        });
+        let batcher = Batcher::spawn(
+            engine,
+            "toy".into(),
+            "m".into(),
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(100) },
+        );
+        let h = batcher.handle();
+        let err = h.submit(vec![1]).expect_err("first batch fails");
+        assert!(format!("{err}").contains("429"));
+        let out = h
+            .submit(vec![2])
+            .expect("worker must survive the failed batch and serve again");
+        assert_eq!(out[0] as i32, 2);
     }
 }

@@ -1,0 +1,553 @@
+//! Per-model health: a lock-free circuit breaker for every marketplace
+//! model, plus bounded retry with deterministically-jittered exponential
+//! backoff — the availability layer the live cascade consults so one
+//! rate-limited API degrades routing instead of erroring answers.
+//!
+//! §Breaker. Each model gets the classic three-state machine, with all
+//! state in relaxed atomics (the same accounting style as
+//! `server::shadow`'s stats — no locks anywhere near the answer path):
+//!
+//! * **Closed** — calls flow. Failures feed a consecutive-failure count
+//!   and a decay-windowed (EWMA) failure rate; crossing either trip
+//!   threshold opens the breaker.
+//! * **Open** — calls are *skipped* (the cascade routes around the
+//!   model). Recovery is **call-count-based, never wall-clock**: each
+//!   skipped consult ticks a cooldown counter down, and the consult that
+//!   exhausts it moves the breaker to HalfOpen — so hermetic tests
+//!   indexed by query count see deterministic trip/recover points.
+//! * **HalfOpen** — exactly one probe call is admitted (an atomic claim
+//!   flag serializes concurrent consults). A probe success closes the
+//!   breaker; a probe failure re-opens it with a fresh cooldown.
+//!
+//! §Retry. [`ModelHealth::retry_backoff_us`] derives each retry's backoff
+//! from `util::rng::splitmix64_mix` over an atomic counter stream — the
+//! same splitmix idiom as the shadow sampler — so the jitter sequence is
+//! a pure function of the configured seed (no `Instant::now` anywhere).
+//!
+//! §Locality. Breaker decisions are *local* to one model: tripping model
+//! `m` never touches model `n`'s state, and the registry never inspects
+//! the plan — the cascade asks one question (`admit(m)`) per stage and
+//! reports one outcome (`record(m, ok)`) per call. Pinned by
+//! `breaker_decisions_are_local` below.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use crate::coordinator::cascade::{Gate, HealthView};
+use crate::util::json::Value;
+use crate::util::rng::{splitmix64_mix, SPLITMIX64_GOLDEN};
+
+/// Breaker state values (stored in an `AtomicU64`).
+const STATE_CLOSED: u64 = 0;
+const STATE_OPEN: u64 = 1;
+const STATE_HALF_OPEN: u64 = 2;
+
+/// Fixed-point scale of the EWMA failure rate (1.0 == `RATE_ONE`).
+const RATE_ONE: u64 = 1_000_000;
+
+/// Observable state of one model's circuit breaker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Calls flow normally.
+    Closed,
+    /// Calls are skipped; a call-count cooldown is ticking.
+    Open,
+    /// One probe call is admitted to test recovery.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Stable lowercase name (serve summary, `report health`).
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+
+    fn from_u64(v: u64) -> BreakerState {
+        match v {
+            STATE_OPEN => BreakerState::Open,
+            STATE_HALF_OPEN => BreakerState::HalfOpen,
+            _ => BreakerState::Closed,
+        }
+    }
+}
+
+/// Health-layer tuning. Everything is counted in *calls/consults*, never
+/// wall-clock time, so scripted scenarios stay deterministic.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// Consecutive failures that trip the breaker open.
+    pub trip_consecutive: u64,
+    /// Decay-windowed failure rate (0..1] that trips the breaker once
+    /// `min_calls` outcomes have been observed.
+    pub trip_rate: f64,
+    /// Minimum observed calls before the rate threshold may trip.
+    pub min_calls: u64,
+    /// Decay window of the failure-rate EWMA, in calls.
+    pub ewma_window: u64,
+    /// Skipped consults an open breaker waits before admitting a
+    /// half-open probe.
+    pub cooldown: u64,
+    /// Bounded retries per engine call (0 = fail fast).
+    pub max_retries: u32,
+    /// Base backoff before the first retry (µs); doubles per attempt,
+    /// jittered to `[0.5, 1.5)` of the exponential value. 0 = no sleep
+    /// (hermetic tests).
+    pub backoff_base_us: u64,
+    /// Seed of the deterministic jitter stream.
+    pub seed: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            trip_consecutive: 3,
+            trip_rate: 0.6,
+            min_calls: 8,
+            ewma_window: 16,
+            cooldown: 16,
+            max_retries: 2,
+            backoff_base_us: 200,
+            seed: 0x48EA_17,
+        }
+    }
+}
+
+/// One model's breaker: all state in relaxed atomics.
+#[derive(Debug)]
+pub struct Breaker {
+    state: AtomicU64,
+    /// Cooldown consults left while open.
+    cooldown_left: AtomicU64,
+    /// Claim flag serializing the half-open probe.
+    probe_claimed: AtomicBool,
+    /// Outcomes observed (successes + failures).
+    calls: AtomicU64,
+    /// Failed calls (total, monotone).
+    failures: AtomicU64,
+    /// Current consecutive-failure run.
+    consecutive: AtomicU64,
+    /// EWMA failure rate in `RATE_ONE` fixed point.
+    rate_fp: AtomicU64,
+    /// Closed→Open transitions.
+    trips: AtomicU64,
+    /// HalfOpen→Closed transitions (successful probes).
+    recoveries: AtomicU64,
+    /// Consults answered with `Gate::Skip`.
+    skips: AtomicU64,
+    /// Bounded retries spent against this model.
+    retries: AtomicU64,
+    // per-breaker copies of the registry config (no pointer chasing)
+    trip_consecutive: u64,
+    trip_rate_fp: u64,
+    min_calls: u64,
+    ewma_window: u64,
+    cooldown: u64,
+}
+
+impl Breaker {
+    fn new(cfg: &HealthConfig) -> Breaker {
+        Breaker {
+            state: AtomicU64::new(STATE_CLOSED),
+            cooldown_left: AtomicU64::new(0),
+            probe_claimed: AtomicBool::new(false),
+            calls: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            consecutive: AtomicU64::new(0),
+            rate_fp: AtomicU64::new(0),
+            trips: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+            skips: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            trip_consecutive: cfg.trip_consecutive.max(1),
+            trip_rate_fp: (cfg.trip_rate.clamp(0.0, 1.0) * RATE_ONE as f64) as u64,
+            min_calls: cfg.min_calls.max(1),
+            ewma_window: cfg.ewma_window.max(1),
+            cooldown: cfg.cooldown.max(1),
+        }
+    }
+
+    /// Current state.
+    pub fn state(&self) -> BreakerState {
+        BreakerState::from_u64(self.state.load(Ordering::Relaxed))
+    }
+
+    /// May the model be called right now? Open breakers tick their
+    /// cooldown; the consult that exhausts it claims the half-open probe.
+    pub fn admit(&self) -> Gate {
+        match self.state.load(Ordering::Relaxed) {
+            STATE_CLOSED => Gate::Allow,
+            STATE_OPEN => {
+                let exhausted = self
+                    .cooldown_left
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+                    .is_err();
+                if exhausted
+                    && self
+                        .state
+                        .compare_exchange(
+                            STATE_OPEN,
+                            STATE_HALF_OPEN,
+                            Ordering::Relaxed,
+                            Ordering::Relaxed,
+                        )
+                        .is_ok()
+                    && !self.probe_claimed.swap(true, Ordering::Relaxed)
+                {
+                    return Gate::Probe;
+                }
+                self.skips.fetch_add(1, Ordering::Relaxed);
+                Gate::Skip
+            }
+            _ => {
+                // HalfOpen: exactly one in-flight probe at a time.
+                if self.probe_claimed.swap(true, Ordering::Relaxed) {
+                    self.skips.fetch_add(1, Ordering::Relaxed);
+                    Gate::Skip
+                } else {
+                    Gate::Probe
+                }
+            }
+        }
+    }
+
+    /// Report a call outcome (success closes a half-open breaker; failure
+    /// trips closed breakers over threshold and re-opens half-open ones).
+    pub fn record(&self, ok: bool) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let rate = self.update_rate(!ok);
+        if ok {
+            self.consecutive.store(0, Ordering::Relaxed);
+            if self
+                .state
+                .compare_exchange(
+                    STATE_HALF_OPEN,
+                    STATE_CLOSED,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+            {
+                self.recoveries.fetch_add(1, Ordering::Relaxed);
+                // A recovered model starts with a clean slate: the storm's
+                // failure rate must not instantly re-trip it.
+                self.rate_fp.store(0, Ordering::Relaxed);
+                self.probe_claimed.store(false, Ordering::Relaxed);
+            }
+            return;
+        }
+        self.failures.fetch_add(1, Ordering::Relaxed);
+        let consec = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        match self.state.load(Ordering::Relaxed) {
+            STATE_HALF_OPEN => self.trip(), // failed probe → re-open
+            STATE_CLOSED => {
+                let seen = self.calls.load(Ordering::Relaxed);
+                if consec >= self.trip_consecutive
+                    || (seen >= self.min_calls && rate > self.trip_rate_fp)
+                {
+                    self.trip();
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Open the breaker (arming the cooldown and probe gate *before* the
+    /// state flip, so a racing `admit` never sees open with stale arms).
+    fn trip(&self) {
+        self.cooldown_left.store(self.cooldown, Ordering::Relaxed);
+        self.probe_claimed.store(false, Ordering::Relaxed);
+        if self.state.swap(STATE_OPEN, Ordering::Relaxed) != STATE_OPEN {
+            self.trips.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// CAS-loop EWMA update; returns the new fixed-point rate.
+    fn update_rate(&self, failed: bool) -> u64 {
+        let sample = if failed { RATE_ONE } else { 0 } as i64;
+        let w = self.ewma_window as i64;
+        let mut cur = self.rate_fp.load(Ordering::Relaxed);
+        loop {
+            let next = (cur as i64 + (sample - cur as i64) / w).clamp(0, RATE_ONE as i64) as u64;
+            match self.rate_fp.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return next,
+                Err(v) => cur = v,
+            }
+        }
+    }
+
+    /// Point-in-time copy of the breaker's counters.
+    pub fn snapshot(&self) -> BreakerSnapshot {
+        BreakerSnapshot {
+            state: self.state(),
+            calls: self.calls.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+            failure_rate: self.rate_fp.load(Ordering::Relaxed) as f64 / RATE_ONE as f64,
+            trips: self.trips.load(Ordering::Relaxed),
+            recoveries: self.recoveries.load(Ordering::Relaxed),
+            skips: self.skips.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time breaker counters for one model (serve summary, swap log,
+/// `report health`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BreakerSnapshot {
+    /// Breaker state at snapshot time.
+    pub state: BreakerState,
+    /// Outcomes observed.
+    pub calls: u64,
+    /// Failed calls.
+    pub failures: u64,
+    /// Decay-windowed failure rate (0..1).
+    pub failure_rate: f64,
+    /// Closed→Open transitions.
+    pub trips: u64,
+    /// Successful half-open probes.
+    pub recoveries: u64,
+    /// Consults skipped while open/half-open.
+    pub skips: u64,
+    /// Bounded retries spent.
+    pub retries: u64,
+}
+
+impl BreakerSnapshot {
+    /// JSON form for the swap log's `health` section.
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("state".to_string(), Value::Str(self.state.name().to_string()));
+        m.insert("calls".to_string(), Value::Num(self.calls as f64));
+        m.insert("failures".to_string(), Value::Num(self.failures as f64));
+        m.insert("failure_rate".to_string(), Value::Num(self.failure_rate));
+        m.insert("trips".to_string(), Value::Num(self.trips as f64));
+        m.insert("recoveries".to_string(), Value::Num(self.recoveries as f64));
+        m.insert("skips".to_string(), Value::Num(self.skips as f64));
+        m.insert("retries".to_string(), Value::Num(self.retries as f64));
+        Value::Obj(m)
+    }
+}
+
+/// The per-model health registry: one [`Breaker`] per marketplace model
+/// plus the deterministic retry/backoff stream. Shared (`Arc`) between
+/// the service, every plan bundle's cascades, and the serve report.
+#[derive(Debug)]
+pub struct ModelHealth {
+    breakers: Vec<Breaker>,
+    cfg: HealthConfig,
+    /// splitmix64 counter stream feeding the backoff jitter.
+    jitter_state: AtomicU64,
+}
+
+impl ModelHealth {
+    /// A registry of `n_models` closed breakers.
+    pub fn new(n_models: usize, cfg: HealthConfig) -> ModelHealth {
+        ModelHealth {
+            breakers: (0..n_models).map(|_| Breaker::new(&cfg)).collect(),
+            jitter_state: AtomicU64::new(splitmix64_mix(cfg.seed)),
+            cfg,
+        }
+    }
+
+    /// The tuning this registry was built with.
+    pub fn config(&self) -> &HealthConfig {
+        &self.cfg
+    }
+
+    /// Models tracked.
+    pub fn n_models(&self) -> usize {
+        self.breakers.len()
+    }
+
+    /// Model `m`'s breaker (`None` out of range).
+    pub fn breaker(&self, m: usize) -> Option<&Breaker> {
+        self.breakers.get(m)
+    }
+
+    /// Model `m`'s current breaker state (out of range → Closed).
+    pub fn state(&self, m: usize) -> BreakerState {
+        self.breakers.get(m).map(|b| b.state()).unwrap_or(BreakerState::Closed)
+    }
+
+    /// Per-model snapshots, marketplace order.
+    pub fn snapshot(&self) -> Vec<BreakerSnapshot> {
+        self.breakers.iter().map(Breaker::snapshot).collect()
+    }
+}
+
+impl HealthView for ModelHealth {
+    /// Gate one call against model `m`. Out-of-range indices are allowed
+    /// through — an unknown model is the engine's error to raise, not an
+    /// availability decision.
+    fn admit(&self, m: usize) -> Gate {
+        self.breakers.get(m).map(Breaker::admit).unwrap_or(Gate::Allow)
+    }
+
+    fn record(&self, m: usize, ok: bool) {
+        if let Some(b) = self.breakers.get(m) {
+            b.record(ok);
+        }
+    }
+
+    fn max_retries(&self) -> u32 {
+        self.cfg.max_retries
+    }
+
+    /// Count one retry against model `m` and return its backoff:
+    /// `base · 2^(attempt-1)`, jittered to `[0.5, 1.5)` of that value by
+    /// the splitmix64 stream — deterministic in `cfg.seed`, no wall clock.
+    fn retry_backoff_us(&self, m: usize, attempt: u32) -> u64 {
+        if let Some(b) = self.breakers.get(m) {
+            b.retries.fetch_add(1, Ordering::Relaxed);
+        }
+        if self.cfg.backoff_base_us == 0 {
+            return 0;
+        }
+        let s = self
+            .jitter_state
+            .fetch_add(SPLITMIX64_GOLDEN, Ordering::Relaxed)
+            .wrapping_add(SPLITMIX64_GOLDEN);
+        let frac = (splitmix64_mix(s) >> 11) as f64 / (1u64 << 53) as f64;
+        let exp = self.cfg.backoff_base_us as f64
+            * 2f64.powi(attempt.saturating_sub(1).min(20) as i32);
+        (exp * (0.5 + frac)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            trip_consecutive: 3,
+            cooldown: 4,
+            max_retries: 1,
+            backoff_base_us: 100,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn breaker_trips_on_consecutive_failures_and_recovers_via_probe() {
+        let h = ModelHealth::new(2, cfg());
+        // three consecutive failures trip the breaker
+        for _ in 0..3 {
+            assert_eq!(h.admit(0), Gate::Allow);
+            h.record(0, false);
+        }
+        assert_eq!(h.state(0), BreakerState::Open);
+        assert_eq!(h.breaker(0).unwrap().snapshot().trips, 1);
+        // cooldown: 4 skipped consults...
+        for _ in 0..4 {
+            assert_eq!(h.admit(0), Gate::Skip);
+        }
+        // ...then the next consult is the half-open probe
+        assert_eq!(h.admit(0), Gate::Probe);
+        assert_eq!(h.state(0), BreakerState::HalfOpen);
+        // concurrent consults are skipped while the probe is in flight
+        assert_eq!(h.admit(0), Gate::Skip);
+        // probe success closes the breaker
+        h.record(0, true);
+        assert_eq!(h.state(0), BreakerState::Closed);
+        assert_eq!(h.admit(0), Gate::Allow);
+        assert_eq!(h.breaker(0).unwrap().snapshot().recoveries, 1);
+    }
+
+    #[test]
+    fn failed_probe_reopens_with_fresh_cooldown() {
+        let h = ModelHealth::new(1, cfg());
+        for _ in 0..3 {
+            h.record(0, false);
+        }
+        for _ in 0..4 {
+            assert_eq!(h.admit(0), Gate::Skip);
+        }
+        assert_eq!(h.admit(0), Gate::Probe);
+        h.record(0, false); // probe fails
+        assert_eq!(h.state(0), BreakerState::Open);
+        assert_eq!(h.breaker(0).unwrap().snapshot().trips, 2);
+        // a full fresh cooldown before the next probe
+        for _ in 0..4 {
+            assert_eq!(h.admit(0), Gate::Skip);
+        }
+        assert_eq!(h.admit(0), Gate::Probe);
+        h.record(0, true);
+        assert_eq!(h.state(0), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_decisions_are_local() {
+        // Tripping model 0 must not move model 1's breaker at all.
+        let h = ModelHealth::new(2, cfg());
+        for _ in 0..10 {
+            h.record(0, false);
+            h.record(1, true);
+        }
+        assert_eq!(h.state(0), BreakerState::Open);
+        assert_eq!(h.state(1), BreakerState::Closed);
+        assert_eq!(h.admit(1), Gate::Allow);
+        let s1 = h.breaker(1).unwrap().snapshot();
+        assert_eq!((s1.trips, s1.skips, s1.failures), (0, 0, 0));
+    }
+
+    #[test]
+    fn rate_threshold_trips_without_a_consecutive_run() {
+        // alternate fail/fail/ok: never 3 consecutive, but the EWMA climbs
+        // past trip_rate after min_calls.
+        let h = ModelHealth::new(1, HealthConfig { trip_rate: 0.4, ..cfg() });
+        let mut tripped = false;
+        for _ in 0..40 {
+            if h.state(0) == BreakerState::Open {
+                tripped = true;
+                break;
+            }
+            h.record(0, false);
+            h.record(0, false);
+            h.record(0, true);
+        }
+        assert!(tripped, "EWMA failure rate never tripped the breaker");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_in_seed_and_bounded() {
+        let a = ModelHealth::new(1, cfg());
+        let b = ModelHealth::new(1, cfg());
+        for attempt in 1..=4u32 {
+            let x = a.retry_backoff_us(0, attempt);
+            assert_eq!(x, b.retry_backoff_us(0, attempt), "attempt {attempt}");
+            let exp = 100u64 << (attempt - 1);
+            assert!(x >= exp / 2 && x < exp + exp / 2, "attempt {attempt}: {x}");
+        }
+        assert_eq!(a.breaker(0).unwrap().snapshot().retries, 4);
+        // zero base = hermetic no-sleep mode
+        let z = ModelHealth::new(1, HealthConfig { backoff_base_us: 0, ..cfg() });
+        assert_eq!(z.retry_backoff_us(0, 1), 0);
+        // a different seed produces a different jitter stream
+        let c = ModelHealth::new(1, HealthConfig { seed: 8, ..cfg() });
+        let d = ModelHealth::new(1, cfg());
+        assert_ne!(
+            (1..=8).map(|i| c.retry_backoff_us(0, i)).collect::<Vec<_>>(),
+            (1..=8).map(|i| d.retry_backoff_us(0, i)).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn snapshot_json_has_the_report_keys() {
+        let h = ModelHealth::new(1, cfg());
+        h.record(0, false);
+        let v = h.snapshot()[0].to_value();
+        assert_eq!(v.get("state").as_str(), Some("closed"));
+        assert_eq!(v.get("failures").as_f64(), Some(1.0));
+        assert!(v.get("failure_rate").as_f64().unwrap() > 0.0);
+    }
+}

@@ -102,6 +102,10 @@ pub struct ModelWindow {
     pub labeled: AtomicU64,
     /// ... of which were correct.
     pub labeled_correct: AtomicU64,
+    /// Cascade stages this model would have served but was skipped for —
+    /// its circuit breaker was open (see `server::health`). Skips cost
+    /// nothing and are NOT invocations; they explain degraded answers.
+    pub skips: AtomicU64,
 }
 
 impl ModelWindow {
@@ -110,6 +114,11 @@ impl ModelWindow {
         self.invocations.fetch_add(1, Ordering::Relaxed);
         let nano = (cost_usd * 1e9).round().max(0.0) as u64;
         self.cost_nano_usd.fetch_add(nano, Ordering::Relaxed);
+    }
+
+    /// Count a cascade stage skipped because this model was circuit-open.
+    pub fn record_skip(&self) {
+        self.skips.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Count an accepted answer. `score` is `None` when the stage was the
@@ -152,6 +161,7 @@ impl ModelWindow {
             } else {
                 self.labeled_correct.load(Ordering::Relaxed) as f64 / labeled as f64
             },
+            skips: self.skips.load(Ordering::Relaxed),
         }
     }
 }
@@ -172,6 +182,8 @@ pub struct ModelWindowSnapshot {
     pub labeled: u64,
     /// Fraction of labeled answers that were correct.
     pub observed_accuracy: f64,
+    /// Stages skipped because this model's circuit breaker was open.
+    pub skips: u64,
 }
 
 /// One fully-labelled observation: every marketplace model's response on
@@ -511,6 +523,7 @@ mod tests {
         m.model(0).unwrap().record_accepted(Some(0.75));
         m.model(0).unwrap().record_accepted(None); // last-stage sentinel
         m.model(0).unwrap().record_outcome(true);
+        m.model(1).unwrap().record_skip();
         let s = m.snapshot();
         assert_eq!(s.queries, 3);
         assert_eq!(s.stopped_at[1], 2);
@@ -522,7 +535,9 @@ mod tests {
         // the sentinel acceptance must not drag the mean toward 1.0
         assert!((s.per_model[0].mean_accepted_score - 0.75).abs() < 1e-6);
         assert_eq!(s.per_model[0].labeled, 1);
+        assert_eq!(s.per_model[0].skips, 0);
         assert_eq!(s.per_model[1].invocations, 0);
+        assert_eq!(s.per_model[1].skips, 1, "breaker skips are model-attributed");
     }
 
     #[test]

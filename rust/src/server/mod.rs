@@ -2,11 +2,14 @@
 //! composed FrugalGPT service (a `strategies::pipeline` stack — by
 //! default cache → shadow tap → prompt adaptation → budget degrade →
 //! cascade — with composition as data), shadow scoring of sampled live
-//! traffic, and the online re-optimization loop that re-learns and
+//! traffic, per-model health (circuit breakers + bounded retry/backoff)
+//! so a misbehaving marketplace API degrades the cascade instead of
+//! erroring it, and the online re-optimization loop that re-learns and
 //! hot-swaps the served cascade as traffic drifts — with shadow + decay
 //! windows the loop is self-contained: no offline labels enter it.
 
 pub mod batcher;
+pub mod health;
 pub mod metrics;
 pub mod reoptimizer;
 pub mod service;

@@ -157,7 +157,10 @@ impl Reoptimizer {
         if have < self.cfg.min_window {
             return Ok(ReoptOutcome::WindowTooSmall { have, need: self.cfg.min_window });
         }
-        let costs = self.svc.costs().clone();
+        // Fresh marketplace prices every step: `svc.costs()` is an owned
+        // snapshot, so a `PriceStep` applied via `FrugalService::reprice`
+        // feeds straight into the sweep and the `swap_worthy` cost branch.
+        let costs = self.svc.costs();
         let (table, tokens) = window
             .snapshot_table(&costs.dataset, &costs.model_names)
             .context("window emptied between len() and snapshot")?;

@@ -40,11 +40,12 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::budget::BudgetTracker;
-use crate::coordinator::cascade::{Cascade, CascadePlan};
+use crate::coordinator::cascade::{Cascade, CascadePlan, HealthView};
 use crate::coordinator::scorer::Scorer;
 use crate::data::DatasetMeta;
 use crate::marketplace::CostModel;
 use crate::runtime::EngineHandle;
+use crate::server::health::{HealthConfig, ModelHealth};
 use crate::server::metrics::{Observation, ServiceMetrics};
 use crate::server::shadow::{Shadow, ShadowConfig, ShadowSnapshot};
 use crate::strategies::cache::{CacheStats, CompletionCache};
@@ -87,6 +88,12 @@ pub struct ServiceConfig {
     /// shadow config) are skipped, so the default full stack adapts to
     /// the flags above.
     pub pipeline: PipelineSpec,
+    /// Per-model health layer (circuit breakers + bounded retry, see
+    /// [`crate::server::health`]). `None` = strict mode: an engine error
+    /// bubbles out of `answer()` (the pre-health behavior). With a config
+    /// the cascade skips circuit-open stages and degrades instead of
+    /// erroring (skip-never-error).
+    pub health: Option<HealthConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -101,6 +108,7 @@ impl Default for ServiceConfig {
             window_half_life: None,
             shadow: None,
             pipeline: PipelineSpec::full(),
+            health: None,
         }
     }
 }
@@ -127,6 +135,10 @@ pub struct ServiceAnswer {
     pub latency_us: u64,
     /// Simulated commercial-API round-trip latency (ms).
     pub simulated_api_latency_ms: f64,
+    /// Plan stage indices the cascade skipped because their model was
+    /// circuit-open or kept failing (empty when healthy or when no health
+    /// layer is configured). Non-empty marks a degraded answer.
+    pub skipped_stages: Vec<usize>,
 }
 
 /// One immutable served-plan generation: the learned plan plus the live
@@ -147,10 +159,15 @@ impl PlanBundle {
         engine: &EngineHandle,
         costs: &CostModel,
         meta: &DatasetMeta,
+        health: Option<Arc<ModelHealth>>,
     ) -> Result<PlanBundle> {
         if plan.is_empty() {
             anyhow::bail!("cannot build a plan bundle from an empty cascade plan");
         }
+        // Both compiled cascades share the SAME health registry (an Arc):
+        // breaker state survives plan swaps — a new plan does not amnesty
+        // a tripped model.
+        let view = health.map(|h| h as Arc<dyn HealthView>);
         let degrade_plan = CascadePlan::single(plan.stages[0].model);
         let degraded = Cascade::new(
             degrade_plan,
@@ -158,14 +175,16 @@ impl PlanBundle {
             Scorer::new(engine.clone(), meta.clone()),
             costs.clone(),
             meta.clone(),
-        )?;
+        )?
+        .with_health(view.clone());
         let cascade = Cascade::new(
             plan.clone(),
             engine.clone(),
             Scorer::new(engine.clone(), meta.clone()),
             costs.clone(),
             meta.clone(),
-        )?;
+        )?
+        .with_health(view);
         Ok(PlanBundle { plan, version, cascade, degraded })
     }
 
@@ -305,7 +324,11 @@ impl PlanHandle {
 pub struct FrugalService {
     plans: PlanHandle,
     engine: EngineHandle,
-    costs: CostModel,
+    /// Live marketplace pricing. Behind an `RwLock` because the market
+    /// can *reprice* mid-serve ([`FrugalService::reprice`]); the answer
+    /// path never touches it (each plan bundle bills through its own
+    /// frozen copy — one-snapshot-per-answer extends to prices).
+    costs: RwLock<CostModel>,
     /// The completion cache behind the `cache` stage (`None` = disabled).
     cache: Option<Arc<Mutex<CompletionCache>>>,
     /// The composed strategy stack every answer walks.
@@ -320,6 +343,9 @@ pub struct FrugalService {
     /// (`cfg.shadow`): samples live queries into the observation window,
     /// off the answer path.
     shadow: Option<Arc<Shadow>>,
+    /// Per-model circuit breakers + retry policy (`cfg.health`); shared
+    /// by every plan bundle this service publishes.
+    health: Option<Arc<ModelHealth>>,
 }
 
 impl FrugalService {
@@ -342,7 +368,11 @@ impl FrugalService {
                 cfg.pipeline.describe()
             );
         }
-        let initial = PlanBundle::build(plan, 0, &engine, &costs, &meta)?;
+        let health = cfg
+            .health
+            .as_ref()
+            .map(|hc| Arc::new(ModelHealth::new(costs.n_models(), hc.clone())));
+        let initial = PlanBundle::build(plan, 0, &engine, &costs, &meta, health.clone())?;
         let metrics = Arc::new(ServiceMetrics::with_window(
             costs.n_models(),
             cfg.window_capacity,
@@ -383,9 +413,10 @@ impl FrugalService {
             budget,
             metrics,
             cfg,
-            costs,
+            costs: RwLock::new(costs),
             meta,
             shadow,
+            health,
         })
     }
 
@@ -448,7 +479,15 @@ impl FrugalService {
         window_stats: Option<(f64, f64)>,
     ) -> Result<u64> {
         let version = self.plans.reserve_version();
-        let bundle = PlanBundle::build(plan.clone(), version, &self.engine, &self.costs, &self.meta)?;
+        let costs = self.costs.read().unwrap().clone();
+        let bundle = PlanBundle::build(
+            plan.clone(),
+            version,
+            &self.engine,
+            &costs,
+            &self.meta,
+            self.health.clone(),
+        )?;
         let event = SwapEvent {
             version,
             at_query: self.metrics.queries.load(Ordering::Relaxed),
@@ -546,6 +585,7 @@ impl FrugalService {
             plan_version: bundle.version(),
             latency_us: lat,
             simulated_api_latency_ms: a.simulated_api_latency_ms,
+            skipped_stages: a.skipped_stages,
         })
     }
 
@@ -575,9 +615,29 @@ impl FrugalService {
         self.engine.clone()
     }
 
-    /// The marketplace cost model this service meters with.
-    pub fn costs(&self) -> &CostModel {
-        &self.costs
+    /// The marketplace cost model this service meters with (a snapshot
+    /// copy — the live pricing may be [`FrugalService::reprice`]d at any
+    /// time).
+    pub fn costs(&self) -> CostModel {
+        self.costs.read().unwrap().clone()
+    }
+
+    /// The per-model health registry, when the health layer is on.
+    pub fn health(&self) -> Option<Arc<ModelHealth>> {
+        self.health.clone()
+    }
+
+    /// Apply a marketplace price step: scale model `model`'s pricing by
+    /// `mult` and republish the *current* plan so billing follows the new
+    /// prices (plan bundles bill through frozen cost copies). The
+    /// reoptimizer then sees the drifted spend through
+    /// [`FrugalService::costs`] on its next step and can swap to a plan
+    /// that is cheaper under the new prices. Shadow-scoring keeps metering
+    /// at launch prices (its worker holds its own copy) — a known,
+    /// documented approximation.
+    pub fn reprice(&self, model: usize, mult: f64, reason: &str) -> Result<u64> {
+        self.costs.write().unwrap().scale_pricing(model, mult)?;
+        self.publish_plan(self.plan(), reason, None)
     }
 }
 

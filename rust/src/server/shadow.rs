@@ -107,6 +107,13 @@ pub struct ShadowStats {
     pub completed: AtomicU64,
     /// Rows lost to engine/batcher/window errors.
     pub errors: AtomicU64,
+    /// Observation rows that were *started* (their model calls may have
+    /// been metered) but never reached the window — an engine/batcher call
+    /// failed mid-row, or the window rejected the push. Distinct from
+    /// `dropped_queue_full`: these rows made it past the queue and then
+    /// fell out of the labelled stream. Under fault injection this is the
+    /// first counter that moves.
+    pub dropped_rows: AtomicU64,
     /// Metered shadow spend (nano-USD; all K model calls of each row).
     pub spend_nano_usd: AtomicU64,
     budget_exhausted: AtomicBool,
@@ -132,6 +139,7 @@ impl ShadowStats {
             skipped_budget: self.skipped_budget.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            dropped_rows: self.dropped_rows.load(Ordering::Relaxed),
             spend_usd: self.spend_usd(),
             budget_exhausted: self.budget_exhausted(),
         }
@@ -153,6 +161,9 @@ pub struct ShadowSnapshot {
     pub completed: u64,
     /// Rows lost to engine/batcher/window errors.
     pub errors: u64,
+    /// Rows started but never pushed into the window (mid-row failure or
+    /// window rejection) — see [`ShadowStats::dropped_rows`].
+    pub dropped_rows: u64,
     /// Metered shadow spend (USD).
     pub spend_usd: f64,
     /// Whether the spend cap has been reached.
@@ -172,6 +183,7 @@ impl ShadowSnapshot {
         m.insert("skipped_budget".to_string(), Value::Num(self.skipped_budget as f64));
         m.insert("completed".to_string(), Value::Num(self.completed as f64));
         m.insert("errors".to_string(), Value::Num(self.errors as f64));
+        m.insert("dropped_rows".to_string(), Value::Num(self.dropped_rows as f64));
         m.insert("spend_usd".to_string(), Value::Num(self.spend_usd));
         m.insert(
             "budget_exhausted".to_string(),
@@ -479,6 +491,7 @@ fn shadow_chunk(
         let complete = valid[r] && (0..k).all(|m| scores[m][r].is_some());
         if !complete {
             stats.errors.fetch_add(1, Ordering::Relaxed);
+            stats.dropped_rows.fetch_add(1, Ordering::Relaxed);
             continue;
         }
         let label = preds[reference][r].unwrap();
@@ -498,6 +511,7 @@ fn shadow_chunk(
             }
             Err(_) => {
                 stats.errors.fetch_add(1, Ordering::Relaxed);
+                stats.dropped_rows.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -687,6 +701,51 @@ mod tests {
         let per_row: f64 = (0..K).map(|m| costs.call_cost(m, 6, 0)).sum();
         assert!(after.spend_usd <= 5.0e-5 + per_row + 1e-12);
         assert!(after.completed < 64);
+    }
+
+    #[test]
+    fn mid_row_failures_count_as_dropped_rows() {
+        // api_1 always fails → every row is incomplete, nothing reaches
+        // the window, and every started row lands in `dropped_rows`.
+        let engine = EngineHandle::simulated(move |_ds, model, rows| {
+            if model == "api_1" {
+                anyhow::bail!("injected outage: api_1 is down");
+            }
+            Ok(rows
+                .iter()
+                .map(|_| {
+                    if model == "scorer" {
+                        vec![4.0]
+                    } else {
+                        vec![1.0, 0.0, 0.0, 0.0]
+                    }
+                })
+                .collect())
+        });
+        let metrics = Arc::new(ServiceMetrics::with_models(K, 64));
+        let shadow = Shadow::spawn(
+            engine,
+            sim_costs(),
+            sim_meta(),
+            metrics.clone(),
+            ShadowConfig { rate: 1.0, reference: Some(2), ..Default::default() },
+        )
+        .unwrap();
+        for j in 0..8 {
+            shadow.offer(&query_row(j));
+        }
+        assert!(
+            wait_until(5_000, || shadow.snapshot().dropped_rows >= 8),
+            "rows never dropped: {:?}",
+            shadow.snapshot()
+        );
+        let snap = shadow.snapshot();
+        assert_eq!(snap.completed, 0);
+        assert_eq!(snap.dropped_rows, 8);
+        assert_eq!(metrics.window.len(), 0);
+        // the JSON snapshot carries the counter for `report swaps`
+        let v = snap.to_value();
+        assert_eq!(v.get("dropped_rows").and_then(|x| x.as_f64()), Some(8.0));
     }
 
     #[test]

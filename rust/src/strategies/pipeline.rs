@@ -81,6 +81,10 @@ pub struct StageAnswer {
     pub model: Option<usize>,
     /// Cascade stage that answered; `None` when the cascade never ran.
     pub stopped_at: Option<usize>,
+    /// Plan stage indices the cascade skipped because their model's
+    /// circuit breaker was open (empty when healthy or no health layer;
+    /// see `server::health`). A non-empty list marks a degraded answer.
+    pub skipped_stages: Vec<usize>,
     /// Simulated commercial-API round-trip latency (ms).
     pub simulated_api_latency_ms: f64,
 }
@@ -499,6 +503,7 @@ impl Strategy for CacheStage {
                     cost_usd: 0.0,
                     model: None,
                     stopped_at: None,
+                    skipped_stages: Vec::new(),
                     simulated_api_latency_ms: 0.0,
                 }))
             }
@@ -626,17 +631,25 @@ impl Strategy for CascadeStage {
         let out = cascade.answer_billed(&ctx.tokens, billed)?;
 
         self.metrics.record_stop(out.stopped_at);
-        for (s, &stage_cost) in out.stage_costs.iter().enumerate() {
-            if let Some(w) = self.metrics.model(executed.stages[s].model) {
+        // `stage_costs` may cover a subset of the plan when health skipped
+        // stages — `invoked_models` is its model attribution, parallel by
+        // construction (plan indexing would mis-bill the survivors).
+        for (i, &stage_cost) in out.stage_costs.iter().enumerate() {
+            if let Some(w) = self.metrics.model(out.invoked_models[i]) {
                 w.record_invocation(stage_cost);
+            }
+        }
+        for &s in &out.skipped_stages {
+            if let Some(w) = self.metrics.model(executed.stages[s].model) {
+                w.record_skip();
             }
         }
         let model = executed.stages[out.stopped_at].model;
         if let Some(w) = self.metrics.model(model) {
-            // A last-stage stop carries the cascade's sentinel score 1.0,
-            // not a scorer measurement — don't let it skew the window.
-            let measured = out.stopped_at + 1 < executed.stages.len();
-            w.record_accepted(measured.then_some(out.score));
+            // Sentinel acceptances (last-stage stop, or a degraded
+            // fallback answering terminally from a non-final stage) carry
+            // 1.0, not a scorer measurement — keep them out of the mean.
+            w.record_accepted((!out.sentinel_score).then_some(out.score));
         }
         Ok(Decision::Answer(StageAnswer {
             answer: out.answer,
@@ -644,6 +657,7 @@ impl Strategy for CascadeStage {
             cost_usd: out.cost,
             model: Some(model),
             stopped_at: Some(out.stopped_at),
+            skipped_stages: out.skipped_stages,
             simulated_api_latency_ms: out.simulated_latency_ms,
         }))
     }

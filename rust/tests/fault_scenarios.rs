@@ -1,0 +1,315 @@
+//! Acceptance tests for the robustness layer: scripted marketplace fault
+//! timelines (`eval::simulate::ScenarioTimeline`) injected on the REAL
+//! serving path, absorbed by per-model circuit breakers + bounded retry
+//! (`server::health`) and graceful cascade degradation
+//! (`coordinator::cascade::answer_resilient`).
+//!
+//! Entirely hermetic and wall-clock-free: the engine is
+//! `EngineHandle::simulated`, the fault clock is query-indexed and
+//! advanced by the test driver, and breaker cooldowns are counted in
+//! consults, not seconds — the same run is bit-identical every time.
+
+use std::sync::Arc;
+
+use frugalgpt::coordinator::cascade::CascadePlan;
+use frugalgpt::coordinator::optimizer::OptimizerOptions;
+use frugalgpt::data::layout;
+use frugalgpt::eval::simulate::{
+    fault_injected_engine, ScenarioEvent, ScenarioTimeline, TimedEvent,
+};
+use frugalgpt::runtime::EngineHandle;
+use frugalgpt::server::health::{BreakerState, HealthConfig};
+use frugalgpt::server::metrics::Observation;
+use frugalgpt::server::reoptimizer::{ReoptOutcome, Reoptimizer, ReoptimizerConfig};
+use frugalgpt::server::service::{FrugalService, ServiceConfig};
+
+mod common;
+use common::{query_row, sim_costs, sim_meta, K};
+
+const CLASSES: i32 = 4;
+
+/// Ground truth of `query_row(j)`: its first body token mod CLASSES.
+fn truth_of(j: i32) -> u32 {
+    j.rem_euclid(CLASSES) as u32
+}
+
+/// Simulated marketplace where every API answers the truth except the
+/// models listed in `wrong`, which answer `(truth + 2) % 4`. The scorer
+/// is calibrated (+4 logit when the scored answer matches the truth, -4
+/// otherwise), so a threshold of 2.0 accepts exactly the correct answers.
+fn sim_engine(wrong: &[usize]) -> EngineHandle {
+    let wrong = wrong.to_vec();
+    EngineHandle::simulated(move |_ds, model, rows| {
+        Ok(rows
+            .iter()
+            .map(|r| {
+                let truth = truth_of(r[1]);
+                if model == "scorer" {
+                    let ans = (r[6] - layout::LABEL_BASE) as u32;
+                    vec![if ans == truth { 4.0 } else { -4.0 }]
+                } else {
+                    let m: usize = model
+                        .strip_prefix("api_")
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or_else(|| panic!("unknown sim model {model}"));
+                    let answer = if wrong.contains(&m) {
+                        (truth + 2) % CLASSES as u32
+                    } else {
+                        truth
+                    };
+                    let mut logits = vec![0.0f32; CLASSES as usize];
+                    logits[answer as usize] = 1.0;
+                    logits
+                }
+            })
+            .collect())
+    })
+}
+
+/// A tight, hermetic health config: trips after 2 consecutive failures,
+/// probes again after 4 skipped consults, retries once, never sleeps.
+fn health_cfg() -> HealthConfig {
+    HealthConfig {
+        trip_consecutive: 2,
+        cooldown: 4,
+        max_retries: 1,
+        backoff_base_us: 0,
+        ..Default::default()
+    }
+}
+
+fn service_cfg() -> ServiceConfig {
+    ServiceConfig {
+        cache_enabled: false, // every query must exercise the cascade
+        health: Some(health_cfg()),
+        ..Default::default()
+    }
+}
+
+/// ISSUE acceptance scenario 1: a scripted 429 storm on the cheap
+/// (non-terminal) model produces ZERO user-facing errors. While the storm
+/// lasts, answers are degraded (`skipped_stages` non-empty) but still
+/// correct — the terminal stage absorbs the traffic — and once the storm
+/// passes, the breaker re-closes and the cascade returns to the cheap
+/// path.
+#[test]
+fn rate_limit_storm_degrades_but_never_errors() {
+    let timeline = ScenarioTimeline::new(vec![TimedEvent {
+        at: 20,
+        event: ScenarioEvent::RateLimitStorm { model: 0, rate: 1.0, dur: 40 },
+    }]);
+    let costs = sim_costs();
+    let engine = fault_injected_engine(sim_engine(&[]), &costs.model_names, timeline.clone());
+    // [api_0(τ=2.0) → api_2]: the calibrated scorer accepts api_0's
+    // (correct) answers, so the cheap stage normally serves everything.
+    let svc = FrugalService::new(
+        CascadePlan::pair(0, 2.0, 2),
+        engine,
+        costs,
+        sim_meta(),
+        service_cfg(),
+    )
+    .unwrap();
+
+    let mut degraded = 0usize;
+    for j in 0..100i32 {
+        timeline.set_now(j as u64);
+        // The acceptance bar: `answer` must be Ok for EVERY query, storm
+        // or not — a 429 on a non-terminal stage is the cascade's problem,
+        // never the caller's.
+        let ans = svc
+            .answer(&query_row(j))
+            .unwrap_or_else(|e| panic!("query {j} surfaced an error: {e:#}"));
+        assert_eq!(ans.answer, truth_of(j), "query {j} answered wrong");
+        if (20..60).contains(&j) {
+            // Storm window: the cheap stage is rate-limited out; every
+            // answer is degraded (stage 0 skipped) and served terminally.
+            assert_eq!(
+                ans.skipped_stages,
+                vec![0],
+                "query {j} in the storm should skip the stormed stage"
+            );
+            assert_eq!(ans.stopped_at, Some(1));
+            degraded += 1;
+        }
+        if j >= 90 {
+            // Well past the storm: breaker re-closed, cheap path restored.
+            assert!(
+                ans.skipped_stages.is_empty(),
+                "query {j} still degraded after the storm: {:?}",
+                ans.skipped_stages
+            );
+            assert_eq!(ans.stopped_at, Some(0), "cheap stage should serve again");
+        }
+    }
+    assert_eq!(degraded, 40, "every storm query degrades, none errors");
+
+    let health = svc.health().expect("health layer is configured");
+    let snap = &health.snapshot()[0];
+    assert_eq!(snap.state, BreakerState::Closed, "breaker re-closed after the storm");
+    assert!(snap.trips >= 1, "the storm must trip the breaker: {snap:?}");
+    assert!(snap.recoveries >= 1, "a half-open probe must re-close it: {snap:?}");
+    assert!(snap.skips >= 1, "open-breaker consults are skips, not calls: {snap:?}");
+    // Bounded retry spend: with max_retries = 1 the engine sees at most
+    // 2 attempts per consult that reached the wire.
+    assert!(snap.failures <= 2 * snap.calls, "retry spend exceeded its bound: {snap:?}");
+}
+
+/// ISSUE acceptance scenario 2: an outage of the TERMINAL model. The
+/// cascade degrades to its best sub-threshold answer instead of erroring,
+/// the terminal breaker walks Closed → Open → HalfOpen, and once the
+/// outage ends a probe re-closes it and full-quality answers resume.
+#[test]
+fn terminal_outage_falls_back_and_breaker_recovers() {
+    let timeline = ScenarioTimeline::new(vec![TimedEvent {
+        at: 10,
+        event: ScenarioEvent::Outage { model: 2, dur: 30 },
+    }]);
+    let costs = sim_costs();
+    // api_0 is scripted wrong, so its answers score -4 and the τ=2.0 gate
+    // never accepts them: healthy traffic is served by the terminal
+    // api_2, and during the outage the cascade can only degrade.
+    let engine =
+        fault_injected_engine(sim_engine(&[0]), &costs.model_names, timeline.clone());
+    let svc = FrugalService::new(
+        CascadePlan::pair(0, 2.0, 2),
+        engine,
+        costs,
+        sim_meta(),
+        service_cfg(),
+    )
+    .unwrap();
+
+    let wrong = |j: i32| (truth_of(j) + 2) % CLASSES as u32;
+    let mut outage_degraded = 0usize;
+    for j in 0..70i32 {
+        timeline.set_now(j as u64);
+        let ans = svc
+            .answer(&query_row(j))
+            .unwrap_or_else(|e| panic!("query {j} surfaced an error: {e:#}"));
+        if j < 10 {
+            assert_eq!(ans.answer, truth_of(j));
+            assert_eq!(ans.stopped_at, Some(1), "healthy traffic answers terminally");
+        }
+        if (10..40).contains(&j) {
+            // Outage window: the only reachable answer is api_0's wrong
+            // sub-threshold one — degraded content, but an ANSWER.
+            assert_eq!(ans.answer, wrong(j), "degraded answer comes from api_0");
+            assert_eq!(ans.stopped_at, Some(0));
+            assert!(
+                ans.skipped_stages.contains(&1),
+                "the downed terminal stage must be reported skipped (q{j})"
+            );
+            outage_degraded += 1;
+        }
+        if j >= 60 {
+            assert_eq!(ans.answer, truth_of(j), "full quality restored after outage");
+            assert_eq!(ans.stopped_at, Some(1));
+            assert!(ans.skipped_stages.is_empty());
+        }
+    }
+    assert_eq!(outage_degraded, 30, "every outage query degraded, none errored");
+
+    let health = svc.health().expect("health layer is configured");
+    let snap = &health.snapshot()[2];
+    assert_eq!(snap.state, BreakerState::Closed, "terminal breaker re-closed");
+    assert!(snap.trips >= 1, "the outage must trip the terminal breaker: {snap:?}");
+    assert!(snap.recoveries >= 1, "recovery requires a successful probe: {snap:?}");
+    // api_0's breaker never tripped: wrong answers are still SUCCESSFUL
+    // calls — breaker decisions are about availability, not accuracy.
+    assert_eq!(health.snapshot()[0].trips, 0);
+}
+
+/// ISSUE acceptance scenario 3: a scripted marketplace price step. The
+/// timeline fires `PriceStep` exactly once at its query index, the driver
+/// applies it through `FrugalService::reprice`, and the next reoptimizer
+/// step — reading the *current* marketplace prices — swaps the plan off
+/// the newly-expensive model within one hysteresis gate.
+#[test]
+fn price_step_triggers_reoptimizer_swap() {
+    let timeline = ScenarioTimeline::new(vec![TimedEvent {
+        at: 48,
+        event: ScenarioEvent::PriceStep { model: 0, mult: 50.0 },
+    }]);
+    // No engine faults: every API answers the truth, so the Pareto
+    // frontier collapses to "cheapest model alone" and the swap decision
+    // is purely a price decision — deterministic by construction.
+    let svc = Arc::new(
+        FrugalService::new(
+            CascadePlan::single(0),
+            sim_engine(&[]),
+            sim_costs(),
+            sim_meta(),
+            ServiceConfig {
+                cache_enabled: false,
+                window_capacity: 64,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let reopt = Reoptimizer::new(
+        svc.clone(),
+        ReoptimizerConfig {
+            min_window: 32,
+            hysteresis: 0.05,
+            optimizer: OptimizerOptions { grid: 8, threads: Some(1), ..Default::default() },
+            ..Default::default()
+        },
+    );
+
+    let mut price_steps_applied = 0usize;
+    for j in 0..64i32 {
+        for (model, mult) in timeline.price_steps_at(j as u64) {
+            svc.reprice(model, mult, &format!("price step @q{j}")).unwrap();
+            price_steps_applied += 1;
+        }
+        let ans = svc.answer(&query_row(j)).unwrap();
+        assert_eq!(ans.answer, truth_of(j));
+        // Offline-labelled feedback row (all K models, as the serve
+        // driver does): everyone answers the truth with a confident
+        // score.
+        svc.observe(Observation {
+            label: truth_of(j),
+            input_tokens: 6,
+            preds: (0..K).map(|_| truth_of(j)).collect(),
+            scores: vec![0.98; K],
+            correct: vec![true; K],
+        })
+        .unwrap();
+
+        if j == 40 {
+            // Before the step: api_0 is the cheapest truth-teller, the
+            // served plan is already optimal — the re-learn keeps it.
+            match reopt.step().unwrap() {
+                ReoptOutcome::Kept { .. } => {}
+                other => panic!("pre-step re-learn must keep the plan, got {other:?}"),
+            }
+        }
+        if j == 56 {
+            // After ×50 on api_0: replaying the served plan at CURRENT
+            // prices makes it ~50× the candidate — far past hysteresis.
+            match reopt.step().unwrap() {
+                ReoptOutcome::Swapped { version, .. } => {
+                    assert!(version >= 1);
+                }
+                other => panic!("post-step re-learn must swap, got {other:?}"),
+            }
+        }
+    }
+    assert_eq!(price_steps_applied, 1, "PriceStep fires exactly once at its index");
+    // The cheapest all-correct marketplace after the step is api_1 alone,
+    // so whatever plan shape won the sweep, it must lead with (and answer
+    // from) api_1 and never touch the repriced api_0.
+    let plan = svc.plan();
+    assert_eq!(plan.stages[0].model, 1, "swap routes onto the next-cheapest model");
+    assert!(
+        !plan.stages.iter().any(|s| s.model == 0),
+        "the repriced model must be out of the plan: {plan:?}"
+    );
+    let ans = svc.answer(&query_row(100)).unwrap();
+    assert_eq!(ans.model, Some(1), "post-swap traffic is served by api_1");
+    // The repriced marketplace is what the service now bills with.
+    let c = svc.costs();
+    assert!((c.pricing[0].usd_per_10m_input - 100.0).abs() < 1e-9);
+}

@@ -35,6 +35,16 @@ cargo run --release --example quickstart -- --sim
 cargo run --release --example strategies_demo -- --sim --queries 120
 cargo run --release --example serve_workload -- --sim --queries 200 --clients 2 --zipf
 
+# Fault tolerance: the hermetic scripted-timeline suite (429 storm with
+# zero client-facing errors, terminal outage + breaker recovery, price
+# step → reoptimizer swap — all on a query-indexed clock, no wall-clock),
+# then a live smoke of the same machinery: a storm scenario against the
+# serving workload, where every client thread propagates Errs, so one
+# surfaced fault fails the run.
+cargo test --release --test fault_scenarios
+cargo run --release --example serve_workload -- \
+    --sim --queries 200 --clients 2 --scenario storm
+
 # Bench smoke: exercises the full frontier sweep + the JSON suite writer
 # on a small synthetic table. Writes to a scratch path — the committed
 # BENCH_optimizer.json trajectory is only ever refreshed by the nightly
