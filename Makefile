@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 gate = `make tier1` (ROADMAP.md).
 
-.PHONY: tier1 ci test bench bench-optimizer port-check doc
+.PHONY: tier1 ci test bench bench-optimizer bench-serve port-check doc
 
 # API docs (rustdoc). The crate sets #![warn(missing_docs)] and tier1's
 # clippy -D warnings promotes that to an error, so public items cannot
@@ -28,6 +28,7 @@ bench:
 	cargo bench --bench scorer
 	cargo bench --bench batcher
 	cargo bench --bench cascade_e2e
+	cargo bench --bench serve_hot_path
 
 # Regenerate the committed optimizer perf trajectory (machine-readable).
 # Absolute path: cargo runs bench binaries with cwd = the package root
@@ -35,6 +36,12 @@ bench:
 # and orphan the committed file (and its history) at the repo root.
 bench-optimizer:
 	cargo bench --bench optimizer -- --json $(CURDIR)/BENCH_optimizer.json
+
+# Regenerate the committed serve-path contention trajectory (sharded
+# cache + wait-free snapshots vs the shard1/RwLock baseline). Same
+# absolute-path caveat as bench-optimizer.
+bench-serve:
+	cargo bench --bench serve_hot_path -- --json $(CURDIR)/BENCH_serve.json
 
 # Algorithm-equivalence + speedup harness (pure python; no toolchain).
 # CI runs it with --quick (all correctness gates, no wall-clock timing).

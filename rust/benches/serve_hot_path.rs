@@ -1,0 +1,253 @@
+//! Bench: closed-loop multi-threaded contention on the serving hot path
+//! (`FrugalService::answer`). This is the gate for the sharded completion
+//! cache + wait-free plan/cost snapshots: every workload runs in TWO
+//! configurations of the SAME service code —
+//!
+//! * `sharded`  — cache shards auto (next power of two ≥ cores), plan and
+//!   cost handles on the wait-free `SnapshotCell`;
+//! * `shard1_rwlock` — one cache shard and the `RwLock`-based baseline
+//!   handles (`ServiceConfig::baseline_locks`), i.e. the pre-sharding
+//!   serialization points.
+//!
+//! Workload mixes, each at 1/2/4/8 closed-loop client threads over a
+//! `SimWorld` marketplace:
+//!
+//! * `hit_heavy`   — Zipf traffic over a small warm population; almost
+//!   every answer is a completion-cache hit, so the cache lock(s) ARE the
+//!   bottleneck being measured;
+//! * `cascade`     — uniform traffic over a population far larger than
+//!   the cache; answers run the cascade and insert, mixing engine actor
+//!   round-trips with cache writes;
+//! * `swap_storm`  — `hit_heavy` traffic while a publisher hammers
+//!   `swap_plan` with ~200µs pacing; tails here measure how long an
+//!   answer stalls behind a plan publish (compare its p99 against the
+//!   no-storm `hit_heavy` rows).
+//!
+//! Closed-loop accounting: `mean_ns` is wall-clock / total answers (so
+//! `per_sec` is AGGREGATE throughput across all client threads), while
+//! p50/p95/p99/max are per-answer latencies merged over threads.
+//!
+//! `--json PATH` (via `make bench-serve`) writes BENCH_serve.json with
+//! the same schema + history discipline as BENCH_optimizer.json;
+//! `--smoke` shrinks the op counts for CI while still emitting one
+//! schema-valid result per (mix, config, threads) variant.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use frugalgpt::coordinator::cascade::CascadePlan;
+use frugalgpt::eval::simulate::SimWorld;
+use frugalgpt::server::service::{FrugalService, ServiceConfig};
+use frugalgpt::util::args::Args;
+use frugalgpt::util::bench::{suite_json, BenchResult};
+use frugalgpt::util::rng::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+const SEED: u64 = 42;
+
+#[derive(Clone, Copy)]
+struct MixSpec {
+    name: &'static str,
+    /// Item ids drawn from `0..population`.
+    population: usize,
+    /// Zipf exponent (None = uniform).
+    zipf: Option<f64>,
+    /// Pre-answer the whole population once so the timed loop hits warm.
+    warm: bool,
+    /// Run the swap-storm publisher alongside the clients.
+    storm: bool,
+}
+
+#[derive(Clone, Copy)]
+struct ConfigSpec {
+    name: &'static str,
+    cache_shards: usize,
+    baseline_locks: bool,
+}
+
+fn build_service(world: &SimWorld, cfg: &ConfigSpec, cache_capacity: usize) -> Arc<FrugalService> {
+    let svc = FrugalService::new(
+        CascadePlan::pair(0, 0.7, 2),
+        world.engine().expect("sim engine"),
+        world.costs.clone(),
+        world.meta.clone(),
+        ServiceConfig {
+            cache_capacity,
+            cache_shards: cfg.cache_shards,
+            baseline_locks: cfg.baseline_locks,
+            window_capacity: 64,
+            ..ServiceConfig::default()
+        },
+    )
+    .expect("service");
+    Arc::new(svc)
+}
+
+/// One closed-loop measurement: `threads` clients each answer
+/// `per_thread` queries as fast as the service allows.
+fn closed_loop(
+    name: String,
+    world: &SimWorld,
+    mix: &MixSpec,
+    cfg: &ConfigSpec,
+    threads: usize,
+    per_thread: usize,
+    cache_capacity: usize,
+) -> BenchResult {
+    let svc = build_service(world, cfg, cache_capacity);
+    if mix.warm {
+        for i in 0..mix.population {
+            svc.answer(world.row(i)).expect("warmup answer");
+        }
+    }
+
+    let stop_storm = Arc::new(AtomicBool::new(false));
+    let storm = mix.storm.then(|| {
+        let svc = svc.clone();
+        let stop = stop_storm.clone();
+        std::thread::spawn(move || {
+            // Alternate between two plans that both keep stage-0/model-0
+            // completions alive, so the storm measures publish + sweep
+            // contention rather than only cold-cache refills.
+            let plans =
+                [CascadePlan::pair(0, 0.7, 2), CascadePlan::pair(0, 0.7, 1)];
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                svc.swap_plan(plans[i % 2].clone(), "storm").expect("swap");
+                i += 1;
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        })
+    });
+
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for t in 0..threads {
+        let svc = svc.clone();
+        let mix = *mix;
+        let rows: Vec<Vec<i32>> =
+            (0..mix.population).map(|i| world.row(i).to_vec()).collect();
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(SEED + 1000 * t as u64);
+            let mut lat = Vec::with_capacity(per_thread);
+            for _ in 0..per_thread {
+                let i = match mix.zipf {
+                    Some(s) => rng.zipf(mix.population, s),
+                    None => rng.below(mix.population as u64) as usize,
+                };
+                let q0 = Instant::now();
+                svc.answer(&rows[i]).expect("answer");
+                lat.push(q0.elapsed());
+            }
+            lat
+        }));
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(threads * per_thread);
+    for c in clients {
+        samples.extend(c.join().expect("client thread"));
+    }
+    let wall = t0.elapsed();
+    stop_storm.store(true, Ordering::Relaxed);
+    if let Some(s) = storm {
+        s.join().expect("storm publisher");
+    }
+
+    samples.sort_unstable();
+    let n = samples.len();
+    BenchResult {
+        name,
+        iters: n,
+        // Closed-loop convention: per_sec = aggregate throughput.
+        mean: wall / n as u32,
+        p50: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        p99: samples[(n * 99 / 100).min(n - 1)],
+        max: samples[n - 1],
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    // Smoke MUST still emit one schema-valid result per variant —
+    // scripts/ci.sh hard-fails on an empty or malformed results array.
+    let per_thread = if smoke { 40 } else { 1500 };
+    let world = SimWorld::new(3, 256, SEED);
+
+    let mixes = [
+        MixSpec { name: "hit_heavy", population: 48, zipf: Some(1.1), warm: true, storm: false },
+        MixSpec { name: "cascade", population: 256, zipf: None, warm: false, storm: false },
+        MixSpec { name: "swap_storm", population: 48, zipf: Some(1.1), warm: true, storm: true },
+    ];
+    let configs = [
+        ConfigSpec { name: "sharded", cache_shards: 0, baseline_locks: false },
+        ConfigSpec { name: "shard1_rwlock", cache_shards: 1, baseline_locks: true },
+    ];
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    for mix in &mixes {
+        // `cascade` needs the cache to thrash, the others need it warm.
+        let cache_capacity = if mix.name == "cascade" { 64 } else { 256 };
+        for cfg in &configs {
+            for &t in &THREADS {
+                let name = format!("serve/{}/{}/t{}", mix.name, cfg.name, t);
+                let r = closed_loop(
+                    name, &world, mix, cfg, t, per_thread, cache_capacity,
+                );
+                println!("{}", r.report());
+                results.push(r);
+            }
+        }
+    }
+
+    if let Some(path) = args.get("json") {
+        let host_threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        // Preserve the committed file's `history` array across
+        // regenerations; refuse to clobber an unparsable file.
+        let history = match std::fs::read_to_string(path) {
+            Ok(raw) => match frugalgpt::util::json::Value::parse(&raw) {
+                Ok(v) => {
+                    let h = v.get("history").clone();
+                    h.as_arr().is_some().then(|| h.to_json())
+                }
+                Err(e) => {
+                    eprintln!(
+                        "refusing to overwrite {path}: existing file does not \
+                         parse ({e}); move it aside first"
+                    );
+                    std::process::exit(1);
+                }
+            },
+            Err(_) => None,
+        };
+        let raw_sections: Vec<(&str, String)> = match &history {
+            Some(h) => vec![("history", h.clone())],
+            None => vec![],
+        };
+        let doc = suite_json(
+            "serve_hot_path",
+            &[
+                ("world", format!("SimWorld k=3 n=256 seed={SEED}")),
+                ("per_thread_ops", per_thread.to_string()),
+                ("threads_swept", "1/2/4/8 closed-loop clients".to_string()),
+                ("mode", if smoke { "smoke (CI op counts — NOT the committed trajectory workload)" } else { "full" }.to_string()),
+                ("configs", "sharded (auto cache shards + wait-free snapshot handles) vs shard1_rwlock (1 shard + RwLock baseline handles via ServiceConfig::baseline_locks)".to_string()),
+                ("accounting", "closed loop: mean_ns = wall/ops so per_sec is aggregate throughput; p50/p95/p99/max are per-answer latencies merged across threads".to_string()),
+                ("gate", "sharded >= 2x shard1_rwlock per_sec on hit_heavy at t4+; swap_storm p99 <= 1.5x hit_heavy p99 per config".to_string()),
+                ("host_threads", host_threads.to_string()),
+                ("regenerate", "make bench-serve (rewrites meta/results, preserves history)".to_string()),
+            ],
+            &results,
+            &raw_sections,
+        );
+        std::fs::write(path, doc).expect("writing bench json");
+        if history.is_some() {
+            eprintln!("wrote {path} (history entries preserved)");
+        } else {
+            eprintln!("wrote {path} (no prior history found)");
+        }
+    }
+}

@@ -7,8 +7,23 @@
 //! once the first request of a batch has arrived, then issues one
 //! `execute_batch` and fans results back out over per-request reply
 //! channels. Pure std threading (no async runtime in this environment).
+//!
+//! §Lanes — submission used to funnel through one mpsc channel, so every
+//! client thread (and the shadow fan-out, which pushes rows×models at
+//! once) contended on a single queue. Each batcher now owns
+//! [`BatcherConfig::lanes`] independent submission lanes; a submitting
+//! thread is pinned to a lane by a hash of its thread id (per-worker
+//! lanes — two pipeline workers in different lanes never touch the same
+//! queue mutex), and the drain *work-steals*: it starts at a rotating
+//! home lane and sweeps the others, so a batch fills from every lane
+//! that has traffic and no lane can be starved. Wakeups are
+//! park/unpark-token based — a submit costs one short per-lane lock plus
+//! an unpark, never a shared mutex. Pinned by
+//! `work_stealing_drain_batches_across_lanes`.
 
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -20,10 +35,92 @@ struct Item {
     reply: mpsc::SyncSender<Result<Vec<f32>>>,
 }
 
-/// Handle for submitting rows to a batcher. Cheap to clone.
-#[derive(Clone)]
+/// The shared lane state between submitters and the drain worker.
+struct Lanes {
+    /// One short-critical-section queue per submission lane.
+    queues: Vec<Mutex<VecDeque<Item>>>,
+    /// Live [`BatcherHandle`] count; the worker exits when it reaches 0
+    /// and every lane has drained.
+    handles: AtomicUsize,
+    /// The drain worker's thread handle, registered before its first
+    /// scan, so submitters can unpark it.
+    worker: OnceLock<std::thread::Thread>,
+}
+
+impl Lanes {
+    /// Pop up to `want - rows.len()` items, sweeping every lane starting
+    /// from `start` (the work-stealing drain). Lane locks are taken one
+    /// at a time and released between lanes.
+    fn take_available(
+        &self,
+        start: usize,
+        want: usize,
+        rows: &mut Vec<Vec<i32>>,
+        replies: &mut Vec<mpsc::SyncSender<Result<Vec<f32>>>>,
+    ) {
+        let n = self.queues.len();
+        for off in 0..n {
+            if rows.len() >= want {
+                break;
+            }
+            let mut q = self.queues[(start + off) % n].lock().unwrap();
+            while rows.len() < want {
+                match q.pop_front() {
+                    Some(item) => {
+                        rows.push(item.row);
+                        replies.push(item.reply);
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+
+    /// Wake the drain worker (unpark-token semantics: never blocks, and a
+    /// wake delivered before the worker parks is not lost).
+    fn wake(&self) {
+        if let Some(t) = self.worker.get() {
+            t.unpark();
+        }
+    }
+}
+
+/// The lane a submitting thread is pinned to: a hash of its thread id.
+/// Computed once per thread; the same thread always lands on the same
+/// lane of a given batcher, so pipeline workers submitting concurrently
+/// spread across lanes instead of contending on one queue.
+fn thread_lane_hash() -> u64 {
+    use std::hash::{Hash, Hasher};
+    thread_local! {
+        static LANE_HASH: u64 = {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            std::thread::current().id().hash(&mut h);
+            h.finish()
+        };
+    }
+    LANE_HASH.with(|h| *h)
+}
+
+/// Handle for submitting rows to a batcher. Cheap to clone; each clone
+/// keeps the drain worker alive.
 pub struct BatcherHandle {
-    tx: mpsc::Sender<Item>,
+    lanes: Arc<Lanes>,
+}
+
+impl Clone for BatcherHandle {
+    fn clone(&self) -> Self {
+        self.lanes.handles.fetch_add(1, Ordering::SeqCst);
+        BatcherHandle { lanes: self.lanes.clone() }
+    }
+}
+
+impl Drop for BatcherHandle {
+    fn drop(&mut self) {
+        if self.lanes.handles.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Last handle gone: wake the worker so it can drain and exit.
+            self.lanes.wake();
+        }
+    }
 }
 
 impl BatcherHandle {
@@ -44,9 +141,13 @@ impl BatcherHandle {
         row: Vec<i32>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
         let (tx, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Item { row, reply: tx })
-            .map_err(|_| anyhow!("batcher worker is gone"))?;
+        let n = self.lanes.queues.len();
+        let lane = (thread_lane_hash() as usize) % n;
+        self.lanes.queues[lane]
+            .lock()
+            .unwrap()
+            .push_back(Item { row, reply: tx });
+        self.lanes.wake();
         Ok(rx)
     }
 }
@@ -58,6 +159,10 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// How long to wait for stragglers after the first queued row.
     pub max_wait: Duration,
+    /// Submission lanes (0 = next power of two ≥ core count, capped at
+    /// 8). Each submitting thread is pinned to one lane by thread-id
+    /// hash; the drain work-steals across all of them.
+    pub lanes: usize,
 }
 
 impl Default for BatcherConfig {
@@ -66,7 +171,26 @@ impl Default for BatcherConfig {
         // for stragglers only adds latency; 300µs captures genuinely
         // concurrent arrivals (batch-8 execs are ~1.8ms) without stalling
         // the pipe. max_batch 8 matches the engine's preferred chunk.
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(300) }
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(300),
+            lanes: 0,
+        }
+    }
+}
+
+impl BatcherConfig {
+    /// The resolved lane count (power of two, at least 1).
+    fn resolved_lanes(&self) -> usize {
+        let n = if self.lanes == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(8)
+        } else {
+            self.lanes
+        };
+        n.next_power_of_two()
     }
 }
 
@@ -84,12 +208,19 @@ impl Batcher {
         model: String,
         cfg: BatcherConfig,
     ) -> Batcher {
-        let (tx, rx) = mpsc::channel::<Item>();
+        let lanes = Arc::new(Lanes {
+            queues: (0..cfg.resolved_lanes())
+                .map(|_| Mutex::new(VecDeque::new()))
+                .collect(),
+            handles: AtomicUsize::new(1),
+            worker: OnceLock::new(),
+        });
+        let worker_lanes = lanes.clone();
         let join = std::thread::Builder::new()
             .name(format!("batcher-{dataset}-{model}"))
-            .spawn(move || worker(engine, dataset, model, cfg, rx))
+            .spawn(move || worker(engine, dataset, model, cfg, worker_lanes))
             .expect("spawning batcher thread");
-        Batcher { handle: BatcherHandle { tx }, _join: join }
+        Batcher { handle: BatcherHandle { lanes }, _join: join }
     }
 
     /// A cheap, cloneable submission handle.
@@ -103,37 +234,62 @@ fn worker(
     dataset: String,
     model: String,
     cfg: BatcherConfig,
-    rx: mpsc::Receiver<Item>,
+    lanes: Arc<Lanes>,
 ) {
+    // Register BEFORE the first scan: a submit that misses the handle
+    // here happened before this thread ran, so the scan below sees its
+    // item; every later submit unparks us.
+    lanes
+        .worker
+        .set(std::thread::current())
+        .expect("batcher worker registers once");
+    let n = lanes.queues.len();
+    let mut home = 0usize;
     loop {
-        // Block for the first item of the next batch.
-        let first = match rx.recv() {
-            Ok(i) => i,
-            Err(_) => break, // all handles dropped
-        };
         // Rows are *moved* into the engine call and replies are kept in a
         // parallel, index-aligned vec — the worker never copies a token
         // row (they were cloned per request before PR 1).
         let mut rows: Vec<Vec<i32>> = Vec::with_capacity(cfg.max_batch);
         let mut replies: Vec<mpsc::SyncSender<Result<Vec<f32>>>> =
             Vec::with_capacity(cfg.max_batch);
-        rows.push(first.row);
-        replies.push(first.reply);
+
+        // Phase 1: park until the first item of the next batch arrives
+        // (or every handle is gone and the lanes are drained).
+        loop {
+            lanes.take_available(home, cfg.max_batch, &mut rows, &mut replies);
+            if !rows.is_empty() {
+                break;
+            }
+            if lanes.handles.load(Ordering::SeqCst) == 0 {
+                // Final sweep: a push by the last handle happened before
+                // its drop, so observing 0 handles means this scan sees
+                // every item that will ever arrive.
+                lanes.take_available(home, cfg.max_batch, &mut rows, &mut replies);
+                if rows.is_empty() {
+                    return;
+                }
+                break;
+            }
+            // A submit between the scan above and this park left an
+            // unpark token, so the park returns immediately — no lost
+            // wakeup. Spurious returns just rescan.
+            std::thread::park();
+        }
+
+        // Phase 2: hold the batch open for stragglers (across ALL lanes —
+        // the steal sweep keeps filling from whichever lane has traffic).
         let deadline = Instant::now() + cfg.max_wait;
         while rows.len() < cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(item) => {
-                    rows.push(item.row);
-                    replies.push(item.reply);
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
+            std::thread::park_timeout(deadline - now);
+            lanes.take_available(home, cfg.max_batch, &mut rows, &mut replies);
         }
+        // Rotate the home lane so no lane is systematically drained last.
+        home = (home + 1) % n;
+
         match engine.execute_batch(&dataset, &model, rows) {
             Ok(outs) => {
                 for (reply, out) in replies.into_iter().zip(outs) {
@@ -173,14 +329,19 @@ mod tests {
     }
 
     /// The PR-1 rewrite keys replies by index instead of cloning rows —
-    /// prove every concurrent submitter gets the reply for *its own* row.
+    /// prove every concurrent submitter gets the reply for *its own* row,
+    /// now across multiple submission lanes.
     #[test]
     fn concurrent_submitters_get_their_own_replies() {
         let batcher = Batcher::spawn(
             echo_engine(),
             "toy".into(),
             "m".into(),
-            BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+                lanes: 4,
+            },
         );
         let h = batcher.handle();
         let mut clients = Vec::new();
@@ -210,7 +371,11 @@ mod tests {
             echo_engine(),
             "toy".into(),
             "m".into(),
-            BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(5) },
+            BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(5),
+                lanes: 2,
+            },
         );
         let t0 = Instant::now();
         let out = batcher.handle().submit(vec![42]).expect("submit");
@@ -237,7 +402,11 @@ mod tests {
             engine,
             "toy".into(),
             "m".into(),
-            BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(50) },
+            BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(50),
+                lanes: 4,
+            },
         );
         let h = batcher.handle();
         let mut clients = Vec::new();
@@ -273,7 +442,11 @@ mod tests {
             engine,
             "toy".into(),
             "m".into(),
-            BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(20) },
+            BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(20),
+                lanes: 4,
+            },
         );
         let h = batcher.handle();
         let pending: Vec<_> = (0..12i32)
@@ -287,6 +460,56 @@ mod tests {
         assert!(n_calls < 12, "12 in-flight rows should coalesce, saw {n_calls} calls");
     }
 
+    /// The work-stealing drain: rows submitted from several threads —
+    /// which pin to several different lanes — must still coalesce into
+    /// shared engine calls, i.e. one batch picks up items across lanes
+    /// instead of serving each lane in isolation.
+    #[test]
+    fn work_stealing_drain_batches_across_lanes() {
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let calls_in = calls.clone();
+        let engine = EngineHandle::simulated(move |_, _, rows| {
+            calls_in.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(5));
+            Ok(rows.iter().map(|r| vec![r[0] as f32]).collect())
+        });
+        let batcher = Batcher::spawn(
+            engine,
+            "toy".into(),
+            "m".into(),
+            BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(50),
+                lanes: 8,
+            },
+        );
+        let h = batcher.handle();
+        let mut clients = Vec::new();
+        for c in 0..8i32 {
+            let h = h.clone();
+            clients.push(std::thread::spawn(move || {
+                // Each thread (hence each lane) keeps several rows in
+                // flight so the drain has cross-lane work to steal.
+                let pending: Vec<_> = (0..4i32)
+                    .map(|j| h.submit_async(vec![c * 100 + j]).expect("submit"))
+                    .collect();
+                for (j, rx) in pending.into_iter().enumerate() {
+                    let out = rx.recv().expect("reply").expect("row");
+                    assert_eq!(out[0] as i32, c * 100 + j as i32);
+                }
+            }));
+        }
+        for t in clients {
+            t.join().expect("client");
+        }
+        let n_calls = calls.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(
+            n_calls < 8,
+            "32 rows from 8 lanes must coalesce across lanes \
+             (saw {n_calls} engine calls for 8 submitting threads)"
+        );
+    }
+
     /// An engine failure fans the error out to every submitter in the
     /// batch instead of wedging them.
     #[test]
@@ -296,7 +519,11 @@ mod tests {
             engine,
             "toy".into(),
             "m".into(),
-            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(20) },
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(20),
+                lanes: 2,
+            },
         );
         let h = batcher.handle();
         let mut clients = Vec::new();
@@ -329,7 +556,11 @@ mod tests {
             engine,
             "toy".into(),
             "m".into(),
-            BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(100) },
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                lanes: 1,
+            },
         );
         let h = batcher.handle();
         let err = h.submit(vec![1]).expect_err("first batch fails");

@@ -238,11 +238,18 @@ impl ObservationWindow {
     /// A window whose snapshots decay-weight rows by age. A non-finite or
     /// non-positive half-life means "no decay" (hard ring).
     pub fn with_half_life(n_models: usize, cap: usize, half_life: Option<f64>) -> Self {
+        let cap = cap.max(1);
         ObservationWindow {
             n_models,
-            cap: cap.max(1),
+            cap,
             half_life: half_life.filter(|h| h.is_finite() && *h > 0.0),
-            rows: Mutex::new(VecDeque::new()),
+            // Preallocate the ring at capacity: `push` holds the lock on
+            // the serving hot path, and a growth realloc under that lock
+            // would stall every concurrent answer. The ring never exceeds
+            // `cap` rows (pop-before-push when full), so after this no
+            // push ever reallocates. Pinned by
+            // `window_ring_never_reallocates_after_construction`.
+            rows: Mutex::new(VecDeque::with_capacity(cap)),
             total: AtomicU64::new(0),
         }
     }
@@ -623,6 +630,33 @@ mod tests {
             ObservationWindow::with_half_life(1, 8, Some(f64::NAN)).half_life(),
             None
         );
+    }
+
+    /// The ring is preallocated at capacity and `push` pops before it
+    /// pushes, so the backing buffer must never grow — not during
+    /// warmup, not at steady state. A realloc here would happen under
+    /// the hot-path lock.
+    #[test]
+    fn window_ring_never_reallocates_after_construction() {
+        let w = ObservationWindow::new(1, 64);
+        let cap0 = w.rows.lock().unwrap().capacity();
+        assert!(cap0 >= 64, "ring preallocated at construction");
+        for i in 0..256u32 {
+            w.push(Observation {
+                label: 0,
+                input_tokens: i,
+                preds: vec![0],
+                scores: vec![0.5],
+                correct: vec![true],
+            })
+            .unwrap();
+            assert_eq!(
+                w.rows.lock().unwrap().capacity(),
+                cap0,
+                "push #{i} grew the ring buffer"
+            );
+        }
+        assert_eq!(w.len(), 64);
     }
 
     #[test]

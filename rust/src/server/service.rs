@@ -15,9 +15,12 @@
 //! plan through the [`QueryCtx`] built around that snapshot, so a
 //! concurrent swap can never mix stages, costs, or models from two plans
 //! inside one answer. Publishers (`swap_plan` / the `server::reoptimizer`
-//! loop) build the new bundle *outside* the lock and swap a single
-//! pointer under a write lock held for nanoseconds; readers clone the
-//! `Arc` under the read lock, so they never wait on plan construction.
+//! loop) build the new bundle *outside* any lock and install it through a
+//! wait-free [`SnapshotCell`] — readers never take a lock at all (two
+//! atomics and an `Arc` clone), so a swap storm cannot convoy the answer
+//! path; publishers serialize only among themselves. The live
+//! [`CostModel`] gets the same treatment: [`FrugalService::reprice`] is a
+//! read-modify-write on a snapshot cell, and billing reads never block.
 //! Every publish is recorded as a [`SwapEvent`] for the swap-history
 //! report.
 //!
@@ -34,7 +37,7 @@
 //! misses, never a wrong-generation hit.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -48,7 +51,7 @@ use crate::runtime::EngineHandle;
 use crate::server::health::{HealthConfig, ModelHealth};
 use crate::server::metrics::{Observation, ServiceMetrics};
 use crate::server::shadow::{Shadow, ShadowConfig, ShadowSnapshot};
-use crate::strategies::cache::{CacheStats, CompletionCache};
+use crate::strategies::cache::{CacheStats, ShardedCache};
 use crate::strategies::concat;
 use crate::strategies::pipeline::{
     build_pipeline, plan_accepts_cached, Pipeline, PipelineSpec, QueryCtx, StageDeps,
@@ -56,6 +59,7 @@ use crate::strategies::pipeline::{
 };
 use crate::strategies::prompt::PromptPolicy;
 use crate::util::json::Value;
+use crate::util::sync::SnapshotCell;
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -67,6 +71,19 @@ pub struct ServiceConfig {
     pub cache_capacity: usize,
     /// Similarity threshold for the cache's MinHash tier (≥1.0 = exact only).
     pub cache_min_similarity: f64,
+    /// Ways the completion cache is sharded (0 = next power of two ≥ core
+    /// count; rounded up to a power of two). Concurrent answers on
+    /// different shards never contend — see
+    /// [`crate::strategies::cache::ShardedCache`].
+    pub cache_shards: usize,
+    /// Promote a cache entry on every T-th hit only (1 = exact LRU; see
+    /// [`crate::strategies::cache::CompletionCache::with_touch_period`]).
+    pub cache_touch_period: u32,
+    /// Bench-only baseline: run the plan handle and cost model behind the
+    /// `RwLock` they used before the wait-free snapshot cells, so
+    /// `benches/serve_hot_path.rs` can measure the contention the cells
+    /// removed on the identical code path. Never set in production.
+    pub baseline_locks: bool,
     /// Prompt-adaptation policy of the `prompt` stage (Fig. 2a).
     pub prompt_policy: PromptPolicy,
     /// Optional hard budget cap (USD); when reached the `budget` stage
@@ -102,6 +119,9 @@ impl Default for ServiceConfig {
             cache_enabled: true,
             cache_capacity: 4096,
             cache_min_similarity: 1.0,
+            cache_shards: 0,
+            cache_touch_period: 1,
+            baseline_locks: false,
             prompt_policy: PromptPolicy::Full,
             budget_cap_usd: None,
             window_capacity: 4096,
@@ -264,27 +284,34 @@ impl SwapEvent {
 }
 
 /// Shared, atomically swappable handle to the current [`PlanBundle`].
+/// Reads are wait-free ([`SnapshotCell`]); publishers serialize among
+/// themselves through the history mutex, which also keeps the recorded
+/// [`SwapEvent`]s strictly version-ordered with the installs.
 pub struct PlanHandle {
-    current: RwLock<Arc<PlanBundle>>,
+    current: SnapshotCell<PlanBundle>,
     next_version: AtomicU64,
     history: Mutex<Vec<SwapEvent>>,
 }
 
 impl PlanHandle {
-    fn new(initial: PlanBundle) -> PlanHandle {
+    fn new(initial: PlanBundle, baseline_locks: bool) -> PlanHandle {
         let v0 = initial.version;
+        let initial = Arc::new(initial);
         PlanHandle {
-            current: RwLock::new(Arc::new(initial)),
+            current: if baseline_locks {
+                SnapshotCell::new_rwlock_baseline(initial)
+            } else {
+                SnapshotCell::new(initial)
+            },
             next_version: AtomicU64::new(v0 + 1),
             history: Mutex::new(Vec::new()),
         }
     }
 
-    /// The current bundle. Read-lock held only to clone the `Arc` — a
-    /// concurrent publish never blocks answering for longer than that
-    /// pointer copy.
+    /// The current bundle. Wait-free: two atomics and an `Arc` clone — a
+    /// concurrent publish never blocks answering at all.
     pub fn snapshot(&self) -> Arc<PlanBundle> {
-        self.current.read().unwrap().clone()
+        self.current.load()
     }
 
     /// Version of the currently served bundle.
@@ -300,16 +327,18 @@ impl PlanHandle {
     /// Install `bundle` if its version is still the newest. Returns
     /// whether it was installed; a publish that lost the version race is
     /// dropped entirely (no history entry — it never served traffic).
-    /// The history push happens under the same write lock, so the
-    /// recorded events are strictly version-ordered.
+    /// The history mutex is held across the install, so the recorded
+    /// events are strictly version-ordered; readers never touch it.
     fn publish(&self, bundle: PlanBundle, event: SwapEvent) -> bool {
-        let bundle = Arc::new(bundle);
-        let mut cur = self.current.write().unwrap();
-        if cur.version >= bundle.version {
+        let version = bundle.version;
+        let mut history = self.history.lock().unwrap();
+        if !self
+            .current
+            .store_if(Arc::new(bundle), |cur| cur.version < version)
+        {
             return false;
         }
-        *cur = bundle;
-        self.history.lock().unwrap().push(event);
+        history.push(event);
         true
     }
 
@@ -324,13 +353,15 @@ impl PlanHandle {
 pub struct FrugalService {
     plans: PlanHandle,
     engine: EngineHandle,
-    /// Live marketplace pricing. Behind an `RwLock` because the market
-    /// can *reprice* mid-serve ([`FrugalService::reprice`]); the answer
-    /// path never touches it (each plan bundle bills through its own
-    /// frozen copy — one-snapshot-per-answer extends to prices).
-    costs: RwLock<CostModel>,
-    /// The completion cache behind the `cache` stage (`None` = disabled).
-    cache: Option<Arc<Mutex<CompletionCache>>>,
+    /// Live marketplace pricing, behind a wait-free snapshot cell because
+    /// the market can *reprice* mid-serve ([`FrugalService::reprice`]);
+    /// the answer path never touches it (each plan bundle bills through
+    /// its own frozen copy — one-snapshot-per-answer extends to prices),
+    /// and readers of the live model never block on a reprice.
+    costs: SnapshotCell<CostModel>,
+    /// The sharded completion cache behind the `cache` stage (`None` =
+    /// disabled). Internally synchronized per shard — no outer lock.
+    cache: Option<Arc<ShardedCache>>,
     /// The composed strategy stack every answer walks.
     pipeline: Pipeline,
     cfg: ServiceConfig,
@@ -389,10 +420,12 @@ impl FrugalService {
             None => None,
         };
         let cache = cfg.cache_enabled.then(|| {
-            Arc::new(Mutex::new(CompletionCache::new(
+            Arc::new(ShardedCache::new(
+                cfg.cache_shards,
                 cfg.cache_capacity.max(1),
                 cfg.cache_min_similarity,
-            )))
+                cfg.cache_touch_period.max(1),
+            ))
         });
         let budget = Arc::new(BudgetTracker::new(cfg.budget_cap_usd));
         let pipeline = build_pipeline(
@@ -405,15 +438,20 @@ impl FrugalService {
                 metrics: metrics.clone(),
             },
         )?;
+        let costs = if cfg.baseline_locks {
+            SnapshotCell::new_rwlock_baseline(Arc::new(costs))
+        } else {
+            SnapshotCell::new(Arc::new(costs))
+        };
         Ok(FrugalService {
-            plans: PlanHandle::new(initial),
+            plans: PlanHandle::new(initial, cfg.baseline_locks),
             engine,
             cache,
             pipeline,
             budget,
             metrics,
             cfg,
-            costs: RwLock::new(costs),
+            costs,
             meta,
             shadow,
             health,
@@ -457,9 +495,10 @@ impl FrugalService {
         self.pipeline.metrics_snapshot()
     }
 
-    /// Completion-cache counters, when the cache stage is enabled.
+    /// Completion-cache counters (aggregated across shards), when the
+    /// cache stage is enabled.
     pub fn cache_stats(&self) -> Option<CacheStats> {
-        self.cache.as_ref().map(|c| c.lock().unwrap().stats())
+        self.cache.as_ref().map(|c| c.stats())
     }
 
     /// Build and atomically publish a new plan. The bundle (cascade
@@ -479,7 +518,7 @@ impl FrugalService {
         window_stats: Option<(f64, f64)>,
     ) -> Result<u64> {
         let version = self.plans.reserve_version();
-        let costs = self.costs.read().unwrap().clone();
+        let costs = self.costs.load();
         let bundle = PlanBundle::build(
             plan.clone(),
             version,
@@ -508,12 +547,11 @@ impl FrugalService {
         // generation; the rest are invalidated. Entries an in-flight
         // answer from the superseded bundle inserts after this sweep stay
         // stamped with the OLD version, so the generation-filtered lookup
-        // never serves them — no blanket flush, no recheck dance.
+        // never serves them — no blanket flush, no recheck dance. The
+        // sweep walks shards one at a time, so lookups on other shards
+        // keep flowing while it runs.
         if let Some(cache) = &self.cache {
-            cache
-                .lock()
-                .unwrap()
-                .retain_and_restamp(version, |ans| plan_accepts_cached(&plan, ans));
+            cache.retain_and_restamp(version, |ans| plan_accepts_cached(&plan, ans));
         }
         Ok(version)
     }
@@ -619,7 +657,7 @@ impl FrugalService {
     /// copy — the live pricing may be [`FrugalService::reprice`]d at any
     /// time).
     pub fn costs(&self) -> CostModel {
-        self.costs.read().unwrap().clone()
+        (*self.costs.load()).clone()
     }
 
     /// The per-model health registry, when the health layer is on.
@@ -636,7 +674,11 @@ impl FrugalService {
     /// at launch prices (its worker holds its own copy) — a known,
     /// documented approximation.
     pub fn reprice(&self, model: usize, mult: f64, reason: &str) -> Result<u64> {
-        self.costs.write().unwrap().scale_pricing(model, mult)?;
+        self.costs.update(|c| {
+            let mut next = c.clone();
+            next.scale_pricing(model, mult)?;
+            Ok::<_, anyhow::Error>(next)
+        })?;
         self.publish_plan(self.plan(), reason, None)
     }
 }

@@ -27,10 +27,31 @@
 //! re-stamped to the new generation so the warm set carries across the
 //! swap, everything else is invalidated. This replaces the old blanket
 //! `clear()`-on-swap, whose hit rate restarted from zero on every swap.
+//!
+//! §Sharding — [`ShardedCache`] partitions the key space N ways by a
+//! splitmix64 re-mix of the exact key, one [`CompletionCache`] (own
+//! intrusive LRU, own generation sweep, own [`CacheStats`]) behind a
+//! short mutex per shard. Concurrent lookups on different shards never
+//! contend, the plan-swap sweep walks shards independently, and stats
+//! aggregate on read so serve/report summaries are unchanged. With one
+//! shard it IS the single cache (the equivalence is property-tested in
+//! `tests/cache_sharding.rs`). The similar tier becomes shard-local for
+//! N > 1: a near-duplicate query is only found if it hashes to the same
+//! shard as the original — the exact tier (the default; the similar tier
+//! is opt-in via `--cache-similar`) partitions losslessly.
+//!
+//! §Sampled touch — a hit-heavy shard is still write-bound if every hit
+//! promotes its entry (the LRU touch takes `&mut`). A cache built with
+//! [`CompletionCache::with_touch_period`]`(T)` promotes only every T-th
+//! hit (per-cache hit counter, deterministic): T=1 (the default) is
+//! exact LRU — pinned by `sampled_touch_t1_is_exact_lru` — and larger T
+//! trades eviction-order fidelity for hit-path writes, never
+//! correctness (the hit set is unaffected; only recency order coarsens).
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
 
 /// Number of MinHash permutations (signature size).
 const SIGNATURE: usize = 16;
@@ -114,6 +135,10 @@ pub struct CompletionCache {
     lru_tail: usize,
     free: Vec<usize>,
     stats: CacheStats,
+    /// Promote an entry on every T-th hit only (1 = exact LRU).
+    touch_period: u32,
+    /// Hits seen, for the sampled-touch schedule.
+    hit_ticks: u64,
 }
 
 impl CompletionCache {
@@ -132,6 +157,26 @@ impl CompletionCache {
             lru_tail: NIL,
             free: Vec::new(),
             stats: CacheStats::default(),
+            touch_period: 1,
+            hit_ticks: 0,
+        }
+    }
+
+    /// Sampled-touch mode: promote an entry on every `period`-th hit
+    /// instead of every hit, so hit-heavy workloads are not write-bound
+    /// on the recency list. `period` = 1 (the default) reproduces exact
+    /// LRU order bit-for-bit.
+    pub fn with_touch_period(mut self, period: u32) -> Self {
+        assert!(period >= 1, "touch period must be at least 1");
+        self.touch_period = period;
+        self
+    }
+
+    /// Promote `slot` if this hit falls on the sampled-touch schedule.
+    fn sampled_touch(&mut self, slot: usize) {
+        self.hit_ticks = self.hit_ticks.wrapping_add(1);
+        if self.touch_period == 1 || self.hit_ticks % self.touch_period as u64 == 0 {
+            self.touch(slot);
         }
     }
 
@@ -176,7 +221,7 @@ impl CompletionCache {
             let stamped = self.slots[slot].as_ref().unwrap().answer.plan_version;
             if stamped == generation {
                 self.stats.exact_hits += 1;
-                self.touch(slot);
+                self.sampled_touch(slot);
                 return Some(self.slots[slot].as_ref().unwrap().answer.clone());
             }
             if stamped < generation {
@@ -208,7 +253,7 @@ impl CompletionCache {
             }
             if let Some((slot, _)) = best {
                 self.stats.similar_hits += 1;
-                self.touch(slot);
+                self.sampled_touch(slot);
                 return Some(self.slots[slot].as_ref().unwrap().answer.clone());
             }
         }
@@ -322,6 +367,124 @@ impl CompletionCache {
             self.free.push(slot);
             self.stats.evictions += 1;
         }
+    }
+}
+
+/// Next power of two ≥ the machine's core count: the default shard count
+/// for [`ShardedCache`], so a full complement of serving threads maps
+/// ~1:1 onto shards.
+pub fn default_cache_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .next_power_of_two()
+}
+
+/// An N-way sharded completion cache: the key space is partitioned by a
+/// splitmix64 re-mix of the exact key, each shard is a full
+/// [`CompletionCache`] (own intrusive LRU, own generation sweep, own
+/// stats) behind its own short mutex. Internally synchronized — the
+/// serving layer shares it as a bare `Arc`, and lookups on different
+/// shards proceed concurrently. See the module docs (§Sharding) for the
+/// similar-tier caveat at N > 1.
+pub struct ShardedCache {
+    shards: Vec<Mutex<CompletionCache>>,
+    /// `shards.len() - 1`; shard count is always a power of two.
+    mask: u64,
+}
+
+impl ShardedCache {
+    /// A cache of `shards` ways (0 ⇒ [`default_cache_shards`]; rounded up
+    /// to a power of two) holding `capacity` entries in total, split
+    /// evenly across shards. `min_similarity` and `touch_period` apply
+    /// per shard exactly as on [`CompletionCache`].
+    pub fn new(
+        shards: usize,
+        capacity: usize,
+        min_similarity: f64,
+        touch_period: u32,
+    ) -> Self {
+        assert!(capacity > 0);
+        let n = if shards == 0 { default_cache_shards() } else { shards }
+            .next_power_of_two();
+        let per_shard = capacity.div_ceil(n).max(1);
+        ShardedCache {
+            shards: (0..n)
+                .map(|_| {
+                    Mutex::new(
+                        CompletionCache::new(per_shard, min_similarity)
+                            .with_touch_period(touch_period),
+                    )
+                })
+                .collect(),
+            mask: (n - 1) as u64,
+        }
+    }
+
+    /// Number of shards (a power of two).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard a query's exact key lands on (the splitmix64 re-mix of
+    /// the exact hash, masked). Exposed so the sharding property test can
+    /// drive a per-shard reference model.
+    pub fn shard_of(&self, query: &[i32]) -> usize {
+        (crate::util::rng::splitmix64_mix(exact_key(query)) & self.mask) as usize
+    }
+
+    /// Look up a query for the caller's current plan `generation` on its
+    /// shard. Locks exactly one shard.
+    pub fn get(&self, query: &[i32], generation: u64) -> Option<CachedAnswer> {
+        let s = self.shard_of(query);
+        self.shards[s].lock().unwrap().get(query, generation)
+    }
+
+    /// Insert (or overwrite) a completion on the query's shard.
+    pub fn put(&self, query: &[i32], answer: CachedAnswer) {
+        let s = self.shard_of(query);
+        self.shards[s].lock().unwrap().put(query, answer)
+    }
+
+    /// The plan-swap sweep, shard by shard: each shard is locked, swept
+    /// with [`CompletionCache::retain_and_restamp`], and released before
+    /// the next — answer-path lookups on other shards are never stalled
+    /// behind the whole sweep. Returns total survivors.
+    pub fn retain_and_restamp(
+        &self,
+        generation: u64,
+        mut keep: impl FnMut(&CachedAnswer) -> bool,
+    ) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().retain_and_restamp(generation, &mut keep))
+            .sum()
+    }
+
+    /// Aggregate counter snapshot across shards — serve/report summaries
+    /// read the same totals a single cache would produce.
+    pub fn stats(&self) -> CacheStats {
+        let mut agg = CacheStats::default();
+        for s in &self.shards {
+            let st = s.lock().unwrap().stats();
+            agg.lookups += st.lookups;
+            agg.exact_hits += st.exact_hits;
+            agg.similar_hits += st.similar_hits;
+            agg.insertions += st.insertions;
+            agg.evictions += st.evictions;
+            agg.invalidations += st.invalidations;
+        }
+        agg
+    }
+
+    /// Entries currently cached across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Whether no shard holds any entry.
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
     }
 }
 
@@ -576,5 +739,123 @@ mod tests {
         assert_eq!(signature_similarity(&a, &a), 1.0);
         let b = minhash(&q(6, 64));
         assert!(signature_similarity(&a, &b) < 0.8);
+    }
+
+    /// Satellite pin: touch period 1 (the default) must reproduce exact
+    /// LRU order — same model-based check as `lru_order_matches_naive_model`
+    /// but with the sampled-touch path explicitly engaged.
+    #[test]
+    fn sampled_touch_t1_is_exact_lru() {
+        use crate::util::rng::Rng;
+        let cap = 7;
+        let mut c = CompletionCache::new(cap, 1.0).with_touch_period(1);
+        let mut model: std::collections::VecDeque<i32> = Default::default();
+        let mut rng = Rng::new(0xBEEF);
+        for step in 0..4000 {
+            let id = rng.below(30) as i32;
+            if rng.bool(0.5) {
+                c.put(&q(id, 8), CachedAnswer::fresh(id as u32, 0.5));
+                if let Some(pos) = model.iter().position(|&k| k == id) {
+                    model.remove(pos);
+                } else if model.len() == cap {
+                    model.pop_front();
+                }
+                model.push_back(id);
+            } else {
+                let hit = c.get(&q(id, 8), 0).is_some();
+                assert_eq!(hit, model.contains(&id), "step {step}: hit mismatch");
+                if let Some(pos) = model.iter().position(|&k| k == id) {
+                    model.remove(pos);
+                    model.push_back(id);
+                }
+            }
+            assert_eq!(c.len(), model.len(), "step {step}: size drifted");
+        }
+    }
+
+    /// With a huge touch period, hits never promote: eviction runs in
+    /// pure insertion order even though every entry was hit — the hit SET
+    /// is unchanged, only recency order coarsens.
+    #[test]
+    fn sampled_touch_skips_promotion_between_samples() {
+        let mut c = CompletionCache::new(2, 1.0).with_touch_period(u32::MAX);
+        c.put(&q(1, 8), CachedAnswer::fresh(1, 0.5));
+        c.put(&q(2, 8), CachedAnswer::fresh(2, 0.5));
+        // Hit entry 1 repeatedly; an exact-LRU cache would protect it.
+        for _ in 0..10 {
+            assert!(c.get(&q(1, 8), 0).is_some(), "hit set must be unaffected");
+        }
+        c.put(&q(3, 8), CachedAnswer::fresh(3, 0.5));
+        assert!(
+            c.get(&q(1, 8), 0).is_none(),
+            "unsampled hits must not promote: 1 stays oldest and evicts"
+        );
+        assert!(c.get(&q(2, 8), 0).is_some());
+    }
+
+    /// The deterministic 1-in-T schedule: with T=2 every second hit
+    /// promotes, so two hits on the oldest entry save it exactly when the
+    /// second hit lands.
+    #[test]
+    fn sampled_touch_period_two_promotes_every_second_hit() {
+        let mut c = CompletionCache::new(2, 1.0).with_touch_period(2);
+        c.put(&q(1, 8), CachedAnswer::fresh(1, 0.5));
+        c.put(&q(2, 8), CachedAnswer::fresh(2, 0.5));
+        // Hit 1 twice: tick 1 (skipped), tick 2 (touches → 2 now oldest).
+        assert!(c.get(&q(1, 8), 0).is_some());
+        assert!(c.get(&q(1, 8), 0).is_some());
+        c.put(&q(3, 8), CachedAnswer::fresh(3, 0.5));
+        assert!(c.get(&q(2, 8), 0).is_none(), "2 evicts after 1's sampled touch");
+        assert!(c.get(&q(1, 8), 0).is_some());
+    }
+
+    #[test]
+    fn sharded_cache_roundtrip_and_aggregate_stats() {
+        let c = ShardedCache::new(4, 64, 1.0, 1);
+        assert_eq!(c.shard_count(), 4);
+        assert!(c.is_empty());
+        for id in 0..32 {
+            c.put(&q(id, 8), CachedAnswer::fresh(id as u32, 0.5));
+        }
+        assert_eq!(c.len(), 32);
+        for id in 0..32 {
+            assert_eq!(c.get(&q(id, 8), 0).unwrap().answer, id as u32);
+        }
+        let st = c.stats();
+        assert_eq!(st.insertions, 32);
+        assert_eq!(st.exact_hits, 32);
+        assert_eq!(st.lookups, 32);
+    }
+
+    #[test]
+    fn sharded_cache_rounds_up_and_defaults_shards() {
+        assert_eq!(ShardedCache::new(3, 16, 1.0, 1).shard_count(), 4);
+        let auto = ShardedCache::new(0, 16, 1.0, 1);
+        assert_eq!(auto.shard_count(), default_cache_shards());
+        assert!(auto.shard_count().is_power_of_two());
+    }
+
+    #[test]
+    fn sharded_sweep_restamps_across_all_shards() {
+        let c = ShardedCache::new(4, 64, 1.0, 1);
+        for id in 0..24 {
+            c.put(
+                &q(id, 8),
+                CachedAnswer {
+                    answer: id as u32,
+                    score: 0.5,
+                    model: Some(id as usize % 3),
+                    plan_version: 0,
+                },
+            );
+        }
+        let kept = c.retain_and_restamp(1, |a| a.model == Some(1));
+        assert_eq!(kept, 8, "ids ≡ 1 (mod 3) survive regardless of shard");
+        assert_eq!(c.len(), 8);
+        for id in (0..24).filter(|i| i % 3 == 1) {
+            let hit = c.get(&q(id, 8), 1).expect("survivor serves new generation");
+            assert_eq!(hit.plan_version, 1);
+        }
+        assert_eq!(c.stats().invalidations, 16);
     }
 }

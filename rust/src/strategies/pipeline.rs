@@ -26,7 +26,7 @@
 
 use std::borrow::Cow;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -36,7 +36,7 @@ use crate::data::{prompt, DatasetMeta};
 use crate::server::metrics::ServiceMetrics;
 use crate::server::service::PlanBundle;
 use crate::server::shadow::Shadow;
-use crate::strategies::cache::{CachedAnswer, CompletionCache};
+use crate::strategies::cache::{CachedAnswer, ShardedCache};
 use crate::strategies::concat;
 use crate::strategies::prompt::PromptPolicy;
 use crate::util::json::Value;
@@ -403,9 +403,10 @@ impl PipelineSpec {
 
 /// Shared service state the stage constructors borrow from.
 pub struct StageDeps {
-    /// The completion cache (`None` = cache disabled; the stage is then
-    /// skipped even if the spec names it).
-    pub cache: Option<Arc<Mutex<CompletionCache>>>,
+    /// The sharded completion cache (`None` = cache disabled; the stage
+    /// is then skipped even if the spec names it). Internally
+    /// synchronized per shard — no outer lock.
+    pub cache: Option<Arc<ShardedCache>>,
     /// The shadow tap (`None` = shadow off; the stage is then skipped).
     pub shadow: Option<Arc<Shadow>>,
     /// Prompt-adaptation policy for the `prompt` stage.
@@ -477,9 +478,11 @@ pub fn plan_accepts_cached(plan: &CascadePlan, ans: &CachedAnswer) -> bool {
 
 /// Completion cache (paper Fig. 2c) as a stage: answers repeats for $0,
 /// populates from later stages' answers. Keys on the *original* tokens
-/// and serves only entries of the snapshot's plan generation.
+/// and serves only entries of the snapshot's plan generation. The cache
+/// is sharded by query hash, so concurrent lookups on different shards
+/// never contend on one lock.
 struct CacheStage {
-    cache: Arc<Mutex<CompletionCache>>,
+    cache: Arc<ShardedCache>,
     metrics: Arc<ServiceMetrics>,
 }
 
@@ -489,11 +492,7 @@ impl Strategy for CacheStage {
     }
 
     fn on_query(&self, ctx: &mut QueryCtx) -> Result<Decision> {
-        let hit = self
-            .cache
-            .lock()
-            .unwrap()
-            .get(ctx.original, ctx.bundle.version());
+        let hit = self.cache.get(ctx.original, ctx.bundle.version());
         match hit {
             Some(hit) => {
                 self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -520,7 +519,7 @@ impl Strategy for CacheStage {
         if answer.model.is_none() {
             return;
         }
-        self.cache.lock().unwrap().put(
+        self.cache.put(
             ctx.original,
             CachedAnswer {
                 answer: answer.answer,

@@ -19,6 +19,9 @@ pub struct BenchResult {
     pub p50: Duration,
     /// 95th-percentile iteration time.
     pub p95: Duration,
+    /// 99th-percentile iteration time (tail — the serve-path contention
+    /// suite gates swap-storm tails on this).
+    pub p99: Duration,
     /// Slowest iteration.
     pub max: Duration,
 }
@@ -27,12 +30,13 @@ impl BenchResult {
     /// The stable one-line human-readable report.
     pub fn report(&self) -> String {
         format!(
-            "{:<32} iters={:<6} mean={:>10.3?} p50={:>10.3?} p95={:>10.3?} max={:>10.3?} ({:.1}/s)",
+            "{:<32} iters={:<6} mean={:>10.3?} p50={:>10.3?} p95={:>10.3?} p99={:>10.3?} max={:>10.3?} ({:.1}/s)",
             self.name,
             self.iters,
             self.mean,
             self.p50,
             self.p95,
+            self.p99,
             self.max,
             1.0 / self.mean.as_secs_f64().max(1e-12),
         )
@@ -41,12 +45,13 @@ impl BenchResult {
     /// One result as a JSON object (stable key order, ns-resolution).
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"name\":{},\"iters\":{},\"mean_ns\":{},\"p50_ns\":{},\"p95_ns\":{},\"max_ns\":{},\"per_sec\":{:.3}}}",
+            "{{\"name\":{},\"iters\":{},\"mean_ns\":{},\"p50_ns\":{},\"p95_ns\":{},\"p99_ns\":{},\"max_ns\":{},\"per_sec\":{:.3}}}",
             json_string(&self.name),
             self.iters,
             self.mean.as_nanos(),
             self.p50.as_nanos(),
             self.p95.as_nanos(),
+            self.p99.as_nanos(),
             self.max.as_nanos(),
             1.0 / self.mean.as_secs_f64().max(1e-12),
         )
@@ -151,6 +156,7 @@ fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
         mean: total / n as u32,
         p50: samples[n / 2],
         p95: samples[(n * 95 / 100).min(n - 1)],
+        p99: samples[(n * 99 / 100).min(n - 1)],
         max: samples[n - 1],
     }
 }
@@ -176,7 +182,8 @@ mod tests {
         });
         assert_eq!(r.iters, 50);
         assert!(r.p50 <= r.p95);
-        assert!(r.p95 <= r.max);
+        assert!(r.p95 <= r.p99);
+        assert!(r.p99 <= r.max);
         assert!(r.mean.as_nanos() > 0);
         assert!(r.report().contains("spin"));
     }
@@ -207,6 +214,7 @@ mod tests {
         );
         assert!(results[0].get("iters").as_f64().unwrap() == 3.0);
         assert!(results[0].get("mean_ns").as_f64().unwrap() > 0.0);
+        assert!(results[0].get("p99_ns").as_f64().is_some());
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! Read-mostly synchronization substrate: a hand-rolled arc-swap.
+//!
+//! The serving hot path reads the published plan (and the cost model) on
+//! EVERY answer, while writes are rare (a reoptimizer swap every N
+//! queries, a reprice on a scenario event). A `RwLock<Arc<T>>` makes
+//! every one of those reads take a lock — under a swap storm the readers
+//! convoy behind the writer and p99 answer latency spikes. This module
+//! replaces that with [`SnapshotCell`], an epoch-style double-buffered
+//! `Arc<T>` slot:
+//!
+//! * **Readers never block.** [`SnapshotCell::load`] is two atomic RMWs
+//!   and an `Arc` clone on the active slot. A reader retries its slot
+//!   acquisition only if a publish landed *between* its two atomic ops —
+//!   at most once per concurrent publish, and a publish itself waits for
+//!   the retired slot to drain, so the retry chain is bounded by the
+//!   (rare) publish rate. There is no writer-held lock a reader can ever
+//!   queue behind.
+//! * **Writers are serialized** (a `Mutex` among themselves only) and
+//!   reclamation is deferred: a publish writes the *inactive* slot, flips
+//!   the active index, and the previous `Arc` stays alive until the slot
+//!   is reused by the publish after next — readers that already entered
+//!   the old slot finish their clone safely.
+//!
+//! Safety argument (the Dekker-style pairing that makes the `unsafe`
+//! sound): a reader increments the slot's guard count and THEN re-checks
+//! the active index; a writer flips the active index and THEN waits for
+//! the retired slot's guard count to reach zero before overwriting it.
+//! All four operations are `SeqCst`, so in any interleaving either the
+//! reader's increment is visible to the writer's drain check (the writer
+//! waits) or the writer's flip is visible to the reader's re-check (the
+//! reader retries the other slot). The slot value is therefore never
+//! overwritten while a reader is cloning it.
+//!
+//! [`SnapshotCell::new_rwlock_baseline`] builds the cell in a
+//! `RwLock<Arc<T>>` compatibility mode — functionally identical, every
+//! load takes the read lock. It exists so `benches/serve_hot_path.rs`
+//! can measure the wait-free path against the exact serialization it
+//! replaced, on the same service code path (see `BENCH_serve.json`).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// One buffered slot: an `Arc<T>` guarded by a reader count.
+struct Slot<T> {
+    readers: AtomicUsize,
+    value: UnsafeCell<Arc<T>>,
+}
+
+/// The wait-free double-buffer (see module docs for the safety argument).
+struct Epoch<T> {
+    slots: [Slot<T>; 2],
+    /// Index (0/1) of the slot `load` reads; flipped by `store`.
+    active: AtomicUsize,
+    /// Serializes writers only; never touched by `load`.
+    writer: Mutex<()>,
+}
+
+enum Inner<T> {
+    WaitFree(Epoch<T>),
+    /// Bench-only baseline: the exact `RwLock<Arc<T>>` handle this cell
+    /// replaced, kept so contention benches compare like with like.
+    Baseline(RwLock<Arc<T>>),
+}
+
+/// A shared slot holding an `Arc<T>` snapshot: wait-free `load` for
+/// readers, serialized `store` for writers. The hot-path replacement for
+/// `RwLock<Arc<T>>` (plan handle, cost model).
+pub struct SnapshotCell<T> {
+    inner: Inner<T>,
+}
+
+// SAFETY: the cell hands out `Arc<T>` clones across threads (requires
+// T: Send + Sync, same bound Arc itself imposes for sharing) and the
+// UnsafeCell is only written under the writer mutex after the reader
+// guard count on that slot has drained (module-level safety argument).
+unsafe impl<T: Send + Sync> Send for SnapshotCell<T> {}
+unsafe impl<T: Send + Sync> Sync for SnapshotCell<T> {}
+
+impl<T> SnapshotCell<T> {
+    /// A wait-free cell initially holding `value`.
+    pub fn new(value: Arc<T>) -> Self {
+        SnapshotCell {
+            inner: Inner::WaitFree(Epoch {
+                slots: [
+                    Slot {
+                        readers: AtomicUsize::new(0),
+                        value: UnsafeCell::new(value.clone()),
+                    },
+                    Slot {
+                        readers: AtomicUsize::new(0),
+                        value: UnsafeCell::new(value),
+                    },
+                ],
+                active: AtomicUsize::new(0),
+                writer: Mutex::new(()),
+            }),
+        }
+    }
+
+    /// The `RwLock<Arc<T>>` compatibility mode (bench baseline only —
+    /// every `load` takes the read lock, exactly the serialization the
+    /// wait-free mode removes).
+    pub fn new_rwlock_baseline(value: Arc<T>) -> Self {
+        SnapshotCell { inner: Inner::Baseline(RwLock::new(value)) }
+    }
+
+    /// Whether this cell runs the bench-only `RwLock` baseline mode.
+    pub fn is_rwlock_baseline(&self) -> bool {
+        matches!(self.inner, Inner::Baseline(_))
+    }
+
+    /// Take a snapshot. Never blocks on a writer: two atomics plus an
+    /// `Arc` clone, with at most one slot retry per concurrent publish.
+    pub fn load(&self) -> Arc<T> {
+        match &self.inner {
+            Inner::Baseline(lock) => lock.read().unwrap().clone(),
+            Inner::WaitFree(ep) => loop {
+                let i = ep.active.load(SeqCst);
+                ep.slots[i].readers.fetch_add(1, SeqCst);
+                if ep.active.load(SeqCst) == i {
+                    // SAFETY: the guard count on slot i is non-zero and
+                    // the active index still names i, so any concurrent
+                    // publish targets the OTHER slot and any publish that
+                    // later retires this slot spins on our guard before
+                    // overwriting (module-level pairing argument).
+                    let out = unsafe { (*ep.slots[i].value.get()).clone() };
+                    ep.slots[i].readers.fetch_sub(1, SeqCst);
+                    return out;
+                }
+                // A publish flipped the active index between our two
+                // atomics; back out and read the new active slot.
+                ep.slots[i].readers.fetch_sub(1, SeqCst);
+            },
+        }
+    }
+
+    /// Publish a new snapshot unconditionally. Serialized against other
+    /// writers; readers are never blocked (they keep loading the old
+    /// snapshot until the flip, the new one after).
+    pub fn store(&self, value: Arc<T>) {
+        self.store_if(value, |_| true);
+    }
+
+    /// Publish `value` only if `accept(&current)` approves, atomically
+    /// with respect to other writers (readers stay wait-free throughout).
+    /// Returns whether the publish happened. This is the hook
+    /// compare-and-publish callers (monotone plan versions) build on.
+    pub fn store_if(&self, value: Arc<T>, accept: impl FnOnce(&T) -> bool) -> bool {
+        match &self.inner {
+            Inner::Baseline(lock) => {
+                let mut cur = lock.write().unwrap();
+                if !accept(&cur) {
+                    return false;
+                }
+                *cur = value;
+                true
+            }
+            Inner::WaitFree(ep) => {
+                let _serialize = ep.writer.lock().unwrap();
+                let cur = ep.active.load(SeqCst);
+                // SAFETY: the writer mutex is held, so no publish is
+                // concurrently overwriting either slot; readers only
+                // clone from the active slot, never write it.
+                if !accept(unsafe { &*ep.slots[cur].value.get() }) {
+                    return false;
+                }
+                let next = 1 - cur;
+                // Drain readers that entered the retired slot before the
+                // PREVIOUS flip; they only ever clone, and each holds the
+                // guard for an Arc-clone's worth of work, so this spin is
+                // short and bounded.
+                while ep.slots[next].readers.load(SeqCst) != 0 {
+                    std::hint::spin_loop();
+                }
+                // SAFETY: guard count is zero and, with the active index
+                // still pointing at `cur`, every future reader either
+                // lands on `cur` or re-checks and retries — no reader can
+                // be cloning `next` past the drain above.
+                unsafe {
+                    *ep.slots[next].value.get() = value;
+                }
+                ep.active.store(next, SeqCst);
+                true
+            }
+        }
+    }
+
+    /// Serialized read-modify-write: clone the current value, let `f`
+    /// rebuild it, publish the result. Readers stay wait-free and see
+    /// either the old or the new snapshot, never a partial one. Returns
+    /// `f`'s error without publishing.
+    pub fn update<E>(
+        &self,
+        f: impl FnOnce(&T) -> Result<T, E>,
+    ) -> Result<(), E> {
+        match &self.inner {
+            Inner::Baseline(lock) => {
+                let mut cur = lock.write().unwrap();
+                let next = f(&cur)?;
+                *cur = Arc::new(next);
+                Ok(())
+            }
+            Inner::WaitFree(ep) => {
+                // `f` must run under the writer mutex: two racing updates
+                // staged outside it would lose one of the writes.
+                let _serialize = ep.writer.lock().unwrap();
+                let cur = ep.active.load(SeqCst);
+                // SAFETY: writer mutex held; see store_if.
+                let next = f(unsafe { &*ep.slots[cur].value.get() })?;
+                let next_slot = 1 - cur;
+                while ep.slots[next_slot].readers.load(SeqCst) != 0 {
+                    std::hint::spin_loop();
+                }
+                // SAFETY: same drain argument as store_if.
+                unsafe {
+                    *ep.slots[next_slot].value.get() = Arc::new(next);
+                }
+                ep.active.store(next_slot, SeqCst);
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::thread;
+
+    #[test]
+    fn load_store_roundtrip_both_modes() {
+        for cell in [
+            SnapshotCell::new(Arc::new(1u64)),
+            SnapshotCell::new_rwlock_baseline(Arc::new(1u64)),
+        ] {
+            assert_eq!(*cell.load(), 1);
+            cell.store(Arc::new(7));
+            assert_eq!(*cell.load(), 7);
+            cell.store(Arc::new(8));
+            cell.store(Arc::new(9));
+            assert_eq!(*cell.load(), 9);
+        }
+    }
+
+    #[test]
+    fn store_if_rejects_without_publishing() {
+        for cell in [
+            SnapshotCell::new(Arc::new(5u64)),
+            SnapshotCell::new_rwlock_baseline(Arc::new(5u64)),
+        ] {
+            assert!(!cell.store_if(Arc::new(3), |cur| 3 > *cur));
+            assert_eq!(*cell.load(), 5, "rejected publish must not land");
+            assert!(cell.store_if(Arc::new(9), |cur| 9 > *cur));
+            assert_eq!(*cell.load(), 9);
+        }
+    }
+
+    #[test]
+    fn update_is_read_modify_write() {
+        let cell = SnapshotCell::new(Arc::new(10u64));
+        cell.update::<()>(|v| Ok(v + 1)).unwrap();
+        assert_eq!(*cell.load(), 11);
+        let err = cell.update(|_| Err("no")).unwrap_err();
+        assert_eq!(err, "no");
+        assert_eq!(*cell.load(), 11, "failed update must not publish");
+    }
+
+    /// The core guarantee under a swap storm: every load observes a value
+    /// that was genuinely published, loads are monotone per reader (the
+    /// cell never travels back in time), and nothing tears or drops.
+    #[test]
+    fn concurrent_loads_see_monotone_published_values() {
+        for baseline in [false, true] {
+            let cell = Arc::new(if baseline {
+                SnapshotCell::new_rwlock_baseline(Arc::new(0u64))
+            } else {
+                SnapshotCell::new(Arc::new(0u64))
+            });
+            let stop = Arc::new(AtomicBool::new(false));
+            let readers: Vec<_> = (0..4)
+                .map(|_| {
+                    let cell = Arc::clone(&cell);
+                    let stop = Arc::clone(&stop);
+                    thread::spawn(move || {
+                        let mut last = 0u64;
+                        let mut n = 0u64;
+                        while !stop.load(SeqCst) {
+                            let v = *cell.load();
+                            assert!(
+                                v >= last,
+                                "snapshot went backwards: {v} after {last}"
+                            );
+                            last = v;
+                            n += 1;
+                        }
+                        n
+                    })
+                })
+                .collect();
+            // Writer: a storm of strictly increasing publishes. store_if
+            // enforces monotonicity exactly like the plan handle does.
+            for v in 1..=2000u64 {
+                assert!(cell.store_if(Arc::new(v), |cur| v > *cur));
+            }
+            stop.store(true, SeqCst);
+            let total: u64 = readers.into_iter().map(|h| h.join().unwrap()).sum();
+            assert!(total > 0, "readers made no progress");
+            assert_eq!(*cell.load(), 2000);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Observable-equivalence properties for the N-way sharded completion
+//! cache (`strategies::cache::ShardedCache`):
+//!
+//! * with a single shard it IS the unsharded cache — same hits, same
+//!   misses, same stats on any op sequence;
+//! * with N shards it behaves exactly like N independent unsharded caches
+//!   routed by `shard_of` — the shard map is the only new behavior;
+//! * generation sweeps (`retain_and_restamp`) agree with the per-shard
+//!   reference model;
+//! * concurrent mixed traffic keeps the aggregate stats coherent.
+
+use std::sync::Arc;
+
+use frugalgpt::strategies::cache::{CachedAnswer, CompletionCache, ShardedCache};
+use frugalgpt::util::rng::Rng;
+
+/// A small query space: distinct `id`s map to distinct exact keys.
+fn query(id: u32) -> Vec<i32> {
+    vec![1, id as i32, 7, 8, 9]
+}
+
+fn answer(id: u32, generation: u64) -> CachedAnswer {
+    CachedAnswer {
+        answer: id % 4,
+        score: 0.5,
+        model: Some((id % 3) as usize),
+        plan_version: generation,
+    }
+}
+
+/// Property: a 1-shard `ShardedCache` is observably the plain
+/// `CompletionCache` — every `get` agrees (hit vs miss AND the payload),
+/// and the aggregated stats are identical, over a long random mix of
+/// puts, gets, and generation sweeps.
+#[test]
+fn single_shard_matches_unsharded_reference() {
+    let cap = 32;
+    let sharded = ShardedCache::new(1, cap, 1.0, 1);
+    assert_eq!(sharded.shard_count(), 1);
+    let mut reference = CompletionCache::new(cap, 1.0);
+
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut generation = 0u64;
+    for step in 0..6000u32 {
+        let id = rng.below(96) as u32;
+        let q = query(id);
+        let roll = rng.below(100);
+        if roll < 45 {
+            let got = sharded.get(&q, generation);
+            let want = reference.get(&q, generation);
+            assert_eq!(got, want, "step {step}: get({id}) diverged at gen {generation}");
+        } else if roll < 90 {
+            let a = answer(id, generation);
+            sharded.put(&q, a.clone());
+            reference.put(&q, a);
+        } else {
+            // Generation sweep: keep entries whose answer class is even.
+            generation += 1;
+            let kept_s = sharded.retain_and_restamp(generation, |a| a.answer % 2 == 0);
+            let kept_r = reference.retain_and_restamp(generation, |a| a.answer % 2 == 0);
+            assert_eq!(kept_s, kept_r, "step {step}: sweep survivor counts diverged");
+        }
+        assert_eq!(sharded.len(), reference.len(), "step {step}: lengths diverged");
+    }
+    assert_eq!(sharded.stats(), reference.stats(), "aggregate stats must match");
+    let s = sharded.stats();
+    assert!(s.exact_hits > 0, "degenerate run: no hits exercised");
+    assert!(s.evictions > 0, "degenerate run: LRU bound never exercised");
+    assert!(s.invalidations > 0, "degenerate run: sweeps never dropped");
+}
+
+/// Property: an N-shard cache behaves exactly like N independent
+/// unsharded caches, each of the per-shard capacity, with queries routed
+/// by `shard_of` — hits, payloads, per-step lengths, sweep drop counts,
+/// and final stats all agree with the reference model.
+#[test]
+fn n_shard_matches_per_shard_reference_model() {
+    let n = 8usize;
+    let cap = 64usize;
+    let sharded = ShardedCache::new(n, cap, 1.0, 1);
+    assert_eq!(sharded.shard_count(), n);
+    let per_shard_cap = cap.div_ceil(n).max(1);
+    let mut reference: Vec<CompletionCache> =
+        (0..n).map(|_| CompletionCache::new(per_shard_cap, 1.0)).collect();
+
+    let mut rng = Rng::new(0xDECAF);
+    let mut generation = 0u64;
+    for step in 0..8000u32 {
+        let id = rng.below(256) as u32;
+        let q = query(id);
+        let shard = sharded.shard_of(&q);
+        assert!(shard < n);
+        let roll = rng.below(100);
+        if roll < 45 {
+            let got = sharded.get(&q, generation);
+            let want = reference[shard].get(&q, generation);
+            assert_eq!(
+                got, want,
+                "step {step}: get({id}) diverged from shard {shard} reference"
+            );
+        } else if roll < 92 {
+            let a = answer(id, generation);
+            sharded.put(&q, a.clone());
+            reference[shard].put(&q, a);
+        } else {
+            generation += 1;
+            let kept_s = sharded.retain_and_restamp(generation, |a| a.model != Some(2));
+            let kept_r: usize = reference
+                .iter_mut()
+                .map(|c| c.retain_and_restamp(generation, |a| a.model != Some(2)))
+                .sum();
+            assert_eq!(kept_s, kept_r, "step {step}: sweep survivors diverged");
+        }
+        let ref_len: usize = reference.iter().map(CompletionCache::len).sum();
+        assert_eq!(sharded.len(), ref_len, "step {step}: total lengths diverged");
+    }
+    // Stats aggregate exactly: every counter is the sum over shards, and
+    // each shard saw precisely the reference cache's op sequence.
+    let mut want = frugalgpt::strategies::cache::CacheStats::default();
+    for c in &reference {
+        let s = c.stats();
+        want.lookups += s.lookups;
+        want.exact_hits += s.exact_hits;
+        want.similar_hits += s.similar_hits;
+        want.insertions += s.insertions;
+        want.evictions += s.evictions;
+        want.invalidations += s.invalidations;
+    }
+    assert_eq!(sharded.stats(), want);
+    assert!(want.exact_hits > 0 && want.evictions > 0);
+}
+
+/// The same thread-pinned query always lands on the same shard, and the
+/// shard map spreads a realistic query population across every shard.
+#[test]
+fn shard_map_is_stable_and_spreads() {
+    let n = 8usize;
+    let sharded = ShardedCache::new(n, 256, 1.0, 1);
+    let mut counts = vec![0usize; n];
+    for id in 0..4096u32 {
+        let q = query(id);
+        let s = sharded.shard_of(&q);
+        assert_eq!(s, sharded.shard_of(&q), "shard_of must be deterministic");
+        counts[s] += 1;
+    }
+    for (s, &c) in counts.iter().enumerate() {
+        // Perfect balance is 512 per shard; splitmix64 on distinct keys
+        // stays well within 2x of uniform.
+        assert!(
+            c > 128 && c < 1024,
+            "shard {s} got {c} of 4096 queries — shard map badly skewed: {counts:?}"
+        );
+    }
+}
+
+/// Concurrent mixed traffic: per-shard mutexes must neither lose updates
+/// nor corrupt the aggregate stats — lookups add up exactly across
+/// threads, and every thread reads back the payloads it wrote.
+#[test]
+fn concurrent_traffic_keeps_aggregate_stats_coherent() {
+    let n_threads = 4u32;
+    let gets_per_thread = 2000u64;
+    let cache = Arc::new(ShardedCache::new(8, 1024, 1.0, 1));
+    let mut workers = Vec::new();
+    for t in 0..n_threads {
+        let cache = cache.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0x5EED + u64::from(t));
+            for _ in 0..gets_per_thread {
+                // Disjoint id ranges per thread: a hit always returns the
+                // owner thread's own payload.
+                let id = t * 10_000 + rng.below(64) as u32;
+                let q = query(id);
+                if let Some(hit) = cache.get(&q, 0) {
+                    assert_eq!(hit.answer, id % 4, "thread {t} read another thread's entry");
+                } else {
+                    cache.put(&q, answer(id, 0));
+                }
+            }
+        }));
+    }
+    for w in workers {
+        w.join().expect("worker");
+    }
+    let s = cache.stats();
+    assert_eq!(
+        s.lookups,
+        u64::from(n_threads) * gets_per_thread,
+        "every get must be counted exactly once across shards"
+    );
+    assert!(s.exact_hits > 0);
+    assert_eq!(s.insertions as usize, cache.len(), "no evictions at this capacity");
+}

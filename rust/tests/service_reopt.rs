@@ -154,6 +154,108 @@ fn hot_swap_is_race_free_and_internally_consistent() {
     assert_eq!(snap.queries, total);
 }
 
+/// Swap-storm acceptance for the wait-free plan handle + sharded cache:
+/// a publisher hammers `swap_plan` with no pacing while concurrent
+/// clients answer cacheable traffic. Every answer — cascade-served OR
+/// cache-served — must be consistent with exactly ONE plan snapshot: its
+/// producing model is the model of the plan version it reports, versions
+/// never run backwards per client, and the swap history stays strictly
+/// version-ordered.
+#[test]
+fn swap_storm_over_sharded_cache_keeps_answers_on_one_snapshot() {
+    let costs = sim_costs();
+    let engine = sim_engine(&costs, 5.0);
+    let cfg = ServiceConfig {
+        cache_enabled: true,
+        cache_shards: 8,
+        cache_capacity: 512,
+        window_capacity: 64,
+        ..Default::default()
+    };
+    let svc = Arc::new(
+        FrugalService::new(CascadePlan::single(0), engine, costs.clone(), sim_meta(), cfg)
+            .unwrap(),
+    );
+    // Full version → plan map known up front: version v serves model v % K.
+    let n_swaps = 48usize;
+    let plans: Vec<CascadePlan> =
+        (0..=n_swaps).map(|v| CascadePlan::single(v % K)).collect();
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for t in 0..4u64 {
+        let svc = svc.clone();
+        let plans = plans.clone();
+        let costs = costs.clone();
+        let stop = stop.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut served = 0u64;
+            let mut hits = 0u64;
+            let mut last_version = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) || served < 60 {
+                // Shared cacheable query population across all clients.
+                let j = 10 + ((served + 7 * t) % 24) as i32;
+                let row = query_row(j);
+                let ans = svc.answer(&row).expect("answer");
+                let v = ans.plan_version as usize;
+                assert!(v < plans.len(), "unknown plan version {v}");
+                let plan_model = plans[v].stages[0].model;
+                // One-snapshot invariant: the answer's producing model IS
+                // the reported version's model — a cache hit for a stale
+                // plan, or a cascade answer metered against a different
+                // snapshot than it reports, both fail here.
+                assert_eq!(
+                    ans.answer, plan_model as u32,
+                    "answer from a different snapshot than v{v}"
+                );
+                if ans.from_cache {
+                    hits += 1;
+                } else {
+                    assert_eq!(ans.stopped_at, Some(0));
+                    assert_eq!(ans.model, Some(plan_model));
+                    let expect = costs.call_cost(plan_model, 6, plan_model as u32);
+                    assert!(
+                        (ans.cost_usd - expect).abs() < 1e-12,
+                        "v{v}: cost {} != {expect}",
+                        ans.cost_usd
+                    );
+                }
+                assert!(ans.plan_version >= last_version, "version ran backwards");
+                last_version = ans.plan_version;
+                served += 1;
+            }
+            (served, hits)
+        }));
+    }
+
+    // The storm: publish as fast as the handle allows, no pacing.
+    for (v, plan) in plans.iter().enumerate().skip(1) {
+        let got = svc.swap_plan(plan.clone(), "storm").expect("swap");
+        assert_eq!(got as usize, v, "single publisher → sequential versions");
+        if v % 8 == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let (total, hits) = clients
+        .into_iter()
+        .map(|c| c.join().expect("client"))
+        .fold((0u64, 0u64), |(s, h), (s2, h2)| (s + s2, h + h2));
+    assert!(total >= 240);
+
+    // Strict order under the storm: the handle never published a stale
+    // bundle, so history versions are exactly 1..=n_swaps.
+    let history = svc.swap_history();
+    assert_eq!(history.len(), n_swaps);
+    for (i, ev) in history.iter().enumerate() {
+        assert_eq!(ev.version as usize, i + 1);
+    }
+    assert_eq!(svc.plan_version() as usize, n_swaps);
+    let cache = svc.cache_stats().expect("cache enabled");
+    assert_eq!(cache.exact_hits + cache.similar_hits, hits);
+    assert!(cache.lookups >= total, "every answer consulted the cache");
+}
+
 /// Feed `n` labelled full-row observations where `correct_model` answers
 /// correctly (high score) and every other model is wrong (low score).
 fn feed_window(svc: &FrugalService, correct_model: usize, n: usize, seed: u64) {

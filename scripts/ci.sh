@@ -70,16 +70,51 @@ for r in results:
 print(f"bench smoke OK: {len(results)} schema-valid results")
 EOF
 
-# The committed perf trajectory must stay populated: results non-empty
-# (real measurements — the nightly workflow refreshes them) and the
-# cross-PR history preserved.
-python3 - BENCH_optimizer.json <<'EOF'
+# Serve-path contention bench smoke: the closed-loop multi-thread sweep
+# (sharded vs shard1_rwlock over all three mixes) must run end-to-end and
+# emit one schema-valid result per variant. Scratch path only — the
+# committed BENCH_serve.json is refreshed by the nightly bench workflow.
+SERVE_SMOKE_JSON="$(mktemp -t bench_serve_smoke_XXXXXX.json)"
+trap 'rm -f "$SMOKE_JSON" "$SERVE_SMOKE_JSON"' EXIT
+cargo bench --bench serve_hot_path -- --smoke --json "$SERVE_SMOKE_JSON"
+python3 - "$SERVE_SMOKE_JSON" <<'EOF'
 import json, sys
 doc = json.load(open(sys.argv[1]))
-assert doc.get("results"), "committed BENCH_optimizer.json has an empty results array"
-assert doc.get("history"), "committed BENCH_optimizer.json lost its history"
-print(f"committed BENCH_optimizer.json OK: {len(doc['results'])} results, "
+assert doc.get("suite") == "serve_hot_path", f"wrong suite: {doc.get('suite')!r}"
+results = doc.get("results")
+assert isinstance(results, list) and results, \
+    "serve smoke bench wrote an empty results array"
+names = set()
+for r in results:
+    assert isinstance(r.get("name"), str) and r["name"], f"result missing name: {r}"
+    assert isinstance(r.get("iters"), int) and r["iters"] > 0, f"bad iters: {r}"
+    assert isinstance(r.get("mean_ns"), (int, float)) and r["mean_ns"] > 0, \
+        f"bad mean_ns: {r}"
+    assert isinstance(r.get("p99_ns"), (int, float)) and r["p99_ns"] > 0, \
+        f"bad p99_ns: {r}"
+    names.add(r["name"])
+# Both configurations of every mix must be present — the whole point of
+# the suite is the sharded-vs-baseline comparison.
+for mix in ("hit_heavy", "cascade", "swap_storm"):
+    for cfg in ("sharded", "shard1_rwlock"):
+        want = f"serve/{mix}/{cfg}/t4"
+        assert want in names, f"missing variant {want}"
+print(f"serve bench smoke OK: {len(results)} schema-valid results")
+EOF
+
+# The committed perf trajectories must stay populated: results non-empty
+# (real measurements — the nightly workflow refreshes them) and the
+# cross-PR history preserved.
+for BENCH_DOC in BENCH_optimizer.json BENCH_serve.json; do
+python3 - "$BENCH_DOC" <<'EOF'
+import json, sys
+path = sys.argv[1]
+doc = json.load(open(path))
+assert doc.get("results"), f"committed {path} has an empty results array"
+assert doc.get("history"), f"committed {path} lost its history"
+print(f"committed {path} OK: {len(doc['results'])} results, "
       f"{len(doc['history'])} history entries")
 EOF
+done
 
 echo "ci.sh: all gates passed"
