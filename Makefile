@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 gate = `make tier1` (ROADMAP.md).
 
-.PHONY: tier1 ci test bench bench-optimizer bench-serve port-check doc
+.PHONY: tier1 ci test bench bench-optimizer bench-serve bench-front-door port-check doc
 
 # API docs (rustdoc). The crate sets #![warn(missing_docs)] and tier1's
 # clippy -D warnings promotes that to an error, so public items cannot
@@ -42,6 +42,13 @@ bench-optimizer:
 # absolute-path caveat as bench-optimizer.
 bench-serve:
 	cargo bench --bench serve_hot_path -- --json $(CURDIR)/BENCH_serve.json
+
+# Regenerate the committed front-door trajectory: frugald (sim
+# marketplace, ephemeral loopback port) driven by loadgen's closed- and
+# open-loop sweeps over real TCP. The script builds both binaries,
+# supervises the daemon, and drains it with /shutdown.
+bench-front-door:
+	scripts/bench_front_door.sh $(CURDIR)/BENCH_front_door.json --bench
 
 # Algorithm-equivalence + speedup harness (pure python; no toolchain).
 # CI runs it with --quick (all correctness gates, no wall-clock timing).

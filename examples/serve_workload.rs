@@ -34,13 +34,12 @@ use anyhow::{Context, Result};
 use frugalgpt::coordinator::cascade::CascadePlan;
 use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
 use frugalgpt::data::Artifacts;
-use frugalgpt::eval::simulate::{fault_injected_engine, ScenarioTimeline, SimWorld};
+use frugalgpt::eval::simulate::{fault_injected_engine, SimWorld};
 use frugalgpt::eval::{best_individual, individual_points, IndividualPoint};
 use frugalgpt::runtime::Engine;
-use frugalgpt::server::health::HealthConfig;
+use frugalgpt::server::config::ServeTuning;
 use frugalgpt::server::service::{FrugalService, ServiceConfig};
 use frugalgpt::server::shadow::default_reference;
-use frugalgpt::strategies::prompt::PromptPolicy;
 use frugalgpt::util::args::Args;
 use frugalgpt::util::rng::Rng;
 
@@ -52,13 +51,11 @@ fn main() -> Result<()> {
     let budget_frac = args.get_f64("budget-frac").unwrap_or(0.2);
     let zipf = args.has("zipf");
     let sim = args.has("sim");
-    let scenario = match args.get("scenario") {
-        Some(s) => Some(match ScenarioTimeline::builtin(s) {
-            Some(t) => t,
-            None => ScenarioTimeline::load(std::path::Path::new(s))?,
-        }),
-        None => None,
-    };
+    // The shared config surface (server::config): same flags, same
+    // parsing, same validation as `frugalgpt serve` and frugald.
+    let cfg = ServiceConfig::from_args(&args)?;
+    let tuning = ServeTuning::from_args(&args)?;
+    let scenario = tuning.scenario.clone();
 
     // Load the world: PJRT artifacts by default, the hermetic synthetic
     // marketplace with --sim. Everything after this block is one code
@@ -140,18 +137,6 @@ fn main() -> Result<()> {
         best.model
     );
 
-    let cfg = ServiceConfig {
-        cache_enabled: !args.has("no-cache"),
-        cache_capacity: args.get_usize("cache-capacity").unwrap_or(4096),
-        cache_min_similarity: if args.has("cache-similar") { 0.8 } else { 1.0 },
-        prompt_policy: match args.get_usize("prompt-keep") {
-            Some(k) => PromptPolicy::Fixed(k),
-            None => PromptPolicy::Full,
-        },
-        budget_cap_usd: args.get_f64("budget-cap"),
-        health: (scenario.is_some() || args.has("breaker")).then(HealthConfig::default),
-        ..ServiceConfig::default()
-    };
     let engine = match &scenario {
         Some(t) => {
             println!("scenario: {} scripted fault events on the serve path", t.events().len());

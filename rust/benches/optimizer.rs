@@ -10,7 +10,7 @@ use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
 use frugalgpt::coordinator::responses::synthetic_table;
 use frugalgpt::marketplace::CostModel;
 use frugalgpt::util::args::Args;
-use frugalgpt::util::bench::{bench_n, black_box, suite_json, BenchResult};
+use frugalgpt::util::bench::{bench_n, black_box, write_suite_json, BenchResult};
 
 const K: usize = 12;
 const N: usize = 8000;
@@ -89,31 +89,12 @@ fn main() {
         let threads = std::thread::available_parallelism()
             .map(|p| p.get())
             .unwrap_or(1);
-        // Preserve the committed file's `history` array (the cross-PR perf
-        // trajectory) across regenerations; only `meta`/`results` refresh.
-        // An existing-but-unparsable file aborts rather than silently
-        // destroying the trajectory record.
-        let history = match std::fs::read_to_string(path) {
-            Ok(raw) => match frugalgpt::util::json::Value::parse(&raw) {
-                Ok(v) => {
-                    let h = v.get("history").clone();
-                    h.as_arr().is_some().then(|| h.to_json())
-                }
-                Err(e) => {
-                    eprintln!(
-                        "refusing to overwrite {path}: existing file does not \
-                         parse ({e}); move it aside first"
-                    );
-                    std::process::exit(1);
-                }
-            },
-            Err(_) => None, // no existing file — start a fresh document
-        };
-        let raw_sections: Vec<(&str, String)> = match &history {
-            Some(h) => vec![("history", h.clone())],
-            None => vec![],
-        };
-        let doc = suite_json(
+        // The shared history-preserving writer (util::bench): keeps the
+        // committed `history` array (the cross-PR perf trajectory) across
+        // regenerations — only `meta`/`results` refresh — and aborts on
+        // an existing-but-unparsable file rather than destroying it.
+        let preserved = write_suite_json(
+            path,
             "optimizer",
             &[
                 ("k", k.to_string()),
@@ -127,13 +108,14 @@ fn main() {
                 ("regenerate", "make bench-optimizer (rewrites meta/results, preserves history)".to_string()),
             ],
             &results,
-            &raw_sections,
         );
-        std::fs::write(path, doc).expect("writing bench json");
-        if history.is_some() {
-            eprintln!("wrote {path} (history entries preserved)");
-        } else {
-            eprintln!("wrote {path} (no prior history found)");
+        match preserved {
+            Ok(true) => eprintln!("wrote {path} (history entries preserved)"),
+            Ok(false) => eprintln!("wrote {path} (no prior history found)"),
+            Err(e) => {
+                eprintln!("{e:#}");
+                std::process::exit(1);
+            }
         }
     }
 }

@@ -40,7 +40,7 @@ use frugalgpt::coordinator::cascade::CascadePlan;
 use frugalgpt::eval::simulate::SimWorld;
 use frugalgpt::server::service::{FrugalService, ServiceConfig};
 use frugalgpt::util::args::Args;
-use frugalgpt::util::bench::{suite_json, BenchResult};
+use frugalgpt::util::bench::{write_suite_json, BenchResult};
 use frugalgpt::util::rng::Rng;
 
 const THREADS: [usize; 4] = [1, 2, 4, 8];
@@ -205,29 +205,10 @@ fn main() {
         let host_threads = std::thread::available_parallelism()
             .map(|p| p.get())
             .unwrap_or(1);
-        // Preserve the committed file's `history` array across
-        // regenerations; refuse to clobber an unparsable file.
-        let history = match std::fs::read_to_string(path) {
-            Ok(raw) => match frugalgpt::util::json::Value::parse(&raw) {
-                Ok(v) => {
-                    let h = v.get("history").clone();
-                    h.as_arr().is_some().then(|| h.to_json())
-                }
-                Err(e) => {
-                    eprintln!(
-                        "refusing to overwrite {path}: existing file does not \
-                         parse ({e}); move it aside first"
-                    );
-                    std::process::exit(1);
-                }
-            },
-            Err(_) => None,
-        };
-        let raw_sections: Vec<(&str, String)> = match &history {
-            Some(h) => vec![("history", h.clone())],
-            None => vec![],
-        };
-        let doc = suite_json(
+        // The shared history-preserving writer (util::bench): keeps the
+        // committed file's `history` array, refuses unparsable files.
+        let preserved = write_suite_json(
+            path,
             "serve_hot_path",
             &[
                 ("world", format!("SimWorld k=3 n=256 seed={SEED}")),
@@ -241,13 +222,14 @@ fn main() {
                 ("regenerate", "make bench-serve (rewrites meta/results, preserves history)".to_string()),
             ],
             &results,
-            &raw_sections,
         );
-        std::fs::write(path, doc).expect("writing bench json");
-        if history.is_some() {
-            eprintln!("wrote {path} (history entries preserved)");
-        } else {
-            eprintln!("wrote {path} (no prior history found)");
+        match preserved {
+            Ok(true) => eprintln!("wrote {path} (history entries preserved)"),
+            Ok(false) => eprintln!("wrote {path} (no prior history found)"),
+            Err(e) => {
+                eprintln!("{e:#}");
+                std::process::exit(1);
+            }
         }
     }
 }

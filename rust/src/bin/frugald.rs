@@ -1,0 +1,219 @@
+//! `frugald` — the FrugalGPT network serving daemon.
+//!
+//! Binds the TCP front door (`server::net`, protocol `frugald/1`:
+//! line-delimited JSON) over a fully composed [`FrugalService`] and
+//! serves until a `/shutdown` frame drains it. The service config comes
+//! from the same `server::config` flag tables as `frugalgpt serve` and
+//! `examples/serve_workload` — one config surface, three entry points.
+//!
+//! ```sh
+//! # hermetic synthetic marketplace (what CI and `loadgen --smoke` hit):
+//! frugald --listen 127.0.0.1:0 --port-file /tmp/frugald.port --sim
+//! # PJRT artifacts:
+//! frugald --dataset headlines --budget 6.0 --listen 127.0.0.1:4550
+//! ```
+//!
+//! Daemon flags (everything else is the shared serving flag set — run
+//! with `--help`):
+//!
+//! * `--listen ADDR`      bind address, port 0 = ephemeral [127.0.0.1:4550]
+//! * `--port-file PATH`   write the bound address (for scripts racing an
+//!   ephemeral port)
+//! * `--sim` / `--sim-models K` / `--sim-items N` / `--seed S`
+//!   synthetic marketplace instead of PJRT artifacts
+//! * `--budget USD_PER_10K`  cascade budget (default: top of the frontier)
+//! * `--max-line-bytes N` / `--max-conns N` / `--accept-threads N`
+//!   front-door limits
+//!
+//! With `--reoptimize-every` the reoptimizer runs on its own background
+//! thread (there is no driver loop to step it); with `--scenario` a
+//! fault-clock thread advances the scripted timeline by answered-query
+//! count and applies marketplace price steps exactly once each.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use frugalgpt::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
+use frugalgpt::data::Artifacts;
+use frugalgpt::eval::simulate::{fault_injected_engine, SimWorld};
+use frugalgpt::runtime::Engine;
+use frugalgpt::server::config::{serve_usage, ServeTuning};
+use frugalgpt::server::net::{FrontDoor, NetConfig, WIRE_PROTOCOL};
+use frugalgpt::server::reoptimizer::Reoptimizer;
+use frugalgpt::server::service::{FrugalService, ServiceConfig};
+use frugalgpt::util::args::Args;
+use frugalgpt::util::json::Value;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("frugald: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    if args.has("help") {
+        println!(
+            "usage: frugald [--listen ADDR] [--port-file PATH] [--sim | --dataset D] \
+             [--budget USD_PER_10K] [--max-line-bytes N] [--max-conns N] \
+             [--accept-threads N] ...\n\n{}",
+            serve_usage()
+        );
+        return Ok(());
+    }
+    let cfg = ServiceConfig::from_args(&args)?;
+    let tuning = ServeTuning::from_args(&args)?;
+    let budget = args.get_f64("budget").unwrap_or(f64::MAX);
+
+    // Build the world: hermetic synthetic marketplace with --sim, PJRT
+    // artifacts otherwise. Either way we end with (plan, engine, costs,
+    // meta) and the rest is one code path.
+    let scenario = tuning.scenario.clone();
+    let mut _engine_owner: Option<Engine> = None;
+    let (plan, engine, costs, meta) = if args.has("sim") {
+        let w = SimWorld::new(
+            args.get_usize("sim-models").unwrap_or(6),
+            args.get_usize("sim-items").unwrap_or(512),
+            args.get_usize("seed").unwrap_or(42) as u64,
+        );
+        let opt = CascadeOptimizer::new(
+            &w.table,
+            &w.costs,
+            w.input_tokens(),
+            OptimizerOptions::default(),
+        )?;
+        let plan = if budget == f64::MAX {
+            opt.frontier().last().context("empty frontier")?.plan.clone()
+        } else {
+            opt.optimize(budget)?.plan
+        };
+        (plan, w.engine()?, w.costs.clone(), w.meta.clone())
+    } else {
+        let art = Artifacts::load(args.get_or("artifacts", "artifacts"))
+            .context("run `make artifacts` first (or pass --sim)")?;
+        let dataset = args.get("dataset").context("--dataset required (or --sim)")?;
+        let ctx = art.context(dataset)?;
+        let opt = CascadeOptimizer::new(
+            &ctx.table.train,
+            &ctx.costs,
+            ctx.train_tokens.clone(),
+            OptimizerOptions::default(),
+        )?;
+        let plan = if budget == f64::MAX {
+            opt.frontier().last().context("empty frontier")?.plan.clone()
+        } else {
+            opt.optimize(budget)?.plan
+        };
+        let engine = Engine::start(&art)?;
+        let h = engine.handle();
+        _engine_owner = Some(engine);
+        (plan, h, ctx.costs.clone(), ctx.meta.clone())
+    };
+
+    let engine = match &scenario {
+        Some(t) => {
+            eprintln!(
+                "frugald: scenario with {} scripted fault events on the serve path",
+                t.events().len()
+            );
+            fault_injected_engine(engine, &costs.model_names, t.clone())
+        }
+        None => engine,
+    };
+    eprintln!("frugald: serving cascade {}", plan.describe(&costs.model_names));
+    eprintln!("frugald: pipeline {}", cfg.pipeline.describe());
+    let svc = Arc::new(FrugalService::new(plan, engine, costs, meta, cfg)?);
+
+    // Background re-optimization: no driver loop exists to call step(),
+    // so the cadence flag spawns the interval thread instead.
+    let reopt = tuning
+        .reopt_config(budget)
+        .map(|rc| Reoptimizer::new(svc.clone(), rc).spawn());
+
+    // The fault clock: scripted timelines are indexed by answered-query
+    // count. A daemon has no query loop, so a clock thread advances the
+    // timeline from the metrics counter and applies each scripted price
+    // step exactly once.
+    let clock_stop = Arc::new(AtomicBool::new(false));
+    let clock = scenario.clone().map(|t| {
+        let svc = svc.clone();
+        let stop = clock_stop.clone();
+        std::thread::spawn(move || {
+            let mut applied = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let q = svc.metrics.snapshot().queries as u64;
+                t.set_now(q);
+                for i in applied..=q {
+                    for (model, mult) in t.price_steps_at(i) {
+                        let _ = svc.reprice(model, mult, &format!("price step @q{i}"));
+                    }
+                }
+                applied = q + 1;
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        })
+    });
+
+    let net = NetConfig {
+        max_line_bytes: args.get_usize("max-line-bytes").unwrap_or(64 * 1024),
+        max_connections: args.get_usize("max-conns").unwrap_or(1024),
+        accept_threads: args
+            .get_usize("accept-threads")
+            .unwrap_or_else(|| NetConfig::default().accept_threads),
+        ..NetConfig::default()
+    };
+    let door = FrontDoor::bind(svc.clone(), args.get_or("listen", "127.0.0.1:4550"), net)?;
+    let addr = door.local_addr();
+    if let Some(pf) = args.get("port-file") {
+        std::fs::write(pf, format!("{addr}\n"))
+            .with_context(|| format!("writing port file {pf}"))?;
+    }
+    eprintln!("frugald: {WIRE_PROTOCOL} listening on {addr} (send `/shutdown` to drain)");
+
+    // Serve until a /shutdown frame drains the door.
+    let stats = door.join()?;
+    clock_stop.store(true, Ordering::Relaxed);
+    if let Some(c) = clock {
+        let _ = c.join();
+    }
+    drop(reopt); // stops + joins the background reoptimizer
+
+    // Exit report: service metrics (canonical wire schema) + front-door
+    // counters, plus the optional sinks shared with `frugalgpt serve`.
+    let m = svc.metrics.snapshot();
+    eprintln!(
+        "frugald: drained after {} queries ({} cache hits, {} errors), spend ${:.6}",
+        m.queries,
+        m.cache_hits,
+        m.errors,
+        svc.budget.spent_usd()
+    );
+    eprintln!(
+        "frugald: latency p50={:.1}ms p95={:.1}ms p99={:.1}ms; net {}",
+        m.p50_us as f64 / 1000.0,
+        m.p95_us as f64 / 1000.0,
+        m.p99_us as f64 / 1000.0,
+        stats.to_value().to_json()
+    );
+    if let Some(path) = tuning.metrics_json.as_deref() {
+        std::fs::write(path, m.to_value().to_json())
+            .with_context(|| format!("writing metrics snapshot {path}"))?;
+        eprintln!("frugald: metrics snapshot written: {path}");
+    }
+    if let Some(path) = tuning.swap_log.as_deref() {
+        let history = svc.swap_history();
+        let mut doc = std::collections::HashMap::new();
+        doc.insert(
+            "models".to_string(),
+            Value::Arr(svc.costs().model_names.iter().map(|s| Value::Str(s.clone())).collect()),
+        );
+        doc.insert("swaps".to_string(), Value::Arr(history.iter().map(|e| e.to_value()).collect()));
+        std::fs::write(path, Value::Obj(doc).to_json())
+            .with_context(|| format!("writing swap log {path}"))?;
+        eprintln!("frugald: swap log written: {path}");
+    }
+    Ok(())
+}

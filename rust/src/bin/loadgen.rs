@@ -1,0 +1,457 @@
+//! `loadgen` — closed- and open-loop load harness for the `frugald`
+//! front door.
+//!
+//! Speaks the same `frugald/1` wire protocol (line-delimited JSON) over
+//! real TCP connections, measures per-request round-trip latency into a
+//! log-bucketed histogram (`util::hist`, ~3% relative error), and emits
+//! the committed `BENCH_front_door.json` trajectory through the same
+//! history-preserving writer as the other bench suites.
+//!
+//! ```sh
+//! loadgen --connect 127.0.0.1:4550 --smoke --shutdown --json BENCH_front_door.json
+//! ```
+//!
+//! Modes:
+//!
+//! * `--smoke`  — CI gate: closed loop over 2 then 4 connections,
+//!   ≥240 queries each, fails on any protocol error or empty histogram;
+//! * `--bench`  — the full sweep behind `make bench-front-door`:
+//!   closed-loop c1/c2/c4/c8, a Zipf-skewed run, and open-loop
+//!   steady/burst/diurnal arrivals;
+//! * explicit   — one scenario from `--mode closed|open` with
+//!   `--clients C --queries N [--rate R] [--arrival steady|burst|diurnal]
+//!   [--day-secs S] [--zipf]`.
+//!
+//! Closed loop: C connections, each with exactly one request in flight —
+//! the classic latency-under-concurrency harness; reported `per_sec` is
+//! aggregate throughput (mean = wall / completed), percentiles are
+//! per-request RTTs. Open loop: requests are *scheduled* by an arrival
+//! process (Poisson at `--rate`, optionally bursty or diurnally
+//! modulated) and sent regardless of completions, so queueing delay is
+//! measured instead of hidden — the histogram sees what a client would.
+//!
+//! The workload is the same synthetic item set frugald serves in `--sim`
+//! mode (`--sim-models/--sim-items/--seed` must match the daemon), so
+//! answers are checkable: accuracy is reported alongside latency. After
+//! the sweep, `/metrics` is fetched and parsed through
+//! `MetricsSnapshot::from_value` — the canonical wire schema, round-
+//! tripped over a real socket. `--shutdown` drains the daemon at the end.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use frugalgpt::eval::simulate::SimWorld;
+use frugalgpt::server::metrics::MetricsSnapshot;
+use frugalgpt::server::net::WIRE_PROTOCOL;
+use frugalgpt::util::args::Args;
+use frugalgpt::util::bench::{write_suite_json, BenchResult};
+use frugalgpt::util::hist::LogHistogram;
+use frugalgpt::util::json::Value;
+use frugalgpt::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("loadgen: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// The pre-rendered workload: one request line + expected label per item
+/// (the daemon's `--sim` world, regenerated bit-identically here).
+struct Workload {
+    lines: Vec<String>,
+    labels: Vec<u32>,
+}
+
+impl Workload {
+    fn build(args: &Args) -> Workload {
+        let w = SimWorld::new(
+            args.get_usize("sim-models").unwrap_or(6),
+            args.get_usize("sim-items").unwrap_or(512),
+            args.get_usize("seed").unwrap_or(42) as u64,
+        );
+        let lines = w
+            .rows()
+            .iter()
+            .enumerate()
+            .map(|(i, row)| {
+                let mut m = std::collections::HashMap::new();
+                m.insert(
+                    "query".to_string(),
+                    Value::Arr(row.iter().map(|&t| Value::Num(t as f64)).collect()),
+                );
+                m.insert("id".to_string(), Value::Num(i as f64));
+                let mut s = Value::Obj(m).to_json();
+                s.push('\n');
+                s
+            })
+            .collect();
+        Workload { lines, labels: w.labels().to_vec() }
+    }
+
+    /// Item index stream: uniform, or Zipf-skewed over the hottest 256
+    /// items (the search-engine-like stream where the completion cache
+    /// pays off).
+    fn pick(&self, rng: &mut Rng, zipf: bool) -> usize {
+        if zipf {
+            rng.zipf(self.labels.len().min(256), 1.1)
+        } else {
+            rng.usize_below(self.labels.len())
+        }
+    }
+}
+
+/// What one scenario run produced.
+struct RunOut {
+    hist: LogHistogram,
+    wall: Duration,
+    completed: usize,
+    correct: usize,
+    protocol_errors: usize,
+}
+
+impl RunOut {
+    fn to_result(&self, name: &str) -> Result<BenchResult> {
+        if self.completed == 0 {
+            bail!("{name}: no requests completed");
+        }
+        Ok(BenchResult {
+            name: name.to_string(),
+            iters: self.completed,
+            // Closed-loop accounting convention (same as the serve
+            // suite): mean = wall / n so per_sec is aggregate
+            // throughput; the percentiles are per-request RTTs.
+            mean: self.wall / self.completed as u32,
+            p50: Duration::from_nanos(self.hist.quantile(0.50)),
+            p95: Duration::from_nanos(self.hist.quantile(0.95)),
+            p99: Duration::from_nanos(self.hist.quantile(0.99)),
+            max: Duration::from_nanos(self.hist.max()),
+        })
+    }
+
+    fn report(&self, name: &str) {
+        println!(
+            "{name}: {} done in {:.2?} ({:.1}/s) acc={:.4} proto_errs={} \
+             p50={:?} p99={:?}",
+            self.completed,
+            self.wall,
+            self.completed as f64 / self.wall.as_secs_f64().max(1e-9),
+            self.correct as f64 / self.completed.max(1) as f64,
+            self.protocol_errors,
+            Duration::from_nanos(self.hist.quantile(0.50)),
+            Duration::from_nanos(self.hist.quantile(0.99)),
+        );
+    }
+}
+
+fn connect(addr: &str) -> Result<(TcpStream, BufReader<TcpStream>)> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to frugald at {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    Ok((stream, reader))
+}
+
+/// One request/reply exchange outcome, tallied by both loop modes.
+fn tally(reply: &str, expect: u32, out: &mut RunOut) {
+    match Value::parse(reply) {
+        Ok(v) if matches!(v.get("error"), Value::Null) => {
+            out.completed += 1;
+            if v.get("answer").as_u32() == Some(expect) {
+                out.correct += 1;
+            }
+        }
+        _ => out.protocol_errors += 1,
+    }
+}
+
+/// Closed loop: `clients` connections, one request in flight each,
+/// racing down a shared work list.
+fn run_closed(
+    addr: &str,
+    wl: &Arc<Workload>,
+    clients: usize,
+    queries: usize,
+    zipf: bool,
+    seed: u64,
+) -> Result<RunOut> {
+    let mut rng = Rng::new(seed);
+    let work: Vec<usize> = (0..queries).map(|_| wl.pick(&mut rng, zipf)).collect();
+    let work = Arc::new(work);
+    let next = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..clients.max(1) {
+        let (wl, work, next) = (wl.clone(), work.clone(), next.clone());
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || -> Result<RunOut> {
+            let (mut stream, mut reader) = connect(&addr)?;
+            let mut out = RunOut {
+                hist: LogHistogram::new(),
+                wall: Duration::ZERO,
+                completed: 0,
+                correct: 0,
+                protocol_errors: 0,
+            };
+            let mut reply = String::new();
+            loop {
+                let w = next.fetch_add(1, Ordering::Relaxed);
+                if w >= work.len() {
+                    return Ok(out);
+                }
+                let i = work[w];
+                let sent = Instant::now();
+                stream.write_all(wl.lines[i].as_bytes())?;
+                reply.clear();
+                if reader.read_line(&mut reply)? == 0 {
+                    bail!("server closed the connection mid-run");
+                }
+                out.hist.record(sent.elapsed().as_nanos() as u64);
+                tally(&reply, wl.labels[i], &mut out);
+            }
+        }));
+    }
+    let mut total = RunOut {
+        hist: LogHistogram::new(),
+        wall: Duration::ZERO,
+        completed: 0,
+        correct: 0,
+        protocol_errors: 0,
+    };
+    for h in handles {
+        let out = h.join().expect("closed-loop client panicked")?;
+        total.hist.merge(&out.hist);
+        total.completed += out.completed;
+        total.correct += out.correct;
+        total.protocol_errors += out.protocol_errors;
+    }
+    total.wall = t0.elapsed();
+    Ok(total)
+}
+
+/// Arrival-rate modulation for the open loop, as a multiplier on the
+/// base rate at elapsed time `t`.
+fn arrival_phase(arrival: &str, t: f64, day_secs: f64) -> f64 {
+    match arrival {
+        // Alternating half-second storms: 3x rate, then 1/3 rate.
+        "burst" => {
+            if t % 1.0 < 0.5 {
+                3.0
+            } else {
+                1.0 / 3.0
+            }
+        }
+        // A compressed day: sinusoidal load over --day-secs.
+        "diurnal" => 1.0 + 0.8 * (2.0 * std::f64::consts::PI * t / day_secs).sin(),
+        _ => 1.0,
+    }
+}
+
+/// Open loop: requests are scheduled by a Poisson process at `rate`
+/// (modulated by `arrival`) and written regardless of completions; a
+/// paired reader thread matches in-order replies to send timestamps, so
+/// the histogram includes queueing delay (no coordinated omission).
+#[allow(clippy::too_many_arguments)]
+fn run_open(
+    addr: &str,
+    wl: &Arc<Workload>,
+    conns: usize,
+    queries: usize,
+    rate: f64,
+    arrival: &str,
+    day_secs: f64,
+    zipf: bool,
+    seed: u64,
+) -> Result<RunOut> {
+    let conns = conns.max(1);
+    let per_conn_rate = (rate / conns as f64).max(1.0);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..conns {
+        let n = queries / conns + usize::from(c < queries % conns);
+        if n == 0 {
+            continue;
+        }
+        let wl = wl.clone();
+        let addr = addr.to_string();
+        let arrival = arrival.to_string();
+        handles.push(std::thread::spawn(move || -> Result<RunOut> {
+            let (mut stream, mut reader) = connect(&addr)?;
+            // Replies arrive in request order on one connection, so a
+            // timestamp deque is all the matching the reader needs.
+            let pending = Arc::new(Mutex::new(VecDeque::new()));
+            let pending_w = pending.clone();
+            let reader_handle = std::thread::spawn(move || -> Result<RunOut> {
+                let mut out = RunOut {
+                    hist: LogHistogram::new(),
+                    wall: Duration::ZERO,
+                    completed: 0,
+                    correct: 0,
+                    protocol_errors: 0,
+                };
+                let mut reply = String::new();
+                for _ in 0..n {
+                    reply.clear();
+                    if reader.read_line(&mut reply)? == 0 {
+                        bail!("server closed the connection mid-run");
+                    }
+                    let (sent, expect) =
+                        pending.lock().unwrap().pop_front().context("reply without a request")?;
+                    out.hist.record(sent.elapsed().as_nanos() as u64);
+                    tally(&reply, expect, &mut out);
+                }
+                Ok(out)
+            });
+            let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37_79B9));
+            let start = Instant::now();
+            let mut due = 0.0f64;
+            for _ in 0..n {
+                // Exponential interarrival at the phase-modulated rate.
+                let phase = arrival_phase(&arrival, due, day_secs);
+                due += -(1.0 - rng.f64()).ln() / (per_conn_rate * phase);
+                let at = start + Duration::from_secs_f64(due);
+                if let Some(sleep) = at.checked_duration_since(Instant::now()) {
+                    std::thread::sleep(sleep);
+                }
+                let i = wl.pick(&mut rng, zipf);
+                pending_w.lock().unwrap().push_back((Instant::now(), wl.labels[i]));
+                stream.write_all(wl.lines[i].as_bytes())?;
+            }
+            reader_handle.join().expect("open-loop reader panicked")
+        }));
+    }
+    let mut total = RunOut {
+        hist: LogHistogram::new(),
+        wall: Duration::ZERO,
+        completed: 0,
+        correct: 0,
+        protocol_errors: 0,
+    };
+    for h in handles {
+        let out = h.join().expect("open-loop connection panicked")?;
+        total.hist.merge(&out.hist);
+        total.completed += out.completed;
+        total.correct += out.correct;
+        total.protocol_errors += out.protocol_errors;
+    }
+    total.wall = t0.elapsed();
+    Ok(total)
+}
+
+/// One admin exchange on a fresh connection.
+fn admin(addr: &str, verb: &str) -> Result<Value> {
+    let (mut stream, mut reader) = connect(addr)?;
+    stream.write_all(format!("{verb}\n").as_bytes())?;
+    let mut reply = String::new();
+    reader.read_line(&mut reply)?;
+    Value::parse(&reply).with_context(|| format!("parsing {verb} reply"))
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let addr = args.get("connect").context("--connect HOST:PORT required")?.to_string();
+    let wl = Arc::new(Workload::build(&args));
+    let seed = args.get_usize("seed").unwrap_or(42) as u64;
+    let zipf = args.has("zipf");
+    let queries = args.get_usize("queries").unwrap_or(2000);
+    let rate = args.get_f64("rate").unwrap_or(1500.0);
+    let day_secs = args.get_f64("day-secs").unwrap_or(8.0);
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut total_protocol_errors = 0usize;
+    let mut record = |name: &str, out: RunOut, results: &mut Vec<BenchResult>| -> Result<()> {
+        out.report(name);
+        total_protocol_errors += out.protocol_errors;
+        results.push(out.to_result(name)?);
+        Ok(())
+    };
+
+    if args.has("smoke") {
+        // The CI gate: ≥2 connections, ≥200 completed queries, zero
+        // protocol errors, valid percentiles.
+        for clients in [2usize, 4] {
+            let n = 240;
+            let out = run_closed(&addr, &wl, clients, n, zipf, seed)?;
+            if out.completed != n {
+                bail!("smoke c{clients}: {}/{} queries completed", out.completed, n);
+            }
+            record(&format!("front_door/closed/c{clients}"), out, &mut results)?;
+        }
+    } else if args.has("bench") {
+        for clients in [1usize, 2, 4, 8] {
+            let out = run_closed(&addr, &wl, clients, queries, zipf, seed)?;
+            record(&format!("front_door/closed/c{clients}"), out, &mut results)?;
+        }
+        let out = run_closed(&addr, &wl, 4, queries, true, seed)?;
+        record("front_door/closed/zipf/c4", out, &mut results)?;
+        for arrival in ["steady", "burst", "diurnal"] {
+            let out = run_open(&addr, &wl, 4, queries, rate, arrival, day_secs, zipf, seed)?;
+            record(&format!("front_door/open/{arrival}/c4"), out, &mut results)?;
+        }
+    } else {
+        let clients = args.get_usize("clients").unwrap_or(4);
+        let mode = args.get_or("mode", "closed");
+        let arrival = args.get_or("arrival", "steady").to_string();
+        let out = match mode {
+            "closed" => run_closed(&addr, &wl, clients, queries, zipf, seed)?,
+            "open" => {
+                run_open(&addr, &wl, clients, queries, rate, &arrival, day_secs, zipf, seed)?
+            }
+            other => bail!("--mode must be closed|open, got {other}"),
+        };
+        let name = match mode {
+            "closed" => format!("front_door/closed/c{clients}"),
+            _ => format!("front_door/open/{arrival}/c{clients}"),
+        };
+        record(&name, out, &mut results)?;
+    }
+
+    // The wire schema, proven over a real socket: /metrics must parse
+    // back through the canonical MetricsSnapshot::from_value.
+    let m = MetricsSnapshot::from_value(&admin(&addr, "/metrics")?)
+        .context("/metrics reply is not the canonical MetricsSnapshot schema")?;
+    println!(
+        "server: {} queries, {} cache hits, {} errors, p99={:.1}ms (via /metrics)",
+        m.queries,
+        m.cache_hits,
+        m.errors,
+        m.p99_us as f64 / 1000.0
+    );
+
+    if let Some(path) = args.get("json") {
+        let meta: Vec<(&str, String)> = vec![
+            ("protocol", WIRE_PROTOCOL.to_string()),
+            ("harness", "loadgen closed/open loop over live frugald TCP".to_string()),
+            (
+                "accounting",
+                "mean = wall/completed per run (per_sec is aggregate throughput); \
+                 p50/p95/p99/max are per-request RTTs from a log-bucketed histogram \
+                 (~3% relative error)"
+                    .to_string(),
+            ),
+            ("gate", "ci.sh: smoke = closed c2+c4, zero protocol errors".to_string()),
+            ("regenerate", "make bench-front-door".to_string()),
+        ];
+        let preserved = write_suite_json(path, "front_door", &meta, &results)?;
+        println!(
+            "bench json written: {path}{}",
+            if preserved { " (history preserved)" } else { "" }
+        );
+    }
+
+    if args.has("shutdown") {
+        let v = admin(&addr, "/shutdown")?;
+        println!("daemon drain requested: {}", v.to_json());
+    }
+
+    if total_protocol_errors > 0 {
+        bail!("{total_protocol_errors} protocol errors over the run");
+    }
+    Ok(())
+}

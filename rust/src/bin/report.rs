@@ -16,6 +16,10 @@
 //!   report health    --log PATH   — render a serve run's per-model breaker
 //!                                   state (written into the same swap log
 //!                                   when `serve --breaker`/`--scenario` is on)
+//!   report metrics   --log PATH   — render a metrics snapshot in the
+//!                                   canonical wire schema (`serve
+//!                                   --metrics-json PATH`, or a captured
+//!                                   frugald `/metrics` reply)
 //!   report all                    — everything above in order (frontier /
 //!                                   swaps / health excluded: they read
 //!                                   extra files)
@@ -39,6 +43,7 @@ use frugalgpt::eval::simulate::table_backed_engine;
 use frugalgpt::eval::table::{pct, render, usd};
 use frugalgpt::eval::{best_individual, individual_points};
 use frugalgpt::marketplace::TABLE1;
+use frugalgpt::server::metrics::MetricsSnapshot;
 use frugalgpt::server::service::{FrugalService, ServiceConfig, SwapEvent};
 use frugalgpt::strategies::pipeline::PipelineSpec;
 use frugalgpt::strategies::prompt::PromptPolicy;
@@ -63,6 +68,7 @@ fn run(what: &str, args: &Args) -> Result<()> {
         "frontier" => return frontier_report(args),
         "swaps" => return swaps_report(args),
         "health" => return health_report(args),
+        "metrics" => return metrics_report(args),
         _ => {}
     }
     let art = Artifacts::load(args.get_or("artifacts", "artifacts"))?;
@@ -249,6 +255,61 @@ fn health_report(args: &Args) -> Result<()> {
     } else {
         println!("still degraded at end of run: {}", open.join(", "));
     }
+    Ok(())
+}
+
+/// Render a metrics snapshot written in the canonical wire schema —
+/// either `serve --metrics-json PATH`, or a frugald `/metrics` reply
+/// captured to a file. Parsing goes through
+/// [`MetricsSnapshot::from_value`], so this doubles as a schema check.
+fn metrics_report(args: &Args) -> Result<()> {
+    let log = args.get("log").context("report metrics needs --log PATH")?;
+    let raw = std::fs::read_to_string(log)
+        .with_context(|| format!("reading metrics snapshot {log}"))?;
+    let v = Value::parse(&raw).map_err(|e| anyhow!("{e}"))?;
+    let m = MetricsSnapshot::from_value(&v)
+        .context("file is not the canonical MetricsSnapshot wire schema")?;
+    println!("== metrics snapshot: {log} ==");
+    println!(
+        "queries={} cache_hits={} cascade={} concat_groups={} errors={} plan_swaps={}",
+        m.queries, m.cache_hits, m.cascade_invocations, m.concat_groups, m.errors, m.plan_swaps
+    );
+    println!(
+        "stops per depth: {:?} (+{} deeper); window {}/{} rows ever",
+        m.stopped_at, m.stopped_at_overflow, m.window_len, m.window_total
+    );
+    println!(
+        "latency: mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms",
+        m.mean_latency_us / 1000.0,
+        m.p50_us as f64 / 1000.0,
+        m.p95_us as f64 / 1000.0,
+        m.p99_us as f64 / 1000.0,
+        m.max_us as f64 / 1000.0
+    );
+    let rows: Vec<Vec<String>> = m
+        .per_model
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            vec![
+                format!("model {i}"),
+                w.invocations.to_string(),
+                w.accepted.to_string(),
+                format!("${:.6}", w.cost_usd),
+                format!("{:.3}", w.mean_accepted_score),
+                w.labeled.to_string(),
+                pct(w.observed_accuracy),
+                w.skips.to_string(),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render(
+            &["model", "invoked", "accepted", "spend", "score", "labeled", "obs acc", "skips"],
+            &rows
+        )
+    );
     Ok(())
 }
 

@@ -1,0 +1,468 @@
+//! One config surface for every serving entry point.
+//!
+//! `frugalgpt serve`, `examples/serve_workload.rs` and the `frugald`
+//! network daemon all build their [`ServiceConfig`] through
+//! [`ServiceConfig::from_args`] and their driver-level knobs through
+//! [`ServeTuning::from_args`] — both driven by the declarative flag
+//! tables below, which are ALSO what renders the usage text
+//! ([`serve_usage`]). One table, three entry points, zero drift: a flag
+//! added here parses everywhere and documents itself; the
+//! `table_covers_every_flag` test plus a `debug_assert` in the checked
+//! accessors keep the table and the parser from diverging.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::eval::simulate::ScenarioTimeline;
+use crate::server::health::HealthConfig;
+use crate::server::reoptimizer::ReoptimizerConfig;
+use crate::server::service::ServiceConfig;
+use crate::server::shadow::ShadowConfig;
+use crate::strategies::pipeline::PipelineSpec;
+use crate::strategies::prompt::PromptPolicy;
+use crate::util::args::Args;
+
+/// One `--flag` in the shared serving flag tables.
+pub struct FlagSpec {
+    /// Flag name (without the leading `--`).
+    pub name: &'static str,
+    /// Metavar for the flag's value; `None` marks a boolean switch.
+    pub value: Option<&'static str>,
+    /// Human-readable default, empty when the flag defaults to "off".
+    pub default: &'static str,
+    /// One-line help text.
+    pub help: &'static str,
+}
+
+/// Flags consumed by [`ServiceConfig::from_args`] — the service-level
+/// config surface shared verbatim by all three entry points.
+pub const SERVE_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        name: "no-cache",
+        value: None,
+        default: "",
+        help: "disable the completion cache (the cascade-only ablation)",
+    },
+    FlagSpec {
+        name: "cache-capacity",
+        value: Some("N"),
+        default: "4096",
+        help: "completion-cache entries retained (LRU beyond this)",
+    },
+    FlagSpec {
+        name: "cache-similar",
+        value: None,
+        default: "",
+        help: "accept near-miss cache hits via the MinHash tier (min similarity 0.8)",
+    },
+    FlagSpec {
+        name: "cache-shards",
+        value: Some("N"),
+        default: "0 = auto",
+        help: "completion-cache shards (0 = next power of two >= cores)",
+    },
+    FlagSpec {
+        name: "cache-touch",
+        value: Some("T"),
+        default: "1",
+        help: "promote a cache entry on every T-th hit only (1 = exact LRU)",
+    },
+    FlagSpec {
+        name: "prompt-keep",
+        value: Some("K"),
+        default: "full prompt",
+        help: "prompt adaptation: keep only K few-shot examples (Fig. 2a)",
+    },
+    FlagSpec {
+        name: "budget-cap",
+        value: Some("USD"),
+        default: "uncapped",
+        help: "hard spend cap; past it the budget stage degrades to stage 0",
+    },
+    FlagSpec {
+        name: "window",
+        value: Some("CAP"),
+        default: "2048",
+        help: "labelled observation rows kept for the reoptimizer",
+    },
+    FlagSpec {
+        name: "window-half-life",
+        value: Some("H"),
+        default: "hard ring",
+        help: "decay-weight the observation window with half-life H observations",
+    },
+    FlagSpec {
+        name: "shadow-rate",
+        value: Some("R"),
+        default: "0",
+        help: "shadow-score fraction R of live queries on ALL models (needs --reoptimize-every)",
+    },
+    FlagSpec {
+        name: "shadow-budget",
+        value: Some("USD"),
+        default: "uncapped",
+        help: "hard spend cap for the shadow scorer",
+    },
+    FlagSpec {
+        name: "pipeline",
+        value: Some("SPEC"),
+        default: "cache,shadow,prompt,budget,cascade",
+        help: "serving stage stack as data, e.g. cache,prompt,cascade",
+    },
+    FlagSpec {
+        name: "breaker",
+        value: None,
+        default: "implied by --scenario",
+        help: "per-model circuit breakers + bounded retry",
+    },
+    FlagSpec {
+        name: "breaker-trip",
+        value: Some("T"),
+        default: "3",
+        help: "consecutive failures that trip a model's breaker",
+    },
+    FlagSpec {
+        name: "breaker-cooldown",
+        value: Some("C"),
+        default: "16",
+        help: "consults a tripped breaker stays open before a probe",
+    },
+    FlagSpec {
+        name: "retries",
+        value: Some("R"),
+        default: "2",
+        help: "bounded per-call retries before the breaker counts a failure",
+    },
+    FlagSpec {
+        name: "scenario",
+        value: Some("NAME|PATH"),
+        default: "off",
+        help: "replay a scripted fault timeline (builtin `storm`, or a scenario JSON)",
+    },
+];
+
+/// Flags consumed by [`ServeTuning::from_args`] — driver-level knobs
+/// (re-optimization cadence, concat grouping, report sinks) shared by
+/// the entry points that drive a query loop.
+pub const TUNING_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        name: "reoptimize-every",
+        value: Some("N"),
+        default: "off",
+        help: "re-learn the cascade from the observation window every N queries",
+    },
+    FlagSpec {
+        name: "hysteresis",
+        value: Some("H"),
+        default: "0.005",
+        help: "swap only when the re-learned plan wins by more than H",
+    },
+    FlagSpec {
+        name: "min-window",
+        value: Some("M"),
+        default: "128",
+        help: "observation rows required before the reoptimizer acts",
+    },
+    FlagSpec {
+        name: "concat",
+        value: Some("G"),
+        default: "1",
+        help: "serve via answer_batch with concatenation groups of G (Fig. 2b)",
+    },
+    FlagSpec {
+        name: "swap-log",
+        value: Some("PATH"),
+        default: "",
+        help: "write the plan-swap log as JSON (render with `report swaps`)",
+    },
+    FlagSpec {
+        name: "metrics-json",
+        value: Some("PATH"),
+        default: "",
+        help: "write the final metrics snapshot in the canonical wire schema (render with `report metrics`)",
+    },
+];
+
+fn known_flag(name: &str) -> bool {
+    SERVE_FLAGS.iter().chain(TUNING_FLAGS).any(|f| f.name == name)
+}
+
+/// Checked view over [`Args`]: every lookup `debug_assert`s the flag is
+/// in one of the tables, so the parser cannot quietly consume a flag the
+/// usage text does not document.
+struct Table<'a>(&'a Args);
+
+impl Table<'_> {
+    fn get(&self, name: &str) -> Option<&str> {
+        debug_assert!(known_flag(name), "flag --{name} missing from the flag tables");
+        self.0.get(name)
+    }
+    fn get_f64(&self, name: &str) -> Option<f64> {
+        debug_assert!(known_flag(name), "flag --{name} missing from the flag tables");
+        self.0.get_f64(name)
+    }
+    fn get_usize(&self, name: &str) -> Option<usize> {
+        debug_assert!(known_flag(name), "flag --{name} missing from the flag tables");
+        self.0.get_usize(name)
+    }
+    fn has(&self, name: &str) -> bool {
+        debug_assert!(known_flag(name), "flag --{name} missing from the flag tables");
+        self.0.has(name)
+    }
+}
+
+fn render_table(flags: &[FlagSpec]) -> String {
+    let mut out = String::new();
+    for f in flags {
+        let head = match f.value {
+            Some(v) => format!("--{} {}", f.name, v),
+            None => format!("--{}", f.name),
+        };
+        out.push_str(&format!("  {head:<26} {}", f.help));
+        if !f.default.is_empty() {
+            out.push_str(&format!(" [default: {}]", f.default));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// The serving flag reference, generated from the same tables
+/// [`ServiceConfig::from_args`] and [`ServeTuning::from_args`] consume —
+/// the usage text can no longer drift from the real flag set.
+pub fn serve_usage() -> String {
+    format!(
+        "service flags (shared by `frugalgpt serve`, examples/serve_workload, frugald):\n\
+         {}driver flags:\n{}",
+        render_table(SERVE_FLAGS),
+        render_table(TUNING_FLAGS)
+    )
+}
+
+impl ServiceConfig {
+    /// Build the service configuration from CLI flags — THE one config
+    /// surface. Validation lives here too: `--shadow-rate` demands
+    /// `--reoptimize-every` (shadow scoring spends real budget filling
+    /// the observation window, and only the reoptimizer reads it),
+    /// rates must be probabilities, and structural knobs must be
+    /// non-degenerate. `--breaker` or `--scenario` turn the per-model
+    /// health layer on.
+    pub fn from_args(args: &Args) -> Result<ServiceConfig> {
+        let a = Table(args);
+
+        let shadow_rate = a.get_f64("shadow-rate").unwrap_or(0.0);
+        if !(0.0..=1.0).contains(&shadow_rate) {
+            bail!("--shadow-rate must be in [0, 1], got {shadow_rate}");
+        }
+        if shadow_rate > 0.0 && a.get_usize("reoptimize-every").is_none() {
+            bail!(
+                "--shadow-rate needs --reoptimize-every: shadow scoring spends real \
+                 budget filling the observation window, and only the reoptimizer \
+                 reads it"
+            );
+        }
+        let cache_touch = a.get_usize("cache-touch").unwrap_or(1);
+        if cache_touch == 0 {
+            bail!("--cache-touch must be >= 1 (1 = exact LRU)");
+        }
+        let window = a.get_usize("window").unwrap_or(2048);
+        if window == 0 {
+            bail!("--window must be >= 1");
+        }
+        if let Some(cap) = a.get_f64("budget-cap") {
+            if cap <= 0.0 {
+                bail!("--budget-cap must be positive, got {cap}");
+            }
+        }
+        let pipeline = match a.get("pipeline") {
+            Some(spec) => PipelineSpec::parse(spec).context("--pipeline")?,
+            None => PipelineSpec::full(),
+        };
+        // --breaker (implied by --scenario): injected faults must degrade
+        // the cascade instead of erroring the service.
+        let health = (a.has("breaker") || a.get("scenario").is_some()).then(|| HealthConfig {
+            trip_consecutive: a.get_usize("breaker-trip").unwrap_or(3) as u64,
+            cooldown: a.get_usize("breaker-cooldown").unwrap_or(16) as u64,
+            max_retries: a.get_usize("retries").unwrap_or(2) as u32,
+            ..Default::default()
+        });
+
+        Ok(ServiceConfig {
+            cache_enabled: !a.has("no-cache"),
+            cache_capacity: a.get_usize("cache-capacity").unwrap_or(4096),
+            cache_min_similarity: if a.has("cache-similar") { 0.8 } else { 1.0 },
+            cache_shards: a.get_usize("cache-shards").unwrap_or(0),
+            cache_touch_period: cache_touch as u32,
+            baseline_locks: false,
+            prompt_policy: match a.get_usize("prompt-keep") {
+                Some(k) => PromptPolicy::Fixed(k),
+                None => PromptPolicy::Full,
+            },
+            budget_cap_usd: a.get_f64("budget-cap"),
+            window_capacity: window,
+            window_half_life: a.get_f64("window-half-life"),
+            shadow: (shadow_rate > 0.0).then(|| ShadowConfig {
+                rate: shadow_rate,
+                budget_usd: a.get_f64("shadow-budget"),
+                ..Default::default()
+            }),
+            health,
+            pipeline,
+        })
+    }
+}
+
+/// Driver-level serving knobs parsed from the same flag tables: the
+/// scenario timeline, re-optimization cadence, concat grouping, and
+/// report sinks. Entry points that drive a query loop share this so the
+/// flags behave identically everywhere.
+#[derive(Debug, Clone)]
+pub struct ServeTuning {
+    /// Scripted fault timeline (`--scenario`), already resolved from the
+    /// builtin registry or loaded from disk.
+    pub scenario: Option<ScenarioTimeline>,
+    /// Re-learn cadence in answered queries (`--reoptimize-every`).
+    pub reoptimize_every: Option<usize>,
+    /// Observation rows required before the reoptimizer acts.
+    pub min_window: usize,
+    /// Swap margin (`--hysteresis`).
+    pub hysteresis: f64,
+    /// Concatenation group size for `answer_batch` (`--concat`).
+    pub concat_group: usize,
+    /// Plan-swap log sink (`--swap-log`).
+    pub swap_log: Option<String>,
+    /// Canonical metrics-snapshot sink (`--metrics-json`).
+    pub metrics_json: Option<String>,
+}
+
+impl ServeTuning {
+    /// Parse the driver knobs; resolves `--scenario` to a timeline.
+    pub fn from_args(args: &Args) -> Result<ServeTuning> {
+        let a = Table(args);
+        let scenario = match a.get("scenario") {
+            Some(s) => Some(match ScenarioTimeline::builtin(s) {
+                Some(t) => t,
+                None => ScenarioTimeline::load(Path::new(s))
+                    .with_context(|| format!("--scenario {s}"))?,
+            }),
+            None => None,
+        };
+        let reoptimize_every = a.get_usize("reoptimize-every");
+        if reoptimize_every == Some(0) {
+            bail!("--reoptimize-every must be >= 1");
+        }
+        let hysteresis = a.get_f64("hysteresis").unwrap_or(0.005);
+        if hysteresis < 0.0 {
+            bail!("--hysteresis must be >= 0, got {hysteresis}");
+        }
+        Ok(ServeTuning {
+            scenario,
+            reoptimize_every,
+            min_window: a.get_usize("min-window").unwrap_or(128),
+            hysteresis,
+            concat_group: a.get_usize("concat").unwrap_or(1).max(1),
+            swap_log: a.get("swap-log").map(str::to_string),
+            metrics_json: a.get("metrics-json").map(str::to_string),
+        })
+    }
+
+    /// Reoptimizer configuration at `budget_usd_per_10k` — `None` when
+    /// `--reoptimize-every` is off. The interval only matters for
+    /// [`crate::server::reoptimizer::Reoptimizer::spawn`]-style
+    /// background stepping (frugald); query-loop drivers call `step()`
+    /// on their own cadence.
+    pub fn reopt_config(&self, budget_usd_per_10k: f64) -> Option<ReoptimizerConfig> {
+        self.reoptimize_every.map(|_| ReoptimizerConfig {
+            budget_usd_per_10k,
+            min_window: self.min_window,
+            hysteresis: self.hysteresis,
+            ..Default::default()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn empty_args_yield_the_full_default_stack() {
+        let cfg = ServiceConfig::from_args(&parse("")).unwrap();
+        assert!(cfg.cache_enabled);
+        assert_eq!(cfg.cache_capacity, 4096);
+        assert_eq!(cfg.cache_min_similarity, 1.0);
+        assert!(cfg.shadow.is_none());
+        assert!(cfg.health.is_none());
+        assert!(!cfg.baseline_locks);
+        assert_eq!(cfg.pipeline.describe(), PipelineSpec::full().describe());
+        let t = ServeTuning::from_args(&parse("")).unwrap();
+        assert!(t.scenario.is_none());
+        assert!(t.reoptimize_every.is_none());
+        assert_eq!(t.concat_group, 1);
+        assert!(t.reopt_config(1.0).is_none());
+    }
+
+    #[test]
+    fn shadow_rate_demands_reoptimize_every() {
+        assert!(ServiceConfig::from_args(&parse("--shadow-rate 0.2")).is_err());
+        let cfg =
+            ServiceConfig::from_args(&parse("--shadow-rate 0.2 --reoptimize-every 50")).unwrap();
+        assert_eq!(cfg.shadow.as_ref().unwrap().rate, 0.2);
+        assert!(ServiceConfig::from_args(&parse("--shadow-rate 1.5 --reoptimize-every 50")).is_err());
+    }
+
+    #[test]
+    fn breaker_and_scenario_turn_health_on() {
+        let cfg = ServiceConfig::from_args(&parse("--breaker --breaker-trip 5 --retries 1"))
+            .unwrap();
+        let h = cfg.health.unwrap();
+        assert_eq!(h.trip_consecutive, 5);
+        assert_eq!(h.max_retries, 1);
+        assert_eq!(h.cooldown, 16);
+        let cfg = ServiceConfig::from_args(&parse("--scenario storm")).unwrap();
+        assert!(cfg.health.is_some());
+        let t = ServeTuning::from_args(&parse("--scenario storm")).unwrap();
+        assert!(t.scenario.is_some());
+    }
+
+    #[test]
+    fn degenerate_knobs_are_rejected() {
+        assert!(ServiceConfig::from_args(&parse("--cache-touch 0")).is_err());
+        assert!(ServiceConfig::from_args(&parse("--window 0")).is_err());
+        assert!(ServiceConfig::from_args(&parse("--budget-cap -1")).is_err());
+        assert!(ServiceConfig::from_args(&parse("--pipeline cache,nonsense")).is_err());
+        assert!(ServeTuning::from_args(&parse("--reoptimize-every 0")).is_err());
+        assert!(ServeTuning::from_args(&parse("--hysteresis -0.1")).is_err());
+    }
+
+    #[test]
+    fn reopt_config_carries_the_tuning() {
+        let t = ServeTuning::from_args(&parse(
+            "--reoptimize-every 40 --hysteresis 0.01 --min-window 64",
+        ))
+        .unwrap();
+        let rc = t.reopt_config(6.5).unwrap();
+        assert_eq!(rc.budget_usd_per_10k, 6.5);
+        assert_eq!(rc.min_window, 64);
+        assert_eq!(rc.hysteresis, 0.01);
+    }
+
+    #[test]
+    fn table_covers_every_flag_and_usage_renders_it() {
+        let mut names: Vec<&str> =
+            SERVE_FLAGS.iter().chain(TUNING_FLAGS).map(|f| f.name).collect();
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "duplicate flag in the tables");
+        let usage = serve_usage();
+        for n in names {
+            assert!(usage.contains(&format!("--{n}")), "usage text is missing --{n}");
+        }
+    }
+}

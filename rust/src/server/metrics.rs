@@ -10,6 +10,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::coordinator::responses::{SplitTable, TableBuilder};
+use crate::util::json::Value;
 
 /// Log-spaced latency buckets in microseconds (upper bounds).
 pub const BUCKETS_US: [u64; 12] = [
@@ -494,6 +495,120 @@ pub struct MetricsSnapshot {
     pub max_us: u64,
 }
 
+impl ModelWindowSnapshot {
+    /// The canonical wire form of one model's observed window.
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("invocations".to_string(), Value::Num(self.invocations as f64));
+        m.insert("accepted".to_string(), Value::Num(self.accepted as f64));
+        m.insert("cost_usd".to_string(), Value::Num(self.cost_usd));
+        m.insert(
+            "mean_accepted_score".to_string(),
+            Value::Num(self.mean_accepted_score),
+        );
+        m.insert("labeled".to_string(), Value::Num(self.labeled as f64));
+        m.insert(
+            "observed_accuracy".to_string(),
+            Value::Num(self.observed_accuracy),
+        );
+        m.insert("skips".to_string(), Value::Num(self.skips as f64));
+        Value::Obj(m)
+    }
+
+    /// Parse a snapshot serialized by [`ModelWindowSnapshot::to_value`].
+    pub fn from_value(v: &Value) -> Result<ModelWindowSnapshot> {
+        use anyhow::Context;
+        let num =
+            |k: &str| v.get(k).as_f64().with_context(|| format!("model window missing `{k}`"));
+        Ok(ModelWindowSnapshot {
+            invocations: num("invocations")? as u64,
+            accepted: num("accepted")? as u64,
+            cost_usd: num("cost_usd")?,
+            mean_accepted_score: num("mean_accepted_score")?,
+            labeled: num("labeled")? as u64,
+            observed_accuracy: num("observed_accuracy")?,
+            skips: num("skips")? as u64,
+        })
+    }
+}
+
+impl MetricsSnapshot {
+    /// The canonical wire form of a metrics snapshot: what `frugald`
+    /// replies to `/metrics`, what `serve --metrics-json` writes, and
+    /// what `report metrics` renders — all three speak exactly this
+    /// schema, pinned bit-exactly by `metrics_snapshot_wire_roundtrip`.
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("queries".to_string(), Value::Num(self.queries as f64));
+        m.insert("cache_hits".to_string(), Value::Num(self.cache_hits as f64));
+        m.insert(
+            "cascade_invocations".to_string(),
+            Value::Num(self.cascade_invocations as f64),
+        );
+        m.insert("concat_groups".to_string(), Value::Num(self.concat_groups as f64));
+        m.insert(
+            "stopped_at".to_string(),
+            Value::Arr(self.stopped_at.iter().map(|&c| Value::Num(c as f64)).collect()),
+        );
+        m.insert(
+            "stopped_at_overflow".to_string(),
+            Value::Num(self.stopped_at_overflow as f64),
+        );
+        m.insert("errors".to_string(), Value::Num(self.errors as f64));
+        m.insert("plan_swaps".to_string(), Value::Num(self.plan_swaps as f64));
+        m.insert(
+            "per_model".to_string(),
+            Value::Arr(self.per_model.iter().map(ModelWindowSnapshot::to_value).collect()),
+        );
+        m.insert("window_len".to_string(), Value::Num(self.window_len as f64));
+        m.insert("window_total".to_string(), Value::Num(self.window_total as f64));
+        m.insert("mean_latency_us".to_string(), Value::Num(self.mean_latency_us));
+        m.insert("p50_us".to_string(), Value::Num(self.p50_us as f64));
+        m.insert("p95_us".to_string(), Value::Num(self.p95_us as f64));
+        m.insert("p99_us".to_string(), Value::Num(self.p99_us as f64));
+        m.insert("max_us".to_string(), Value::Num(self.max_us as f64));
+        Value::Obj(m)
+    }
+
+    /// Parse a snapshot serialized by [`MetricsSnapshot::to_value`].
+    pub fn from_value(v: &Value) -> Result<MetricsSnapshot> {
+        use anyhow::Context;
+        let num = |k: &str| {
+            v.get(k).as_f64().with_context(|| format!("metrics snapshot missing `{k}`"))
+        };
+        Ok(MetricsSnapshot {
+            queries: num("queries")? as u64,
+            cache_hits: num("cache_hits")? as u64,
+            cascade_invocations: num("cascade_invocations")? as u64,
+            concat_groups: num("concat_groups")? as u64,
+            stopped_at: v
+                .get("stopped_at")
+                .as_arr()
+                .context("metrics snapshot missing `stopped_at`")?
+                .iter()
+                .map(|c| c.as_f64().map(|f| f as u64).context("bad stop count"))
+                .collect::<Result<_>>()?,
+            stopped_at_overflow: num("stopped_at_overflow")? as u64,
+            errors: num("errors")? as u64,
+            plan_swaps: num("plan_swaps")? as u64,
+            per_model: v
+                .get("per_model")
+                .as_arr()
+                .context("metrics snapshot missing `per_model`")?
+                .iter()
+                .map(ModelWindowSnapshot::from_value)
+                .collect::<Result<_>>()?,
+            window_len: num("window_len")? as usize,
+            window_total: num("window_total")? as u64,
+            mean_latency_us: num("mean_latency_us")?,
+            p50_us: num("p50_us")? as u64,
+            p95_us: num("p95_us")? as u64,
+            p99_us: num("p99_us")? as u64,
+            max_us: num("max_us")? as u64,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -663,5 +778,75 @@ mod tests {
     fn empty_window_has_no_table() {
         let w = ObservationWindow::new(3, 8);
         assert!(w.snapshot_table("toy", &["a".into(), "b".into(), "c".into()]).is_none());
+    }
+
+    #[test]
+    fn metrics_snapshot_wire_roundtrip_is_bit_exact() {
+        let snap = MetricsSnapshot {
+            queries: 12345,
+            cache_hits: 678,
+            cascade_invocations: 11000,
+            concat_groups: 42,
+            stopped_at: vec![9000, 1500, 500, 0, 0, 0, 0, 0],
+            stopped_at_overflow: 3,
+            errors: 1,
+            plan_swaps: 7,
+            per_model: vec![
+                ModelWindowSnapshot {
+                    invocations: 1000,
+                    accepted: 900,
+                    cost_usd: 0.1 + 0.2,
+                    mean_accepted_score: 0.87654321,
+                    labeled: 500,
+                    observed_accuracy: 1.0 / 3.0,
+                    skips: 4,
+                },
+                ModelWindowSnapshot {
+                    invocations: 0,
+                    accepted: 0,
+                    cost_usd: 0.0,
+                    mean_accepted_score: 0.0,
+                    labeled: 0,
+                    observed_accuracy: 0.0,
+                    skips: 0,
+                },
+            ],
+            window_len: 256,
+            window_total: 9999,
+            mean_latency_us: 1234.56789,
+            p50_us: 1000,
+            p95_us: 2500,
+            p99_us: 5000,
+            max_us: 100000,
+        };
+        let json = snap.to_value().to_json();
+        let back = MetricsSnapshot::from_value(&Value::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.queries, snap.queries);
+        assert_eq!(back.cache_hits, snap.cache_hits);
+        assert_eq!(back.cascade_invocations, snap.cascade_invocations);
+        assert_eq!(back.concat_groups, snap.concat_groups);
+        assert_eq!(back.stopped_at, snap.stopped_at);
+        assert_eq!(back.stopped_at_overflow, snap.stopped_at_overflow);
+        assert_eq!(back.errors, snap.errors);
+        assert_eq!(back.plan_swaps, snap.plan_swaps);
+        assert_eq!(back.per_model.len(), snap.per_model.len());
+        for (b, s) in back.per_model.iter().zip(&snap.per_model) {
+            assert_eq!(b.invocations, s.invocations);
+            assert_eq!(b.accepted, s.accepted);
+            assert_eq!(b.cost_usd.to_bits(), s.cost_usd.to_bits());
+            assert_eq!(b.mean_accepted_score.to_bits(), s.mean_accepted_score.to_bits());
+            assert_eq!(b.labeled, s.labeled);
+            assert_eq!(b.observed_accuracy.to_bits(), s.observed_accuracy.to_bits());
+            assert_eq!(b.skips, s.skips);
+        }
+        assert_eq!(back.window_len, snap.window_len);
+        assert_eq!(back.window_total, snap.window_total);
+        assert_eq!(back.mean_latency_us.to_bits(), snap.mean_latency_us.to_bits());
+        assert_eq!(back.p50_us, snap.p50_us);
+        assert_eq!(back.p95_us, snap.p95_us);
+        assert_eq!(back.p99_us, snap.p99_us);
+        assert_eq!(back.max_us, snap.max_us);
+        // Deterministic serializer: a second trip is byte-identical.
+        assert_eq!(back.to_value().to_json(), json);
     }
 }

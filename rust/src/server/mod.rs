@@ -7,10 +7,17 @@
 //! erroring it, and the online re-optimization loop that re-learns and
 //! hot-swaps the served cascade as traffic drifts — with shadow + decay
 //! windows the loop is self-contained: no offline labels enter it.
+//!
+//! Two modules make it an actual network service: [`config`] is the one
+//! config surface (flag table → [`service::ServiceConfig`]) shared by
+//! every entry point, and [`net`] is the TCP front door (`frugald/1`
+//! line-delimited JSON) that `frugald` binds over the composed service.
 
 pub mod batcher;
+pub mod config;
 pub mod health;
 pub mod metrics;
+pub mod net;
 pub mod reoptimizer;
 pub mod service;
 pub mod shadow;

@@ -1,0 +1,624 @@
+//! The network front door: a hand-rolled thread-per-core TCP accept
+//! loop serving line-delimited JSON over a [`FrugalService`] — no
+//! framework, no async runtime, same vendored-substrate discipline as
+//! the rest of the crate.
+//!
+//! ## Protocol (`frugald/1`)
+//!
+//! One frame per `\n`-terminated line, both directions. Query frames
+//! are JSON objects:
+//!
+//! ```json
+//! {"query": [17, 42, 9], "id": 7}
+//! ```
+//!
+//! and are answered with the canonical [`ServiceAnswer`] wire schema
+//! ([`ServiceAnswer::to_value`]) plus the echoed `id` (if any). Admin
+//! frames start with `/`:
+//!
+//! * `/health` — liveness + plan version + lifetime counters;
+//! * `/metrics` — the full [`MetricsSnapshot`] wire schema
+//!   (`MetricsSnapshot::to_value`, parseable by `from_value`);
+//! * `/reprice <model> <mult>` — marketplace price step (index or
+//!   name), republishes the plan;
+//! * `/shutdown` — graceful drain: acceptors stop, in-flight requests
+//!   finish, every connection closes.
+//!
+//! Errors are replies, not disconnects: a malformed or oversized frame
+//! gets `{"error": ..., "code": ...}` and the connection survives —
+//! only EOF/io failure closes it. Per-connection backpressure is
+//! structural: each connection is served synchronously (read → answer →
+//! write), so a client gets at most one answer in flight per pipelined
+//! batch it actually wrote, and a stalled reader stalls only itself.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::server::service::{FrugalService, ServiceAnswer};
+use crate::util::json::Value;
+
+/// Protocol identifier echoed by `/health`.
+pub const WIRE_PROTOCOL: &str = "frugald/1";
+
+/// Tuning for the TCP front door.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Hard per-frame byte cap; longer lines are drained to the next
+    /// newline and rejected with an `oversized` error reply.
+    pub max_line_bytes: usize,
+    /// Concurrent-connection cap; accepts beyond it are refused with an
+    /// `overloaded` error line.
+    pub max_connections: usize,
+    /// Acceptor threads (thread-per-core by default).
+    pub accept_threads: usize,
+    /// Poll tick at which acceptors and idle connections observe the
+    /// shutdown flag.
+    pub tick: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_line_bytes: 64 * 1024,
+            max_connections: 1024,
+            accept_threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            tick: Duration::from_millis(25),
+        }
+    }
+}
+
+/// Lifetime counters of one front door (all relaxed atomics).
+#[derive(Debug, Default)]
+pub struct NetStats {
+    /// Connections accepted.
+    pub accepted: AtomicU64,
+    /// Connections refused at the `max_connections` cap.
+    pub rejected: AtomicU64,
+    /// Frames that reached the dispatcher.
+    pub requests: AtomicU64,
+    /// Query frames answered successfully.
+    pub answered: AtomicU64,
+    /// Admin frames served.
+    pub admin: AtomicU64,
+    /// Malformed/unparseable/oversized frames (error reply sent, connection kept).
+    pub protocol_errors: AtomicU64,
+    /// Oversized frames among the protocol errors.
+    pub oversized: AtomicU64,
+    /// Query frames whose answer failed service-side.
+    pub answer_errors: AtomicU64,
+    /// Connections that vanished mid-frame (EOF with bytes pending).
+    pub half_frames: AtomicU64,
+}
+
+impl NetStats {
+    /// JSON form (all counters), embedded in `/health` replies and the
+    /// daemon's exit report.
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        let mut put = |k: &str, v: &AtomicU64| {
+            m.insert(k.to_string(), Value::Num(v.load(Ordering::Relaxed) as f64));
+        };
+        put("accepted", &self.accepted);
+        put("rejected", &self.rejected);
+        put("requests", &self.requests);
+        put("answered", &self.answered);
+        put("admin", &self.admin);
+        put("protocol_errors", &self.protocol_errors);
+        put("oversized", &self.oversized);
+        put("answer_errors", &self.answer_errors);
+        put("half_frames", &self.half_frames);
+        Value::Obj(m)
+    }
+
+    fn bump(&self, c: &AtomicU64) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Active-connection gauge: handlers hold a guard; `join` waits for the
+/// count to drain after the acceptors stop.
+#[derive(Default)]
+struct ConnGauge {
+    active: Mutex<usize>,
+    drained: Condvar,
+}
+
+impl ConnGauge {
+    fn current(&self) -> usize {
+        *self.active.lock().unwrap()
+    }
+
+    fn enter(self: &Arc<Self>) -> ConnGuard {
+        *self.active.lock().unwrap() += 1;
+        ConnGuard(self.clone())
+    }
+
+    fn wait_drained(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut active = self.active.lock().unwrap();
+        while *active > 0 {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            let (a, _) = self.drained.wait_timeout(active, left).unwrap();
+            active = a;
+        }
+        true
+    }
+}
+
+struct ConnGuard(Arc<ConnGauge>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        *self.0.active.lock().unwrap() -= 1;
+        self.0.drained.notify_all();
+    }
+}
+
+/// One bound, serving front door. Dropping it (after [`FrontDoor::join`])
+/// releases the listening socket.
+pub struct FrontDoor {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<NetStats>,
+    gauge: Arc<ConnGauge>,
+    acceptors: Vec<JoinHandle<()>>,
+    /// Kept so the listening socket lives exactly as long as the door.
+    _listener: TcpListener,
+}
+
+impl FrontDoor {
+    /// Bind `addr` (port 0 picks an ephemeral port — read it back via
+    /// [`FrontDoor::local_addr`]) and start the acceptor threads.
+    pub fn bind(svc: Arc<FrugalService>, addr: &str, cfg: NetConfig) -> Result<FrontDoor> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding front door on {addr}"))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let addr = listener.local_addr().context("local_addr")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(NetStats::default());
+        let gauge = Arc::new(ConnGauge::default());
+        let cfg = Arc::new(cfg);
+        let mut acceptors = Vec::new();
+        for _ in 0..cfg.accept_threads.max(1) {
+            let l = listener.try_clone().context("cloning listener")?;
+            let svc = svc.clone();
+            let shutdown = shutdown.clone();
+            let stats = stats.clone();
+            let gauge = gauge.clone();
+            let cfg = cfg.clone();
+            acceptors.push(std::thread::spawn(move || {
+                accept_loop(l, svc, shutdown, stats, gauge, cfg)
+            }));
+        }
+        Ok(FrontDoor { addr, shutdown, stats, gauge, acceptors, _listener: listener })
+    }
+
+    /// The bound address (resolves `--listen host:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> Arc<NetStats> {
+        self.stats.clone()
+    }
+
+    /// Ask the door to drain (what `/shutdown` does from the wire).
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until shutdown is requested (by [`FrontDoor::request_shutdown`]
+    /// or a `/shutdown` frame) and every connection has drained.
+    pub fn join(self) -> Result<Arc<NetStats>> {
+        for a in self.acceptors {
+            a.join().map_err(|_| anyhow::anyhow!("acceptor thread panicked"))?;
+        }
+        // Acceptors only exit on the shutdown flag; give in-flight
+        // connections a grace period to finish their current frame.
+        if !self.gauge.wait_drained(Duration::from_secs(10)) {
+            anyhow::bail!("{} connections still active after drain grace", self.gauge.current());
+        }
+        Ok(self.stats)
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    svc: Arc<FrugalService>,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<NetStats>,
+    gauge: Arc<ConnGauge>,
+    cfg: Arc<NetConfig>,
+) {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if gauge.current() >= cfg.max_connections {
+                    stats.bump(&stats.rejected);
+                    refuse(stream);
+                    continue;
+                }
+                stats.bump(&stats.accepted);
+                let guard = gauge.enter();
+                let svc = svc.clone();
+                let shutdown = shutdown.clone();
+                let stats = stats.clone();
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    let _guard = guard;
+                    // Io errors just close this connection; the error
+                    // surface of the protocol is in-band replies.
+                    let _ = serve_conn(&svc, stream, &shutdown, &stats, &cfg);
+                });
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(cfg.tick);
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => {
+                // Transient accept failure (EMFILE, ECONNABORTED, ...):
+                // back off a tick instead of killing the acceptor.
+                std::thread::sleep(cfg.tick);
+            }
+        }
+    }
+}
+
+fn refuse(mut stream: TcpStream) {
+    let _ = stream.write_all(
+        format!("{}\n", error_reply("server at connection capacity", "overloaded", None).to_json())
+            .as_bytes(),
+    );
+}
+
+/// Outcome of reading one frame.
+enum Frame {
+    /// A complete line (without the trailing `\n`).
+    Line(Vec<u8>),
+    /// The line exceeded `max_line_bytes`; the excess was drained to the
+    /// newline, the connection is intact.
+    Oversized,
+    /// Clean end of stream (`mid_frame` when bytes were pending).
+    Eof { mid_frame: bool },
+}
+
+/// Read one `\n`-delimited frame, tolerating arbitrarily fragmented
+/// reads, enforcing the byte cap, and observing the shutdown flag while
+/// idle (the stream carries a read timeout of one tick).
+fn read_frame<R: BufRead>(
+    r: &mut R,
+    max: usize,
+    shutdown: &AtomicBool,
+) -> std::io::Result<Frame> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut dropping = false;
+    loop {
+        let (used, done) = {
+            let chunk = match r.fill_buf() {
+                Ok(c) => c,
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+                {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return Ok(Frame::Eof { mid_frame: dropping || !buf.is_empty() });
+                    }
+                    continue;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if chunk.is_empty() {
+                return Ok(Frame::Eof { mid_frame: dropping || !buf.is_empty() });
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if !dropping && buf.len() + pos > max {
+                        dropping = true;
+                    }
+                    if !dropping {
+                        buf.extend_from_slice(&chunk[..pos]);
+                    }
+                    (pos + 1, true)
+                }
+                None => {
+                    if !dropping {
+                        buf.extend_from_slice(chunk);
+                        if buf.len() > max {
+                            dropping = true;
+                            buf.clear();
+                        }
+                    }
+                    (chunk.len(), false)
+                }
+            }
+        };
+        r.consume(used);
+        if done {
+            return Ok(if dropping { Frame::Oversized } else { Frame::Line(std::mem::take(&mut buf)) });
+        }
+    }
+}
+
+fn serve_conn(
+    svc: &FrugalService,
+    stream: TcpStream,
+    shutdown: &AtomicBool,
+    stats: &NetStats,
+    cfg: &NetConfig,
+) -> Result<()> {
+    // Accepted sockets may inherit nonblocking from the listener on some
+    // platforms; force blocking + a tick-sized read timeout so idle
+    // connections observe shutdown without busy-polling.
+    stream.set_nonblocking(false).ok();
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(cfg.tick)).ok();
+    let mut writer = stream.try_clone().context("cloning connection stream")?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let reply = match read_frame(&mut reader, cfg.max_line_bytes, shutdown)? {
+            Frame::Eof { mid_frame } => {
+                if mid_frame {
+                    stats.bump(&stats.half_frames);
+                }
+                return Ok(());
+            }
+            Frame::Oversized => {
+                stats.bump(&stats.requests);
+                stats.bump(&stats.protocol_errors);
+                stats.bump(&stats.oversized);
+                error_reply(
+                    &format!("frame exceeds {} bytes", cfg.max_line_bytes),
+                    "oversized",
+                    None,
+                )
+            }
+            Frame::Line(bytes) => {
+                if bytes.iter().all(u8::is_ascii_whitespace) {
+                    continue; // blank keep-alive line
+                }
+                stats.bump(&stats.requests);
+                match dispatch(svc, &bytes, shutdown, stats) {
+                    Some(v) => v,
+                    None => continue,
+                }
+            }
+        };
+        writer.write_all(reply.to_json().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+fn error_reply(msg: &str, code: &str, id: Option<Value>) -> Value {
+    let mut m = std::collections::HashMap::new();
+    m.insert("error".to_string(), Value::Str(msg.to_string()));
+    m.insert("code".to_string(), Value::Str(code.to_string()));
+    if let Some(id) = id {
+        m.insert("id".to_string(), id);
+    }
+    Value::Obj(m)
+}
+
+fn dispatch(
+    svc: &FrugalService,
+    line: &[u8],
+    shutdown: &AtomicBool,
+    stats: &NetStats,
+) -> Option<Value> {
+    let text = match std::str::from_utf8(line) {
+        Ok(t) => t.trim(),
+        Err(_) => {
+            stats.bump(&stats.protocol_errors);
+            return Some(error_reply("frame is not UTF-8", "bad_frame", None));
+        }
+    };
+    if let Some(verb) = text.strip_prefix('/') {
+        stats.bump(&stats.admin);
+        return Some(admin(svc, verb, shutdown, stats));
+    }
+    let v = match Value::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            stats.bump(&stats.protocol_errors);
+            return Some(error_reply(&format!("bad JSON: {e}"), "bad_json", None));
+        }
+    };
+    let id = match v.get("id") {
+        Value::Null => None,
+        other => Some(other.clone()),
+    };
+    let tokens: Option<Vec<i32>> = v
+        .get("query")
+        .as_arr()
+        .map(|arr| arr.iter().filter_map(|t| t.as_f64().map(|f| f as i32)).collect());
+    let tokens = match tokens {
+        Some(t) if !t.is_empty() && t.len() == v.get("query").as_arr().unwrap().len() => t,
+        _ => {
+            stats.bump(&stats.protocol_errors);
+            return Some(error_reply(
+                "`query` must be a non-empty array of integer tokens",
+                "bad_request",
+                id,
+            ));
+        }
+    };
+    match svc.answer(&tokens) {
+        Ok(ans) => {
+            stats.bump(&stats.answered);
+            let mut reply = match ans.to_value() {
+                Value::Obj(m) => m,
+                _ => unreachable!("ServiceAnswer::to_value returns an object"),
+            };
+            if let Some(id) = id {
+                reply.insert("id".to_string(), id);
+            }
+            Some(Value::Obj(reply))
+        }
+        Err(e) => {
+            stats.bump(&stats.answer_errors);
+            Some(error_reply(&format!("answer failed: {e:#}"), "answer_failed", id))
+        }
+    }
+}
+
+fn admin(svc: &FrugalService, verb: &str, shutdown: &AtomicBool, stats: &NetStats) -> Value {
+    let mut parts = verb.split_whitespace();
+    match parts.next().unwrap_or("") {
+        "health" => {
+            let mut m = std::collections::HashMap::new();
+            m.insert("protocol".to_string(), Value::Str(WIRE_PROTOCOL.to_string()));
+            m.insert("status".to_string(), Value::Str("ok".to_string()));
+            m.insert("plan_version".to_string(), Value::Num(svc.plan_version() as f64));
+            m.insert("spend_usd".to_string(), Value::Num(svc.budget.spent_usd()));
+            m.insert("net".to_string(), stats.to_value());
+            if let Some(h) = svc.health() {
+                m.insert(
+                    "breakers".to_string(),
+                    Value::Arr(h.snapshot().iter().map(|s| s.to_value()).collect()),
+                );
+            }
+            Value::Obj(m)
+        }
+        "metrics" => svc.metrics.snapshot().to_value(),
+        "reprice" => {
+            let (model, mult) = (parts.next(), parts.next().and_then(|m| m.parse::<f64>().ok()));
+            let names = svc.costs().model_names;
+            let model = model.and_then(|m| {
+                m.parse::<usize>().ok().filter(|&i| i < names.len()).or_else(|| {
+                    names.iter().position(|n| n == m)
+                })
+            });
+            match (model, mult) {
+                (Some(model), Some(mult)) if mult > 0.0 => {
+                    match svc.reprice(model, mult, "admin /reprice") {
+                        Ok(version) => {
+                            let mut m = std::collections::HashMap::new();
+                            m.insert("ok".to_string(), Value::Bool(true));
+                            m.insert("model".to_string(), Value::Str(names[model].clone()));
+                            m.insert("plan_version".to_string(), Value::Num(version as f64));
+                            Value::Obj(m)
+                        }
+                        Err(e) => error_reply(&format!("reprice failed: {e:#}"), "reprice_failed", None),
+                    }
+                }
+                _ => error_reply(
+                    "usage: /reprice <model index|name> <positive multiplier>",
+                    "bad_request",
+                    None,
+                ),
+            }
+        }
+        "shutdown" => {
+            shutdown.store(true, Ordering::SeqCst);
+            let mut m = std::collections::HashMap::new();
+            m.insert("ok".to_string(), Value::Bool(true));
+            m.insert("draining".to_string(), Value::Bool(true));
+            Value::Obj(m)
+        }
+        other => error_reply(&format!("unknown admin verb `/{other}`"), "unknown_verb", None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    /// A reader that hands out its payload `chunk` bytes at a time —
+    /// the in-memory stand-in for fragmented TCP reads.
+    struct Chunked {
+        data: Vec<u8>,
+        pos: usize,
+        chunk: usize,
+    }
+
+    impl Read for Chunked {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            let n = self.chunk.min(out.len()).min(self.data.len() - self.pos);
+            out[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn frames(data: &[u8], chunk: usize, max: usize) -> Vec<Frame> {
+        let flag = AtomicBool::new(false);
+        let mut r = BufReader::with_capacity(
+            chunk.max(1),
+            Chunked { data: data.to_vec(), pos: 0, chunk },
+        );
+        let mut out = Vec::new();
+        loop {
+            let f = read_frame(&mut r, max, &flag).unwrap();
+            let eof = matches!(f, Frame::Eof { .. });
+            out.push(f);
+            if eof {
+                return out;
+            }
+        }
+    }
+
+    #[test]
+    fn fragmented_reads_reassemble_lines() {
+        for chunk in [1, 2, 3, 7, 64] {
+            let fs = frames(b"hello\nworld\n", chunk, 1024);
+            assert_eq!(fs.len(), 3, "chunk={chunk}");
+            assert!(matches!(&fs[0], Frame::Line(l) if l == b"hello"));
+            assert!(matches!(&fs[1], Frame::Line(l) if l == b"world"));
+            assert!(matches!(fs[2], Frame::Eof { mid_frame: false }));
+        }
+    }
+
+    #[test]
+    fn oversized_line_is_drained_not_fatal() {
+        let mut data = vec![b'a'; 300];
+        data.push(b'\n');
+        data.extend_from_slice(b"ok\n");
+        for chunk in [1, 5, 512] {
+            let fs = frames(&data, chunk, 100);
+            assert!(matches!(fs[0], Frame::Oversized), "chunk={chunk}");
+            assert!(matches!(&fs[1], Frame::Line(l) if l == b"ok"));
+            assert!(matches!(fs[2], Frame::Eof { mid_frame: false }));
+        }
+    }
+
+    #[test]
+    fn oversized_detection_counts_buffered_prefix() {
+        // 90 bytes buffered + 20 before the newline = 110 > 100: the cap
+        // applies to the whole logical line, not per-chunk.
+        let mut data = vec![b'b'; 110];
+        data.push(b'\n');
+        let fs = frames(&data, 90, 100);
+        assert!(matches!(fs[0], Frame::Oversized));
+    }
+
+    #[test]
+    fn eof_mid_frame_is_flagged() {
+        let fs = frames(b"complete\nhalf", 4, 1024);
+        assert!(matches!(&fs[0], Frame::Line(l) if l == b"complete"));
+        assert!(matches!(fs[1], Frame::Eof { mid_frame: true }));
+    }
+
+    #[test]
+    fn empty_lines_and_exact_cap_pass() {
+        let fs = frames(b"\nabc\n", 2, 3);
+        assert!(matches!(&fs[0], Frame::Line(l) if l.is_empty()));
+        assert!(matches!(&fs[1], Frame::Line(l) if l == b"abc"));
+    }
+}

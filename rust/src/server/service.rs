@@ -161,6 +161,68 @@ pub struct ServiceAnswer {
     pub skipped_stages: Vec<usize>,
 }
 
+impl ServiceAnswer {
+    /// The canonical wire form: what `frugald` writes on the socket for
+    /// every answered query, what the serve summary and `report` render
+    /// from, and what [`ServiceAnswer::from_value`] parses back
+    /// bit-exactly (f64 fields round-trip through the shortest-printing
+    /// serializer in [`crate::util::json`]).
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("answer".to_string(), Value::Num(self.answer as f64));
+        m.insert("from_cache".to_string(), Value::Bool(self.from_cache));
+        m.insert(
+            "stopped_at".to_string(),
+            self.stopped_at.map(|s| Value::Num(s as f64)).unwrap_or(Value::Null),
+        );
+        m.insert(
+            "model".to_string(),
+            self.model.map(|s| Value::Num(s as f64)).unwrap_or(Value::Null),
+        );
+        m.insert("cost_usd".to_string(), Value::Num(self.cost_usd));
+        m.insert("plan_version".to_string(), Value::Num(self.plan_version as f64));
+        m.insert("latency_us".to_string(), Value::Num(self.latency_us as f64));
+        m.insert(
+            "simulated_api_latency_ms".to_string(),
+            Value::Num(self.simulated_api_latency_ms),
+        );
+        m.insert(
+            "skipped_stages".to_string(),
+            Value::Arr(self.skipped_stages.iter().map(|&s| Value::Num(s as f64)).collect()),
+        );
+        Value::Obj(m)
+    }
+
+    /// Parse an answer serialized by [`ServiceAnswer::to_value`].
+    pub fn from_value(v: &Value) -> Result<ServiceAnswer> {
+        use anyhow::Context;
+        Ok(ServiceAnswer {
+            answer: v.get("answer").as_u32().context("answer missing `answer`")?,
+            from_cache: v.get("from_cache").as_bool().context("answer missing `from_cache`")?,
+            stopped_at: v.get("stopped_at").as_usize(),
+            model: v.get("model").as_usize(),
+            cost_usd: v.get("cost_usd").as_f64().context("answer missing `cost_usd`")?,
+            plan_version: v
+                .get("plan_version")
+                .as_f64()
+                .context("answer missing `plan_version`")? as u64,
+            latency_us: v.get("latency_us").as_f64().context("answer missing `latency_us`")?
+                as u64,
+            simulated_api_latency_ms: v
+                .get("simulated_api_latency_ms")
+                .as_f64()
+                .context("answer missing `simulated_api_latency_ms`")?,
+            skipped_stages: v
+                .get("skipped_stages")
+                .as_arr()
+                .context("answer missing `skipped_stages`")?
+                .iter()
+                .map(|s| s.as_usize().context("bad skipped stage index"))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
 /// One immutable served-plan generation: the learned plan plus the live
 /// and degraded cascades compiled from it. Never mutated after build —
 /// swaps replace the whole bundle.
@@ -725,5 +787,53 @@ mod tests {
             SwapEvent::from_value(&Value::parse(&ev.to_value().to_json()).unwrap()).unwrap();
         assert_eq!(back.window_accuracy, None);
         assert_eq!(back.window_avg_cost, None);
+    }
+
+    #[test]
+    fn service_answer_wire_roundtrip_is_bit_exact() {
+        // Deliberately awkward floats: the wire schema must round-trip
+        // them to the exact same bits (shortest-printing f64 serializer).
+        let answers = [
+            ServiceAnswer {
+                answer: 3,
+                from_cache: false,
+                stopped_at: Some(2),
+                model: Some(5),
+                cost_usd: 0.1 + 0.2,
+                plan_version: 987654321,
+                latency_us: 1_234_567,
+                simulated_api_latency_ms: 123.456789012345,
+                skipped_stages: vec![0, 3],
+            },
+            ServiceAnswer {
+                answer: 0,
+                from_cache: true,
+                stopped_at: None,
+                model: None,
+                cost_usd: 1e-17,
+                plan_version: 1,
+                latency_us: 0,
+                simulated_api_latency_ms: 0.0,
+                skipped_stages: vec![],
+            },
+        ];
+        for a in &answers {
+            let json = a.to_value().to_json();
+            let back = ServiceAnswer::from_value(&Value::parse(&json).unwrap()).unwrap();
+            assert_eq!(back.answer, a.answer);
+            assert_eq!(back.from_cache, a.from_cache);
+            assert_eq!(back.stopped_at, a.stopped_at);
+            assert_eq!(back.model, a.model);
+            assert_eq!(back.cost_usd.to_bits(), a.cost_usd.to_bits());
+            assert_eq!(back.plan_version, a.plan_version);
+            assert_eq!(back.latency_us, a.latency_us);
+            assert_eq!(
+                back.simulated_api_latency_ms.to_bits(),
+                a.simulated_api_latency_ms.to_bits()
+            );
+            assert_eq!(back.skipped_stages, a.skipped_stages);
+            // Serialization is deterministic: a second trip is identical.
+            assert_eq!(back.to_value().to_json(), json);
+        }
     }
 }

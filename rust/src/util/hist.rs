@@ -1,0 +1,236 @@
+//! HdrHistogram-style log-bucketed latency histogram (hdrhistogram
+//! crate stand-in, same vendored-substrate discipline as the rest of
+//! [`crate::util`]).
+//!
+//! Values are `u64` (the load generator records nanoseconds). The first
+//! `2^SUB_BITS` values are exact unit-width buckets; above that each
+//! power-of-two octave is split into `2^(SUB_BITS-1)` sub-buckets, so
+//! the relative quantile error is bounded by `2^-(SUB_BITS-1)` (~3.2%
+//! at the default `SUB_BITS = 6`) across the full `u64` range — the
+//! property that lets a load generator record millions of latencies
+//! into a few KB without presorting.
+
+/// Sub-bucket resolution: `2^SUB_BITS` exact low values, then
+/// `2^(SUB_BITS-1)` sub-buckets per octave.
+const SUB_BITS: u32 = 6;
+const SUB: u64 = 1 << SUB_BITS; // 64
+const HALF: usize = (SUB / 2) as usize; // 32 sub-buckets per octave
+/// Linear range + one half-resolution row per remaining octave.
+const BUCKETS: usize = SUB as usize + (64 - SUB_BITS as usize) * HALF;
+
+/// Log-bucketed histogram of `u64` samples with bounded relative error.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    /// An empty histogram.
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    fn index(v: u64) -> usize {
+        if v < SUB {
+            return v as usize;
+        }
+        let top = 63 - v.leading_zeros(); // >= SUB_BITS
+        let shift = top - (SUB_BITS - 1); // >= 1
+        let mantissa = ((v >> shift) - SUB / 2) as usize; // in [0, HALF)
+        SUB as usize + (top - SUB_BITS) as usize * HALF + mantissa
+    }
+
+    /// Inclusive upper bound of the values mapping to bucket `i`.
+    fn upper_bound(i: usize) -> u64 {
+        if i < SUB as usize {
+            return i as u64;
+        }
+        let octave = (i - SUB as usize) / HALF;
+        let pos = ((i - SUB as usize) % HALF) as u64;
+        let shift = octave as u32 + 1;
+        let lower = (SUB / 2 + pos) << shift;
+        lower + (1u64 << shift) - 1
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram into this one (per-thread histograms merge
+    /// without locks on the record path).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of the recorded samples (exact — tracked outside the buckets).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Value at quantile `q` in `[0, 1]`: the upper bound of the bucket
+    /// holding the q-th sample, clamped to the recorded max (so the
+    /// reported value is within the bucket's ~3.2% relative width of the
+    /// true order statistic, and `quantile(1.0) == max()`).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::upper_bound(i).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn buckets_are_contiguous_and_ordered() {
+        // Every value maps into a bucket whose bounds contain it, and
+        // bucket indices are monotone in the value.
+        let mut prev = 0usize;
+        for shift in 0..64u32 {
+            for &off in &[0u64, 1, 3] {
+                let v = (1u64 << shift).saturating_add(off);
+                let i = LogHistogram::index(v);
+                assert!(v <= LogHistogram::upper_bound(i), "v={v} i={i}");
+                assert!(i >= prev || v < (1u64 << shift), "indices monotone");
+                prev = i;
+            }
+        }
+        assert!(LogHistogram::index(u64::MAX) < BUCKETS);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in 0..SUB {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), SUB - 1);
+        assert_eq!(h.count(), SUB);
+        // Unit-width buckets below SUB: the median is exact.
+        let q50 = h.quantile(0.5);
+        assert_eq!(q50, SUB / 2 - 1);
+    }
+
+    #[test]
+    fn quantile_relative_error_is_bounded() {
+        let mut h = LogHistogram::new();
+        let mut rng = Rng::new(7);
+        let mut vals: Vec<u64> = (0..10_000).map(|_| 100 + rng.below(10_000_000)).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for &q in &[0.5, 0.95, 0.99, 0.999] {
+            let exact = vals[(((q * vals.len() as f64).ceil() as usize).max(1) - 1).min(vals.len() - 1)];
+            let got = h.quantile(q);
+            let rel = (got as f64 - exact as f64).abs() / exact as f64;
+            assert!(
+                rel <= 1.0 / HALF as f64 + 1e-9,
+                "q={q}: got {got}, exact {exact}, rel err {rel}"
+            );
+            assert!(got >= exact, "bucket upper bound never under-reports");
+        }
+        assert_eq!(h.quantile(1.0), *vals.last().unwrap());
+    }
+
+    #[test]
+    fn merge_equals_recording_everything() {
+        let mut rng = Rng::new(11);
+        let vals: Vec<u64> = (0..5000).map(|_| rng.below(1 << 40)).collect();
+        let mut whole = LogHistogram::new();
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for (i, &v) in vals.iter().enumerate() {
+            whole.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.max(), whole.max());
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.mean(), whole.mean());
+        for &q in &[0.25, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), whole.quantile(q));
+        }
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let mut h = LogHistogram::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            h.record(rng.below(1 << 30));
+        }
+        let qs: Vec<u64> =
+            [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0].iter().map(|&q| h.quantile(q)).collect();
+        for w in qs.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+}

@@ -5,11 +5,13 @@
 //! * [`rng`] — a small deterministic PRNG (rand stand-in),
 //! * [`args`] — CLI flag parsing (clap stand-in),
 //! * [`bench`] — a measurement harness (criterion stand-in),
+//! * [`hist`] — a log-bucketed latency histogram (hdrhistogram stand-in),
 //! * [`prop`] — randomized property testing (proptest stand-in),
 //! * [`sync`] — a wait-free snapshot cell (arc-swap stand-in).
 
 pub mod args;
 pub mod bench;
+pub mod hist;
 pub mod json;
 pub mod prop;
 pub mod rng;

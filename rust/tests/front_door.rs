@@ -1,0 +1,277 @@
+//! Integration tests for the TCP front door (`server::net`) over real
+//! sockets against a hermetic sim-marketplace service — the protocol
+//! edges ci.sh's smoke gate cannot isolate:
+//!
+//! * pipelined requests on one connection answer in order with ids echoed;
+//! * arbitrarily fragmented writes reassemble into frames;
+//! * an oversized line is rejected in-band and the connection survives;
+//! * malformed JSON gets an error reply and the connection survives;
+//! * a mid-stream client disconnect leaves the server healthy (no wedged
+//!   worker, the next connection serves fine, shutdown drains cleanly);
+//! * admin verbs: `/health`, `/metrics` (parsed back through the
+//!   canonical `MetricsSnapshot::from_value` — the wire schema over a
+//!   real socket), `/reprice` (bumps the plan version), `/shutdown`;
+//! * concurrent connections serve with zero protocol errors and exact
+//!   server-side accounting.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use frugalgpt::coordinator::cascade::CascadePlan;
+use frugalgpt::eval::simulate::SimWorld;
+use frugalgpt::server::metrics::MetricsSnapshot;
+use frugalgpt::server::net::{FrontDoor, NetConfig, WIRE_PROTOCOL};
+use frugalgpt::server::service::{FrugalService, ServiceConfig};
+use frugalgpt::util::json::Value;
+
+fn net_cfg() -> NetConfig {
+    NetConfig {
+        tick: Duration::from_millis(5),
+        accept_threads: 2,
+        ..NetConfig::default()
+    }
+}
+
+fn sim_door(cfg: NetConfig) -> (FrontDoor, Vec<Vec<i32>>, Vec<u32>, Arc<FrugalService>) {
+    let world = SimWorld::new(3, 64, 7);
+    let svc = Arc::new(
+        FrugalService::new(
+            CascadePlan::pair(0, 0.7, 2),
+            world.engine().unwrap(),
+            world.costs.clone(),
+            world.meta.clone(),
+            ServiceConfig::default(),
+        )
+        .unwrap(),
+    );
+    let door = FrontDoor::bind(svc.clone(), "127.0.0.1:0", cfg).unwrap();
+    (door, world.rows().to_vec(), world.labels().to_vec(), svc)
+}
+
+fn req(row: &[i32], id: Option<u64>) -> String {
+    let mut m = std::collections::HashMap::new();
+    m.insert(
+        "query".to_string(),
+        Value::Arr(row.iter().map(|&t| Value::Num(t as f64)).collect()),
+    );
+    if let Some(id) = id {
+        m.insert("id".to_string(), Value::Num(id as f64));
+    }
+    let mut s = Value::Obj(m).to_json();
+    s.push('\n');
+    s
+}
+
+fn connect(door: &FrontDoor) -> (TcpStream, BufReader<TcpStream>) {
+    let s = TcpStream::connect(door.local_addr()).unwrap();
+    s.set_nodelay(true).unwrap();
+    let r = BufReader::new(s.try_clone().unwrap());
+    (s, r)
+}
+
+fn read_value(r: &mut BufReader<TcpStream>) -> Value {
+    let mut line = String::new();
+    assert!(r.read_line(&mut line).unwrap() > 0, "server closed the connection");
+    Value::parse(&line).expect("reply must be one JSON line")
+}
+
+#[test]
+fn pipelined_requests_answer_in_order_with_ids() {
+    let (door, rows, labels, _svc) = sim_door(net_cfg());
+    let (mut s, mut r) = connect(&door);
+    // Three requests in ONE write: the framing layer must split them.
+    let batch: String =
+        (0..3).map(|i| req(&rows[i], Some(100 + i as u64))).collect();
+    s.write_all(batch.as_bytes()).unwrap();
+    for i in 0..3u64 {
+        let v = read_value(&mut r);
+        assert_eq!(v.get("id").as_f64(), Some((100 + i) as f64), "replies must keep order");
+        assert!(matches!(v.get("error"), Value::Null), "unexpected error: {}", v.to_json());
+        assert_eq!(v.get("answer").as_u32(), Some(labels[i as usize]));
+        assert!(v.get("cost_usd").as_f64().unwrap() >= 0.0);
+    }
+    drop(s);
+    door.request_shutdown();
+    door.join().unwrap();
+}
+
+#[test]
+fn fragmented_writes_reassemble_into_one_frame() {
+    let (door, rows, labels, _svc) = sim_door(net_cfg());
+    let (mut s, mut r) = connect(&door);
+    let line = req(&rows[5], Some(7));
+    // Dribble the frame a few bytes at a time across the wire.
+    for chunk in line.as_bytes().chunks(3) {
+        s.write_all(chunk).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let v = read_value(&mut r);
+    assert_eq!(v.get("id").as_f64(), Some(7.0));
+    assert_eq!(v.get("answer").as_u32(), Some(labels[5]));
+    drop(s);
+    door.request_shutdown();
+    door.join().unwrap();
+}
+
+#[test]
+fn oversized_line_is_rejected_and_the_connection_survives() {
+    let cfg = NetConfig { max_line_bytes: 128, ..net_cfg() };
+    let (door, rows, labels, _svc) = sim_door(cfg);
+    let (mut s, mut r) = connect(&door);
+    let mut big = vec![b'x'; 4096];
+    big.push(b'\n');
+    s.write_all(&big).unwrap();
+    let v = read_value(&mut r);
+    assert_eq!(v.get("code").as_str(), Some("oversized"));
+    // Same connection, next frame: served normally.
+    s.write_all(req(&rows[0], None).as_bytes()).unwrap();
+    let v = read_value(&mut r);
+    assert_eq!(v.get("answer").as_u32(), Some(labels[0]));
+    drop(s);
+    door.request_shutdown();
+    let stats = door.join().unwrap();
+    assert_eq!(stats.oversized.load(std::sync::atomic::Ordering::Relaxed), 1);
+}
+
+#[test]
+fn malformed_json_gets_an_error_reply_and_the_connection_survives() {
+    let (door, rows, labels, _svc) = sim_door(net_cfg());
+    let (mut s, mut r) = connect(&door);
+    s.write_all(b"{this is not json\n").unwrap();
+    let v = read_value(&mut r);
+    assert_eq!(v.get("code").as_str(), Some("bad_json"));
+    // An empty query array is a request-shape error, also in-band.
+    s.write_all(b"{\"query\": []}\n").unwrap();
+    let v = read_value(&mut r);
+    assert_eq!(v.get("code").as_str(), Some("bad_request"));
+    // The connection still serves.
+    s.write_all(req(&rows[1], None).as_bytes()).unwrap();
+    let v = read_value(&mut r);
+    assert_eq!(v.get("answer").as_u32(), Some(labels[1]));
+    drop(s);
+    door.request_shutdown();
+    let stats = door.join().unwrap();
+    assert_eq!(stats.protocol_errors.load(std::sync::atomic::Ordering::Relaxed), 2);
+}
+
+#[test]
+fn mid_stream_disconnect_leaves_the_server_healthy() {
+    let (door, rows, labels, svc) = sim_door(net_cfg());
+    {
+        // Connection A: half a frame, then vanish.
+        let (mut s, _r) = connect(&door);
+        s.write_all(b"{\"query\": [1, 2,").unwrap();
+        s.flush().unwrap();
+    }
+    // Connection B: served normally, no wedged worker in the way.
+    let (mut s, mut r) = connect(&door);
+    s.write_all(req(&rows[2], None).as_bytes()).unwrap();
+    let v = read_value(&mut r);
+    assert_eq!(v.get("answer").as_u32(), Some(labels[2]));
+    drop(s);
+    // A's handler observes the EOF asynchronously — wait for it before
+    // draining, else shutdown can win the race and it never reads.
+    use std::sync::atomic::Ordering::Relaxed;
+    let stats = door.stats();
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while stats.half_frames.load(Relaxed) == 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    door.request_shutdown();
+    let stats = door.join().unwrap();
+    assert_eq!(stats.half_frames.load(Relaxed), 1);
+    assert_eq!(svc.metrics.snapshot().queries, 1, "the half frame must not reach the service");
+}
+
+#[test]
+fn admin_verbs_speak_the_canonical_schemas() {
+    let (door, rows, _labels, svc) = sim_door(net_cfg());
+    let (mut s, mut r) = connect(&door);
+
+    // /health: protocol id + live plan version.
+    s.write_all(b"/health\n").unwrap();
+    let v = read_value(&mut r);
+    assert_eq!(v.get("protocol").as_str(), Some(WIRE_PROTOCOL));
+    assert_eq!(v.get("status").as_str(), Some("ok"));
+    assert_eq!(v.get("plan_version").as_f64(), Some(svc.plan_version() as f64));
+
+    // Serve two queries, then /metrics must parse back through the
+    // canonical wire schema with exact counts.
+    for row in rows.iter().take(2) {
+        s.write_all(req(row, None).as_bytes()).unwrap();
+        read_value(&mut r);
+    }
+    s.write_all(b"/metrics\n").unwrap();
+    let m = MetricsSnapshot::from_value(&read_value(&mut r))
+        .expect("/metrics must speak MetricsSnapshot::to_value");
+    assert_eq!(m.queries, 2);
+
+    // /reprice republishes the plan — by model name, then by index.
+    let v0 = svc.plan_version();
+    s.write_all(b"/reprice api_0 2.0\n").unwrap();
+    let v = read_value(&mut r);
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{}", v.to_json());
+    assert_eq!(v.get("model").as_str(), Some("api_0"));
+    let v1 = svc.plan_version();
+    assert!(v1 > v0);
+    s.write_all(b"/reprice 1 0.5\n").unwrap();
+    let v = read_value(&mut r);
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{}", v.to_json());
+    assert!(svc.plan_version() > v1);
+    // Bad reprice forms are in-band errors.
+    s.write_all(b"/reprice nonsense\n").unwrap();
+    let v = read_value(&mut r);
+    assert_eq!(v.get("code").as_str(), Some("bad_request"));
+
+    // Unknown verbs are in-band errors.
+    s.write_all(b"/frobnicate\n").unwrap();
+    let v = read_value(&mut r);
+    assert_eq!(v.get("code").as_str(), Some("unknown_verb"));
+
+    // /shutdown drains the door; join returns.
+    s.write_all(b"/shutdown\n").unwrap();
+    let v = read_value(&mut r);
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+    drop(s);
+    door.join().unwrap();
+}
+
+#[test]
+fn concurrent_connections_serve_with_exact_accounting() {
+    let (door, rows, labels, svc) = sim_door(net_cfg());
+    let rows = Arc::new(rows);
+    let labels = Arc::new(labels);
+    let addr = door.local_addr();
+    let mut handles = Vec::new();
+    for c in 0..4usize {
+        let (rows, labels) = (rows.clone(), labels.clone());
+        handles.push(std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_nodelay(true).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut correct = 0usize;
+            for q in 0..50 {
+                let i = (c * 17 + q * 5) % rows.len();
+                s.write_all(req(&rows[i], Some(i as u64)).as_bytes()).unwrap();
+                let mut line = String::new();
+                assert!(r.read_line(&mut line).unwrap() > 0);
+                let v = Value::parse(&line).unwrap();
+                assert!(matches!(v.get("error"), Value::Null), "{line}");
+                correct += (v.get("answer").as_u32() == Some(labels[i])) as usize;
+            }
+            correct
+        }));
+    }
+    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(correct > 0);
+    door.request_shutdown();
+    let stats = door.join().unwrap();
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(stats.accepted.load(Relaxed), 4);
+    assert_eq!(stats.answered.load(Relaxed), 200);
+    assert_eq!(stats.protocol_errors.load(Relaxed), 0);
+    assert_eq!(svc.metrics.snapshot().queries, 200);
+}

@@ -1,0 +1,76 @@
+#!/usr/bin/env bash
+# Run the front-door load harness against a live frugald daemon (sim
+# marketplace) and write the suite JSON to $1.
+#
+#   scripts/bench_front_door.sh OUT.json --smoke   # the ci.sh gate
+#   scripts/bench_front_door.sh OUT.json --bench   # the committed sweep
+#
+# Everything is loopback and hermetic: frugald binds an ephemeral port
+# (written to a temp port file), loadgen drives it over real TCP, then
+# drains it with /shutdown. The OUT path is taken verbatim — pass an
+# absolute path (the Makefile does) so the committed trajectory at the
+# repo root is the file that gets refreshed.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="${1:?usage: bench_front_door.sh OUT.json [--smoke|--bench ...]}"
+shift
+MODE_ARGS=("$@")
+if [ ${#MODE_ARGS[@]} -eq 0 ]; then
+  MODE_ARGS=(--bench)
+fi
+
+cargo build --release --bin frugald --bin loadgen
+BIN=target/release
+
+PORT_FILE="$(mktemp)"
+DAEMON_LOG="$(mktemp)"
+: > "$PORT_FILE"
+DAEMON_PID=""
+cleanup() {
+  [ -n "$DAEMON_PID" ] && kill "$DAEMON_PID" 2>/dev/null || true
+  rm -f "$PORT_FILE" "$DAEMON_LOG"
+}
+trap cleanup EXIT
+
+# Daemon: sim marketplace, ephemeral port. `--sim` last so the Args
+# parser keeps it a switch.
+"$BIN/frugald" --listen 127.0.0.1:0 --port-file "$PORT_FILE" --sim \
+  >"$DAEMON_LOG" 2>&1 &
+DAEMON_PID=$!
+
+# Wait for the bound address (up to 10s), failing fast if the daemon died.
+ADDR=""
+for _ in $(seq 1 100); do
+  if ! kill -0 "$DAEMON_PID" 2>/dev/null; then
+    echo "frugald exited before binding; log:" >&2
+    cat "$DAEMON_LOG" >&2
+    exit 1
+  fi
+  ADDR="$(head -n1 "$PORT_FILE" 2>/dev/null || true)"
+  [ -n "$ADDR" ] && break
+  sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+  echo "frugald never wrote its port file; log:" >&2
+  cat "$DAEMON_LOG" >&2
+  exit 1
+fi
+echo "frugald up at $ADDR"
+
+# Harness: the selected sweep, then /metrics + /shutdown. Exit code is
+# the gate (any protocol error fails the run).
+if ! "$BIN/loadgen" --connect "$ADDR" --json "$OUT" "${MODE_ARGS[@]}" --shutdown; then
+  echo "loadgen failed; daemon log:" >&2
+  cat "$DAEMON_LOG" >&2
+  exit 1
+fi
+
+wait "$DAEMON_PID" || {
+  echo "frugald exited non-zero after drain; log:" >&2
+  cat "$DAEMON_LOG" >&2
+  exit 1
+}
+DAEMON_PID=""
+tail -n 3 "$DAEMON_LOG"
+echo "front-door bench complete: $OUT"

@@ -102,10 +102,42 @@ for mix in ("hit_heavy", "cascade", "swap_storm"):
 print(f"serve bench smoke OK: {len(results)} schema-valid results")
 EOF
 
+# Front-door smoke: a live frugald daemon (sim marketplace) on loopback,
+# driven closed-loop by loadgen over >=2 real TCP connections. loadgen
+# exits non-zero on ANY protocol error, so the script's exit code already
+# gates wire correctness; the python check pins the suite document —
+# schema-valid percentiles and the c2 scenario completing >=200 queries.
+FRONT_SMOKE_JSON="$(mktemp -t bench_front_smoke_XXXXXX.json)"
+trap 'rm -f "$SMOKE_JSON" "$SERVE_SMOKE_JSON" "$FRONT_SMOKE_JSON"' EXIT
+scripts/bench_front_door.sh "$FRONT_SMOKE_JSON" --smoke
+python3 - "$FRONT_SMOKE_JSON" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc.get("suite") == "front_door", f"wrong suite: {doc.get('suite')!r}"
+results = doc.get("results")
+assert isinstance(results, list) and results, \
+    "front-door smoke wrote an empty results array"
+names = set()
+for r in results:
+    assert isinstance(r.get("name"), str) and r["name"], f"result missing name: {r}"
+    assert isinstance(r.get("iters"), int) and r["iters"] > 0, f"bad iters: {r}"
+    for key in ("mean_ns", "p50_ns", "p95_ns", "p99_ns"):
+        assert isinstance(r.get(key), (int, float)) and r[key] > 0, \
+            f"bad {key}: {r}"
+    assert isinstance(r.get("per_sec"), (int, float)) and r["per_sec"] > 0, \
+        f"bad per_sec: {r}"
+    names.add(r["name"])
+assert "front_door/closed/c2" in names, f"missing c2 scenario: {sorted(names)}"
+c2 = next(r for r in results if r["name"] == "front_door/closed/c2")
+assert c2["iters"] >= 200, f"c2 smoke completed too few queries: {c2['iters']}"
+print(f"front-door smoke OK: {len(results)} schema-valid results, "
+      f"c2 completed {c2['iters']} queries")
+EOF
+
 # The committed perf trajectories must stay populated: results non-empty
 # (real measurements — the nightly workflow refreshes them) and the
 # cross-PR history preserved.
-for BENCH_DOC in BENCH_optimizer.json BENCH_serve.json; do
+for BENCH_DOC in BENCH_optimizer.json BENCH_serve.json BENCH_front_door.json; do
 python3 - "$BENCH_DOC" <<'EOF'
 import json, sys
 path = sys.argv[1]
