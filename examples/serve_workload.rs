@@ -151,6 +151,14 @@ fn main() -> Result<()> {
         world.meta.clone(),
         cfg,
     )?);
+    svc.install_frontier(opt.frontier());
+    if let Some(rb) = svc.router_snapshot() {
+        println!(
+            "router: contextual meta-router on ({} routes against plan v{})",
+            rb.routes.len(),
+            rb.plan_version
+        );
+    }
 
     // Build the workload: uniform over the items, or Zipf-repeated (a
     // search-engine-like stream where the completion cache pays off).
@@ -275,6 +283,14 @@ fn main() -> Result<()> {
                 s.retries
             );
         }
+    }
+    if let Some(st) = svc.router_stats() {
+        println!(
+            "router: routed={} abstained={} swaps={}",
+            st.routed,
+            st.abstained,
+            svc.router_swap_history().len()
+        );
     }
     let stats = svc.engine_handle().stats()?;
     println!(

@@ -73,7 +73,7 @@ fn run() -> Result<()> {
     // meta) and the rest is one code path.
     let scenario = tuning.scenario.clone();
     let mut _engine_owner: Option<Engine> = None;
-    let (plan, engine, costs, meta) = if args.has("sim") {
+    let (plan, frontier_points, engine, costs, meta) = if args.has("sim") {
         let w = SimWorld::new(
             args.get_usize("sim-models").unwrap_or(6),
             args.get_usize("sim-items").unwrap_or(512),
@@ -85,12 +85,13 @@ fn run() -> Result<()> {
             w.input_tokens(),
             OptimizerOptions::default(),
         )?;
+        let frontier = opt.frontier();
         let plan = if budget == f64::MAX {
-            opt.frontier().last().context("empty frontier")?.plan.clone()
+            frontier.last().context("empty frontier")?.plan.clone()
         } else {
             opt.optimize(budget)?.plan
         };
-        (plan, w.engine()?, w.costs.clone(), w.meta.clone())
+        (plan, frontier, w.engine()?, w.costs.clone(), w.meta.clone())
     } else {
         let art = Artifacts::load(args.get_or("artifacts", "artifacts"))
             .context("run `make artifacts` first (or pass --sim)")?;
@@ -102,15 +103,16 @@ fn run() -> Result<()> {
             ctx.train_tokens.clone(),
             OptimizerOptions::default(),
         )?;
+        let frontier = opt.frontier();
         let plan = if budget == f64::MAX {
-            opt.frontier().last().context("empty frontier")?.plan.clone()
+            frontier.last().context("empty frontier")?.plan.clone()
         } else {
             opt.optimize(budget)?.plan
         };
         let engine = Engine::start(&art)?;
         let h = engine.handle();
         _engine_owner = Some(engine);
-        (plan, h, ctx.costs.clone(), ctx.meta.clone())
+        (plan, frontier, h, ctx.costs.clone(), ctx.meta.clone())
     };
 
     let engine = match &scenario {
@@ -126,6 +128,14 @@ fn run() -> Result<()> {
     eprintln!("frugald: serving cascade {}", plan.describe(&costs.model_names));
     eprintln!("frugald: pipeline {}", cfg.pipeline.describe());
     let svc = Arc::new(FrugalService::new(plan, engine, costs, meta, cfg)?);
+    svc.install_frontier(frontier_points);
+    if let Some(rb) = svc.router_snapshot() {
+        eprintln!(
+            "frugald: contextual router on ({} routes against plan v{})",
+            rb.routes.len(),
+            rb.plan_version
+        );
+    }
 
     // Background re-optimization: no driver loop exists to call step(),
     // so the cadence flag spawns the interval thread instead.
@@ -198,6 +208,14 @@ fn run() -> Result<()> {
         m.p99_us as f64 / 1000.0,
         stats.to_value().to_json()
     );
+    if let Some(st) = svc.router_stats() {
+        eprintln!(
+            "frugald: router routed={} abstained={} swaps={}",
+            st.routed,
+            st.abstained,
+            svc.router_swap_history().len()
+        );
+    }
     if let Some(path) = tuning.metrics_json.as_deref() {
         std::fs::write(path, m.to_value().to_json())
             .with_context(|| format!("writing metrics snapshot {path}"))?;
@@ -211,6 +229,13 @@ fn run() -> Result<()> {
             Value::Arr(svc.costs().model_names.iter().map(|s| Value::Str(s.clone())).collect()),
         );
         doc.insert("swaps".to_string(), Value::Arr(history.iter().map(|e| e.to_value()).collect()));
+        if svc.router_snapshot().is_some() {
+            let rh = svc.router_swap_history();
+            doc.insert(
+                "router_swaps".to_string(),
+                Value::Arr(rh.iter().map(|e| e.to_value()).collect()),
+            );
+        }
         std::fs::write(path, Value::Obj(doc).to_json())
             .with_context(|| format!("writing swap log {path}"))?;
         eprintln!("frugald: swap log written: {path}");

@@ -30,6 +30,16 @@
 //! modulated) and sent regardless of completions, so queueing delay is
 //! measured instead of hidden — the histogram sees what a client would.
 //!
+//! Open-loop runs report THREE latency distributions to close the
+//! coordinated-omission hole: the service RTT (send → reply, what the
+//! closed loop also measures), the total latency from each request's
+//! *intended Poisson arrival deadline* to its reply, and the queue wait
+//! (deadline → actual send, the send-side stall a backpressured daemon
+//! imposes). A stalled server delays the sender's own writes, which
+//! silently shifts every later send time — measuring from the intended
+//! deadline is what keeps those stalls in the percentiles. The extra
+//! rows land in `--json` as `{run}/total` and `{run}/queue_wait`.
+//!
 //! The workload is the same synthetic item set frugald serves in `--sim`
 //! mode (`--sim-models/--sim-items/--seed` must match the daemon), so
 //! answers are checkable: accuracy is reported alongside latency. After
@@ -109,7 +119,13 @@ impl Workload {
 
 /// What one scenario run produced.
 struct RunOut {
+    /// Service RTT: actual send → reply (both loop modes).
     hist: LogHistogram,
+    /// Intended arrival deadline → reply (open loop only; empty in
+    /// closed-loop runs, where there is no schedule to fall behind).
+    total_hist: LogHistogram,
+    /// Intended arrival deadline → actual send (open loop only).
+    queue_hist: LogHistogram,
     wall: Duration,
     completed: usize,
     correct: usize,
@@ -117,6 +133,27 @@ struct RunOut {
 }
 
 impl RunOut {
+    fn new() -> RunOut {
+        RunOut {
+            hist: LogHistogram::new(),
+            total_hist: LogHistogram::new(),
+            queue_hist: LogHistogram::new(),
+            wall: Duration::ZERO,
+            completed: 0,
+            correct: 0,
+            protocol_errors: 0,
+        }
+    }
+
+    fn absorb(&mut self, other: &RunOut) {
+        self.hist.merge(&other.hist);
+        self.total_hist.merge(&other.total_hist);
+        self.queue_hist.merge(&other.queue_hist);
+        self.completed += other.completed;
+        self.correct += other.correct;
+        self.protocol_errors += other.protocol_errors;
+    }
+
     fn to_result(&self, name: &str) -> Result<BenchResult> {
         if self.completed == 0 {
             bail!("{name}: no requests completed");
@@ -135,6 +172,24 @@ impl RunOut {
         })
     }
 
+    /// Open-loop companion rows: the intended-deadline→reply and
+    /// deadline→send distributions. Empty for closed-loop runs.
+    fn extra_results(&self, name: &str) -> Vec<BenchResult> {
+        if self.total_hist.count() == 0 {
+            return Vec::new();
+        }
+        let row = |suffix: &str, h: &LogHistogram| BenchResult {
+            name: format!("{name}/{suffix}"),
+            iters: self.completed,
+            mean: Duration::from_nanos(h.mean() as u64),
+            p50: Duration::from_nanos(h.quantile(0.50)),
+            p95: Duration::from_nanos(h.quantile(0.95)),
+            p99: Duration::from_nanos(h.quantile(0.99)),
+            max: Duration::from_nanos(h.max()),
+        };
+        vec![row("total", &self.total_hist), row("queue_wait", &self.queue_hist)]
+    }
+
     fn report(&self, name: &str) {
         println!(
             "{name}: {} done in {:.2?} ({:.1}/s) acc={:.4} proto_errs={} \
@@ -147,6 +202,16 @@ impl RunOut {
             Duration::from_nanos(self.hist.quantile(0.50)),
             Duration::from_nanos(self.hist.quantile(0.99)),
         );
+        if self.total_hist.count() > 0 {
+            println!(
+                "{name}: from intended arrival: total p50={:?} p99={:?} \
+                 queue_wait p50={:?} p99={:?}",
+                Duration::from_nanos(self.total_hist.quantile(0.50)),
+                Duration::from_nanos(self.total_hist.quantile(0.99)),
+                Duration::from_nanos(self.queue_hist.quantile(0.50)),
+                Duration::from_nanos(self.queue_hist.quantile(0.99)),
+            );
+        }
     }
 }
 
@@ -192,13 +257,7 @@ fn run_closed(
         let addr = addr.to_string();
         handles.push(std::thread::spawn(move || -> Result<RunOut> {
             let (mut stream, mut reader) = connect(&addr)?;
-            let mut out = RunOut {
-                hist: LogHistogram::new(),
-                wall: Duration::ZERO,
-                completed: 0,
-                correct: 0,
-                protocol_errors: 0,
-            };
+            let mut out = RunOut::new();
             let mut reply = String::new();
             loop {
                 let w = next.fetch_add(1, Ordering::Relaxed);
@@ -217,19 +276,9 @@ fn run_closed(
             }
         }));
     }
-    let mut total = RunOut {
-        hist: LogHistogram::new(),
-        wall: Duration::ZERO,
-        completed: 0,
-        correct: 0,
-        protocol_errors: 0,
-    };
+    let mut total = RunOut::new();
     for h in handles {
-        let out = h.join().expect("closed-loop client panicked")?;
-        total.hist.merge(&out.hist);
-        total.completed += out.completed;
-        total.correct += out.correct;
-        total.protocol_errors += out.protocol_errors;
+        total.absorb(&h.join().expect("closed-loop client panicked")?);
     }
     total.wall = t0.elapsed();
     Ok(total)
@@ -284,26 +333,25 @@ fn run_open(
         handles.push(std::thread::spawn(move || -> Result<RunOut> {
             let (mut stream, mut reader) = connect(&addr)?;
             // Replies arrive in request order on one connection, so a
-            // timestamp deque is all the matching the reader needs.
+            // timestamp deque is all the matching the reader needs. Each
+            // entry carries BOTH clocks: the intended arrival deadline
+            // (coordinated-omission-free origin) and the actual send.
             let pending = Arc::new(Mutex::new(VecDeque::new()));
             let pending_w = pending.clone();
             let reader_handle = std::thread::spawn(move || -> Result<RunOut> {
-                let mut out = RunOut {
-                    hist: LogHistogram::new(),
-                    wall: Duration::ZERO,
-                    completed: 0,
-                    correct: 0,
-                    protocol_errors: 0,
-                };
+                let mut out = RunOut::new();
                 let mut reply = String::new();
                 for _ in 0..n {
                     reply.clear();
                     if reader.read_line(&mut reply)? == 0 {
                         bail!("server closed the connection mid-run");
                     }
-                    let (sent, expect) =
+                    let (deadline, sent, expect): (Instant, Instant, u32) =
                         pending.lock().unwrap().pop_front().context("reply without a request")?;
                     out.hist.record(sent.elapsed().as_nanos() as u64);
+                    out.total_hist.record(deadline.elapsed().as_nanos() as u64);
+                    out.queue_hist
+                        .record(sent.saturating_duration_since(deadline).as_nanos() as u64);
                     tally(&reply, expect, &mut out);
                 }
                 Ok(out)
@@ -320,25 +368,19 @@ fn run_open(
                     std::thread::sleep(sleep);
                 }
                 let i = wl.pick(&mut rng, zipf);
-                pending_w.lock().unwrap().push_back((Instant::now(), wl.labels[i]));
+                // `at` is the intended deadline; a stalled `write_all`
+                // on a previous iteration makes `Instant::now()` late
+                // relative to it — exactly the delay the total/queue
+                // histograms must keep.
+                pending_w.lock().unwrap().push_back((at, Instant::now(), wl.labels[i]));
                 stream.write_all(wl.lines[i].as_bytes())?;
             }
             reader_handle.join().expect("open-loop reader panicked")
         }));
     }
-    let mut total = RunOut {
-        hist: LogHistogram::new(),
-        wall: Duration::ZERO,
-        completed: 0,
-        correct: 0,
-        protocol_errors: 0,
-    };
+    let mut total = RunOut::new();
     for h in handles {
-        let out = h.join().expect("open-loop connection panicked")?;
-        total.hist.merge(&out.hist);
-        total.completed += out.completed;
-        total.correct += out.correct;
-        total.protocol_errors += out.protocol_errors;
+        total.absorb(&h.join().expect("open-loop connection panicked")?);
     }
     total.wall = t0.elapsed();
     Ok(total)
@@ -369,6 +411,7 @@ fn run() -> Result<()> {
         out.report(name);
         total_protocol_errors += out.protocol_errors;
         results.push(out.to_result(name)?);
+        results.extend(out.extra_results(name));
         Ok(())
     };
 
@@ -432,7 +475,9 @@ fn run() -> Result<()> {
                 "accounting",
                 "mean = wall/completed per run (per_sec is aggregate throughput); \
                  p50/p95/p99/max are per-request RTTs from a log-bucketed histogram \
-                 (~3% relative error)"
+                 (~3% relative error); open-loop runs add {run}/total and \
+                 {run}/queue_wait rows measured from each request's intended \
+                 Poisson arrival deadline (no coordinated omission)"
                     .to_string(),
             ),
             ("gate", "ci.sh: smoke = closed c2+c4, zero protocol errors".to_string()),
@@ -454,4 +499,68 @@ fn run() -> Result<()> {
         bail!("{total_protocol_errors} protocol errors over the run");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The coordinated-omission regression: a responder that stalls its
+    /// *reads* exerts TCP backpressure, so the open-loop sender's
+    /// `write_all` blocks and every later request is sent long after its
+    /// intended Poisson deadline. The service RTT (send → reply) stays
+    /// small for those late requests — only the intended-deadline clock
+    /// sees the stall. The test pins total ≫ service.
+    #[test]
+    fn stalled_responder_shows_up_in_total_but_not_service_rtt() {
+        const STALL: Duration = Duration::from_millis(500);
+        // Lines big enough that the kernel's socket buffers (send +
+        // receive autotuning combined) cannot absorb one while the
+        // server sleeps — the sender MUST block.
+        const LINE_BYTES: usize = 24 << 20;
+        const N: usize = 4;
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (sock, _) = listener.accept().unwrap();
+            // Stall WITHOUT reading: backpressure, not slow service.
+            std::thread::sleep(STALL);
+            let mut reader = BufReader::new(sock.try_clone().unwrap());
+            let mut sock = sock;
+            let mut line = String::new();
+            for _ in 0..N {
+                line.clear();
+                assert!(reader.read_line(&mut line).unwrap() > 0);
+                sock.write_all(b"{\"answer\": 0}\n").unwrap();
+            }
+        });
+
+        let mut line = "x".repeat(LINE_BYTES);
+        line.push('\n');
+        let wl = Arc::new(Workload { lines: vec![line; N], labels: vec![0; N] });
+        // ~0.5ms intended interarrivals: every deadline lands inside the
+        // stall window.
+        let out = run_open(&addr, &wl, 1, N, 2000.0, "steady", 8.0, false, 7).unwrap();
+        server.join().unwrap();
+
+        assert_eq!(out.completed, N);
+        assert_eq!(out.protocol_errors, 0);
+        assert_eq!(out.total_hist.count(), N as u64);
+        let service_p50 = out.hist.quantile(0.50);
+        let total_p50 = out.total_hist.quantile(0.50);
+        assert!(
+            total_p50 >= STALL.as_nanos() as u64 / 2,
+            "total p50 {total_p50}ns must carry the stall"
+        );
+        assert!(
+            total_p50 >= 5 * service_p50.max(1),
+            "total p50 {total_p50}ns must dwarf service p50 {service_p50}ns — \
+             coordinated omission is hiding the stall"
+        );
+        assert!(
+            out.queue_hist.quantile(0.95) >= STALL.as_nanos() as u64 / 2,
+            "late sends must show as queue wait"
+        );
+    }
 }

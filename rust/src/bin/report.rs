@@ -39,6 +39,7 @@ use frugalgpt::coordinator::frontier::SavedFrontier;
 use frugalgpt::coordinator::optimizer::{CascadeOptimizer, FrontierPoint, OptimizerOptions};
 use frugalgpt::data::{Artifacts, DatasetContext};
 use frugalgpt::eval::mpi::mpi_matrix;
+use frugalgpt::eval::router_ablation::router_vs_global;
 use frugalgpt::eval::simulate::table_backed_engine;
 use frugalgpt::eval::table::{pct, render, usd};
 use frugalgpt::eval::{best_individual, individual_points};
@@ -47,6 +48,7 @@ use frugalgpt::server::metrics::MetricsSnapshot;
 use frugalgpt::server::service::{FrugalService, ServiceConfig, SwapEvent};
 use frugalgpt::strategies::pipeline::PipelineSpec;
 use frugalgpt::strategies::prompt::PromptPolicy;
+use frugalgpt::strategies::router::RouterSwapEvent;
 use frugalgpt::util::args::Args;
 use frugalgpt::util::json::Value;
 use frugalgpt::util::rng::Rng;
@@ -173,28 +175,66 @@ fn swaps_report(args: &Args) -> Result<()> {
     if swaps.is_empty() {
         println!("(the served plan was never displaced — no drift, or all \
                   re-learns stayed within hysteresis)");
-        return Ok(());
+    } else {
+        let rows: Vec<Vec<String>> = swaps
+            .iter()
+            .map(|e| {
+                vec![
+                    format!("v{}", e.version),
+                    e.at_query.to_string(),
+                    e.window_accuracy.map(pct).unwrap_or_else(|| "-".into()),
+                    e.window_avg_cost.map(|c| usd(c * 1e4)).unwrap_or_else(|| "-".into()),
+                    e.plan.describe(&models),
+                    e.reason.clone(),
+                ]
+            })
+            .collect();
+        print!(
+            "{}",
+            render(
+                &["version", "at query", "window acc", "window $/10k", "new cascade", "trigger"],
+                &rows
+            )
+        );
     }
-    let rows: Vec<Vec<String>> = swaps
-        .iter()
-        .map(|e| {
-            vec![
-                format!("v{}", e.version),
-                e.at_query.to_string(),
-                e.window_accuracy.map(pct).unwrap_or_else(|| "-".into()),
-                e.window_avg_cost.map(|c| usd(c * 1e4)).unwrap_or_else(|| "-".into()),
-                e.plan.describe(&models),
-                e.reason.clone(),
-            ]
-        })
-        .collect();
-    print!(
-        "{}",
-        render(
-            &["version", "at query", "window acc", "window $/10k", "new cascade", "trigger"],
-            &rows
-        )
-    );
+    // Router swaps ride the same log when the run served with `--router`:
+    // retrains that cleared hysteresis plus rebuilds after plan swaps.
+    if let Some(rs) = v.get("router_swaps").as_arr() {
+        let events: Vec<RouterSwapEvent> =
+            rs.iter().map(RouterSwapEvent::from_value).collect::<Result<_>>()?;
+        println!("router-swap history ({} swaps):", events.len());
+        if events.is_empty() {
+            println!("(the degenerate bootstrap router was never displaced)");
+        } else {
+            let rrows: Vec<Vec<String>> = events
+                .iter()
+                .map(|e| {
+                    vec![
+                        format!("r{}", e.version),
+                        format!("v{}", e.plan_version),
+                        e.at_query.to_string(),
+                        e.n_routes.to_string(),
+                        if e.degenerate { "yes".into() } else { "no".into() },
+                        e.window_accuracy.map(pct).unwrap_or_else(|| "-".into()),
+                        e.window_avg_cost
+                            .map(|c| usd(c * 1e4))
+                            .unwrap_or_else(|| "-".into()),
+                        e.reason.clone(),
+                    ]
+                })
+                .collect();
+            print!(
+                "{}",
+                render(
+                    &[
+                        "router", "plan", "at query", "routes", "identity",
+                        "window acc", "window $/10k", "trigger"
+                    ],
+                    &rrows
+                )
+            );
+        }
+    }
     Ok(())
 }
 
@@ -721,6 +761,53 @@ fn strategies(art: &Artifacts) -> Result<()> {
     println!(
         "(same pipeline code path as `serve --pipeline`; live accuracy \
          trade-offs: strategies_demo)"
+    );
+    println!();
+    router_section()
+}
+
+/// Router-vs-global ablation on the heterogeneous SimWorld (no artifacts
+/// needed): the trained contextual router against the best single global
+/// plan, with the pinned acceptance bar of ≥15% lower cost at accuracy
+/// within one point.
+fn router_section() -> Result<()> {
+    let r = router_vs_global(256, 7, 4)?;
+    println!(
+        "== router vs global plan (heterogeneous SimWorld: 3 short+easy : \
+         1 long+hard, 256 queries) =="
+    );
+    println!("global cascade: {}", r.global_plan.describe(&r.model_names));
+    let rows = vec![
+        vec![
+            "global plan".to_string(),
+            usd(r.global_avg_cost * 1e4),
+            pct(r.global_accuracy),
+            "-".into(),
+        ],
+        vec![
+            "learned router".to_string(),
+            usd(r.router_avg_cost * 1e4),
+            pct(r.router_accuracy),
+            pct(r.saving_frac()),
+        ],
+    ];
+    print!("{}", render(&["policy", "$/10k", "acc", "cost saved"], &rows));
+    let mix: Vec<String> = r
+        .route_labels
+        .iter()
+        .zip(&r.route_counts)
+        .map(|(l, c)| format!("{l}={c}"))
+        .collect();
+    println!("route mix: {}", mix.join("  "));
+    println!(
+        "short queries kept on the global route: {}; long queries skipping \
+         the cascade prefix: {}",
+        pct(r.short_on_global),
+        pct(r.long_on_skip)
+    );
+    println!(
+        "(acceptance bar: cost saved >= 15% at accuracy within 1pt; run the \
+         policy live with `serve --sim --router`)"
     );
     Ok(())
 }

@@ -1,6 +1,7 @@
 //! Evaluation utilities behind the paper's tables and figures.
 
 pub mod mpi;
+pub mod router_ablation;
 pub mod simulate;
 pub mod table;
 

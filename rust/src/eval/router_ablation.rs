@@ -1,0 +1,171 @@
+//! The router-vs-global ablation behind `report strategies`: on a
+//! heterogeneous-difficulty [`SimWorld`] no single `(L, τ)` cascade is
+//! per-query optimal, so a trained contextual router — same trainer the
+//! serving reoptimizer runs ([`train_router`]) — beats the best global
+//! frontier plan on cost at matched accuracy. The short population stays
+//! on the global route (stop-at-cheap is already ideal there); the long
+//! population skips the cascade prefix straight to the pricey stage,
+//! saving the wasted cheap call.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::cascade::{replay, CascadePlan};
+use crate::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
+use crate::eval::simulate::SimWorld;
+use crate::server::router_train::{
+    evaluate_router, train_router, RouteSpec, RouterTrainConfig,
+};
+use crate::strategies::router::{features, route_plans, RouterModel};
+
+/// Everything `report strategies` renders about the ablation.
+#[derive(Debug, Clone)]
+pub struct RouterAblation {
+    /// Marketplace model names (for plan rendering).
+    pub model_names: Vec<String>,
+    /// The global plan the router is pinned to (the frontier's best point).
+    pub global_plan: CascadePlan,
+    /// Replay accuracy of serving the global plan to every query.
+    pub global_accuracy: f64,
+    /// Replay average USD/query of the global plan.
+    pub global_avg_cost: f64,
+    /// Replay accuracy of the trained per-query router.
+    pub router_accuracy: f64,
+    /// Replay average USD/query of the trained router.
+    pub router_avg_cost: f64,
+    /// Fraction of the short population the router keeps on route 0.
+    pub short_on_global: f64,
+    /// Fraction of the long population the router sends down a prefix skip.
+    pub long_on_skip: f64,
+    /// Route labels (`global`, `skip1`, `frontierN`, ...).
+    pub route_labels: Vec<String>,
+    /// Items per route under the trained router (label order).
+    pub route_counts: Vec<u64>,
+    /// The trained router weights.
+    pub router: RouterModel,
+}
+
+impl RouterAblation {
+    /// Fractional cost saving of the router over the global plan.
+    pub fn saving_frac(&self) -> f64 {
+        1.0 - self.router_avg_cost / self.global_avg_cost
+    }
+
+    /// Router accuracy minus global accuracy (negative = router loses).
+    pub fn accuracy_delta(&self) -> f64 {
+        self.router_accuracy - self.global_accuracy
+    }
+}
+
+/// Train a router against the best global plan of a heterogeneous world
+/// and replay both policies over the same table. Training and evaluation
+/// share the table on purpose: this mirrors the serving loop, where the
+/// reoptimizer trains on the observation window it is about to serve.
+/// The ablation runs probe-free (the probe would re-bill the stage-0
+/// model), so the router reads only the free length feature — exactly
+/// the signal that separates the two populations.
+pub fn router_vs_global(n: usize, seed: u64, grid: usize) -> Result<RouterAblation> {
+    let w = SimWorld::heterogeneous(n, seed);
+    let tokens = w.input_tokens();
+    let opt =
+        CascadeOptimizer::new(&w.table, &w.costs, tokens.clone(), OptimizerOptions::default())?;
+    let frontier = opt.frontier();
+    // The served global plan: the frontier's most accurate point (the
+    // frontier is cost-ascending and Pareto, so that is the last one).
+    let global = frontier.last().context("empty frontier")?;
+    let labelled = route_plans(&global.plan, &frontier, grid);
+    let specs: Vec<RouteSpec> = labelled.iter().map(|(p, s, _)| (p.clone(), *s)).collect();
+    let trained =
+        train_router(&w.table, &tokens, &specs, None, &w.costs, &RouterTrainConfig::default())?;
+    let eval = evaluate_router(&trained.model, &w.table, &tokens, &specs, None, &w.costs)?;
+    let g = replay::replay(&global.plan, &w.table, &w.costs, &tokens);
+
+    let (mut short, mut short_on_global) = (0u64, 0u64);
+    let (mut long, mut long_on_skip) = (0u64, 0u64);
+    for i in 0..w.len() {
+        // Probe-free serving features: length only (matches evaluate_router).
+        let route = trained
+            .model
+            .decide(&features(tokens[i], 0.0, 0.0))
+            .min(specs.len() - 1);
+        if w.is_long(i) {
+            long += 1;
+            long_on_skip += (specs[route].1 > 0) as u64;
+        } else {
+            short += 1;
+            short_on_global += (route == 0) as u64;
+        }
+    }
+
+    Ok(RouterAblation {
+        model_names: w.costs.model_names.clone(),
+        global_plan: global.plan.clone(),
+        global_accuracy: g.accuracy,
+        global_avg_cost: g.avg_cost,
+        router_accuracy: eval.accuracy,
+        router_avg_cost: eval.avg_cost,
+        short_on_global: short_on_global as f64 / short.max(1) as f64,
+        long_on_skip: long_on_skip as f64 / long.max(1) as f64,
+        route_labels: labelled.iter().map(|(_, _, l)| l.clone()).collect(),
+        route_counts: eval.route_counts,
+        router: trained.model,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tentpole acceptance bar: on the heterogeneous mix the router
+    /// must cut cost by ≥15% while staying within 1 accuracy point of the
+    /// global plan — and it must do so by actually routing (short stays
+    /// global, long skips the prefix), not by some pricing accident.
+    #[test]
+    fn router_beats_the_best_global_plan_on_the_heterogeneous_mix() {
+        let r = router_vs_global(256, 7, 4).unwrap();
+        assert!(
+            r.global_plan.stages.len() >= 2,
+            "the best global plan must be a real cascade (got {})",
+            r.global_plan.describe(&r.model_names)
+        );
+        assert!(
+            r.saving_frac() >= 0.15,
+            "router saves {:.1}% (global ${:.6} vs router ${:.6})",
+            r.saving_frac() * 100.0,
+            r.global_avg_cost,
+            r.router_avg_cost
+        );
+        assert!(
+            r.accuracy_delta().abs() <= 0.01,
+            "accuracy moved {:.4} (global {:.4} router {:.4})",
+            r.accuracy_delta(),
+            r.global_accuracy,
+            r.router_accuracy
+        );
+        assert!(
+            r.short_on_global >= 0.8,
+            "only {:.2} of short queries stayed on the global route",
+            r.short_on_global
+        );
+        assert!(
+            r.long_on_skip >= 0.8,
+            "only {:.2} of long queries skipped the prefix",
+            r.long_on_skip
+        );
+        assert_eq!(r.route_labels[0], "global");
+        assert_eq!(
+            r.route_counts.iter().sum::<u64>(),
+            256,
+            "every query is routed exactly once"
+        );
+    }
+
+    #[test]
+    fn ablation_is_deterministic() {
+        let a = router_vs_global(128, 3, 4).unwrap();
+        let b = router_vs_global(128, 3, 4).unwrap();
+        assert_eq!(a.router, b.router);
+        assert_eq!(a.route_counts, b.route_counts);
+        assert_eq!(a.global_avg_cost.to_bits(), b.global_avg_cost.to_bits());
+        assert_eq!(a.router_avg_cost.to_bits(), b.router_avg_cost.to_bits());
+    }
+}

@@ -26,7 +26,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::responses::{synthetic_table, SplitTable};
+use crate::coordinator::responses::{synthetic_table, SplitTable, TableBuilder};
 use crate::data::{layout, prompt, DatasetMeta};
 use crate::marketplace::{CostModel, LatencyModel, Pricing};
 use crate::runtime::EngineHandle;
@@ -115,6 +115,14 @@ pub struct SimWorld {
 /// Answer classes of the sim world (fixed small, like the paper's tasks).
 const SIM_CLASSES: u32 = 4;
 
+/// Billable input tokens of the heterogeneous world's short population.
+pub const HET_SHORT_TOKENS: usize = 50;
+/// Billable input tokens of the heterogeneous world's long population.
+pub const HET_LONG_TOKENS: usize = 350;
+/// Fraction denominators of the heterogeneous mix: item `i` is long iff
+/// `i % HET_MIX == HET_MIX - 1` (so 1 in 4 queries is long/hard).
+pub const HET_MIX: usize = 4;
+
 impl SimWorld {
     /// A world of `k` APIs over `n` items, deterministic in `seed`.
     pub fn new(k: usize, n: usize, seed: u64) -> SimWorld {
@@ -153,6 +161,92 @@ impl SimWorld {
         };
         let rows = (0..n).map(|i| sim_row(&meta, i)).collect();
         SimWorld { meta, costs, table, rows }
+    }
+
+    /// A heterogeneous-difficulty marketplace where no single `(L, τ)`
+    /// cascade is per-query optimal — the testbed of the router-vs-global
+    /// ablation (`report strategies`) and the router pipeline tests.
+    ///
+    /// Three APIs at a $2 / $4 / $8 per-10M price ladder over two query
+    /// populations (3 short+easy : 1 long+hard, [`HET_MIX`]):
+    ///
+    /// * short/easy ([`HET_SHORT_TOKENS`] billable tokens): the cheap API
+    ///   is right with a confident 0.95 score — stopping at stage 0 is
+    ///   ideal;
+    /// * long/hard ([`HET_LONG_TOKENS`] billable tokens): the cheap API
+    ///   is *wrong* yet scores an overconfident 0.80, the pricey API is
+    ///   right (0.97) — every global cascade wastes the cheap call before
+    ///   escalating, so skipping straight to the pricey stage is ideal.
+    ///
+    /// The mid API answers like the cheap one at twice the price (score
+    /// 0.50), so it is Pareto-dominated and never clutters the frontier.
+    /// The best single plan is `cheap(τ≈0.87) → pricey` (a midpoint
+    /// threshold between the 0.80 and 0.95 score bands, so live sigmoid
+    /// roundtrips sit far from the boundary); a contextual router that
+    /// reads query length beats it by ~18% cost at identical accuracy.
+    pub fn heterogeneous(n: usize, seed: u64) -> SimWorld {
+        let meta = DatasetMeta {
+            name: "sim-het".into(),
+            seq: HET_LONG_TOKENS,
+            n_classes: SIM_CLASSES as usize,
+            n_examples: 4,
+            qlen: 6,
+            block_len: 3,
+            q_offset: 12,
+            scorer_seq: 20,
+            answer_lens: vec![1; SIM_CLASSES as usize],
+        };
+        let names: Vec<String> =
+            ["api_cheap", "api_mid", "api_pricey"].map(String::from).to_vec();
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut b = TableBuilder::new("sim-het", names.clone());
+        for i in 0..n {
+            let label = rng.below(SIM_CLASSES as u64) as u32;
+            let wrong = (label + 1) % SIM_CLASSES;
+            let long = i % HET_MIX == HET_MIX - 1;
+            let (cheap_pred, cheap_score) =
+                if long { (wrong, 0.80f32) } else { (label, 0.95f32) };
+            let mid_pred = if long { wrong } else { label };
+            let preds = [cheap_pred, mid_pred, label];
+            let scores = [cheap_score, 0.50, 0.97];
+            let correct = [preds[0] == label, preds[1] == label, true];
+            b.push_item(label, &preds, &scores, &correct)
+                .expect("aligned per-model triples");
+        }
+        let table = b.finish().expect("well-formed synthetic rows");
+        let costs = CostModel {
+            dataset: "sim-het".into(),
+            model_names: names,
+            pricing: [2.0, 4.0, 8.0]
+                .iter()
+                .map(|&usd| Pricing::new(usd, usd, 0.0))
+                .collect(),
+            latency: (0..3)
+                .map(|m| LatencyModel {
+                    base_ms: 30.0 + m as f64,
+                    per_1k_tokens_ms: 30.0,
+                })
+                .collect(),
+            answer_lens: vec![1; SIM_CLASSES as usize],
+        };
+        let rows = (0..n)
+            .map(|i| {
+                let billable = if i % HET_MIX == HET_MIX - 1 {
+                    HET_LONG_TOKENS
+                } else {
+                    HET_SHORT_TOKENS
+                };
+                hetero_row(&meta, i, billable)
+            })
+            .collect();
+        SimWorld { meta, costs, table, rows }
+    }
+
+    /// Whether item `i` belongs to the long/hard population of a
+    /// [`SimWorld::heterogeneous`] world (always false for uniform-length
+    /// worlds from [`SimWorld::new`]).
+    pub fn is_long(&self, i: usize) -> bool {
+        prompt::input_tokens(&self.rows[i]) as usize > HET_SHORT_TOKENS
     }
 
     /// Items in the world.
@@ -219,6 +313,20 @@ fn sim_row(meta: &DatasetMeta, i: usize) -> Vec<i32> {
         row[meta.q_offset + 1 + p] = 30 + p as i32;
     }
     row[meta.q_offset + 1 + meta.qlen] = layout::QSEP;
+    row
+}
+
+/// A [`sim_row`] padded out to `billable` non-PAD tokens with filler
+/// *after* the query segment — the segment itself stays byte-identical to
+/// the uniform layout, so the table-backed engine (and the cache, and the
+/// scorer) resolve long rows exactly like short ones; only billing and
+/// the router's length feature see the difference.
+fn hetero_row(meta: &DatasetMeta, i: usize, billable: usize) -> Vec<i32> {
+    let mut row = sim_row(meta, i);
+    debug_assert!(billable <= row.len());
+    for p in meta.q_offset + meta.query_len()..billable {
+        row[p] = 40 + (p % 29) as i32;
+    }
     row
 }
 
@@ -676,6 +784,38 @@ mod tests {
         assert_eq!(a.table.pred(2, 9), b.table.pred(2, 9));
         assert_eq!(a.input_tokens(), b.input_tokens());
         assert_eq!(a.input_tokens()[0], 20, "12 prompt + 8 query tokens");
+    }
+
+    #[test]
+    fn heterogeneous_world_splits_populations_by_length_and_skill() {
+        let w = SimWorld::heterogeneous(32, 5);
+        let tokens = w.input_tokens();
+        for i in 0..w.len() {
+            let long = i % HET_MIX == HET_MIX - 1;
+            assert_eq!(w.is_long(i), long, "item {i}");
+            assert_eq!(
+                tokens[i] as usize,
+                if long { HET_LONG_TOKENS } else { HET_SHORT_TOKENS },
+                "item {i} billable tokens"
+            );
+            assert_eq!(w.table.is_correct(0, i), !long, "cheap is right iff short");
+            assert_eq!(w.table.is_correct(1, i), !long, "mid mirrors cheap");
+            assert!(w.table.is_correct(2, i), "pricey is always right");
+            let expect = if long { 0.80 } else { 0.95 };
+            assert!((w.table.score(0, i) - expect).abs() < 1e-6, "item {i} cheap score");
+        }
+        // The engine resolves both populations by their (identical-layout)
+        // query segments.
+        let h = w.engine().unwrap();
+        for i in [0usize, 3] {
+            let logits = h
+                .execute("sim-het", &w.table.model_names[2], w.row(i).to_vec())
+                .unwrap();
+            assert_eq!(argmax(&logits) as u32, w.table.pred(2, i), "item {i}");
+        }
+        let b = SimWorld::heterogeneous(32, 5);
+        assert_eq!(w.labels(), b.labels());
+        assert_eq!(w.rows(), b.rows());
     }
 
     #[test]

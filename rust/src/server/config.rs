@@ -21,6 +21,7 @@ use crate::server::service::ServiceConfig;
 use crate::server::shadow::ShadowConfig;
 use crate::strategies::pipeline::PipelineSpec;
 use crate::strategies::prompt::PromptPolicy;
+use crate::strategies::router::RouterConfig;
 use crate::util::args::Args;
 
 /// One `--flag` in the shared serving flag tables.
@@ -107,8 +108,26 @@ pub const SERVE_FLAGS: &[FlagSpec] = &[
     FlagSpec {
         name: "pipeline",
         value: Some("SPEC"),
-        default: "cache,shadow,prompt,budget,cascade",
+        default: "cache,shadow,prompt,budget,router,cascade",
         help: "serving stage stack as data, e.g. cache,prompt,cascade",
+    },
+    FlagSpec {
+        name: "router",
+        value: None,
+        default: "",
+        help: "per-query contextual routing: a learned meta-router picks a frontier point or skips a cascade prefix",
+    },
+    FlagSpec {
+        name: "router-grid",
+        value: Some("N"),
+        default: "4",
+        help: "max frontier points offered as routes beyond the global plan and its prefix-skips",
+    },
+    FlagSpec {
+        name: "probe-model",
+        value: Some("NAME"),
+        default: "off",
+        help: "marketplace model scored per query as the router's probe feature (billed onto routed answers)",
     },
     FlagSpec {
         name: "breaker",
@@ -287,6 +306,18 @@ impl ServiceConfig {
             max_retries: a.get_usize("retries").unwrap_or(2) as u32,
             ..Default::default()
         });
+        if !a.has("router") {
+            if a.get_usize("router-grid").is_some() {
+                bail!("--router-grid needs --router (routing is off by default)");
+            }
+            if a.get("probe-model").is_some() {
+                bail!("--probe-model needs --router (routing is off by default)");
+            }
+        }
+        let router = a.has("router").then(|| RouterConfig {
+            grid: a.get_usize("router-grid").unwrap_or(4),
+            probe_model: a.get("probe-model").map(str::to_string),
+        });
 
         Ok(ServiceConfig {
             cache_enabled: !a.has("no-cache"),
@@ -309,6 +340,7 @@ impl ServiceConfig {
             }),
             health,
             pipeline,
+            router,
         })
     }
 }
@@ -428,6 +460,27 @@ mod tests {
         assert!(cfg.health.is_some());
         let t = ServeTuning::from_args(&parse("--scenario storm")).unwrap();
         assert!(t.scenario.is_some());
+    }
+
+    #[test]
+    fn router_flags_parse_and_demand_the_master_switch() {
+        let cfg = ServiceConfig::from_args(&parse("")).unwrap();
+        assert!(cfg.router.is_none(), "routing must be off by default");
+        let cfg = ServiceConfig::from_args(&parse("--router")).unwrap();
+        let rc = cfg.router.unwrap();
+        assert_eq!(rc.grid, 4);
+        assert!(rc.probe_model.is_none());
+        let cfg = ServiceConfig::from_args(&parse(
+            "--router --router-grid 2 --probe-model gpt_j",
+        ))
+        .unwrap();
+        let rc = cfg.router.unwrap();
+        assert_eq!(rc.grid, 2);
+        assert_eq!(rc.probe_model.as_deref(), Some("gpt_j"));
+        // Router knobs without the master switch are configuration errors,
+        // not silent no-ops.
+        assert!(ServiceConfig::from_args(&parse("--router-grid 2")).is_err());
+        assert!(ServiceConfig::from_args(&parse("--probe-model gpt_j")).is_err());
     }
 
     #[test]

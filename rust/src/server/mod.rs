@@ -19,5 +19,6 @@ pub mod health;
 pub mod metrics;
 pub mod net;
 pub mod reoptimizer;
+pub mod router_train;
 pub mod service;
 pub mod shadow;

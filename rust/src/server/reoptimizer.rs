@@ -44,8 +44,12 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::cascade::replay;
 use crate::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
+use crate::coordinator::responses::SplitTable;
+use crate::marketplace::CostModel;
 use crate::server::metrics::ObservationWindow;
+use crate::server::router_train::{evaluate_router, train_router, RouterTrainConfig};
 use crate::server::service::FrugalService;
+use crate::strategies::router::RouterModel;
 
 /// Tuning for the re-optimization loop.
 #[derive(Debug, Clone)]
@@ -63,6 +67,9 @@ pub struct ReoptimizerConfig {
     /// Search options for the window sweeps. The default grid is finer
     /// than windows need; callers typically shrink `grid` for latency.
     pub optimizer: OptimizerOptions,
+    /// Tuning of the router co-training pass that rides every step when
+    /// the service has contextual routing enabled (no-op otherwise).
+    pub router_train: RouterTrainConfig,
 }
 
 impl Default for ReoptimizerConfig {
@@ -73,6 +80,7 @@ impl Default for ReoptimizerConfig {
             hysteresis: 0.005,
             interval: Duration::from_secs(2),
             optimizer: OptimizerOptions::default(),
+            router_train: RouterTrainConfig::default(),
         }
     }
 }
@@ -124,13 +132,20 @@ pub struct Reoptimizer {
     cfg: ReoptimizerConfig,
     steps: AtomicU64,
     swaps: AtomicU64,
+    router_swaps: AtomicU64,
 }
 
 impl Reoptimizer {
     /// A driver for `svc` with the given tuning (no thread yet — use
     /// [`Reoptimizer::step`] directly or [`Reoptimizer::spawn`]).
     pub fn new(svc: Arc<FrugalService>, cfg: ReoptimizerConfig) -> Reoptimizer {
-        Reoptimizer { svc, cfg, steps: AtomicU64::new(0), swaps: AtomicU64::new(0) }
+        Reoptimizer {
+            svc,
+            cfg,
+            steps: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            router_swaps: AtomicU64::new(0),
+        }
     }
 
     /// The tuning this driver runs with.
@@ -148,8 +163,16 @@ impl Reoptimizer {
         self.swaps.load(Ordering::Relaxed)
     }
 
+    /// Router models published so far by this reoptimizer's co-training.
+    pub fn router_swaps(&self) -> u64 {
+        self.router_swaps.load(Ordering::Relaxed)
+    }
+
     /// One full re-optimization pass: window → table slice → sweep →
-    /// hysteresis gate → (maybe) publish.
+    /// hysteresis gate → (maybe) publish. When the service has contextual
+    /// routing enabled, the same window then co-trains the router — so a
+    /// router retrain always follows a plan swap on the same cadence,
+    /// through the same `swap_worthy` hysteresis.
     pub fn step(&self) -> Result<ReoptOutcome> {
         self.steps.fetch_add(1, Ordering::Relaxed);
         let window: &ObservationWindow = &self.svc.metrics.window;
@@ -164,8 +187,22 @@ impl Reoptimizer {
         let (table, tokens) = window
             .snapshot_table(&costs.dataset, &costs.model_names)
             .context("window emptied between len() and snapshot")?;
+        let outcome = self.plan_step(&table, &tokens, &costs)?;
+        // Router co-training rides the same window (route specs reflect
+        // the plan published above, if any — `router_route_specs` reads
+        // the live plan handle).
+        self.router_step(&table, &tokens, &costs)?;
+        Ok(outcome)
+    }
 
-        let opt = CascadeOptimizer::new(&table, &costs, tokens.clone(), self.cfg.optimizer.clone())
+    /// The plan phase of one step (the pre-router reoptimizer, verbatim).
+    fn plan_step(
+        &self,
+        table: &SplitTable,
+        tokens: &[u32],
+        costs: &CostModel,
+    ) -> Result<ReoptOutcome> {
+        let opt = CascadeOptimizer::new(table, costs, tokens.to_vec(), self.cfg.optimizer.clone())
             .context("building window optimizer")?;
         let candidate = match opt.optimize(self.cfg.budget_usd_per_10k) {
             Ok(c) => c,
@@ -183,7 +220,7 @@ impl Reoptimizer {
 
         // Score BOTH plans on the same window so the comparison is
         // apples-to-apples under the live traffic mix.
-        let cur = replay::replay(&current_plan, &table, &costs, &tokens);
+        let cur = replay::replay(&current_plan, table, costs, tokens);
         if !swap_worthy(
             (cur.accuracy, cur.avg_cost),
             (candidate.train_accuracy, candidate.train_avg_cost),
@@ -225,6 +262,62 @@ impl Reoptimizer {
             window_accuracy: candidate.train_accuracy,
             window_avg_cost: candidate.train_avg_cost,
         })
+    }
+
+    /// The router phase of one step: retrain on the window, evaluate both
+    /// the incumbent model and the retrained one on the same rows and
+    /// route set, and publish through the service only when the retrain
+    /// clears the same hysteresis band plans must clear. No-op when the
+    /// service has routing off or the plan offers nothing to route to.
+    fn router_step(
+        &self,
+        table: &SplitTable,
+        tokens: &[u32],
+        costs: &CostModel,
+    ) -> Result<Option<u64>> {
+        let specs = self.svc.router_route_specs();
+        if specs.len() < 2 {
+            return Ok(None);
+        }
+        let Some(cur_bundle) = self.svc.router_snapshot() else { return Ok(None) };
+        let probe = self.svc.probe_model_index();
+        let trained =
+            train_router(table, tokens, &specs, probe, costs, &self.cfg.router_train)?;
+        // Incumbent policy on the SAME window and route set. Right after a
+        // plan swap the incumbent was reset to the degenerate model, so
+        // this is the plain global-plan baseline — exactly what the
+        // retrain must beat to justify routing at all.
+        let cur_model = if cur_bundle.model.n_routes() == specs.len() {
+            cur_bundle.model.clone()
+        } else {
+            RouterModel::degenerate(specs.len())
+        };
+        if trained.model == cur_model {
+            return Ok(None);
+        }
+        let cur = evaluate_router(&cur_model, table, tokens, &specs, probe, costs)?;
+        if !swap_worthy(
+            (cur.accuracy, cur.avg_cost),
+            (trained.train_accuracy, trained.train_avg_cost),
+            self.cfg.hysteresis,
+        ) {
+            return Ok(None);
+        }
+        let reason = format!(
+            "router retrain on window of {} obs: acc {:.4}→{:.4}, cost ${:.4}→${:.4}/10k",
+            table.len(),
+            cur.accuracy,
+            trained.train_accuracy,
+            cur.avg_cost * 1e4,
+            trained.train_avg_cost * 1e4
+        );
+        let version = self.svc.publish_router(
+            trained.model,
+            &reason,
+            Some((trained.train_accuracy, trained.train_avg_cost)),
+        )?;
+        self.router_swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(version))
     }
 
     /// Run `step()` every `cfg.interval` on a background thread until the

@@ -1,0 +1,481 @@
+//! Deterministic training of the per-query meta-router.
+//!
+//! The router ([`crate::strategies::router`]) is a multinomial logistic
+//! model over per-query features; this module learns its weights from the
+//! same decay-weighted [`ObservationWindow`](crate::server::metrics::ObservationWindow)
+//! rows the plan reoptimizer already re-learns from — no extra labelling
+//! machinery, no dependencies, and bit-reproducible given the same window
+//! (fixed iteration order, full-batch gradient descent, seeded init).
+//!
+//! §Targets — routing is cost-sensitive classification, not plain
+//! accuracy: for every window row each candidate route is *replayed*
+//! ([`replay::replay_item`]) and scored with the utility
+//! `correct − λ · cost`, where λ normalizes marketplace dollars against
+//! the global route's mean window cost ([`RouterTrainConfig::cost_weight`]
+//! units of accuracy for a whole global-route budget). The
+//! highest-utility route is the training target, ties resolved to the
+//! LOWEST route index — so when routing cannot help, every target is
+//! route 0 and the trained model converges to the global plan.
+//!
+//! §Gate — the reoptimizer retrains on its cadence and publishes through
+//! [`evaluate_router`] + the same `swap_worthy` hysteresis as plans, so a
+//! noisy window cannot thrash router generations.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::cascade::{replay, CascadePlan};
+use crate::coordinator::responses::SplitTable;
+use crate::marketplace::CostModel;
+use crate::strategies::router::{features, RouterModel, FEAT_PROBE, N_FEATURES};
+use crate::util::rng::Rng;
+
+/// Tuning for one router training run.
+#[derive(Debug, Clone)]
+pub struct RouterTrainConfig {
+    /// Full-batch gradient-descent epochs.
+    pub epochs: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// Cost sensitivity of the route-utility targets: how many units of
+    /// accuracy one whole global-route budget is worth (λ =
+    /// `cost_weight / mean global-route cost`). 0.0 = accuracy only.
+    pub cost_weight: f64,
+    /// Seed of the tiny symmetric-breaking init noise.
+    pub seed: u64,
+}
+
+impl Default for RouterTrainConfig {
+    fn default() -> Self {
+        RouterTrainConfig { epochs: 200, lr: 0.5, cost_weight: 0.25, seed: 0x5EED_F00D }
+    }
+}
+
+/// A route candidate as the trainer sees it: the plan to replay plus how
+/// many global-plan stages it skips (mirrors
+/// [`crate::strategies::router::route_plans`] minus the labels).
+pub type RouteSpec = (CascadePlan, usize);
+
+/// Window-replay metrics of a routed policy (weighted means when the
+/// table carries decay weights — same semantics as `replay::replay`).
+#[derive(Debug, Clone)]
+pub struct RoutedReplay {
+    /// (Weighted) fraction of items the routed policy answers correctly.
+    pub accuracy: f64,
+    /// (Weighted) average USD per query, probe spend included.
+    pub avg_cost: f64,
+    /// How many items each route was picked for (unweighted counts).
+    pub route_counts: Vec<u64>,
+}
+
+/// A trained router plus its training-window metrics.
+#[derive(Debug, Clone)]
+pub struct TrainedRouter {
+    /// The learned weights.
+    pub model: RouterModel,
+    /// Routed accuracy on the training window.
+    pub train_accuracy: f64,
+    /// Routed average cost on the training window (USD per query).
+    pub train_avg_cost: f64,
+    /// Training-target histogram (how many rows preferred each route).
+    pub target_counts: Vec<u64>,
+}
+
+/// The per-row feature vector the trainer and evaluator share with the
+/// serving stage: length from the window's billable input tokens, probe
+/// score from the probe model's *observed* window score (exactly what the
+/// serving probe measures — the scorer's `g(q, probe answer)`), cache
+/// signal 0.0 (the window carries no cache state; the weight stays
+/// whatever it was initialized to, and serve-time extraction is gated on
+/// it being nonzero).
+fn row_features(
+    table: &SplitTable,
+    input_tokens: &[u32],
+    probe_model: Option<usize>,
+    i: usize,
+) -> [f32; N_FEATURES] {
+    let probe_score = probe_model.map(|m| table.score(m, i)).unwrap_or(0.0);
+    features(input_tokens[i], probe_score, 0.0)
+}
+
+/// Marketplace cost of the probe call on row `i` (0.0 without a probe).
+fn probe_cost(
+    table: &SplitTable,
+    costs: &CostModel,
+    input_tokens: &[u32],
+    probe_model: Option<usize>,
+    i: usize,
+) -> f64 {
+    match probe_model {
+        Some(m) => costs.call_cost(m, input_tokens[i], table.pred(m, i)),
+        None => 0.0,
+    }
+}
+
+fn softmax_in_place(z: &mut [f32]) {
+    let max = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in z.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    for x in z.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// Train a router on a labelled window table. `routes[0]` must be the
+/// global plan (the zero-utility baseline ties resolve to); `probe_model`
+/// is the marketplace index of the probe (adds its score feature AND its
+/// per-row cost to every route's utility-neutral overhead).
+pub fn train_router(
+    table: &SplitTable,
+    input_tokens: &[u32],
+    routes: &[RouteSpec],
+    probe_model: Option<usize>,
+    costs: &CostModel,
+    cfg: &RouterTrainConfig,
+) -> Result<TrainedRouter> {
+    if routes.is_empty() {
+        bail!("router training needs at least the global route");
+    }
+    if input_tokens.len() != table.len() {
+        bail!(
+            "input_tokens covers {} rows but the table has {}",
+            input_tokens.len(),
+            table.len()
+        );
+    }
+    if table.len() == 0 {
+        bail!("router training needs a non-empty window table");
+    }
+    let n = table.len();
+    let n_routes = routes.len();
+
+    // Replay every route on every row once; route 0's weighted mean cost
+    // normalizes λ so `cost_weight` is unitless.
+    let mut outcome = vec![(false, 0.0f64); n * n_routes];
+    let mut w_sum = 0.0f64;
+    let mut base_cost = 0.0f64;
+    for i in 0..n {
+        let w = table.weight(i);
+        w_sum += w;
+        for (r, (plan, _)) in routes.iter().enumerate() {
+            let o = replay::replay_item(plan, table, costs, input_tokens, i);
+            outcome[i * n_routes + r] = (o.correct, o.cost);
+        }
+        base_cost += w * outcome[i * n_routes].1;
+    }
+    let lambda = if cfg.cost_weight > 0.0 {
+        cfg.cost_weight / (base_cost / w_sum).max(1e-12)
+    } else {
+        0.0
+    };
+
+    // Cost-sensitive targets: best utility, ties to the LOWEST index so
+    // "routing can't help" degenerates to the global plan.
+    let mut targets = vec![0usize; n];
+    let mut target_counts = vec![0u64; n_routes];
+    for i in 0..n {
+        let mut best = 0usize;
+        let mut best_u = f64::NEG_INFINITY;
+        for r in 0..n_routes {
+            let (correct, cost) = outcome[i * n_routes + r];
+            let u = (correct as u64) as f64 - lambda * cost;
+            if u > best_u {
+                best_u = u;
+                best = r;
+            }
+        }
+        targets[i] = best;
+        target_counts[best] += 1;
+    }
+
+    // Features once per row.
+    let feats: Vec<[f32; N_FEATURES]> =
+        (0..n).map(|i| row_features(table, input_tokens, probe_model, i)).collect();
+
+    // Full-batch softmax regression, seeded tiny init noise (symmetric
+    // breaking; small enough that an all-route-0 target set still decides
+    // route 0 after the first epochs pull the bias apart).
+    let mut rng = Rng::new(cfg.seed);
+    let mut weights = vec![[0.0f32; N_FEATURES]; n_routes];
+    for row in weights.iter_mut() {
+        for w in row.iter_mut() {
+            *w = (rng.f64() as f32 - 0.5) * 1e-3;
+        }
+    }
+    let inv_w = (1.0 / w_sum) as f32;
+    let mut z = vec![0.0f32; n_routes];
+    let mut grad = vec![[0.0f32; N_FEATURES]; n_routes];
+    for _ in 0..cfg.epochs {
+        for g in grad.iter_mut() {
+            *g = [0.0; N_FEATURES];
+        }
+        for i in 0..n {
+            let f = &feats[i];
+            for (r, zr) in z.iter_mut().enumerate() {
+                *zr = weights[r].iter().zip(f.iter()).map(|(w, x)| w * x).sum();
+            }
+            softmax_in_place(&mut z);
+            let wi = table.weight(i) as f32;
+            for r in 0..n_routes {
+                let err = wi * (z[r] - ((r == targets[i]) as u64) as f32);
+                for (g, x) in grad[r].iter_mut().zip(f.iter()) {
+                    *g += err * x;
+                }
+            }
+        }
+        for (wr, gr) in weights.iter_mut().zip(grad.iter()) {
+            for (w, g) in wr.iter_mut().zip(gr.iter()) {
+                *w -= cfg.lr * g * inv_w;
+            }
+        }
+    }
+
+    let model = RouterModel { weights };
+    let eval = evaluate_router(&model, table, input_tokens, routes, probe_model, costs)?;
+    Ok(TrainedRouter {
+        model,
+        train_accuracy: eval.accuracy,
+        train_avg_cost: eval.avg_cost,
+        target_counts,
+    })
+}
+
+/// Replay a routed policy on a window table: decide each row with the
+/// model (same features as serving), replay the chosen route, and return
+/// weighted accuracy / cost — probe spend included whenever the model
+/// actually reads the probe feature (mirroring the serving stage's paid
+/// feature gate). This is what the reoptimizer feeds the `swap_worthy`
+/// hysteresis gate.
+pub fn evaluate_router(
+    model: &RouterModel,
+    table: &SplitTable,
+    input_tokens: &[u32],
+    routes: &[RouteSpec],
+    probe_model: Option<usize>,
+    costs: &CostModel,
+) -> Result<RoutedReplay> {
+    if routes.is_empty() || model.n_routes() != routes.len() {
+        bail!(
+            "router evaluation: model scores {} routes, got {}",
+            model.n_routes(),
+            routes.len()
+        );
+    }
+    if input_tokens.len() != table.len() || table.len() == 0 {
+        bail!("router evaluation needs a non-empty, token-aligned table");
+    }
+    let pay_probe = probe_model.is_some() && model.uses_feature(FEAT_PROBE);
+    let mut acc = 0.0f64;
+    let mut cost = 0.0f64;
+    let mut w_sum = 0.0f64;
+    let mut route_counts = vec![0u64; routes.len()];
+    for i in 0..table.len() {
+        let f = row_features(table, input_tokens, probe_model, i);
+        let r = model.decide(&f).min(routes.len() - 1);
+        route_counts[r] += 1;
+        let o = replay::replay_item(&routes[r].0, table, costs, input_tokens, i);
+        let w = table.weight(i);
+        w_sum += w;
+        acc += w * ((o.correct as u64) as f64);
+        let mut c = o.cost;
+        if pay_probe {
+            c += probe_cost(table, costs, input_tokens, probe_model, i);
+        }
+        cost += w * c;
+    }
+    Ok(RoutedReplay {
+        accuracy: acc / w_sum,
+        avg_cost: cost / w_sum,
+        route_counts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cascade::Stage;
+    use crate::coordinator::responses::TableBuilder;
+    use crate::marketplace::{LatencyModel, Pricing};
+    use crate::strategies::router::FEAT_BIAS;
+
+    /// Two models: model 0 cheap, model 1 pricey but always right.
+    fn costs2(cheap: f64, pricey: f64) -> CostModel {
+        CostModel {
+            dataset: "synth".into(),
+            model_names: vec!["m0".into(), "m1".into()],
+            pricing: vec![
+                Pricing::new(cheap, cheap, 0.0),
+                Pricing::new(pricey, pricey, 0.0),
+            ],
+            latency: vec![LatencyModel { base_ms: 1.0, per_1k_tokens_ms: 0.0 }; 2],
+            answer_lens: vec![1, 1, 1, 1],
+        }
+    }
+
+    /// Even items: SHORT (40 tokens) and model 0 answers them correctly
+    /// with a confident score. Odd items: LONG (400 tokens) and model 0
+    /// is wrong but *equally confident* — no (L, τ) separates the
+    /// populations, only the router's length feature can.
+    fn two_population_table(n: usize) -> (crate::coordinator::responses::SplitTable, Vec<u32>) {
+        let mut b = TableBuilder::new("synth", vec!["m0".into(), "m1".into()]);
+        let mut tokens = Vec::with_capacity(n);
+        for i in 0..n {
+            let label = (i % 4) as u32;
+            let easy = i % 2 == 0;
+            let m0_pred = if easy { label } else { (label + 1) % 4 };
+            b.push_item(label, &[m0_pred, label], &[0.9, 0.97], &[easy, true]).unwrap();
+            tokens.push(if easy { 40 } else { 400 });
+        }
+        (b.finish().unwrap(), tokens)
+    }
+
+    fn routes_pair() -> Vec<RouteSpec> {
+        let global = CascadePlan::new(vec![
+            Stage { model: 0, threshold: 0.95 }, // never accepts: always escalates
+            Stage { model: 1, threshold: 0.0 },
+        ]);
+        let skip1 = CascadePlan::single(1);
+        let cheap_only = CascadePlan::single(0);
+        vec![(global, 0), (skip1, 1), (cheap_only, 0)]
+    }
+
+    #[test]
+    fn targets_prefer_cheapest_correct_route_and_ties_go_to_global() {
+        let (table, tokens) = two_population_table(64);
+        let costs = costs2(2.0, 8.0);
+        let trained = train_router(
+            &table,
+            &tokens,
+            &routes_pair(),
+            None,
+            &costs,
+            &RouterTrainConfig::default(),
+        )
+        .unwrap();
+        // Easy rows: cheap-only is correct at a fraction of the cost →
+        // target route 2. Hard rows: skip straight to model 1 (route 1)
+        // beats paying the doomed model-0 call first (route 0).
+        assert_eq!(trained.target_counts[2], 32, "easy rows target cheap-only");
+        assert_eq!(trained.target_counts[1], 32, "hard rows target the skip");
+        assert_eq!(trained.target_counts[0], 0);
+    }
+
+    #[test]
+    fn trained_router_separates_populations_by_length() {
+        let (table, tokens) = two_population_table(128);
+        let costs = costs2(2.0, 8.0);
+        let routes = routes_pair();
+        let cfg = RouterTrainConfig::default();
+        let trained = train_router(&table, &tokens, &routes, None, &costs, &cfg).unwrap();
+        let eval =
+            evaluate_router(&trained.model, &table, &tokens, &routes, None, &costs).unwrap();
+        // Perfect accuracy (cheap on easy, skip-to-pricey on hard) at a
+        // cost strictly below the global plan's replay.
+        let global = replay::replay(&routes[0].0, &table, &costs, &tokens);
+        assert!(eval.accuracy >= global.accuracy - 1e-9, "no accuracy loss");
+        assert!(
+            eval.avg_cost < global.avg_cost * 0.85,
+            "routed cost {:.3e} should undercut global {:.3e} by >15%",
+            eval.avg_cost,
+            global.avg_cost
+        );
+        // The decisions themselves split by population.
+        assert!(eval.route_counts[2] >= 51, "≥80% of easy rows routed cheap");
+        assert!(eval.route_counts[1] >= 51, "≥80% of hard rows skip the prefix");
+    }
+
+    #[test]
+    fn training_is_deterministic_for_a_fixed_seed() {
+        let (table, tokens) = two_population_table(64);
+        let costs = costs2(2.0, 8.0);
+        let routes = routes_pair();
+        let cfg = RouterTrainConfig::default();
+        let a = train_router(&table, &tokens, &routes, None, &costs, &cfg).unwrap();
+        let b = train_router(&table, &tokens, &routes, None, &costs, &cfg).unwrap();
+        for (wa, wb) in a.model.weights.iter().zip(b.model.weights.iter()) {
+            for (x, y) in wa.iter().zip(wb.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "training must be bit-reproducible");
+            }
+        }
+        let c = train_router(
+            &table,
+            &tokens,
+            &routes,
+            None,
+            &costs,
+            &RouterTrainConfig { seed: 42, ..cfg },
+        )
+        .unwrap();
+        assert_ne!(
+            a.model.weights[0], c.model.weights[0],
+            "a different seed perturbs the init"
+        );
+    }
+
+    #[test]
+    fn when_routing_cannot_help_the_model_converges_to_global() {
+        // One model, one route-like choice structure: global vs an
+        // identical copy — utilities tie everywhere, targets all route 0.
+        let mut b = TableBuilder::new("synth", vec!["m0".into(), "m1".into()]);
+        for i in 0..48 {
+            let label = (i % 4) as u32;
+            b.push_item(label, &[label, label], &[0.9, 0.9], &[true, true]).unwrap();
+        }
+        let table = b.finish().unwrap();
+        let tokens = vec![64u32; 48];
+        let costs = costs2(2.0, 2.0);
+        let global = CascadePlan::single(0);
+        let routes: Vec<RouteSpec> = vec![(global.clone(), 0), (global, 0)];
+        let trained = train_router(
+            &table,
+            &tokens,
+            &routes,
+            None,
+            &costs,
+            &RouterTrainConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(trained.target_counts, vec![48, 0], "ties resolve to route 0");
+        let eval =
+            evaluate_router(&trained.model, &table, &tokens, &routes, None, &costs).unwrap();
+        assert_eq!(eval.route_counts[0], 48, "trained model picks route 0 everywhere");
+    }
+
+    #[test]
+    fn probe_feature_and_probe_billing_flow_through_evaluation() {
+        let (table, tokens) = two_population_table(64);
+        let costs = costs2(2.0, 8.0);
+        let routes = routes_pair();
+        // Hand-built model that reads ONLY the probe feature: high probe
+        // score (model 0 confident + correct ≈ both populations here have
+        // score 0.9, so this stays on one route — the point is billing).
+        let mut model = RouterModel::degenerate(3);
+        model.weights[2][FEAT_PROBE] = 5.0;
+        let with_probe =
+            evaluate_router(&model, &table, &tokens, &routes, Some(0), &costs).unwrap();
+        let mut free = RouterModel::degenerate(3);
+        free.weights[2][FEAT_BIAS] = 5.0; // same decisions, no probe read
+        let without =
+            evaluate_router(&free, &table, &tokens, &routes, Some(0), &costs).unwrap();
+        assert_eq!(with_probe.route_counts, without.route_counts);
+        assert!(
+            with_probe.avg_cost > without.avg_cost,
+            "reading the probe must bill the probe call"
+        );
+    }
+
+    #[test]
+    fn validation_rejects_malformed_inputs() {
+        let (table, tokens) = two_population_table(16);
+        let costs = costs2(2.0, 8.0);
+        let cfg = RouterTrainConfig::default();
+        assert!(train_router(&table, &tokens, &[], None, &costs, &cfg).is_err());
+        assert!(
+            train_router(&table, &tokens[..8], &routes_pair(), None, &costs, &cfg).is_err()
+        );
+        let m = RouterModel::degenerate(2);
+        assert!(evaluate_router(&m, &table, &tokens, &routes_pair(), None, &costs).is_err());
+    }
+}

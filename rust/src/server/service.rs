@@ -44,6 +44,7 @@ use anyhow::Result;
 
 use crate::coordinator::budget::BudgetTracker;
 use crate::coordinator::cascade::{Cascade, CascadePlan, HealthView};
+use crate::coordinator::optimizer::FrontierPoint;
 use crate::coordinator::scorer::Scorer;
 use crate::data::DatasetMeta;
 use crate::marketplace::CostModel;
@@ -58,6 +59,10 @@ use crate::strategies::pipeline::{
     StageKind, StageMetricsSnapshot,
 };
 use crate::strategies::prompt::PromptPolicy;
+use crate::strategies::router::{
+    route_plans, ProbeScorer, RouteTarget, RouterBundle, RouterConfig, RouterHandle,
+    RouterModel, RouterStats, RouterSwapEvent,
+};
 use crate::util::json::Value;
 use crate::util::sync::SnapshotCell;
 
@@ -111,6 +116,13 @@ pub struct ServiceConfig {
     /// the cascade skips circuit-open stages and degrades instead of
     /// erroring (skip-never-error).
     pub health: Option<HealthConfig>,
+    /// Per-query contextual routing (`--router on`, see
+    /// [`crate::strategies::router`]). `None` = the `router` pipeline
+    /// stage is skipped entirely — the global-plan baseline. The service
+    /// starts every router generation degenerate (zero weights, exact
+    /// global-plan behavior); the reoptimizer trains and publishes real
+    /// weights on its cadence.
+    pub router: Option<RouterConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -129,6 +141,7 @@ impl Default for ServiceConfig {
             shadow: None,
             pipeline: PipelineSpec::full(),
             health: None,
+            router: None,
         }
     }
 }
@@ -159,6 +172,12 @@ pub struct ServiceAnswer {
     /// circuit-open or kept failing (empty when healthy or when no health
     /// layer is configured). Non-empty marks a degraded answer.
     pub skipped_stages: Vec<usize>,
+    /// Version of the router bundle whose decision shaped this answer;
+    /// `None` when no router routed it (router off, degenerate fast path,
+    /// abstention, cache hit). Every routed answer is consistent with
+    /// exactly ONE router snapshot, the same way `plan_version` pins the
+    /// plan snapshot.
+    pub router_version: Option<u64>,
 }
 
 impl ServiceAnswer {
@@ -190,6 +209,10 @@ impl ServiceAnswer {
             "skipped_stages".to_string(),
             Value::Arr(self.skipped_stages.iter().map(|&s| Value::Num(s as f64)).collect()),
         );
+        m.insert(
+            "router_version".to_string(),
+            self.router_version.map(|v| Value::Num(v as f64)).unwrap_or(Value::Null),
+        );
         Value::Obj(m)
     }
 
@@ -219,6 +242,7 @@ impl ServiceAnswer {
                 .iter()
                 .map(|s| s.as_usize().context("bad skipped stage index"))
                 .collect::<Result<_>>()?,
+            router_version: v.get("router_version").as_f64().map(|x| x as u64),
         })
     }
 }
@@ -439,6 +463,51 @@ pub struct FrugalService {
     /// Per-model circuit breakers + retry policy (`cfg.health`); shared
     /// by every plan bundle this service publishes.
     health: Option<Arc<ModelHealth>>,
+    /// Swappable router bundle behind the `router` stage (`cfg.router`);
+    /// rebuilt against every plan publish so routes and plan can never
+    /// come from different generations.
+    router: Option<Arc<RouterHandle>>,
+    /// Probe model behind the router's probe feature (`cfg.router.probe_model`).
+    probe: Option<Arc<ProbeScorer>>,
+    /// Latest full cost–accuracy frontier handed over by the optimizer
+    /// ([`FrugalService::install_frontier`]); router rebuilds offer its
+    /// points as extra routes.
+    frontier_points: Mutex<Vec<FrontierPoint>>,
+}
+
+/// Compile the route targets for a router generation: route 0 stays
+/// uncompiled (it is the plan bundle's own cascade — the bit-parity
+/// path), every other route gets its own cascade sharing the service's
+/// health registry, so breaker state is one truth across all routes.
+fn build_route_targets(
+    plan: &CascadePlan,
+    frontier: &[FrontierPoint],
+    grid: usize,
+    engine: &EngineHandle,
+    costs: &CostModel,
+    meta: &DatasetMeta,
+    health: Option<Arc<ModelHealth>>,
+) -> Result<Vec<RouteTarget>> {
+    let view = health.map(|h| h as Arc<dyn HealthView>);
+    let mut out = Vec::new();
+    for (i, (p, skip, label)) in route_plans(plan, frontier, grid).into_iter().enumerate() {
+        let cascade = if i == 0 {
+            None
+        } else {
+            Some(Arc::new(
+                Cascade::new(
+                    p.clone(),
+                    engine.clone(),
+                    Scorer::new(engine.clone(), meta.clone()),
+                    costs.clone(),
+                    meta.clone(),
+                )?
+                .with_health(view.clone()),
+            ))
+        };
+        out.push(RouteTarget { plan: p, skip, cascade, label });
+    }
+    Ok(out)
 }
 
 impl FrugalService {
@@ -461,10 +530,46 @@ impl FrugalService {
                 cfg.pipeline.describe()
             );
         }
+        if cfg.router.is_some() && !cfg.pipeline.stages.contains(&StageKind::Router) {
+            anyhow::bail!(
+                "contextual routing is configured but the pipeline spec `{}` has no \
+                 `router` stage — every query would silently serve the global plan \
+                 (add `router` to the spec or drop the router config)",
+                cfg.pipeline.describe()
+            );
+        }
         let health = cfg
             .health
             .as_ref()
             .map(|hc| Arc::new(ModelHealth::new(costs.n_models(), hc.clone())));
+        // Router generation 0: degenerate weights (exact global-plan
+        // behavior) over the routes of the initial plan — no frontier yet.
+        let (router, probe) = match &cfg.router {
+            Some(rc) => {
+                let probe = match &rc.probe_model {
+                    Some(name) => Some(Arc::new(ProbeScorer::spawn(
+                        engine.clone(),
+                        costs.clone(),
+                        meta.clone(),
+                        name,
+                    )?)),
+                    None => None,
+                };
+                let routes = build_route_targets(
+                    &plan,
+                    &[],
+                    rc.grid,
+                    &engine,
+                    &costs,
+                    &meta,
+                    health.clone(),
+                )?;
+                let model = RouterModel::degenerate(routes.len());
+                let handle = RouterHandle::new(RouterBundle::new(0, 0, model, routes)?);
+                (Some(Arc::new(handle)), probe)
+            }
+            None => (None, None),
+        };
         let initial = PlanBundle::build(plan, 0, &engine, &costs, &meta, health.clone())?;
         let metrics = Arc::new(ServiceMetrics::with_window(
             costs.n_models(),
@@ -498,6 +603,8 @@ impl FrugalService {
                 prompt_policy: cfg.prompt_policy,
                 budget: budget.clone(),
                 metrics: metrics.clone(),
+                router: router.clone(),
+                probe: probe.clone(),
             },
         )?;
         let costs = if cfg.baseline_locks {
@@ -517,6 +624,9 @@ impl FrugalService {
             meta,
             shadow,
             health,
+            router,
+            probe,
+            frontier_points: Mutex::new(Vec::new()),
         })
     }
 
@@ -615,7 +725,140 @@ impl FrugalService {
         if let Some(cache) = &self.cache {
             cache.retain_and_restamp(version, |ans| plan_accepts_cached(&plan, ans));
         }
+        // Rebuild the router against the new plan generation (the stage
+        // abstains until this lands — a short window of plain global-plan
+        // serving, never a mixed-generation route). Learned weights
+        // survive the rebuild only when the route plans are unchanged
+        // (e.g. a pure reprice); a different plan means the old routes —
+        // and a model trained to pick among them — no longer apply, so
+        // the model resets to degenerate until the next retrain.
+        if let Some(router) = &self.router {
+            let grid = self.cfg.router.as_ref().map(|rc| rc.grid).unwrap_or(0);
+            let frontier = self.frontier_points.lock().unwrap().clone();
+            let routes = build_route_targets(
+                &plan,
+                &frontier,
+                grid,
+                &self.engine,
+                &costs,
+                &self.meta,
+                self.health.clone(),
+            )?;
+            let cur = router.snapshot();
+            let model = if cur.model.n_routes() == routes.len()
+                && cur
+                    .routes
+                    .iter()
+                    .zip(routes.iter())
+                    .all(|(a, b)| a.plan == b.plan && a.skip == b.skip)
+            {
+                cur.model.clone()
+            } else {
+                RouterModel::degenerate(routes.len())
+            };
+            let rv = router.reserve_version();
+            let event = RouterSwapEvent {
+                version: rv,
+                plan_version: version,
+                at_query: self.metrics.queries.load(Ordering::Relaxed),
+                reason: format!("rebuild against plan v{version}"),
+                n_routes: routes.len(),
+                degenerate: model.is_degenerate(),
+                window_accuracy: None,
+                window_avg_cost: None,
+            };
+            // A lost race means a newer router publish is already in —
+            // that bundle supersedes this rebuild by construction.
+            router.publish(RouterBundle::new(rv, version, model, routes)?, event);
+        }
         Ok(version)
+    }
+
+    /// Hand the service the optimizer's full cost–accuracy frontier; the
+    /// next router rebuild/publish offers its points as extra routes.
+    pub fn install_frontier(&self, points: Vec<FrontierPoint>) {
+        *self.frontier_points.lock().unwrap() = points;
+    }
+
+    /// The route plans a router generation for the CURRENT plan would
+    /// offer, as (plan, prefix-skip) pairs — exactly what
+    /// [`crate::server::router_train::train_router`] trains against and
+    /// [`FrugalService::publish_router`] compiles. Empty when routing is
+    /// off.
+    pub fn router_route_specs(&self) -> Vec<(CascadePlan, usize)> {
+        let Some(rc) = &self.cfg.router else { return Vec::new() };
+        let plan = self.plan();
+        let frontier = self.frontier_points.lock().unwrap().clone();
+        route_plans(&plan, &frontier, rc.grid)
+            .into_iter()
+            .map(|(p, s, _)| (p, s))
+            .collect()
+    }
+
+    /// Marketplace index of the router's probe model, when configured.
+    pub fn probe_model_index(&self) -> Option<usize> {
+        self.probe.as_ref().map(|p| p.model_index())
+    }
+
+    /// Publish a (re)trained router model against the CURRENT plan
+    /// snapshot, recording the routed window metrics that justified it.
+    /// Returns the new router version.
+    pub fn publish_router(
+        &self,
+        model: RouterModel,
+        reason: &str,
+        window_stats: Option<(f64, f64)>,
+    ) -> Result<u64> {
+        let Some(router) = &self.router else {
+            anyhow::bail!("cannot publish a router model: routing is not enabled");
+        };
+        let costs = self.costs.load();
+        let plan_bundle = self.plans.snapshot();
+        let grid = self.cfg.router.as_ref().map(|rc| rc.grid).unwrap_or(0);
+        let frontier = self.frontier_points.lock().unwrap().clone();
+        let routes = build_route_targets(
+            plan_bundle.plan(),
+            &frontier,
+            grid,
+            &self.engine,
+            &costs,
+            &self.meta,
+            self.health.clone(),
+        )?;
+        let rv = router.reserve_version();
+        let event = RouterSwapEvent {
+            version: rv,
+            plan_version: plan_bundle.version(),
+            at_query: self.metrics.queries.load(Ordering::Relaxed),
+            reason: reason.to_string(),
+            n_routes: routes.len(),
+            degenerate: model.is_degenerate(),
+            window_accuracy: window_stats.map(|(a, _)| a),
+            window_avg_cost: window_stats.map(|(_, c)| c),
+        };
+        let bundle = RouterBundle::new(rv, plan_bundle.version(), model, routes)?;
+        if !router.publish(bundle, event) {
+            anyhow::bail!(
+                "router v{rv} was superseded by a newer publish before it could \
+                 be installed"
+            );
+        }
+        Ok(rv)
+    }
+
+    /// The current router bundle, when routing is on.
+    pub fn router_snapshot(&self) -> Option<Arc<RouterBundle>> {
+        self.router.as_ref().map(|r| r.snapshot())
+    }
+
+    /// Router swaps published so far (empty when routing is off).
+    pub fn router_swap_history(&self) -> Vec<RouterSwapEvent> {
+        self.router.as_ref().map(|r| r.history()).unwrap_or_default()
+    }
+
+    /// Router stage counters, when routing is on.
+    pub fn router_stats(&self) -> Option<RouterStats> {
+        self.router.as_ref().map(|r| r.stats())
     }
 
     /// Answer one query through the strategy pipeline (blocking; wrap in
@@ -665,6 +908,7 @@ impl FrugalService {
             meta: &self.meta,
             degraded: false,
             concat_group,
+            route: None,
         })?;
 
         let lat = t0.elapsed().as_micros() as u64;
@@ -686,6 +930,7 @@ impl FrugalService {
             latency_us: lat,
             simulated_api_latency_ms: a.simulated_api_latency_ms,
             skipped_stages: a.skipped_stages,
+            router_version: a.router_version,
         })
     }
 
@@ -804,6 +1049,7 @@ mod tests {
                 latency_us: 1_234_567,
                 simulated_api_latency_ms: 123.456789012345,
                 skipped_stages: vec![0, 3],
+                router_version: Some(17),
             },
             ServiceAnswer {
                 answer: 0,
@@ -815,6 +1061,7 @@ mod tests {
                 latency_us: 0,
                 simulated_api_latency_ms: 0.0,
                 skipped_stages: vec![],
+                router_version: None,
             },
         ];
         for a in &answers {
@@ -832,6 +1079,7 @@ mod tests {
                 a.simulated_api_latency_ms.to_bits()
             );
             assert_eq!(back.skipped_stages, a.skipped_stages);
+            assert_eq!(back.router_version, a.router_version);
             // Serialization is deterministic: a second trip is identical.
             assert_eq!(back.to_value().to_json(), json);
         }

@@ -260,6 +260,38 @@ impl CompletionCache {
         None
     }
 
+    /// Non-mutating cache-signal probe (the router's `FEAT_CACHE`
+    /// feature): 1.0 when an exact current-generation entry exists,
+    /// otherwise the best similar-tier signature similarity clearing the
+    /// threshold (0.0 when the similar tier is disabled or nothing
+    /// clears it). Unlike [`CompletionCache::get`] this records no
+    /// stats, promotes no recency, and reclaims nothing — a pure read,
+    /// so probing the signal never perturbs what the cache stage itself
+    /// will observe a moment later.
+    pub fn peek_similarity(&self, query: &[i32], generation: u64) -> f64 {
+        let key = exact_key(query);
+        if let Some(&slot) = self.by_key.get(&key) {
+            if self.slots[slot].as_ref().unwrap().answer.plan_version == generation {
+                return 1.0;
+            }
+        }
+        if self.min_similarity < 1.0 {
+            let sig = minhash(query);
+            let mut best = 0.0f64;
+            for e in self.slots.iter().flatten() {
+                if e.answer.plan_version != generation {
+                    continue;
+                }
+                let sim = signature_similarity(&sig, &e.signature);
+                if sim >= self.min_similarity && sim > best {
+                    best = sim;
+                }
+            }
+            return best;
+        }
+        0.0
+    }
+
     /// The plan-swap sweep: keep (and re-stamp to `generation`) every
     /// entry the predicate approves, invalidate the rest. Returns how many
     /// entries survived. The predicate typically asks whether the *new*
@@ -444,6 +476,14 @@ impl ShardedCache {
     pub fn put(&self, query: &[i32], answer: CachedAnswer) {
         let s = self.shard_of(query);
         self.shards[s].lock().unwrap().put(query, answer)
+    }
+
+    /// Non-mutating cache-signal probe on the query's shard — see
+    /// [`CompletionCache::peek_similarity`]. Locks exactly one shard for
+    /// the duration of the read and changes nothing.
+    pub fn peek_similarity(&self, query: &[i32], generation: u64) -> f64 {
+        let s = self.shard_of(query);
+        self.shards[s].lock().unwrap().peek_similarity(query, generation)
     }
 
     /// The plan-swap sweep, shard by shard: each shard is locked, swept
@@ -731,6 +771,57 @@ mod tests {
             c.put(&q(id, 8), CachedAnswer::fresh(id as u32, 0.5));
         }
         assert_eq!(c.len(), 8);
+    }
+
+    /// The router's cache-signal probe must see exactly what `get` would
+    /// serve — without perturbing stats, recency, or stale entries.
+    #[test]
+    fn peek_similarity_is_pure_and_generation_aware() {
+        let mut c = CompletionCache::new(4, 1.0);
+        assert_eq!(c.peek_similarity(&q(1, 8), 0), 0.0, "empty cache → no signal");
+        c.put(&q(1, 8), CachedAnswer { answer: 3, score: 0.9, model: Some(0), plan_version: 2 });
+        assert_eq!(c.peek_similarity(&q(1, 8), 2), 1.0, "exact current-gen entry");
+        assert_eq!(c.peek_similarity(&q(1, 8), 3), 0.0, "stale generation → no signal");
+        let before = c.stats();
+        for _ in 0..10 {
+            c.peek_similarity(&q(1, 8), 2);
+            c.peek_similarity(&q(1, 8), 3);
+        }
+        assert_eq!(c.stats(), before, "peek records no stats");
+        // Peeking a NEWER generation at a stale entry must not reclaim it
+        // (get would): the entry still serves its own generation.
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&q(1, 8), 2).unwrap().answer, 3);
+        // Peeks don't promote: with cap 2, peek the oldest then insert —
+        // it must still evict first.
+        let mut c = CompletionCache::new(2, 1.0);
+        c.put(&q(1, 8), CachedAnswer::fresh(1, 0.5));
+        c.put(&q(2, 8), CachedAnswer::fresh(2, 0.5));
+        for _ in 0..5 {
+            assert_eq!(c.peek_similarity(&q(1, 8), 0), 1.0);
+        }
+        c.put(&q(3, 8), CachedAnswer::fresh(3, 0.5));
+        assert!(c.get(&q(1, 8), 0).is_none(), "peeked entry was not promoted");
+    }
+
+    #[test]
+    fn peek_similarity_reports_similar_tier_strength() {
+        let mut c = CompletionCache::new(8, 0.7);
+        let base = q(3, 32);
+        c.put(&base, CachedAnswer::fresh(1, 0.8));
+        let mut nearly = base.clone();
+        nearly[5] += 1;
+        let sim = c.peek_similarity(&nearly, 0);
+        assert!((0.7..=1.0).contains(&sim), "similar entry reports its strength: {sim}");
+        assert_eq!(c.peek_similarity(&q(99, 32), 0), 0.0, "dissimilar → 0");
+        assert_eq!(c.stats().similar_hits, 0, "peek is not a hit");
+        // Sharded wrapper delegates to the right shard.
+        let sc = ShardedCache::new(4, 64, 1.0, 1);
+        sc.put(&q(7, 8), CachedAnswer::fresh(7, 0.5));
+        assert_eq!(sc.peek_similarity(&q(7, 8), 0), 1.0);
+        assert_eq!(sc.peek_similarity(&q(8, 8), 0), 0.0);
+        let st = sc.stats();
+        assert_eq!((st.lookups, st.exact_hits), (0, 0), "sharded peek records no stats");
     }
 
     #[test]

@@ -6,6 +6,9 @@
 //!   prompt to cut input-token cost.
 //! * [`concat`] — **query concatenation** (Fig. 2b): share one prompt
 //!   across several queries.
+//! * [`router`] — **per-query contextual routing**: a learned meta-router
+//!   that picks a frontier point or skips a cascade prefix per query
+//!   (FORC-style, see PAPERS.md) instead of serving one global (L, τ).
 //!
 //! All three compose with the cascade (paper "Compositions") through the
 //! [`pipeline`] module: each strategy is a first-class [`pipeline::Strategy`]
@@ -18,3 +21,4 @@ pub mod cache;
 pub mod concat;
 pub mod pipeline;
 pub mod prompt;
+pub mod router;

@@ -39,6 +39,7 @@ use crate::server::shadow::Shadow;
 use crate::strategies::cache::{CachedAnswer, ShardedCache};
 use crate::strategies::concat;
 use crate::strategies::prompt::PromptPolicy;
+use crate::strategies::router::{ProbeScorer, RouteDecision, RouterHandle, RouterStage};
 use crate::util::json::Value;
 
 /// Everything a stage may read (and the two fields it may flag) about the
@@ -65,6 +66,12 @@ pub struct QueryCtx<'a> {
     /// The cascade executor bills `prompt/group + query` input tokens
     /// (paper Fig. 2b) when > 1.
     pub concat_group: usize,
+    /// Set by the `router` stage when the learned meta-router picked a
+    /// non-default route (a prefix-skip of the global plan, or another
+    /// frontier point): the cascade executor then runs that route's
+    /// cascade instead of the bundle default. `None` = the global plan
+    /// (identical code path to no router at all).
+    pub route: Option<RouteDecision>,
 }
 
 /// The answer a stage produced for the query.
@@ -87,6 +94,10 @@ pub struct StageAnswer {
     pub skipped_stages: Vec<usize>,
     /// Simulated commercial-API round-trip latency (ms).
     pub simulated_api_latency_ms: f64,
+    /// Version of the [`crate::strategies::router::RouterBundle`] whose
+    /// decision shaped this answer; `None` when no router routed it (no
+    /// router stage, degenerate fast path, abstention, cache hit).
+    pub router_version: Option<u64>,
 }
 
 /// What a stage decided about the query.
@@ -269,6 +280,9 @@ pub enum StageKind {
     Prompt,
     /// Budget-cap degrade — flags cap exhaustion for the cascade.
     Budget,
+    /// Learned per-query meta-router — picks a frontier point or skips a
+    /// cascade prefix (see [`crate::strategies::router`]).
+    Router,
     /// The LLM cascade executor (Fig. 2e) — the terminal stage.
     Cascade,
 }
@@ -281,6 +295,7 @@ impl StageKind {
             StageKind::Shadow => "shadow",
             StageKind::Prompt => "prompt",
             StageKind::Budget => "budget",
+            StageKind::Router => "router",
             StageKind::Cascade => "cascade",
         }
     }
@@ -292,10 +307,11 @@ impl StageKind {
             "shadow" => StageKind::Shadow,
             "prompt" => StageKind::Prompt,
             "budget" => StageKind::Budget,
+            "router" => StageKind::Router,
             "cascade" => StageKind::Cascade,
             other => bail!(
                 "unknown pipeline stage `{other}` \
-                 (expected cache|shadow|prompt|budget|cascade)"
+                 (expected cache|shadow|prompt|budget|router|cascade)"
             ),
         })
     }
@@ -319,7 +335,10 @@ impl Default for PipelineSpec {
 
 impl PipelineSpec {
     /// The full production stack: cache → shadow → prompt → budget →
-    /// cascade (the pre-pipeline hard-coded order).
+    /// router → cascade. The router slot sits after the prompt transform
+    /// (its length feature must see the tokens the cascade will bill) and
+    /// is skipped entirely when no router is configured, so the default
+    /// spec reproduces the pre-router stack exactly.
     pub fn full() -> PipelineSpec {
         PipelineSpec {
             stages: vec![
@@ -327,6 +346,7 @@ impl PipelineSpec {
                 StageKind::Shadow,
                 StageKind::Prompt,
                 StageKind::Budget,
+                StageKind::Router,
                 StageKind::Cascade,
             ],
         }
@@ -416,6 +436,12 @@ pub struct StageDeps {
     /// Service-level counters (cache hits, cascade stops, per-model
     /// windows).
     pub metrics: Arc<ServiceMetrics>,
+    /// The swappable router bundle handle (`None` = router off; the
+    /// `router` stage is then skipped).
+    pub router: Option<Arc<RouterHandle>>,
+    /// The probe model behind the router's probe feature (`None` = the
+    /// feature stays 0.0).
+    pub probe: Option<Arc<ProbeScorer>>,
 }
 
 /// Build the composed stack a [`PipelineSpec`] describes. Stages whose
@@ -444,6 +470,15 @@ pub fn build_pipeline(spec: &PipelineSpec, deps: &StageDeps) -> Result<Pipeline>
             }
             StageKind::Budget => {
                 stages.push(Box::new(BudgetStage { budget: deps.budget.clone() }));
+            }
+            StageKind::Router => {
+                if let Some(router) = &deps.router {
+                    stages.push(Box::new(RouterStage {
+                        router: router.clone(),
+                        cache: deps.cache.clone(),
+                        probe: deps.probe.clone(),
+                    }));
+                }
             }
             StageKind::Cascade => {
                 stages.push(Box::new(CascadeStage { metrics: deps.metrics.clone() }));
@@ -504,6 +539,7 @@ impl Strategy for CacheStage {
                     stopped_at: None,
                     skipped_stages: Vec::new(),
                     simulated_api_latency_ms: 0.0,
+                    router_version: None,
                 }))
             }
             None => Ok(Decision::Pass),
@@ -621,15 +657,27 @@ impl Strategy for CascadeStage {
         // concatenation group (paper Fig. 2b; a solo query bills in full).
         let (prompt_toks, query_toks) = concat::split_row_tokens(&ctx.tokens, ctx.meta);
         let billed = concat::amortized_input(prompt_toks, query_toks, ctx.concat_group);
-        let cascade = if ctx.degraded {
-            ctx.bundle.degraded()
-        } else {
-            ctx.bundle.cascade()
+        // Cascade selection: budget degrade wins over routing (the cap is
+        // a hard promise); otherwise a router decision picks its route's
+        // compiled cascade, with `None` meaning the bundle's own global
+        // cascade — the identical object the no-router path executes.
+        let route = if ctx.degraded { None } else { ctx.route.as_ref() };
+        let (cascade, skip) = match route {
+            Some(r) => (
+                r.cascade.as_deref().unwrap_or_else(|| ctx.bundle.cascade()),
+                r.skip,
+            ),
+            None if ctx.degraded => (ctx.bundle.degraded(), 0),
+            None => (ctx.bundle.cascade(), 0),
         };
         let executed = cascade.plan();
         let out = cascade.answer_billed(&ctx.tokens, billed)?;
 
-        self.metrics.record_stop(out.stopped_at);
+        // `skip` keeps prefix-skip routes reporting stage indices in
+        // GLOBAL plan coordinates (skip=0 — the identity — changes
+        // nothing; frontier-point routes report their own plan's
+        // coordinates).
+        self.metrics.record_stop(out.stopped_at + skip);
         // `stage_costs` may cover a subset of the plan when health skipped
         // stages — `invoked_models` is its model attribution, parallel by
         // construction (plan indexing would mis-bill the survivors).
@@ -650,14 +698,24 @@ impl Strategy for CascadeStage {
             // 1.0, not a scorer measurement — keep them out of the mean.
             w.record_accepted((!out.sentinel_score).then_some(out.score));
         }
+        // Probe spend is metered onto the answer (the probe call is a
+        // real marketplace call); the `> 0.0` guard keeps the no-probe
+        // path bit-identical to the pre-router cost arithmetic.
+        let mut cost_usd = out.cost;
+        if let Some(r) = route {
+            if r.probe_cost_usd > 0.0 {
+                cost_usd += r.probe_cost_usd;
+            }
+        }
         Ok(Decision::Answer(StageAnswer {
             answer: out.answer,
             score: out.score,
-            cost_usd: out.cost,
+            cost_usd,
             model: Some(model),
-            stopped_at: Some(out.stopped_at),
-            skipped_stages: out.skipped_stages,
+            stopped_at: Some(out.stopped_at + skip),
+            skipped_stages: out.skipped_stages.iter().map(|&s| s + skip).collect(),
             simulated_api_latency_ms: out.simulated_latency_ms,
+            router_version: route.map(|r| r.router_version),
         }))
     }
 }

@@ -1,0 +1,759 @@
+//! Per-query contextual routing: a learned meta-router stage.
+//!
+//! FrugalGPT's optimizer learns ONE global (L, τ) cascade, but the paper's
+//! own framing — "which combinations of LLMs to use for *different*
+//! queries" — points at per-query routing (FORC's meta-model router and
+//! budget-conditioned contextual cascades, see PAPERS.md). This module is
+//! that idea as one more [`Strategy`](crate::strategies::pipeline::Strategy)
+//! stage: a cheap linear meta-model reads per-query features (token
+//! length, an optional tiny probe-model score, an optional cache-signal)
+//! and picks a **route** — the global plan, a suffix of it (skip a
+//! cascade prefix the probe says is doomed or unnecessary), or a
+//! different frontier point entirely.
+//!
+//! §Snapshot discipline — routes ride the exact same publish machinery as
+//! plans: an immutable [`RouterBundle`] (model + compiled route cascades)
+//! behind a wait-free [`SnapshotCell`] in a [`RouterHandle`]. The stage
+//! loads ONE bundle per query; the bundle records the plan version it was
+//! compiled against, and the stage *abstains* (routes nothing) whenever
+//! that version differs from the query's [`PlanBundle`] snapshot — a plan
+//! swap can therefore never mix route cascades from one generation with a
+//! plan from another. Router swaps are recorded as [`RouterSwapEvent`]s,
+//! mirroring the plan swap history.
+//!
+//! §Degenerate identity — a zero-weight model routes every query to
+//! route 0 (the global plan) at zero extra cost, and the stage then
+//! passes without touching the context at all: the pipeline is
+//! **bit-identical** to one without the router stage (pinned by
+//! `prop_degenerate_router_reproduces_global_plan_bitwise`). Features
+//! that no route weights read (the probe call, the cache peek) are never
+//! computed, so the degenerate router also never *spends* anything.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::cascade::{argmax, Cascade, CascadePlan};
+use crate::coordinator::optimizer::FrontierPoint;
+use crate::coordinator::scorer::Scorer;
+use crate::data::DatasetMeta;
+use crate::marketplace::CostModel;
+use crate::runtime::EngineHandle;
+use crate::server::batcher::{Batcher, BatcherConfig, BatcherHandle};
+use crate::strategies::cache::ShardedCache;
+use crate::strategies::concat;
+use crate::strategies::pipeline::{Decision, QueryCtx, Strategy};
+use crate::util::json::Value;
+use crate::util::sync::SnapshotCell;
+
+/// Number of per-query features the router reads.
+pub const N_FEATURES: usize = 4;
+/// Feature index: constant bias term (always 1.0).
+pub const FEAT_BIAS: usize = 0;
+/// Feature index: log-scaled billable input length.
+pub const FEAT_LEN: usize = 1;
+/// Feature index: probe-model reliability score (0.0 when no probe).
+pub const FEAT_PROBE: usize = 2;
+/// Feature index: completion-cache similarity signal (0.0 when no cache).
+pub const FEAT_CACHE: usize = 3;
+
+/// Log-scaled billable-input-length feature. The fixed normalizer keeps
+/// the feature O(1) for realistic prompt sizes without a stored
+/// per-dataset scale (so a degenerate model needs no statistics).
+pub fn length_feature(billed_input: u32) -> f32 {
+    (1.0 + billed_input as f32).ln() / 8.0
+}
+
+/// Assemble the feature vector the router model scores.
+pub fn features(billed_input: u32, probe_score: f32, cache_signal: f32) -> [f32; N_FEATURES] {
+    [1.0, length_feature(billed_input), probe_score, cache_signal]
+}
+
+/// Router configuration (`--router on` on the serve CLIs).
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Max frontier points offered as routes beyond the global plan and
+    /// its prefix-skips (`--router-grid`).
+    pub grid: usize,
+    /// Marketplace model name scored as the probe feature (`--probe-model`;
+    /// `None` = the probe feature stays 0.0 and costs nothing).
+    pub probe_model: Option<String>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { grid: 4, probe_model: None }
+    }
+}
+
+/// The learned meta-model: one linear scorer per route over the
+/// [`features`] vector; `decide` picks the argmax (ties → the lowest
+/// route index, so the all-zero model always picks route 0 — the global
+/// plan).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouterModel {
+    /// Per-route feature weights (`n_routes × N_FEATURES`).
+    pub weights: Vec<[f32; N_FEATURES]>,
+}
+
+impl RouterModel {
+    /// The zero-weight model over `n_routes` routes: routes everything to
+    /// route 0 and reads no paid feature — the bit-identity fallback.
+    pub fn degenerate(n_routes: usize) -> RouterModel {
+        RouterModel { weights: vec![[0.0; N_FEATURES]; n_routes] }
+    }
+
+    /// Number of routes this model scores.
+    pub fn n_routes(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Whether every weight is exactly zero (the identity router).
+    pub fn is_degenerate(&self) -> bool {
+        self.weights.iter().all(|w| w.iter().all(|&x| x == 0.0))
+    }
+
+    /// Whether any route reads feature `feat` — gates paid feature
+    /// extraction (probe calls, cache peeks) so the degenerate model
+    /// never spends.
+    pub fn uses_feature(&self, feat: usize) -> bool {
+        self.weights.iter().any(|w| w[feat] != 0.0)
+    }
+
+    /// Linear score of route `r` on a feature vector.
+    pub fn score(&self, r: usize, f: &[f32; N_FEATURES]) -> f32 {
+        self.weights[r].iter().zip(f.iter()).map(|(w, x)| w * x).sum()
+    }
+
+    /// Pick the route: argmax of the per-route linear scores, ties
+    /// resolved to the lowest index.
+    pub fn decide(&self, f: &[f32; N_FEATURES]) -> usize {
+        let scores: Vec<f32> = (0..self.n_routes()).map(|r| self.score(r, f)).collect();
+        argmax(&scores)
+    }
+
+    /// JSON form (row-major weights), bit-lossless through the
+    /// shortest-printing serializer.
+    pub fn to_value(&self) -> Value {
+        Value::Arr(
+            self.weights
+                .iter()
+                .map(|w| Value::Arr(w.iter().map(|&x| Value::Num(x as f64)).collect()))
+                .collect(),
+        )
+    }
+
+    /// Parse the [`RouterModel::to_value`] form.
+    pub fn from_value(v: &Value) -> Result<RouterModel> {
+        let rows = v.as_arr().context("router model must be an array of weight rows")?;
+        let mut weights = Vec::with_capacity(rows.len());
+        for row in rows {
+            let xs = row.as_arr().context("router weight row must be an array")?;
+            if xs.len() != N_FEATURES {
+                anyhow::bail!("router weight row has {} features, want {N_FEATURES}", xs.len());
+            }
+            let mut w = [0.0f32; N_FEATURES];
+            for (i, x) in xs.iter().enumerate() {
+                w[i] = x.as_f64().context("router weight must be a number")? as f32;
+            }
+            weights.push(w);
+        }
+        Ok(RouterModel { weights })
+    }
+}
+
+/// One route the router may pick: a cascade plan plus how many stages of
+/// the *global* plan it skips (so `stopped_at` can be reported in global
+/// stage coordinates).
+pub struct RouteTarget {
+    /// The plan this route executes.
+    pub plan: CascadePlan,
+    /// Stages of the global plan this route skips (`plan` is then the
+    /// global plan's suffix `stages[skip..]`); 0 for the global plan
+    /// itself and for frontier-point routes.
+    pub skip: usize,
+    /// Compiled cascade; `None` for route 0 — the global plan — which
+    /// executes the query's own [`PlanBundle`] cascade (this is what
+    /// makes the degenerate router bit-identical: no second compile).
+    pub cascade: Option<Arc<Cascade>>,
+    /// Short label for reports (`global`, `skip1`, `frontier2`, ...).
+    pub label: String,
+}
+
+/// Enumerate the route *plans* for a global plan and a served frontier:
+/// route 0 is the global plan itself, then one prefix-skip route per
+/// non-trivial suffix, then up to `grid` frontier points (evenly
+/// subsampled across the frontier, deduplicated against the routes
+/// already present). Pure — compilation to cascades happens in the
+/// service, which owns engine/health wiring.
+pub fn route_plans(
+    global: &CascadePlan,
+    frontier: &[FrontierPoint],
+    grid: usize,
+) -> Vec<(CascadePlan, usize, String)> {
+    let mut out = vec![(global.clone(), 0usize, "global".to_string())];
+    for j in 1..global.stages.len() {
+        out.push((
+            CascadePlan::new(global.stages[j..].to_vec()),
+            j,
+            format!("skip{j}"),
+        ));
+    }
+    if grid > 0 && !frontier.is_empty() {
+        let picks = grid.min(frontier.len());
+        for k in 0..picks {
+            // Even subsample across the frontier ordering (cheapest to
+            // most accurate), endpoints included when picks > 1.
+            let idx = if picks == 1 { 0 } else { k * (frontier.len() - 1) / (picks - 1) };
+            let plan = &frontier[idx].plan;
+            if out.iter().any(|(p, _, _)| p == plan) {
+                continue;
+            }
+            out.push((plan.clone(), 0, format!("frontier{idx}")));
+        }
+    }
+    out
+}
+
+/// One immutable router generation: the learned model plus the compiled
+/// route cascades, stamped with the plan version it was compiled against.
+/// Never mutated after build — router swaps replace the whole bundle.
+pub struct RouterBundle {
+    /// Monotone router version assigned at publish time.
+    pub version: u64,
+    /// The plan-bundle version the routes were compiled against. The
+    /// stage abstains when this differs from the query's plan snapshot.
+    pub plan_version: u64,
+    /// The learned meta-model (`n_routes` must equal `routes.len()`).
+    pub model: RouterModel,
+    /// The routes, index-aligned with the model's route scores.
+    pub routes: Vec<RouteTarget>,
+}
+
+impl RouterBundle {
+    /// Assemble a bundle, checking the model/route alignment.
+    pub fn new(
+        version: u64,
+        plan_version: u64,
+        model: RouterModel,
+        routes: Vec<RouteTarget>,
+    ) -> Result<RouterBundle> {
+        if routes.is_empty() {
+            anyhow::bail!("a router bundle needs at least the global route");
+        }
+        if model.n_routes() != routes.len() {
+            anyhow::bail!(
+                "router model scores {} routes but the bundle compiled {}",
+                model.n_routes(),
+                routes.len()
+            );
+        }
+        if routes[0].skip != 0 || routes[0].cascade.is_some() {
+            anyhow::bail!("route 0 must be the global plan (skip 0, no compiled cascade)");
+        }
+        Ok(RouterBundle { version, plan_version, model, routes })
+    }
+}
+
+/// One published router swap, kept for the `report swaps` history.
+#[derive(Debug, Clone)]
+pub struct RouterSwapEvent {
+    /// Router version this publish installed.
+    pub version: u64,
+    /// Plan version the new bundle was compiled against.
+    pub plan_version: u64,
+    /// `metrics.queries` at publish time.
+    pub at_query: u64,
+    /// Human-readable cause (reoptimizer retrain, plan-swap rebuild, ...).
+    pub reason: String,
+    /// Routes offered by the new bundle.
+    pub n_routes: usize,
+    /// Whether the installed model is the zero-weight identity.
+    pub degenerate: bool,
+    /// Window accuracy of the routed policy at publish time (retrains).
+    pub window_accuracy: Option<f64>,
+    /// Window avg cost of the routed policy at publish time (retrains).
+    pub window_avg_cost: Option<f64>,
+}
+
+impl RouterSwapEvent {
+    /// JSON form for the swap log.
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("version".to_string(), Value::Num(self.version as f64));
+        m.insert("plan_version".to_string(), Value::Num(self.plan_version as f64));
+        m.insert("at_query".to_string(), Value::Num(self.at_query as f64));
+        m.insert("reason".to_string(), Value::Str(self.reason.clone()));
+        m.insert("n_routes".to_string(), Value::Num(self.n_routes as f64));
+        m.insert("degenerate".to_string(), Value::Bool(self.degenerate));
+        m.insert(
+            "window_accuracy".to_string(),
+            self.window_accuracy.map(Value::Num).unwrap_or(Value::Null),
+        );
+        m.insert(
+            "window_avg_cost".to_string(),
+            self.window_avg_cost.map(Value::Num).unwrap_or(Value::Null),
+        );
+        Value::Obj(m)
+    }
+
+    /// Parse an event serialized by [`RouterSwapEvent::to_value`].
+    pub fn from_value(v: &Value) -> Result<RouterSwapEvent> {
+        Ok(RouterSwapEvent {
+            version: v.get("version").as_f64().context("router swap missing `version`")? as u64,
+            plan_version: v
+                .get("plan_version")
+                .as_f64()
+                .context("router swap missing `plan_version`")? as u64,
+            at_query: v.get("at_query").as_f64().context("router swap missing `at_query`")?
+                as u64,
+            reason: v
+                .get("reason")
+                .as_str()
+                .context("router swap missing `reason`")?
+                .to_string(),
+            n_routes: v.get("n_routes").as_usize().context("router swap missing `n_routes`")?,
+            degenerate: v
+                .get("degenerate")
+                .as_bool()
+                .context("router swap missing `degenerate`")?,
+            window_accuracy: v.get("window_accuracy").as_f64(),
+            window_avg_cost: v.get("window_avg_cost").as_f64(),
+        })
+    }
+}
+
+/// Point-in-time router stage counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouterStats {
+    /// Queries routed off route 0 (or charged a probe call).
+    pub routed: u64,
+    /// Queries the stage abstained on because the router bundle was
+    /// compiled against a different plan version than the query's
+    /// snapshot.
+    pub abstained: u64,
+}
+
+/// Shared, atomically swappable handle to the current [`RouterBundle`] —
+/// the same wait-free publish discipline as the plan handle (readers are
+/// two atomics + an `Arc` clone; publishers serialize on the history
+/// mutex, which keeps the recorded events strictly version-ordered).
+pub struct RouterHandle {
+    current: SnapshotCell<RouterBundle>,
+    next_version: AtomicU64,
+    history: Mutex<Vec<RouterSwapEvent>>,
+    routed: AtomicU64,
+    abstained: AtomicU64,
+}
+
+impl RouterHandle {
+    /// Wrap an initial bundle (its install is not a history event).
+    pub fn new(initial: RouterBundle) -> RouterHandle {
+        let v0 = initial.version;
+        RouterHandle {
+            current: SnapshotCell::new(Arc::new(initial)),
+            next_version: AtomicU64::new(v0 + 1),
+            history: Mutex::new(Vec::new()),
+            routed: AtomicU64::new(0),
+            abstained: AtomicU64::new(0),
+        }
+    }
+
+    /// The current bundle (wait-free).
+    pub fn snapshot(&self) -> Arc<RouterBundle> {
+        self.current.load()
+    }
+
+    /// Version of the currently served bundle.
+    pub fn version(&self) -> u64 {
+        self.snapshot().version
+    }
+
+    /// Reserve the version number for a bundle about to be built.
+    pub fn reserve_version(&self) -> u64 {
+        self.next_version.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Install `bundle` if its version is still the newest; a publish
+    /// that lost the version race is dropped (no history entry — it never
+    /// served traffic). Mirrors `PlanHandle::publish`.
+    pub fn publish(&self, bundle: RouterBundle, event: RouterSwapEvent) -> bool {
+        let version = bundle.version;
+        let mut history = self.history.lock().unwrap();
+        if !self
+            .current
+            .store_if(Arc::new(bundle), |cur| cur.version < version)
+        {
+            return false;
+        }
+        history.push(event);
+        true
+    }
+
+    /// All router swaps published so far (oldest first).
+    pub fn history(&self) -> Vec<RouterSwapEvent> {
+        self.history.lock().unwrap().clone()
+    }
+
+    /// Point-in-time stage counters.
+    pub fn stats(&self) -> RouterStats {
+        RouterStats {
+            routed: self.routed.load(Ordering::Relaxed),
+            abstained: self.abstained.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Result of one probe-model call.
+#[derive(Debug, Clone, Copy)]
+pub struct ProbeResult {
+    /// Reliability score of the probe's answer (the scorer's `g(q, a)`).
+    pub score: f32,
+    /// The probe's predicted class.
+    pub pred: u32,
+    /// Marketplace cost of the probe call (billed onto the answer).
+    pub cost_usd: f64,
+}
+
+/// The tiny probe model behind the router's [`FEAT_PROBE`] feature: one
+/// cheap marketplace model executed through its own batcher (submissions
+/// from concurrent answer threads coalesce), scored by the shared
+/// reliability scorer. Prices are frozen at spawn time (same documented
+/// approximation as the shadow worker).
+pub struct ProbeScorer {
+    // Keeps the batcher worker alive for the service's lifetime.
+    _batcher: Batcher,
+    handle: BatcherHandle,
+    model_index: usize,
+    scorer: Scorer,
+    costs: CostModel,
+}
+
+impl ProbeScorer {
+    /// Spawn the probe batcher for marketplace model `model_name`.
+    pub fn spawn(
+        engine: EngineHandle,
+        costs: CostModel,
+        meta: DatasetMeta,
+        model_name: &str,
+    ) -> Result<ProbeScorer> {
+        let model_index = costs
+            .model_index(model_name)
+            .with_context(|| format!("probe model `{model_name}` is not in the marketplace"))?;
+        let batcher = Batcher::spawn(
+            engine.clone(),
+            costs.dataset.clone(),
+            model_name.to_string(),
+            BatcherConfig::default(),
+        );
+        let handle = batcher.handle();
+        Ok(ProbeScorer {
+            _batcher: batcher,
+            handle,
+            model_index,
+            scorer: Scorer::new(engine, meta),
+            costs,
+        })
+    }
+
+    /// Marketplace index of the probe model.
+    pub fn model_index(&self) -> usize {
+        self.model_index
+    }
+
+    /// Run the probe on one query row: model call (batched) → predicted
+    /// class → reliability score of that prediction. `billed_input` is
+    /// the query's amortized billable input size.
+    pub fn probe(&self, tokens: &[i32], billed_input: u32) -> Result<ProbeResult> {
+        let logits = self.handle.submit(tokens.to_vec())?;
+        let pred = argmax(&logits) as u32;
+        let score = self.scorer.score(tokens, pred)?;
+        let cost_usd = self.costs.call_cost(self.model_index, billed_input, pred);
+        Ok(ProbeResult { score, pred, cost_usd })
+    }
+}
+
+/// What the router stage attached to the query context: which cascade the
+/// terminal stage should execute instead of the bundle default, plus the
+/// bookkeeping to report it honestly.
+pub struct RouteDecision {
+    /// Index of the picked route in the router bundle.
+    pub route: usize,
+    /// Compiled cascade to execute; `None` = the global plan (the
+    /// query's own [`PlanBundle`] cascade — identical code path to no
+    /// router at all).
+    pub cascade: Option<Arc<Cascade>>,
+    /// Global-plan stages skipped (added to the reported `stopped_at` /
+    /// `skipped_stages` so they stay in global coordinates).
+    pub skip: usize,
+    /// Probe spend to add to the answer's metered cost (0.0 when the
+    /// model reads no probe feature).
+    pub probe_cost_usd: f64,
+    /// Version of the router bundle that made this decision.
+    pub router_version: u64,
+}
+
+/// The router as a pipeline stage: loads ONE router bundle snapshot,
+/// extracts only the features the model actually reads, and attaches a
+/// [`RouteDecision`] for the cascade executor. Never answers; never
+/// transforms the tokens.
+pub struct RouterStage {
+    /// The swappable router bundle handle.
+    pub router: Arc<RouterHandle>,
+    /// Completion cache peeked (non-mutating) for [`FEAT_CACHE`].
+    pub cache: Option<Arc<ShardedCache>>,
+    /// Probe model behind [`FEAT_PROBE`] (`None` = feature stays 0.0).
+    pub probe: Option<Arc<ProbeScorer>>,
+}
+
+impl Strategy for RouterStage {
+    fn name(&self) -> &'static str {
+        "router"
+    }
+
+    fn on_query(&self, ctx: &mut QueryCtx) -> Result<Decision> {
+        let bundle = self.router.snapshot();
+        // One-snapshot discipline: the routes were compiled against one
+        // plan generation. If the query's plan snapshot is a different
+        // generation (the tiny window between a plan publish and its
+        // router rebuild), abstain — serve the plain global plan rather
+        // than mix generations.
+        if bundle.plan_version != ctx.bundle.version() {
+            self.router.abstained.fetch_add(1, Ordering::Relaxed);
+            return Ok(Decision::Pass);
+        }
+        let model = &bundle.model;
+        let (prompt_toks, query_toks) = concat::split_row_tokens(&ctx.tokens, ctx.meta);
+        let billed = concat::amortized_input(prompt_toks, query_toks, ctx.concat_group);
+        let mut probe_cost = 0.0;
+        let mut probe_score = 0.0;
+        // Paid features are extracted only when some route weights them —
+        // the degenerate model must not spend a cent.
+        if model.uses_feature(FEAT_PROBE) {
+            if let Some(probe) = &self.probe {
+                let r = probe.probe(&ctx.tokens, billed)?;
+                probe_score = r.score;
+                probe_cost = r.cost_usd;
+            }
+        }
+        let mut cache_signal = 0.0;
+        if model.uses_feature(FEAT_CACHE) {
+            if let Some(cache) = &self.cache {
+                cache_signal = cache.peek_similarity(ctx.original, ctx.bundle.version()) as f32;
+            }
+        }
+        let route = model
+            .decide(&features(billed, probe_score, cache_signal))
+            .min(bundle.routes.len() - 1);
+        if route == 0 && probe_cost == 0.0 {
+            // The global plan at no extra cost: leave the context
+            // untouched so the cascade executor takes the exact code path
+            // it takes without a router stage (bit-parity fast path).
+            return Ok(Decision::Pass);
+        }
+        let target = &bundle.routes[route];
+        self.router.routed.fetch_add(1, Ordering::Relaxed);
+        ctx.route = Some(RouteDecision {
+            route,
+            cascade: target.cascade.clone(),
+            skip: target.skip,
+            probe_cost_usd: probe_cost,
+            router_version: bundle.version,
+        });
+        Ok(Decision::Pass)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cascade::Stage;
+
+    fn plan3() -> CascadePlan {
+        CascadePlan::new(vec![
+            Stage { model: 0, threshold: 0.6 },
+            Stage { model: 1, threshold: 0.4 },
+            Stage { model: 2, threshold: 0.0 },
+        ])
+    }
+
+    #[test]
+    fn degenerate_model_always_picks_route_zero_and_reads_no_paid_feature() {
+        let m = RouterModel::degenerate(5);
+        assert!(m.is_degenerate());
+        assert!(!m.uses_feature(FEAT_PROBE));
+        assert!(!m.uses_feature(FEAT_CACHE));
+        for f in [
+            features(0, 0.0, 0.0),
+            features(10_000, 1.0, 1.0),
+            features(37, 0.2, 0.9),
+        ] {
+            assert_eq!(m.decide(&f), 0);
+        }
+    }
+
+    #[test]
+    fn decide_is_argmax_with_ties_to_lowest_index() {
+        let mut m = RouterModel::degenerate(3);
+        m.weights[2][FEAT_LEN] = 2.0;
+        m.weights[1][FEAT_LEN] = 2.0; // exact tie with route 2 → route 1
+        let f = features(100, 0.0, 0.0);
+        assert_eq!(m.decide(&f), 1);
+        m.weights[2][FEAT_BIAS] = 0.1; // break the tie upward
+        assert_eq!(m.decide(&f), 2);
+        assert!(m.uses_feature(FEAT_LEN));
+        assert!(!m.uses_feature(FEAT_PROBE));
+    }
+
+    #[test]
+    fn length_feature_is_monotone_and_bounded_for_real_prompts() {
+        assert!(length_feature(10) < length_feature(100));
+        assert!(length_feature(100) < length_feature(10_000));
+        assert!(length_feature(100_000) < 1.6);
+    }
+
+    #[test]
+    fn route_plans_prefix_skips_and_skip_zero_is_identity() {
+        let global = plan3();
+        let routes = route_plans(&global, &[], 4);
+        // Route 0 IS the global plan — prefix-skip with skip=0 is the
+        // identity cascade.
+        assert_eq!(routes[0].0, global);
+        assert_eq!(routes[0].1, 0);
+        assert_eq!(routes.len(), 3);
+        // skip j executes the suffix stages[j..].
+        assert_eq!(routes[1].1, 1);
+        assert_eq!(routes[1].0.stages, global.stages[1..].to_vec());
+        assert_eq!(routes[2].1, 2);
+        assert_eq!(routes[2].0.stages, global.stages[2..].to_vec());
+    }
+
+    #[test]
+    fn route_plans_subsamples_and_dedupes_frontier_points() {
+        let global = plan3();
+        let mk = |m: usize| FrontierPoint {
+            plan: CascadePlan::single(m),
+            accuracy: 0.5 + m as f64 / 10.0,
+            avg_cost: m as f64,
+        };
+        // frontier of 5 single-model plans; plan single(2) duplicates the
+        // skip2 route and must be deduped.
+        let frontier: Vec<FrontierPoint> = (0..5).map(mk).collect();
+        let routes = route_plans(&global, &frontier, 3);
+        let labels: Vec<&str> = routes.iter().map(|(_, _, l)| l.as_str()).collect();
+        assert_eq!(&labels[..3], &["global", "skip1", "skip2"]);
+        // grid=3 over 5 points picks indices 0, 2, 4; single(2) ≡ skip2
+        // is deduped, leaving frontier0 and frontier4.
+        assert_eq!(&labels[3..], &["frontier0", "frontier4"]);
+        let n_before = routes.len();
+        // grid=0 disables frontier routes entirely.
+        assert_eq!(route_plans(&global, &frontier, 0).len(), 3);
+        assert!(n_before > 3);
+    }
+
+    #[test]
+    fn router_bundle_checks_alignment_and_route_zero_shape() {
+        let mk_routes = || {
+            vec![RouteTarget {
+                plan: plan3(),
+                skip: 0,
+                cascade: None,
+                label: "global".into(),
+            }]
+        };
+        assert!(RouterBundle::new(1, 0, RouterModel::degenerate(1), mk_routes()).is_ok());
+        // model/route count mismatch
+        assert!(RouterBundle::new(1, 0, RouterModel::degenerate(2), mk_routes()).is_err());
+        // empty routes
+        assert!(RouterBundle::new(1, 0, RouterModel::degenerate(0), vec![]).is_err());
+        // route 0 must be the global plan shape
+        let bad = vec![RouteTarget {
+            plan: plan3(),
+            skip: 1,
+            cascade: None,
+            label: "bad".into(),
+        }];
+        assert!(RouterBundle::new(1, 0, RouterModel::degenerate(1), bad).is_err());
+    }
+
+    #[test]
+    fn router_handle_publish_is_monotone_and_recorded() {
+        let routes = || {
+            vec![RouteTarget {
+                plan: plan3(),
+                skip: 0,
+                cascade: None,
+                label: "global".into(),
+            }]
+        };
+        let h = RouterHandle::new(
+            RouterBundle::new(0, 0, RouterModel::degenerate(1), routes()).unwrap(),
+        );
+        let ev = |version| RouterSwapEvent {
+            version,
+            plan_version: 0,
+            at_query: 0,
+            reason: "test".into(),
+            n_routes: 1,
+            degenerate: true,
+            window_accuracy: None,
+            window_avg_cost: None,
+        };
+        let v1 = h.reserve_version();
+        let v2 = h.reserve_version();
+        assert!(v2 > v1);
+        // Install v2 first; the stale v1 publish must be dropped.
+        assert!(h.publish(
+            RouterBundle::new(v2, 0, RouterModel::degenerate(1), routes()).unwrap(),
+            ev(v2)
+        ));
+        assert!(!h.publish(
+            RouterBundle::new(v1, 0, RouterModel::degenerate(1), routes()).unwrap(),
+            ev(v1)
+        ));
+        assert_eq!(h.version(), v2);
+        let hist = h.history();
+        assert_eq!(hist.len(), 1);
+        assert_eq!(hist[0].version, v2);
+    }
+
+    #[test]
+    fn router_swap_event_json_roundtrip() {
+        let ev = RouterSwapEvent {
+            version: 7,
+            plan_version: 3,
+            at_query: 512,
+            reason: "retrain on window of 256 obs".into(),
+            n_routes: 5,
+            degenerate: false,
+            window_accuracy: Some(0.9375),
+            window_avg_cost: Some(0.00042),
+        };
+        let json = ev.to_value().to_json();
+        let back = RouterSwapEvent::from_value(&Value::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.version, ev.version);
+        assert_eq!(back.plan_version, ev.plan_version);
+        assert_eq!(back.at_query, ev.at_query);
+        assert_eq!(back.reason, ev.reason);
+        assert_eq!(back.n_routes, ev.n_routes);
+        assert_eq!(back.degenerate, ev.degenerate);
+        assert_eq!(back.window_accuracy, ev.window_accuracy);
+        assert_eq!(back.window_avg_cost, ev.window_avg_cost);
+    }
+
+    #[test]
+    fn router_model_json_roundtrip_is_bit_exact() {
+        let mut m = RouterModel::degenerate(3);
+        m.weights[1] = [0.1, -2.5, 3.75, 1e-6];
+        m.weights[2] = [f32::MIN_POSITIVE, 0.0, -0.0, 42.0];
+        let json = m.to_value().to_json();
+        let back = RouterModel::from_value(&Value::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.n_routes(), 3);
+        for (a, b) in back.weights.iter().zip(m.weights.iter()) {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

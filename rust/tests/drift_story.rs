@@ -1,0 +1,242 @@
+//! The drift story, end to end: a scripted `SilentDrift` on the SERVED
+//! model (the un-announced model-version bump nobody emails you about),
+//! caught by the shadow loop alone — the observation window degrades,
+//! the reoptimizer's next steps clear hysteresis and swap the plan off
+//! the drifted model, post-swap answers recover, and `report swaps`
+//! renders the whole story from the swap log. Hermetic and wall-clock-
+//! free: the engine is `EngineHandle::simulated` behind
+//! `fault_injected_engine`, and the fault clock is query-indexed
+//! (`ScenarioTimeline::set_now`), never seconds.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use frugalgpt::coordinator::cascade::CascadePlan;
+use frugalgpt::coordinator::optimizer::OptimizerOptions;
+use frugalgpt::data::layout;
+use frugalgpt::eval::simulate::{
+    fault_injected_engine, ScenarioEvent, ScenarioTimeline, TimedEvent,
+};
+use frugalgpt::runtime::EngineHandle;
+use frugalgpt::server::reoptimizer::{ReoptOutcome, Reoptimizer, ReoptimizerConfig};
+use frugalgpt::server::service::{FrugalService, ServiceConfig};
+use frugalgpt::server::shadow::ShadowConfig;
+use frugalgpt::strategies::router::RouterSwapEvent;
+use frugalgpt::util::json::Value;
+
+mod common;
+use common::{query_row, sim_costs, sim_meta};
+
+const CLASSES: i32 = 4;
+/// Query index at which the scripted drift begins.
+const DRIFT_AT: u64 = 100;
+
+/// Ground truth of `query_row(j)`: its first body token mod CLASSES.
+fn truth_of(j: i32) -> u32 {
+    j.rem_euclid(CLASSES) as u32
+}
+
+/// Honest marketplace: every API answers the truth; the scorer artifact
+/// is calibrated (+4 logit for a scored answer matching the truth, -4
+/// otherwise). The DRIFT is not in here — it is injected on top by the
+/// scripted timeline, exactly like a live model-version bump.
+fn honest_engine() -> EngineHandle {
+    EngineHandle::simulated(move |_ds, model, rows| {
+        Ok(rows
+            .iter()
+            .map(|r| {
+                let truth = truth_of(r[1]);
+                if model == "scorer" {
+                    let ans = (r[6] - layout::LABEL_BASE) as u32;
+                    vec![if ans == truth { 4.0 } else { -4.0 }]
+                } else {
+                    let mut logits = vec![0.0f32; CLASSES as usize];
+                    logits[truth as usize] = 1.0;
+                    logits
+                }
+            })
+            .collect())
+    })
+}
+
+/// Serve `n` queries starting at index `start`, advancing the fault
+/// clock to each query's index, and return how many answered the truth.
+fn serve_batch(svc: &FrugalService, tl: &ScenarioTimeline, start: i32, n: i32) -> usize {
+    let mut right = 0;
+    for j in start..start + n {
+        tl.set_now(j as u64);
+        let ans = svc.answer(&query_row(j)).expect("answer");
+        right += (ans.answer == truth_of(j)) as usize;
+    }
+    right
+}
+
+/// Wait for the shadow worker to drain into the observation window.
+fn wait_for_window(svc: &FrugalService, at_least: usize) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.metrics.window.len() < at_least && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        svc.metrics.window.len() >= at_least,
+        "shadow never filled the window: len {} < {at_least}, stats {:?}",
+        svc.metrics.window.len(),
+        svc.shadow_stats()
+    );
+}
+
+/// The full story: healthy traffic keeps the cheap plan; a scripted
+/// SilentDrift on the served model degrades the shadow-fed window; the
+/// reoptimizer swaps within its hysteresis cadence; post-swap answers
+/// recover; and `report swaps --log` renders the swap (and the router
+/// table) from the written log.
+#[test]
+fn silent_drift_on_served_model_swaps_and_report_renders_the_story() {
+    // From DRIFT_AT on, EVERY api_0 answer is silently rotated to a
+    // wrong class — persistent, exactly the drift shadow scoring exists
+    // to catch.
+    let timeline = ScenarioTimeline::new(vec![TimedEvent {
+        at: DRIFT_AT,
+        event: ScenarioEvent::SilentDrift { model: 0, acc_delta: 1.0 },
+    }]);
+    let costs = sim_costs();
+    let engine = fault_injected_engine(honest_engine(), &costs.model_names, timeline.clone());
+    let cfg = ServiceConfig {
+        cache_enabled: false, // every query must exercise the cascade
+        window_capacity: 128,
+        window_half_life: Some(24.0),
+        shadow: Some(ShadowConfig {
+            rate: 1.0,
+            reference: Some(2),
+            queue_capacity: 1024,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let svc = Arc::new(
+        FrugalService::new(CascadePlan::single(0), engine, costs.clone(), sim_meta(), cfg)
+            .unwrap(),
+    );
+    let reopt = Reoptimizer::new(
+        svc.clone(),
+        ReoptimizerConfig {
+            min_window: 48,
+            hysteresis: 0.05,
+            optimizer: OptimizerOptions { grid: 8, threads: Some(1), ..Default::default() },
+            ..Default::default()
+        },
+    );
+
+    // Phase 1: the clock is strictly before DRIFT_AT, so shadow rows show
+    // the served cheap model agreeing with the reference — the re-learn
+    // must keep it.
+    let right = serve_batch(&svc, &timeline, 0, 96);
+    assert_eq!(right, 96, "api_0 answers the truth before the drift");
+    wait_for_window(&svc, 48);
+    match reopt.step().unwrap() {
+        ReoptOutcome::Kept { .. } => {}
+        other => panic!("healthy traffic must keep the cheap plan, got {other:?}"),
+    }
+    assert_eq!(svc.plan_version(), 0);
+
+    // Phase 2: the drift fires. Nothing announces it — the served
+    // answers silently go wrong, the shadow loop scores them against the
+    // reference, the window turns over, and the reoptimizer swaps as
+    // soon as a re-learn clears hysteresis.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut j = DRIFT_AT as i32;
+    let mut drifted_wrong = 0usize;
+    let mut swapped = false;
+    while Instant::now() < deadline {
+        let right = serve_batch(&svc, &timeline, j, 16);
+        if svc.plan_version() == 0 {
+            drifted_wrong += 16 - right; // pre-swap answers are the drifted model's
+        }
+        j += 16;
+        std::thread::sleep(Duration::from_millis(10)); // let shadow drain
+        match reopt.step().unwrap() {
+            ReoptOutcome::Swapped { version, window_accuracy, .. } => {
+                assert!(version >= 1);
+                assert!(
+                    window_accuracy > 0.9,
+                    "new plan must be near-perfect on the shadow window"
+                );
+                swapped = true;
+                break;
+            }
+            ReoptOutcome::Kept { .. } | ReoptOutcome::WindowTooSmall { .. } => {}
+        }
+    }
+    assert!(
+        swapped,
+        "reoptimizer never swapped under the scripted drift; window {}, shadow {:?}",
+        svc.metrics.window.len(),
+        svc.shadow_stats()
+    );
+    assert!(drifted_wrong > 0, "the drift must be visible in served answers pre-swap");
+    let plan = svc.plan();
+    assert!(
+        plan.stages.iter().all(|s| s.model != 0),
+        "the drifted model must be out of the served plan: {plan:?}"
+    );
+
+    // Phase 3: recovery. The drift persists, but the swapped plan routes
+    // around it — answers are right again.
+    let right = serve_batch(&svc, &timeline, 50_000, 32);
+    assert_eq!(right, 32, "post-swap traffic recovers full accuracy");
+
+    let history = svc.swap_history();
+    assert_eq!(history.len(), svc.plan_version() as usize);
+    assert!(
+        history.iter().all(|ev| ev.reason.contains("window")),
+        "every swap must be justified by window metrics: {history:?}"
+    );
+
+    // Phase 4: `report swaps` renders the story. Write the same swap-log
+    // document the serve drivers write (plan swaps + shadow accounting +
+    // a router-swap table), then run the real `report` binary over it.
+    let mut doc = std::collections::HashMap::new();
+    doc.insert("dataset".to_string(), Value::Str("sim".to_string()));
+    doc.insert(
+        "models".to_string(),
+        Value::Arr(costs.model_names.iter().map(|s| Value::Str(s.clone())).collect()),
+    );
+    doc.insert(
+        "swaps".to_string(),
+        Value::Arr(history.iter().map(|e| e.to_value()).collect()),
+    );
+    let router_event = RouterSwapEvent {
+        version: 7,
+        plan_version: svc.plan_version(),
+        at_query: 123,
+        reason: "router retrain on window of 128 obs: acc 0.9800→0.9800, \
+                 cost $4.2000→$3.1000/10k"
+            .to_string(),
+        n_routes: 3,
+        degenerate: false,
+        window_accuracy: Some(0.98),
+        window_avg_cost: Some(3.1e-4),
+    };
+    doc.insert("router_swaps".to_string(), Value::Arr(vec![router_event.to_value()]));
+    let path = std::env::temp_dir().join(format!("drift_story_swaps_{}.json", std::process::id()));
+    std::fs::write(&path, Value::Obj(doc).to_json()).unwrap();
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_report"))
+        .args(["swaps", "--log", path.to_str().unwrap()])
+        .output()
+        .expect("running report");
+    let _ = std::fs::remove_file(&path);
+    assert!(out.status.success(), "report swaps failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("plan-swap history"), "missing header:\n{stdout}");
+    assert!(
+        stdout.contains("window of"),
+        "swap trigger must carry the window justification:\n{stdout}"
+    );
+    assert!(stdout.contains("new cascade"), "missing the plan column:\n{stdout}");
+    assert!(
+        stdout.contains("router-swap history (1 swaps)") && stdout.contains("r7"),
+        "router swaps must render from the same log:\n{stdout}"
+    );
+    assert!(stdout.contains("router retrain"), "router trigger missing:\n{stdout}");
+}

@@ -2,13 +2,18 @@
 //! invariants: routing, threshold monotonicity, optimizer budget
 //! feasibility, cache consistency, batching/grouping, and JSON round-trips.
 
+use std::sync::Arc;
+
 use frugalgpt::coordinator::cascade::{replay, CascadePlan, Stage};
 use frugalgpt::coordinator::frontier::SavedFrontier;
 use frugalgpt::coordinator::optimizer::{prune_pareto, CascadeOptimizer, OptimizerOptions};
 use frugalgpt::coordinator::responses::synthetic_table;
+use frugalgpt::eval::simulate::SimWorld;
 use frugalgpt::marketplace::CostModel;
+use frugalgpt::server::service::{FrugalService, ServiceConfig};
 use frugalgpt::strategies::cache::{CachedAnswer, CompletionCache};
 use frugalgpt::strategies::concat;
+use frugalgpt::strategies::router::{RouterConfig, RouterModel};
 use frugalgpt::util::json::Value;
 use frugalgpt::util::prop::check;
 use frugalgpt::util::rng::Rng;
@@ -685,6 +690,90 @@ fn random_json(rng: &mut Rng, depth: usize) -> Value {
             Value::Obj(m)
         }
     }
+}
+
+/// §Router acceptance: a service with contextual routing ON but the
+/// model left at its zero-weight bootstrap (the degenerate router — what
+/// `--router` serves until the reoptimizer trains real weights) is
+/// **bit-identical** to the same service with routing OFF: answer-for-
+/// answer the accepted model, stage index, cost bits, cache behavior,
+/// and the total metered spend all match over random tables, random
+/// frontier plans, and a full frontier-backed route set. This is the
+/// fallback invariant that makes `--router` safe to ship dark.
+#[test]
+fn prop_degenerate_router_reproduces_global_plan_bitwise() {
+    check("degenerate-router-bitwise", 25, |rng| {
+        let k = 3 + rng.usize_below(3);
+        let n = 48 + rng.usize_below(100);
+        let w = SimWorld::new(k, n, rng.next_u64());
+        let opt = CascadeOptimizer::new(
+            &w.table,
+            &w.costs,
+            w.input_tokens(),
+            OptimizerOptions { grid: 6, threads: Some(1), ..Default::default() },
+        )
+        .unwrap();
+        let frontier = opt.frontier();
+        let plan = frontier[rng.usize_below(frontier.len())].plan.clone();
+
+        let mk = |router: Option<RouterConfig>| -> Arc<FrugalService> {
+            Arc::new(
+                FrugalService::new(
+                    plan.clone(),
+                    w.engine().unwrap(),
+                    w.costs.clone(),
+                    w.meta.clone(),
+                    ServiceConfig { router, ..Default::default() },
+                )
+                .unwrap(),
+            )
+        };
+        let with = mk(Some(RouterConfig::default()));
+        let without = mk(None);
+        // Give the routed service the FULL frontier route set (skip
+        // prefixes + frontier points), still under zero weights: the
+        // degenerate model must ignore every offered route.
+        with.install_frontier(frontier.clone());
+        let specs = with.router_route_specs();
+        assert!(!specs.is_empty());
+        with.publish_router(RouterModel::degenerate(specs.len()), "degenerate rebuild", None)
+            .unwrap();
+        assert!(with.router_snapshot().unwrap().model.is_degenerate());
+
+        // Identical stream (with repeats, so the cache tier is exercised
+        // on both sides too).
+        let stream: Vec<usize> = (0..120).map(|_| rng.usize_below(n)).collect();
+        for &i in &stream {
+            let a = with.answer(w.row(i)).unwrap();
+            let b = without.answer(w.row(i)).unwrap();
+            assert_eq!(a.answer, b.answer, "item {i}: answer diverged");
+            assert_eq!(a.model, b.model, "item {i}: accepted model diverged");
+            assert_eq!(a.stopped_at, b.stopped_at, "item {i}: stage diverged");
+            assert_eq!(a.from_cache, b.from_cache, "item {i}: cache tier diverged");
+            assert_eq!(
+                a.cost_usd.to_bits(),
+                b.cost_usd.to_bits(),
+                "item {i}: cost {} vs {} — not bit-identical",
+                a.cost_usd,
+                b.cost_usd
+            );
+            assert_eq!(a.plan_version, b.plan_version);
+            assert_eq!(a.skipped_stages, b.skipped_stages);
+            assert_eq!(
+                a.router_version, None,
+                "a degenerate router must never claim an answer"
+            );
+        }
+        assert_eq!(
+            with.budget.spent_usd().to_bits(),
+            without.budget.spent_usd().to_bits(),
+            "metered spend diverged: {} vs {}",
+            with.budget.spent_usd(),
+            without.budget.spent_usd()
+        );
+        let st = with.router_stats().expect("router is on");
+        assert_eq!(st.routed, 0, "zero weights must route nothing off the global plan");
+    });
 }
 
 /// MPI decomposition identity on random tables.

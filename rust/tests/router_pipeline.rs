@@ -1,0 +1,321 @@
+//! End-to-end acceptance for the contextual meta-router on the REAL
+//! serving stack, over the hermetic heterogeneous-difficulty world
+//! (`SimWorld::heterogeneous`: a 3:1 mix of short/easy and long/hard
+//! queries where no single (L, τ) plan is cost-optimal):
+//!
+//! * the reoptimizer co-trains a router from the observation window, and
+//!   the served traffic splits — easy/short queries stay on the cheap
+//!   global prefix while hard/long ones skip straight to the terminal,
+//!   at matched accuracy and strictly lower metered spend than the
+//!   router-off service on the identical stream;
+//! * a router swap storm (publisher hammering `publish_router` under
+//!   concurrent clients) keeps every answer consistent with exactly ONE
+//!   `RouterBundle` snapshot — the router twin of
+//!   `service_reopt.rs::swap_storm_over_sharded_cache_*`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use frugalgpt::coordinator::optimizer::{CascadeOptimizer, FrontierPoint, OptimizerOptions};
+use frugalgpt::eval::simulate::SimWorld;
+use frugalgpt::server::metrics::Observation;
+use frugalgpt::server::reoptimizer::{Reoptimizer, ReoptimizerConfig};
+use frugalgpt::server::service::{FrugalService, ServiceConfig};
+use frugalgpt::strategies::router::{RouterConfig, RouterModel, FEAT_BIAS};
+
+/// The heterogeneous world's learned frontier plus its most-accurate
+/// (global) plan — asserted two-stage so the "skip the prefix" routes
+/// are meaningful.
+fn het_frontier(w: &SimWorld) -> (Vec<FrontierPoint>, frugalgpt::coordinator::cascade::CascadePlan) {
+    let opt = CascadeOptimizer::new(
+        &w.table,
+        &w.costs,
+        w.input_tokens(),
+        OptimizerOptions { grid: 8, threads: Some(1), ..Default::default() },
+    )
+    .unwrap();
+    let frontier = opt.frontier();
+    let global = frontier.last().expect("non-empty frontier").plan.clone();
+    assert_eq!(
+        global.stages.len(),
+        2,
+        "the heterogeneous world's global plan must be a two-stage cascade: {global:?}"
+    );
+    (frontier, global)
+}
+
+fn het_service(
+    w: &SimWorld,
+    plan: frugalgpt::coordinator::cascade::CascadePlan,
+    router: bool,
+) -> Arc<FrugalService> {
+    let cfg = ServiceConfig {
+        cache_enabled: false, // every query must exercise the cascade
+        window_capacity: 512,
+        router: if router { Some(RouterConfig::default()) } else { None },
+        ..Default::default()
+    };
+    Arc::new(
+        FrugalService::new(plan, w.engine().unwrap(), w.costs.clone(), w.meta.clone(), cfg)
+            .unwrap(),
+    )
+}
+
+/// Feed the full labelled world into the observation window (what the
+/// serve driver's ground-truth feedback path does).
+fn feed_window(svc: &FrugalService, w: &SimWorld) {
+    let toks = w.input_tokens();
+    let k = w.table.model_names.len();
+    for i in 0..w.len() {
+        svc.observe(Observation {
+            label: w.labels()[i],
+            input_tokens: toks[i],
+            preds: (0..k).map(|m| w.table.pred(m, i)).collect(),
+            scores: (0..k).map(|m| w.table.score(m, i)).collect(),
+            correct: (0..k).map(|m| w.table.is_correct(m, i)).collect(),
+        })
+        .unwrap();
+    }
+}
+
+/// The reoptimizer's co-training pass turns the bootstrap identity
+/// router into a real policy, and served traffic splits by difficulty:
+/// ≥80% of easy/short queries are answered by the cheap stage-0 model,
+/// ≥80% of hard/long queries skip the cheap prefix entirely (terminal
+/// model, terminal-only billing) — matched accuracy within 1pt of the
+/// router-off service at strictly lower total spend, on the identical
+/// stream.
+#[test]
+fn trained_router_splits_traffic_and_beats_the_global_plan_spend() {
+    let w = SimWorld::heterogeneous(256, 9);
+    let (frontier, global) = het_frontier(&w);
+    let toks = w.input_tokens();
+    let cheap = global.stages[0].model;
+    let terminal = global.stages[1].model;
+
+    let svc = het_service(&w, global.clone(), true);
+    svc.install_frontier(frontier.clone());
+    assert!(svc.router_snapshot().unwrap().model.is_degenerate(), "bootstraps as identity");
+    feed_window(&svc, &w);
+    let reopt = Reoptimizer::new(
+        svc.clone(),
+        ReoptimizerConfig {
+            min_window: 128,
+            hysteresis: 0.01,
+            optimizer: OptimizerOptions { grid: 8, threads: Some(1), ..Default::default() },
+            ..Default::default()
+        },
+    );
+    reopt.step().unwrap();
+    assert_eq!(reopt.router_swaps(), 1, "the co-training pass must publish a router");
+    let rb = svc.router_snapshot().unwrap();
+    assert!(!rb.model.is_degenerate(), "trained weights are live");
+    assert_eq!(rb.plan_version, svc.plan_version(), "router is pinned to the served plan");
+
+    // Serve every item once through the routed pipeline.
+    let (mut right, mut short_cheap, mut short_n) = (0usize, 0usize, 0usize);
+    let (mut long_skip, mut long_n) = (0usize, 0usize);
+    for i in 0..w.len() {
+        let ans = svc.answer(w.row(i)).unwrap();
+        right += (ans.answer == w.labels()[i]) as usize;
+        if let Some(v) = ans.router_version {
+            assert_eq!(v, rb.version, "answers route under the published snapshot");
+        }
+        if w.is_long(i) {
+            long_n += 1;
+            if ans.router_version.is_some() && ans.stopped_at == Some(1) {
+                assert_eq!(ans.model, Some(terminal));
+                // Terminal-only billing: the skipped cheap stage must
+                // not be metered.
+                let expect = w.costs.call_cost(terminal, toks[i], w.table.pred(terminal, i));
+                assert!(
+                    (ans.cost_usd - expect).abs() < 1e-12,
+                    "item {i}: skipped-prefix answer billed {} != terminal-only {expect}",
+                    ans.cost_usd
+                );
+                long_skip += 1;
+            }
+        } else {
+            short_n += 1;
+            if ans.stopped_at == Some(0) && ans.model == Some(cheap) {
+                short_cheap += 1;
+            }
+        }
+    }
+    assert!(
+        short_cheap * 10 >= short_n * 8,
+        "only {short_cheap}/{short_n} easy queries stayed on the cheap prefix"
+    );
+    assert!(
+        long_skip * 10 >= long_n * 8,
+        "only {long_skip}/{long_n} hard queries skipped the cheap prefix"
+    );
+    let acc_on = right as f64 / w.len() as f64;
+    let spend_on = svc.budget.spent_usd();
+    let stats = svc.router_stats().unwrap();
+    assert!(stats.routed as usize >= long_skip, "routed counter tracks off-global routes");
+
+    // The router-off control on the identical stream.
+    let off = het_service(&w, global, false);
+    let mut right_off = 0usize;
+    for i in 0..w.len() {
+        let ans = off.answer(w.row(i)).unwrap();
+        right_off += (ans.answer == w.labels()[i]) as usize;
+        assert_eq!(ans.router_version, None);
+    }
+    let acc_off = right_off as f64 / w.len() as f64;
+    let spend_off = off.budget.spent_usd();
+    assert!(
+        acc_on >= acc_off - 0.01,
+        "routed accuracy {acc_on:.4} fell more than 1pt below global {acc_off:.4}"
+    );
+    assert!(
+        spend_on < spend_off,
+        "routing must spend strictly less: ${spend_on:.6} vs ${spend_off:.6}"
+    );
+}
+
+/// A constant-route model: route `r` wins every decide() by bias alone.
+fn constant_route(n_routes: usize, r: usize) -> RouterModel {
+    let mut m = RouterModel::degenerate(n_routes);
+    m.weights[r][FEAT_BIAS] = 1.0;
+    m
+}
+
+/// Router swap storm: a publisher hammers `publish_router` with
+/// alternating constant-route models while concurrent clients answer
+/// hard/long queries. Every route has distinct observable behavior
+/// (accepted model, stage, answer, and cost bits), so any answer mixing
+/// two router snapshots — a decision from one bundle billed or reported
+/// under another — fails loudly. Mirrors the plan swap storm in
+/// `service_reopt.rs`, one layer up.
+#[test]
+fn router_swap_storm_keeps_every_answer_on_one_snapshot() {
+    let w = SimWorld::heterogeneous(64, 5);
+    let (frontier, global) = het_frontier(&w);
+    let toks = Arc::new(w.input_tokens());
+    let cheap = global.stages[0].model;
+    let terminal = global.stages[1].model;
+    let svc = het_service(&w, global, true);
+    svc.install_frontier(frontier);
+    let specs = svc.router_route_specs();
+    // The storm's route map: 0 = global, 1 = skip the cheap prefix,
+    // 2 = the frontier's cheap-only point.
+    assert_eq!(specs.len(), 3, "unexpected route set: {specs:?}");
+    assert_eq!(specs[1].1, 1, "route 1 must be the prefix skip");
+    assert_eq!(specs[2].1, 0, "route 2 must be a frontier plan");
+    assert_eq!(specs[2].0.stages.len(), 1, "frontier route is the cheap single");
+    assert_eq!(specs[2].0.stages[0].model, cheap);
+
+    // Hard/long items only: the three routes disagree on all of model,
+    // stage, answer, and cost for them.
+    let long_items: Vec<usize> = (0..w.len()).filter(|&i| w.is_long(i)).collect();
+    let rows = Arc::new(w.rows().to_vec());
+    let labels = Arc::new(w.labels().to_vec());
+    let cheap_preds: Arc<Vec<u32>> =
+        Arc::new((0..w.len()).map(|i| w.table.pred(cheap, i)).collect());
+    let costs = w.costs.clone();
+
+    let n_swaps = 48u64;
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for t in 0..4u64 {
+        let svc = svc.clone();
+        let (rows, labels, toks, cheap_preds) =
+            (rows.clone(), labels.clone(), toks.clone(), cheap_preds.clone());
+        let long_items = long_items.clone();
+        let costs = costs.clone();
+        let stop = stop.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut served = 0u64;
+            let mut last_version = 0u64;
+            while !stop.load(Ordering::Relaxed) || served < 60 {
+                let i = long_items[((served + 5 * t) % long_items.len() as u64) as usize];
+                let ans = svc.answer(&rows[i]).expect("answer");
+                let cheap_cost = costs.call_cost(cheap, toks[i], cheap_preds[i]);
+                let term_cost = costs.call_cost(terminal, toks[i], labels[i]);
+                match ans.router_version {
+                    // Identity bootstrap or route 0: the exact global
+                    // plan — cheap stage misses, terminal answers, both
+                    // stages billed.
+                    None => {
+                        assert_eq!(ans.stopped_at, Some(1));
+                        assert_eq!(ans.model, Some(terminal));
+                        assert_eq!(ans.answer, labels[i]);
+                        assert!(
+                            (ans.cost_usd - (cheap_cost + term_cost)).abs() < 1e-12,
+                            "global answer billed {} != {}",
+                            ans.cost_usd,
+                            cheap_cost + term_cost
+                        );
+                    }
+                    Some(v) => {
+                        // Version v published the constant-route model
+                        // 1 + ((v-1) % 2): everything observable about
+                        // this answer must match THAT route.
+                        let r = 1 + ((v as usize + 1) % 2);
+                        if r == 1 {
+                            assert_eq!(ans.stopped_at, Some(1), "v{v} skips to the terminal");
+                            assert_eq!(ans.model, Some(terminal));
+                            assert_eq!(ans.answer, labels[i]);
+                            assert!(
+                                (ans.cost_usd - term_cost).abs() < 1e-12,
+                                "v{v}: skip must bill the terminal only, got {}",
+                                ans.cost_usd
+                            );
+                        } else {
+                            assert_eq!(ans.stopped_at, Some(0), "v{v} routes to the cheap single");
+                            assert_eq!(ans.model, Some(cheap));
+                            assert_eq!(
+                                ans.answer, cheap_preds[i],
+                                "v{v}: cheap-only route returns the cheap model's answer"
+                            );
+                            assert!(
+                                (ans.cost_usd - cheap_cost).abs() < 1e-12,
+                                "v{v}: cheap-only route billed {}",
+                                ans.cost_usd
+                            );
+                        }
+                    }
+                }
+                assert!(
+                    ans.router_version.unwrap_or(0) >= last_version
+                        || ans.router_version.is_none(),
+                    "router version ran backwards"
+                );
+                if let Some(v) = ans.router_version {
+                    last_version = v;
+                }
+                served += 1;
+            }
+            served
+        }));
+    }
+
+    // The storm: odd versions pin route 1, even pin route 2, no pacing.
+    for v in 1..=n_swaps {
+        let r = 1 + ((v as usize + 1) % 2);
+        let got = svc
+            .publish_router(constant_route(specs.len(), r), "storm", None)
+            .expect("publish");
+        assert_eq!(got, v, "single publisher → sequential router versions");
+        if v % 8 == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = clients.into_iter().map(|c| c.join().expect("client")).sum();
+    assert!(total >= 240);
+
+    let history = svc.router_swap_history();
+    assert_eq!(history.len(), n_swaps as usize);
+    for (i, ev) in history.iter().enumerate() {
+        assert_eq!(ev.version as usize, i + 1, "strict version order under the storm");
+        assert_eq!(ev.reason, "storm");
+        assert!(!ev.degenerate);
+        assert_eq!(ev.n_routes, specs.len());
+    }
+    assert_eq!(svc.router_snapshot().unwrap().version, n_swaps);
+    let stats = svc.router_stats().unwrap();
+    assert!(stats.routed > 0, "the storm routed real traffic off the global plan");
+}

@@ -56,6 +56,7 @@ rust/src/coordinator/optimizer.rs when the algorithm changes.
 
 import bisect
 import json
+import math
 import sys
 import time
 
@@ -986,7 +987,7 @@ def check_packed(cases=12):
     (b) the packed frontier equals the flat frontier point-for-point —
         plans identical, accuracy/cost floats equal with ``==`` (python
         floats are f64, so this is the bit-for-bit claim executed)."""
-    print(f"[2/5] packed bitset vs byte arena on {cases} tables ...")
+    print(f"[2/6] packed bitset vs byte arena on {cases} tables ...")
     rng = Rng(0xB175)
     # The first cases pin N to word-boundary edges; the rest are random.
     fixed_ns = [64, 65, 127, 128, 129, 100]
@@ -1058,7 +1059,7 @@ def check_weighted(cases=10):
         incremental walk matches an independent prefix-sum definition
         (grid point g = score of the first order position whose cumulative
         mass exceeds (g+1)/(grid+1) of the total)."""
-    print(f"[3/5] weighted search on {cases} random tables ...")
+    print(f"[3/6] weighted search on {cases} random tables ...")
     rng = Rng(0xBEEF)
     for case in range(cases):
         k = 3 + rng.below(3)
@@ -1158,8 +1159,93 @@ def check_weighted(cases=10):
     print("  weighted search PASSED")
 
 
+def route_plans_py(global_plan, frontier, grid):
+    """Port of strategies::router::route_plans: route 0 is the global
+    plan verbatim, routes 1..L-1 are its prefix-skips, then an even
+    subsample of the frontier (deduplicated)."""
+    out = [(list(global_plan), 0)]
+    for j in range(1, len(global_plan)):
+        out.append((list(global_plan[j:]), j))
+    if grid > 0 and frontier:
+        picks = min(grid, len(frontier))
+        for k in range(picks):
+            idx = 0 if picks == 1 else k * (len(frontier) - 1) // (picks - 1)
+            plan = list(frontier[idx][0])
+            if any(p == plan for p, _ in out):
+                continue
+            out.append((plan, 0))
+    return out
+
+
+def routed_replay_py(weights, routes, table, toks):
+    """Port of server::router_train::evaluate_router at uniform weight:
+    per item, score the features (bias + log-length; probe and cache are
+    0.0 offline), argmax with ties to the lowest index, then walk the
+    chosen route's plan exactly like replay()."""
+    n = table["n"]
+    w_correct = 0.0
+    total_cost = 0.0
+    for i in range(n):
+        feats = [1.0, math.log(1.0 + toks[i]) / 8.0, 0.0, 0.0]
+        best_r, best_s = 0, None
+        for r, wrow in enumerate(weights):
+            s = sum(w * f for w, f in zip(wrow, feats))
+            if best_s is None or s > best_s:
+                best_r, best_s = r, s
+        plan, _skip = routes[best_r]
+        item_cost = 0.0
+        last = len(plan) - 1
+        for s_idx, (m, tau) in enumerate(plan):
+            item_cost += call_cost(m, toks[i], table["preds"][m][i])
+            if s_idx == last or table["scores"][m][i] > tau:
+                if table["correct"][m][i]:
+                    w_correct += 1.0
+                break
+        total_cost += item_cost
+    return w_correct / float(n), total_cost / float(n)
+
+
+def check_degenerate_router(cases=12):
+    """PR-9 router gate (the python side of
+    properties.rs::prop_degenerate_router_reproduces_global_plan_bitwise):
+    the all-zero ("degenerate") router model must decide route 0 for
+    every query, and its routed replay must equal the global plan's
+    replay EXACTLY (same floats, not approximately) — for every frontier
+    point taken as the global plan."""
+    print(f"[4/6] degenerate router vs global frontier on {cases} tables ...")
+    rng = Rng(0xA0F7E5)
+    for case in range(cases):
+        k = 3 + rng.below(3)
+        n = 30 + rng.below(200)
+        classes = 2 + rng.below(4)
+        seed = rng.next_u64()
+        grid = 4 + rng.below(5)
+        table = synthetic_table(k, n, classes, 0.5 + 0.5 * rng.f64(), seed)
+        toks = [40 + rng.below(100) for _ in range(n)]
+        frontier = FlatOptimizer(table, toks, grid=grid).frontier()
+        checked = 0
+        for plan, acc, cost in frontier:
+            routes = route_plans_py(plan, frontier, grid=4)
+            assert routes[0] == (list(plan), 0), "route 0 must be the global plan"
+            for j in range(1, len(plan)):
+                assert routes[j] == (list(plan[j:]), j), f"route {j} must skip {j} stages"
+            degenerate = [[0.0] * 4 for _ in routes]
+            racc, rcost = routed_replay_py(degenerate, routes, table, toks)
+            gacc, gcost = replay(plan, table, toks)
+            assert racc == gacc and rcost == gcost, (
+                f"case {case}: degenerate router diverged from its global plan "
+                f"{plan}: ({racc}, {rcost}) vs ({gacc}, {gcost})"
+            )
+            checked += 1
+        print(
+            f"  case {case:2d}: k={k} n={n:3d} "
+            f"{checked:2d} frontier plans ... degenerate == global OK"
+        )
+    print("  degenerate router PASSED")
+
+
 def check_equivalence(cases=25):
-    print(f"[1/5] equivalence on {cases} random tables ...")
+    print(f"[1/6] equivalence on {cases} random tables ...")
     rng = Rng(0xF00D)
     for case in range(cases):
         k = 3 + rng.below(3)
@@ -1201,7 +1287,7 @@ def check_equivalence(cases=25):
 
 
 def measure_wall(k=12, n=1200, grid=24, seed=99):
-    print(f"[4/5] wall-clock at reduced workload (K={k}, N={n}, grid={grid}) ...")
+    print(f"[5/6] wall-clock at reduced workload (K={k}, N={n}, grid={grid}) ...")
     table = synthetic_table(k, n, 4, 0.9, seed)
     toks = [45] * n
     t0 = time.perf_counter()
@@ -1235,7 +1321,7 @@ def count_ops(k=12, n=8000, grid=24, seed=99):
     reports the correctness working-set shrink — the sweeps' per-item
     visit counts are identical, the win there is 64x less memory traffic
     per correctness read."""
-    print(f"[5/5] op-count model at bench workload (K={k}, N={n}, grid={grid}) ...")
+    print(f"[6/6] op-count model at bench workload (K={k}, N={n}, grid={grid}) ...")
     table = synthetic_table(k, n, 4, 0.9, seed)
     toks = [45] * n
     flat = FlatOptimizer(table, toks, grid=grid)
@@ -1378,6 +1464,7 @@ if __name__ == "__main__":
     check_equivalence()
     check_packed()
     check_weighted()
+    check_degenerate_router()
     if quick:
         # CI mode: every correctness gate above ran; skip only the slow
         # wall-clock measurement (minutes of pure python).

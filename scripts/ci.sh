@@ -45,6 +45,16 @@ cargo test --release --test fault_scenarios
 cargo run --release --example serve_workload -- \
     --sim --queries 200 --clients 2 --scenario storm
 
+# The contextual meta-router + the drift story: the heterogeneous-world
+# router suite (trained router splits traffic by difficulty at lower
+# spend; router swap storm keeps every answer on one RouterBundle) and
+# the end-to-end SilentDrift → shadow detection → swap → recovery →
+# `report swaps` rendering test, then a live smoke of the routed
+# pipeline spec through the real serving example.
+cargo test --release --test router_pipeline --test drift_story
+cargo run --release --example serve_workload -- \
+    --sim --queries 200 --clients 2 --pipeline cache,router,cascade --router
+
 # Bench smoke: exercises the full frontier sweep + the JSON suite writer
 # on a small synthetic table. Writes to a scratch path — the committed
 # BENCH_optimizer.json trajectory is only ever refreshed by the nightly
