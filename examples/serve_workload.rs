@@ -159,6 +159,14 @@ fn main() -> Result<()> {
             rb.plan_version
         );
     }
+    if let Some(pair) = svc.speculate_pair() {
+        println!(
+            "speculate: probe pair ({}, {}) armed (accept rule starts disabled \
+             until the reoptimizer calibrates it)",
+            world.costs.model_names[pair.0],
+            world.costs.model_names[pair.1]
+        );
+    }
 
     // Build the workload: uniform over the items, or Zipf-repeated (a
     // search-engine-like stream where the completion cache pays off).
@@ -290,6 +298,25 @@ fn main() -> Result<()> {
             st.routed,
             st.abstained,
             svc.router_swap_history().len()
+        );
+    }
+    if let Some(pair) = svc.speculate_pair() {
+        println!(
+            "speculate: probes ({}, {}) accepts={} escalations={} \
+             est. spend avoided=${:.6} — rule {}",
+            world.costs.model_names[pair.0],
+            world.costs.model_names[pair.1],
+            m.speculative_accepts,
+            m.speculative_escalations,
+            m.speculative_saved_spend_usd,
+            match svc.calibrator_snapshot() {
+                Some(cal) if cal.enabled => format!(
+                    "on (v{}, P(correct|agree)={:.4})",
+                    cal.version, cal.calibration.p_correct_given_agree
+                ),
+                Some(cal) => format!("off (v{}, awaiting calibration)", cal.version),
+                None => "off".to_string(),
+            }
         );
     }
     let stats = svc.engine_handle().stats()?;

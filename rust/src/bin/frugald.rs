@@ -136,6 +136,13 @@ fn run() -> Result<()> {
             rb.plan_version
         );
     }
+    if let Some(pair) = svc.speculate_pair() {
+        let names = svc.costs().model_names;
+        eprintln!(
+            "frugald: speculative stage armed, probe pair ({}, {})",
+            names[pair.0], names[pair.1]
+        );
+    }
 
     // Background re-optimization: no driver loop exists to call step(),
     // so the cadence flag spawns the interval thread instead.
@@ -214,6 +221,23 @@ fn run() -> Result<()> {
             st.routed,
             st.abstained,
             svc.router_swap_history().len()
+        );
+    }
+    if let Some(pair) = svc.speculate_pair() {
+        let names = svc.costs().model_names;
+        eprintln!(
+            "frugald: speculate probes ({}, {}) accepts={} escalations={} \
+             est. spend avoided=${:.6} rule={}",
+            names[pair.0],
+            names[pair.1],
+            m.speculative_accepts,
+            m.speculative_escalations,
+            m.speculative_saved_spend_usd,
+            match svc.calibrator_snapshot() {
+                Some(cal) if cal.enabled => "on",
+                Some(_) => "off",
+                None => "uncalibrated",
+            }
         );
     }
     if let Some(path) = tuning.metrics_json.as_deref() {

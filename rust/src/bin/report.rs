@@ -41,6 +41,7 @@ use frugalgpt::data::{Artifacts, DatasetContext};
 use frugalgpt::eval::mpi::mpi_matrix;
 use frugalgpt::eval::router_ablation::router_vs_global;
 use frugalgpt::eval::simulate::table_backed_engine;
+use frugalgpt::eval::speculate_ablation::speculate_vs_cascade;
 use frugalgpt::eval::table::{pct, render, usd};
 use frugalgpt::eval::{best_individual, individual_points};
 use frugalgpt::marketplace::TABLE1;
@@ -313,6 +314,15 @@ fn metrics_report(args: &Args) -> Result<()> {
     println!(
         "queries={} cache_hits={} cascade={} concat_groups={} errors={} plan_swaps={}",
         m.queries, m.cache_hits, m.cascade_invocations, m.concat_groups, m.errors, m.plan_swaps
+    );
+    println!(
+        "answer origins: cache={} speculate={} cascade={}; speculative \
+         escalations={} est. spend avoided=${:.6}",
+        m.cache_hits,
+        m.speculative_accepts,
+        m.queries.saturating_sub(m.cache_hits + m.speculative_accepts),
+        m.speculative_escalations,
+        m.speculative_saved_spend_usd
     );
     println!(
         "stops per depth: {:?} (+{} deeper); window {}/{} rows ever",
@@ -808,6 +818,65 @@ fn router_section() -> Result<()> {
     println!(
         "(acceptance bar: cost saved >= 15% at accuracy within 1pt; run the \
          policy live with `serve --sim --router`)"
+    );
+    println!();
+    speculate_section()
+}
+
+/// Speculate-vs-cascade ablation on the correlated-error SimWorld (no
+/// artifacts needed): fire the plan's two cheapest models concurrently
+/// and accept on calibrated agreement, against the same global cascade —
+/// once with independent errors (the rule enables and wins) and once in
+/// lockstep (the SMART-style guarantee refuses to enable).
+fn speculate_section() -> Result<()> {
+    let r = speculate_vs_cascade(600, 11, 0.0)?;
+    println!(
+        "== speculative agreement vs global cascade (correlated-error \
+         SimWorld, 600 queries, rho=0) =="
+    );
+    println!(
+        "global cascade: {}   probe pair: {} + {}",
+        r.global_plan.describe(&r.model_names),
+        r.model_names[r.pair.0],
+        r.model_names[r.pair.1]
+    );
+    let rows = vec![
+        vec![
+            "global cascade".to_string(),
+            usd(r.cascade_avg_cost * 1e4),
+            pct(r.cascade_accuracy),
+            "-".into(),
+        ],
+        vec![
+            "speculative pipeline".to_string(),
+            usd(r.speculate_avg_cost * 1e4),
+            pct(r.speculate_accuracy),
+            pct(r.saving_frac()),
+        ],
+    ];
+    print!("{}", render(&["policy", "$/10k", "acc", "cost saved"], &rows));
+    println!(
+        "accepted on agreement: {} / {}  (P(correct|agree) = {:.3}, rule {})",
+        r.accepts,
+        r.accepts + r.escalations,
+        r.p_correct_given_agree,
+        if r.enabled { "enabled" } else { "disabled" }
+    );
+    let locked = speculate_vs_cascade(600, 11, 1.0)?;
+    println!(
+        "lockstep control (rho=1): P(correct|agree) = {:.3} < target → rule \
+         {}, speculative spend {} the cascade's",
+        locked.p_correct_given_agree,
+        if locked.enabled { "STILL ENABLED (bug!)" } else { "refuses to enable" },
+        if locked.speculate_avg_cost == locked.cascade_avg_cost {
+            "identical to"
+        } else {
+            "diverges from"
+        }
+    );
+    println!(
+        "(acceptance bar: strictly lower spend at accuracy within 1pt; run \
+         the policy live with `serve --sim --speculate`)"
     );
     Ok(())
 }

@@ -369,6 +369,46 @@ pub mod replay {
     }
 }
 
+/// One stage result computed *outside* the cascade — a speculative probe
+/// (`strategies::speculate`) that already invoked, billed, and scored a
+/// model before the cascade ran. Passed into
+/// [`Cascade::answer_billed_seeded`], which reuses the result for the
+/// matching plan stage instead of re-invoking (and re-billing) it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageSeed {
+    /// Marketplace index of the model that produced the answer.
+    pub model: usize,
+    /// The answer class it produced.
+    pub answer: u32,
+    /// Reliability score `g(q, a)` already measured for it.
+    pub score: f32,
+    /// USD already incurred by the probe call; the seeded stage bills
+    /// exactly this (once), never a fresh call.
+    pub cost_usd: f64,
+    /// Simulated API latency the probe already incurred (ms). Seeded
+    /// stages contribute 0 to the cascade's latency sum — the probe ran
+    /// concurrently with the pipeline, so the caller accounts it as a
+    /// `max`, not a sum.
+    pub latency_ms: f64,
+}
+
+/// Claim the first unconsumed seed for `model`, if any (each seed feeds
+/// at most one plan stage, so a duplicated model bills its second stage
+/// normally).
+fn take_seed<'a>(
+    seeds: &'a [StageSeed],
+    used: &mut [bool],
+    model: usize,
+) -> Option<&'a StageSeed> {
+    for (i, seed) in seeds.iter().enumerate() {
+        if !used[i] && seed.model == model {
+            used[i] = true;
+            return Some(seed);
+        }
+    }
+    None
+}
+
 /// Result of answering one live query.
 #[derive(Debug, Clone)]
 pub struct CascadeAnswer {
@@ -484,33 +524,62 @@ impl Cascade {
     /// that shares its few-shot prompt with a group is billed
     /// `prompt/g + query` tokens instead of the full row.
     pub fn answer_billed(&self, tokens: &[i32], input_tokens: u32) -> Result<CascadeAnswer> {
+        self.answer_billed_seeded(tokens, input_tokens, &[])
+    }
+
+    /// [`Cascade::answer_billed`] with speculative probe results attached:
+    /// a plan stage whose model has an unconsumed [`StageSeed`] reuses the
+    /// seed's answer, score, and already-metered cost instead of invoking
+    /// the engine again — the never-re-bill contract of the speculative
+    /// stage. With `seeds` empty this is bit-identical to
+    /// [`Cascade::answer_billed`].
+    pub fn answer_billed_seeded(
+        &self,
+        tokens: &[i32],
+        input_tokens: u32,
+        seeds: &[StageSeed],
+    ) -> Result<CascadeAnswer> {
         match &self.health {
-            None => self.answer_strict(tokens, input_tokens),
-            Some(h) => self.answer_resilient(h.as_ref(), tokens, input_tokens),
+            None => self.answer_strict(tokens, input_tokens, seeds),
+            Some(h) => self.answer_resilient(h.as_ref(), tokens, input_tokens, seeds),
         }
     }
 
     /// The pre-health execution loop: any engine error bubbles out.
-    fn answer_strict(&self, tokens: &[i32], input_tokens: u32) -> Result<CascadeAnswer> {
+    fn answer_strict(
+        &self,
+        tokens: &[i32],
+        input_tokens: u32,
+        seeds: &[StageSeed],
+    ) -> Result<CascadeAnswer> {
         let mut cost = 0.0;
         let mut stage_costs = Vec::with_capacity(self.plan.stages.len());
         let mut invoked_models = Vec::with_capacity(self.plan.stages.len());
+        let mut seed_used = vec![false; seeds.len()];
         let mut sim_lat = 0.0;
         let last = self.plan.stages.len() - 1;
         for (s, stage) in self.plan.stages.iter().enumerate() {
-            let name = &self.costs.model_names[stage.model];
-            let logits = self
-                .engine
-                .execute(&self.dataset, name, tokens.to_vec())
-                .with_context(|| format!("stage {s} ({name})"))?;
-            let answer = argmax(&logits) as u32;
-            let stage_cost = self.costs.call_cost(stage.model, input_tokens, answer);
+            let (answer, stage_cost, seeded_score) =
+                match take_seed(seeds, &mut seed_used, stage.model) {
+                    Some(seed) => (seed.answer, seed.cost_usd, Some(seed.score)),
+                    None => {
+                        let name = &self.costs.model_names[stage.model];
+                        let logits = self
+                            .engine
+                            .execute(&self.dataset, name, tokens.to_vec())
+                            .with_context(|| format!("stage {s} ({name})"))?;
+                        let answer = argmax(&logits) as u32;
+                        let stage_cost =
+                            self.costs.call_cost(stage.model, input_tokens, answer);
+                        let out_tokens = self.costs.answer_len(answer);
+                        sim_lat += self.costs.latency[stage.model]
+                            .latency_ms(input_tokens + out_tokens);
+                        (answer, stage_cost, None)
+                    }
+                };
             cost += stage_cost;
             stage_costs.push(stage_cost);
             invoked_models.push(stage.model);
-            let out_tokens = self.costs.answer_len(answer);
-            sim_lat += self.costs.latency[stage.model]
-                .latency_ms(input_tokens + out_tokens);
             if s == last {
                 return Ok(CascadeAnswer {
                     answer,
@@ -525,7 +594,10 @@ impl Cascade {
                     simulated_latency_ms: sim_lat,
                 });
             }
-            let score = self.scorer.score(tokens, answer)?;
+            let score = match seeded_score {
+                Some(sc) => sc,
+                None => self.scorer.score(tokens, answer)?,
+            };
             if score > stage.threshold {
                 return Ok(CascadeAnswer {
                     answer,
@@ -556,10 +628,12 @@ impl Cascade {
         health: &dyn HealthView,
         tokens: &[i32],
         input_tokens: u32,
+        seeds: &[StageSeed],
     ) -> Result<CascadeAnswer> {
         let mut cost = 0.0;
         let mut stage_costs = Vec::with_capacity(self.plan.stages.len());
         let mut invoked_models = Vec::with_capacity(self.plan.stages.len());
+        let mut seed_used = vec![false; seeds.len()];
         let mut skipped: Vec<usize> = Vec::new();
         let mut gate_skipped: Vec<usize> = Vec::new();
         let mut sim_lat = 0.0;
@@ -570,25 +644,37 @@ impl Cascade {
         let last = self.plan.stages.len() - 1;
 
         for (s, stage) in self.plan.stages.iter().enumerate() {
-            if health.admit(stage.model) == Gate::Skip {
+            // A seeded stage needs no gate and no call: the answer is
+            // already in hand (the probe's success/failure already fed
+            // the breaker when it ran).
+            let seed = take_seed(seeds, &mut seed_used, stage.model);
+            if seed.is_none() && health.admit(stage.model) == Gate::Skip {
                 skipped.push(s);
                 gate_skipped.push(s);
                 continue;
             }
             attempted_any = true;
-            let Some(logits) = self.try_stage(health, stage.model, tokens) else {
-                // failed after bounded retries — degrade to the next stage
-                skipped.push(s);
-                continue;
+            let (answer, stage_cost, seeded_score) = match seed {
+                Some(seed) => (seed.answer, seed.cost_usd, Some(seed.score)),
+                None => {
+                    let Some(logits) = self.try_stage(health, stage.model, tokens) else {
+                        // failed after bounded retries — degrade to the
+                        // next stage
+                        skipped.push(s);
+                        continue;
+                    };
+                    let answer = argmax(&logits) as u32;
+                    let stage_cost =
+                        self.costs.call_cost(stage.model, input_tokens, answer);
+                    let out_tokens = self.costs.answer_len(answer);
+                    sim_lat += self.costs.latency[stage.model]
+                        .latency_ms(input_tokens + out_tokens);
+                    (answer, stage_cost, None)
+                }
             };
-            let answer = argmax(&logits) as u32;
-            let stage_cost = self.costs.call_cost(stage.model, input_tokens, answer);
             cost += stage_cost;
             stage_costs.push(stage_cost);
             invoked_models.push(stage.model);
-            let out_tokens = self.costs.answer_len(answer);
-            sim_lat += self.costs.latency[stage.model]
-                .latency_ms(input_tokens + out_tokens);
             if s == last {
                 return Ok(CascadeAnswer {
                     answer,
@@ -603,7 +689,10 @@ impl Cascade {
                     simulated_latency_ms: sim_lat,
                 });
             }
-            let score = self.scorer.score(tokens, answer)?;
+            let score = match seeded_score {
+                Some(sc) => sc,
+                None => self.scorer.score(tokens, answer)?,
+            };
             if score > stage.threshold {
                 return Ok(CascadeAnswer {
                     answer,
@@ -1074,6 +1163,92 @@ mod tests {
             let a = c.answer(&row()).expect("skip-never-error");
             assert_eq!(a.answer, 1);
             assert_eq!(a.stopped_at, 1);
+        }
+
+        #[test]
+        fn seeded_stage_is_reused_not_re_invoked() {
+            // m1 down, no health: invoking m1 would error — but a seed
+            // for stage 0 that clears τ answers before m1 is reached,
+            // and the seeded stage itself must not call the engine (the
+            // plan's τ=2.0 would otherwise force escalation into m1).
+            let c = cascade(Arc::new(AtomicBool::new(true)), None);
+            let seed = StageSeed {
+                model: 0,
+                answer: 3,
+                score: 5.0, // clears τ=2.0
+                cost_usd: 0.123,
+                latency_ms: 9.0,
+            };
+            let a = c
+                .answer_billed_seeded(&row(), 8, &[seed])
+                .expect("seed answers before the outage");
+            assert_eq!(a.answer, 3, "the seed's answer, not the engine's");
+            assert_eq!(a.stopped_at, 0);
+            assert_eq!(a.score.to_bits(), 5.0f32.to_bits());
+            assert_eq!(a.cost.to_bits(), 0.123f64.to_bits(), "billed once, at probe price");
+            assert_eq!(a.stage_costs, vec![0.123]);
+            assert_eq!(a.invoked_models, vec![0]);
+            // the probe's latency is the caller's to account (concurrent)
+            assert_eq!(a.simulated_latency_ms, 0.0);
+        }
+
+        #[test]
+        fn sub_threshold_seed_escalates_and_bills_each_stage_once() {
+            let c = cascade(Arc::new(AtomicBool::new(false)), None);
+            let seed = StageSeed {
+                model: 0,
+                answer: 0,
+                score: 0.5, // under τ=2.0 → escalate to m1
+                cost_usd: 0.2,
+                latency_ms: 4.0,
+            };
+            let a = c.answer_billed_seeded(&row(), 8, &[seed]).unwrap();
+            assert_eq!(a.answer, 1, "m1 answers terminally");
+            assert_eq!(a.stopped_at, 1);
+            let m1_cost = c.costs().call_cost(1, 8, 1);
+            assert_eq!(a.stage_costs.len(), 2);
+            assert_eq!(a.stage_costs[0].to_bits(), 0.2f64.to_bits());
+            assert_eq!(a.stage_costs[1].to_bits(), m1_cost.to_bits());
+            assert_eq!(a.cost.to_bits(), (0.2 + m1_cost).to_bits());
+            // only m1's latency is summed — the seed ran concurrently
+            let m1_lat = c.costs().latency[1].latency_ms(8 + 1);
+            assert_eq!(a.simulated_latency_ms.to_bits(), m1_lat.to_bits());
+        }
+
+        #[test]
+        fn empty_seeds_are_bit_identical_to_answer_billed() {
+            let c = cascade(Arc::new(AtomicBool::new(false)), Some(health()));
+            let a = c.answer_billed(&row(), 8).unwrap();
+            let b = c.answer_billed_seeded(&row(), 8, &[]).unwrap();
+            assert_eq!(a.answer, b.answer);
+            assert_eq!(a.stopped_at, b.stopped_at);
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+            assert_eq!(a.simulated_latency_ms.to_bits(), b.simulated_latency_ms.to_bits());
+            assert_eq!(a.invoked_models, b.invoked_models);
+        }
+
+        #[test]
+        fn seed_bypasses_an_open_breaker() {
+            // Trip m0's breaker: without a seed the stage would gate-skip;
+            // with one, the already-answered result is served.
+            let h = health();
+            for _ in 0..4 {
+                use crate::coordinator::cascade::HealthView;
+                h.record(0, false);
+            }
+            let c = cascade(Arc::new(AtomicBool::new(false)), Some(h));
+            let seed = StageSeed {
+                model: 0,
+                answer: 2,
+                score: 5.0,
+                cost_usd: 0.05,
+                latency_ms: 1.0,
+            };
+            let a = c.answer_billed_seeded(&row(), 8, &[seed]).unwrap();
+            assert_eq!(a.answer, 2);
+            assert_eq!(a.stopped_at, 0);
+            assert!(a.skipped_stages.is_empty(), "a seeded stage is not a skip");
         }
     }
 }

@@ -3,6 +3,7 @@
 pub mod mpi;
 pub mod router_ablation;
 pub mod simulate;
+pub mod speculate_ablation;
 pub mod table;
 
 use crate::coordinator::optimizer::FrontierPoint;

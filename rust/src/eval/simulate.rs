@@ -123,6 +123,21 @@ pub const HET_LONG_TOKENS: usize = 350;
 /// `i % HET_MIX == HET_MIX - 1` (so 1 in 4 queries is long/hard).
 pub const HET_MIX: usize = 4;
 
+/// Marginal error rate of the *cheapest* model in a
+/// [`SimWorld::correlated`] world (pricier models err linearly less,
+/// down to 0 for the priciest).
+pub const CORR_BASE_ERR: f64 = 0.30;
+
+/// Probability a *correct* answer in a [`SimWorld::correlated`] world
+/// scores confidently ([`CORR_CONF_SCORE`]); the rest hedge at
+/// [`CORR_HEDGE_SCORE`] — the underconfident-but-right queries a cascade
+/// must escalate and probe agreement can rescue.
+pub const CORR_CONF: f64 = 0.6;
+/// Reliability score of a confident (always correct) answer.
+pub const CORR_CONF_SCORE: f32 = 0.92;
+/// Reliability score of a hedged answer (right or wrong alike).
+pub const CORR_HEDGE_SCORE: f32 = 0.55;
+
 impl SimWorld {
     /// A world of `k` APIs over `n` items, deterministic in `seed`.
     pub fn new(k: usize, n: usize, seed: u64) -> SimWorld {
@@ -239,6 +254,105 @@ impl SimWorld {
                 hetero_row(&meta, i, billable)
             })
             .collect();
+        SimWorld { meta, costs, table, rows }
+    }
+
+    /// A marketplace with a tunable *correlated-error* knob — the
+    /// testbed of speculative agreement serving. Each of the `k` APIs
+    /// has a fixed marginal error rate falling from [`CORR_BASE_ERR`]
+    /// (cheapest) to 0 (priciest), and the reliability scorer is *noisy*:
+    /// a correct answer is confident ([`CORR_CONF_SCORE`]) only with
+    /// probability [`CORR_CONF`], hedging at [`CORR_HEDGE_SCORE`]
+    /// otherwise (wrong answers always hedge) — so a threshold cascade
+    /// must escalate every hedged query even when the cheap answer was
+    /// right. Cross-model *agreement* is the signal that rescues those:
+    ///
+    /// * `rho = 0` (independent): erring models pick *model-distinct*
+    ///   wrong classes, so the two cheapest APIs agree only when both
+    ///   are right — `P(correct | agree) = 1` and an agreement-based
+    ///   accept rule soundly skips the escalation the hedged scores
+    ///   would have forced;
+    /// * `rho = 1` (lockstep): every item is judged against one shared
+    ///   coin and erring models agree on one shared wrong class —
+    ///   `P(correct | agree)` collapses toward the marginal accuracy and
+    ///   a *calibrated* accept rule must notice and disable itself.
+    ///
+    /// Marginal per-model accuracy is identical at every `rho` (both
+    /// branches draw from the same uniform); only the joint law moves.
+    /// Same token layout and Table-1 price ladder as [`SimWorld::new`].
+    pub fn correlated(k: usize, n: usize, seed: u64, rho: f64) -> SimWorld {
+        assert!(
+            (0.0..=1.0).contains(&rho),
+            "correlation rho must be in [0, 1], got {rho}"
+        );
+        let meta = DatasetMeta {
+            name: "sim-corr".into(),
+            seq: 20,
+            n_classes: SIM_CLASSES as usize,
+            n_examples: 4,
+            qlen: 6,
+            block_len: 3,
+            q_offset: 12,
+            scorer_seq: 20,
+            answer_lens: vec![1; SIM_CLASSES as usize],
+        };
+        let names: Vec<String> = (0..k).map(|m| format!("api_{m}")).collect();
+        let span = (k.max(2) - 1) as f64;
+        // err_m falls linearly to 0 at the priciest model, so cascades
+        // still have a real frontier to climb.
+        let err = |m: usize| CORR_BASE_ERR * (1.0 - m as f64 / span);
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut b = TableBuilder::new("sim-corr", names.clone());
+        for _ in 0..n {
+            let label = rng.below(SIM_CLASSES as u64) as u32;
+            // The shared wrong class of the correlated branch: when
+            // errors coincide, the erring models AGREE on it (that is
+            // the whole point of the knob).
+            let shared_wrong = (label + 1) % SIM_CLASSES;
+            let correlated = rng.f64() < rho;
+            let shared_coin = rng.f64();
+            let mut preds = Vec::with_capacity(k);
+            let mut scores = Vec::with_capacity(k);
+            let mut right = Vec::with_capacity(k);
+            for m in 0..k {
+                let coin = if correlated { shared_coin } else { rng.f64() };
+                let is_err = coin < err(m);
+                // Independent errors land on model-DISTINCT wrong
+                // classes (never a spurious agreement); correlated
+                // errors land on the shared one. The +1..C-1 offset can
+                // never wrap back onto the label.
+                let wrong = if correlated {
+                    shared_wrong
+                } else {
+                    (label + 1 + (m as u32 % (SIM_CLASSES - 1))) % SIM_CLASSES
+                };
+                let confident = !is_err && rng.f64() < CORR_CONF;
+                preds.push(if is_err { wrong } else { label });
+                scores.push(if confident { CORR_CONF_SCORE } else { CORR_HEDGE_SCORE });
+                right.push(!is_err);
+            }
+            b.push_item(label, &preds, &scores, &right)
+                .expect("aligned per-model triples");
+        }
+        let table = b.finish().expect("well-formed synthetic rows");
+        let costs = CostModel {
+            dataset: "sim-corr".into(),
+            model_names: names,
+            pricing: (0..k)
+                .map(|m| {
+                    let usd = 2.0 * 100f64.powf(m as f64 / span);
+                    Pricing::new(usd, usd, 0.0)
+                })
+                .collect(),
+            latency: (0..k)
+                .map(|m| LatencyModel {
+                    base_ms: 30.0 + m as f64,
+                    per_1k_tokens_ms: 30.0,
+                })
+                .collect(),
+            answer_lens: vec![1; SIM_CLASSES as usize],
+        };
+        let rows = (0..n).map(|i| sim_row(&meta, i)).collect();
         SimWorld { meta, costs, table, rows }
     }
 
@@ -816,6 +930,85 @@ mod tests {
         let b = SimWorld::heterogeneous(32, 5);
         assert_eq!(w.labels(), b.labels());
         assert_eq!(w.rows(), b.rows());
+    }
+
+    #[test]
+    fn correlated_world_moves_joint_errors_not_marginals() {
+        let n = 600usize;
+        let indep = SimWorld::correlated(3, n, 17, 0.0);
+        let locked = SimWorld::correlated(3, n, 17, 1.0);
+
+        // Marginal per-model accuracy is rho-invariant (same coin law in
+        // both branches): each world's accuracy sits near 1 - err_m.
+        for w in [&indep, &locked] {
+            for m in 0..3 {
+                let acc = (0..n).filter(|&i| w.table.is_correct(m, i)).count() as f64
+                    / n as f64;
+                let expect = 1.0 - CORR_BASE_ERR * (1.0 - m as f64 / 2.0);
+                assert!(
+                    (acc - expect).abs() < 0.08,
+                    "model {m}: accuracy {acc} far from {expect}"
+                );
+            }
+            assert!(
+                (0..n).all(|i| w.table.is_correct(2, i)),
+                "the priciest model never errs"
+            );
+        }
+
+        // The JOINT law is what moves: under independence erring models
+        // pick model-distinct wrong classes, so the two cheapest APIs
+        // NEVER agree on a wrong answer; under lockstep they err to one
+        // shared class together (≈ err_1 = 15% of items).
+        let agree_wrong = |w: &SimWorld| {
+            (0..n)
+                .filter(|&i| {
+                    w.table.pred(0, i) == w.table.pred(1, i) && !w.table.is_correct(0, i)
+                })
+                .count()
+        };
+        assert_eq!(agree_wrong(&indep), 0, "independent errors never collide");
+        assert!(
+            agree_wrong(&locked) as f64 > 0.08 * n as f64,
+            "lockstep must make agree-wrong events common: {}",
+            agree_wrong(&locked)
+        );
+        // Lockstep erring models agree on the SAME wrong class; scores
+        // are two-valued and confidence implies correctness.
+        for w in [&indep, &locked] {
+            for i in 0..n {
+                for m in 0..3 {
+                    let s = w.table.score(m, i);
+                    assert!(s == CORR_CONF_SCORE || s == CORR_HEDGE_SCORE);
+                    if s == CORR_CONF_SCORE {
+                        assert!(w.table.is_correct(m, i), "confident implies correct");
+                    }
+                    if !w.table.is_correct(m, i) {
+                        assert_eq!(s, CORR_HEDGE_SCORE, "wrong answers always hedge");
+                    }
+                }
+            }
+        }
+        for i in 0..n {
+            for m in 0..3 {
+                if !locked.table.is_correct(m, i) {
+                    assert_eq!(
+                        locked.table.pred(m, i),
+                        (locked.table.labels[i] + 1) % SIM_CLASSES
+                    );
+                }
+            }
+        }
+
+        // Deterministic in seed, and the engine serves the table.
+        let again = SimWorld::correlated(3, n, 17, 1.0);
+        assert_eq!(locked.labels(), again.labels());
+        assert_eq!(locked.rows(), again.rows());
+        let h = locked.engine().unwrap();
+        let logits = h
+            .execute("sim-corr", &locked.table.model_names[0], locked.row(4).to_vec())
+            .unwrap();
+        assert_eq!(argmax(&logits) as u32, locked.table.pred(0, 4));
     }
 
     #[test]

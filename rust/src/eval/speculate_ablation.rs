@@ -1,0 +1,230 @@
+//! The speculate-vs-cascade ablation behind `report strategies`: on a
+//! [`SimWorld::correlated`] marketplace the reliability scorer hedges on
+//! a fraction of *correct* cheap answers, so a threshold cascade must
+//! escalate them to the pricey terminal stage — while the two cheapest
+//! models, fired concurrently, *agree* exactly when both are right
+//! (independent errors land on model-distinct classes). The calibrated
+//! accept rule (`server::calibrate`) turns that agreement into an early
+//! accept, skipping the escalation spend; the same replay shows the rule
+//! *refusing* to enable when the correlated-error knob makes agreement
+//! uninformative — the SMART-style guarantee doing its job.
+//!
+//! The replay mirrors the serving stack's economics exactly: both probes
+//! are billed on every speculated query, an escalated query re-uses the
+//! probe answers as seeds (the cascade never re-bills an already-answered
+//! stage, `cascade::answer_billed_seeded`), and a disabled calibration
+//! reproduces the plain cascade bit-for-bit (the safety identity).
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::cascade::{replay, CascadePlan};
+use crate::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
+use crate::eval::simulate::SimWorld;
+use crate::server::calibrate::{CalibratorBundle, SpeculateConfig};
+use crate::strategies::speculate::cheapest_pair;
+
+/// Everything `report strategies` renders about the ablation.
+#[derive(Debug, Clone)]
+pub struct SpeculateAblation {
+    /// Marketplace model names (for plan rendering).
+    pub model_names: Vec<String>,
+    /// The global plan both pipelines serve (the frontier's best point).
+    pub global_plan: CascadePlan,
+    /// The probe pair (plan's two cheapest distinct models).
+    pub pair: (usize, usize),
+    /// Whether the calibrated agreement rule came up enabled.
+    pub enabled: bool,
+    /// The `P(correct | agree)` estimate behind that decision.
+    pub p_correct_given_agree: f64,
+    /// Replay accuracy of the plain global cascade.
+    pub cascade_accuracy: f64,
+    /// Replay average USD/query of the plain global cascade.
+    pub cascade_avg_cost: f64,
+    /// Replay accuracy of the speculative pipeline (probes + accept rule
+    /// + seeded escalation).
+    pub speculate_accuracy: f64,
+    /// Replay average USD/query of the speculative pipeline.
+    pub speculate_avg_cost: f64,
+    /// Queries accepted on probe agreement (no cascade consulted).
+    pub accepts: u64,
+    /// Queries escalated to the (seeded) cascade.
+    pub escalations: u64,
+}
+
+impl SpeculateAblation {
+    /// Fractional spend saving of speculation over the plain cascade
+    /// (negative = speculation costs more).
+    pub fn saving_frac(&self) -> f64 {
+        1.0 - self.speculate_avg_cost / self.cascade_avg_cost
+    }
+
+    /// Speculative accuracy minus cascade accuracy.
+    pub fn accuracy_delta(&self) -> f64 {
+        self.speculate_accuracy - self.cascade_accuracy
+    }
+}
+
+/// Replay both pipelines over one correlated-error world. `rho` is the
+/// error-correlation knob: 0.0 = independent errors (agreement is
+/// informative, the rule enables and wins), 1.0 = lockstep errors (the
+/// rule must refuse and the speculative replay degenerates to the plain
+/// cascade). Calibration and evaluation share the table on purpose — the
+/// serving loop calibrates on the observation window it is about to
+/// serve.
+pub fn speculate_vs_cascade(n: usize, seed: u64, rho: f64) -> Result<SpeculateAblation> {
+    let w = SimWorld::correlated(3, n, seed, rho);
+    let tokens = w.input_tokens();
+    let opt = CascadeOptimizer::new(
+        &w.table,
+        &w.costs,
+        tokens.clone(),
+        OptimizerOptions::default(),
+    )?;
+    let frontier = opt.frontier();
+    let global = frontier.last().context("empty frontier")?;
+    let g = replay::replay(&global.plan, &w.table, &w.costs, &tokens);
+    let pair = cheapest_pair(&global.plan, &w.costs)
+        .context("global plan has fewer than two distinct models — no probe pair")?;
+    let bundle =
+        CalibratorBundle::from_table(1, 0, pair, SpeculateConfig::default(), &w.table)?;
+
+    // With no accept rule live, the serving stage passes every query
+    // untouched — the speculative pipeline IS the cascade (bit-for-bit).
+    if !bundle.accepts_anything() {
+        return Ok(SpeculateAblation {
+            model_names: w.costs.model_names.clone(),
+            global_plan: global.plan.clone(),
+            pair,
+            enabled: bundle.enabled,
+            p_correct_given_agree: bundle.calibration.p_correct_given_agree,
+            cascade_accuracy: g.accuracy,
+            cascade_avg_cost: g.avg_cost,
+            speculate_accuracy: g.accuracy,
+            speculate_avg_cost: g.avg_cost,
+            accepts: 0,
+            escalations: 0,
+        });
+    }
+
+    let plan = &global.plan;
+    let (mut correct, mut spend) = (0u64, 0.0f64);
+    let (mut accepts, mut escalations) = (0u64, 0u64);
+    for i in 0..w.len() {
+        let (pa, sa) = (w.table.pred(pair.0, i), w.table.score(pair.0, i));
+        let (pb, sb) = (w.table.pred(pair.1, i), w.table.score(pair.1, i));
+        // Both probes are always billed — speculation buys concurrency
+        // and early accepts, not free calls.
+        let mut cost = w.costs.call_cost(pair.0, tokens[i], pa)
+            + w.costs.call_cost(pair.1, tokens[i], pb);
+        let answer = if let Some((ans, _score, _lane)) = bundle.accept(pa, sa, pb, sb) {
+            accepts += 1;
+            ans
+        } else {
+            escalations += 1;
+            // Seeded cascade walk: a stage whose model already answered
+            // as a probe is re-used, not re-billed (multiplicity-aware,
+            // exactly like `take_seed` on the serving path).
+            let mut unclaimed = vec![pair.0, pair.1];
+            let last = plan.stages.len() - 1;
+            let mut ans = 0u32;
+            for (s, stage) in plan.stages.iter().enumerate() {
+                let m = stage.model;
+                if let Some(p) = unclaimed.iter().position(|&u| u == m) {
+                    unclaimed.swap_remove(p);
+                } else {
+                    cost += w.costs.call_cost(m, tokens[i], w.table.pred(m, i));
+                }
+                ans = w.table.pred(m, i);
+                if s == last || w.table.score(m, i) > stage.threshold {
+                    break;
+                }
+            }
+            ans
+        };
+        correct += (answer == w.table.labels[i]) as u64;
+        spend += cost;
+    }
+    let denom = w.len().max(1) as f64;
+    Ok(SpeculateAblation {
+        model_names: w.costs.model_names.clone(),
+        global_plan: global.plan.clone(),
+        pair,
+        enabled: bundle.enabled,
+        p_correct_given_agree: bundle.calibration.p_correct_given_agree,
+        cascade_accuracy: g.accuracy,
+        cascade_avg_cost: g.avg_cost,
+        speculate_accuracy: correct as f64 / denom,
+        speculate_avg_cost: spend / denom,
+        accepts,
+        escalations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tentpole acceptance bar: with independent errors the
+    /// calibrated agreement rule enables and the speculative pipeline
+    /// lands at strictly lower spend than the global cascade, within one
+    /// accuracy point — and it gets there by actually accepting (not by
+    /// a degenerate no-op).
+    #[test]
+    fn speculation_beats_the_global_cascade_when_agreement_is_informative() {
+        let r = speculate_vs_cascade(600, 11, 0.0).unwrap();
+        assert!(
+            r.global_plan.stages.len() >= 2,
+            "the global plan must be a real cascade (got {})",
+            r.global_plan.describe(&r.model_names)
+        );
+        assert!(r.enabled, "P(correct|agree) = {}", r.p_correct_given_agree);
+        assert!(
+            r.p_correct_given_agree >= 0.99,
+            "independent errors never collide, got {}",
+            r.p_correct_given_agree
+        );
+        assert!(r.accepts > 0, "the rule must actually accept");
+        assert!(r.escalations > 0, "disagreements must still escalate");
+        assert!(
+            r.speculate_avg_cost < r.cascade_avg_cost,
+            "speculation must be strictly cheaper: ${:.6} vs ${:.6}",
+            r.speculate_avg_cost,
+            r.cascade_avg_cost
+        );
+        assert!(
+            r.accuracy_delta().abs() <= 0.01,
+            "accuracy moved {:.4} (cascade {:.4} speculate {:.4})",
+            r.accuracy_delta(),
+            r.cascade_accuracy,
+            r.speculate_accuracy
+        );
+    }
+
+    /// The SMART-style guarantee: lockstep errors make agreement
+    /// uninformative, the estimate lands under the target, the rule
+    /// refuses to enable, and the speculative replay IS the cascade.
+    #[test]
+    fn calibration_refuses_when_errors_correlate() {
+        let r = speculate_vs_cascade(600, 11, 1.0).unwrap();
+        assert!(!r.enabled, "P(correct|agree) = {}", r.p_correct_given_agree);
+        assert!(r.p_correct_given_agree < 0.9);
+        assert_eq!((r.accepts, r.escalations), (0, 0));
+        assert_eq!(
+            r.speculate_avg_cost.to_bits(),
+            r.cascade_avg_cost.to_bits(),
+            "disabled rule must reproduce the cascade bit-for-bit"
+        );
+        assert_eq!(r.speculate_accuracy.to_bits(), r.cascade_accuracy.to_bits());
+    }
+
+    #[test]
+    fn ablation_is_deterministic() {
+        let a = speculate_vs_cascade(300, 5, 0.0).unwrap();
+        let b = speculate_vs_cascade(300, 5, 0.0).unwrap();
+        assert_eq!(a.global_plan, b.global_plan);
+        assert_eq!(a.pair, b.pair);
+        assert_eq!((a.accepts, a.escalations), (b.accepts, b.escalations));
+        assert_eq!(a.speculate_avg_cost.to_bits(), b.speculate_avg_cost.to_bits());
+        assert_eq!(a.cascade_avg_cost.to_bits(), b.cascade_avg_cost.to_bits());
+    }
+}

@@ -1,0 +1,573 @@
+//! SMART-style accept-rule calibration for speculative agreement serving.
+//!
+//! The speculative stage (`strategies::speculate`) fires the plan's two
+//! cheapest models concurrently and wants to accept their answer without
+//! consulting the cascade when the pair *agrees*. Agreement is only
+//! evidence, not proof: two correlated cheap models can confidently agree
+//! on the same wrong answer. Following SMART's accuracy-guarantee framing
+//! (PAPERS.md), acceptance is gated on an *estimated* conditional
+//! accuracy: from the decay-weighted serving `ObservationWindow` we
+//! estimate `P(correct | pair agrees)` and enable the accept rule only
+//! when that estimate clears the user-set guarantee `--speculate-target A`
+//! with enough evidence weight behind it. A second, stricter rule covers
+//! disagreement rows: accept the higher-scoring probe anyway iff both
+//! reliability scores clear a *calibrated bar* — the smallest bar whose
+//! conditional accuracy estimate also clears `A`.
+//!
+//! Publication discipline mirrors the router exactly: calibration is an
+//! immutable [`CalibratorBundle`] snapshot behind a [`SnapshotCell`],
+//! republished on the reoptimizer's hysteresis cadence, stamped with the
+//! plan version it was computed against. The serving stage *abstains*
+//! (clean `Pass`, zero spend) whenever the stamped plan version is not
+//! the one the query is being served under — a plan swap can therefore
+//! never pair a stale accept rule with a fresh plan (the
+//! accept-rule-abstains-on-stale-plan invariant, pinned by
+//! `tests/speculate_pipeline.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::responses::SplitTable;
+use crate::util::json::Value;
+use crate::util::sync::SnapshotCell;
+
+/// Candidate score bars the disagreement rule is calibrated over. A small
+/// fixed grid keeps calibration O(grid · window) and deterministic.
+const SCORE_BARS: &[f32] = &[0.5, 0.55, 0.6, 0.65, 0.7, 0.75, 0.8, 0.85, 0.9, 0.95];
+
+/// User-facing speculation knobs (`--speculate` / `--speculate-target`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpeculateConfig {
+    /// Accuracy guarantee `A`: the accept rule is enabled only while the
+    /// estimated `P(correct | accept)` clears this.
+    pub target: f64,
+    /// Minimum decay weight of supporting window rows before an estimate
+    /// is trusted (guards against enabling off three lucky rows).
+    pub min_weight: f64,
+}
+
+impl Default for SpeculateConfig {
+    fn default() -> Self {
+        SpeculateConfig { target: 0.9, min_weight: 8.0 }
+    }
+}
+
+/// The calibration estimates for one ordered model pair, computed over
+/// one (decay-weighted) window snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PairCalibration {
+    /// Σ row weight where the pair's answers agree.
+    pub agree_weight: f64,
+    /// Σ row weight where they agree AND the agreed answer is the label.
+    pub agree_correct_weight: f64,
+    /// `P(correct | agreement)` estimate (0.0 when no agreement rows).
+    pub p_correct_given_agree: f64,
+    /// Calibrated disagreement bar: smallest grid bar whose conditional
+    /// accuracy clears the target with enough evidence; `None` = the
+    /// disagreement rule stays off.
+    pub score_bar: Option<f32>,
+    /// Σ row weight supporting the chosen bar (0.0 when `score_bar` is
+    /// `None`).
+    pub bar_weight: f64,
+    /// `P(higher-scoring probe correct | disagree, both scores ≥ bar)` at
+    /// the chosen bar (0.0 when `score_bar` is `None`).
+    pub p_correct_at_bar: f64,
+}
+
+impl PairCalibration {
+    /// The all-zero calibration of an empty window.
+    pub fn empty() -> Self {
+        PairCalibration {
+            agree_weight: 0.0,
+            agree_correct_weight: 0.0,
+            p_correct_given_agree: 0.0,
+            score_bar: None,
+            bar_weight: 0.0,
+            p_correct_at_bar: 0.0,
+        }
+    }
+}
+
+/// Estimate the pair-agreement accept rule for models `(a, b)` of `table`
+/// against guarantee `target` with evidence floor `min_weight`.
+///
+/// Row weights are the table's observation weights (exponential decay
+/// when the table came from `ObservationWindow::snapshot_table`), so
+/// recent traffic dominates both estimates.
+pub fn calibrate_pair(
+    table: &SplitTable,
+    a: usize,
+    b: usize,
+    target: f64,
+    min_weight: f64,
+) -> Result<PairCalibration> {
+    let k = table.n_models();
+    if a >= k || b >= k {
+        bail!("calibration pair ({a}, {b}) out of range for {k} models");
+    }
+    if a == b {
+        bail!("calibration pair must be two distinct models (got {a} twice)");
+    }
+    let mut cal = PairCalibration::empty();
+    // Agreement rule: one pass.
+    for i in 0..table.len() {
+        if table.pred(a, i) == table.pred(b, i) {
+            let w = table.weight(i);
+            cal.agree_weight += w;
+            if table.pred(a, i) == table.labels[i] {
+                cal.agree_correct_weight += w;
+            }
+        }
+    }
+    if cal.agree_weight > 0.0 {
+        cal.p_correct_given_agree = cal.agree_correct_weight / cal.agree_weight;
+    }
+    // Disagreement rule: lowest bar on the grid that clears the target
+    // with enough weight (a lower bar accepts more rows, so we prefer it).
+    for &bar in SCORE_BARS {
+        let (mut w_bar, mut w_ok) = (0.0f64, 0.0f64);
+        for i in 0..table.len() {
+            if table.pred(a, i) == table.pred(b, i) {
+                continue;
+            }
+            let (sa, sb) = (table.score(a, i), table.score(b, i));
+            if sa < bar || sb < bar {
+                continue;
+            }
+            // Ties attribute to the first lane, exactly as the serving
+            // rule does — calibration must estimate the rule it gates.
+            let winner = if sb > sa { b } else { a };
+            let w = table.weight(i);
+            w_bar += w;
+            if table.pred(winner, i) == table.labels[i] {
+                w_ok += w;
+            }
+        }
+        if w_bar >= min_weight && w_ok / w_bar >= target {
+            cal.score_bar = Some(bar);
+            cal.bar_weight = w_bar;
+            cal.p_correct_at_bar = w_ok / w_bar;
+            break;
+        }
+    }
+    Ok(cal)
+}
+
+/// One immutable calibration generation: the accept rules the speculative
+/// stage serves under, stamped with the plan version they were computed
+/// against. Swapped atomically through [`CalibratorHandle`].
+#[derive(Debug, Clone)]
+pub struct CalibratorBundle {
+    /// Monotone calibration generation.
+    pub version: u64,
+    /// Plan version this calibration was computed against; the stage
+    /// abstains when it serves under any other plan.
+    pub plan_version: u64,
+    /// Marketplace indices of the probe pair `(cheapest, second-cheapest)`.
+    pub pair: (usize, usize),
+    /// The accuracy guarantee `A` both rules are gated on.
+    pub target: f64,
+    /// The window estimates behind the rules.
+    pub calibration: PairCalibration,
+    /// Whether the agreement rule is live (`P(correct | agree) ≥ target`
+    /// with enough evidence).
+    pub enabled: bool,
+}
+
+impl CalibratorBundle {
+    /// The generation-0 bundle: both rules off. With this installed the
+    /// speculative stage is a bitwise no-op (the safety identity).
+    pub fn disabled(version: u64, plan_version: u64, pair: (usize, usize), target: f64) -> Self {
+        CalibratorBundle {
+            version,
+            plan_version,
+            pair,
+            target,
+            calibration: PairCalibration::empty(),
+            enabled: false,
+        }
+    }
+
+    /// Calibrate a bundle from a window snapshot (model order of `table`
+    /// must be marketplace order, as `ObservationWindow::snapshot_table`
+    /// guarantees).
+    pub fn from_table(
+        version: u64,
+        plan_version: u64,
+        pair: (usize, usize),
+        cfg: SpeculateConfig,
+        table: &SplitTable,
+    ) -> Result<Self> {
+        let calibration = calibrate_pair(table, pair.0, pair.1, cfg.target, cfg.min_weight)?;
+        let enabled = calibration.agree_weight >= cfg.min_weight
+            && calibration.p_correct_given_agree >= cfg.target;
+        Ok(CalibratorBundle {
+            version,
+            plan_version,
+            pair,
+            target: cfg.target,
+            calibration,
+            enabled,
+        })
+    }
+
+    /// Whether either accept rule can fire at all. False means the stage
+    /// must pass every query untouched (no probes, no spend).
+    pub fn accepts_anything(&self) -> bool {
+        self.enabled || self.calibration.score_bar.is_some()
+    }
+
+    /// Apply the accept rules to one probed pair. Returns
+    /// `Some((answer, score, lane))` when the rules accept — `lane` is 0
+    /// or 1, the pair slot whose score backs the answer — and `None` when
+    /// the query must escalate to the cascade.
+    pub fn accept(
+        &self,
+        pred_a: u32,
+        score_a: f32,
+        pred_b: u32,
+        score_b: f32,
+    ) -> Option<(u32, f32, usize)> {
+        if pred_a == pred_b {
+            if !self.enabled {
+                return None;
+            }
+            // Agreed: attribute to the higher-scoring lane so the cached
+            // (model, score) stays a pair a plan threshold can re-check.
+            return Some(if score_b > score_a {
+                (pred_b, score_b, 1)
+            } else {
+                (pred_a, score_a, 0)
+            });
+        }
+        let bar = self.calibration.score_bar?;
+        if score_a >= bar && score_b >= bar {
+            return Some(if score_b > score_a {
+                (pred_b, score_b, 1)
+            } else {
+                (pred_a, score_a, 0)
+            });
+        }
+        None
+    }
+
+    /// JSON form (serve summaries, swap logs).
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("version".to_string(), Value::Num(self.version as f64));
+        m.insert("plan_version".to_string(), Value::Num(self.plan_version as f64));
+        m.insert("pair_a".to_string(), Value::Num(self.pair.0 as f64));
+        m.insert("pair_b".to_string(), Value::Num(self.pair.1 as f64));
+        m.insert("target".to_string(), Value::Num(self.target));
+        m.insert("enabled".to_string(), Value::Bool(self.enabled));
+        m.insert(
+            "agree_weight".to_string(),
+            Value::Num(self.calibration.agree_weight),
+        );
+        m.insert(
+            "agree_correct_weight".to_string(),
+            Value::Num(self.calibration.agree_correct_weight),
+        );
+        m.insert(
+            "p_correct_given_agree".to_string(),
+            Value::Num(self.calibration.p_correct_given_agree),
+        );
+        m.insert(
+            "score_bar".to_string(),
+            match self.calibration.score_bar {
+                Some(b) => Value::Num(b as f64),
+                None => Value::Null,
+            },
+        );
+        m.insert("bar_weight".to_string(), Value::Num(self.calibration.bar_weight));
+        m.insert(
+            "p_correct_at_bar".to_string(),
+            Value::Num(self.calibration.p_correct_at_bar),
+        );
+        Value::Obj(m)
+    }
+
+    /// Parse the [`CalibratorBundle::to_value`] form.
+    pub fn from_value(v: &Value) -> Result<CalibratorBundle> {
+        let version = v.get("version").as_f64().context("missing version")? as u64;
+        let plan_version =
+            v.get("plan_version").as_f64().context("missing plan_version")? as u64;
+        let pair = (
+            v.get("pair_a").as_f64().context("missing pair_a")? as usize,
+            v.get("pair_b").as_f64().context("missing pair_b")? as usize,
+        );
+        let score_bar = match v.get("score_bar") {
+            Value::Null => None,
+            other => Some(other.as_f64().context("bad score_bar")? as f32),
+        };
+        Ok(CalibratorBundle {
+            version,
+            plan_version,
+            pair,
+            target: v.get("target").as_f64().context("missing target")?,
+            enabled: v.get("enabled").as_bool().context("missing enabled")?,
+            calibration: PairCalibration {
+                agree_weight: v
+                    .get("agree_weight")
+                    .as_f64()
+                    .context("missing agree_weight")?,
+                agree_correct_weight: v
+                    .get("agree_correct_weight")
+                    .as_f64()
+                    .context("missing agree_correct_weight")?,
+                p_correct_given_agree: v
+                    .get("p_correct_given_agree")
+                    .as_f64()
+                    .context("missing p_correct_given_agree")?,
+                score_bar,
+                bar_weight: v.get("bar_weight").as_f64().context("missing bar_weight")?,
+                p_correct_at_bar: v
+                    .get("p_correct_at_bar")
+                    .as_f64()
+                    .context("missing p_correct_at_bar")?,
+            },
+        })
+    }
+}
+
+/// One calibration republish, for the swap log.
+#[derive(Debug, Clone)]
+pub struct CalibratorSwapEvent {
+    /// Generation that was installed.
+    pub version: u64,
+    /// Plan version it was computed against.
+    pub plan_version: u64,
+    /// Whether the agreement rule came up enabled.
+    pub enabled: bool,
+    /// The `P(correct | agree)` estimate behind the decision.
+    pub p_correct_given_agree: f64,
+    /// Why the reoptimizer republished.
+    pub reason: String,
+}
+
+impl CalibratorSwapEvent {
+    /// JSON form for `report swaps`-style logs.
+    pub fn to_value(&self) -> Value {
+        let mut m = std::collections::HashMap::new();
+        m.insert("version".to_string(), Value::Num(self.version as f64));
+        m.insert("plan_version".to_string(), Value::Num(self.plan_version as f64));
+        m.insert("enabled".to_string(), Value::Bool(self.enabled));
+        m.insert(
+            "p_correct_given_agree".to_string(),
+            Value::Num(self.p_correct_given_agree),
+        );
+        m.insert("reason".to_string(), Value::Str(self.reason.clone()));
+        Value::Obj(m)
+    }
+}
+
+/// The swappable calibration handle: wait-free snapshots for the serving
+/// stage, version-monotone publication for the reoptimizer. Mirrors
+/// `RouterHandle` structurally so the two learned layers share one
+/// mental model.
+pub struct CalibratorHandle {
+    current: SnapshotCell<CalibratorBundle>,
+    next_version: AtomicU64,
+    history: Mutex<Vec<CalibratorSwapEvent>>,
+}
+
+impl CalibratorHandle {
+    /// Install the generation-0 bundle.
+    pub fn new(bundle: CalibratorBundle) -> Self {
+        let next = bundle.version + 1;
+        CalibratorHandle {
+            current: SnapshotCell::new(Arc::new(bundle)),
+            next_version: AtomicU64::new(next),
+            history: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The live bundle (wait-free).
+    pub fn snapshot(&self) -> Arc<CalibratorBundle> {
+        self.current.load()
+    }
+
+    /// Version of the live bundle.
+    pub fn version(&self) -> u64 {
+        self.snapshot().version
+    }
+
+    /// Claim the next calibration generation number.
+    pub fn reserve_version(&self) -> u64 {
+        self.next_version.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Install `bundle` iff it is newer than the live one (the same
+    /// lost-race tolerance as plan/router publication). Returns whether
+    /// the install happened; winners are appended to the swap log.
+    pub fn publish(&self, bundle: CalibratorBundle, reason: impl Into<String>) -> bool {
+        let event = CalibratorSwapEvent {
+            version: bundle.version,
+            plan_version: bundle.plan_version,
+            enabled: bundle.enabled,
+            p_correct_given_agree: bundle.calibration.p_correct_given_agree,
+            reason: reason.into(),
+        };
+        let version = bundle.version;
+        let won = self
+            .current
+            .store_if(Arc::new(bundle), |cur| cur.version < version);
+        if won {
+            self.history.lock().unwrap().push(event);
+        }
+        won
+    }
+
+    /// Copy of the swap log.
+    pub fn history(&self) -> Vec<CalibratorSwapEvent> {
+        self.history.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::responses::TableBuilder;
+
+    /// 2-model table: `n_agree_ok` rows agree correctly, `n_agree_bad`
+    /// agree on a wrong answer, `n_split` disagree with model 1 right at
+    /// high score.
+    fn pair_table(n_agree_ok: usize, n_agree_bad: usize, n_split: usize) -> SplitTable {
+        let names = vec!["cheap_a".to_string(), "cheap_b".to_string()];
+        let mut b = TableBuilder::new("cal", names);
+        for _ in 0..n_agree_ok {
+            b.push_item(1, &[1, 1], &[0.8, 0.7], &[true, true]).unwrap();
+        }
+        for _ in 0..n_agree_bad {
+            b.push_item(1, &[2, 2], &[0.6, 0.6], &[false, false]).unwrap();
+        }
+        for _ in 0..n_split {
+            b.push_item(1, &[0, 1], &[0.6, 0.9], &[false, true]).unwrap();
+        }
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn agreement_estimate_counts_weighted_rows() {
+        let t = pair_table(9, 1, 4);
+        let cal = calibrate_pair(&t, 0, 1, 0.9, 8.0).unwrap();
+        assert_eq!(cal.agree_weight, 10.0);
+        assert_eq!(cal.agree_correct_weight, 9.0);
+        assert!((cal.p_correct_given_agree - 0.9).abs() < 1e-12);
+        // disagreement rows: both scores ≥ 0.6, winner = model 1, always
+        // correct → the lowest bar admitting them wins.
+        assert_eq!(cal.score_bar, Some(0.5));
+        assert_eq!(cal.bar_weight, 4.0);
+        assert_eq!(cal.p_correct_at_bar, 1.0);
+    }
+
+    #[test]
+    fn bar_needs_evidence_weight() {
+        // Only 4 disagreement rows but min_weight 8 → no bar.
+        let t = pair_table(9, 1, 4);
+        let cal = calibrate_pair(&t, 0, 1, 0.9, 8.0).unwrap();
+        assert_eq!(cal.bar_weight, 4.0);
+        let strict = calibrate_pair(&t, 0, 1, 0.9, 5.0).unwrap();
+        assert_eq!(strict.score_bar, Some(0.5));
+        let none = calibrate_pair(&t, 0, 1, 0.9, 100.0).unwrap();
+        assert_eq!(none.score_bar, None);
+        assert_eq!(none.bar_weight, 0.0);
+    }
+
+    #[test]
+    fn calibrate_rejects_bad_pairs() {
+        let t = pair_table(4, 0, 0);
+        assert!(calibrate_pair(&t, 0, 0, 0.9, 1.0).is_err());
+        assert!(calibrate_pair(&t, 0, 5, 0.9, 1.0).is_err());
+    }
+
+    #[test]
+    fn bundle_enables_only_above_target_with_evidence() {
+        let cfg = SpeculateConfig { target: 0.9, min_weight: 8.0 };
+        // 90% conditional accuracy with weight 10 → enabled.
+        let good = CalibratorBundle::from_table(1, 0, (0, 1), cfg, &pair_table(9, 1, 0))
+            .unwrap();
+        assert!(good.enabled);
+        // 80% → disabled.
+        let bad = CalibratorBundle::from_table(1, 0, (0, 1), cfg, &pair_table(8, 2, 0))
+            .unwrap();
+        assert!(!bad.enabled);
+        // 100% but only weight 4 → disabled (not enough evidence).
+        let thin = CalibratorBundle::from_table(1, 0, (0, 1), cfg, &pair_table(4, 0, 0))
+            .unwrap();
+        assert!(!thin.enabled);
+    }
+
+    #[test]
+    fn accept_rules_fire_as_specified() {
+        let cfg = SpeculateConfig { target: 0.9, min_weight: 4.0 };
+        let b = CalibratorBundle::from_table(1, 0, (0, 1), cfg, &pair_table(9, 1, 4))
+            .unwrap();
+        assert!(b.enabled);
+        assert_eq!(b.calibration.score_bar, Some(0.5));
+        // agreement → higher-scoring lane wins the attribution
+        assert_eq!(b.accept(3, 0.6, 3, 0.8), Some((3, 0.8, 1)));
+        assert_eq!(b.accept(3, 0.8, 3, 0.6), Some((3, 0.8, 0)));
+        // score tie attributes to lane 0 (matches calibration's tie rule)
+        assert_eq!(b.accept(3, 0.7, 3, 0.7), Some((3, 0.7, 0)));
+        // disagreement above the bar → higher-scoring answer accepted
+        assert_eq!(b.accept(1, 0.55, 2, 0.95), Some((2, 0.95, 1)));
+        // disagreement with one lane under the bar → escalate
+        assert_eq!(b.accept(1, 0.4, 2, 0.95), None);
+        // disabled bundle accepts nothing, agreement included
+        let off = CalibratorBundle::disabled(0, 0, (0, 1), 0.9);
+        assert!(!off.accepts_anything());
+        assert_eq!(off.accept(3, 0.9, 3, 0.9), None);
+    }
+
+    #[test]
+    fn bundle_wire_roundtrip_is_bit_exact() {
+        let cfg = SpeculateConfig { target: 0.9, min_weight: 4.0 };
+        for bundle in [
+            CalibratorBundle::from_table(7, 3, (0, 1), cfg, &pair_table(9, 1, 4)).unwrap(),
+            CalibratorBundle::disabled(0, 0, (2, 5), 0.85),
+        ] {
+            let json = bundle.to_value().to_json();
+            let back = CalibratorBundle::from_value(&Value::parse(&json).unwrap()).unwrap();
+            assert_eq!(back.version, bundle.version);
+            assert_eq!(back.plan_version, bundle.plan_version);
+            assert_eq!(back.pair, bundle.pair);
+            assert_eq!(back.target.to_bits(), bundle.target.to_bits());
+            assert_eq!(back.enabled, bundle.enabled);
+            assert_eq!(
+                back.calibration.agree_weight.to_bits(),
+                bundle.calibration.agree_weight.to_bits()
+            );
+            assert_eq!(
+                back.calibration.p_correct_given_agree.to_bits(),
+                bundle.calibration.p_correct_given_agree.to_bits()
+            );
+            assert_eq!(
+                back.calibration.score_bar.map(f32::to_bits),
+                bundle.calibration.score_bar.map(f32::to_bits)
+            );
+            // second trip is byte-identical
+            assert_eq!(back.to_value().to_json(), json);
+        }
+    }
+
+    #[test]
+    fn handle_publishes_version_monotone() {
+        let h = CalibratorHandle::new(CalibratorBundle::disabled(0, 0, (0, 1), 0.9));
+        assert_eq!(h.version(), 0);
+        let v1 = h.reserve_version();
+        let v2 = h.reserve_version();
+        assert!(v1 < v2);
+        // out-of-order publish: newer first wins, older loses cleanly
+        assert!(h.publish(CalibratorBundle::disabled(v2, 1, (0, 1), 0.9), "newer"));
+        assert!(!h.publish(CalibratorBundle::disabled(v1, 1, (0, 1), 0.9), "stale"));
+        assert_eq!(h.version(), v2);
+        let hist = h.history();
+        assert_eq!(hist.len(), 1);
+        assert_eq!(hist[0].version, v2);
+        assert_eq!(hist[0].reason, "newer");
+        assert!(hist[0].to_value().to_json().contains("newer"));
+    }
+}

@@ -15,6 +15,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::eval::simulate::ScenarioTimeline;
+use crate::server::calibrate::SpeculateConfig;
 use crate::server::health::HealthConfig;
 use crate::server::reoptimizer::ReoptimizerConfig;
 use crate::server::service::ServiceConfig;
@@ -106,10 +107,34 @@ pub const SERVE_FLAGS: &[FlagSpec] = &[
         help: "hard spend cap for the shadow scorer",
     },
     FlagSpec {
+        name: "shadow-referee",
+        value: None,
+        default: "",
+        help: "label shadow rows by top-2 referee vote; the reference API is only consulted on disagreement",
+    },
+    FlagSpec {
+        name: "shadow-margin",
+        value: Some("M"),
+        default: "off",
+        help: "always shadow-sample queries whose serving score landed within M of its threshold",
+    },
+    FlagSpec {
         name: "pipeline",
         value: Some("SPEC"),
-        default: "cache,shadow,prompt,budget,router,cascade",
+        default: "cache,shadow,prompt,budget,speculate,router,cascade",
         help: "serving stage stack as data, e.g. cache,prompt,cascade",
+    },
+    FlagSpec {
+        name: "speculate",
+        value: None,
+        default: "",
+        help: "speculative agreement serving: fire the plan's two cheapest models concurrently, accept on calibrated agreement",
+    },
+    FlagSpec {
+        name: "speculate-target",
+        value: Some("A"),
+        default: "0.9",
+        help: "calibrated accept bar: enable the agreement rule only when P(correct | agree) >= A in the window",
     },
     FlagSpec {
         name: "router",
@@ -281,6 +306,21 @@ impl ServiceConfig {
                  reads it"
             );
         }
+        if shadow_rate == 0.0 {
+            if a.has("shadow-referee") {
+                bail!("--shadow-referee needs --shadow-rate (shadow scoring is off)");
+            }
+            if a.get_f64("shadow-margin").is_some() {
+                bail!("--shadow-margin needs --shadow-rate (shadow scoring is off)");
+            }
+        }
+        if !a.has("speculate") && a.get_f64("speculate-target").is_some() {
+            bail!("--speculate-target needs --speculate (speculation is off by default)");
+        }
+        let speculate_target = a.get_f64("speculate-target").unwrap_or(0.9);
+        if !(0.0..=1.0).contains(&speculate_target) || speculate_target == 0.0 {
+            bail!("--speculate-target must be in (0, 1], got {speculate_target}");
+        }
         let cache_touch = a.get_usize("cache-touch").unwrap_or(1);
         if cache_touch == 0 {
             bail!("--cache-touch must be >= 1 (1 = exact LRU)");
@@ -336,11 +376,17 @@ impl ServiceConfig {
             shadow: (shadow_rate > 0.0).then(|| ShadowConfig {
                 rate: shadow_rate,
                 budget_usd: a.get_f64("shadow-budget"),
+                referee: a.has("shadow-referee"),
+                margin: a.get_f64("shadow-margin").map(|m| m as f32),
                 ..Default::default()
             }),
             health,
             pipeline,
             router,
+            speculate: a.has("speculate").then(|| SpeculateConfig {
+                target: speculate_target,
+                ..Default::default()
+            }),
         })
     }
 }
@@ -481,6 +527,38 @@ mod tests {
         // not silent no-ops.
         assert!(ServiceConfig::from_args(&parse("--router-grid 2")).is_err());
         assert!(ServiceConfig::from_args(&parse("--probe-model gpt_j")).is_err());
+    }
+
+    #[test]
+    fn speculate_flags_parse_and_demand_the_master_switch() {
+        let cfg = ServiceConfig::from_args(&parse("")).unwrap();
+        assert!(cfg.speculate.is_none(), "speculation must be off by default");
+        let cfg = ServiceConfig::from_args(&parse("--speculate")).unwrap();
+        assert_eq!(cfg.speculate.unwrap().target, 0.9);
+        let cfg =
+            ServiceConfig::from_args(&parse("--speculate --speculate-target 0.8")).unwrap();
+        assert_eq!(cfg.speculate.unwrap().target, 0.8);
+        // knob without the master switch is a configuration error
+        assert!(ServiceConfig::from_args(&parse("--speculate-target 0.8")).is_err());
+        assert!(
+            ServiceConfig::from_args(&parse("--speculate --speculate-target 1.5")).is_err()
+        );
+        assert!(
+            ServiceConfig::from_args(&parse("--speculate --speculate-target 0")).is_err()
+        );
+    }
+
+    #[test]
+    fn shadow_referee_and_margin_demand_shadow() {
+        assert!(ServiceConfig::from_args(&parse("--shadow-referee")).is_err());
+        assert!(ServiceConfig::from_args(&parse("--shadow-margin 0.05")).is_err());
+        let cfg = ServiceConfig::from_args(&parse(
+            "--shadow-rate 0.2 --reoptimize-every 50 --shadow-referee --shadow-margin 0.05",
+        ))
+        .unwrap();
+        let sh = cfg.shadow.unwrap();
+        assert!(sh.referee);
+        assert_eq!(sh.margin, Some(0.05));
     }
 
     #[test]

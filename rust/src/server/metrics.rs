@@ -366,6 +366,16 @@ pub struct ServiceMetrics {
     stopped_at_overflow: AtomicU64,
     /// Failed answers (engine or scorer errors).
     pub errors: AtomicU64,
+    /// Queries answered by the speculative agreement stage (calibrated
+    /// accept — the cascade never ran; see `strategies::speculate`).
+    pub speculative_accepts: AtomicU64,
+    /// Queries the speculative stage probed but escalated to the cascade
+    /// (disagreement, or scores under the calibrated bar).
+    pub speculative_escalations: AtomicU64,
+    /// Estimated spend avoided by speculative accepts, vs escalating the
+    /// query to the plan's terminal model (nano-USD; an estimate — the
+    /// counterfactual cascade was never run).
+    pub speculative_saved_spend_nano_usd: AtomicU64,
     /// End-to-end answer latency histogram.
     pub latency: Histogram,
     /// Plans published over this service's lifetime (initial plan = 0).
@@ -405,6 +415,9 @@ impl ServiceMetrics {
             stopped_at: Default::default(),
             stopped_at_overflow: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            speculative_accepts: AtomicU64::new(0),
+            speculative_escalations: AtomicU64::new(0),
+            speculative_saved_spend_nano_usd: AtomicU64::new(0),
             latency: Histogram::default(),
             plan_swaps: AtomicU64::new(0),
             per_model: (0..n_models).map(|_| ModelWindow::default()).collect(),
@@ -445,6 +458,14 @@ impl ServiceMetrics {
                 .collect(),
             stopped_at_overflow: self.stopped_at_overflow.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            speculative_accepts: self.speculative_accepts.load(Ordering::Relaxed),
+            speculative_escalations: self
+                .speculative_escalations
+                .load(Ordering::Relaxed),
+            speculative_saved_spend_usd: self
+                .speculative_saved_spend_nano_usd
+                .load(Ordering::Relaxed) as f64
+                / 1e9,
             plan_swaps: self.plan_swaps.load(Ordering::Relaxed),
             per_model: self.per_model.iter().map(ModelWindow::snapshot).collect(),
             window_len: self.window.len(),
@@ -475,6 +496,12 @@ pub struct MetricsSnapshot {
     pub stopped_at_overflow: u64,
     /// Failed answers.
     pub errors: u64,
+    /// Queries answered by the speculative agreement stage.
+    pub speculative_accepts: u64,
+    /// Queries the speculative stage probed but escalated to the cascade.
+    pub speculative_escalations: u64,
+    /// Estimated spend avoided by speculative accepts (USD).
+    pub speculative_saved_spend_usd: f64,
     /// Plans published over the service lifetime.
     pub plan_swaps: u64,
     /// One snapshot per marketplace model.
@@ -555,6 +582,18 @@ impl MetricsSnapshot {
             Value::Num(self.stopped_at_overflow as f64),
         );
         m.insert("errors".to_string(), Value::Num(self.errors as f64));
+        m.insert(
+            "speculative_accepts".to_string(),
+            Value::Num(self.speculative_accepts as f64),
+        );
+        m.insert(
+            "speculative_escalations".to_string(),
+            Value::Num(self.speculative_escalations as f64),
+        );
+        m.insert(
+            "speculative_saved_spend_usd".to_string(),
+            Value::Num(self.speculative_saved_spend_usd),
+        );
         m.insert("plan_swaps".to_string(), Value::Num(self.plan_swaps as f64));
         m.insert(
             "per_model".to_string(),
@@ -590,6 +629,9 @@ impl MetricsSnapshot {
                 .collect::<Result<_>>()?,
             stopped_at_overflow: num("stopped_at_overflow")? as u64,
             errors: num("errors")? as u64,
+            speculative_accepts: num("speculative_accepts")? as u64,
+            speculative_escalations: num("speculative_escalations")? as u64,
+            speculative_saved_spend_usd: num("speculative_saved_spend_usd")?,
             plan_swaps: num("plan_swaps")? as u64,
             per_model: v
                 .get("per_model")
@@ -790,6 +832,9 @@ mod tests {
             stopped_at: vec![9000, 1500, 500, 0, 0, 0, 0, 0],
             stopped_at_overflow: 3,
             errors: 1,
+            speculative_accepts: 321,
+            speculative_escalations: 79,
+            speculative_saved_spend_usd: 0.1 + 0.7,
             plan_swaps: 7,
             per_model: vec![
                 ModelWindowSnapshot {
@@ -828,6 +873,12 @@ mod tests {
         assert_eq!(back.stopped_at, snap.stopped_at);
         assert_eq!(back.stopped_at_overflow, snap.stopped_at_overflow);
         assert_eq!(back.errors, snap.errors);
+        assert_eq!(back.speculative_accepts, snap.speculative_accepts);
+        assert_eq!(back.speculative_escalations, snap.speculative_escalations);
+        assert_eq!(
+            back.speculative_saved_spend_usd.to_bits(),
+            snap.speculative_saved_spend_usd.to_bits()
+        );
         assert_eq!(back.plan_swaps, snap.plan_swaps);
         assert_eq!(back.per_model.len(), snap.per_model.len());
         for (b, s) in back.per_model.iter().zip(&snap.per_model) {

@@ -14,6 +14,7 @@
 //! line-delimited JSON) that `frugald` binds over the composed service.
 
 pub mod batcher;
+pub mod calibrate;
 pub mod config;
 pub mod health;
 pub mod metrics;

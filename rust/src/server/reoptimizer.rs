@@ -46,6 +46,7 @@ use crate::coordinator::cascade::replay;
 use crate::coordinator::optimizer::{CascadeOptimizer, OptimizerOptions};
 use crate::coordinator::responses::SplitTable;
 use crate::marketplace::CostModel;
+use crate::server::calibrate::{CalibratorBundle, SpeculateConfig};
 use crate::server::metrics::ObservationWindow;
 use crate::server::router_train::{evaluate_router, train_router, RouterTrainConfig};
 use crate::server::service::FrugalService;
@@ -133,6 +134,7 @@ pub struct Reoptimizer {
     steps: AtomicU64,
     swaps: AtomicU64,
     router_swaps: AtomicU64,
+    calibrator_swaps: AtomicU64,
 }
 
 impl Reoptimizer {
@@ -145,6 +147,7 @@ impl Reoptimizer {
             steps: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
             router_swaps: AtomicU64::new(0),
+            calibrator_swaps: AtomicU64::new(0),
         }
     }
 
@@ -166,6 +169,12 @@ impl Reoptimizer {
     /// Router models published so far by this reoptimizer's co-training.
     pub fn router_swaps(&self) -> u64 {
         self.router_swaps.load(Ordering::Relaxed)
+    }
+
+    /// Calibrator bundles published so far by this reoptimizer (the
+    /// speculative accept rule's republish cadence).
+    pub fn calibrator_swaps(&self) -> u64 {
+        self.calibrator_swaps.load(Ordering::Relaxed)
     }
 
     /// One full re-optimization pass: window → table slice → sweep →
@@ -192,6 +201,11 @@ impl Reoptimizer {
         // the plan published above, if any — `router_route_specs` reads
         // the live plan handle).
         self.router_step(&table, &tokens, &costs)?;
+        // The speculative accept rule is recalibrated from the same
+        // window and stamped with the (possibly just-published) plan
+        // version — this is how the speculate stage exits its
+        // abstain-on-stale-plan state after a swap.
+        self.calibrate_step(&table)?;
         Ok(outcome)
     }
 
@@ -318,6 +332,50 @@ impl Reoptimizer {
         )?;
         self.router_swaps.fetch_add(1, Ordering::Relaxed);
         Ok(Some(version))
+    }
+
+    /// The calibration phase of one step: re-estimate the speculative
+    /// accept rule (`P(correct | agreement)` for the probe pair, plus the
+    /// disagreement score bar) from the same window slice, and publish it
+    /// stamped with the *current* plan version. Publication is skipped
+    /// when nothing material changed — same enabled state, same plan
+    /// stamp, and an estimate inside the hysteresis band — so steady
+    /// traffic does not churn calibrator generations. No-op when
+    /// speculation is off.
+    fn calibrate_step(&self, table: &SplitTable) -> Result<Option<u64>> {
+        let Some(pair) = self.svc.speculate_pair() else { return Ok(None) };
+        let Some(cur) = self.svc.calibrator_snapshot() else { return Ok(None) };
+        let cfg = SpeculateConfig { target: cur.target, ..Default::default() };
+        let plan_version = self.svc.plan_version();
+        let version = self.svc.reserve_calibrator_version()?;
+        let bundle = CalibratorBundle::from_table(version, plan_version, pair, cfg, table)?;
+        let materially_equal = bundle.enabled == cur.enabled
+            && bundle.plan_version == cur.plan_version
+            && bundle.pair == cur.pair
+            && (bundle.calibration.p_correct_given_agree
+                - cur.calibration.p_correct_given_agree)
+                .abs()
+                <= self.cfg.hysteresis
+            && bundle.calibration.score_bar.map(f32::to_bits)
+                == cur.calibration.score_bar.map(f32::to_bits);
+        if materially_equal {
+            return Ok(None);
+        }
+        let reason = format!(
+            "recalibrated on window of {} obs: P(correct|agree) {:.4}→{:.4}, enabled {}→{}, plan v{}",
+            table.len(),
+            cur.calibration.p_correct_given_agree,
+            bundle.calibration.p_correct_given_agree,
+            cur.enabled,
+            bundle.enabled,
+            plan_version
+        );
+        if self.svc.publish_calibrator(bundle, &reason)? {
+            self.calibrator_swaps.fetch_add(1, Ordering::Relaxed);
+            Ok(Some(version))
+        } else {
+            Ok(None)
+        }
     }
 
     /// Run `step()` every `cfg.interval` on a background thread until the

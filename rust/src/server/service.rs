@@ -49,6 +49,9 @@ use crate::coordinator::scorer::Scorer;
 use crate::data::DatasetMeta;
 use crate::marketplace::CostModel;
 use crate::runtime::EngineHandle;
+use crate::server::calibrate::{
+    CalibratorBundle, CalibratorHandle, CalibratorSwapEvent, SpeculateConfig,
+};
 use crate::server::health::{HealthConfig, ModelHealth};
 use crate::server::metrics::{Observation, ServiceMetrics};
 use crate::server::shadow::{Shadow, ShadowConfig, ShadowSnapshot};
@@ -63,6 +66,7 @@ use crate::strategies::router::{
     route_plans, ProbeScorer, RouteTarget, RouterBundle, RouterConfig, RouterHandle,
     RouterModel, RouterStats, RouterSwapEvent,
 };
+use crate::strategies::speculate::{cheapest_pair, SpeculativeLanes};
 use crate::util::json::Value;
 use crate::util::sync::SnapshotCell;
 
@@ -123,6 +127,14 @@ pub struct ServiceConfig {
     /// global-plan behavior); the reoptimizer trains and publishes real
     /// weights on its cadence.
     pub router: Option<RouterConfig>,
+    /// Speculative agreement serving (`--speculate`, see
+    /// [`crate::strategies::speculate`]). `None` = the `speculate`
+    /// pipeline stage is skipped entirely. The service starts every
+    /// calibrator generation *disabled* (the stage passes every query —
+    /// exact non-speculative behavior); the reoptimizer calibrates the
+    /// accept rule from the observation window and publishes it on its
+    /// cadence.
+    pub speculate: Option<SpeculateConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -142,6 +154,7 @@ impl Default for ServiceConfig {
             pipeline: PipelineSpec::full(),
             health: None,
             router: None,
+            speculate: None,
         }
     }
 }
@@ -178,6 +191,11 @@ pub struct ServiceAnswer {
     /// exactly ONE router snapshot, the same way `plan_version` pins the
     /// plan snapshot.
     pub router_version: Option<u64>,
+    /// Which serving path produced the answer: `"cache"` (completion
+    /// cache, $0), `"speculate"` (calibrated agreement accept),
+    /// `"degraded"` (budget-cap fallback or breaker-skipped stages), or
+    /// `"cascade"` (the ordinary cascade walk).
+    pub origin: &'static str,
 }
 
 impl ServiceAnswer {
@@ -213,6 +231,7 @@ impl ServiceAnswer {
             "router_version".to_string(),
             self.router_version.map(|v| Value::Num(v as f64)).unwrap_or(Value::Null),
         );
+        m.insert("origin".to_string(), Value::Str(self.origin.to_string()));
         Value::Obj(m)
     }
 
@@ -243,6 +262,15 @@ impl ServiceAnswer {
                 .map(|s| s.as_usize().context("bad skipped stage index"))
                 .collect::<Result<_>>()?,
             router_version: v.get("router_version").as_f64().map(|x| x as u64),
+            // The origin vocabulary is closed, so the wire string maps
+            // back onto the same `&'static str` the service tagged with.
+            origin: match v.get("origin").as_str().context("answer missing `origin`")? {
+                "cache" => "cache",
+                "speculate" => "speculate",
+                "degraded" => "degraded",
+                "cascade" => "cascade",
+                other => anyhow::bail!("unknown answer origin `{other}`"),
+            },
         })
     }
 }
@@ -469,6 +497,14 @@ pub struct FrugalService {
     router: Option<Arc<RouterHandle>>,
     /// Probe model behind the router's probe feature (`cfg.router.probe_model`).
     probe: Option<Arc<ProbeScorer>>,
+    /// The two speculative probe lanes behind the `speculate` stage
+    /// (`cfg.speculate`); spawned once over the initial plan's cheapest
+    /// pair — the stage itself re-derives the current plan's pair per
+    /// query and abstains on mismatch.
+    speculate: Option<Arc<SpeculativeLanes>>,
+    /// Swappable calibrated accept rule for the speculate stage; starts
+    /// disabled, republished by the reoptimizer on its cadence.
+    calibrator: Option<Arc<CalibratorHandle>>,
     /// Latest full cost–accuracy frontier handed over by the optimizer
     /// ([`FrugalService::install_frontier`]); router rebuilds offer its
     /// points as extra routes.
@@ -538,6 +574,14 @@ impl FrugalService {
                 cfg.pipeline.describe()
             );
         }
+        if cfg.speculate.is_some() && !cfg.pipeline.stages.contains(&StageKind::Speculate) {
+            anyhow::bail!(
+                "speculative serving is configured but the pipeline spec `{}` has no \
+                 `speculate` stage — the probe lanes would spawn and never fire \
+                 (add `speculate` to the spec or drop the speculate config)",
+                cfg.pipeline.describe()
+            );
+        }
         let health = cfg
             .health
             .as_ref()
@@ -567,6 +611,29 @@ impl FrugalService {
                 let model = RouterModel::degenerate(routes.len());
                 let handle = RouterHandle::new(RouterBundle::new(0, 0, model, routes)?);
                 (Some(Arc::new(handle)), probe)
+            }
+            None => (None, None),
+        };
+        // Speculation generation 0: probe lanes over the initial plan's
+        // two cheapest distinct models, accept rule DISABLED (the stage
+        // passes every query — exact non-speculative behavior) until the
+        // reoptimizer calibrates one from the observation window.
+        let (speculate, calibrator) = match &cfg.speculate {
+            Some(sc) => {
+                let pair = match cheapest_pair(&plan, &costs) {
+                    Some(p) => p,
+                    None => anyhow::bail!(
+                        "speculative serving needs a plan with at least two distinct \
+                         models (got `{}`)",
+                        plan.describe()
+                    ),
+                };
+                let lanes =
+                    Arc::new(SpeculativeLanes::spawn(&engine, &costs, &meta, pair)?);
+                let handle = Arc::new(CalibratorHandle::new(CalibratorBundle::disabled(
+                    0, 0, pair, sc.target,
+                )));
+                (Some(lanes), Some(handle))
             }
             None => (None, None),
         };
@@ -605,6 +672,9 @@ impl FrugalService {
                 metrics: metrics.clone(),
                 router: router.clone(),
                 probe: probe.clone(),
+                speculate: speculate.clone(),
+                calibrator: calibrator.clone(),
+                health: health.clone(),
             },
         )?;
         let costs = if cfg.baseline_locks {
@@ -626,6 +696,8 @@ impl FrugalService {
             health,
             router,
             probe,
+            speculate,
+            calibrator,
             frontier_points: Mutex::new(Vec::new()),
         })
     }
@@ -846,6 +918,40 @@ impl FrugalService {
         Ok(rv)
     }
 
+    /// The speculative probe model pair (marketplace indices), when
+    /// speculation is on.
+    pub fn speculate_pair(&self) -> Option<(usize, usize)> {
+        self.speculate.as_ref().map(|l| l.pair())
+    }
+
+    /// The current calibrated accept rule, when speculation is on.
+    pub fn calibrator_snapshot(&self) -> Option<Arc<CalibratorBundle>> {
+        self.calibrator.as_ref().map(|c| c.snapshot())
+    }
+
+    /// Calibrator publishes so far (empty when speculation is off).
+    pub fn calibrator_history(&self) -> Vec<CalibratorSwapEvent> {
+        self.calibrator.as_ref().map(|c| c.history()).unwrap_or_default()
+    }
+
+    /// Reserve the version number for a calibrator bundle about to be
+    /// built (reoptimizer protocol — mirrors the router's).
+    pub fn reserve_calibrator_version(&self) -> Result<u64> {
+        match &self.calibrator {
+            Some(c) => Ok(c.reserve_version()),
+            None => anyhow::bail!("cannot calibrate: speculation is not enabled"),
+        }
+    }
+
+    /// Publish a (re)calibrated accept rule. Returns whether it was
+    /// installed (a lost version race is dropped, like plan publishes).
+    pub fn publish_calibrator(&self, bundle: CalibratorBundle, reason: &str) -> Result<bool> {
+        match &self.calibrator {
+            Some(c) => Ok(c.publish(bundle, reason)),
+            None => anyhow::bail!("cannot publish a calibrator: speculation is not enabled"),
+        }
+    }
+
     /// The current router bundle, when routing is on.
     pub fn router_snapshot(&self) -> Option<Arc<RouterBundle>> {
         self.router.as_ref().map(|r| r.snapshot())
@@ -909,6 +1015,7 @@ impl FrugalService {
             degraded: false,
             concat_group,
             route: None,
+            probes: Vec::new(),
         })?;
 
         let lat = t0.elapsed().as_micros() as u64;
@@ -920,6 +1027,15 @@ impl FrugalService {
         if a.model.is_some() {
             self.budget.record(a.cost_usd);
         }
+        // Origin precedence: the answering stage names cache/speculate
+        // directly; cascade answers split on whether they were served
+        // degraded (budget fallback or breaker-skipped stages).
+        let origin = match outcome.stage {
+            "cache" => "cache",
+            "speculate" => "speculate",
+            _ if a.degraded => "degraded",
+            _ => "cascade",
+        };
         Ok(ServiceAnswer {
             answer: a.answer,
             from_cache: outcome.stage == "cache",
@@ -931,6 +1047,7 @@ impl FrugalService {
             simulated_api_latency_ms: a.simulated_api_latency_ms,
             skipped_stages: a.skipped_stages,
             router_version: a.router_version,
+            origin,
         })
     }
 
@@ -1050,6 +1167,7 @@ mod tests {
                 simulated_api_latency_ms: 123.456789012345,
                 skipped_stages: vec![0, 3],
                 router_version: Some(17),
+                origin: "degraded",
             },
             ServiceAnswer {
                 answer: 0,
@@ -1062,6 +1180,20 @@ mod tests {
                 simulated_api_latency_ms: 0.0,
                 skipped_stages: vec![],
                 router_version: None,
+                origin: "cache",
+            },
+            ServiceAnswer {
+                answer: 2,
+                from_cache: false,
+                stopped_at: None,
+                model: Some(1),
+                cost_usd: 0.000123,
+                plan_version: 4,
+                latency_us: 88,
+                simulated_api_latency_ms: 42.5,
+                skipped_stages: vec![],
+                router_version: None,
+                origin: "speculate",
             },
         ];
         for a in &answers {
@@ -1080,6 +1212,7 @@ mod tests {
             );
             assert_eq!(back.skipped_stages, a.skipped_stages);
             assert_eq!(back.router_version, a.router_version);
+            assert_eq!(back.origin, a.origin);
             // Serialization is deterministic: a second trip is identical.
             assert_eq!(back.to_value().to_json(), json);
         }

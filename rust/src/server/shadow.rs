@@ -64,6 +64,18 @@ pub struct ShadowConfig {
     /// picks the most expensive API by pricing (the paper's testbed
     /// reference, GPT-4, is its priciest).
     pub reference: Option<usize>,
+    /// Cross-referee labelling: when on, the two priciest *non-reference*
+    /// models vote on each sampled row first — if they agree, their shared
+    /// answer becomes the pseudo-label and the reference API is never
+    /// consulted (its call is never metered); only a disagreement
+    /// escalates to the reference for the tie-break. Needs ≥ 3 models.
+    pub referee: bool,
+    /// Uncertainty-aware sampling: when set, queries whose serving
+    /// acceptance score landed within this margin of the threshold that
+    /// judged them are *always* sampled (they are exactly the rows the
+    /// calibrated accept rule and τ sweeps are least sure about), while
+    /// everything else keeps the base `rate`. `None` = pure Bernoulli tap.
+    pub margin: Option<f32>,
     /// Bounded depth of the sampled-query queue; a full queue drops new
     /// samples (counted in `dropped_queue_full`) instead of blocking the
     /// answer path.
@@ -83,6 +95,8 @@ impl Default for ShadowConfig {
             rate: 0.05,
             budget_usd: None,
             reference: None,
+            referee: false,
+            margin: None,
             queue_capacity: 256,
             chunk: 8,
             seed: 0x5AD0,
@@ -114,8 +128,21 @@ pub struct ShadowStats {
     /// fell out of the labelled stream. Under fault injection this is the
     /// first counter that moves.
     pub dropped_rows: AtomicU64,
+    /// Samples forced in because the serving score was within the
+    /// configured margin of its threshold (uncertainty-aware tap; 0 when
+    /// `ShadowConfig::margin` is off).
+    pub sampled_near_tau: AtomicU64,
+    /// Referee-vote rows labelled by agreement — the reference API was
+    /// never consulted (0 when `ShadowConfig::referee` is off).
+    pub referee_agreements: AtomicU64,
+    /// Referee-vote rows escalated to the reference for the tie-break
+    /// (disagreement, or a referee call failed).
+    pub referee_escalations: AtomicU64,
     /// Metered shadow spend (nano-USD; all K model calls of each row).
     pub spend_nano_usd: AtomicU64,
+    /// The reference model's share of `spend_nano_usd` — the spend the
+    /// referee vote exists to avoid.
+    pub reference_spend_nano_usd: AtomicU64,
     budget_exhausted: AtomicBool,
 }
 
@@ -123,6 +150,11 @@ impl ShadowStats {
     /// Metered shadow spend so far (USD).
     pub fn spend_usd(&self) -> f64 {
         self.spend_nano_usd.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// The reference model's share of the metered spend so far (USD).
+    pub fn reference_spend_usd(&self) -> f64 {
+        self.reference_spend_nano_usd.load(Ordering::Relaxed) as f64 / 1e9
     }
 
     /// Whether the spend cap has been reached (sampling stopped).
@@ -140,7 +172,11 @@ impl ShadowStats {
             completed: self.completed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             dropped_rows: self.dropped_rows.load(Ordering::Relaxed),
+            sampled_near_tau: self.sampled_near_tau.load(Ordering::Relaxed),
+            referee_agreements: self.referee_agreements.load(Ordering::Relaxed),
+            referee_escalations: self.referee_escalations.load(Ordering::Relaxed),
             spend_usd: self.spend_usd(),
+            reference_spend_usd: self.reference_spend_usd(),
             budget_exhausted: self.budget_exhausted(),
         }
     }
@@ -164,8 +200,16 @@ pub struct ShadowSnapshot {
     /// Rows started but never pushed into the window (mid-row failure or
     /// window rejection) — see [`ShadowStats::dropped_rows`].
     pub dropped_rows: u64,
+    /// Samples forced in by the near-threshold margin rule.
+    pub sampled_near_tau: u64,
+    /// Referee-vote rows labelled without consulting the reference.
+    pub referee_agreements: u64,
+    /// Referee-vote rows escalated to the reference tie-break.
+    pub referee_escalations: u64,
     /// Metered shadow spend (USD).
     pub spend_usd: f64,
+    /// The reference model's share of `spend_usd`.
+    pub reference_spend_usd: f64,
     /// Whether the spend cap has been reached.
     pub budget_exhausted: bool,
 }
@@ -184,7 +228,23 @@ impl ShadowSnapshot {
         m.insert("completed".to_string(), Value::Num(self.completed as f64));
         m.insert("errors".to_string(), Value::Num(self.errors as f64));
         m.insert("dropped_rows".to_string(), Value::Num(self.dropped_rows as f64));
+        m.insert(
+            "sampled_near_tau".to_string(),
+            Value::Num(self.sampled_near_tau as f64),
+        );
+        m.insert(
+            "referee_agreements".to_string(),
+            Value::Num(self.referee_agreements as f64),
+        );
+        m.insert(
+            "referee_escalations".to_string(),
+            Value::Num(self.referee_escalations as f64),
+        );
         m.insert("spend_usd".to_string(), Value::Num(self.spend_usd));
+        m.insert(
+            "reference_spend_usd".to_string(),
+            Value::Num(self.reference_spend_usd),
+        );
         m.insert(
             "budget_exhausted".to_string(),
             Value::Bool(self.budget_exhausted),
@@ -209,6 +269,23 @@ pub fn default_reference(costs: &CostModel) -> usize {
         }
     }
     best
+}
+
+/// The cross-referee voters: the two priciest models *excluding* the
+/// reference, ranked at the same nominal request shape as
+/// [`default_reference`] (price is the stand-in for strength throughout
+/// the marketplace — the paper's testbed prices its strongest API
+/// highest). `None` when fewer than two non-reference models exist.
+pub fn referee_pair(costs: &CostModel, reference: usize) -> Option<(usize, usize)> {
+    let mut ranked: Vec<usize> = (0..costs.n_models()).filter(|&m| m != reference).collect();
+    ranked.sort_by(|&a, &b| {
+        let (ca, cb) = (costs.pricing[a].cost(256, 2), costs.pricing[b].cost(256, 2));
+        cb.partial_cmp(&ca).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    match ranked[..] {
+        [a, b, ..] => Some((a, b)),
+        _ => None,
+    }
 }
 
 /// Lock-free Bernoulli sampler for the answer-path tap: one relaxed
@@ -253,6 +330,7 @@ impl Sampler {
 pub struct Shadow {
     tx: Option<mpsc::SyncSender<Vec<i32>>>,
     sampler: Sampler,
+    margin: Option<f32>,
     stats: Arc<ShadowStats>,
     /// Shutdown flag: mpsc receivers keep yielding *buffered* rows after
     /// every sender is dropped, so closing the queue alone would make
@@ -285,6 +363,22 @@ impl Shadow {
                 bail!("shadow budget {b} is not finite and positive");
             }
         }
+        if let Some(m) = cfg.margin {
+            if !(m.is_finite() && m >= 0.0) {
+                bail!("shadow margin {m} is not finite and non-negative");
+            }
+        }
+        let referee = if cfg.referee {
+            match referee_pair(&costs, reference) {
+                Some(pair) => Some(pair),
+                None => bail!(
+                    "shadow referee vote needs at least two non-reference models \
+                     (marketplace has {k}, reference {reference})"
+                ),
+            }
+        } else {
+            None
+        };
         let stats = Arc::new(ShadowStats::default());
         let (tx, rx) = mpsc::sync_channel::<Vec<i32>>(cfg.queue_capacity.max(1));
 
@@ -339,6 +433,7 @@ impl Shadow {
                         &scorer,
                         &costs,
                         reference,
+                        referee,
                         &metrics,
                         &stats_in,
                     );
@@ -354,6 +449,7 @@ impl Shadow {
         Ok(Shadow {
             tx: Some(tx),
             sampler: Sampler::new(cfg.rate, cfg.seed),
+            margin: cfg.margin,
             stats,
             stop,
             join: Some(join),
@@ -365,10 +461,33 @@ impl Shadow {
     /// op, a full queue drops the sample, and an exhausted budget stops
     /// sampling entirely.
     pub fn offer(&self, tokens: &[i32]) {
+        self.offer_inner(tokens, false);
+    }
+
+    /// [`Shadow::offer`] with the uncertainty signal from the answer path:
+    /// `near_tau` marks a query whose serving score fell within
+    /// [`ShadowConfig::margin`] of the threshold that judged it. Such
+    /// queries bypass the Bernoulli sampler entirely (they are the rows
+    /// the calibrated accept rule learns the most from); everything else
+    /// keeps the base rate. The budget cap still binds both.
+    pub fn offer_scored(&self, tokens: &[i32], near_tau: bool) {
+        self.offer_inner(tokens, near_tau);
+    }
+
+    /// The sampling margin this tap was configured with (`None` = pure
+    /// Bernoulli); the pipeline's shadow stage keys its tap placement on
+    /// this.
+    pub fn margin(&self) -> Option<f32> {
+        self.margin
+    }
+
+    fn offer_inner(&self, tokens: &[i32], forced: bool) {
         if self.stats.budget_exhausted() {
             return;
         }
-        if !self.sampler.pick() {
+        if forced {
+            self.stats.sampled_near_tau.fetch_add(1, Ordering::Relaxed);
+        } else if !self.sampler.pick() {
             return;
         }
         self.stats.sampled.fetch_add(1, Ordering::Relaxed);
@@ -417,6 +536,13 @@ impl Drop for Shadow {
 /// completed observation rows. A row any model or scorer call fails on is
 /// counted as an error and skipped — partial rows would corrupt the
 /// window's "every model answered" invariant.
+///
+/// With `referee` set, the reference model is *deferred*: the two referee
+/// models vote first, an agreement becomes the pseudo-label directly
+/// (`preds[reference]` is synthesized, no reference call, no reference
+/// spend), and only disagreements (or a failed referee call) escalate one
+/// reference call for the tie-break. The label assignment below is
+/// untouched either way — `preds[reference]` IS the vote outcome.
 #[allow(clippy::too_many_arguments)]
 fn shadow_chunk(
     rows: &[Vec<i32>],
@@ -425,6 +551,7 @@ fn shadow_chunk(
     scorer: &Scorer,
     costs: &CostModel,
     reference: usize,
+    referee: Option<(usize, usize)>,
     metrics: &ServiceMetrics,
     stats: &ShadowStats,
 ) {
@@ -432,10 +559,16 @@ fn shadow_chunk(
     let n = rows.len();
 
     // Fan out: submit every row to every model before collecting anything,
-    // so the per-model batchers see the whole chunk at once.
+    // so the per-model batchers see the whole chunk at once. In referee
+    // mode the reference is left out of the fan-out — its (expensive)
+    // call is only paid for rows the vote cannot settle.
     let mut pending = Vec::with_capacity(k);
-    for h in models {
-        let per: Vec<_> = rows.iter().map(|row| h.submit_async(row.clone()).ok()).collect();
+    for (m, h) in models.iter().enumerate() {
+        let per: Vec<_> = if referee.is_some() && m == reference {
+            (0..n).map(|_| None).collect()
+        } else {
+            rows.iter().map(|row| h.submit_async(row.clone()).ok()).collect()
+        };
         pending.push(per);
     }
     let mut preds: Vec<Vec<Option<u32>>> = vec![vec![None; n]; k];
@@ -447,20 +580,62 @@ fn shadow_chunk(
                 .map(|logits| argmax(&logits) as u32);
         }
     }
-    let valid: Vec<bool> = (0..n).map(|r| (0..k).all(|m| preds[m][r].is_some())).collect();
 
-    // Meter the spend of every model call that produced an answer.
+    // Meter the spend of every model call that produced an answer (all of
+    // these were real engine calls — the deferred reference column is
+    // still all-None here).
     let toks: Vec<u32> = rows.iter().map(|r| prompt::input_tokens(r)).collect();
     let mut chunk_spend = 0.0;
+    let mut reference_spend = 0.0;
     for r in 0..n {
         for (m, p) in preds.iter().enumerate() {
             if let Some(pred) = p[r] {
-                chunk_spend += costs.call_cost(m, toks[r], pred);
+                let c = costs.call_cost(m, toks[r], pred);
+                chunk_spend += c;
+                if m == reference {
+                    reference_spend += c;
+                }
+            }
+        }
+    }
+
+    // The referee vote: agreement synthesizes the reference column (the
+    // agreed answer becomes the pseudo-label for free); anything else
+    // escalates one real reference call.
+    if let Some((ra, rb)) = referee {
+        let mut escalated: Vec<(usize, mpsc::Receiver<Result<Vec<f32>>>)> = Vec::new();
+        for r in 0..n {
+            match (preds[ra][r], preds[rb][r]) {
+                (Some(a), Some(b)) if a == b => {
+                    preds[reference][r] = Some(a);
+                    stats.referee_agreements.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {
+                    stats.referee_escalations.fetch_add(1, Ordering::Relaxed);
+                    if let Ok(rx) = models[reference].submit_async(rows[r].clone()) {
+                        escalated.push((r, rx));
+                    }
+                }
+            }
+        }
+        for (r, rx) in escalated {
+            preds[reference][r] = rx
+                .recv()
+                .ok()
+                .and_then(|res| res.ok())
+                .map(|logits| argmax(&logits) as u32);
+            if let Some(pred) = preds[reference][r] {
+                let c = costs.call_cost(reference, toks[r], pred);
+                chunk_spend += c;
+                reference_spend += c;
             }
         }
     }
     let nano = (chunk_spend * 1e9).round().max(0.0) as u64;
     stats.spend_nano_usd.fetch_add(nano, Ordering::Relaxed);
+    let ref_nano = (reference_spend * 1e9).round().max(0.0) as u64;
+    stats.reference_spend_nano_usd.fetch_add(ref_nano, Ordering::Relaxed);
+    let valid: Vec<bool> = (0..n).map(|r| (0..k).all(|m| preds[m][r].is_some())).collect();
 
     // Score every (row, answer) pair through the scorer batcher.
     let mut score_rx = Vec::with_capacity(k);
@@ -745,7 +920,171 @@ mod tests {
         assert_eq!(metrics.window.len(), 0);
         // the JSON snapshot carries the counter for `report swaps`
         let v = snap.to_value();
-        assert_eq!(v.get("dropped_rows").and_then(|x| x.as_f64()), Some(8.0));
+        assert_eq!(v.get("dropped_rows").as_f64(), Some(8.0));
+    }
+
+    #[test]
+    fn referee_pair_is_priciest_non_reference_models() {
+        // prices 2 / 10 / 30; reference 2 → referees are 1 then 0.
+        assert_eq!(referee_pair(&sim_costs(), 2), Some((1, 0)));
+        // reference mid-pack: the priciest and cheapest remain.
+        assert_eq!(referee_pair(&sim_costs(), 1), Some((2, 0)));
+        // two models leave only one non-reference candidate.
+        let two = CostModel {
+            model_names: vec!["a".into(), "b".into()],
+            pricing: vec![Pricing::new(2.0, 2.0, 0.0), Pricing::new(30.0, 60.0, 0.0)],
+            latency: vec![LatencyModel { base_ms: 1.0, per_1k_tokens_ms: 1.0 }; 2],
+            ..sim_costs()
+        };
+        assert_eq!(referee_pair(&two, 1), None);
+    }
+
+    /// Agreement path: both referees answer the truth, so every row is
+    /// labelled by the vote and the reference API — wired to *fail* here —
+    /// is provably never consulted and never billed.
+    #[test]
+    fn referee_agreement_labels_without_reference_spend() {
+        let engine = EngineHandle::simulated(move |_ds, model, rows| {
+            rows.iter()
+                .map(|r| {
+                    let truth = r[1].rem_euclid(4) as u32;
+                    match model {
+                        "scorer" => Ok(vec![4.0f32]),
+                        "api_2" => anyhow::bail!("reference must not be consulted"),
+                        _ => {
+                            let mut logits = vec![0.0f32; 4];
+                            logits[truth as usize] = 1.0;
+                            Ok(logits)
+                        }
+                    }
+                })
+                .collect()
+        });
+        let metrics = Arc::new(ServiceMetrics::with_models(K, 64));
+        let shadow = Shadow::spawn(
+            engine,
+            sim_costs(),
+            sim_meta(),
+            metrics.clone(),
+            ShadowConfig {
+                rate: 1.0,
+                reference: Some(2),
+                referee: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for j in 0..16 {
+            shadow.offer(&query_row(j));
+        }
+        assert!(
+            wait_until(5_000, || metrics.window.len() >= 16),
+            "window never filled: {:?}",
+            shadow.snapshot()
+        );
+        let snap = shadow.snapshot();
+        assert_eq!(snap.referee_agreements, 16);
+        assert_eq!(snap.referee_escalations, 0);
+        assert_eq!(snap.completed, 16);
+        assert_eq!(
+            snap.reference_spend_usd, 0.0,
+            "an agreed vote must not bill the reference"
+        );
+        assert!(snap.spend_usd > 0.0, "the referees themselves are metered");
+        // The synthesized reference column agrees with the label by
+        // construction, and both referees match it too.
+        let (table, _) = metrics
+            .window
+            .snapshot_table("sim", &["api_0".into(), "api_1".into(), "api_2".into()])
+            .unwrap();
+        for m in 0..K {
+            assert_eq!(table.accuracy(m), 1.0, "model {m}");
+        }
+    }
+
+    /// Disagreement path: the referees never agree (api_1 is always
+    /// wrong), so every row escalates to the reference tie-break — the
+    /// labels are exactly the single-reference labels, at full reference
+    /// spend.
+    #[test]
+    fn referee_disagreement_escalates_to_reference_tie_break() {
+        let costs = sim_costs();
+        let metrics = Arc::new(ServiceMetrics::with_models(K, 64));
+        let shadow = Shadow::spawn(
+            sim_engine(),
+            costs.clone(),
+            sim_meta(),
+            metrics.clone(),
+            ShadowConfig {
+                rate: 1.0,
+                reference: Some(2),
+                referee: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for j in 0..16 {
+            shadow.offer(&query_row(j));
+        }
+        assert!(
+            wait_until(5_000, || metrics.window.len() >= 16),
+            "window never filled: {:?}",
+            shadow.snapshot()
+        );
+        let snap = shadow.snapshot();
+        assert_eq!(snap.referee_agreements, 0);
+        assert_eq!(snap.referee_escalations, 16);
+        assert_eq!(snap.completed, 16);
+        // every row paid one reference call
+        let per_ref: f64 = costs.call_cost(2, 6, 0) * 16.0;
+        assert!((snap.reference_spend_usd - per_ref).abs() < 1e-9);
+        // the tie-break reproduces the single-reference labels exactly
+        let (table, _) = metrics
+            .window
+            .snapshot_table("sim", &["api_0".into(), "api_1".into(), "api_2".into()])
+            .unwrap();
+        assert_eq!(table.accuracy(0), 1.0);
+        assert_eq!(table.accuracy(1), 0.0);
+        assert_eq!(table.accuracy(2), 1.0);
+    }
+
+    /// Uncertainty-aware sampling: at the same base rate (= the same
+    /// budget posture), near-τ offers are all admitted while far offers
+    /// are thinned by the Bernoulli sampler — so the near-τ share of the
+    /// sampled set strictly exceeds its share of the offered traffic.
+    #[test]
+    fn near_tau_offers_are_over_represented_at_equal_budget() {
+        let metrics = Arc::new(ServiceMetrics::with_models(K, 256));
+        let shadow = Shadow::spawn(
+            sim_engine(),
+            sim_costs(),
+            sim_meta(),
+            metrics,
+            ShadowConfig {
+                rate: 0.25,
+                reference: Some(2),
+                margin: Some(0.05),
+                queue_capacity: 512,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // 20% of offered traffic is near-τ, 80% is far.
+        for j in 0..100 {
+            shadow.offer_scored(&query_row(j), j % 5 == 0);
+        }
+        let snap = shadow.snapshot();
+        assert_eq!(snap.sampled_near_tau, 20, "every near-τ offer is admitted");
+        let far_sampled = snap.sampled - snap.sampled_near_tau;
+        assert!(
+            (8..=36).contains(&far_sampled),
+            "far offers must be thinned at the base rate, got {far_sampled}/80"
+        );
+        let near_share_sampled = snap.sampled_near_tau as f64 / snap.sampled as f64;
+        assert!(
+            near_share_sampled > 0.2,
+            "near-τ share of samples {near_share_sampled} must exceed its 0.2 traffic share"
+        );
     }
 
     #[test]
@@ -765,6 +1104,26 @@ mod tests {
         assert!(
             mk(ShadowConfig { budget_usd: Some(0.0), ..Default::default() }).is_err()
         );
+        assert!(mk(ShadowConfig { margin: Some(-0.1), ..Default::default() }).is_err());
+        assert!(
+            mk(ShadowConfig { margin: Some(f32::NAN), ..Default::default() }).is_err()
+        );
         assert!(mk(ShadowConfig { rate: 1.0, ..Default::default() }).is_ok());
+        assert!(mk(ShadowConfig { referee: true, ..Default::default() }).is_ok());
+        // a 2-model marketplace cannot seat two non-reference referees
+        let two = CostModel {
+            model_names: vec!["a".into(), "b".into()],
+            pricing: vec![Pricing::new(2.0, 2.0, 0.0), Pricing::new(30.0, 60.0, 0.0)],
+            latency: vec![LatencyModel { base_ms: 1.0, per_1k_tokens_ms: 1.0 }; 2],
+            ..sim_costs()
+        };
+        assert!(Shadow::spawn(
+            sim_engine(),
+            two,
+            sim_meta(),
+            Arc::new(ServiceMetrics::with_models(2, 8)),
+            ShadowConfig { referee: true, ..Default::default() },
+        )
+        .is_err());
     }
 }

@@ -9,6 +9,10 @@
 //! * [`router`] — **per-query contextual routing**: a learned meta-router
 //!   that picks a frontier point or skips a cascade prefix per query
 //!   (FORC-style, see PAPERS.md) instead of serving one global (L, τ).
+//! * [`speculate`] — **speculative agreement serving**: fire the plan's
+//!   two cheapest models concurrently and accept on calibrated agreement
+//!   (SMART-style guarantee, see PAPERS.md), escalating to the cascade
+//!   with the probe results attached so no stage is billed twice.
 //!
 //! All three compose with the cascade (paper "Compositions") through the
 //! [`pipeline`] module: each strategy is a first-class [`pipeline::Strategy`]
@@ -22,3 +26,4 @@ pub mod concat;
 pub mod pipeline;
 pub mod prompt;
 pub mod router;
+pub mod speculate;

@@ -31,8 +31,10 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::coordinator::budget::{Admission, BudgetTracker};
-use crate::coordinator::cascade::CascadePlan;
+use crate::coordinator::cascade::{CascadePlan, StageSeed};
 use crate::data::{prompt, DatasetMeta};
+use crate::server::calibrate::CalibratorHandle;
+use crate::server::health::ModelHealth;
 use crate::server::metrics::ServiceMetrics;
 use crate::server::service::PlanBundle;
 use crate::server::shadow::Shadow;
@@ -40,6 +42,7 @@ use crate::strategies::cache::{CachedAnswer, ShardedCache};
 use crate::strategies::concat;
 use crate::strategies::prompt::PromptPolicy;
 use crate::strategies::router::{ProbeScorer, RouteDecision, RouterHandle, RouterStage};
+use crate::strategies::speculate::{SpeculativeLanes, SpeculativeStage};
 use crate::util::json::Value;
 
 /// Everything a stage may read (and the two fields it may flag) about the
@@ -72,6 +75,13 @@ pub struct QueryCtx<'a> {
     /// cascade instead of the bundle default. `None` = the global plan
     /// (identical code path to no router at all).
     pub route: Option<RouteDecision>,
+    /// Set by the `speculate` stage when it probed but declined to
+    /// accept: the already-invoked, already-billed probe results. The
+    /// cascade executor consumes matching seeds instead of re-invoking
+    /// those stages, and bills unconsumed ones onto the answer (the probe
+    /// call was real spend either way). Empty = no speculation happened
+    /// (identical code path to no speculate stage at all).
+    pub probes: Vec<StageSeed>,
 }
 
 /// The answer a stage produced for the query.
@@ -98,6 +108,10 @@ pub struct StageAnswer {
     /// decision shaped this answer; `None` when no router routed it (no
     /// router stage, degenerate fast path, abstention, cache hit).
     pub router_version: Option<u64>,
+    /// Whether the answer was served degraded — the budget cap's
+    /// single-stage fallback, or a cascade that skipped breaker-open
+    /// stages. Feeds the `origin` tag on the wire answer.
+    pub degraded: bool,
 }
 
 /// What a stage decided about the query.
@@ -280,6 +294,10 @@ pub enum StageKind {
     Prompt,
     /// Budget-cap degrade — flags cap exhaustion for the cascade.
     Budget,
+    /// Speculative agreement probe — fires the plan's two cheapest models
+    /// concurrently and accepts on calibrated agreement (see
+    /// [`crate::strategies::speculate`]).
+    Speculate,
     /// Learned per-query meta-router — picks a frontier point or skips a
     /// cascade prefix (see [`crate::strategies::router`]).
     Router,
@@ -295,6 +313,7 @@ impl StageKind {
             StageKind::Shadow => "shadow",
             StageKind::Prompt => "prompt",
             StageKind::Budget => "budget",
+            StageKind::Speculate => "speculate",
             StageKind::Router => "router",
             StageKind::Cascade => "cascade",
         }
@@ -307,11 +326,12 @@ impl StageKind {
             "shadow" => StageKind::Shadow,
             "prompt" => StageKind::Prompt,
             "budget" => StageKind::Budget,
+            "speculate" => StageKind::Speculate,
             "router" => StageKind::Router,
             "cascade" => StageKind::Cascade,
             other => bail!(
                 "unknown pipeline stage `{other}` \
-                 (expected cache|shadow|prompt|budget|router|cascade)"
+                 (expected cache|shadow|prompt|budget|speculate|router|cascade)"
             ),
         })
     }
@@ -335,10 +355,12 @@ impl Default for PipelineSpec {
 
 impl PipelineSpec {
     /// The full production stack: cache → shadow → prompt → budget →
-    /// router → cascade. The router slot sits after the prompt transform
-    /// (its length feature must see the tokens the cascade will bill) and
-    /// is skipped entirely when no router is configured, so the default
-    /// spec reproduces the pre-router stack exactly.
+    /// speculate → router → cascade. The speculate and router slots sit
+    /// after the prompt transform (their features and probes must see the
+    /// tokens the cascade will bill); speculate precedes router so a
+    /// calibrated accept also saves the router's probe spend. Both are
+    /// skipped entirely when unconfigured, so the default spec reproduces
+    /// the pre-speculation stack exactly.
     pub fn full() -> PipelineSpec {
         PipelineSpec {
             stages: vec![
@@ -346,6 +368,7 @@ impl PipelineSpec {
                 StageKind::Shadow,
                 StageKind::Prompt,
                 StageKind::Budget,
+                StageKind::Speculate,
                 StageKind::Router,
                 StageKind::Cascade,
             ],
@@ -442,6 +465,14 @@ pub struct StageDeps {
     /// The probe model behind the router's probe feature (`None` = the
     /// feature stays 0.0).
     pub probe: Option<Arc<ProbeScorer>>,
+    /// The two pre-spawned speculative probe lanes (`None` = speculation
+    /// off; the `speculate` stage is then skipped).
+    pub speculate: Option<Arc<SpeculativeLanes>>,
+    /// The swappable calibrated accept rule (`None` = speculation off).
+    pub calibrator: Option<Arc<CalibratorHandle>>,
+    /// The per-model circuit breakers (`None` = no health layer; the
+    /// speculate stage then treats every probe model as up).
+    pub health: Option<Arc<ModelHealth>>,
 }
 
 /// Build the composed stack a [`PipelineSpec`] describes. Stages whose
@@ -470,6 +501,16 @@ pub fn build_pipeline(spec: &PipelineSpec, deps: &StageDeps) -> Result<Pipeline>
             }
             StageKind::Budget => {
                 stages.push(Box::new(BudgetStage { budget: deps.budget.clone() }));
+            }
+            StageKind::Speculate => {
+                if let (Some(lanes), Some(calibrator)) = (&deps.speculate, &deps.calibrator) {
+                    stages.push(Box::new(SpeculativeStage {
+                        lanes: lanes.clone(),
+                        calibrator: calibrator.clone(),
+                        health: deps.health.clone(),
+                        metrics: deps.metrics.clone(),
+                    }));
+                }
             }
             StageKind::Router => {
                 if let Some(router) = &deps.router {
@@ -540,6 +581,7 @@ impl Strategy for CacheStage {
                     skipped_stages: Vec::new(),
                     simulated_api_latency_ms: 0.0,
                     router_version: None,
+                    degraded: false,
                 }))
             }
             None => Ok(Decision::Pass),
@@ -581,8 +623,33 @@ impl Strategy for ShadowStage {
     }
 
     fn on_query(&self, ctx: &mut QueryCtx) -> Result<Decision> {
-        self.shadow.offer(&ctx.tokens);
+        // With a sampling margin configured the tap moves to `on_answer`
+        // (the uncertainty signal — the serving score — does not exist
+        // yet); without one this is the legacy pre-answer tap, bitwise.
+        if self.shadow.margin().is_none() {
+            self.shadow.offer(&ctx.tokens);
+        }
         Ok(Decision::Pass)
+    }
+
+    /// Uncertainty-aware tap: a query whose measured score landed within
+    /// the margin of the global-plan threshold that judged it bypasses
+    /// the Bernoulli sampler — those rows sit exactly where the τ sweeps
+    /// and the speculative accept rule are least certain. Final-stage and
+    /// cache/speculate answers (no serving τ) keep the base rate. Offers
+    /// `ctx.original`, the same untouched row the pre-answer tap sees in
+    /// the default stack (shadow precedes the prompt transform there).
+    fn on_answer(&self, ctx: &QueryCtx, answer: &StageAnswer) {
+        let Some(margin) = self.shadow.margin() else { return };
+        let plan = ctx.bundle.plan();
+        let near = match answer.stopped_at {
+            Some(s) if s + 1 < plan.stages.len() => match plan.stages.get(s) {
+                Some(st) => (answer.score - st.threshold).abs() <= margin,
+                None => false,
+            },
+            _ => false,
+        };
+        self.shadow.offer_scored(ctx.original, near);
     }
 }
 
@@ -671,7 +738,10 @@ impl Strategy for CascadeStage {
             None => (ctx.bundle.cascade(), 0),
         };
         let executed = cascade.plan();
-        let out = cascade.answer_billed(&ctx.tokens, billed)?;
+        // Probe seeds from the speculate stage: the executor reuses a
+        // seed's already-billed answer instead of re-invoking its model
+        // (the never-re-bill contract lives in `answer_billed_seeded`).
+        let out = cascade.answer_billed_seeded(&ctx.tokens, billed, &ctx.probes)?;
 
         // `skip` keeps prefix-skip routes reporting stage indices in
         // GLOBAL plan coordinates (skip=0 — the identity — changes
@@ -707,6 +777,38 @@ impl Strategy for CascadeStage {
                 cost_usd += r.probe_cost_usd;
             }
         }
+        // Speculative probe seeds the executed cascade did NOT consume
+        // (the route skipped their stage, or the cascade stopped before
+        // reaching them) were still real marketplace calls — bill each
+        // onto the answer and attribute it to its model's window, by
+        // multiplicity against the invoked set so a consumed seed is
+        // never double-billed.
+        let mut sim_latency = out.simulated_latency_ms;
+        if !ctx.probes.is_empty() {
+            let mut invoked = out.invoked_models.clone();
+            for seed in &ctx.probes {
+                match invoked.iter().position(|&m| m == seed.model) {
+                    Some(i) => {
+                        invoked.remove(i);
+                    }
+                    None => {
+                        cost_usd += seed.cost_usd;
+                        if let Some(w) = self.metrics.model(seed.model) {
+                            w.record_invocation(seed.cost_usd);
+                        }
+                    }
+                }
+            }
+            // The probes flew concurrently with each other before the
+            // cascade ran; the escalation path pays the slower probe's
+            // round trip on top of the cascade's own.
+            let probe_ms = ctx
+                .probes
+                .iter()
+                .map(|s| s.latency_ms)
+                .fold(0.0_f64, f64::max);
+            sim_latency += probe_ms;
+        }
         Ok(Decision::Answer(StageAnswer {
             answer: out.answer,
             score: out.score,
@@ -714,8 +816,9 @@ impl Strategy for CascadeStage {
             model: Some(model),
             stopped_at: Some(out.stopped_at + skip),
             skipped_stages: out.skipped_stages.iter().map(|&s| s + skip).collect(),
-            simulated_api_latency_ms: out.simulated_latency_ms,
+            simulated_api_latency_ms: sim_latency,
             router_version: route.map(|r| r.router_version),
+            degraded: ctx.degraded || !out.skipped_stages.is_empty(),
         }))
     }
 }

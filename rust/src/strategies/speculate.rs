@@ -1,0 +1,368 @@
+//! Speculative agreement serving (the "fire-two-cheapest" stage).
+//!
+//! FrugalGPT's cascade consults models *sequentially*: the second-cheapest
+//! model only runs after the cheapest one answered and failed its
+//! threshold. This stage converts that latency chain into concurrency:
+//! it submits the plan's two cheapest models at once through their
+//! per-model [`Batcher`] lanes (`submit_async` — no new threads beyond
+//! the lanes' own workers) and accepts immediately when the calibrated
+//! accept rules fire (see `server::calibrate`): the pair agrees on the
+//! answer, or both reliability scores clear the calibrated bar. When the
+//! rules decline, the query escalates: the probe results ride along on
+//! [`QueryCtx::probes`] as [`StageSeed`]s, and the cascade executor reuses
+//! them instead of re-invoking (and re-billing) the already-answered
+//! stages.
+//!
+//! Degradation is never an error: an open circuit breaker on either probe
+//! model (`server::health`) drops speculation to a single probe (seed
+//! only, never an accept — one voice is not an agreement) or to a clean
+//! `Pass`; a probe lane failure is swallowed the same way, after feeding
+//! the breaker. With acceptance disabled (generation-0 calibration, or a
+//! stale plan stamp) the stage passes every query untouched — no probes,
+//! no spend, no context mutation — so the speculative pipeline reproduces
+//! the non-speculative one bitwise (the safety identity, property-tested
+//! in `tests/properties.rs`).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::cascade::{argmax, CascadePlan, HealthView, StageSeed};
+use crate::coordinator::scorer::Scorer;
+use crate::data::DatasetMeta;
+use crate::marketplace::CostModel;
+use crate::runtime::EngineHandle;
+use crate::server::batcher::{Batcher, BatcherConfig, BatcherHandle};
+use crate::server::calibrate::CalibratorHandle;
+use crate::server::health::{BreakerState, ModelHealth};
+use crate::server::metrics::ServiceMetrics;
+use crate::strategies::concat;
+use crate::strategies::pipeline::{Decision, QueryCtx, StageAnswer, Strategy};
+
+/// Nominal input size used only to *rank* models by price when picking
+/// the probe pair (ranking, not metering — real spend is always billed at
+/// the query's actual amortized tokens).
+const PROBE_RANK_TOKENS: u32 = 256;
+
+/// The two cheapest distinct models of `plan` under `costs`, cheapest
+/// first (ties break toward the lower marketplace index). `None` when the
+/// plan has fewer than two distinct models — speculation needs a pair.
+pub fn cheapest_pair(plan: &CascadePlan, costs: &CostModel) -> Option<(usize, usize)> {
+    let mut models: Vec<usize> = Vec::new();
+    for s in plan.stages.iter() {
+        if !models.contains(&s.model) {
+            models.push(s.model);
+        }
+    }
+    if models.len() < 2 {
+        return None;
+    }
+    models.sort_by(|&a, &b| {
+        let ca = costs.call_cost(a, PROBE_RANK_TOKENS, 0);
+        let cb = costs.call_cost(b, PROBE_RANK_TOKENS, 0);
+        ca.partial_cmp(&cb)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    Some((models[0], models[1]))
+}
+
+/// One probe lane: a dedicated [`Batcher`] worker bound to one model.
+struct ProbeLane {
+    /// Keeps the worker thread alive for the service lifetime.
+    _batcher: Batcher,
+    handle: BatcherHandle,
+    model: usize,
+}
+
+/// The pair of probe lanes plus the scorer and cost meter they share —
+/// the service-owned execution half of the speculative stage (the
+/// decision half lives in the swappable `CalibratorBundle`).
+pub struct SpeculativeLanes {
+    lanes: [ProbeLane; 2],
+    scorer: Scorer,
+    costs: CostModel,
+}
+
+impl SpeculativeLanes {
+    /// Spawn both lanes against `engine` for the marketplace pair
+    /// `(cheapest, second-cheapest)`.
+    pub fn spawn(
+        engine: &EngineHandle,
+        costs: &CostModel,
+        meta: &DatasetMeta,
+        pair: (usize, usize),
+    ) -> Result<SpeculativeLanes> {
+        let mk = |m: usize| -> Result<ProbeLane> {
+            let name = costs
+                .model_names
+                .get(m)
+                .cloned()
+                .with_context(|| format!("probe model index {m} not in marketplace"))?;
+            let batcher = Batcher::spawn(
+                engine.clone(),
+                costs.dataset.clone(),
+                name,
+                BatcherConfig::default(),
+            );
+            Ok(ProbeLane { handle: batcher.handle(), _batcher: batcher, model: m })
+        };
+        Ok(SpeculativeLanes {
+            lanes: [mk(pair.0)?, mk(pair.1)?],
+            scorer: Scorer::new(engine.clone(), meta.clone()),
+            costs: costs.clone(),
+        })
+    }
+
+    /// The marketplace pair the lanes are bound to, lane order.
+    pub fn pair(&self) -> (usize, usize) {
+        (self.lanes[0].model, self.lanes[1].model)
+    }
+
+    /// Fire the lanes marked `up` concurrently and collect whatever
+    /// succeeds, lane order. Lane failures are *degradation, not errors*:
+    /// a failed submit/recv/score drops that lane's seed and records the
+    /// failure with the breaker (when a health layer exists); successes
+    /// record too, so probe traffic drives trip and recovery like any
+    /// other call.
+    pub fn fire(
+        &self,
+        tokens: &[i32],
+        billed: u32,
+        up: [bool; 2],
+        health: Option<&ModelHealth>,
+    ) -> Vec<StageSeed> {
+        // Submit everything first — the whole point is concurrency.
+        let mut pending = Vec::with_capacity(2);
+        for (lane, &fire) in self.lanes.iter().zip(&up) {
+            if !fire {
+                pending.push(None);
+                continue;
+            }
+            match lane.handle.submit_async(tokens.to_vec()) {
+                Ok(rx) => pending.push(Some(rx)),
+                Err(_) => {
+                    if let Some(h) = health {
+                        h.record(lane.model, false);
+                    }
+                    pending.push(None);
+                }
+            }
+        }
+        // Then collect.
+        let mut seeds = Vec::with_capacity(2);
+        for (lane, rx) in self.lanes.iter().zip(pending) {
+            let Some(rx) = rx else { continue };
+            let seed = rx
+                .recv()
+                .map_err(anyhow::Error::from)
+                .and_then(|r| r)
+                .and_then(|logits| {
+                    let pred = argmax(&logits) as u32;
+                    let score = self.scorer.score(tokens, pred)?;
+                    Ok(StageSeed {
+                        model: lane.model,
+                        answer: pred,
+                        score,
+                        cost_usd: self.costs.call_cost(lane.model, billed, pred),
+                        latency_ms: self.costs.latency[lane.model]
+                            .latency_ms(billed + self.costs.answer_len(pred)),
+                    })
+                });
+            match seed {
+                Ok(seed) => {
+                    if let Some(h) = health {
+                        h.record(lane.model, true);
+                    }
+                    seeds.push(seed);
+                }
+                Err(_) => {
+                    if let Some(h) = health {
+                        h.record(lane.model, false);
+                    }
+                }
+            }
+        }
+        seeds
+    }
+}
+
+/// The pipeline stage. Sits between `budget` and `router` in the full
+/// stack: an accept preempts both the router's probe spend and the
+/// cascade; an escalation leaves routing untouched and only attaches
+/// seeds.
+pub struct SpeculativeStage {
+    /// The probe lanes (service-owned, shared with nothing else).
+    pub lanes: Arc<SpeculativeLanes>,
+    /// The swappable accept-rule snapshot handle.
+    pub calibrator: Arc<CalibratorHandle>,
+    /// Circuit breakers (`None` = no health layer; both lanes always up).
+    pub health: Option<Arc<ModelHealth>>,
+    /// Service counters (`speculative_*`).
+    pub metrics: Arc<ServiceMetrics>,
+}
+
+impl SpeculativeStage {
+    /// Whether `m` may be probed: anything but an open breaker. This is a
+    /// pure read ([`ModelHealth::state`]) — speculation must not tick
+    /// cooldowns or claim half-open probe slots; the cascade's own
+    /// `admit` calls drive those.
+    fn model_up(&self, m: usize) -> bool {
+        match &self.health {
+            Some(h) => h.state(m) != BreakerState::Open,
+            None => true,
+        }
+    }
+}
+
+impl Strategy for SpeculativeStage {
+    fn name(&self) -> &'static str {
+        "speculate"
+    }
+
+    fn on_query(&self, ctx: &mut QueryCtx) -> Result<Decision> {
+        let bundle = self.calibrator.snapshot();
+        // Safety identity: with no accept rule live there is nothing an
+        // escalation could buy either — pass with zero side effects so
+        // the pipeline stays bitwise identical to the non-speculative one.
+        if !bundle.accepts_anything() {
+            return Ok(Decision::Pass);
+        }
+        // Abstain-on-stale-plan: the rules were calibrated against a plan
+        // this query is not being served under.
+        if bundle.plan_version != ctx.bundle.version() {
+            return Ok(Decision::Pass);
+        }
+        // A republished pair that the lanes were not built for (plan
+        // swapped to different cheap models) cannot be probed.
+        if bundle.pair != self.lanes.pair() {
+            return Ok(Decision::Pass);
+        }
+        // The budget cap is a hard promise: a degraded query runs the
+        // single-stage fallback and must not pay for probes on top.
+        if ctx.degraded {
+            return Ok(Decision::Pass);
+        }
+        let pair = self.lanes.pair();
+        let up = [self.model_up(pair.0), self.model_up(pair.1)];
+        if !up[0] && !up[1] {
+            // Both probe breakers open: degrade to a clean Pass.
+            return Ok(Decision::Pass);
+        }
+        let (prompt_toks, query_toks) = concat::split_row_tokens(&ctx.tokens, ctx.meta);
+        let billed = concat::amortized_input(prompt_toks, query_toks, ctx.concat_group);
+        let seeds = self.lanes.fire(&ctx.tokens, billed, up, self.health.as_deref());
+        if seeds.len() == 2 {
+            if let Some((answer, score, lane)) = bundle.accept(
+                seeds[0].answer,
+                seeds[0].score,
+                seeds[1].answer,
+                seeds[1].score,
+            ) {
+                let cost_usd: f64 = seeds.iter().map(|s| s.cost_usd).sum();
+                // Concurrent fire: the pair's wall-clock is the slower
+                // probe, not the sum.
+                let latency_ms = seeds.iter().fold(0.0f64, |a, s| a.max(s.latency_ms));
+                self.metrics.speculative_accepts.fetch_add(1, Ordering::Relaxed);
+                // Spend-avoided estimate: what the plan's terminal model
+                // would have billed for this query, less what the pair
+                // cost. An estimate (the cascade might have stopped
+                // earlier), surfaced as such in `report metrics`.
+                let terminal = ctx.bundle.cascade().plan().stages.last().map(|s| s.model);
+                if let Some(t) = terminal {
+                    let saved =
+                        (self.lanes.costs.call_cost(t, billed, answer) - cost_usd).max(0.0);
+                    self.metrics
+                        .speculative_saved_spend_nano_usd
+                        .fetch_add((saved * 1e9).round().max(0.0) as u64, Ordering::Relaxed);
+                }
+                return Ok(Decision::Answer(StageAnswer {
+                    answer,
+                    score,
+                    cost_usd,
+                    model: Some(seeds[lane].model),
+                    stopped_at: None,
+                    skipped_stages: Vec::new(),
+                    simulated_api_latency_ms: latency_ms,
+                    router_version: None,
+                    degraded: false,
+                }));
+            }
+        }
+        if seeds.is_empty() {
+            // Every fired lane failed — degrade to a clean Pass (the
+            // breaker heard about it; the cascade will retry on its own
+            // terms).
+            return Ok(Decision::Pass);
+        }
+        // Escalate: the cascade consumes the seeds instead of re-billing
+        // those stages (single-probe degradation lands here too — one
+        // voice is not an agreement, but its answer is still paid for).
+        self.metrics.speculative_escalations.fetch_add(1, Ordering::Relaxed);
+        ctx.probes = seeds;
+        Ok(Decision::Pass)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cascade::Stage;
+    use crate::eval::simulate::SimWorld;
+
+    #[test]
+    fn cheapest_pair_ranks_by_call_cost() {
+        let world = SimWorld::new(4, 32, 7);
+        // Sim prices are a ladder in model index: 0 and 1 are cheapest.
+        let plan = CascadePlan::new(vec![
+            Stage { model: 2, threshold: 0.5 },
+            Stage { model: 0, threshold: 0.6 },
+            Stage { model: 3, threshold: 0.0 },
+        ]);
+        assert_eq!(cheapest_pair(&plan, &world.costs), Some((0, 2)));
+        let pair_plan = CascadePlan::pair(1, 0.5, 3);
+        assert_eq!(cheapest_pair(&pair_plan, &world.costs), Some((1, 3)));
+        // fewer than two distinct models → no pair
+        assert_eq!(cheapest_pair(&CascadePlan::single(2), &world.costs), None);
+        let dup = CascadePlan::new(vec![
+            Stage { model: 1, threshold: 0.5 },
+            Stage { model: 1, threshold: 0.0 },
+        ]);
+        assert_eq!(cheapest_pair(&dup, &world.costs), None);
+    }
+
+    #[test]
+    fn lanes_fire_both_probes_and_meter_costs() {
+        let world = SimWorld::new(3, 24, 11);
+        let engine = world.engine().unwrap();
+        let lanes =
+            SpeculativeLanes::spawn(&engine, &world.costs, &world.meta, (0, 1)).unwrap();
+        assert_eq!(lanes.pair(), (0, 1));
+        let i = 3;
+        let tokens = world.row(i);
+        let billed = world.input_tokens()[i];
+        let seeds = lanes.fire(tokens, billed, [true, true], None);
+        assert_eq!(seeds.len(), 2);
+        for (lane, seed) in seeds.iter().enumerate() {
+            assert_eq!(seed.model, lane);
+            // the sim engine answers straight from the response table
+            assert_eq!(seed.answer, world.table.pred(lane, i));
+            let want = world.costs.call_cost(lane, billed, seed.answer);
+            assert_eq!(seed.cost_usd.to_bits(), want.to_bits());
+            assert!(seed.latency_ms > 0.0);
+            assert!((0.0..=1.0).contains(&seed.score));
+        }
+    }
+
+    #[test]
+    fn lanes_single_probe_mode_fires_one() {
+        let world = SimWorld::new(3, 24, 11);
+        let engine = world.engine().unwrap();
+        let lanes =
+            SpeculativeLanes::spawn(&engine, &world.costs, &world.meta, (0, 1)).unwrap();
+        let seeds = lanes.fire(world.row(0), world.input_tokens()[0], [false, true], None);
+        assert_eq!(seeds.len(), 1);
+        assert_eq!(seeds[0].model, 1);
+    }
+}

@@ -18,6 +18,7 @@ use frugalgpt::eval::simulate::{
     fault_injected_engine, ScenarioEvent, ScenarioTimeline, TimedEvent,
 };
 use frugalgpt::runtime::EngineHandle;
+use frugalgpt::server::calibrate::{CalibratorBundle, PairCalibration, SpeculateConfig};
 use frugalgpt::server::health::{BreakerState, HealthConfig};
 use frugalgpt::server::metrics::Observation;
 use frugalgpt::server::reoptimizer::{ReoptOutcome, Reoptimizer, ReoptimizerConfig};
@@ -153,6 +154,152 @@ fn rate_limit_storm_degrades_but_never_errors() {
     // Bounded retry spend: with max_retries = 1 the engine sees at most
     // 2 attempts per consult that reached the wire.
     assert!(snap.failures <= 2 * snap.calls, "retry spend exceeded its bound: {snap:?}");
+}
+
+/// Hand-publish an enabled agreement rule for the service's probe pair.
+/// The sim engine's truth-tellers always agree, so `P(correct | agree)` is
+/// exactly 1.0 with arbitrary evidence weight — publishing the bundle
+/// directly (instead of driving the reoptimizer's window) keeps the
+/// scenario single-threaded and the fault clock exact.
+fn arm_speculation(svc: &FrugalService) {
+    let pair = svc.speculate_pair().expect("speculation is configured");
+    let version = svc.reserve_calibrator_version().unwrap();
+    let installed = svc
+        .publish_calibrator(
+            CalibratorBundle {
+                version,
+                plan_version: svc.plan_version(),
+                pair,
+                target: 0.9,
+                enabled: true,
+                calibration: PairCalibration {
+                    agree_weight: 64.0,
+                    agree_correct_weight: 64.0,
+                    p_correct_given_agree: 1.0,
+                    score_bar: None,
+                    bar_weight: 0.0,
+                    p_correct_at_bar: 0.0,
+                },
+            },
+            "test: hand-calibrated agreement rule",
+        )
+        .unwrap();
+    assert!(installed, "fresh calibrator version must install");
+}
+
+/// Speculation under fire: a full 429 storm on the CHEAPEST probe model.
+/// The speculative stage degrades to single-probe mode (one voice is not
+/// an agreement — every storm query escalates), the cascade consumes the
+/// surviving probe as a seed, every answer stays Ok AND correct, and once
+/// the storm passes the breaker re-closes and two-probe accepts resume.
+/// The speculative counters reconcile exactly with the query count and
+/// the breaker snapshots.
+#[test]
+fn storm_on_probe_model_degrades_speculation_but_never_errors() {
+    const STORM_START: i32 = 20;
+    const STORM_END: i32 = 60; // exclusive
+    const QUERIES: i32 = 100;
+    let timeline = ScenarioTimeline::new(vec![TimedEvent {
+        at: STORM_START as u64,
+        event: ScenarioEvent::RateLimitStorm {
+            model: 0,
+            rate: 1.0,
+            dur: (STORM_END - STORM_START) as u64,
+        },
+    }]);
+    let costs = sim_costs();
+    let engine = fault_injected_engine(sim_engine(&[]), &costs.model_names, timeline.clone());
+    // [api_0(τ=.5) → api_1(τ=.5) → api_2]: probe pair (0, 1) — the plan's
+    // two cheapest distinct models. Every API answers the truth, so the
+    // scorer clears τ=0.5 at every stage and api_2 is never consulted.
+    let svc = FrugalService::new(
+        CascadePlan::triple(0, 0.5, 1, 0.5, 2),
+        engine,
+        costs,
+        sim_meta(),
+        ServiceConfig {
+            speculate: Some(SpeculateConfig::default()),
+            ..service_cfg()
+        },
+    )
+    .unwrap();
+    assert_eq!(svc.speculate_pair(), Some((0, 1)));
+    arm_speculation(&svc);
+
+    for j in 0..QUERIES {
+        timeline.set_now(j as u64);
+        // The acceptance bar: Ok for EVERY query — a stormed probe lane is
+        // the speculative stage's problem, never the caller's.
+        let ans = svc
+            .answer(&query_row(j))
+            .unwrap_or_else(|e| panic!("query {j} surfaced an error: {e:#}"));
+        assert_eq!(ans.answer, truth_of(j), "query {j} answered wrong");
+        if j < STORM_START {
+            // Healthy: both probes fire, agree on the truth, accept — the
+            // cascade is never consulted (stopped_at stays None).
+            assert_eq!(ans.origin, "speculate", "query {j}");
+            assert_eq!(ans.stopped_at, None);
+            assert!(ans.skipped_stages.is_empty());
+        }
+        if ((STORM_START + 1)..STORM_END).contains(&j) {
+            // Storm: the cheap probe is gone, its single surviving voice
+            // cannot accept, and the escalated cascade serves the probe's
+            // seed from stage 1 while skipping the stormed stage 0.
+            assert_eq!(ans.origin, "degraded", "query {j}");
+            assert_eq!(ans.stopped_at, Some(1), "query {j}");
+            assert!(
+                ans.skipped_stages.contains(&0),
+                "query {j} must report the stormed stage skipped: {:?}",
+                ans.skipped_stages
+            );
+        }
+        if j >= STORM_END + 15 {
+            // Well past the storm: the cascade's half-open probe re-closed
+            // the breaker and two-probe agreement accepts resumed.
+            assert_eq!(ans.origin, "speculate", "query {j}");
+        }
+    }
+
+    // Counter reconciliation: the rule was enabled and the plan never
+    // swapped, so every query either accepted or escalated.
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.queries as i32, QUERIES);
+    assert_eq!(
+        m.speculative_accepts + m.speculative_escalations,
+        QUERIES as u64,
+        "every query accepts or escalates: {m:?}"
+    );
+    // Escalations = the 40 storm queries + the post-storm queries served
+    // while api_0's breaker walked open → half-open → closed (cooldown is
+    // counted in consults: at most cooldown + 2 of them).
+    let storm = (STORM_END - STORM_START) as u64;
+    let cooldown_tail = health_cfg().cooldown + 2;
+    assert!(
+        m.speculative_escalations >= storm
+            && m.speculative_escalations <= storm + cooldown_tail,
+        "escalations must cover the storm plus breaker probation: {} not in [{}, {}]",
+        m.speculative_escalations,
+        storm,
+        storm + cooldown_tail
+    );
+    assert!(m.speculative_accepts > 0, "healthy windows must accept");
+    assert!(
+        m.speculative_saved_spend_usd > 0.0,
+        "accepted queries avoided terminal-stage spend"
+    );
+
+    let health = svc.health().expect("health layer is configured");
+    let snaps = health.snapshot();
+    // Probe lane api_0: stormed, tripped, recovered, closed again.
+    assert_eq!(snaps[0].state, BreakerState::Closed, "api_0 re-closed: {:?}", snaps[0]);
+    assert!(snaps[0].trips >= 1, "the storm must trip the probe breaker: {:?}", snaps[0]);
+    assert!(snaps[0].recoveries >= 1, "a half-open probe must re-close it: {:?}", snaps[0]);
+    // Probe lane api_1 carried the storm alone and never tripped.
+    assert_eq!(snaps[1].trips, 0, "the healthy probe lane must not trip: {:?}", snaps[1]);
+    assert!(snaps[1].calls > 0);
+    // The terminal model was never needed: speculation + seeded
+    // escalation answered everything above it.
+    assert_eq!(snaps[2].calls, 0, "terminal stage must stay cold: {:?}", snaps[2]);
 }
 
 /// ISSUE acceptance scenario 2: an outage of the TERMINAL model. The

@@ -10,6 +10,7 @@ use frugalgpt::coordinator::optimizer::{prune_pareto, CascadeOptimizer, Optimize
 use frugalgpt::coordinator::responses::synthetic_table;
 use frugalgpt::eval::simulate::SimWorld;
 use frugalgpt::marketplace::CostModel;
+use frugalgpt::server::calibrate::SpeculateConfig;
 use frugalgpt::server::service::{FrugalService, ServiceConfig};
 use frugalgpt::strategies::cache::{CachedAnswer, CompletionCache};
 use frugalgpt::strategies::concat;
@@ -773,6 +774,105 @@ fn prop_degenerate_router_reproduces_global_plan_bitwise() {
         );
         let st = with.router_stats().expect("router is on");
         assert_eq!(st.routed, 0, "zero weights must route nothing off the global plan");
+    });
+}
+
+/// §Speculate acceptance: a service with `--speculate` ON but the
+/// calibrator still at its generation-0 **disabled** bundle (what the
+/// flag serves until the reoptimizer calibrates an accept rule) is
+/// **bit-identical** to the same service with speculation OFF:
+/// answer-for-answer the accepted model, stage index, origin tag, cost
+/// bits, cache behavior, and the total metered spend all match over
+/// random tables and random multi-model frontier plans — and the
+/// speculative counters stay at exactly zero, because a disabled rule
+/// must pass *before* firing any probe. This mirrors
+/// `prop_degenerate_router_reproduces_global_plan_bitwise`: the
+/// fallback invariant that makes `--speculate` safe to ship dark.
+#[test]
+fn prop_uncalibrated_speculation_reproduces_cascade_bitwise() {
+    check("uncalibrated-speculate-bitwise", 25, |rng| {
+        let k = 3 + rng.usize_below(3);
+        let n = 48 + rng.usize_below(100);
+        let w = SimWorld::new(k, n, rng.next_u64());
+        let opt = CascadeOptimizer::new(
+            &w.table,
+            &w.costs,
+            w.input_tokens(),
+            OptimizerOptions { grid: 6, threads: Some(1), ..Default::default() },
+        )
+        .unwrap();
+        let frontier = opt.frontier();
+        // Speculation needs a probe pair: restrict to plans that name at
+        // least two distinct models.
+        let multi: Vec<_> = frontier
+            .iter()
+            .filter(|p| {
+                let mut ms: Vec<usize> = p.plan.stages.iter().map(|s| s.model).collect();
+                ms.sort_unstable();
+                ms.dedup();
+                ms.len() >= 2
+            })
+            .collect();
+        if multi.is_empty() {
+            return; // single-model world: nothing to speculate over
+        }
+        let plan = multi[rng.usize_below(multi.len())].plan.clone();
+
+        let mk = |speculate: Option<SpeculateConfig>| -> Arc<FrugalService> {
+            Arc::new(
+                FrugalService::new(
+                    plan.clone(),
+                    w.engine().unwrap(),
+                    w.costs.clone(),
+                    w.meta.clone(),
+                    ServiceConfig { speculate, ..Default::default() },
+                )
+                .unwrap(),
+            )
+        };
+        let with = mk(Some(SpeculateConfig::default()));
+        let without = mk(None);
+        let cal = with.calibrator_snapshot().expect("speculation is on");
+        assert!(
+            !cal.enabled && cal.calibration.score_bar.is_none(),
+            "the generation-0 bundle must start disabled"
+        );
+        assert!(with.speculate_pair().is_some());
+
+        // Identical stream (with repeats, so the cache tier is exercised
+        // on both sides too).
+        let stream: Vec<usize> = (0..120).map(|_| rng.usize_below(n)).collect();
+        for &i in &stream {
+            let a = with.answer(w.row(i)).unwrap();
+            let b = without.answer(w.row(i)).unwrap();
+            assert_eq!(a.answer, b.answer, "item {i}: answer diverged");
+            assert_eq!(a.model, b.model, "item {i}: accepted model diverged");
+            assert_eq!(a.stopped_at, b.stopped_at, "item {i}: stage diverged");
+            assert_eq!(a.from_cache, b.from_cache, "item {i}: cache tier diverged");
+            assert_eq!(a.origin, b.origin, "item {i}: origin tag diverged");
+            assert_eq!(
+                a.cost_usd.to_bits(),
+                b.cost_usd.to_bits(),
+                "item {i}: cost {} vs {} — not bit-identical",
+                a.cost_usd,
+                b.cost_usd
+            );
+            assert_eq!(a.plan_version, b.plan_version);
+            assert_eq!(a.skipped_stages, b.skipped_stages);
+        }
+        assert_eq!(
+            with.budget.spent_usd().to_bits(),
+            without.budget.spent_usd().to_bits(),
+            "metered spend diverged: {} vs {}",
+            with.budget.spent_usd(),
+            without.budget.spent_usd()
+        );
+        // A disabled rule passes before the probes fire: every
+        // speculative counter is exactly zero.
+        let m = with.metrics.snapshot();
+        assert_eq!(m.speculative_accepts, 0, "disabled rule must never accept");
+        assert_eq!(m.speculative_escalations, 0, "disabled rule must never escalate");
+        assert_eq!(m.speculative_saved_spend_usd, 0.0, "no probes → no savings");
     });
 }
 

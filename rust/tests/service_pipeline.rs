@@ -116,6 +116,7 @@ impl LegacyService {
                 plan_version: self.version,
                 latency_us: 0,
                 simulated_api_latency_ms: 0.0,
+                origin: "cache",
             };
         }
         let adapted = self.policy.apply(tokens, &self.meta);
@@ -145,6 +146,7 @@ impl LegacyService {
             plan_version: self.version,
             latency_us: 0,
             simulated_api_latency_ms: out.simulated_latency_ms,
+            origin: if degraded { "degraded" } else { "cascade" },
         }
     }
 }
@@ -167,6 +169,7 @@ fn assert_same_answer(i: usize, a: &ServiceAnswer, b: &ServiceAnswer) {
         b.simulated_api_latency_ms.to_bits(),
         "query {i}: simulated latency"
     );
+    assert_eq!(a.origin, b.origin, "query {i}: origin");
 }
 
 /// Acceptance: the pipeline reproduces the legacy inline path

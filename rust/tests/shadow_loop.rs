@@ -16,7 +16,7 @@ use frugalgpt::data::layout;
 use frugalgpt::runtime::EngineHandle;
 use frugalgpt::server::reoptimizer::{ReoptOutcome, Reoptimizer, ReoptimizerConfig};
 use frugalgpt::server::service::{FrugalService, ServiceConfig};
-use frugalgpt::server::shadow::ShadowConfig;
+use frugalgpt::server::shadow::{ShadowConfig, ShadowSnapshot};
 
 mod common;
 use common::{query_row, sim_costs, sim_meta};
@@ -186,4 +186,180 @@ fn shadow_fed_reoptimizer_swaps_under_drift_with_zero_offline_labels() {
         svc.swap_history().iter().all(|ev| ev.reason.contains("window")),
         "swaps were justified by window metrics"
     );
+}
+
+/// Marketplace for the referee comparison: like [`sim_engine`], but the
+/// mid model (`api_1` — the stronger referee once `api_2` is the
+/// reference) answers the truth on *even* queries and is wrong on odd
+/// ones, so the referee vote genuinely splits: pre-drift even rows agree
+/// (no reference call), everything else escalates to the tie-break.
+fn referee_sim_engine(drift: Arc<AtomicBool>) -> EngineHandle {
+    EngineHandle::simulated(move |_ds, model, rows| {
+        Ok(rows
+            .iter()
+            .map(|r| {
+                let truth = truth_of(r[1]);
+                if model == "scorer" {
+                    let ans = (r[6] - layout::LABEL_BASE) as u32;
+                    vec![if ans == truth { 4.0 } else { -4.0 }]
+                } else {
+                    let answer = match model {
+                        "api_0" => {
+                            if drift.load(Ordering::Relaxed) {
+                                (truth + 1) % CLASSES as u32
+                            } else {
+                                truth
+                            }
+                        }
+                        "api_1" => {
+                            if r[1] % 2 == 0 {
+                                truth
+                            } else {
+                                (truth + 2) % CLASSES as u32
+                            }
+                        }
+                        "api_2" => truth,
+                        other => panic!("unknown sim model {other}"),
+                    };
+                    let mut logits = vec![0.0f32; CLASSES as usize];
+                    logits[answer as usize] = 1.0;
+                    logits
+                }
+            })
+            .collect())
+    })
+}
+
+/// Wait until the shadow worker has completed (windowed) `at_least` rows.
+/// Stronger than watching the window length: completion counts never
+/// wrap, so two runs that both reach the same count have metered the
+/// same set of sampled rows — the precondition for comparing spend.
+fn wait_for_completed(svc: &FrugalService, at_least: u64) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while svc.shadow_stats().map(|s| s.completed).unwrap_or(0) < at_least
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let snap = svc.shadow_stats().expect("shadow is on");
+    assert!(
+        snap.completed >= at_least,
+        "shadow never completed {at_least} rows: {snap:?}"
+    );
+}
+
+/// One deterministic drift story for the referee comparison: 96 healthy
+/// queries (step → keep), drift flips, 128 drifted queries, one step that
+/// must swap. Both phases block until every sampled row is windowed, so
+/// two runs — referee vote on vs off — see bit-identical windows and a
+/// deterministic set of metered shadow calls.
+fn run_drift_loop(referee: bool) -> (CascadePlan, ShadowSnapshot) {
+    let drift = Arc::new(AtomicBool::new(false));
+    let cfg = ServiceConfig {
+        cache_enabled: false,
+        window_capacity: 128,
+        window_half_life: Some(24.0),
+        shadow: Some(ShadowConfig {
+            rate: 1.0,
+            reference: Some(2),
+            referee,
+            queue_capacity: 1024,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let svc = Arc::new(
+        FrugalService::new(
+            CascadePlan::single(0),
+            referee_sim_engine(drift.clone()),
+            sim_costs(),
+            sim_meta(),
+            cfg,
+        )
+        .unwrap(),
+    );
+    let reopt = Reoptimizer::new(
+        svc.clone(),
+        ReoptimizerConfig {
+            min_window: 48,
+            hysteresis: 0.05,
+            optimizer: OptimizerOptions { grid: 8, threads: Some(1), ..Default::default() },
+            ..Default::default()
+        },
+    );
+
+    // Phase 1: healthy traffic, fully windowed before the step. Starts
+    // at 100 (not 0): `query_row(0)` carries a PAD-valued body token, so
+    // its billable-token count — and the exact spend asserted below —
+    // would differ from every other row.
+    serve_batch(&svc, 100, 96);
+    wait_for_completed(&svc, 96);
+    match reopt.step().unwrap() {
+        ReoptOutcome::Kept { .. } => {}
+        other => panic!("healthy traffic must keep the cheap plan, got {other:?}"),
+    }
+
+    // Phase 2: the cheap model drifts; 128 drifted rows turn the
+    // 128-capacity window over completely, then one step must swap.
+    drift.store(true, Ordering::Relaxed);
+    serve_batch(&svc, 1_000, 128);
+    wait_for_completed(&svc, 224);
+    match reopt.step().unwrap() {
+        ReoptOutcome::Swapped { window_accuracy, .. } => {
+            assert!(window_accuracy > 0.9, "new plan must be near-perfect on the window");
+        }
+        other => panic!("a fully drifted window must swap, got {other:?}"),
+    }
+    (svc.plan(), svc.shadow_stats().expect("shadow is on"))
+}
+
+/// ISSUE acceptance: the referee-vote shadow loop reaches the **same
+/// swap decision** as the single-reference loop — bit-identical windows
+/// produce the identical plan — while metering **strictly less**
+/// reference-API spend: agreed votes label rows without ever consulting
+/// the priciest model, and the tie-break pays for exactly the rows the
+/// vote cannot settle.
+#[test]
+fn referee_vote_loop_matches_single_reference_swap_at_lower_reference_spend() {
+    let (plan_single, snap_single) = run_drift_loop(false);
+    let (plan_vote, snap_vote) = run_drift_loop(true);
+
+    // Same decision: identical windows → identical re-learned plan, and
+    // it routes to the still-correct reference-grade model.
+    assert_eq!(plan_vote, plan_single, "referee labels changed the swap decision");
+    assert_eq!(
+        plan_vote.stages.last().unwrap().model,
+        2,
+        "swapped plan must end at the still-correct model: {plan_vote:?}"
+    );
+
+    // Deterministic vote split: the 48 even healthy rows agree (api_0 and
+    // api_1 both answer the truth); every odd row and all 128 drifted
+    // rows disagree and escalate.
+    assert_eq!(snap_single.referee_agreements, 0);
+    assert_eq!(snap_single.referee_escalations, 0);
+    assert_eq!(snap_vote.referee_agreements, 48);
+    assert_eq!(snap_vote.referee_escalations, 176);
+
+    // Both loops completed the same 224 sampled rows, so the spend
+    // comparison is apples-to-apples: the vote pays the reference for
+    // exactly its escalations, the single-reference loop for every row.
+    assert_eq!(snap_single.completed, 224);
+    assert_eq!(snap_vote.completed, 224);
+    let per_ref = sim_costs().call_cost(2, 6, 0);
+    assert!(
+        (snap_single.reference_spend_usd - 224.0 * per_ref).abs() < 1e-9,
+        "single-reference loop bills the reference on every row: {snap_single:?}"
+    );
+    assert!(
+        (snap_vote.reference_spend_usd - 176.0 * per_ref).abs() < 1e-9,
+        "vote loop bills the reference only on escalations: {snap_vote:?}"
+    );
+    assert!(
+        snap_vote.reference_spend_usd < snap_single.reference_spend_usd,
+        "the referee vote must meter strictly less reference spend"
+    );
+    // ... and the total shadow spend is lower too: the referees were
+    // already being consulted in both loops.
+    assert!(snap_vote.spend_usd < snap_single.spend_usd);
 }

@@ -1,0 +1,204 @@
+//! Service-level pinning tests for the speculative agreement stage: the
+//! calibrated accept path (probes answer before the cascade), the
+//! escalation path (probe results become cascade seeds and are never
+//! re-billed), and the **accept-rule-abstains-on-stale-plan** invariant
+//! (a rule stamped for another plan version passes cleanly — no probes,
+//! no spend, no escalation count). The sim marketplace panics if the
+//! terminal model is ever consulted, so every test doubles as a
+//! terminal-stays-cold proof.
+
+use frugalgpt::coordinator::cascade::CascadePlan;
+use frugalgpt::data::layout;
+use frugalgpt::runtime::EngineHandle;
+use frugalgpt::server::calibrate::{CalibratorBundle, PairCalibration, SpeculateConfig};
+use frugalgpt::server::service::{FrugalService, ServiceConfig};
+
+mod common;
+use common::{query_row, sim_costs, sim_meta};
+
+/// Ground truth of `query_row(j)`: its first body token mod 4.
+fn truth_of(j: i32) -> u32 {
+    j.rem_euclid(4) as u32
+}
+
+/// Simulated marketplace: models in `wrong` answer `(truth + 2) % 4`,
+/// everyone else answers the truth; the scorer emits ±4 logits (so
+/// scores clear/miss a τ = 0.5 bar decisively). The terminal `api_2`
+/// *fails* — these tests all promise it is never consulted.
+fn sim_engine(wrong: &'static [usize]) -> EngineHandle {
+    EngineHandle::simulated(move |_ds, model, rows| {
+        rows.iter()
+            .map(|r| -> anyhow::Result<Vec<f32>> {
+                let truth = r[1].rem_euclid(4) as u32;
+                match model {
+                    "scorer" => {
+                        let ans = (r[6] - layout::LABEL_BASE) as u32;
+                        Ok(vec![if ans == truth { 4.0 } else { -4.0 }])
+                    }
+                    "api_2" => anyhow::bail!("the terminal model must never be consulted"),
+                    _ => {
+                        let idx: usize =
+                            model.strip_prefix("api_").unwrap().parse().unwrap();
+                        let answer =
+                            if wrong.contains(&idx) { (truth + 2) % 4 } else { truth };
+                        let mut logits = vec![0.0f32; 4];
+                        logits[answer as usize] = 1.0;
+                        Ok(logits)
+                    }
+                }
+            })
+            .collect()
+    })
+}
+
+fn speculating_service(wrong: &'static [usize]) -> FrugalService {
+    let svc = FrugalService::new(
+        CascadePlan::triple(0, 0.5, 1, 0.5, 2),
+        sim_engine(wrong),
+        sim_costs(),
+        sim_meta(),
+        ServiceConfig {
+            cache_enabled: false, // every query must reach the stage
+            speculate: Some(SpeculateConfig::default()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(svc.speculate_pair(), Some((0, 1)), "probe pair is the two cheapest");
+    svc
+}
+
+/// Publish a hand-calibrated always-on agreement rule stamped for
+/// `plan_version` (mirrors what the reoptimizer's calibrate step builds
+/// once the window supports the target).
+fn publish_rule(svc: &FrugalService, plan_version: u64) {
+    let pair = svc.speculate_pair().expect("speculation is on");
+    let version = svc.reserve_calibrator_version().unwrap();
+    let installed = svc
+        .publish_calibrator(
+            CalibratorBundle {
+                version,
+                plan_version,
+                pair,
+                target: 0.9,
+                enabled: true,
+                calibration: PairCalibration {
+                    agree_weight: 64.0,
+                    agree_correct_weight: 64.0,
+                    p_correct_given_agree: 1.0,
+                    score_bar: None,
+                    bar_weight: 0.0,
+                    p_correct_at_bar: 0.0,
+                },
+            },
+            "test: hand-calibrated agreement rule",
+        )
+        .unwrap();
+    assert!(installed, "calibrator v{version} must install");
+}
+
+/// Accept path: both probes agree, the calibrated rule fires, and the
+/// answer is served before the cascade ever runs — `origin:
+/// "speculate"`, no stage index, the pair billed exactly once, and the
+/// spend-avoided counter moving.
+#[test]
+fn calibrated_agreement_accepts_before_the_cascade() {
+    let svc = speculating_service(&[]);
+    publish_rule(&svc, svc.plan_version());
+
+    let costs = sim_costs();
+    let pair_cost = costs.call_cost(0, 6, 0) + costs.call_cost(1, 6, 0);
+    for j in 1..33 {
+        let a = svc.answer(&query_row(j)).unwrap();
+        assert_eq!(a.answer, truth_of(j), "query {j}");
+        assert_eq!(a.origin, "speculate", "query {j}");
+        assert_eq!(a.stopped_at, None, "a speculative accept is not a cascade stage");
+        assert_eq!(a.model, Some(0), "tied scores accept the cheaper lane");
+        assert!(a.skipped_stages.is_empty());
+        assert!(
+            (a.cost_usd - pair_cost).abs() < 1e-12,
+            "query {j}: the pair is billed exactly once, got {}",
+            a.cost_usd
+        );
+    }
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.queries, 32);
+    assert_eq!(m.speculative_accepts, 32);
+    assert_eq!(m.speculative_escalations, 0);
+    assert_eq!(m.cascade_invocations, 0, "accepts preempt the cascade entirely");
+    assert!(m.speculative_saved_spend_usd > 0.0, "terminal-vs-pair estimate moves");
+    assert!(
+        (svc.budget.spent_usd() - 32.0 * pair_cost).abs() < 1e-9,
+        "metered spend is the probes and nothing else"
+    );
+}
+
+/// Escalation path: the probes disagree (no score bar is calibrated), so
+/// the query falls through to the cascade — which consumes both probe
+/// results as stage seeds. The cheap seed misses τ, the mid seed clears
+/// it, and **no engine call happens at all**: the answer's cost is
+/// exactly the two probe calls, billed once.
+#[test]
+fn disagreement_escalates_with_probe_seeds_never_re_billed() {
+    let svc = speculating_service(&[0]); // cheap probe is wrong → disagreement
+    publish_rule(&svc, svc.plan_version());
+
+    let costs = sim_costs();
+    let pair_cost = costs.call_cost(0, 6, 0) + costs.call_cost(1, 6, 0);
+    for j in 1..17 {
+        let a = svc.answer(&query_row(j)).unwrap();
+        assert_eq!(a.answer, truth_of(j), "query {j}: the mid model's seed is right");
+        assert_eq!(a.origin, "cascade", "an escalation is an ordinary cascade walk");
+        assert_eq!(a.stopped_at, Some(1), "the mid seed clears τ");
+        assert_eq!(a.model, Some(1));
+        assert!(a.skipped_stages.is_empty());
+        assert!(
+            (a.cost_usd - pair_cost).abs() < 1e-12,
+            "query {j}: both consumed stages are seeded — probes billed once, got {}",
+            a.cost_usd
+        );
+    }
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.speculative_accepts, 0);
+    assert_eq!(m.speculative_escalations, 16);
+    assert_eq!(m.cascade_invocations, 16);
+    assert_eq!(m.speculative_saved_spend_usd, 0.0, "no accept → no savings claimed");
+    assert!(
+        (svc.budget.spent_usd() - 16.0 * pair_cost).abs() < 1e-9,
+        "re-billing a seed would double this"
+    );
+}
+
+/// Invariant: **accept-rule-abstains-on-stale-plan**. A rule stamped for
+/// a plan version the service is not serving must pass every query
+/// cleanly — no probes fired, no spend, and *no escalation counted* (an
+/// abstention is not an escalation). Re-stamping the same rule against
+/// the live plan turns accepts on, proving the stamp alone gated it.
+#[test]
+fn accept_rule_abstains_on_stale_plan_stamp() {
+    let svc = speculating_service(&[]);
+    publish_rule(&svc, svc.plan_version() + 7); // calibrated for some other plan
+
+    let c0 = sim_costs().call_cost(0, 6, 0);
+    for j in 1..17 {
+        let a = svc.answer(&query_row(j)).unwrap();
+        assert_eq!(a.origin, "cascade", "query {j}: a stale stamp must abstain");
+        assert_eq!(a.stopped_at, Some(0), "the ordinary cascade serves stage 0");
+        assert_eq!(a.answer, truth_of(j));
+    }
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.speculative_accepts, 0, "a stale rule never accepts");
+    assert_eq!(
+        m.speculative_escalations, 0,
+        "an abstention is a clean pass, not an escalation"
+    );
+    assert!(
+        (svc.budget.spent_usd() - 16.0 * c0).abs() < 1e-9,
+        "abstaining must not pay for probes"
+    );
+
+    publish_rule(&svc, svc.plan_version());
+    let a = svc.answer(&query_row(100)).unwrap();
+    assert_eq!(a.origin, "speculate", "a live stamp turns the same rule on");
+    assert_eq!(svc.metrics.snapshot().speculative_accepts, 1);
+}

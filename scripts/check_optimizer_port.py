@@ -42,7 +42,14 @@ Running it (``python3 scripts/check_optimizer_port.py [--quick]``):
      under random non-uniform weights the flat frontier's metrics
      replay-match and its budget queries agree with the brute-force
      reference (tolerance 1e-9 — summation order differs), and
-  4. measures speedups — wall clock at a reduced workload plus an exact
+  4. proves the referee-vote shadow labeling rule (``--shadow-referee``):
+     the python port of ``shadow::referee_pair`` (two priciest
+     non-reference models, ties to the lower index) matches a brute-force
+     selection, the vote label equals the single-reference label on every
+     escalated item (disagreement ⇒ reference tie-break, so the two loops
+     can only differ where the referees agree), and the metered reference
+     spend is strictly less whenever at least one agreement occurs, and
+  5. measures speedups — wall clock at a reduced workload plus an exact
      inner-loop-operation model at the benches/optimizer.rs workload
      (K=12, N=8000, grid=24), now including the packed-vs-byte op and
      working-set deltas — feeding the numbers recorded in
@@ -987,7 +994,7 @@ def check_packed(cases=12):
     (b) the packed frontier equals the flat frontier point-for-point —
         plans identical, accuracy/cost floats equal with ``==`` (python
         floats are f64, so this is the bit-for-bit claim executed)."""
-    print(f"[2/6] packed bitset vs byte arena on {cases} tables ...")
+    print(f"[2/7] packed bitset vs byte arena on {cases} tables ...")
     rng = Rng(0xB175)
     # The first cases pin N to word-boundary edges; the rest are random.
     fixed_ns = [64, 65, 127, 128, 129, 100]
@@ -1059,7 +1066,7 @@ def check_weighted(cases=10):
         incremental walk matches an independent prefix-sum definition
         (grid point g = score of the first order position whose cumulative
         mass exceeds (g+1)/(grid+1) of the total)."""
-    print(f"[3/6] weighted search on {cases} random tables ...")
+    print(f"[3/7] weighted search on {cases} random tables ...")
     rng = Rng(0xBEEF)
     for case in range(cases):
         k = 3 + rng.below(3)
@@ -1212,7 +1219,7 @@ def check_degenerate_router(cases=12):
     every query, and its routed replay must equal the global plan's
     replay EXACTLY (same floats, not approximately) — for every frontier
     point taken as the global plan."""
-    print(f"[4/6] degenerate router vs global frontier on {cases} tables ...")
+    print(f"[4/7] degenerate router vs global frontier on {cases} tables ...")
     rng = Rng(0xA0F7E5)
     for case in range(cases):
         k = 3 + rng.below(3)
@@ -1244,8 +1251,105 @@ def check_degenerate_router(cases=12):
     print("  degenerate router PASSED")
 
 
+def rank_cost(m):
+    """Port of shadow::referee_pair's ranking price: ``pricing.cost(256, 2)``
+    — a fixed 256-input / 2-output probe shape, independent of any query."""
+    inp, out, req = TABLE1[m]
+    return inp * 256 / 1e7 + out * 2 / 1e7 + req
+
+
+def referee_pair_py(k, reference):
+    """Port of server::shadow::referee_pair: the two priciest non-reference
+    models by rank_cost, descending, ties broken toward the lower index."""
+    ranked = sorted(
+        (m for m in range(k) if m != reference),
+        key=lambda m: (-rank_cost(m), m),
+    )
+    if len(ranked) < 2:
+        return None
+    return ranked[0], ranked[1]
+
+
+def check_referee_vote(cases=12):
+    """Speculation-PR referee-vote gate (the python side of the shadow.rs
+    referee unit tests and shadow_loop.rs's vote-vs-single-reference loop):
+    on random tables,
+    (a) ``referee_pair_py`` matches an independent two-pass max selection
+        (including the models-0/1 equal-price tie, broken low),
+    (b) the vote label rule — ``label[i] = preds[a][i]`` when the referees
+        agree, else ``preds[reference][i]`` — equals the single-reference
+        label on EVERY escalated item (tie-breaks are reference calls, so
+        the loops can only diverge where the referees agree), and
+    (c) the metered reference spend is ``escalations × per_call`` — never
+        more than the single-reference loop's ``n × per_call`` and
+        strictly less whenever at least one agreement occurred."""
+    print(f"[5/7] referee-vote shadow labels on {cases} random tables ...")
+    rng = Rng(0x5AD0E5)
+    for case in range(cases):
+        k = 3 + rng.below(3)
+        n = 30 + rng.below(200)
+        classes = 2 + rng.below(4)
+        table = synthetic_table(k, n, classes, 0.5 + 0.5 * rng.f64(), rng.next_u64())
+        reference = rng.below(k)
+
+        # (a) pair selection vs an independent brute-force max scan.
+        pair = referee_pair_py(k, reference)
+        assert pair is not None, f"case {case}: k={k} leaves >= 2 referees"
+        a, b = pair
+        pool = [m for m in range(k) if m != reference]
+        first = max(pool, key=lambda m: (rank_cost(m), -m))
+        rest = [m for m in pool if m != first]
+        second = max(rest, key=lambda m: (rank_cost(m), -m))
+        assert (a, b) == (first, second), (
+            f"case {case}: referee_pair {pair} vs brute force {(first, second)}"
+        )
+        assert a != reference and b != reference and a != b
+        # models 0 and 1 share a price in TABLE1: when both are candidates
+        # and tied at the top, the lower index must come first.
+        if reference > 1 and {a, b} == {0, 1}:
+            assert (a, b) == (0, 1), f"case {case}: tie must break low, got {pair}"
+
+        # (b) + (c) the label rule and its spend, item by item.
+        preds = table["preds"]
+        agreements = 0
+        escalations = 0
+        for i in range(n):
+            pa, pb = preds[a][i], preds[b][i]
+            single = preds[reference][i]
+            if pa == pb:
+                vote = pa
+                agreements += 1
+                # The loops may only diverge here, and only when the agreed
+                # answer differs from what the reference would have said.
+                if vote != single:
+                    assert pa == pb, "divergence requires referee agreement"
+            else:
+                vote = single
+                escalations += 1
+                assert vote == single, (
+                    f"case {case} item {i}: an escalated vote label must be "
+                    f"the reference tie-break"
+                )
+        assert agreements + escalations == n
+        per_call = rank_cost(reference)
+        vote_spend = escalations * per_call
+        single_spend = n * per_call
+        assert vote_spend <= single_spend
+        if agreements > 0 and per_call > 0.0:
+            assert vote_spend < single_spend, (
+                f"case {case}: {agreements} agreements must save reference spend"
+            )
+        print(
+            f"  case {case:2d}: k={k} n={n:3d} ref={reference} pair=({a},{b}) "
+            f"agree={agreements:3d} escalate={escalations:3d} "
+            f"... vote == single on escalations, spend {vote_spend:.6f} <= "
+            f"{single_spend:.6f} OK"
+        )
+    print("  referee vote PASSED")
+
+
 def check_equivalence(cases=25):
-    print(f"[1/6] equivalence on {cases} random tables ...")
+    print(f"[1/7] equivalence on {cases} random tables ...")
     rng = Rng(0xF00D)
     for case in range(cases):
         k = 3 + rng.below(3)
@@ -1287,7 +1391,7 @@ def check_equivalence(cases=25):
 
 
 def measure_wall(k=12, n=1200, grid=24, seed=99):
-    print(f"[5/6] wall-clock at reduced workload (K={k}, N={n}, grid={grid}) ...")
+    print(f"[6/7] wall-clock at reduced workload (K={k}, N={n}, grid={grid}) ...")
     table = synthetic_table(k, n, 4, 0.9, seed)
     toks = [45] * n
     t0 = time.perf_counter()
@@ -1321,7 +1425,7 @@ def count_ops(k=12, n=8000, grid=24, seed=99):
     reports the correctness working-set shrink — the sweeps' per-item
     visit counts are identical, the win there is 64x less memory traffic
     per correctness read."""
-    print(f"[6/6] op-count model at bench workload (K={k}, N={n}, grid={grid}) ...")
+    print(f"[7/7] op-count model at bench workload (K={k}, N={n}, grid={grid}) ...")
     table = synthetic_table(k, n, 4, 0.9, seed)
     toks = [45] * n
     flat = FlatOptimizer(table, toks, grid=grid)
@@ -1465,6 +1569,7 @@ if __name__ == "__main__":
     check_packed()
     check_weighted()
     check_degenerate_router()
+    check_referee_vote()
     if quick:
         # CI mode: every correctness gate above ran; skip only the slow
         # wall-clock measurement (minutes of pure python).

@@ -19,8 +19,9 @@ fi
 # Optimizer parity: seed == flat == packed == brute-force reference,
 # packed bitset exactly equal to the byte/f64 arena (tail words included),
 # weighted search uniform-bitwise + replay-consistent +
-# budget-query-equivalent. --quick skips only the slow pure-python
-# wall-clock measurement.
+# budget-query-equivalent, plus the referee-vote shadow-label gate
+# (pair selection + vote-label rule + strictly-less reference spend).
+# --quick skips only the slow pure-python wall-clock measurement.
 python3 scripts/check_optimizer_port.py --quick
 
 scripts/tier1.sh
@@ -54,6 +55,16 @@ cargo run --release --example serve_workload -- \
 cargo test --release --test router_pipeline --test drift_story
 cargo run --release --example serve_workload -- \
     --sim --queries 200 --clients 2 --pipeline cache,router,cascade --router
+
+# Speculative agreement serving: the service-level pinning suite (accept
+# path, seeded escalation billed exactly once, stale-plan abstention —
+# every test wired so the terminal model errors if consulted) plus the
+# referee-vote shadow loop (same swap decision as single-reference at
+# strictly less reference spend), then a live smoke of the speculative
+# pipeline through the real serving example.
+cargo test --release --test speculate_pipeline --test shadow_loop
+cargo run --release --example serve_workload -- \
+    --sim --queries 200 --clients 2 --speculate
 
 # Bench smoke: exercises the full frontier sweep + the JSON suite writer
 # on a small synthetic table. Writes to a scratch path — the committed
